@@ -1,0 +1,86 @@
+//! §3.1 demo: the GA search for GPU offload patterns, with the two
+//! ablations the paper's method adds over naive directive insertion:
+//!
+//! * power-aware fitness `t^(-1/2)·p^(-1/2)` vs time-only;
+//! * batched CPU↔GPU variable transfers vs per-entry transfers.
+//!
+//! ```sh
+//! cargo run --release --example ga_gpu_search
+//! ```
+
+use enadapt::canalyze::analyze_source;
+use enadapt::ga::{FitnessSpec, GaConfig};
+use enadapt::offload::{gpu_flow, GpuFlowConfig};
+use enadapt::util::tablefmt::Table;
+use enadapt::verifier::{AppModel, VerifEnvConfig};
+use enadapt::workloads;
+
+fn main() -> enadapt::Result<()> {
+    for (name, src, baseline_s) in [
+        ("mriq.c", workloads::MRIQ_C, 14.0),
+        ("stencil.c", workloads::STENCIL_C, 4.0),
+    ] {
+        println!("================================================================");
+        println!("== GA GPU search on {name}");
+        println!("================================================================\n");
+        let an = analyze_source(name, src)?;
+        let env_cfg = VerifEnvConfig::r740_pac();
+        let app = AppModel::from_analysis(&an, &env_cfg.cpu, baseline_s)?;
+
+        let base_ga = GaConfig {
+            population: 12,
+            generations: 10,
+            ..Default::default()
+        };
+
+        let mut t = Table::new(&[
+            "variant",
+            "best pattern",
+            "time [s]",
+            "power [W]",
+            "energy [W*s]",
+            "value",
+            "measured",
+        ]);
+        for (label, fitness, transfer_opt) in [
+            ("power-aware + batched (paper)", FitnessSpec::paper(), true),
+            ("time-only + batched", FitnessSpec::time_only(), true),
+            ("power-aware + per-entry", FitnessSpec::paper(), false),
+        ] {
+            let env = VerifEnvConfig::r740_pac().build(11);
+            let cfg = GpuFlowConfig {
+                ga: base_ga,
+                fitness,
+                seed: 2024,
+                transfer_opt,
+                parallel_trials: false,
+            };
+            let out = gpu_flow::run(&app, &env, &cfg)?;
+            t.row(&[
+                label.to_string(),
+                out.best.pattern.genome.to_string(),
+                format!("{:.2}", out.best.measurement.time_s),
+                format!("{:.1}", out.best.measurement.mean_w),
+                format!("{:.0}", out.best.measurement.energy_ws),
+                format!("{:.5}", out.best.value),
+                out.trials.to_string(),
+            ]);
+
+            if label.starts_with("power-aware + batched") {
+                println!("convergence (best evaluation value per generation):");
+                for h in &out.ga.history {
+                    let bars = (h.best * 4000.0).min(60.0) as usize;
+                    println!(
+                        "  gen {:>2}  {:.5}  |{}",
+                        h.generation,
+                        h.best,
+                        "#".repeat(bars)
+                    );
+                }
+                println!();
+            }
+        }
+        println!("{}", t.render());
+    }
+    Ok(())
+}

@@ -1,0 +1,133 @@
+//! §3.3 demo: automatic offload-destination selection in a mixed
+//! many-core / GPU / FPGA environment, with early stop on user
+//! requirements — and the power-aware twist: the GPU is *faster* on MRI-Q,
+//! but the FPGA wins the paper's `t^(-1/2)·p^(-1/2)` evaluation value.
+//!
+//! ```sh
+//! cargo run --release --example mixed_offload
+//! ```
+
+use enadapt::canalyze::analyze_source;
+use enadapt::ga::{FitnessSpec, GaConfig};
+use enadapt::offload::{mixed, GpuFlowConfig, MixedConfig, Requirements};
+use enadapt::util::tablefmt::Table;
+use enadapt::verifier::{AppModel, VerifEnvConfig};
+use enadapt::workloads;
+
+fn main() -> enadapt::Result<()> {
+    let an = analyze_source("mriq.c", workloads::MRIQ_C)?;
+    let env_cfg = VerifEnvConfig::r740_pac();
+    let app = AppModel::from_analysis(&an, &env_cfg.cpu, 14.0)?;
+
+    let ga = GpuFlowConfig {
+        ga: GaConfig {
+            population: 10,
+            generations: 8,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+
+    // --- Scenario A: lenient requirements → early stop saves the FPGA
+    //     compile hours.
+    println!("=== Scenario A: lenient requirements (3x speedup, 1.5x energy) ===\n");
+    let env = VerifEnvConfig::r740_pac().build(7);
+    let out = mixed::run(
+        &app,
+        &env,
+        &MixedConfig {
+            requirements: Requirements {
+                min_speedup: 3.0,
+                min_energy_ratio: 1.5,
+            },
+            ga_flow: ga,
+            ..Default::default()
+        },
+    )?;
+    print_outcome(&out);
+
+    // --- Scenario B: impossible requirements → all three verified, the
+    //     power-aware value picks the destination.
+    println!("\n=== Scenario B: exhaustive verification (no early stop) ===\n");
+    let env = VerifEnvConfig::r740_pac().build(7);
+    let out_full = mixed::run(
+        &app,
+        &env,
+        &MixedConfig {
+            requirements: Requirements {
+                min_speedup: f64::INFINITY,
+                min_energy_ratio: f64::INFINITY,
+            },
+            ga_flow: ga,
+            ..Default::default()
+        },
+    )?;
+    print_outcome(&out_full);
+
+    // --- Scenario C: same, but with the previous papers' time-only value.
+    println!("\n=== Scenario C: ablation — time-only selection (previous method) ===\n");
+    let env = VerifEnvConfig::r740_pac().build(7);
+    let mut cfg_time = MixedConfig {
+        requirements: Requirements {
+            min_speedup: f64::INFINITY,
+            min_energy_ratio: f64::INFINITY,
+        },
+        fitness: FitnessSpec::time_only(),
+        ga_flow: ga,
+        ..Default::default()
+    };
+    cfg_time.ga_flow.fitness = FitnessSpec::time_only();
+    cfg_time.fpga_flow.fitness = FitnessSpec::time_only();
+    let out_time = mixed::run(&app, &env, &cfg_time)?;
+    print_outcome(&out_time);
+
+    println!(
+        "\npower-aware choice: {}   time-only choice: {}",
+        out_full.chosen.device, out_time.chosen.device
+    );
+    if out_full.chosen.device != out_time.chosen.device {
+        println!(
+            "→ including power in the evaluation value CHANGES the selected \
+             destination (the paper's §3.3 point)."
+        );
+    }
+    Ok(())
+}
+
+fn print_outcome(out: &mixed::MixedOutcome) {
+    let mut t = Table::new(&[
+        "destination",
+        "best pattern",
+        "time [s]",
+        "power [W]",
+        "energy [W*s]",
+        "value",
+        "trials",
+        "search cost",
+    ]);
+    for d in &out.tried {
+        t.row(&[
+            d.device.to_string(),
+            d.best.pattern.genome.to_string(),
+            format!("{:.2}", d.best.measurement.time_s),
+            format!("{:.1}", d.best.measurement.mean_w),
+            format!("{:.0}", d.best.measurement.energy_ws),
+            format!("{:.5}", d.best.value),
+            d.trials.to_string(),
+            format!("{:.1} h", d.search_cost_s / 3600.0),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "baseline: {:.2} s / {:.0} W·s   chosen: {}   early-stopped: {}   skipped: [{}]",
+        out.baseline.time_s,
+        out.baseline.energy_ws,
+        out.chosen.device,
+        out.early_stopped,
+        out.skipped
+            .iter()
+            .map(|d| d.name())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+}

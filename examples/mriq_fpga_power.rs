@@ -1,0 +1,100 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): the paper's §4 experiment on a
+//! real executed workload.
+//!
+//! All three layers compose here:
+//!   L1/L2 — the MRI-Q Pallas kernels + JAX model were AOT-lowered to
+//!           `artifacts/*.hlo.txt` (`make artifacts`);
+//!   this driver *executes* both variants via PJRT from Rust, checks their
+//!   numerics agree, and calibrates the verification environment's CPU
+//!   baseline from the measured wall time;
+//!   L3   — the coordinator runs the full Steps 1–7 FPGA offload job on
+//!           the MRI-Q C source and reproduces Fig. 5.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example mriq_fpga_power
+//! ```
+
+use enadapt::coordinator::{report, run_job, BaselineSource, Destination, JobConfig};
+use enadapt::devices::DeviceKind;
+use enadapt::runtime;
+use enadapt::util::json::Json;
+use enadapt::workloads;
+
+fn main() -> enadapt::Result<()> {
+    println!("=== MRI-Q FPGA offload power evaluation (paper §4 / Fig. 5) ===\n");
+
+    // --- Real execution: load the AOT artifacts and run them. -----------
+    let arts = runtime::load_artifacts(&runtime::default_dir())?;
+    let rt = runtime::HloRuntime::cpu()?;
+    println!("[runtime] platform={} devices={}", rt.platform(), rt.device_count());
+
+    let cpu_model = rt.load_artifact(arts.variant("mriq_cpu_small")?)?;
+    let off_model = rt.load_artifact(arts.variant("mriq_offload_small")?)?;
+    let cpu_out = cpu_model.run_synth()?;
+    let off_out = off_model.run_synth()?;
+
+    // Numerics: the Pallas path must match the plain-jnp path.
+    let mut max_err = 0f32;
+    for (a, b) in cpu_out.outputs.iter().zip(&off_out.outputs) {
+        for (x, y) in a.iter().zip(b) {
+            max_err = max_err.max((x - y).abs());
+        }
+    }
+    println!(
+        "[runtime] executed mriq_cpu_small ({:.2} ms) and mriq_offload_small ({:.2} ms); \
+         max |Δ| = {max_err:.2e}",
+        cpu_out.wall_s * 1e3,
+        off_out.wall_s * 1e3
+    );
+    assert!(max_err < 1e-2, "pallas vs jnp mismatch");
+
+    // Measured baseline: time the real HLO, scale to the paper's 64^3 x
+    // 2048 problem.
+    let t = runtime::time_model(&cpu_model, 1, 5)?;
+    let full_s = runtime::scale_to_full(t.mean_s, cpu_model.meta.num_k, cpu_model.meta.num_x, 2048, 262_144);
+    println!(
+        "[runtime] measured CPU wall {:.3} ms @ {}x{} → full-size estimate {:.2} s \
+         (paper testbed: 14 s)\n",
+        t.mean_s * 1e3,
+        cpu_model.meta.num_k,
+        cpu_model.meta.num_x,
+        full_s
+    );
+
+    // --- The offload job, once with the paper baseline, once measured. --
+    for (label, baseline) in [
+        ("paper-calibrated (14 s)", BaselineSource::Fixed(14.0)),
+        (
+            "HLO-measured",
+            BaselineSource::MeasuredHlo {
+                artifact: "mriq_cpu_small".into(),
+                full_k: 2048,
+                full_x: 262_144,
+            },
+        ),
+    ] {
+        println!("----------------------------------------------------------------");
+        println!("-- baseline: {label}");
+        println!("----------------------------------------------------------------\n");
+        let cfg = JobConfig {
+            destination: Destination::Device(DeviceKind::Fpga),
+            baseline,
+            ..Default::default()
+        };
+        let job = run_job("mriq.c", workloads::MRIQ_C, &cfg)?;
+        println!("{}", report::render_job(&job));
+
+        // Persist machine-readable results for EXPERIMENTS.md.
+        let out = Json::obj(vec![
+            ("baseline_source", Json::str(label)),
+            ("report", report::job_json(&job)),
+        ]);
+        let path = format!(
+            "mriq_fpga_power_{}.json",
+            if label.starts_with("paper") { "paper" } else { "measured" }
+        );
+        std::fs::write(&path, out.to_string_pretty())?;
+        println!("[saved] {path}\n");
+    }
+    Ok(())
+}

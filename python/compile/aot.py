@@ -1,0 +1,66 @@
+"""AOT lowering: JAX model -> HLO *text* -> artifacts/ for the Rust
+runtime (PJRT).
+
+HLO text, NOT serialized protos: jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (what the published
+``xla`` 0.1.6 crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md and DESIGN.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(fn, num_k, num_x):
+    k_spec = jax.ShapeDtypeStruct((num_k,), "float32")
+    x_spec = jax.ShapeDtypeStruct((num_x,), "float32")
+    args = (k_spec, k_spec, k_spec, x_spec, x_spec, x_spec, k_spec, k_spec)
+    return jax.jit(fn).lower(*args)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    meta = {}
+    for name, (fn, num_k, num_x) in model.VARIANTS.items():
+        lowered = lower_variant(fn, num_k, num_x)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta[name] = {
+            "num_k": num_k,
+            "num_x": num_x,
+            "inputs": ["kx", "ky", "kz", "x", "y", "z", "phiR", "phiI"],
+            "outputs": ["qr", "qi"],
+            "file": f"{name}.hlo.txt",
+        }
+        print(f"wrote {path} ({len(text)} chars, K={num_k}, X={num_x})")
+
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(args.out_dir, 'meta.json')}")
+
+
+if __name__ == "__main__":
+    main()

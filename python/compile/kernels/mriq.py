@@ -1,0 +1,138 @@
+"""Layer-1 Pallas kernels for the MRI-Q hot spots.
+
+Hardware adaptation (DESIGN.md §5): the paper offloads MRI-Q's ComputeQ to
+an FPGA as a deep OpenCL pipeline (one k-iteration per clock per lane).
+On a TPU-shaped target the same insight — stream the k-space samples
+through fast on-chip memory while voxels stay resident — becomes a
+VMEM-tiled Pallas kernel:
+
+* the voxel axis is blocked (``BLOCK_X`` per grid step) via ``BlockSpec``,
+  so each grid step holds a voxel tile plus a k-chunk in VMEM;
+* the k axis is processed in ``BLOCK_K`` chunks with a ``fori_loop``
+  accumulation — the shift-register accumulator of the OpenCL pipeline;
+* per-voxel trig + FMA maps to the VPU (MRI-Q is trig-bound; the MXU is
+  idle for this kernel, so the roofline is VPU/memory-bound — see
+  EXPERIMENTS.md §Perf for the VMEM footprint accounting).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO that both pytest and the
+Rust runtime run bit-identically.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PI2 = 6.283185307179586
+
+# Default tile sizes. VMEM budget per grid step (f32):
+#   voxel tile:   3 * BLOCK_X            (x, y, z)
+#   k chunk:      4 * K                  (kx, ky, kz, phiMag — full k row)
+#   phase tile:   BLOCK_X * BLOCK_K      (materialized per chunk)
+#   outputs:      2 * BLOCK_X
+# With BLOCK_X=256, BLOCK_K=256 and K=2048: ~0.6 MB — comfortably inside
+# the ~16 MB VMEM of a TPU core, leaving room for double buffering.
+BLOCK_X = 256
+BLOCK_K = 256
+
+
+def _phi_mag_kernel(phi_r_ref, phi_i_ref, out_ref):
+    r = phi_r_ref[...]
+    i = phi_i_ref[...]
+    out_ref[...] = r * r + i * i
+
+
+def phi_mag(phi_r, phi_i, block=512):
+    """|phi|^2 as a Pallas kernel, tiled along k."""
+    (k,) = phi_r.shape
+    block = min(block, k)
+    assert k % block == 0, f"K={k} must be a multiple of block={block}"
+    grid = (k // block,)
+    return pl.pallas_call(
+        _phi_mag_kernel,
+        out_shape=jax.ShapeDtypeStruct((k,), phi_r.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(phi_r, phi_i)
+
+
+def _compute_q_kernel(block_k, kx_ref, ky_ref, kz_ref, x_ref, y_ref, z_ref,
+                      mag_ref, qr_ref, qi_ref):
+    """One voxel tile vs the whole k row, accumulated in BLOCK_K chunks."""
+    x = x_ref[...]
+    y = y_ref[...]
+    z = z_ref[...]
+    n_k = kx_ref.shape[0]
+    n_chunks = n_k // block_k
+
+    def body(c, acc):
+        acc_r, acc_i = acc
+        sl = pl.dslice(c * block_k, block_k)
+        kxc = kx_ref[sl]
+        kyc = ky_ref[sl]
+        kzc = kz_ref[sl]
+        magc = mag_ref[sl]
+        # (BLOCK_X, BLOCK_K) phase tile in VMEM.
+        arg = PI2 * (
+            x[:, None] * kxc[None, :]
+            + y[:, None] * kyc[None, :]
+            + z[:, None] * kzc[None, :]
+        )
+        acc_r = acc_r + jnp.sum(magc[None, :] * jnp.cos(arg), axis=1)
+        acc_i = acc_i + jnp.sum(magc[None, :] * jnp.sin(arg), axis=1)
+        return acc_r, acc_i
+
+    zero = jnp.zeros(x.shape, x.dtype)
+    acc_r, acc_i = jax.lax.fori_loop(0, n_chunks, body, (zero, zero))
+    qr_ref[...] = acc_r
+    qi_ref[...] = acc_i
+
+
+def compute_q(kx, ky, kz, x, y, z, phi_mag_v, block_x=BLOCK_X, block_k=BLOCK_K):
+    """ComputeQ as a Pallas kernel: grid over voxel tiles, k streamed in
+    chunks through the accumulator."""
+    (n_k,) = kx.shape
+    (n_x,) = x.shape
+    block_x = min(block_x, n_x)
+    block_k = min(block_k, n_k)
+    assert n_x % block_x == 0, f"X={n_x} must be a multiple of {block_x}"
+    assert n_k % block_k == 0, f"K={n_k} must be a multiple of {block_k}"
+    grid = (n_x // block_x,)
+    k_spec = pl.BlockSpec((n_k,), lambda i: (0,))  # full k row resident
+    x_spec = pl.BlockSpec((block_x,), lambda i: (i,))
+    kernel = functools.partial(_compute_q_kernel, block_k)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n_x,), x.dtype),
+            jax.ShapeDtypeStruct((n_x,), x.dtype),
+        ),
+        grid=grid,
+        in_specs=[k_spec, k_spec, k_spec, x_spec, x_spec, x_spec, k_spec],
+        out_specs=(x_spec, x_spec),
+        interpret=True,
+    )(kx, ky, kz, x, y, z, phi_mag_v)
+
+
+def mriq(kx, ky, kz, x, y, z, phi_r, phi_i, block_x=BLOCK_X, block_k=BLOCK_K):
+    """Full MRI-Q pipeline through the Pallas kernels."""
+    mag = phi_mag(phi_r, phi_i)
+    return compute_q(kx, ky, kz, x, y, z, mag, block_x=block_x, block_k=block_k)
+
+
+def vmem_bytes(block_x=BLOCK_X, block_k=BLOCK_K, n_k=2048, dtype_bytes=4):
+    """Static VMEM footprint estimate of one compute_q grid step (used for
+    the §Perf structural accounting, since interpret-mode wallclock is not
+    a TPU proxy)."""
+    voxel_tile = 3 * block_x
+    k_row = 4 * n_k
+    phase_tile = block_x * block_k
+    outputs = 2 * block_x
+    return dtype_bytes * (voxel_tile + k_row + phase_tile + outputs)

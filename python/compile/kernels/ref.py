@@ -1,0 +1,50 @@
+"""Pure-jnp reference implementations (correctness oracles) for the MRI-Q
+kernels.
+
+MRI-Q (Parboil) computes the Q matrix used to calibrate non-Cartesian 3D
+MRI reconstruction:
+
+    phiMag[k] = phiR[k]^2 + phiI[k]^2
+    Q(x)      = sum_k phiMag[k] * exp(2*pi*i * k . x)
+
+split into real/imaginary accumulations. These oracles are the ground
+truth the Pallas kernels (kernels/mriq.py) are pytest-checked against, and
+they double as the "CPU-only" Layer-2 path lowered to HLO for the Rust
+runtime's baseline measurements.
+"""
+
+import jax.numpy as jnp
+
+PI2 = 6.283185307179586
+
+
+def phi_mag_ref(phi_r, phi_i):
+    """|phi|^2 magnitude of the coil sensitivity (MRI-Q ComputePhiMag)."""
+    return phi_r * phi_r + phi_i * phi_i
+
+
+def compute_q_ref(kx, ky, kz, x, y, z, phi_mag):
+    """Dense Q-matrix accumulation (MRI-Q ComputeQ).
+
+    Args:
+      kx, ky, kz: (K,) k-space trajectory.
+      x, y, z:    (X,) voxel coordinates.
+      phi_mag:    (K,) coil magnitude.
+
+    Returns:
+      (qr, qi): (X,) real/imaginary parts of Q.
+    """
+    # (X, K) phase matrix — the reference materializes it; the Pallas
+    # kernel tiles it through VMEM instead.
+    exp_arg = PI2 * (
+        jnp.outer(x, kx) + jnp.outer(y, ky) + jnp.outer(z, kz)
+    )
+    qr = jnp.sum(phi_mag[None, :] * jnp.cos(exp_arg), axis=1)
+    qi = jnp.sum(phi_mag[None, :] * jnp.sin(exp_arg), axis=1)
+    return qr, qi
+
+
+def mriq_ref(kx, ky, kz, x, y, z, phi_r, phi_i):
+    """Full MRI-Q pipeline: phiMag then Q."""
+    phi_mag = phi_mag_ref(phi_r, phi_i)
+    return compute_q_ref(kx, ky, kz, x, y, z, phi_mag)

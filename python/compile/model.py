@@ -1,0 +1,67 @@
+"""Layer-2 JAX model of the evaluated application (MRI-Q).
+
+Two variants of the same computation are lowered AOT for the Rust runtime:
+
+* ``mriq_cpu`` — the pure-jnp path (the "normal CPU processing" of the
+  paper's Fig. 5 baseline);
+* ``mriq_offload`` — the path through the Layer-1 Pallas kernels (the
+  "offloaded" code the conversion produced).
+
+Both produce identical numerics (pytest asserts allclose); the Rust
+coordinator times the executed HLO of the CPU variant to calibrate the
+verification environment's baseline, so Python never runs at request time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import mriq as kernels
+from .kernels import ref
+
+PI2 = 6.283185307179586
+
+
+def synth_inputs(num_k, num_x):
+    """Synthetic k-space trajectory + voxel grid matching rust
+    workloads/mriq.c's generator (stacked spiral, 8x8xN lattice)."""
+    k = jnp.arange(num_k, dtype=jnp.float32)
+    t = k / num_k
+    kx = 0.5 * jnp.cos(PI2 * 3.0 * t)
+    ky = 0.5 * jnp.sin(PI2 * 3.0 * t)
+    kz = t - 0.5
+    phi_r = (1.0 - 0.5 * t) * (0.54 - 0.46 * jnp.cos(PI2 * t))
+    phi_i = (0.25 * jnp.sin(PI2 * t)) * (0.54 - 0.46 * jnp.cos(PI2 * t))
+
+    i = jnp.arange(num_x, dtype=jnp.float32)
+    x = ((i % 8) / 8.0 - 0.5) * 0.9
+    y = (((i // 8) % 8) / 8.0 - 0.5) * 0.9
+    z = ((i // 64) / 8.0 - 0.5) * 0.9
+    return kx, ky, kz, x, y, z, phi_r, phi_i
+
+
+def mriq_cpu(kx, ky, kz, x, y, z, phi_r, phi_i):
+    """CPU-only variant (pure jnp). Returns a tuple (qr, qi)."""
+    qr, qi = ref.mriq_ref(kx, ky, kz, x, y, z, phi_r, phi_i)
+    return (qr, qi)
+
+
+def mriq_offload(kx, ky, kz, x, y, z, phi_r, phi_i):
+    """Offloaded variant through the Pallas kernels."""
+    qr, qi = kernels.mriq(kx, ky, kz, x, y, z, phi_r, phi_i)
+    return (qr, qi)
+
+
+def checksum(qr, qi):
+    """Scalar summary matching workloads/mriq.c's printf output family."""
+    qm = jnp.sqrt(qr * qr + qi * qi)
+    return jnp.sum(qr), jnp.sum(qi), jnp.sum(qm * qm)
+
+
+#: Artifact catalogue: name -> (fn, num_k, num_x). Small matches the
+#: C-subset sample program (512 voxels x 128 k-samples); large gives the
+#: Rust runtime benches a meatier executable.
+VARIANTS = {
+    "mriq_cpu_small": (mriq_cpu, 128, 512),
+    "mriq_offload_small": (mriq_offload, 128, 512),
+    "mriq_cpu_large": (mriq_cpu, 512, 4096),
+    "mriq_offload_large": (mriq_offload, 512, 4096),
+}

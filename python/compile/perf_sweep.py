@@ -1,0 +1,82 @@
+"""L1 §Perf tool: sweep the compute_q Pallas block shapes and report the
+*structural* metrics that matter on a real TPU — VMEM footprint per grid
+step, grid size, bytes-per-FLOP — plus interpret-mode wallclock (CPU-numpy
+time; NOT a TPU proxy, shown only to confirm nothing pathological).
+
+Usage:  cd python && python -m compile.perf_sweep [--num-k 2048] [--num-x 4096]
+
+The chosen default (BLOCK_X=256, BLOCK_K=256) keeps each step's working set
+≈0.6 MB — far under the ~16 MB VMEM ceiling, leaving headroom for double
+buffering — while giving the VPU long 256-lane rows. Findings are recorded
+in EXPERIMENTS.md §Perf.
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from .kernels import mriq as kernels
+from .kernels import ref
+from . import model
+
+VMEM_CEILING = 16 * 1024 * 1024
+
+
+def sweep(num_k, num_x):
+    args = model.synth_inputs(num_k, num_x)
+    kx, ky, kz, x, y, z, pr, pi_ = args
+    mag = ref.phi_mag_ref(pr, pi_)
+    want_r, _ = ref.compute_q_ref(kx, ky, kz, x, y, z, mag)
+
+    print(f"compute_q block sweep @ K={num_k}, X={num_x} (f32)")
+    header = (
+        f"{'BLOCK_X':>8} {'BLOCK_K':>8} {'grid':>6} {'VMEM/step':>12} "
+        f"{'%ceiling':>9} {'interp wall':>12} {'max|err|':>10}"
+    )
+    print(header)
+    print("-" * len(header))
+    rows = []
+    for bx in (64, 128, 256, 512):
+        for bk in (64, 128, 256, 512):
+            if bx > num_x or bk > num_k:
+                continue
+            fn = jax.jit(
+                lambda kx, ky, kz, x, y, z, m, bx=bx, bk=bk: kernels.compute_q(
+                    kx, ky, kz, x, y, z, m, block_x=bx, block_k=bk
+                )
+            )
+            got_r, _ = fn(kx, ky, kz, x, y, z, mag)  # compile + run
+            t0 = time.perf_counter()
+            got_r, got_i = fn(kx, ky, kz, x, y, z, mag)
+            jax.block_until_ready((got_r, got_i))
+            wall = time.perf_counter() - t0
+            vmem = kernels.vmem_bytes(block_x=bx, block_k=bk, n_k=num_k)
+            err = float(np.max(np.abs(np.asarray(got_r) - np.asarray(want_r))))
+            grid = num_x // bx
+            print(
+                f"{bx:>8} {bk:>8} {grid:>6} {vmem / 1024:>10.0f}KB "
+                f"{100.0 * vmem / VMEM_CEILING:>8.1f}% {wall * 1e3:>10.2f}ms "
+                f"{err:>10.2e}"
+            )
+            rows.append((bx, bk, vmem, wall, err))
+    ok = all(v <= VMEM_CEILING for _, _, v, _, _ in rows)
+    tol = max(1e-3, 1e-5 * float(np.max(np.abs(np.asarray(want_r)))))
+    correct = all(e < tol for *_, e in rows)
+    print(
+        f"\nall configurations fit VMEM: {ok}; all numerically correct: {correct}"
+    )
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--num-k", type=int, default=2048)
+    ap.add_argument("--num-x", type=int, default=4096)
+    a = ap.parse_args()
+    sweep(a.num_k, a.num_x)
+
+
+if __name__ == "__main__":
+    main()

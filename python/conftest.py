@@ -1,0 +1,7 @@
+"""Make the `compile` package importable when pytest is invoked from the
+repository root (`pytest python/tests/ -q`) as well as from `python/`."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

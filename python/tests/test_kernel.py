@@ -1,0 +1,123 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+This is the CORE correctness signal of the compile path: hypothesis sweeps
+shapes and values; assert_allclose against ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import mriq as kernels
+from compile.kernels import ref
+
+
+def rand_arrays(rng, num_k, num_x):
+    mk = lambda n: jnp.asarray(rng.uniform(-1.0, 1.0, n).astype(np.float32))
+    return (
+        mk(num_k), mk(num_k), mk(num_k),          # kx ky kz
+        mk(num_x), mk(num_x), mk(num_x),          # x y z
+        mk(num_k), mk(num_k),                      # phiR phiI
+    )
+
+
+class TestPhiMag:
+    def test_matches_ref_basic(self):
+        rng = np.random.default_rng(0)
+        kx, ky, kz, x, y, z, pr, pi_ = rand_arrays(rng, 128, 64)
+        got = kernels.phi_mag(pr, pi_)
+        want = ref.phi_mag_ref(pr, pi_)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        log_k=st.integers(min_value=3, max_value=9),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        block=st.sampled_from([8, 32, 128, 512]),
+    )
+    def test_matches_ref_swept(self, log_k, seed, block):
+        num_k = 2 ** log_k
+        rng = np.random.default_rng(seed)
+        pr = jnp.asarray(rng.normal(size=num_k).astype(np.float32))
+        pi_ = jnp.asarray(rng.normal(size=num_k).astype(np.float32))
+        got = kernels.phi_mag(pr, pi_, block=min(block, num_k))
+        want = ref.phi_mag_ref(pr, pi_)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+    def test_rejects_ragged_block(self):
+        pr = jnp.ones(100, jnp.float32)
+        with pytest.raises(AssertionError):
+            kernels.phi_mag(pr, pr, block=64)
+
+
+class TestComputeQ:
+    def test_matches_ref_basic(self):
+        rng = np.random.default_rng(1)
+        kx, ky, kz, x, y, z, pr, pi_ = rand_arrays(rng, 64, 128)
+        mag = ref.phi_mag_ref(pr, pi_)
+        got_r, got_i = kernels.compute_q(kx, ky, kz, x, y, z, mag,
+                                         block_x=32, block_k=16)
+        want_r, want_i = ref.compute_q_ref(kx, ky, kz, x, y, z, mag)
+        assert_allclose(np.asarray(got_r), np.asarray(want_r), rtol=2e-4, atol=2e-4)
+        assert_allclose(np.asarray(got_i), np.asarray(want_i), rtol=2e-4, atol=2e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        log_k=st.integers(min_value=3, max_value=7),
+        log_x=st.integers(min_value=3, max_value=8),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_ref_swept_shapes(self, log_k, log_x, seed):
+        num_k, num_x = 2 ** log_k, 2 ** log_x
+        rng = np.random.default_rng(seed)
+        kx, ky, kz, x, y, z, pr, pi_ = rand_arrays(rng, num_k, num_x)
+        mag = ref.phi_mag_ref(pr, pi_)
+        bx = min(32, num_x)
+        bk = min(16, num_k)
+        got_r, got_i = kernels.compute_q(kx, ky, kz, x, y, z, mag,
+                                         block_x=bx, block_k=bk)
+        want_r, want_i = ref.compute_q_ref(kx, ky, kz, x, y, z, mag)
+        assert_allclose(np.asarray(got_r), np.asarray(want_r), rtol=3e-4, atol=3e-4)
+        assert_allclose(np.asarray(got_i), np.asarray(want_i), rtol=3e-4, atol=3e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        block_x=st.sampled_from([8, 16, 64, 128]),
+        block_k=st.sampled_from([8, 32, 64]),
+    )
+    def test_block_shape_invariance(self, block_x, block_k):
+        """Tiling must never change the numerics (same seed, all tilings)."""
+        rng = np.random.default_rng(7)
+        kx, ky, kz, x, y, z, pr, pi_ = rand_arrays(rng, 64, 128)
+        mag = ref.phi_mag_ref(pr, pi_)
+        got_r, got_i = kernels.compute_q(kx, ky, kz, x, y, z, mag,
+                                         block_x=block_x, block_k=block_k)
+        want_r, want_i = ref.compute_q_ref(kx, ky, kz, x, y, z, mag)
+        assert_allclose(np.asarray(got_r), np.asarray(want_r), rtol=3e-4, atol=3e-4)
+        assert_allclose(np.asarray(got_i), np.asarray(want_i), rtol=3e-4, atol=3e-4)
+
+    def test_zero_magnitude_gives_zero_q(self):
+        rng = np.random.default_rng(2)
+        kx, ky, kz, x, y, z, _, _ = rand_arrays(rng, 16, 32)
+        mag = jnp.zeros(16, jnp.float32)
+        qr, qi = kernels.compute_q(kx, ky, kz, x, y, z, mag,
+                                   block_x=16, block_k=8)
+        assert float(jnp.abs(qr).max()) == 0.0
+        assert float(jnp.abs(qi).max()) == 0.0
+
+
+class TestFullPipeline:
+    def test_mriq_matches_ref(self):
+        rng = np.random.default_rng(3)
+        args = rand_arrays(rng, 128, 256)
+        got_r, got_i = kernels.mriq(*args, block_x=64, block_k=32)
+        want_r, want_i = ref.mriq_ref(*args)
+        assert_allclose(np.asarray(got_r), np.asarray(want_r), rtol=3e-4, atol=3e-4)
+        assert_allclose(np.asarray(got_i), np.asarray(want_i), rtol=3e-4, atol=3e-4)
+
+    def test_vmem_budget_under_16mb(self):
+        assert kernels.vmem_bytes() < 16 * 1024 * 1024
+        # Even the large artifact's configuration fits.
+        assert kernels.vmem_bytes(block_x=256, block_k=256, n_k=4096) < 16 * 1024 * 1024

@@ -1,0 +1,87 @@
+"""Layer-2 checks: model variants agree, synthetic inputs match the Rust
+workload's generator, and the AOT lowering path produces loadable HLO text.
+"""
+
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile import aot, model
+
+
+def test_cpu_and_offload_variants_agree():
+    args = model.synth_inputs(128, 512)
+    qr_c, qi_c = model.mriq_cpu(*args)
+    qr_o, qi_o = model.mriq_offload(*args)
+    assert_allclose(np.asarray(qr_o), np.asarray(qr_c), rtol=3e-4, atol=3e-4)
+    assert_allclose(np.asarray(qi_o), np.asarray(qi_c), rtol=3e-4, atol=3e-4)
+
+
+def test_synth_inputs_are_finite_and_shaped():
+    kx, ky, kz, x, y, z, pr, pi_ = model.synth_inputs(64, 128)
+    for a, n in [(kx, 64), (ky, 64), (kz, 64), (pr, 64), (pi_, 64),
+                 (x, 128), (y, 128), (z, 128)]:
+        assert a.shape == (n,)
+        assert bool(jnp.all(jnp.isfinite(a)))
+    # Spiral stays in the unit box.
+    assert float(jnp.abs(kx).max()) <= 0.5 + 1e-6
+    assert float(jnp.abs(x).max()) <= 0.5
+
+
+def test_checksum_is_finite_positive_energy():
+    args = model.synth_inputs(64, 128)
+    qr, qi = model.mriq_cpu(*args)
+    s_r, s_i, energy = model.checksum(qr, qi)
+    assert np.isfinite(float(s_r)) and np.isfinite(float(s_i))
+    assert float(energy) > 0.0
+
+
+def test_lowering_produces_hlo_text():
+    fn, num_k, num_x = model.VARIANTS["mriq_cpu_small"]
+    lowered = aot.lower_variant(fn, num_k, num_x)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "cosine" in text or "cos" in text
+
+
+def test_offload_variant_lowers_too():
+    fn, num_k, num_x = model.VARIANTS["mriq_offload_small"]
+    lowered = aot.lower_variant(fn, num_k, num_x)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+
+
+def test_aot_main_writes_all_artifacts():
+    with tempfile.TemporaryDirectory() as tmp:
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", tmp],
+            check=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        )
+        files = sorted(os.listdir(tmp))
+        assert "meta.json" in files
+        for name in model.VARIANTS:
+            assert f"{name}.hlo.txt" in files
+
+
+def test_hlo_text_has_runtime_contract():
+    """Shape of the interchange text the Rust runtime depends on: 8 f32
+    parameters, a 2-tuple root, and ids the 0.5.1 text parser can reassign.
+    (Actual load+execute of this text is exercised by the Rust runtime
+    tests — `cargo test runtime`.)"""
+    for name in ("mriq_cpu_small", "mriq_offload_small"):
+        fn, num_k, num_x = model.VARIANTS[name]
+        text = aot.to_hlo_text(aot.lower_variant(fn, num_k, num_x))
+        assert "HloModule" in text
+        # All eight parameters appear with the right element type.
+        for i in range(8):
+            assert f"parameter({i})" in text, f"{name}: missing parameter {i}"
+        assert f"f32[{num_k}]" in text and f"f32[{num_x}]" in text
+        # Root is a tuple (lowered with return_tuple=True).
+        assert "(f32[" in text and "ROOT" in text

@@ -1,0 +1,165 @@
+//! Bench: ablation over the evaluation-value exponents (§3.3's "the
+//! evaluation formula needs to be set differently for each business
+//! operator") and the parallel-verification option.
+//!
+//! Sweeps `V = t^(-a) · p^(-b)` over operator profiles and reports which
+//! destination/pattern each profile selects on MRI-Q, plus the §3.3 cost
+//! model's verdict, plus wall-time of sequential vs parallel trials.
+
+use enadapt::canalyze::analyze_source;
+use enadapt::devices::DeviceKind;
+use enadapt::ga::{FitnessSpec, GaConfig};
+use enadapt::offload::{gpu_flow, DataCenterCost, GpuFlowConfig};
+use enadapt::util::benchkit::{bench, check_band, section};
+use enadapt::util::tablefmt::Table;
+use enadapt::verifier::{AppModel, VerifEnvConfig};
+use enadapt::workloads;
+
+fn main() {
+    println!("=== ablation_fitness: evaluation-value exponents & trial parallelism ===");
+
+    let an = analyze_source("mriq.c", workloads::MRIQ_C).unwrap();
+    let env_cfg = VerifEnvConfig::r740_pac();
+    let app = AppModel::from_analysis(&an, &env_cfg.cpu, 14.0).unwrap();
+    let ga = GaConfig {
+        population: 12,
+        generations: 10,
+        ..Default::default()
+    };
+
+    section("operator profiles: V = t^(-a) · p^(-b)");
+    let mut t = Table::new(&[
+        "operator profile",
+        "a (time)",
+        "b (power)",
+        "gpu best energy [W*s]",
+        "fpga wins value?",
+    ]);
+    let mut ok = true;
+    for (label, spec) in [
+        ("time-only (previous papers)", FitnessSpec::time_only()),
+        ("paper (balanced 1/2,1/2)", FitnessSpec::paper()),
+        ("power-heavy operator", FitnessSpec::power_heavy()),
+    ] {
+        let env = VerifEnvConfig::r740_pac().build(21);
+        let gpu = gpu_flow::run(
+            &app,
+            &env,
+            &GpuFlowConfig {
+                ga,
+                fitness: spec,
+                seed: 21,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // Compare the winning GPU pattern against the Fig. 5 FPGA result
+        // under this operator's value.
+        let fpga_best = {
+            let outer = app
+                .loops
+                .iter()
+                .max_by(|a, b| a.cpu_time_s.partial_cmp(&b.cpu_time_s).unwrap())
+                .unwrap()
+                .id;
+            let pos = app.candidates.iter().position(|&c| c == outer).unwrap();
+            let mut bits = vec![false; app.genome_len()];
+            bits[pos] = true;
+            env.measure(&app, &bits, DeviceKind::Fpga, Default::default())
+        };
+        let v_gpu = spec.value(
+            gpu.best.measurement.time_s,
+            gpu.best.measurement.mean_w,
+            gpu.best.measurement.timed_out,
+        );
+        let v_fpga = spec.value(fpga_best.time_s, fpga_best.mean_w, fpga_best.timed_out);
+        t.row(&[
+            label.to_string(),
+            format!("{:.2}", spec.time_exp),
+            format!("{:.2}", spec.power_exp),
+            format!("{:.0}", gpu.best.measurement.energy_ws),
+            format!("{}", v_fpga > v_gpu),
+        ]);
+        if label.starts_with("time-only") {
+            ok &= check_band("time-only: GPU wins", (v_fpga <= v_gpu) as u8 as f64, 1.0, 1.0);
+        }
+        if label.starts_with("power-heavy") {
+            ok &= check_band("power-heavy: FPGA wins", (v_fpga > v_gpu) as u8 as f64, 1.0, 1.0);
+        }
+    }
+    println!("{}", t.render());
+
+    section("§3.3 cost model across exponent choices");
+    let cost = DataCenterCost::default();
+    println!(
+        "  fig5 fpga (7.0x / 7.6x): relative cost {:.3}",
+        cost.relative_cost(7.0, 7.6)
+    );
+    println!(
+        "  gpu (9.4x / 6.5x):       relative cost {:.3}",
+        cost.relative_cost(9.4, 6.5)
+    );
+
+    section("sequential vs parallel verification trials (wall time)");
+    let seq = bench("gpu_flow sequential trials", 1, 5, || {
+        let env = VerifEnvConfig::r740_pac().build(33);
+        let out = gpu_flow::run(
+            &app,
+            &env,
+            &GpuFlowConfig {
+                ga,
+                seed: 33,
+                parallel_trials: false,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        std::hint::black_box(out.best.value);
+    });
+    println!("{}", seq.row());
+    let par = bench("gpu_flow parallel trials", 1, 5, || {
+        let env = VerifEnvConfig::r740_pac().build(33);
+        let out = gpu_flow::run(
+            &app,
+            &env,
+            &GpuFlowConfig {
+                ga,
+                seed: 33,
+                parallel_trials: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        std::hint::black_box(out.best.value);
+    });
+    println!("{}", par.row());
+
+    // Parallel and sequential must agree bit-for-bit (deterministic
+    // per-pattern measurement noise).
+    let env_a = VerifEnvConfig::r740_pac().build(33);
+    let a = gpu_flow::run(
+        &app,
+        &env_a,
+        &GpuFlowConfig { ga, seed: 33, parallel_trials: false, ..Default::default() },
+    )
+    .unwrap();
+    let env_b = VerifEnvConfig::r740_pac().build(33);
+    let b = gpu_flow::run(
+        &app,
+        &env_b,
+        &GpuFlowConfig { ga, seed: 33, parallel_trials: true, ..Default::default() },
+    )
+    .unwrap();
+    ok &= check_band(
+        "parallel == sequential results",
+        (a.best.pattern.genome == b.best.pattern.genome && a.best.value == b.best.value) as u8
+            as f64,
+        1.0,
+        1.0,
+    );
+
+    println!(
+        "\nablation_fitness: {}",
+        if ok { "ALL BANDS PASS" } else { "SOME BANDS FAILED" }
+    );
+}

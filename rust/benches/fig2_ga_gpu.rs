@@ -1,0 +1,185 @@
+//! Bench: **Fig. 2** — "Automatic GPU offload method considering power
+//! consumption".
+//!
+//! Fig. 2 is the GA flow diagram; the quantitative content it implies is
+//! the search behaviour, regenerated here:
+//!
+//! * convergence series (best evaluation value per generation);
+//! * the power-aware vs time-only ablation (what this paper adds to the
+//!   previous method (33));
+//! * the transfer-consolidation ablation (§3.1's second contribution);
+//! * the timeout-penalty rule (§4.1b: >3 min ⇒ t := 1000 s);
+//! * GA engine throughput (synthetic fitness — pure engine cost).
+
+use enadapt::canalyze::analyze_source;
+use enadapt::ga::{self, FitnessSpec, GaConfig};
+use enadapt::offload::{gpu_flow, GpuFlowConfig};
+use enadapt::util::benchkit::{bench, check_band, section};
+use enadapt::util::tablefmt::Table;
+use enadapt::verifier::{AppModel, VerifEnvConfig};
+use enadapt::workloads;
+
+fn main() {
+    println!("=== fig2_ga_gpu: GA-driven GPU offload with power-aware fitness ===");
+
+    let an = analyze_source("mriq.c", workloads::MRIQ_C).unwrap();
+    let env_cfg = VerifEnvConfig::r740_pac();
+    let app = AppModel::from_analysis(&an, &env_cfg.cpu, 14.0).unwrap();
+    let ga_cfg = GaConfig {
+        population: 16,
+        generations: 20,
+        ..Default::default()
+    };
+
+    section("convergence (best evaluation value per generation)");
+    let env = VerifEnvConfig::r740_pac().build(42);
+    let out = gpu_flow::run(
+        &app,
+        &env,
+        &GpuFlowConfig {
+            ga: ga_cfg,
+            seed: 42,
+            ..Default::default()
+        },
+    )
+    .expect("ga flow");
+    println!("generation, best_value, mean_value, patterns_measured");
+    for h in &out.ga.history {
+        println!(
+            "{:>4}, {:.6}, {:.6}, {}",
+            h.generation, h.best, h.mean, h.measured
+        );
+    }
+    println!(
+        "\nbest pattern {} → {:.2} s, {:.1} W, {:.0} W·s (baseline {:.2} s, {:.0} W·s)",
+        out.best.pattern,
+        out.best.measurement.time_s,
+        out.best.measurement.mean_w,
+        out.best.measurement.energy_ws,
+        out.baseline.time_s,
+        out.baseline.energy_ws
+    );
+
+    section("ablation: fitness & transfer mode");
+    let mut t = Table::new(&[
+        "variant",
+        "best time [s]",
+        "best power [W]",
+        "best energy [W*s]",
+        "trials",
+    ]);
+    let mut results = Vec::new();
+    for (label, fitness, transfer_opt) in [
+        ("power-aware + batched (paper)", FitnessSpec::paper(), true),
+        ("time-only + batched (previous method)", FitnessSpec::time_only(), true),
+        ("power-aware + per-entry (no §3.1 batching)", FitnessSpec::paper(), false),
+    ] {
+        let env = VerifEnvConfig::r740_pac().build(42);
+        let out = gpu_flow::run(
+            &app,
+            &env,
+            &GpuFlowConfig {
+                ga: ga_cfg,
+                fitness,
+                seed: 42,
+                transfer_opt,
+                parallel_trials: false,
+            },
+        )
+        .expect("ga flow");
+        t.row(&[
+            label.to_string(),
+            format!("{:.2}", out.best.measurement.time_s),
+            format!("{:.1}", out.best.measurement.mean_w),
+            format!("{:.0}", out.best.measurement.energy_ws),
+            out.trials.to_string(),
+        ]);
+        results.push((label, out));
+    }
+    println!("{}", t.render());
+
+    let paper = &results[0].1;
+    let time_only = &results[1].1;
+    let no_batch = &results[2].1;
+    let mut ok = true;
+    ok &= check_band(
+        "power-aware energy ≤ time-only energy (W·s ratio)",
+        time_only.best.measurement.energy_ws / paper.best.measurement.energy_ws,
+        0.95,
+        10.0,
+    );
+    // The GA can *sidestep* per-entry costs by preferring entries=1
+    // patterns, so compare the best values loosely…
+    ok &= check_band(
+        "batched ≥ per-entry value ratio (GA-level)",
+        paper.best.value / no_batch.best.value,
+        0.99,
+        10.0,
+    );
+    // …and demonstrate the §3.1 batching win on a *fixed* many-entry
+    // pattern (offloading the inner k-loop: one launch per voxel).
+    {
+        use enadapt::devices::TransferMode;
+        let outer = app
+            .loops
+            .iter()
+            .max_by(|x, y| x.cpu_time_s.partial_cmp(&y.cpu_time_s).unwrap())
+            .unwrap()
+            .id;
+        let inner = app.loops.iter().find(|l| l.parent == Some(outer)).unwrap().id;
+        let pos = app.candidates.iter().position(|&c| c == inner).unwrap();
+        let mut inner_bits = vec![false; app.genome_len()];
+        inner_bits[pos] = true;
+        let env2 = VerifEnvConfig::r740_pac().build(42);
+        let naive = env2.measure(&app, &inner_bits, enadapt::devices::DeviceKind::Gpu, TransferMode::PerEntry);
+        let batched = env2.measure(&app, &inner_bits, enadapt::devices::DeviceKind::Gpu, TransferMode::Batched);
+        println!(
+            "  fixed inner-loop pattern: per-entry {:.2} s vs batched {:.2} s",
+            naive.time_s, batched.time_s
+        );
+        ok &= check_band(
+            "§3.1 batching speedup on inner-loop pattern",
+            naive.time_s / batched.time_s,
+            1.1,
+            1000.0,
+        );
+    }
+    ok &= check_band(
+        "GA improves on baseline (value ratio)",
+        paper.best.value / paper.baseline_value,
+        1.5,
+        50.0,
+    );
+
+    section("timeout-penalty rule (§4.1b)");
+    let f = FitnessSpec::paper();
+    println!(
+        "  clean 150 s trial value:    {:.6}",
+        f.value(150.0, 120.0, false)
+    );
+    println!(
+        "  timed-out trial value:      {:.6}  (time := 1000 s)",
+        f.value(150.0, 120.0, true)
+    );
+    ok &= check_band(
+        "timeout penalty ratio",
+        f.value(150.0, 120.0, false) / f.value(150.0, 120.0, true),
+        2.0,
+        3.5,
+    );
+
+    section("GA engine throughput (synthetic fitness)");
+    println!(
+        "{}",
+        bench("ga::run 16x20 onemax(len=16)", 2, 20, || {
+            let r = ga::run(16, &ga_cfg, 7, |g| g.ones() as f64);
+            std::hint::black_box(r.best_value);
+        })
+        .row()
+    );
+
+    println!(
+        "\nfig2_ga_gpu: {}",
+        if ok { "ALL BANDS PASS" } else { "SOME BANDS FAILED" }
+    );
+}

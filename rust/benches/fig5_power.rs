@@ -1,0 +1,126 @@
+//! Bench: **Fig. 5** — "Power consumption with FPGA offloading (MRI-Q)".
+//!
+//! Regenerates the paper's only quantitative figure: the whole-server
+//! power (W) vs time (s) trace for MRI-Q processed CPU-only vs offloaded
+//! to the FPGA, plus the headline numbers:
+//!
+//! | quantity            | paper        | this harness                   |
+//! |---------------------|--------------|--------------------------------|
+//! | CPU-only time       | 14 s         | band 13–15.5 s                 |
+//! | offloaded time      | 2 s          | band 1.2–3.2 s                 |
+//! | CPU-only power      | ≈121 W       | band 118–124 W                 |
+//! | offloaded power     | ≈111 W       | band 106–117 W                 |
+//! | CPU-only energy     | 1,690 W·s    | band 1,500–1,900 W·s           |
+//! | offloaded energy    | 223 W·s      | band 150–360 W·s               |
+//!
+//! Also times the measurement machinery itself (the L3 hot path).
+
+use enadapt::canalyze::analyze_source;
+use enadapt::coordinator::{run_job, Destination, JobConfig};
+use enadapt::devices::DeviceKind;
+use enadapt::util::benchkit::{bench, check_band, section};
+use enadapt::util::tablefmt::{ascii_plot, Table};
+use enadapt::verifier::{AppModel, VerifEnvConfig};
+use enadapt::workloads;
+
+fn main() {
+    println!("=== fig5_power: MRI-Q power consumption with FPGA offloading ===");
+
+    // Full Steps 1-7 job, exactly as the paper ran the experiment.
+    let cfg = JobConfig {
+        destination: Destination::Device(DeviceKind::Fpga),
+        seed: 42,
+        ..Default::default()
+    };
+    let job = run_job("mriq.c", workloads::MRIQ_C, &cfg).expect("job");
+
+    section("power trace (paper Fig. 5)");
+    let base_pts = job.baseline.trace.points();
+    let off_pts = job.production.trace.points();
+    println!(
+        "{}",
+        ascii_plot(&[("cpu-only", &base_pts), ("fpga offload", &off_pts)], 70, 16)
+    );
+    // The raw series, like the figure's data points.
+    println!("cpu-only samples (t, W):   {:?}", compact(&base_pts));
+    println!("offloaded samples (t, W):  {:?}", compact(&off_pts));
+
+    section("headline numbers vs paper");
+    let mut t = Table::new(&["quantity", "paper", "measured"]);
+    let b = &job.baseline;
+    let o = &job.production;
+    t.row(&["CPU-only time [s]".into(), "14".into(), format!("{:.2}", b.time_s)]);
+    t.row(&["offloaded time [s]".into(), "2".into(), format!("{:.2}", o.time_s)]);
+    t.row(&["CPU-only power [W]".into(), "121".into(), format!("{:.1}", b.mean_w)]);
+    t.row(&["offloaded power [W]".into(), "111".into(), format!("{:.1}", o.mean_w)]);
+    t.row(&["CPU-only energy [W*s]".into(), "1690".into(), format!("{:.0}", b.energy_ws)]);
+    t.row(&["offloaded energy [W*s]".into(), "223".into(), format!("{:.0}", o.energy_ws)]);
+    t.row(&[
+        "speedup".into(),
+        "7.0x".into(),
+        format!("{:.1}x", b.time_s / o.time_s),
+    ]);
+    t.row(&[
+        "energy reduction".into(),
+        "7.6x".into(),
+        format!("{:.1}x", b.energy_ws / o.energy_ws),
+    ]);
+    println!("{}", t.render());
+
+    let mut ok = true;
+    ok &= check_band("cpu-only time [s]", b.time_s, 13.0, 15.5);
+    ok &= check_band("offloaded time [s]", o.time_s, 1.2, 3.2);
+    ok &= check_band("cpu-only power [W]", b.mean_w, 118.0, 124.0);
+    ok &= check_band("offloaded power [W]", o.mean_w, 106.0, 117.0);
+    ok &= check_band("cpu-only energy [W*s]", b.energy_ws, 1500.0, 1900.0);
+    ok &= check_band("offloaded energy [W*s]", o.energy_ws, 150.0, 360.0);
+    ok &= check_band("speedup", b.time_s / o.time_s, 4.0, 12.0);
+    ok &= check_band("energy ratio", b.energy_ws / o.energy_ws, 4.0, 12.0);
+
+    section("measurement-machinery wall time (L3 hot path)");
+    let an = analyze_source("mriq.c", workloads::MRIQ_C).unwrap();
+    let env_cfg = VerifEnvConfig::r740_pac();
+    let app = AppModel::from_analysis(&an, &env_cfg.cpu, 14.0).unwrap();
+    let env = VerifEnvConfig::r740_pac().build(1);
+    let bits = job.best.pattern.bits().to_vec();
+    println!(
+        "{}",
+        bench("verifier.measure(fpga pattern)", 3, 50, || {
+            let m = env.measure(&app, &bits, DeviceKind::Fpga, Default::default());
+            std::hint::black_box(m.energy_ws);
+        })
+        .row()
+    );
+    println!(
+        "{}",
+        bench("verifier.measure(cpu-only)", 3, 50, || {
+            let m = env.measure_cpu_only(&app);
+            std::hint::black_box(m.energy_ws);
+        })
+        .row()
+    );
+    println!(
+        "{}",
+        bench("analyze_source(mriq.c) [steps 1-2]", 1, 10, || {
+            let an = analyze_source("mriq.c", workloads::MRIQ_C).unwrap();
+            std::hint::black_box(an.n_loops());
+        })
+        .row()
+    );
+
+    println!(
+        "\nfig5_power: {}",
+        if ok { "ALL BANDS PASS" } else { "SOME BANDS FAILED" }
+    );
+}
+
+/// First+middle+last points, to keep stdout readable.
+fn compact(pts: &[(f64, f64)]) -> Vec<(f64, f64)> {
+    if pts.len() <= 6 {
+        return pts.to_vec();
+    }
+    let mut v = pts[..3].to_vec();
+    v.push(pts[pts.len() / 2]);
+    v.extend_from_slice(&pts[pts.len() - 2..]);
+    v
+}

@@ -1,0 +1,181 @@
+//! Bench: **§3.3** — mixed-environment destination selection.
+//!
+//! Regenerates the section's claims:
+//!
+//! * verification order many-core → GPU → FPGA;
+//! * early stop when user requirements are met (and the search cost it
+//!   saves — chiefly the hours-long FPGA compiles);
+//! * power-aware vs time-only selection (can flip the chosen destination);
+//! * the §3.3 datacenter cost model (initial ⅓ / operation ⅓ / other ⅓).
+
+use enadapt::canalyze::analyze_source;
+use enadapt::devices::DeviceKind;
+use enadapt::ga::{FitnessSpec, GaConfig};
+use enadapt::offload::{mixed, DataCenterCost, GpuFlowConfig, MixedConfig, Requirements};
+use enadapt::util::benchkit::{check_band, section};
+use enadapt::util::tablefmt::Table;
+use enadapt::verifier::{AppModel, VerifEnvConfig};
+use enadapt::workloads;
+
+fn main() {
+    println!("=== mixed_selection: §3.3 destination selection in mixed environments ===");
+
+    let an = analyze_source("mriq.c", workloads::MRIQ_C).unwrap();
+    let env_cfg = VerifEnvConfig::r740_pac();
+    let app = AppModel::from_analysis(&an, &env_cfg.cpu, 14.0).unwrap();
+    let ga_flow = GpuFlowConfig {
+        ga: GaConfig {
+            population: 12,
+            generations: 10,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+
+    let mut ok = true;
+
+    section("requirement sweep: early stop & trials saved");
+    let mut t = Table::new(&[
+        "requirements (speedup / energy)",
+        "verified",
+        "skipped",
+        "chosen",
+        "trials",
+        "search cost [h]",
+    ]);
+    for (label, req) in [
+        ("any improvement (1x/1x)", Requirements::any_improvement()),
+        ("moderate (3x/1.5x)", Requirements { min_speedup: 3.0, min_energy_ratio: 1.5 }),
+        ("default (5x/2x)", Requirements::default()),
+        ("impossible (∞/∞)", Requirements { min_speedup: f64::INFINITY, min_energy_ratio: f64::INFINITY }),
+    ] {
+        let env = VerifEnvConfig::r740_pac().build(7);
+        let out = mixed::run(
+            &app,
+            &env,
+            &MixedConfig {
+                requirements: req,
+                ga_flow,
+                ..Default::default()
+            },
+        )
+        .expect("mixed");
+        t.row(&[
+            label.to_string(),
+            out.tried
+                .iter()
+                .map(|d| d.device.name())
+                .collect::<Vec<_>>()
+                .join("→"),
+            out.skipped
+                .iter()
+                .map(|d| d.name())
+                .collect::<Vec<_>>()
+                .join(","),
+            out.chosen.device.to_string(),
+            out.tried.iter().map(|d| d.trials).sum::<u64>().to_string(),
+            format!("{:.1}", env.search_cost_s() / 3600.0),
+        ]);
+        if label.starts_with("any") {
+            // Lenient requirements must stop at the first destination.
+            ok &= check_band("early stop at many-core", out.tried.len() as f64, 1.0, 1.0);
+            ok &= check_band(
+                "fpga skipped",
+                out.skipped.contains(&DeviceKind::Fpga) as u8 as f64,
+                1.0,
+                1.0,
+            );
+        }
+        if label.starts_with("impossible") {
+            ok &= check_band("all three verified", out.tried.len() as f64, 3.0, 3.0);
+            ok &= check_band(
+                "order many-core→gpu→fpga",
+                (out.tried[0].device == DeviceKind::ManyCore
+                    && out.tried[1].device == DeviceKind::Gpu
+                    && out.tried[2].device == DeviceKind::Fpga) as u8 as f64,
+                1.0,
+                1.0,
+            );
+        }
+    }
+    println!("{}", t.render());
+
+    section("power-aware vs time-only selection (full verification)");
+    let impossible = Requirements {
+        min_speedup: f64::INFINITY,
+        min_energy_ratio: f64::INFINITY,
+    };
+    let env = VerifEnvConfig::r740_pac().build(7);
+    let aware = mixed::run(
+        &app,
+        &env,
+        &MixedConfig {
+            requirements: impossible,
+            ga_flow,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let env = VerifEnvConfig::r740_pac().build(7);
+    let mut cfg_time = MixedConfig {
+        requirements: impossible,
+        fitness: FitnessSpec::time_only(),
+        ga_flow,
+        ..Default::default()
+    };
+    cfg_time.ga_flow.fitness = FitnessSpec::time_only();
+    cfg_time.fpga_flow.fitness = FitnessSpec::time_only();
+    let timeonly = mixed::run(&app, &env, &cfg_time).unwrap();
+    let mut t = Table::new(&["objective", "chosen", "time [s]", "power [W]", "energy [W*s]"]);
+    for (label, out) in [("power-aware (paper)", &aware), ("time-only (previous)", &timeonly)] {
+        t.row(&[
+            label.to_string(),
+            out.chosen.device.to_string(),
+            format!("{:.2}", out.chosen.best.measurement.time_s),
+            format!("{:.1}", out.chosen.best.measurement.mean_w),
+            format!("{:.0}", out.chosen.best.measurement.energy_ws),
+        ]);
+    }
+    println!("{}", t.render());
+    ok &= check_band(
+        "power-aware chooses FPGA on MRI-Q",
+        (aware.chosen.device == DeviceKind::Fpga) as u8 as f64,
+        1.0,
+        1.0,
+    );
+    ok &= check_band(
+        "power-aware energy ≤ time-only energy",
+        timeonly.chosen.best.measurement.energy_ws / aware.chosen.best.measurement.energy_ws,
+        1.0,
+        10.0,
+    );
+
+    section("§3.3 datacenter cost model");
+    let cost = DataCenterCost::default();
+    let mut t = Table::new(&["scenario", "speedup", "energy ratio", "relative total cost"]);
+    for (label, s, p) in [
+        ("no offload", 1.0, 1.0),
+        ("paper example: time 1/5, power 1/2", 5.0, 2.0),
+        ("fig5 fpga result", 7.0, 7.6),
+        ("gpu result (fast, power-hungry)", 9.0, 6.0),
+    ] {
+        t.row(&[
+            label.to_string(),
+            format!("{s:.1}x"),
+            format!("{p:.1}x"),
+            format!("{:.3}", cost.relative_cost(s, p)),
+        ]);
+    }
+    println!("{}", t.render());
+    ok &= check_band(
+        "paper example cuts cost but < half",
+        cost.relative_cost(5.0, 2.0),
+        0.5,
+        1.0,
+    );
+
+    println!(
+        "\nmixed_selection: {}",
+        if ok { "ALL BANDS PASS" } else { "SOME BANDS FAILED" }
+    );
+}

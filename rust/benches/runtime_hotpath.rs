@@ -1,0 +1,126 @@
+//! Bench: runtime + coordinator hot paths (the §Perf harness).
+//!
+//! Not a paper figure — this is deliverable (e): profile and optimize the
+//! stack. Measures:
+//!
+//! * PJRT execute latency of each AOT artifact (L2 path, real execution);
+//! * input-literal construction cost (the L3→PJRT boundary);
+//! * the verifier's measurement loop (the L3 hot path the GA hammers);
+//! * end-to-end Steps 1–7 job wall time;
+//! * GA engine + analyzer throughput.
+//!
+//! Results land in EXPERIMENTS.md §Perf (before/after iterations).
+
+use enadapt::canalyze::analyze_source;
+use enadapt::coordinator::{run_job, Destination, JobConfig};
+use enadapt::devices::DeviceKind;
+use enadapt::ga::{self, GaConfig};
+use enadapt::runtime;
+use enadapt::util::benchkit::{bench, section};
+use enadapt::verifier::{AppModel, VerifEnvConfig};
+use enadapt::workloads;
+
+fn main() {
+    println!("=== runtime_hotpath: L1/L2/L3 hot-path wall times ===");
+
+    // --- L2: real PJRT execution of the AOT artifacts. ------------------
+    section("PJRT execute (real HLO, per artifact)");
+    match runtime::load_artifacts(&runtime::default_dir()) {
+        Ok(arts) if arts.complete() => {
+            let rt = runtime::HloRuntime::cpu().expect("cpu client");
+            for v in &arts.variants {
+                let model = rt.load_artifact(v).expect("load");
+                let inputs = model.synth_inputs();
+                let s = bench(&format!("execute {}", v.name), 2, 20, || {
+                    let r = model.exe.run_f32(&inputs).unwrap();
+                    std::hint::black_box(r.outputs.len());
+                });
+                println!("{}", s.row());
+                // FLOP-rate estimate for the large variants.
+                let flops = 2.0 * 14.0 * v.num_k as f64 * v.num_x as f64;
+                println!(
+                    "    ≈ {:.2} GFLOP/s effective ({}x{} Q accumulation)",
+                    flops / s.median_s / 1e9,
+                    v.num_k,
+                    v.num_x
+                );
+            }
+            section("input-literal construction (L3→PJRT boundary)");
+            let v = arts.variant("mriq_cpu_large").unwrap();
+            println!(
+                "{}",
+                bench("synth_mriq_inputs(512, 4096)", 2, 50, || {
+                    let i = runtime::synth_mriq_inputs(v.num_k, v.num_x);
+                    std::hint::black_box(i.len());
+                })
+                .row()
+            );
+            section("compile cost (once per variant at startup)");
+            println!(
+                "{}",
+                bench("load+compile mriq_cpu_small", 1, 5, || {
+                    let m = rt.load_artifact(arts.variant("mriq_cpu_small").unwrap()).unwrap();
+                    std::hint::black_box(m.exe.name.len());
+                })
+                .row()
+            );
+        }
+        _ => println!("  (artifacts not built — run `make artifacts`; skipping PJRT benches)"),
+    }
+
+    // --- L3: verifier + flows. -------------------------------------------
+    section("verifier measurement loop (GA hot path)");
+    let an = analyze_source("mriq.c", workloads::MRIQ_C).unwrap();
+    let env_cfg = VerifEnvConfig::r740_pac();
+    let app = AppModel::from_analysis(&an, &env_cfg.cpu, 14.0).unwrap();
+    let env = VerifEnvConfig::r740_pac().build(3);
+    let bits: Vec<bool> = (0..app.genome_len()).map(|i| i % 3 == 0).collect();
+    println!(
+        "{}",
+        bench("measure(gpu, 16-gene pattern)", 5, 200, || {
+            let m = env.measure(&app, &bits, DeviceKind::Gpu, Default::default());
+            std::hint::black_box(m.energy_ws);
+        })
+        .row()
+    );
+    println!(
+        "{}",
+        bench("AppModel::from_analysis(mriq)", 2, 50, || {
+            let a = AppModel::from_analysis(&an, &env_cfg.cpu, 14.0).unwrap();
+            std::hint::black_box(a.genome_len());
+        })
+        .row()
+    );
+
+    section("analyzer (Steps 1-2) & GA engine");
+    println!(
+        "{}",
+        bench("analyze_source(mriq.c) full profile", 1, 10, || {
+            let a = analyze_source("mriq.c", workloads::MRIQ_C).unwrap();
+            std::hint::black_box(a.n_loops());
+        })
+        .row()
+    );
+    println!(
+        "{}",
+        bench("ga::run 16x20 synthetic", 2, 20, || {
+            let r = ga::run(16, &GaConfig::default(), 9, |g| g.ones() as f64);
+            std::hint::black_box(r.best_value);
+        })
+        .row()
+    );
+
+    section("end-to-end Steps 1-7 job");
+    println!(
+        "{}",
+        bench("run_job(mriq, fpga)", 1, 5, || {
+            let cfg = JobConfig {
+                destination: Destination::Device(DeviceKind::Fpga),
+                ..Default::default()
+            };
+            let r = run_job("mriq.c", workloads::MRIQ_C, &cfg).unwrap();
+            std::hint::black_box(r.trials);
+        })
+        .row()
+    );
+}

@@ -1,0 +1,386 @@
+//! Abstract syntax tree for the analyzed C subset.
+//!
+//! The subset covers what Parboil-style numeric kernels need: `int` /
+//! `float` scalars and 1-D arrays, functions, canonical `for` loops,
+//! `while`, `if`/`else`, compound assignment, math builtins and `printf`.
+//! This is the substrate standing in for Clang in the paper's Step 1
+//! (code analysis) — see DESIGN.md §2.
+
+/// Scalar element type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ty {
+    /// `int`
+    Int,
+    /// `float` (interpreted in f64 for profiling; codegen emits `float`)
+    Float,
+    /// `void` (function return only)
+    Void,
+}
+
+impl Ty {
+    /// Size in bytes on the modeled machine (C `float`/`int` are 4 bytes).
+    pub fn size_bytes(self) -> u64 {
+        match self {
+            Ty::Int | Ty::Float => 4,
+            Ty::Void => 0,
+        }
+    }
+}
+
+/// Binary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    /// `+`
+    Add,
+    /// `-`
+    Sub,
+    /// `*`
+    Mul,
+    /// `/`
+    Div,
+    /// `%` (int only)
+    Mod,
+    /// `<`
+    Lt,
+    /// `<=`
+    Le,
+    /// `>`
+    Gt,
+    /// `>=`
+    Ge,
+    /// `==`
+    Eq,
+    /// `!=`
+    Ne,
+    /// `&&`
+    And,
+    /// `||`
+    Or,
+}
+
+impl BinOp {
+    /// True for `&&`/`||`/comparisons (result is int 0/1).
+    pub fn is_logical(self) -> bool {
+        !matches!(self, BinOp::Add | BinOp::Sub | BinOp::Mul | BinOp::Div | BinOp::Mod)
+    }
+}
+
+/// Unary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnOp {
+    /// `-x`
+    Neg,
+    /// `!x`
+    Not,
+}
+
+/// Expressions. Every node carries its source line for diagnostics.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    /// Integer literal.
+    IntLit(i64, usize),
+    /// Float literal.
+    FloatLit(f64, usize),
+    /// String literal (printf format strings only).
+    StrLit(String, usize),
+    /// Scalar variable reference.
+    Var(String, usize),
+    /// Array element `name[index]`.
+    Index(String, Box<Expr>, usize),
+    /// Binary operation.
+    Bin(BinOp, Box<Expr>, Box<Expr>, usize),
+    /// Unary operation.
+    Un(UnOp, Box<Expr>, usize),
+    /// Function call (builtin or user-defined).
+    Call(String, Vec<Expr>, usize),
+}
+
+impl Expr {
+    /// Source line of the expression.
+    pub fn line(&self) -> usize {
+        match self {
+            Expr::IntLit(_, l)
+            | Expr::FloatLit(_, l)
+            | Expr::StrLit(_, l)
+            | Expr::Var(_, l)
+            | Expr::Index(_, _, l)
+            | Expr::Bin(_, _, _, l)
+            | Expr::Un(_, _, l)
+            | Expr::Call(_, _, l) => *l,
+        }
+    }
+
+    /// Does this expression mention variable `name` anywhere?
+    pub fn mentions(&self, name: &str) -> bool {
+        match self {
+            Expr::Var(n, _) => n == name,
+            Expr::Index(n, idx, _) => n == name || idx.mentions(name),
+            Expr::Bin(_, a, b, _) => a.mentions(name) || b.mentions(name),
+            Expr::Un(_, a, _) => a.mentions(name),
+            Expr::Call(_, args, _) => args.iter().any(|a| a.mentions(name)),
+            _ => false,
+        }
+    }
+
+    /// Collect scalar variable names read by this expression.
+    pub fn collect_vars(&self, out: &mut Vec<String>) {
+        match self {
+            Expr::Var(n, _) => out.push(n.clone()),
+            Expr::Index(n, idx, _) => {
+                out.push(n.clone());
+                idx.collect_vars(out);
+            }
+            Expr::Bin(_, a, b, _) => {
+                a.collect_vars(out);
+                b.collect_vars(out);
+            }
+            Expr::Un(_, a, _) => a.collect_vars(out),
+            Expr::Call(_, args, _) => {
+                for a in args {
+                    a.collect_vars(out);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Assignment targets.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LValue {
+    /// Scalar variable.
+    Var(String),
+    /// Array element.
+    Index(String, Expr),
+}
+
+impl LValue {
+    /// Base variable name of the target.
+    pub fn base(&self) -> &str {
+        match self {
+            LValue::Var(n) => n,
+            LValue::Index(n, _) => n,
+        }
+    }
+}
+
+/// Compound-assignment operator (`=` is `None` in [`Stmt::Assign`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AssignOp {
+    /// `=`
+    Set,
+    /// `+=`
+    Add,
+    /// `-=`
+    Sub,
+    /// `*=`
+    Mul,
+    /// `/=`
+    Div,
+}
+
+/// Statements.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    /// Scalar declaration `ty name (= init)?;`
+    Decl {
+        /// Element type.
+        ty: Ty,
+        /// Variable name.
+        name: String,
+        /// Optional initializer.
+        init: Option<Expr>,
+        /// Source line.
+        line: usize,
+    },
+    /// Array declaration `ty name[size];` — size must be a constant expr.
+    ArrayDecl {
+        /// Element type.
+        ty: Ty,
+        /// Array name.
+        name: String,
+        /// Declared length (constant-folded at parse time).
+        size: Expr,
+        /// Source line.
+        line: usize,
+    },
+    /// Assignment `lv op expr;`
+    Assign {
+        /// Target.
+        lv: LValue,
+        /// `=`, `+=`, ...
+        op: AssignOp,
+        /// Right-hand side.
+        rhs: Expr,
+        /// Source line.
+        line: usize,
+    },
+    /// `for (init; cond; step) body` — loops get a stable id in source order.
+    For {
+        /// Loop id assigned by the parser (source order, 0-based).
+        loop_id: usize,
+        /// Init assignment (e.g. `i = 0`), if present.
+        init: Option<Box<Stmt>>,
+        /// Condition (empty = always true, not supported: cond required).
+        cond: Expr,
+        /// Step assignment (e.g. `i++` desugared to `i += 1`).
+        step: Option<Box<Stmt>>,
+        /// Body.
+        body: Vec<Stmt>,
+        /// Source line of the `for`.
+        line: usize,
+    },
+    /// `while (cond) body` — also gets a loop id (counts as a "loop
+    /// statement" for the paper's tally but is never parallelizable here).
+    While {
+        /// Loop id.
+        loop_id: usize,
+        /// Condition.
+        cond: Expr,
+        /// Body.
+        body: Vec<Stmt>,
+        /// Source line.
+        line: usize,
+    },
+    /// `if (cond) then (else otherwise)?`
+    If {
+        /// Condition.
+        cond: Expr,
+        /// Then branch.
+        then: Vec<Stmt>,
+        /// Else branch.
+        otherwise: Vec<Stmt>,
+        /// Source line.
+        line: usize,
+    },
+    /// `return expr?;`
+    Return(Option<Expr>, usize),
+    /// Bare call, e.g. `printf(...);` or `foo(a, b);`
+    ExprStmt(Expr, usize),
+    /// `break;`
+    Break(usize),
+    /// `continue;`
+    Continue(usize),
+}
+
+impl Stmt {
+    /// Source line of the statement.
+    pub fn line(&self) -> usize {
+        match self {
+            Stmt::Decl { line, .. }
+            | Stmt::ArrayDecl { line, .. }
+            | Stmt::Assign { line, .. }
+            | Stmt::For { line, .. }
+            | Stmt::While { line, .. }
+            | Stmt::If { line, .. }
+            | Stmt::Return(_, line)
+            | Stmt::ExprStmt(_, line)
+            | Stmt::Break(line)
+            | Stmt::Continue(line) => *line,
+        }
+    }
+}
+
+/// A function parameter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Param {
+    /// Element type.
+    pub ty: Ty,
+    /// Name.
+    pub name: String,
+    /// True for `float *x` / `float x[]` (array-of-`ty` parameter).
+    pub is_array: bool,
+}
+
+/// A function definition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Function {
+    /// Return type.
+    pub ret: Ty,
+    /// Name.
+    pub name: String,
+    /// Parameters.
+    pub params: Vec<Param>,
+    /// Body.
+    pub body: Vec<Stmt>,
+    /// Source line of the definition.
+    pub line: usize,
+}
+
+/// A whole translation unit.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Program {
+    /// Functions in source order. Entry point is `main`.
+    pub functions: Vec<Function>,
+    /// Number of loop statements (`for` + `while`) in the unit.
+    pub n_loops: usize,
+}
+
+impl Program {
+    /// Look up a function by name.
+    pub fn function(&self, name: &str) -> Option<&Function> {
+        self.functions.iter().find(|f| f.name == name)
+    }
+}
+
+/// Math builtins understood by the analyzer, profiler and code generators.
+/// Cost class: `special` ops (modelled as multi-cycle on every device).
+pub const MATH_BUILTINS: &[&str] = &[
+    "sinf", "cosf", "tanf", "sqrtf", "fabsf", "expf", "logf", "floorf", "ceilf", "powf",
+    "sin", "cos", "sqrt", "fabs", "exp", "log",
+];
+
+/// Is `name` a pure math builtin?
+pub fn is_math_builtin(name: &str) -> bool {
+    MATH_BUILTINS.contains(&name)
+}
+
+/// Side-effecting builtins allowed outside offload regions.
+pub const IO_BUILTINS: &[&str] = &["printf"];
+
+/// Is `name` any builtin (math or IO)?
+pub fn is_builtin(name: &str) -> bool {
+    is_math_builtin(name) || IO_BUILTINS.contains(&name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mentions_walks_nested() {
+        let e = Expr::Bin(
+            BinOp::Add,
+            Box::new(Expr::Index(
+                "a".into(),
+                Box::new(Expr::Var("i".into(), 1)),
+                1,
+            )),
+            Box::new(Expr::FloatLit(1.0, 1)),
+            1,
+        );
+        assert!(e.mentions("i"));
+        assert!(e.mentions("a"));
+        assert!(!e.mentions("j"));
+    }
+
+    #[test]
+    fn collect_vars_dedups_not_required() {
+        let e = Expr::Call(
+            "sinf".into(),
+            vec![Expr::Var("x".into(), 1), Expr::Var("x".into(), 1)],
+            1,
+        );
+        let mut vs = Vec::new();
+        e.collect_vars(&mut vs);
+        assert_eq!(vs, vec!["x".to_string(), "x".to_string()]);
+    }
+
+    #[test]
+    fn builtin_classification() {
+        assert!(is_math_builtin("cosf"));
+        assert!(!is_math_builtin("printf"));
+        assert!(is_builtin("printf"));
+        assert!(!is_builtin("computeQ"));
+    }
+}

@@ -1,0 +1,556 @@
+//! Loop-carried dependence analysis — decides which loop statements are
+//! *parallelizable* (offloadable), the paper's Step 2 gate. A compiler can
+//! prove a loop **cannot** be parallelized; whether offloading it is
+//! *worth it* is what the GA / narrowing search decides by measurement.
+//!
+//! A `for` loop is classified parallelizable when:
+//!
+//! 1. it is canonical (`for (i = a; i <cmp> b; i +=/-= c)` with constant
+//!    step) and the induction variable is not written in the body;
+//! 2. loop bounds are invariant (no variable in the condition is assigned
+//!    in the body);
+//! 3. the body has no `break`/`continue`/`return`, no `while` loops, no
+//!    I/O (`printf`) and no user-function calls (only pure math builtins);
+//! 4. every array store in the region varies with one of the nest's
+//!    induction variables **including this loop's** (otherwise iterations
+//!    of this loop write the same elements — a write-write conflict);
+//! 5. every scalar written in the region is either declared inside the
+//!    region (private) or is a pure reduction (`s += e` / `s *= e` where
+//!    `s` is not otherwise read in the region).
+//!
+//! `while` loops are never parallelizable (unknown trip structure).
+
+use super::ast::*;
+use super::loops::{LoopId, LoopInfo};
+
+/// Run the classifier over the loop table, filling `parallelizable` /
+/// `not_parallel_reason` in place.
+pub fn classify_loops(prog: &Program, table: &mut [LoopInfo]) {
+    for f in &prog.functions {
+        walk(&f.body, &mut Vec::new(), table, f);
+    }
+}
+
+fn walk(body: &[Stmt], inductions: &mut Vec<String>, table: &mut [LoopInfo], f: &Function) {
+    for s in body {
+        match s {
+            Stmt::For {
+                loop_id,
+                init,
+                cond,
+                step,
+                body,
+                ..
+            } => {
+                let id = LoopId(*loop_id);
+                let verdict = classify_for(
+                    init.as_deref(),
+                    cond,
+                    step.as_deref(),
+                    body,
+                    inductions,
+                    table,
+                );
+                match verdict {
+                    Ok(()) => table[id.0].parallelizable = true,
+                    Err(reason) => {
+                        table[id.0].parallelizable = false;
+                        table[id.0].not_parallel_reason = Some(reason);
+                    }
+                }
+                let ind = table[id.0].induction.clone();
+                if let Some(ind) = ind {
+                    inductions.push(ind);
+                    walk(body, inductions, table, f);
+                    inductions.pop();
+                } else {
+                    walk(body, inductions, table, f);
+                }
+            }
+            Stmt::While { loop_id, body, .. } => {
+                let id = LoopId(*loop_id);
+                table[id.0].parallelizable = false;
+                table[id.0].not_parallel_reason =
+                    Some("while loop: trip count unknown at compile time".into());
+                walk(body, inductions, table, f);
+            }
+            Stmt::If { then, otherwise, .. } => {
+                walk(then, inductions, table, f);
+                walk(otherwise, inductions, table, f);
+            }
+            _ => {}
+        }
+    }
+}
+
+fn classify_for(
+    init: Option<&Stmt>,
+    cond: &Expr,
+    step: Option<&Stmt>,
+    body: &[Stmt],
+    outer_inductions: &[String],
+    table: &[LoopInfo],
+) -> Result<(), String> {
+    // 1. Canonical shape.
+    let ind = match canonical_induction(init, step) {
+        Some(v) => v,
+        None => return Err("non-canonical loop header (no simple induction variable)".into()),
+    };
+    if !cond_mentions_only(cond, &ind) {
+        return Err(format!(
+            "loop condition does not test induction variable '{ind}' against a bound"
+        ));
+    }
+
+    // Gather condition variables for invariance check.
+    let mut bound_vars = Vec::new();
+    cond.collect_vars(&mut bound_vars);
+    bound_vars.retain(|v| *v != ind);
+
+    // Region-wide checks.
+    let mut cx = BodyCheck {
+        ind: &ind,
+        bound_vars: &bound_vars,
+        outer_inductions,
+        locals: vec![ind.clone()],
+        all_inductions: {
+            let mut v = outer_inductions.to_vec();
+            v.push(ind.clone());
+            v
+        },
+        reduction_writes: Vec::new(),
+        table,
+    };
+    cx.check_body(body)?;
+
+    // 5b. Reduction targets must not be read elsewhere in the region.
+    for target in &cx.reduction_writes.clone() {
+        if region_reads_scalar(body, target, &cx.reduction_writes) {
+            return Err(format!(
+                "scalar '{target}' carries a loop dependence (read and written across iterations)"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// True when an index expression contains a memory load (`b[i]` used as an
+/// index) — stores through such indices are unverifiable statically.
+fn index_is_indirect(e: &Expr) -> bool {
+    match e {
+        Expr::Index(..) => true,
+        Expr::Bin(_, a, b, _) => index_is_indirect(a) || index_is_indirect(b),
+        Expr::Un(_, a, _) => index_is_indirect(a),
+        Expr::Call(_, args, _) => args.iter().any(index_is_indirect),
+        _ => false,
+    }
+}
+
+/// Canonical induction variable of a `for` header (init sets it, step
+/// adds/subtracts a constant).
+fn canonical_induction(init: Option<&Stmt>, step: Option<&Stmt>) -> Option<String> {
+    let (var, ok_step) = match step? {
+        Stmt::Assign {
+            lv: LValue::Var(v),
+            op: AssignOp::Add | AssignOp::Sub,
+            rhs,
+            ..
+        } => (v.clone(), matches!(rhs, Expr::IntLit(c, _) if *c != 0)),
+        _ => return None,
+    };
+    if !ok_step {
+        return None;
+    }
+    match init {
+        Some(Stmt::Assign {
+            lv: LValue::Var(v), ..
+        }) if *v == var => Some(var),
+        Some(Stmt::Decl { name, .. }) if *name == var => Some(var),
+        None => Some(var),
+        _ => None,
+    }
+}
+
+/// Condition must be `ind <cmp> expr` or `expr <cmp> ind`.
+fn cond_mentions_only(cond: &Expr, ind: &str) -> bool {
+    match cond {
+        Expr::Bin(op, lhs, rhs, _)
+            if matches!(op, BinOp::Lt | BinOp::Le | BinOp::Gt | BinOp::Ge | BinOp::Ne) =>
+        {
+            let l_is_ind = matches!(&**lhs, Expr::Var(v, _) if v == ind);
+            let r_is_ind = matches!(&**rhs, Expr::Var(v, _) if v == ind);
+            (l_is_ind && !rhs.mentions(ind)) || (r_is_ind && !lhs.mentions(ind))
+        }
+        _ => false,
+    }
+}
+
+struct BodyCheck<'a> {
+    ind: &'a str,
+    bound_vars: &'a [String],
+    #[allow(dead_code)]
+    outer_inductions: &'a [String],
+    /// Scalars declared inside the region (private) + the induction var.
+    locals: Vec<String>,
+    /// All induction vars of the nest (outer + this one + any inner ones
+    /// pushed while descending).
+    all_inductions: Vec<String>,
+    /// Reduction-written outer scalars (to verify no other reads).
+    reduction_writes: Vec<String>,
+    table: &'a [LoopInfo],
+}
+
+impl<'a> BodyCheck<'a> {
+    fn check_body(&mut self, body: &[Stmt]) -> Result<(), String> {
+        for s in body {
+            self.check_stmt(s)?;
+        }
+        Ok(())
+    }
+
+    fn check_stmt(&mut self, s: &Stmt) -> Result<(), String> {
+        match s {
+            Stmt::Break(_) => Err("body contains 'break'".into()),
+            Stmt::Continue(_) => Err("body contains 'continue'".into()),
+            Stmt::Return(..) => Err("body contains 'return'".into()),
+            Stmt::While { .. } => Err("body contains a while loop".into()),
+            Stmt::Decl { name, init, .. } => {
+                if let Some(e) = init {
+                    self.check_expr(e)?;
+                }
+                self.locals.push(name.clone());
+                Ok(())
+            }
+            Stmt::ArrayDecl { name, .. } => {
+                self.locals.push(name.clone());
+                Ok(())
+            }
+            Stmt::Assign { lv, op, rhs, .. } => {
+                self.check_expr(rhs)?;
+                match lv {
+                    LValue::Var(v) => {
+                        if v == self.ind {
+                            return Err(format!("induction variable '{v}' written in body"));
+                        }
+                        if self.bound_vars.contains(v) {
+                            return Err(format!("loop bound variable '{v}' written in body"));
+                        }
+                        if !self.locals.contains(v) {
+                            match op {
+                                AssignOp::Add | AssignOp::Sub | AssignOp::Mul | AssignOp::Div => {
+                                    self.reduction_writes.push(v.clone());
+                                }
+                                AssignOp::Set => {
+                                    return Err(format!(
+                                        "scalar '{v}' defined outside the loop is overwritten \
+                                         (not a reduction)"
+                                    ));
+                                }
+                            }
+                        }
+                        Ok(())
+                    }
+                    LValue::Index(a, idx) => {
+                        self.check_expr(idx)?;
+                        if self.locals.contains(a) {
+                            return Ok(());
+                        }
+                        // Indirect stores (`h[b[i]] = ...`) can collide
+                        // across iterations no matter what the index
+                        // mentions — the histogram pattern.
+                        if index_is_indirect(idx) {
+                            return Err(format!(
+                                "indirect store to '{a}[...]' (index loaded from memory) \
+                                 may collide across iterations"
+                            ));
+                        }
+                        // 4. Store index must vary with *this* loop's
+                        // induction variable (directly or via an inner
+                        // induction whose range itself is per-iteration —
+                        // conservatively we require a mention of this
+                        // loop's var OR of any var local to the region that
+                        // transitively depends on it; the simple and sound
+                        // approximation used here: mention of this loop's
+                        // induction variable).
+                        if idx.mentions(self.ind) {
+                            Ok(())
+                        } else {
+                            Err(format!(
+                                "store to '{a}[...]' does not vary with induction variable \
+                                 '{}' (write-write conflict across iterations)",
+                                self.ind
+                            ))
+                        }
+                    }
+                }
+            }
+            Stmt::If { cond, then, otherwise, .. } => {
+                self.check_expr(cond)?;
+                self.check_body(then)?;
+                self.check_body(otherwise)
+            }
+            Stmt::For {
+                loop_id,
+                init,
+                cond,
+                step,
+                body,
+                ..
+            } => {
+                // Inner loop: its induction var becomes local; bounds must
+                // not write our state (checked by recursing with our rules).
+                self.check_expr(cond)?;
+                let inner_ind = self.table[*loop_id].induction.clone();
+                if let Some(st) = init.as_deref() {
+                    // Header init may declare/assign the inner induction —
+                    // treat it as a local assignment.
+                    if let Some(ref iv) = inner_ind {
+                        self.locals.push(iv.clone());
+                        self.all_inductions.push(iv.clone());
+                    }
+                    match st {
+                        Stmt::Decl { init: Some(e), .. } => self.check_expr(e)?,
+                        Stmt::Assign { rhs, .. } => self.check_expr(rhs)?,
+                        _ => {}
+                    }
+                }
+                if let Some(st) = step.as_deref() {
+                    if let Stmt::Assign { rhs, .. } = st {
+                        self.check_expr(rhs)?;
+                    }
+                }
+                self.check_body(body)
+            }
+            Stmt::ExprStmt(e, _) => self.check_expr(e),
+        }
+    }
+
+    fn check_expr(&self, e: &Expr) -> Result<(), String> {
+        match e {
+            Expr::Call(name, args, _) => {
+                for a in args {
+                    self.check_expr(a)?;
+                }
+                if is_math_builtin(name) || name.starts_with("__") {
+                    // Math builtins and cast intrinsics are pure.
+                    Ok(())
+                } else if IO_BUILTINS.contains(&name.as_str()) {
+                    Err("body performs I/O (printf)".into())
+                } else {
+                    Err(format!("body calls user function '{name}'"))
+                }
+            }
+            Expr::Bin(_, a, b, _) => {
+                self.check_expr(a)?;
+                self.check_expr(b)
+            }
+            Expr::Un(_, a, _) => self.check_expr(a),
+            Expr::Index(_, idx, _) => self.check_expr(idx),
+            _ => Ok(()),
+        }
+    }
+}
+
+/// Does the region read scalar `name` anywhere other than as the target of
+/// its own reduction update? (`s += e` reads `s` implicitly, which is fine.)
+fn region_reads_scalar(body: &[Stmt], name: &str, reductions: &[String]) -> bool {
+    body.iter().any(|s| stmt_reads_scalar(s, name, reductions))
+}
+
+fn stmt_reads_scalar(s: &Stmt, name: &str, reductions: &[String]) -> bool {
+    match s {
+        Stmt::Decl { init: Some(e), .. } => e.mentions(name),
+        Stmt::Decl { .. } | Stmt::ArrayDecl { .. } => false,
+        Stmt::Assign { lv, rhs, .. } => {
+            // The implicit read of a compound assignment to `name` itself
+            // is allowed; any mention in the RHS or in an index is a real
+            // read.
+            let rhs_reads = rhs.mentions(name);
+            let idx_reads = match lv {
+                LValue::Index(_, idx) => idx.mentions(name),
+                _ => false,
+            };
+            let _ = reductions;
+            rhs_reads || idx_reads
+        }
+        Stmt::If { cond, then, otherwise, .. } => {
+            cond.mentions(name)
+                || region_reads_scalar(then, name, reductions)
+                || region_reads_scalar(otherwise, name, reductions)
+        }
+        Stmt::For { init, cond, step, body, .. } => {
+            let header = init.as_deref().is_some_and(|st| stmt_reads_scalar(st, name, reductions))
+                || cond.mentions(name)
+                || step.as_deref().is_some_and(|st| stmt_reads_scalar(st, name, reductions));
+            header || region_reads_scalar(body, name, reductions)
+        }
+        Stmt::While { cond, body, .. } => {
+            cond.mentions(name) || region_reads_scalar(body, name, reductions)
+        }
+        Stmt::Return(Some(e), _) | Stmt::ExprStmt(e, _) => e.mentions(name),
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::canalyze::loops::extract_loops;
+    use crate::canalyze::parser::parse;
+
+    fn classified(src: &str) -> Vec<LoopInfo> {
+        let prog = parse("t.c", src).unwrap();
+        let mut table = extract_loops(&prog);
+        classify_loops(&prog, &mut table);
+        table
+    }
+
+    #[test]
+    fn simple_map_loop_is_parallel() {
+        let ls = classified(
+            "void f(float *a, float *b, int n) {
+               for (int i = 0; i < n; i++) { a[i] = b[i] * 2.0f; }
+             }",
+        );
+        assert!(ls[0].parallelizable, "{:?}", ls[0].not_parallel_reason);
+    }
+
+    #[test]
+    fn reduction_loop_is_parallel() {
+        let ls = classified(
+            "void f(float *a, int n) {
+               float s = 0.0f;
+               for (int i = 0; i < n; i++) { s += a[i]; }
+             }",
+        );
+        assert!(ls[0].parallelizable, "{:?}", ls[0].not_parallel_reason);
+    }
+
+    #[test]
+    fn recurrence_is_not_parallel() {
+        let ls = classified(
+            "void f(float *a, int n) {
+               for (int i = 1; i < n; i++) { a[i] = a[i - 1] + 1.0f; }
+             }",
+        );
+        // a[i] varies with i, and reads a[i-1] — our conservative rule set
+        // allows the store (varies with i) but flags nothing else; this is
+        // the classic false-positive every directive compiler has, which is
+        // exactly why the paper *measures* instead of trusting analysis.
+        // However scalar recurrences ARE caught:
+        let ls2 = classified(
+            "void f(float *a, int n) {
+               float prev = 0.0f;
+               for (int i = 0; i < n; i++) { a[i] = prev; prev = a[i] + 1.0f; }
+             }",
+        );
+        assert!(ls[0].parallelizable);
+        assert!(!ls2[0].parallelizable);
+        assert!(ls2[0]
+            .not_parallel_reason
+            .as_deref()
+            .unwrap()
+            .contains("prev"));
+    }
+
+    #[test]
+    fn while_is_not_parallel() {
+        let ls = classified("void f(int n) { while (n > 0) { n--; } }");
+        assert!(!ls[0].parallelizable);
+    }
+
+    #[test]
+    fn break_and_printf_block_parallelism() {
+        let ls = classified(
+            "void f(float *a, int n) {
+               for (int i = 0; i < n; i++) { if (a[i] > 3.0f) break; }
+               for (int j = 0; j < n; j++) { printf(\"%f\", a[j]); }
+             }",
+        );
+        assert!(!ls[0].parallelizable);
+        assert!(ls[0].not_parallel_reason.as_deref().unwrap().contains("break"));
+        assert!(!ls[1].parallelizable);
+        assert!(ls[1].not_parallel_reason.as_deref().unwrap().contains("I/O"));
+    }
+
+    #[test]
+    fn histogram_indirect_store_is_not_parallel() {
+        let ls = classified(
+            "void f(float *h, int *b, int n) {
+               for (int i = 0; i < n; i++) { h[b[i]] += 1.0f; }
+             }",
+        );
+        assert!(!ls[0].parallelizable);
+        assert!(ls[0]
+            .not_parallel_reason
+            .as_deref()
+            .unwrap()
+            .contains("indirect store"));
+    }
+
+    #[test]
+    fn induction_write_blocks_parallelism() {
+        let ls = classified(
+            "void f(float *a, int n) {
+               for (int i = 0; i < n; i++) { a[i] = 0.0f; i += 1; }
+             }",
+        );
+        assert!(!ls[0].parallelizable);
+    }
+
+    #[test]
+    fn bound_write_blocks_parallelism() {
+        let ls = classified(
+            "void f(float *a, int n) {
+               for (int i = 0; i < n; i++) { a[i] = 0.0f; n -= 1; }
+             }",
+        );
+        assert!(!ls[0].parallelizable);
+    }
+
+    #[test]
+    fn nested_mriq_shape_both_parallel() {
+        let ls = classified(
+            "void computeQ(float *qr, float *qi, float *kx, float *px, float *mag, int nx, int nk) {
+               for (int x = 0; x < nx; x++) {
+                 float ar = 0.0f;
+                 float ai = 0.0f;
+                 for (int k = 0; k < nk; k++) {
+                   float e = 6.2831853f * kx[k] * px[x];
+                   ar += mag[k] * cosf(e);
+                   ai += mag[k] * sinf(e);
+                 }
+                 qr[x] = ar;
+                 qi[x] = ai;
+               }
+             }",
+        );
+        assert!(ls[0].parallelizable, "outer: {:?}", ls[0].not_parallel_reason);
+        assert!(ls[1].parallelizable, "inner: {:?}", ls[1].not_parallel_reason);
+    }
+
+    #[test]
+    fn user_call_blocks_parallelism() {
+        let ls = classified(
+            "float g(float x) { return x * 2.0f; }
+             void f(float *a, int n) {
+               for (int i = 0; i < n; i++) { a[i] = g(a[i]); }
+             }",
+        );
+        assert!(!ls[0].parallelizable);
+        assert!(ls[0].not_parallel_reason.as_deref().unwrap().contains("user function"));
+    }
+
+    #[test]
+    fn inner_store_not_varying_with_outer_blocks_outer_only() {
+        let ls = classified(
+            "void f(float *a, int n) {
+               for (int i = 0; i < n; i++) {
+                 for (int j = 0; j < n; j++) { a[j] = 1.0f; }
+               }
+             }",
+        );
+        assert!(!ls[0].parallelizable, "outer must not be parallel");
+        assert!(ls[1].parallelizable, "inner is a clean map");
+    }
+}

@@ -1,0 +1,102 @@
+//! Arithmetic-intensity analysis — the substrate standing in for the ROSE
+//! framework in the paper's FPGA flow (§3.2): ranks candidate loop nests by
+//! FLOP/byte so compute-dense loops are tried on the FPGA first, and by
+//! dynamic trip counts (the gcov/gprof signal).
+
+use super::loops::{LoopId, LoopInfo};
+use super::profile::ProfileData;
+
+/// Intensity/trip report for one loop nest.
+#[derive(Debug, Clone)]
+pub struct LoopRank {
+    /// The loop.
+    pub id: LoopId,
+    /// Static per-iteration arithmetic intensity of the loop body.
+    pub static_intensity: f64,
+    /// Dynamic nest intensity (inclusive FLOPs / inclusive bytes) when a
+    /// profile is available.
+    pub dyn_intensity: Option<f64>,
+    /// Total iterations executed (from the profile).
+    pub trips: Option<u64>,
+    /// Share of whole-program dynamic FLOPs spent in this nest.
+    pub flop_share: Option<f64>,
+}
+
+/// Build ranks for all loops (profile optional — static-only ranking is
+/// what a pure source tool like ROSE would produce).
+pub fn rank_loops(table: &[LoopInfo], profile: Option<&ProfileData>) -> Vec<LoopRank> {
+    table
+        .iter()
+        .map(|l| LoopRank {
+            id: l.id,
+            static_intensity: l.census.intensity(),
+            dyn_intensity: profile.map(|p| p.dyn_intensity(table, l.id)),
+            trips: profile.map(|p| p.loop_trips[l.id.0]),
+            flop_share: profile.map(|p| p.flop_share(table, l.id)),
+        })
+        .collect()
+}
+
+/// Loop ids sorted by descending arithmetic intensity (dynamic when
+/// available, else static), restricted to `candidates`.
+pub fn by_intensity(ranks: &[LoopRank], candidates: &[LoopId]) -> Vec<LoopId> {
+    let mut out: Vec<&LoopRank> = ranks.iter().filter(|r| candidates.contains(&r.id)).collect();
+    out.sort_by(|a, b| {
+        let ka = a.dyn_intensity.unwrap_or(a.static_intensity);
+        let kb = b.dyn_intensity.unwrap_or(b.static_intensity);
+        kb.partial_cmp(&ka).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    out.into_iter().map(|r| r.id).collect()
+}
+
+/// Loop ids sorted by descending trip count, restricted to `candidates`.
+/// Falls back to static trip counts when no profile ran.
+pub fn by_trips(table: &[LoopInfo], ranks: &[LoopRank], candidates: &[LoopId]) -> Vec<LoopId> {
+    let mut out: Vec<LoopId> = candidates.to_vec();
+    out.sort_by_key(|id| {
+        let r = &ranks[id.0];
+        let trips = r.trips.or(table[id.0].static_trip).unwrap_or(0);
+        std::cmp::Reverse(trips)
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::canalyze::analyze_source;
+
+    #[test]
+    fn intensity_ranks_compute_dense_loop_first() {
+        let src = "int main() {
+             float a[64];
+             float b[64];
+             for (int i = 0; i < 64; i++) { a[i] = b[i]; }
+             for (int j = 0; j < 64; j++) { a[j] = sinf(cosf(sinf(b[j]))); }
+             return 0;
+           }";
+        let an = analyze_source("t.c", src).unwrap();
+        let ranks = rank_loops(&an.loops, an.profile.as_ref());
+        let ids: Vec<LoopId> = an.loops.iter().map(|l| l.id).collect();
+        let order = by_intensity(&ranks, &ids);
+        assert_eq!(order[0], LoopId(1), "trig-heavy loop should rank first");
+    }
+
+    #[test]
+    fn trips_rank_uses_profile() {
+        let src = "int main() {
+             float a[4];
+             float b[4];
+             for (int i = 0; i < 4; i++) { a[i] = 1.0f; }
+             for (int r = 0; r < 100; r++) {
+               for (int j = 0; j < 4; j++) { b[j] += a[j]; }
+             }
+             return 0;
+           }";
+        let an = analyze_source("t.c", src).unwrap();
+        let ranks = rank_loops(&an.loops, an.profile.as_ref());
+        let ids: Vec<LoopId> = an.loops.iter().map(|l| l.id).collect();
+        let order = by_trips(&an.loops, &ranks, &ids);
+        assert_eq!(order[0], LoopId(2), "inner 400-trip loop first");
+    }
+}

@@ -1,0 +1,374 @@
+//! Tokenizer for the C subset, with line tracking and a tiny preprocessor
+//! (`#define` object-like macros; `#include` lines are ignored since the
+//! subset's builtins are known to the analyzer).
+
+use crate::{Error, Result};
+use std::collections::HashMap;
+
+/// Token kinds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    /// Identifier or keyword.
+    Ident(String),
+    /// Integer literal.
+    Int(i64),
+    /// Floating literal (also covers `1.0f`).
+    Float(f64),
+    /// String literal (contents without quotes).
+    Str(String),
+    /// Punctuation / operator, e.g. `+` `<=` `&&` `(` `;`.
+    Punct(&'static str),
+    /// End of input.
+    Eof,
+}
+
+/// A token plus its 1-based source line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    /// Kind and payload.
+    pub tok: Tok,
+    /// 1-based line.
+    pub line: usize,
+}
+
+/// Multi-character punctuation, longest-match-first.
+const PUNCTS: &[&str] = &[
+    "<<=", ">>=", "==", "!=", "<=", ">=", "&&", "||", "+=", "-=", "*=", "/=", "%=", "++", "--",
+    "<<", ">>", "+", "-", "*", "/", "%", "<", ">", "=", "!", "&", "|", "(", ")", "{", "}", "[",
+    "]", ";", ",", "?", ":", ".",
+];
+
+/// Tokenize preprocessed text (one file). `file` is used for diagnostics.
+pub fn lex(file: &str, text: &str) -> Result<Vec<Token>> {
+    let pre = preprocess(file, text)?;
+    let mut out = Vec::new();
+    let bytes = pre.as_bytes();
+    let mut i = 0;
+    let mut line = 1;
+    let err = |line: usize, msg: String| Error::Analyze {
+        file: file.to_string(),
+        line,
+        msg,
+    };
+
+    while i < bytes.len() {
+        let c = bytes[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            b' ' | b'\t' | b'\r' => i += 1,
+            b'/' if bytes.get(i + 1) == Some(&b'/') => {
+                while i < bytes.len() && bytes[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            b'/' if bytes.get(i + 1) == Some(&b'*') => {
+                i += 2;
+                loop {
+                    if i + 1 >= bytes.len() {
+                        return Err(err(line, "unterminated block comment".into()));
+                    }
+                    if bytes[i] == b'\n' {
+                        line += 1;
+                    }
+                    if bytes[i] == b'*' && bytes[i + 1] == b'/' {
+                        i += 2;
+                        break;
+                    }
+                    i += 1;
+                }
+            }
+            b'"' => {
+                i += 1;
+                let mut s = String::new();
+                loop {
+                    if i >= bytes.len() {
+                        return Err(err(line, "unterminated string".into()));
+                    }
+                    match bytes[i] {
+                        b'"' => {
+                            i += 1;
+                            break;
+                        }
+                        b'\\' => {
+                            let esc = bytes.get(i + 1).copied().unwrap_or(b'\\');
+                            s.push(match esc {
+                                b'n' => '\n',
+                                b't' => '\t',
+                                b'0' => '\0',
+                                other => other as char,
+                            });
+                            i += 2;
+                        }
+                        b'\n' => return Err(err(line, "newline in string".into())),
+                        other => {
+                            s.push(other as char);
+                            i += 1;
+                        }
+                    }
+                }
+                out.push(Token {
+                    tok: Tok::Str(s),
+                    line,
+                });
+            }
+            c if c.is_ascii_digit() || (c == b'.' && bytes.get(i + 1).is_some_and(|b| b.is_ascii_digit())) => {
+                let start = i;
+                let mut is_float = false;
+                while i < bytes.len() && (bytes[i].is_ascii_digit()) {
+                    i += 1;
+                }
+                if i < bytes.len() && bytes[i] == b'.' {
+                    is_float = true;
+                    i += 1;
+                    while i < bytes.len() && bytes[i].is_ascii_digit() {
+                        i += 1;
+                    }
+                }
+                if i < bytes.len() && (bytes[i] == b'e' || bytes[i] == b'E') {
+                    is_float = true;
+                    i += 1;
+                    if i < bytes.len() && (bytes[i] == b'+' || bytes[i] == b'-') {
+                        i += 1;
+                    }
+                    while i < bytes.len() && bytes[i].is_ascii_digit() {
+                        i += 1;
+                    }
+                }
+                let text = std::str::from_utf8(&bytes[start..i]).unwrap();
+                // Optional float suffix.
+                if i < bytes.len() && (bytes[i] == b'f' || bytes[i] == b'F') {
+                    is_float = true;
+                    i += 1;
+                }
+                let tok = if is_float {
+                    Tok::Float(
+                        text.parse::<f64>()
+                            .map_err(|_| err(line, format!("bad float literal '{text}'")))?,
+                    )
+                } else {
+                    Tok::Int(
+                        text.parse::<i64>()
+                            .map_err(|_| err(line, format!("bad int literal '{text}'")))?,
+                    )
+                };
+                out.push(Token { tok, line });
+            }
+            c if c.is_ascii_alphabetic() || c == b'_' => {
+                let start = i;
+                while i < bytes.len() && (bytes[i].is_ascii_alphanumeric() || bytes[i] == b'_') {
+                    i += 1;
+                }
+                let name = std::str::from_utf8(&bytes[start..i]).unwrap().to_string();
+                out.push(Token {
+                    tok: Tok::Ident(name),
+                    line,
+                });
+            }
+            _ => {
+                let rest = &pre[i..];
+                let p = PUNCTS.iter().find(|p| rest.starts_with(**p));
+                match p {
+                    Some(p) => {
+                        out.push(Token {
+                            tok: Tok::Punct(p),
+                            line,
+                        });
+                        i += p.len();
+                    }
+                    None => {
+                        return Err(err(line, format!("unexpected character '{}'", c as char)))
+                    }
+                }
+            }
+        }
+    }
+    out.push(Token {
+        tok: Tok::Eof,
+        line,
+    });
+    Ok(out)
+}
+
+/// Expand `#define NAME TOKENS` object-like macros and drop other
+/// preprocessor lines (`#include`, `#pragma`). Keeps line structure so
+/// token line numbers match the original source.
+fn preprocess(file: &str, text: &str) -> Result<String> {
+    let mut defines: HashMap<String, String> = HashMap::new();
+    let mut out = String::with_capacity(text.len());
+    for (idx, raw_line) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let trimmed = raw_line.trim_start();
+        if let Some(rest) = trimmed.strip_prefix('#') {
+            let rest = rest.trim_start();
+            if let Some(def) = rest.strip_prefix("define") {
+                let def = def.trim_start();
+                let mut parts = def.splitn(2, char::is_whitespace);
+                let name = parts.next().unwrap_or("").to_string();
+                if name.is_empty() || !name.chars().next().unwrap().is_ascii_alphabetic() {
+                    return Err(Error::Analyze {
+                        file: file.to_string(),
+                        line: line_no,
+                        msg: "malformed #define".into(),
+                    });
+                }
+                if name.contains('(') {
+                    return Err(Error::Analyze {
+                        file: file.to_string(),
+                        line: line_no,
+                        msg: "function-like macros are not supported".into(),
+                    });
+                }
+                let body = parts.next().unwrap_or("").trim().to_string();
+                defines.insert(name, body);
+            }
+            // #include / #pragma / #define all become blank lines.
+            out.push('\n');
+            continue;
+        }
+        // Substitute macros token-wise (single pass; macros may reference
+        // earlier macros because bodies were substituted at define time).
+        out.push_str(&substitute(raw_line, &defines));
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+/// Replace identifier occurrences that match a macro name.
+fn substitute(line: &str, defines: &HashMap<String, String>) -> String {
+    if defines.is_empty() {
+        return line.to_string();
+    }
+    let bytes = line.as_bytes();
+    let mut out = String::with_capacity(line.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        let c = bytes[i];
+        if c.is_ascii_alphabetic() || c == b'_' {
+            let start = i;
+            while i < bytes.len() && (bytes[i].is_ascii_alphanumeric() || bytes[i] == b'_') {
+                i += 1;
+            }
+            let word = &line[start..i];
+            match defines.get(word) {
+                // Recursive single-level expansion is enough for numeric
+                // size macros; guard against self-reference.
+                Some(body) if body != word => {
+                    let expanded = substitute(body, defines);
+                    out.push_str(&expanded);
+                }
+                _ => out.push_str(word),
+            }
+        } else if c == b'"' {
+            // Don't substitute inside string literals.
+            let start = i;
+            i += 1;
+            while i < bytes.len() && bytes[i] != b'"' {
+                if bytes[i] == b'\\' {
+                    i += 1;
+                }
+                i += 1;
+            }
+            i = (i + 1).min(bytes.len());
+            out.push_str(&line[start..i]);
+        } else {
+            out.push(c as char);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(src: &str) -> Vec<Tok> {
+        lex("t.c", src).unwrap().into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn lexes_basic_tokens() {
+        let ts = toks("int x = 42; float y = 1.5f;");
+        assert_eq!(
+            ts,
+            vec![
+                Tok::Ident("int".into()),
+                Tok::Ident("x".into()),
+                Tok::Punct("="),
+                Tok::Int(42),
+                Tok::Punct(";"),
+                Tok::Ident("float".into()),
+                Tok::Ident("y".into()),
+                Tok::Punct("="),
+                Tok::Float(1.5),
+                Tok::Punct(";"),
+                Tok::Eof,
+            ]
+        );
+    }
+
+    #[test]
+    fn lexes_multichar_ops() {
+        let ts = toks("a += b <= c && d++");
+        assert!(ts.contains(&Tok::Punct("+=")));
+        assert!(ts.contains(&Tok::Punct("<=")));
+        assert!(ts.contains(&Tok::Punct("&&")));
+        assert!(ts.contains(&Tok::Punct("++")));
+    }
+
+    #[test]
+    fn comments_are_skipped_lines_tracked() {
+        let tokens = lex("t.c", "// hi\n/* multi\nline */ int x;").unwrap();
+        assert_eq!(tokens[0].tok, Tok::Ident("int".into()));
+        assert_eq!(tokens[0].line, 3);
+    }
+
+    #[test]
+    fn define_expansion() {
+        let ts = toks("#define N 64\nint a[N];");
+        assert!(ts.contains(&Tok::Int(64)));
+    }
+
+    #[test]
+    fn define_referencing_define() {
+        let ts = toks("#define N 8\n#define M N\nint a[M];");
+        assert!(ts.contains(&Tok::Int(8)));
+    }
+
+    #[test]
+    fn include_is_ignored() {
+        let ts = toks("#include <stdio.h>\nint x;");
+        assert_eq!(ts[0], Tok::Ident("int".into()));
+    }
+
+    #[test]
+    fn string_literals() {
+        let ts = toks("printf(\"%f\\n\", x);");
+        assert!(ts.contains(&Tok::Str("%f\n".into())));
+    }
+
+    #[test]
+    fn no_substitution_in_strings() {
+        let ts = toks("#define N 4\nprintf(\"N\");");
+        assert!(ts.contains(&Tok::Str("N".into())));
+    }
+
+    #[test]
+    fn scientific_notation() {
+        let ts = toks("x = 2.5e-3;");
+        assert!(ts.contains(&Tok::Float(2.5e-3)));
+    }
+
+    #[test]
+    fn rejects_function_macro() {
+        assert!(lex("t.c", "#define F(x) x\n").is_err());
+    }
+
+    #[test]
+    fn rejects_unterminated_comment() {
+        assert!(lex("t.c", "/* oops").is_err());
+    }
+}

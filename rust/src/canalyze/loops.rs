@@ -1,0 +1,658 @@
+//! Loop-statement extraction and static op census — the paper's Step 2
+//! ("offloadable-part extraction"). Walks each function, builds a
+//! [`LoopInfo`] table in source order, and computes a per-iteration
+//! operation census of each loop body (exclusive of nested loops) used by
+//! the arithmetic-intensity analysis (ROSE substitute) and the device
+//! performance models.
+
+use super::ast::*;
+use std::collections::BTreeSet;
+
+/// Stable identifier of a loop statement (source order, 0-based).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct LoopId(pub usize);
+
+impl std::fmt::Display for LoopId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "L{}", self.0)
+    }
+}
+
+/// Static per-iteration operation census of a loop body (exclusive: ops
+/// inside nested loops are counted in the nested loop's census).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OpCensus {
+    /// Float add/sub.
+    pub fadd: u64,
+    /// Float multiply.
+    pub fmul: u64,
+    /// Float divide.
+    pub fdiv: u64,
+    /// Special-function calls (sin/cos/sqrt/exp/...).
+    pub fspecial: u64,
+    /// Integer ops (index arithmetic, comparisons).
+    pub iops: u64,
+    /// Array-element loads.
+    pub loads: u64,
+    /// Array-element stores.
+    pub stores: u64,
+    /// User-function calls.
+    pub calls: u64,
+}
+
+impl OpCensus {
+    /// Floating-point operations per iteration (divides and specials are
+    /// weighted by typical relative latency so intensity ranking matches
+    /// what a real FLOP counter would see).
+    pub fn flops(&self) -> f64 {
+        self.fadd as f64 + self.fmul as f64 + 4.0 * self.fdiv as f64 + 8.0 * self.fspecial as f64
+    }
+
+    /// Bytes moved to/from memory per iteration (4-byte elements).
+    pub fn bytes(&self) -> f64 {
+        4.0 * (self.loads + self.stores) as f64
+    }
+
+    /// Arithmetic intensity (FLOP / byte); ∞-safe: body with no memory
+    /// traffic reports `flops()` against one byte.
+    pub fn intensity(&self) -> f64 {
+        self.flops() / self.bytes().max(1.0)
+    }
+
+    /// Merge another census into this one.
+    pub fn add(&mut self, other: &OpCensus) {
+        self.fadd += other.fadd;
+        self.fmul += other.fmul;
+        self.fdiv += other.fdiv;
+        self.fspecial += other.fspecial;
+        self.iops += other.iops;
+        self.loads += other.loads;
+        self.stores += other.stores;
+        self.calls += other.calls;
+    }
+}
+
+/// Everything the offload pipeline knows statically about one loop
+/// statement.
+#[derive(Debug, Clone)]
+pub struct LoopInfo {
+    /// Stable id (gene position, codegen handle).
+    pub id: LoopId,
+    /// Enclosing function name.
+    pub func: String,
+    /// Source line of the loop keyword.
+    pub line: usize,
+    /// Nesting depth within the function (0 = outermost).
+    pub depth: usize,
+    /// Immediately enclosing loop, if any.
+    pub parent: Option<LoopId>,
+    /// Directly nested loops.
+    pub children: Vec<LoopId>,
+    /// True for `for`, false for `while`.
+    pub is_for: bool,
+    /// Induction variable for canonical `for` loops.
+    pub induction: Option<String>,
+    /// Static trip count when bounds are compile-time constants.
+    pub static_trip: Option<u64>,
+    /// Per-iteration census, exclusive of nested loops.
+    pub census: OpCensus,
+    /// Arrays read anywhere in the loop region (incl. nested loops).
+    pub arrays_read: BTreeSet<String>,
+    /// Arrays written anywhere in the loop region.
+    pub arrays_written: BTreeSet<String>,
+    /// Scalars read in the region that are declared outside it.
+    pub scalars_in: BTreeSet<String>,
+    /// Scalars written in the region that are declared outside it.
+    pub scalars_out: BTreeSet<String>,
+    /// Result of the dependence analysis (filled by `deps`).
+    pub parallelizable: bool,
+    /// Human-readable reason when not parallelizable.
+    pub not_parallel_reason: Option<String>,
+}
+
+impl LoopInfo {
+    /// All loop ids in this loop's nest including itself (self + children,
+    /// recursively resolved through the table).
+    pub fn nest_ids<'a>(&self, table: &'a [LoopInfo]) -> Vec<LoopId> {
+        let mut out = vec![self.id];
+        let mut stack: Vec<LoopId> = self.children.clone();
+        while let Some(id) = stack.pop() {
+            out.push(id);
+            stack.extend(table[id.0].children.iter().copied());
+        }
+        out.sort();
+        out
+    }
+}
+
+/// Extract the loop table of a program (ids match the parser's numbering).
+pub fn extract_loops(prog: &Program) -> Vec<LoopInfo> {
+    let mut table: Vec<Option<LoopInfo>> = (0..prog.n_loops).map(|_| None).collect();
+    for f in &prog.functions {
+        let mut cx = Walk {
+            table: &mut table,
+            func: &f.name,
+            stack: Vec::new(),
+        };
+        cx.stmts(&f.body);
+    }
+    table
+        .into_iter()
+        .map(|l| l.expect("every parsed loop id is visited"))
+        .collect()
+}
+
+struct Walk<'a> {
+    table: &'a mut Vec<Option<LoopInfo>>,
+    func: &'a str,
+    stack: Vec<LoopId>,
+}
+
+impl<'a> Walk<'a> {
+    fn stmts(&mut self, body: &[Stmt]) {
+        for s in body {
+            self.stmt(s);
+        }
+    }
+
+    fn stmt(&mut self, s: &Stmt) {
+        match s {
+            Stmt::For {
+                loop_id,
+                init,
+                cond,
+                step,
+                body,
+                line,
+            } => {
+                let id = LoopId(*loop_id);
+                let induction = induction_var(init.as_deref(), step.as_deref());
+                let static_trip = static_trip(init.as_deref(), cond, step.as_deref());
+                self.enter_loop(id, *line, true, induction, static_trip);
+                // Census of header expressions counts toward the loop's own
+                // per-iteration cost.
+                let mut census = OpCensus::default();
+                census_expr(cond, &mut census);
+                if let Some(st) = step.as_deref() {
+                    census_stmt_shallow(st, &mut census);
+                }
+                self.merge_census(id, &census);
+                let mut header: Vec<&Expr> = vec![cond];
+                if let Some(Stmt::Assign { rhs, .. }) | Some(Stmt::Decl { init: Some(rhs), .. }) =
+                    init.as_deref()
+                {
+                    header.push(rhs);
+                }
+                if let Some(Stmt::Assign { rhs, .. }) = step.as_deref() {
+                    header.push(rhs);
+                }
+                self.region(id, &header, body);
+                self.stack.pop();
+            }
+            Stmt::While {
+                loop_id,
+                cond,
+                body,
+                line,
+            } => {
+                let id = LoopId(*loop_id);
+                self.enter_loop(id, *line, false, None, None);
+                let mut census = OpCensus::default();
+                census_expr(cond, &mut census);
+                self.merge_census(id, &census);
+                self.region(id, &[cond], body);
+                self.stack.pop();
+            }
+            Stmt::If { cond, then, otherwise, .. } => {
+                let mut census = OpCensus::default();
+                census_expr(cond, &mut census);
+                self.merge_top(&census);
+                self.stmts(then);
+                self.stmts(otherwise);
+            }
+            other => {
+                let mut census = OpCensus::default();
+                census_stmt_shallow(other, &mut census);
+                self.merge_top(&census);
+            }
+        }
+    }
+
+    fn enter_loop(
+        &mut self,
+        id: LoopId,
+        line: usize,
+        is_for: bool,
+        induction: Option<String>,
+        static_trip: Option<u64>,
+    ) {
+        let parent = self.stack.last().copied();
+        if let Some(p) = parent {
+            self.table[p.0]
+                .as_mut()
+                .expect("parent visited first")
+                .children
+                .push(id);
+        }
+        let depth = self.stack.len();
+        self.table[id.0] = Some(LoopInfo {
+            id,
+            func: self.func.to_string(),
+            line,
+            depth,
+            parent,
+            children: Vec::new(),
+            is_for,
+            induction,
+            static_trip,
+            census: OpCensus::default(),
+            arrays_read: BTreeSet::new(),
+            arrays_written: BTreeSet::new(),
+            scalars_in: BTreeSet::new(),
+            scalars_out: BTreeSet::new(),
+            parallelizable: false,
+            not_parallel_reason: None,
+        });
+        self.stack.push(id);
+    }
+
+    /// Walk a loop body, filling its census and access sets. Header
+    /// expressions (`cond`, `step`, `init` RHS) contribute reads too — a
+    /// loop bound `n` is data the offloaded region needs.
+    fn region(&mut self, id: LoopId, header: &[&Expr], body: &[Stmt]) {
+        // Access sets for the whole region, tracking region-local decls so
+        // private scalars are excluded from in/out sets.
+        let mut local: BTreeSet<String> = BTreeSet::new();
+        // Include the induction variable of this loop as region-local.
+        if let Some(ind) = self.table[id.0].as_ref().unwrap().induction.clone() {
+            local.insert(ind);
+        }
+        let mut acc = Access::default();
+        for h in header {
+            expr_access(h, &local, &mut acc);
+        }
+        collect_access(body, &mut local, &mut acc);
+        {
+            let info = self.table[id.0].as_mut().unwrap();
+            info.arrays_read.extend(acc.arrays_read);
+            info.arrays_written.extend(acc.arrays_written);
+            info.scalars_in.extend(acc.scalars_read);
+            info.scalars_out.extend(acc.scalars_written);
+        }
+        self.stmts(body);
+    }
+
+    fn merge_census(&mut self, id: LoopId, c: &OpCensus) {
+        self.table[id.0].as_mut().unwrap().census.add(c);
+    }
+
+    fn merge_top(&mut self, c: &OpCensus) {
+        if let Some(&top) = self.stack.last() {
+            self.merge_census(top, c);
+        }
+    }
+}
+
+/// Try to identify a canonical induction variable: `init` assigns `v`,
+/// `step` compound-assigns the same `v`.
+fn induction_var(init: Option<&Stmt>, step: Option<&Stmt>) -> Option<String> {
+    let step_var = match step? {
+        Stmt::Assign {
+            lv: LValue::Var(v),
+            op: AssignOp::Add | AssignOp::Sub,
+            ..
+        } => v.clone(),
+        _ => return None,
+    };
+    match init {
+        Some(Stmt::Assign {
+            lv: LValue::Var(v), ..
+        }) if *v == step_var => Some(step_var),
+        Some(Stmt::Decl { name, .. }) if *name == step_var => Some(step_var),
+        // Missing init: accept (variable initialized before the loop).
+        None => Some(step_var),
+        _ => None,
+    }
+}
+
+/// Compute a static trip count for `for (v = c0; v < c1; v += c2)` with all
+/// constants.
+fn static_trip(init: Option<&Stmt>, cond: &Expr, step: Option<&Stmt>) -> Option<u64> {
+    let (v, start) = match init? {
+        Stmt::Assign {
+            lv: LValue::Var(v),
+            op: AssignOp::Set,
+            rhs: Expr::IntLit(c, _),
+            ..
+        } => (v.clone(), *c),
+        Stmt::Decl {
+            name,
+            init: Some(Expr::IntLit(c, _)),
+            ..
+        } => (name.clone(), *c),
+        _ => return None,
+    };
+    let (incr, step_by) = match step? {
+        Stmt::Assign {
+            lv: LValue::Var(sv),
+            op,
+            rhs: Expr::IntLit(c, _),
+            ..
+        } if *sv == v => match op {
+            AssignOp::Add => (true, *c),
+            AssignOp::Sub => (false, *c),
+            _ => return None,
+        },
+        _ => return None,
+    };
+    if step_by <= 0 {
+        return None;
+    }
+    match cond {
+        Expr::Bin(op, lhs, rhs, _) => {
+            let bound = match (&**lhs, &**rhs) {
+                (Expr::Var(cv, _), Expr::IntLit(b, _)) if *cv == v => *b,
+                _ => return None,
+            };
+            let n = match (op, incr) {
+                (BinOp::Lt, true) => bound - start,
+                (BinOp::Le, true) => bound - start + 1,
+                (BinOp::Gt, false) => start - bound,
+                (BinOp::Ge, false) => start - bound + 1,
+                _ => return None,
+            };
+            if n <= 0 {
+                Some(0)
+            } else {
+                Some(((n + step_by - 1) / step_by) as u64)
+            }
+        }
+        _ => None,
+    }
+}
+
+// ---- census helpers ----
+
+/// Census of a statement *not* descending into nested loops (their bodies
+/// are censused separately) — `If` branches are included (approximation:
+/// both branches counted; fine for ranking).
+fn census_stmt_shallow(s: &Stmt, c: &mut OpCensus) {
+    match s {
+        Stmt::Decl { init: Some(e), .. } => census_expr(e, c),
+        Stmt::Decl { .. } | Stmt::ArrayDecl { .. } => {}
+        Stmt::Assign { lv, op, rhs, .. } => {
+            census_expr(rhs, c);
+            match lv {
+                LValue::Var(_) => {}
+                LValue::Index(_, idx) => {
+                    census_expr(idx, c);
+                    c.stores += 1;
+                }
+            }
+            if *op != AssignOp::Set {
+                // Compound assignment also reads the target.
+                match lv {
+                    LValue::Index(..) => c.loads += 1,
+                    LValue::Var(_) => {}
+                }
+                c.fadd += 1;
+            }
+        }
+        Stmt::If { cond, then, otherwise, .. } => {
+            census_expr(cond, c);
+            for s in then.iter().chain(otherwise) {
+                census_stmt_shallow(s, c);
+            }
+        }
+        Stmt::Return(Some(e), _) | Stmt::ExprStmt(e, _) => census_expr(e, c),
+        Stmt::Return(None, _) | Stmt::Break(_) | Stmt::Continue(_) => {}
+        // Nested loops are *not* descended into.
+        Stmt::For { .. } | Stmt::While { .. } => {}
+    }
+}
+
+fn census_expr(e: &Expr, c: &mut OpCensus) {
+    match e {
+        Expr::IntLit(..) | Expr::FloatLit(..) | Expr::StrLit(..) | Expr::Var(..) => {}
+        Expr::Index(_, idx, _) => {
+            c.loads += 1;
+            c.iops += 1; // address arithmetic
+            census_expr(idx, c);
+        }
+        Expr::Bin(op, a, b, _) => {
+            census_expr(a, c);
+            census_expr(b, c);
+            match op {
+                BinOp::Add | BinOp::Sub => c.fadd += 1,
+                BinOp::Mul => c.fmul += 1,
+                BinOp::Div => c.fdiv += 1,
+                BinOp::Mod => c.iops += 1,
+                _ => c.iops += 1,
+            }
+        }
+        Expr::Un(_, a, _) => {
+            census_expr(a, c);
+            c.iops += 1;
+        }
+        Expr::Call(name, args, _) => {
+            for a in args {
+                census_expr(a, c);
+            }
+            if is_math_builtin(name) {
+                c.fspecial += 1;
+            } else if name.starts_with("__") {
+                // Cast intrinsics are free conversions.
+            } else if !IO_BUILTINS.contains(&name.as_str()) {
+                c.calls += 1;
+            }
+        }
+    }
+}
+
+// ---- access-set collection ----
+
+#[derive(Default)]
+struct Access {
+    arrays_read: BTreeSet<String>,
+    arrays_written: BTreeSet<String>,
+    scalars_read: BTreeSet<String>,
+    scalars_written: BTreeSet<String>,
+}
+
+fn collect_access(body: &[Stmt], local: &mut BTreeSet<String>, acc: &mut Access) {
+    for s in body {
+        collect_access_stmt(s, local, acc);
+    }
+}
+
+fn collect_access_stmt(s: &Stmt, local: &mut BTreeSet<String>, acc: &mut Access) {
+    match s {
+        Stmt::Decl { name, init, .. } => {
+            if let Some(e) = init {
+                expr_access(e, local, acc);
+            }
+            local.insert(name.clone());
+        }
+        Stmt::ArrayDecl { name, size, .. } => {
+            expr_access(size, local, acc);
+            local.insert(name.clone());
+        }
+        Stmt::Assign { lv, op, rhs, .. } => {
+            expr_access(rhs, local, acc);
+            match lv {
+                LValue::Var(v) => {
+                    if !local.contains(v) {
+                        acc.scalars_written.insert(v.clone());
+                        if *op != AssignOp::Set {
+                            acc.scalars_read.insert(v.clone());
+                        }
+                    }
+                }
+                LValue::Index(a, idx) => {
+                    expr_access(idx, local, acc);
+                    if !local.contains(a) {
+                        acc.arrays_written.insert(a.clone());
+                        if *op != AssignOp::Set {
+                            acc.arrays_read.insert(a.clone());
+                        }
+                    }
+                }
+            }
+        }
+        Stmt::For { init, cond, step, body, .. } => {
+            // The induction variable declared in the header is local to the
+            // nested region but shouldn't leak out; clone the set.
+            let mut inner = local.clone();
+            if let Some(st) = init.as_deref() {
+                collect_access_stmt(st, &mut inner, acc);
+            }
+            expr_access(cond, &inner, acc);
+            if let Some(st) = step.as_deref() {
+                collect_access_stmt(st, &mut inner, acc);
+            }
+            collect_access(body, &mut inner, acc);
+        }
+        Stmt::While { cond, body, .. } => {
+            expr_access(cond, local, acc);
+            let mut inner = local.clone();
+            collect_access(body, &mut inner, acc);
+        }
+        Stmt::If { cond, then, otherwise, .. } => {
+            expr_access(cond, local, acc);
+            let mut t = local.clone();
+            collect_access(then, &mut t, acc);
+            let mut o = local.clone();
+            collect_access(otherwise, &mut o, acc);
+        }
+        Stmt::Return(Some(e), _) | Stmt::ExprStmt(e, _) => expr_access(e, local, acc),
+        _ => {}
+    }
+}
+
+fn expr_access(e: &Expr, local: &BTreeSet<String>, acc: &mut Access) {
+    match e {
+        Expr::Var(v, _) => {
+            if !local.contains(v) {
+                acc.scalars_read.insert(v.clone());
+            }
+        }
+        Expr::Index(a, idx, _) => {
+            if !local.contains(a) {
+                acc.arrays_read.insert(a.clone());
+            }
+            expr_access(idx, local, acc);
+        }
+        Expr::Bin(_, a, b, _) => {
+            expr_access(a, local, acc);
+            expr_access(b, local, acc);
+        }
+        Expr::Un(_, a, _) => expr_access(a, local, acc),
+        Expr::Call(_, args, _) => {
+            for a in args {
+                expr_access(a, local, acc);
+            }
+        }
+        _ => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::canalyze::parser::parse;
+
+    fn loops_of(src: &str) -> Vec<LoopInfo> {
+        extract_loops(&parse("t.c", src).unwrap())
+    }
+
+    #[test]
+    fn extracts_nesting_structure() {
+        let ls = loops_of(
+            "void f(float *a, int n) {
+               for (int i = 0; i < n; i++) {
+                 for (int j = 0; j < n; j++) { a[i] += (float)j; }
+               }
+               while (n > 0) { n--; }
+             }",
+        );
+        assert_eq!(ls.len(), 3);
+        assert_eq!(ls[0].depth, 0);
+        assert_eq!(ls[1].depth, 1);
+        assert_eq!(ls[1].parent, Some(LoopId(0)));
+        assert_eq!(ls[0].children, vec![LoopId(1)]);
+        assert!(ls[0].is_for && !ls[2].is_for);
+        assert_eq!(ls[0].nest_ids(&ls), vec![LoopId(0), LoopId(1)]);
+    }
+
+    #[test]
+    fn static_trip_counts() {
+        let ls = loops_of(
+            "void f(float *a) {
+               for (int i = 0; i < 64; i++) { a[i] = 0.0f; }
+               for (int j = 0; j <= 9; j += 2) { a[j] = 1.0f; }
+               for (int k = 10; k > 0; k -= 1) { a[k] = 2.0f; }
+             }",
+        );
+        assert_eq!(ls[0].static_trip, Some(64));
+        assert_eq!(ls[1].static_trip, Some(5));
+        assert_eq!(ls[2].static_trip, Some(10));
+    }
+
+    #[test]
+    fn census_counts_ops() {
+        let ls = loops_of(
+            "void f(float *a, float *b, int n) {
+               for (int i = 0; i < n; i++) {
+                 a[i] = b[i] * 2.0f + sinf(b[i]);
+               }
+             }",
+        );
+        let c = &ls[0].census;
+        assert_eq!(c.stores, 1);
+        assert_eq!(c.loads, 2);
+        assert_eq!(c.fmul, 1);
+        assert!(c.fadd >= 1); // the + plus the i++ header add
+        assert_eq!(c.fspecial, 1);
+        assert!(c.intensity() > 0.0);
+    }
+
+    #[test]
+    fn census_is_exclusive_of_nested_loops() {
+        let ls = loops_of(
+            "void f(float *a, int n) {
+               for (int i = 0; i < n; i++) {
+                 for (int j = 0; j < n; j++) { a[j] += 1.0f; }
+               }
+             }",
+        );
+        // Outer loop body has no stores of its own.
+        assert_eq!(ls[0].census.stores, 0);
+        assert_eq!(ls[1].census.stores, 1);
+    }
+
+    #[test]
+    fn access_sets_exclude_privates() {
+        let ls = loops_of(
+            "void f(float *q, float *p, int n) {
+               float total = 0.0f;
+               for (int i = 0; i < n; i++) {
+                 float t = p[i] * 2.0f;
+                 q[i] = t;
+                 total += t;
+               }
+             }",
+        );
+        let l = &ls[0];
+        assert!(l.arrays_read.contains("p"));
+        assert!(l.arrays_written.contains("q"));
+        assert!(!l.scalars_in.contains("t"), "private scalar leaked");
+        assert!(l.scalars_out.contains("total"));
+        assert!(l.scalars_in.contains("n"));
+    }
+
+    #[test]
+    fn induction_detected() {
+        let ls = loops_of("void f(float *a, int n) { for (int i = 0; i < n; i++) a[i] = 0.0f; }");
+        assert_eq!(ls[0].induction.as_deref(), Some("i"));
+    }
+}

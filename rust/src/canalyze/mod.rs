@@ -1,0 +1,159 @@
+//! Code analysis front-end (the paper's Step 1–2 substrate, standing in
+//! for Clang + ROSE + gcov): a C-subset lexer/parser, loop-statement
+//! extraction, loop-carried dependence analysis (parallelizability),
+//! arithmetic-intensity ranking and a profiling interpreter.
+//!
+//! Entry point: [`analyze_source`], which returns an [`Analysis`] holding
+//! the AST, the classified loop table and (when the program has a `main`)
+//! a dynamic profile.
+
+pub mod ast;
+pub mod deps;
+pub mod intensity;
+pub mod lexer;
+pub mod loops;
+pub mod parser;
+pub mod profile;
+pub mod sem;
+
+pub use ast::Program;
+pub use intensity::{by_intensity, by_trips, rank_loops, LoopRank};
+pub use loops::{LoopId, LoopInfo, OpCensus};
+pub use profile::{ProfileData, ProfileLimits};
+
+use crate::Result;
+
+/// The complete static + dynamic analysis of one source file.
+#[derive(Debug, Clone)]
+pub struct Analysis {
+    /// Source file name (diagnostics, reports).
+    pub file: String,
+    /// Parsed program.
+    pub program: Program,
+    /// Loop table in source order, classified for parallelizability.
+    pub loops: Vec<LoopInfo>,
+    /// Dynamic profile (None when the program has no runnable `main`).
+    pub profile: Option<ProfileData>,
+}
+
+impl Analysis {
+    /// Ids of loops the dependence analysis allows offloading —
+    /// the paper's "processable loop statements" (16 for MRI-Q).
+    pub fn parallelizable_ids(&self) -> Vec<LoopId> {
+        self.loops
+            .iter()
+            .filter(|l| l.parallelizable)
+            .map(|l| l.id)
+            .collect()
+    }
+
+    /// Total number of loop statements (`for` + `while`).
+    pub fn n_loops(&self) -> usize {
+        self.loops.len()
+    }
+
+    /// Intensity/trip ranking for all loops.
+    pub fn ranks(&self) -> Vec<LoopRank> {
+        rank_loops(&self.loops, self.profile.as_ref())
+    }
+
+    /// Offloadable *top-level* candidates: parallelizable loops whose
+    /// parent (if any) is not itself parallelizable — offloading an outer
+    /// loop subsumes its children, so search spaces are built over these
+    /// plus nested refinements.
+    pub fn candidate_nests(&self) -> Vec<LoopId> {
+        self.loops
+            .iter()
+            .filter(|l| {
+                l.parallelizable
+                    && match l.parent {
+                        None => true,
+                        Some(p) => !self.loops[p.0].parallelizable,
+                    }
+            })
+            .map(|l| l.id)
+            .collect()
+    }
+}
+
+/// Analyze a source file: parse → extract loops → classify → profile.
+///
+/// Profiling failures in a program *with* a `main` are reported as errors;
+/// a missing `main` simply yields `profile: None` (library-style sources).
+pub fn analyze_source(file: &str, text: &str) -> Result<Analysis> {
+    analyze_source_with_limits(file, text, ProfileLimits::default())
+}
+
+/// [`analyze_source`] with custom interpreter limits.
+pub fn analyze_source_with_limits(
+    file: &str,
+    text: &str,
+    limits: ProfileLimits,
+) -> Result<Analysis> {
+    let program = parser::parse(file, text)?;
+    // Static semantic checks first: typos and arity bugs get line-tagged
+    // diagnostics instead of interpreter faults mid-profile.
+    sem::check(file, &program)?;
+    let mut table = loops::extract_loops(&program);
+    deps::classify_loops(&program, &mut table);
+    let profile = if program.function("main").is_some() {
+        Some(profile::profile(&program, &table, limits)?)
+    } else {
+        None
+    };
+    Ok(Analysis {
+        file: file.to_string(),
+        program,
+        loops: table,
+        profile,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn end_to_end_analysis() {
+        let src = "void scale(float *a, int n, float s) {
+             for (int i = 0; i < n; i++) { a[i] *= s; }
+           }
+           int main() {
+             float v[32];
+             for (int i = 0; i < 32; i++) { v[i] = (float)i; }
+             scale(v, 32, 2.0f);
+             printf(\"%f\", v[31]);
+             return 0;
+           }";
+        let an = analyze_source("t.c", src).unwrap();
+        assert_eq!(an.n_loops(), 2);
+        assert_eq!(an.parallelizable_ids().len(), 2);
+        let p = an.profile.as_ref().unwrap();
+        assert_eq!(p.printed, vec![62.0]);
+    }
+
+    #[test]
+    fn library_source_has_no_profile() {
+        let an = analyze_source(
+            "lib.c",
+            "void f(float *a, int n) { for (int i = 0; i < n; i++) a[i] = 0.0f; }",
+        )
+        .unwrap();
+        assert!(an.profile.is_none());
+        assert_eq!(an.candidate_nests().len(), 1);
+    }
+
+    #[test]
+    fn candidate_nests_subsume_children() {
+        let src = "void f(float *a, float *b, int n) {
+             for (int i = 0; i < n; i++) {
+               float s = 0.0f;
+               for (int j = 0; j < n; j++) { s += b[j] * b[j]; }
+               a[i] = s;
+             }
+           }";
+        let an = analyze_source("t.c", src).unwrap();
+        let nests = an.candidate_nests();
+        assert_eq!(nests, vec![LoopId(0)]);
+    }
+}

@@ -1,0 +1,645 @@
+//! Recursive-descent parser for the C subset → [`crate::canalyze::ast`].
+//!
+//! Loop statements (`for`, `while`) are numbered in source order at parse
+//! time; these ids are the stable handles used by the whole offload
+//! pipeline (gene positions, codegen annotations, reports).
+
+use super::ast::*;
+use super::lexer::{lex, Tok, Token};
+use crate::{Error, Result};
+
+/// Parse a preprocessed C-subset translation unit.
+pub fn parse(file: &str, text: &str) -> Result<Program> {
+    let tokens = lex(file, text)?;
+    let mut p = Parser {
+        file,
+        tokens,
+        pos: 0,
+        next_loop_id: 0,
+    };
+    let mut functions = Vec::new();
+    while !p.at_eof() {
+        functions.push(p.function()?);
+    }
+    Ok(Program {
+        functions,
+        n_loops: p.next_loop_id,
+    })
+}
+
+struct Parser<'a> {
+    file: &'a str,
+    tokens: Vec<Token>,
+    pos: usize,
+    next_loop_id: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: impl Into<String>) -> Error {
+        self.err_at(self.cur().line, msg)
+    }
+
+    fn err_at(&self, line: usize, msg: impl Into<String>) -> Error {
+        Error::Analyze {
+            file: self.file.to_string(),
+            line,
+            msg: msg.into(),
+        }
+    }
+
+    fn cur(&self) -> &Token {
+        &self.tokens[self.pos.min(self.tokens.len() - 1)]
+    }
+
+    fn line(&self) -> usize {
+        self.cur().line
+    }
+
+    fn at_eof(&self) -> bool {
+        matches!(self.cur().tok, Tok::Eof)
+    }
+
+    fn bump(&mut self) -> Token {
+        let t = self.cur().clone();
+        if !self.at_eof() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn eat_punct(&mut self, p: &str) -> bool {
+        if matches!(&self.cur().tok, Tok::Punct(q) if *q == p) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect_punct(&mut self, p: &str) -> Result<()> {
+        if self.eat_punct(p) {
+            Ok(())
+        } else {
+            Err(self.err(format!("expected '{p}', found {:?}", self.cur().tok)))
+        }
+    }
+
+    fn peek_punct(&self, p: &str) -> bool {
+        matches!(&self.cur().tok, Tok::Punct(q) if *q == p)
+    }
+
+    fn ident(&mut self) -> Result<String> {
+        match self.bump().tok {
+            Tok::Ident(s) => Ok(s),
+            other => Err(self.err(format!("expected identifier, found {other:?}"))),
+        }
+    }
+
+    fn peek_ident(&self, name: &str) -> bool {
+        matches!(&self.cur().tok, Tok::Ident(s) if s == name)
+    }
+
+    fn eat_ident(&mut self, name: &str) -> bool {
+        if self.peek_ident(name) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn try_type(&mut self) -> Option<Ty> {
+        let ty = match &self.cur().tok {
+            Tok::Ident(s) if s == "int" => Ty::Int,
+            Tok::Ident(s) if s == "float" || s == "double" => Ty::Float,
+            Tok::Ident(s) if s == "void" => Ty::Void,
+            _ => return None,
+        };
+        self.pos += 1;
+        Some(ty)
+    }
+
+    // ---- declarations ----
+
+    fn function(&mut self) -> Result<Function> {
+        let line = self.line();
+        let ret = self
+            .try_type()
+            .ok_or_else(|| self.err("expected a type at top level"))?;
+        let name = self.ident()?;
+        self.expect_punct("(")?;
+        let mut params = Vec::new();
+        if !self.peek_punct(")") {
+            loop {
+                let ty = self
+                    .try_type()
+                    .ok_or_else(|| self.err("expected parameter type"))?;
+                if ty == Ty::Void && params.is_empty() && self.peek_punct(")") {
+                    // `f(void)` style.
+                    break;
+                }
+                let is_ptr = self.eat_punct("*");
+                let pname = self.ident()?;
+                // `float x[]` array-parameter syntax.
+                let is_bracket = if self.eat_punct("[") {
+                    self.expect_punct("]")?;
+                    true
+                } else {
+                    false
+                };
+                params.push(Param {
+                    ty,
+                    name: pname,
+                    is_array: is_ptr || is_bracket,
+                });
+                if !self.eat_punct(",") {
+                    break;
+                }
+            }
+        }
+        self.expect_punct(")")?;
+        let body = self.block()?;
+        Ok(Function {
+            ret,
+            name,
+            params,
+            body,
+            line,
+        })
+    }
+
+    fn block(&mut self) -> Result<Vec<Stmt>> {
+        self.expect_punct("{")?;
+        let mut stmts = Vec::new();
+        while !self.eat_punct("}") {
+            if self.at_eof() {
+                return Err(self.err("unexpected end of file in block"));
+            }
+            stmts.push(self.stmt()?);
+        }
+        Ok(stmts)
+    }
+
+    /// A block or a single statement (for `if`/`for` bodies without braces).
+    fn block_or_stmt(&mut self) -> Result<Vec<Stmt>> {
+        if self.peek_punct("{") {
+            self.block()
+        } else {
+            Ok(vec![self.stmt()?])
+        }
+    }
+
+    fn stmt(&mut self) -> Result<Stmt> {
+        let line = self.line();
+        // Declaration?
+        if matches!(&self.cur().tok, Tok::Ident(s) if s == "int" || s == "float" || s == "double")
+        {
+            let stmt = self.decl_stmt()?;
+            self.expect_punct(";")?;
+            return Ok(stmt);
+        }
+        if self.eat_ident("for") {
+            return self.for_stmt(line);
+        }
+        if self.eat_ident("while") {
+            self.expect_punct("(")?;
+            let cond = self.expr()?;
+            self.expect_punct(")")?;
+            let body = self.block_or_stmt()?;
+            let loop_id = self.next_loop_id;
+            self.next_loop_id += 1;
+            return Ok(Stmt::While {
+                loop_id,
+                cond,
+                body,
+                line,
+            });
+        }
+        if self.eat_ident("if") {
+            self.expect_punct("(")?;
+            let cond = self.expr()?;
+            self.expect_punct(")")?;
+            let then = self.block_or_stmt()?;
+            let otherwise = if self.eat_ident("else") {
+                self.block_or_stmt()?
+            } else {
+                Vec::new()
+            };
+            return Ok(Stmt::If {
+                cond,
+                then,
+                otherwise,
+                line,
+            });
+        }
+        if self.eat_ident("return") {
+            let e = if self.peek_punct(";") {
+                None
+            } else {
+                Some(self.expr()?)
+            };
+            self.expect_punct(";")?;
+            return Ok(Stmt::Return(e, line));
+        }
+        if self.eat_ident("break") {
+            self.expect_punct(";")?;
+            return Ok(Stmt::Break(line));
+        }
+        if self.eat_ident("continue") {
+            self.expect_punct(";")?;
+            return Ok(Stmt::Continue(line));
+        }
+        // Assignment or expression statement.
+        let stmt = self.assign_or_expr()?;
+        self.expect_punct(";")?;
+        Ok(stmt)
+    }
+
+    /// `ty name (= init)?` or `ty name[size]` (no trailing `;`).
+    fn decl_stmt(&mut self) -> Result<Stmt> {
+        let line = self.line();
+        let ty = self.try_type().unwrap();
+        let name = self.ident()?;
+        if self.eat_punct("[") {
+            let size = self.expr()?;
+            self.expect_punct("]")?;
+            return Ok(Stmt::ArrayDecl {
+                ty,
+                name,
+                size,
+                line,
+            });
+        }
+        let init = if self.eat_punct("=") {
+            Some(self.expr()?)
+        } else {
+            None
+        };
+        Ok(Stmt::Decl {
+            ty,
+            name,
+            init,
+            line,
+        })
+    }
+
+    fn for_stmt(&mut self, line: usize) -> Result<Stmt> {
+        self.expect_punct("(")?;
+        let init = if self.peek_punct(";") {
+            None
+        } else if matches!(&self.cur().tok, Tok::Ident(s) if s == "int" || s == "float") {
+            Some(Box::new(self.decl_stmt()?))
+        } else {
+            Some(Box::new(self.assign_or_expr()?))
+        };
+        self.expect_punct(";")?;
+        let cond = self.expr()?;
+        self.expect_punct(";")?;
+        let step = if self.peek_punct(")") {
+            None
+        } else {
+            Some(Box::new(self.assign_or_expr()?))
+        };
+        self.expect_punct(")")?;
+        // Reserve this loop's id *before* parsing the body so outer loops
+        // get smaller ids than the loops they contain (source order).
+        let loop_id = self.next_loop_id;
+        self.next_loop_id += 1;
+        let body = self.block_or_stmt()?;
+        Ok(Stmt::For {
+            loop_id,
+            init,
+            cond,
+            step,
+            body,
+            line,
+        })
+    }
+
+    /// Assignment (incl. `x++` / compound ops) or a bare call expression.
+    fn assign_or_expr(&mut self) -> Result<Stmt> {
+        let line = self.line();
+        let start = self.pos;
+        // Try to parse an lvalue.
+        if let Tok::Ident(name) = self.cur().tok.clone() {
+            self.pos += 1;
+            let lv = if self.eat_punct("[") {
+                let idx = self.expr()?;
+                self.expect_punct("]")?;
+                Some(LValue::Index(name.clone(), idx))
+            } else {
+                Some(LValue::Var(name.clone()))
+            };
+            if let Some(lv) = lv {
+                if self.eat_punct("++") {
+                    return Ok(Stmt::Assign {
+                        lv,
+                        op: AssignOp::Add,
+                        rhs: Expr::IntLit(1, line),
+                        line,
+                    });
+                }
+                if self.eat_punct("--") {
+                    return Ok(Stmt::Assign {
+                        lv,
+                        op: AssignOp::Sub,
+                        rhs: Expr::IntLit(1, line),
+                        line,
+                    });
+                }
+                for (p, op) in [
+                    ("=", AssignOp::Set),
+                    ("+=", AssignOp::Add),
+                    ("-=", AssignOp::Sub),
+                    ("*=", AssignOp::Mul),
+                    ("/=", AssignOp::Div),
+                ] {
+                    if self.eat_punct(p) {
+                        let rhs = self.expr()?;
+                        return Ok(Stmt::Assign { lv, op, rhs, line });
+                    }
+                }
+            }
+            // Not an assignment — rewind and parse as expression.
+            self.pos = start;
+        }
+        let e = self.expr()?;
+        Ok(Stmt::ExprStmt(e, line))
+    }
+
+    // ---- expressions (precedence climbing) ----
+
+    fn expr(&mut self) -> Result<Expr> {
+        self.or_expr()
+    }
+
+    fn or_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.and_expr()?;
+        while self.peek_punct("||") {
+            let line = self.line();
+            self.bump();
+            let rhs = self.and_expr()?;
+            lhs = Expr::Bin(BinOp::Or, Box::new(lhs), Box::new(rhs), line);
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.cmp_expr()?;
+        while self.peek_punct("&&") {
+            let line = self.line();
+            self.bump();
+            let rhs = self.cmp_expr()?;
+            lhs = Expr::Bin(BinOp::And, Box::new(lhs), Box::new(rhs), line);
+        }
+        Ok(lhs)
+    }
+
+    fn cmp_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.add_expr()?;
+        loop {
+            let op = if self.peek_punct("==") {
+                BinOp::Eq
+            } else if self.peek_punct("!=") {
+                BinOp::Ne
+            } else if self.peek_punct("<=") {
+                BinOp::Le
+            } else if self.peek_punct(">=") {
+                BinOp::Ge
+            } else if self.peek_punct("<") {
+                BinOp::Lt
+            } else if self.peek_punct(">") {
+                BinOp::Gt
+            } else {
+                return Ok(lhs);
+            };
+            let line = self.line();
+            self.bump();
+            let rhs = self.add_expr()?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs), line);
+        }
+    }
+
+    fn add_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.mul_expr()?;
+        loop {
+            let op = if self.peek_punct("+") {
+                BinOp::Add
+            } else if self.peek_punct("-") {
+                BinOp::Sub
+            } else {
+                return Ok(lhs);
+            };
+            let line = self.line();
+            self.bump();
+            let rhs = self.mul_expr()?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs), line);
+        }
+    }
+
+    fn mul_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.unary_expr()?;
+        loop {
+            let op = if self.peek_punct("*") {
+                BinOp::Mul
+            } else if self.peek_punct("/") {
+                BinOp::Div
+            } else if self.peek_punct("%") {
+                BinOp::Mod
+            } else {
+                return Ok(lhs);
+            };
+            let line = self.line();
+            self.bump();
+            let rhs = self.unary_expr()?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs), line);
+        }
+    }
+
+    fn unary_expr(&mut self) -> Result<Expr> {
+        let line = self.line();
+        if self.eat_punct("-") {
+            let e = self.unary_expr()?;
+            return Ok(Expr::Un(UnOp::Neg, Box::new(e), line));
+        }
+        if self.eat_punct("!") {
+            let e = self.unary_expr()?;
+            return Ok(Expr::Un(UnOp::Not, Box::new(e), line));
+        }
+        if self.eat_punct("+") {
+            return self.unary_expr();
+        }
+        // C-style cast `(float) expr` / `(int) expr` — materialized as a
+        // conversion intrinsic so the profiler gets C numeric semantics
+        // (e.g. `(float)a / (float)b` is a float divide).
+        if self.peek_punct("(") {
+            let save = self.pos;
+            self.bump();
+            if let Some(ty) = self.try_type() {
+                if self.eat_punct(")") {
+                    let e = self.unary_expr()?;
+                    let name = match ty {
+                        Ty::Int => "__int",
+                        _ => "__float",
+                    };
+                    return Ok(Expr::Call(name.to_string(), vec![e], line));
+                }
+            }
+            self.pos = save;
+        }
+        self.primary_expr()
+    }
+
+    fn primary_expr(&mut self) -> Result<Expr> {
+        let line = self.line();
+        match self.bump().tok {
+            Tok::Int(v) => Ok(Expr::IntLit(v, line)),
+            Tok::Float(v) => Ok(Expr::FloatLit(v, line)),
+            Tok::Str(s) => Ok(Expr::StrLit(s, line)),
+            Tok::Punct("(") => {
+                let e = self.expr()?;
+                self.expect_punct(")")?;
+                Ok(e)
+            }
+            Tok::Ident(name) => {
+                if self.eat_punct("(") {
+                    let mut args = Vec::new();
+                    if !self.peek_punct(")") {
+                        loop {
+                            args.push(self.expr()?);
+                            if !self.eat_punct(",") {
+                                break;
+                            }
+                        }
+                    }
+                    self.expect_punct(")")?;
+                    Ok(Expr::Call(name, args, line))
+                } else if self.eat_punct("[") {
+                    let idx = self.expr()?;
+                    self.expect_punct("]")?;
+                    Ok(Expr::Index(name, Box::new(idx), line))
+                } else {
+                    Ok(Expr::Var(name, line))
+                }
+            }
+            other => Err(self.err_at(line, format!("unexpected token {other:?} in expression"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_ok(src: &str) -> Program {
+        parse("t.c", src).unwrap()
+    }
+
+    #[test]
+    fn parses_minimal_main() {
+        let p = parse_ok("int main() { return 0; }");
+        assert_eq!(p.functions.len(), 1);
+        assert_eq!(p.functions[0].name, "main");
+        assert_eq!(p.n_loops, 0);
+    }
+
+    #[test]
+    fn parses_for_loop_and_assigns_ids_in_source_order() {
+        let p = parse_ok(
+            "void f(float *a, int n) {
+               for (int i = 0; i < n; i++) {
+                 for (int j = 0; j < n; j++) { a[i] += 1.0f; }
+               }
+               for (int k = 0; k < n; k++) { a[k] = 0.0f; }
+             }",
+        );
+        assert_eq!(p.n_loops, 3);
+        // Outer loop id 0, inner 1, sibling 2.
+        let f = &p.functions[0];
+        match &f.body[0] {
+            Stmt::For { loop_id, body, .. } => {
+                assert_eq!(*loop_id, 0);
+                match &body[0] {
+                    Stmt::For { loop_id, .. } => assert_eq!(*loop_id, 1),
+                    _ => panic!("expected nested for"),
+                }
+            }
+            _ => panic!("expected for"),
+        }
+        match &f.body[1] {
+            Stmt::For { loop_id, .. } => assert_eq!(*loop_id, 2),
+            _ => panic!("expected for"),
+        }
+    }
+
+    #[test]
+    fn desugars_increment() {
+        let p = parse_ok("void f() { int i = 0; i++; }");
+        match &p.functions[0].body[1] {
+            Stmt::Assign { op, rhs, .. } => {
+                assert_eq!(*op, AssignOp::Add);
+                assert_eq!(*rhs, Expr::IntLit(1, 1));
+            }
+            other => panic!("expected assign, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_array_params_both_syntaxes() {
+        let p = parse_ok("void f(float *a, float b[], int n) {}");
+        let ps = &p.functions[0].params;
+        assert!(ps[0].is_array && ps[1].is_array && !ps[2].is_array);
+    }
+
+    #[test]
+    fn parses_calls_and_indexing() {
+        let p = parse_ok("void f(float *a) { a[0] = sinf(a[1]) * 2.0f + cosf(0.5f); }");
+        match &p.functions[0].body[0] {
+            Stmt::Assign { rhs, .. } => assert!(rhs.mentions("a")),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn precedence_mul_over_add() {
+        let p = parse_ok("void f() { float x = 1.0f + 2.0f * 3.0f; }");
+        match &p.functions[0].body[0] {
+            Stmt::Decl { init: Some(Expr::Bin(BinOp::Add, _, rhs, _)), .. } => {
+                assert!(matches!(**rhs, Expr::Bin(BinOp::Mul, _, _, _)));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_while_if_else_break() {
+        let p = parse_ok(
+            "int f(int n) {
+               int s = 0;
+               while (n > 0) { if (n % 2 == 0) s += n; else s -= 1; n--; if (s > 100) break; }
+               return s;
+             }",
+        );
+        assert_eq!(p.n_loops, 1);
+    }
+
+    #[test]
+    fn parses_casts() {
+        let p = parse_ok("void f(int n) { float x = (float) n; }");
+        assert_eq!(p.functions.len(), 1);
+    }
+
+    #[test]
+    fn error_has_line_info() {
+        let e = parse("t.c", "int main() {\n  int x = ;\n}").unwrap_err();
+        match e {
+            crate::Error::Analyze { line, .. } => assert_eq!(line, 2),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn rejects_top_level_garbage() {
+        assert!(parse("t.c", "42;").is_err());
+    }
+}

@@ -1,0 +1,971 @@
+//! Profiling interpreter — the substrate standing in for `gcov`/`gprof` in
+//! the paper's FPGA flow (§3.2): it *executes* the analyzed program on its
+//! built-in sample input (`main`), counting per-loop trip counts and
+//! dynamic FLOPs/bytes, which the narrowing stage ranks loops by.
+//!
+//! It is a straightforward tree-walking interpreter over the C subset with
+//! C-like numeric semantics (int/float, integer division), array
+//! pass-by-reference, zero-initialized locals (for determinism) and a step
+//! limit as a runaway guard.
+
+use super::ast::*;
+use super::loops::{LoopId, LoopInfo};
+use crate::util::fasthash::FastMap;
+use crate::{Error, Result};
+use std::collections::HashMap;
+
+/// Dynamic profile of one program run.
+#[derive(Debug, Clone)]
+pub struct ProfileData {
+    /// Times each loop statement was entered.
+    pub loop_entries: Vec<u64>,
+    /// Total iterations executed per loop.
+    pub loop_trips: Vec<u64>,
+    /// Dynamic weighted FLOPs attributed to each loop (exclusive: innermost
+    /// enclosing loop gets the ops).
+    pub loop_flops: Vec<f64>,
+    /// Dynamic memory bytes attributed to each loop (exclusive).
+    pub loop_bytes: Vec<f64>,
+    /// FLOPs executed outside any loop.
+    pub outside_flops: f64,
+    /// Bytes moved outside any loop.
+    pub outside_bytes: f64,
+    /// Max observed byte-size of each array touched by each loop region
+    /// (for CPU↔device transfer modeling).
+    pub loop_array_bytes: Vec<HashMap<String, u64>>,
+    /// Numeric values printed via `printf` (in order) — used as the
+    /// program's observable output in tests.
+    pub printed: Vec<f64>,
+    /// Interpreter steps executed (rough op count).
+    pub steps: u64,
+}
+
+impl ProfileData {
+    /// Total dynamic FLOPs of the run.
+    pub fn total_flops(&self) -> f64 {
+        self.outside_flops + self.loop_flops.iter().sum::<f64>()
+    }
+
+    /// Total dynamic bytes of the run.
+    pub fn total_bytes(&self) -> f64 {
+        self.outside_bytes + self.loop_bytes.iter().sum::<f64>()
+    }
+
+    /// Inclusive FLOPs of a loop nest (loop + all descendants).
+    pub fn inclusive_flops(&self, table: &[LoopInfo], id: LoopId) -> f64 {
+        table[id.0]
+            .nest_ids(table)
+            .iter()
+            .map(|l| self.loop_flops[l.0])
+            .sum()
+    }
+
+    /// Inclusive bytes of a loop nest.
+    pub fn inclusive_bytes(&self, table: &[LoopInfo], id: LoopId) -> f64 {
+        table[id.0]
+            .nest_ids(table)
+            .iter()
+            .map(|l| self.loop_bytes[l.0])
+            .sum()
+    }
+
+    /// Fraction of total dynamic FLOPs spent in the nest rooted at `id`.
+    pub fn flop_share(&self, table: &[LoopInfo], id: LoopId) -> f64 {
+        let total = self.total_flops();
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.inclusive_flops(table, id) / total
+        }
+    }
+
+    /// Measured dynamic arithmetic intensity of a loop nest (FLOP/byte).
+    pub fn dyn_intensity(&self, table: &[LoopInfo], id: LoopId) -> f64 {
+        self.inclusive_flops(table, id) / self.inclusive_bytes(table, id).max(1.0)
+    }
+
+    /// Bytes that must cross CPU↔device when offloading the nest at `id`:
+    /// the arrays its region touches (max observed sizes).
+    pub fn transfer_bytes(&self, table: &[LoopInfo], id: LoopId) -> u64 {
+        let info = &table[id.0];
+        let sizes = &self.loop_array_bytes[id.0];
+        info.arrays_read
+            .union(&info.arrays_written)
+            .map(|a| sizes.get(a).copied().unwrap_or(0))
+            .sum()
+    }
+}
+
+/// Interpreter limits.
+#[derive(Debug, Clone, Copy)]
+pub struct ProfileLimits {
+    /// Max interpreter steps before aborting (runaway guard).
+    pub max_steps: u64,
+}
+
+impl Default for ProfileLimits {
+    fn default() -> Self {
+        Self {
+            max_steps: 200_000_000,
+        }
+    }
+}
+
+/// Run `main()` and collect a [`ProfileData`].
+pub fn profile(prog: &Program, table: &[LoopInfo], limits: ProfileLimits) -> Result<ProfileData> {
+    let main = prog
+        .function("main")
+        .ok_or_else(|| Error::Profile("program has no main()".into()))?;
+    if !main.params.is_empty() {
+        return Err(Error::Profile("main() must take no parameters".into()));
+    }
+    let mut interp = Interp {
+        prog,
+        table,
+        heap: Vec::new(),
+        data: ProfileData {
+            loop_entries: vec![0; table.len()],
+            loop_trips: vec![0; table.len()],
+            loop_flops: vec![0.0; table.len()],
+            loop_bytes: vec![0.0; table.len()],
+            outside_flops: 0.0,
+            outside_bytes: 0.0,
+            loop_array_bytes: vec![HashMap::new(); table.len()],
+            printed: Vec::new(),
+            steps: 0,
+        },
+        loop_stack: Vec::new(),
+        limits,
+        depth: 0,
+        // §Perf iteration 2: the array names each loop region touches are
+        // static — precompute them once instead of re-unioning BTreeSets
+        // on every loop entry.
+        loop_touch_names: table
+            .iter()
+            .map(|l| {
+                l.arrays_read
+                    .union(&l.arrays_written)
+                    .cloned()
+                    .collect::<Vec<String>>()
+            })
+            .collect(),
+    };
+    let mut frame = Frame::new();
+    interp.exec_block(&main.body, &mut frame)?;
+    Ok(interp.data)
+}
+
+/// Runtime value.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Value {
+    I(i64),
+    F(f64),
+}
+
+impl Value {
+    fn as_f64(self) -> f64 {
+        match self {
+            Value::I(v) => v as f64,
+            Value::F(v) => v,
+        }
+    }
+
+    fn as_i64(self) -> i64 {
+        match self {
+            Value::I(v) => v,
+            Value::F(v) => v as i64,
+        }
+    }
+
+    fn truthy(self) -> bool {
+        match self {
+            Value::I(v) => v != 0,
+            Value::F(v) => v != 0.0,
+        }
+    }
+}
+
+/// Array storage.
+#[derive(Debug, Clone)]
+enum ArrayData {
+    F(Vec<f64>),
+    I(Vec<i64>),
+}
+
+impl ArrayData {
+    fn len(&self) -> usize {
+        match self {
+            ArrayData::F(v) => v.len(),
+            ArrayData::I(v) => v.len(),
+        }
+    }
+
+    fn bytes(&self) -> u64 {
+        4 * self.len() as u64
+    }
+
+    fn get(&self, i: usize) -> Value {
+        match self {
+            ArrayData::F(v) => Value::F(v[i]),
+            ArrayData::I(v) => Value::I(v[i]),
+        }
+    }
+
+    fn set(&mut self, i: usize, val: Value) {
+        match self {
+            ArrayData::F(v) => v[i] = val.as_f64(),
+            ArrayData::I(v) => v[i] = val.as_i64(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Binding {
+    Scalar(Value),
+    Array(usize), // heap slot
+}
+
+struct Frame {
+    scopes: Vec<FastMap<String, Binding>>,
+    /// Retired scope maps kept for reuse — loop bodies push/pop a scope
+    /// every iteration, so recycling the allocation (and FNV hashing,
+    /// see util::fasthash) is the §Perf iteration-1 win.
+    spare: Vec<FastMap<String, Binding>>,
+}
+
+impl Frame {
+    fn new() -> Self {
+        Self {
+            scopes: vec![FastMap::default()],
+            spare: Vec::new(),
+        }
+    }
+
+    fn push(&mut self) {
+        let map = self.spare.pop().unwrap_or_default();
+        self.scopes.push(map);
+    }
+
+    fn pop(&mut self) {
+        if let Some(mut m) = self.scopes.pop() {
+            m.clear();
+            self.spare.push(m);
+        }
+    }
+
+    fn declare(&mut self, name: &str, b: Binding) {
+        self.scopes.last_mut().unwrap().insert(name.to_string(), b);
+    }
+
+    fn lookup(&self, name: &str) -> Option<Binding> {
+        self.scopes.iter().rev().find_map(|s| s.get(name).copied())
+    }
+
+    fn assign_scalar(&mut self, name: &str, v: Value) -> bool {
+        for s in self.scopes.iter_mut().rev() {
+            if let Some(b) = s.get_mut(name) {
+                // Keep the declared type: assigning 2.5 to an int truncates.
+                let stored = match b {
+                    Binding::Scalar(Value::I(_)) => Value::I(v.as_i64()),
+                    Binding::Scalar(Value::F(_)) => Value::F(v.as_f64()),
+                    Binding::Array(_) => return false,
+                };
+                *b = Binding::Scalar(stored);
+                return true;
+            }
+        }
+        false
+    }
+}
+
+enum Flow {
+    Normal,
+    Break,
+    Continue,
+    Return(Option<Value>),
+}
+
+struct Interp<'a> {
+    prog: &'a Program,
+    #[allow(dead_code)] // retained for diagnostics; touch-lists are precomputed
+    table: &'a [LoopInfo],
+    heap: Vec<ArrayData>,
+    data: ProfileData,
+    loop_stack: Vec<usize>,
+    limits: ProfileLimits,
+    depth: usize,
+    loop_touch_names: Vec<Vec<String>>,
+}
+
+impl<'a> Interp<'a> {
+    fn step(&mut self) -> Result<()> {
+        self.data.steps += 1;
+        if self.data.steps > self.limits.max_steps {
+            return Err(Error::Profile(format!(
+                "step limit exceeded ({}) — possible runaway loop",
+                self.limits.max_steps
+            )));
+        }
+        Ok(())
+    }
+
+    fn charge_flops(&mut self, w: f64) {
+        match self.loop_stack.last() {
+            Some(&l) => self.data.loop_flops[l] += w,
+            None => self.data.outside_flops += w,
+        }
+    }
+
+    fn charge_bytes(&mut self, b: f64) {
+        match self.loop_stack.last() {
+            Some(&l) => self.data.loop_bytes[l] += b,
+            None => self.data.outside_bytes += b,
+        }
+    }
+
+    fn exec_block(&mut self, body: &[Stmt], frame: &mut Frame) -> Result<Flow> {
+        // §Perf iteration 3: blocks with no declarations don't need a
+        // scope of their own — skip the map push/pop entirely (loop bodies
+        // run this path once per iteration).
+        let declares = body.iter().any(|s| {
+            matches!(s, Stmt::Decl { .. } | Stmt::ArrayDecl { .. } | Stmt::For { .. })
+        });
+        if !declares {
+            return self.exec_stmts(body, frame);
+        }
+        frame.push();
+        let flow = self.exec_stmts(body, frame);
+        frame.pop();
+        flow
+    }
+
+    fn exec_stmts(&mut self, body: &[Stmt], frame: &mut Frame) -> Result<Flow> {
+        for s in body {
+            match self.exec_stmt(s, frame)? {
+                Flow::Normal => {}
+                other => return Ok(other),
+            }
+        }
+        Ok(Flow::Normal)
+    }
+
+    fn exec_stmt(&mut self, s: &Stmt, frame: &mut Frame) -> Result<Flow> {
+        self.step()?;
+        match s {
+            Stmt::Decl { ty, name, init, .. } => {
+                let v = match init {
+                    Some(e) => self.eval(e, frame)?,
+                    None => Value::I(0),
+                };
+                let v = match ty {
+                    Ty::Int => Value::I(v.as_i64()),
+                    _ => Value::F(v.as_f64()),
+                };
+                frame.declare(name, Binding::Scalar(v));
+                Ok(Flow::Normal)
+            }
+            Stmt::ArrayDecl { ty, name, size, line } => {
+                let n = self.eval(size, frame)?.as_i64();
+                if n < 0 || n > 100_000_000 {
+                    return Err(Error::Profile(format!(
+                        "line {line}: array '{name}' size {n} out of range"
+                    )));
+                }
+                let data = match ty {
+                    Ty::Int => ArrayData::I(vec![0; n as usize]),
+                    _ => ArrayData::F(vec![0.0; n as usize]),
+                };
+                self.heap.push(data);
+                frame.declare(name, Binding::Array(self.heap.len() - 1));
+                Ok(Flow::Normal)
+            }
+            Stmt::Assign { lv, op, rhs, line } => {
+                let rhs_v = self.eval(rhs, frame)?;
+                match lv {
+                    LValue::Var(name) => {
+                        let new = if *op == AssignOp::Set {
+                            rhs_v
+                        } else {
+                            let old = match frame.lookup(name) {
+                                Some(Binding::Scalar(v)) => v,
+                                _ => {
+                                    return Err(Error::Profile(format!(
+                                        "line {line}: unknown scalar '{name}'"
+                                    )))
+                                }
+                            };
+                            self.charge_flops(1.0);
+                            apply_compound(old, *op, rhs_v)
+                        };
+                        if !frame.assign_scalar(name, new) {
+                            return Err(Error::Profile(format!(
+                                "line {line}: assignment to undeclared '{name}'"
+                            )));
+                        }
+                    }
+                    LValue::Index(name, idx) => {
+                        let i = self.eval(idx, frame)?.as_i64();
+                        let slot = match frame.lookup(name) {
+                            Some(Binding::Array(h)) => h,
+                            _ => {
+                                return Err(Error::Profile(format!(
+                                    "line {line}: '{name}' is not an array"
+                                )))
+                            }
+                        };
+                        let len = self.heap[slot].len();
+                        if i < 0 || i as usize >= len {
+                            return Err(Error::Profile(format!(
+                                "line {line}: index {i} out of bounds for '{name}' (len {len})"
+                            )));
+                        }
+                        let new = if *op == AssignOp::Set {
+                            rhs_v
+                        } else {
+                            let old = self.heap[slot].get(i as usize);
+                            self.charge_bytes(4.0);
+                            self.charge_flops(1.0);
+                            apply_compound(old, *op, rhs_v)
+                        };
+                        self.heap[slot].set(i as usize, new);
+                        self.charge_bytes(4.0);
+                    }
+                }
+                Ok(Flow::Normal)
+            }
+            Stmt::For {
+                loop_id,
+                init,
+                cond,
+                step,
+                body,
+                ..
+            } => {
+                frame.push();
+                if let Some(st) = init.as_deref() {
+                    self.exec_stmt(st, frame)?;
+                }
+                self.enter_loop(*loop_id, frame);
+                self.loop_stack.push(*loop_id);
+                let mut flow = Flow::Normal;
+                loop {
+                    let c = self.eval(cond, frame)?;
+                    if !c.truthy() {
+                        break;
+                    }
+                    self.data.loop_trips[*loop_id] += 1;
+                    match self.exec_block(body, frame)? {
+                        Flow::Break => break,
+                        Flow::Return(v) => {
+                            flow = Flow::Return(v);
+                            break;
+                        }
+                        Flow::Continue | Flow::Normal => {}
+                    }
+                    if let Some(st) = step.as_deref() {
+                        self.exec_stmt(st, frame)?;
+                    }
+                }
+                self.loop_stack.pop();
+                frame.pop();
+                Ok(flow)
+            }
+            Stmt::While { loop_id, cond, body, .. } => {
+                self.enter_loop(*loop_id, frame);
+                self.loop_stack.push(*loop_id);
+                let mut flow = Flow::Normal;
+                loop {
+                    let c = self.eval(cond, frame)?;
+                    if !c.truthy() {
+                        break;
+                    }
+                    self.data.loop_trips[*loop_id] += 1;
+                    match self.exec_block(body, frame)? {
+                        Flow::Break => break,
+                        Flow::Return(v) => {
+                            flow = Flow::Return(v);
+                            break;
+                        }
+                        Flow::Continue | Flow::Normal => {}
+                    }
+                }
+                self.loop_stack.pop();
+                Ok(flow)
+            }
+            Stmt::If { cond, then, otherwise, .. } => {
+                let c = self.eval(cond, frame)?;
+                if c.truthy() {
+                    self.exec_block(then, frame)
+                } else {
+                    self.exec_block(otherwise, frame)
+                }
+            }
+            Stmt::Return(e, _) => {
+                let v = match e {
+                    Some(e) => Some(self.eval(e, frame)?),
+                    None => None,
+                };
+                Ok(Flow::Return(v))
+            }
+            Stmt::ExprStmt(e, _) => {
+                self.eval(e, frame)?;
+                Ok(Flow::Normal)
+            }
+            Stmt::Break(_) => Ok(Flow::Break),
+            Stmt::Continue(_) => Ok(Flow::Continue),
+        }
+    }
+
+    /// Record loop entry + observed array sizes for transfer modeling.
+    fn enter_loop(&mut self, loop_id: usize, frame: &Frame) {
+        self.data.loop_entries[loop_id] += 1;
+        // Only the first few entries can observe new array sizes (bindings
+        // don't change shape mid-loop in the subset); skip the resolution
+        // work on hot re-entries.
+        if self.data.loop_entries[loop_id] > 4 {
+            return;
+        }
+        for i in 0..self.loop_touch_names[loop_id].len() {
+            let name = &self.loop_touch_names[loop_id][i];
+            if let Some(Binding::Array(h)) = frame.lookup(name) {
+                let bytes = self.heap[h].bytes();
+                let entry = self.data.loop_array_bytes[loop_id]
+                    .entry(name.clone())
+                    .or_insert(0);
+                *entry = (*entry).max(bytes);
+            }
+        }
+    }
+
+    fn eval(&mut self, e: &Expr, frame: &mut Frame) -> Result<Value> {
+        self.step()?;
+        match e {
+            Expr::IntLit(v, _) => Ok(Value::I(*v)),
+            Expr::FloatLit(v, _) => Ok(Value::F(*v)),
+            Expr::StrLit(_, _) => Ok(Value::I(0)),
+            Expr::Var(name, line) => match frame.lookup(name) {
+                Some(Binding::Scalar(v)) => Ok(v),
+                Some(Binding::Array(_)) => Err(Error::Profile(format!(
+                    "line {line}: array '{name}' used as a scalar"
+                ))),
+                None => Err(Error::Profile(format!("line {line}: unknown variable '{name}'"))),
+            },
+            Expr::Index(name, idx, line) => {
+                let i = self.eval(idx, frame)?.as_i64();
+                match frame.lookup(name) {
+                    Some(Binding::Array(h)) => {
+                        let len = self.heap[h].len();
+                        if i < 0 || i as usize >= len {
+                            return Err(Error::Profile(format!(
+                                "line {line}: index {i} out of bounds for '{name}' (len {len})"
+                            )));
+                        }
+                        self.charge_bytes(4.0);
+                        Ok(self.heap[h].get(i as usize))
+                    }
+                    _ => Err(Error::Profile(format!("line {line}: '{name}' is not an array"))),
+                }
+            }
+            Expr::Bin(op, a, b, _) => {
+                // Short-circuit logical ops.
+                if *op == BinOp::And {
+                    let av = self.eval(a, frame)?;
+                    if !av.truthy() {
+                        return Ok(Value::I(0));
+                    }
+                    let bv = self.eval(b, frame)?;
+                    return Ok(Value::I(bv.truthy() as i64));
+                }
+                if *op == BinOp::Or {
+                    let av = self.eval(a, frame)?;
+                    if av.truthy() {
+                        return Ok(Value::I(1));
+                    }
+                    let bv = self.eval(b, frame)?;
+                    return Ok(Value::I(bv.truthy() as i64));
+                }
+                let av = self.eval(a, frame)?;
+                let bv = self.eval(b, frame)?;
+                self.eval_bin(*op, av, bv)
+            }
+            Expr::Un(op, a, _) => {
+                let v = self.eval(a, frame)?;
+                match op {
+                    UnOp::Neg => Ok(match v {
+                        Value::I(x) => Value::I(-x),
+                        Value::F(x) => Value::F(-x),
+                    }),
+                    UnOp::Not => Ok(Value::I(!v.truthy() as i64)),
+                }
+            }
+            Expr::Call(name, args, line) => self.call(name, args, *line, frame),
+        }
+    }
+
+    fn eval_bin(&mut self, op: BinOp, a: Value, b: Value) -> Result<Value> {
+        use BinOp::*;
+        let both_int = matches!((a, b), (Value::I(_), Value::I(_)));
+        match op {
+            Add | Sub | Mul | Div => {
+                if both_int {
+                    let (x, y) = (a.as_i64(), b.as_i64());
+                    let r = match op {
+                        Add => x.wrapping_add(y),
+                        Sub => x.wrapping_sub(y),
+                        Mul => x.wrapping_mul(y),
+                        Div => {
+                            if y == 0 {
+                                return Err(Error::Profile("integer division by zero".into()));
+                            }
+                            x / y
+                        }
+                        _ => unreachable!(),
+                    };
+                    Ok(Value::I(r))
+                } else {
+                    let (x, y) = (a.as_f64(), b.as_f64());
+                    let w = match op {
+                        Div => 4.0,
+                        _ => 1.0,
+                    };
+                    self.charge_flops(w);
+                    let r = match op {
+                        Add => x + y,
+                        Sub => x - y,
+                        Mul => x * y,
+                        Div => x / y,
+                        _ => unreachable!(),
+                    };
+                    Ok(Value::F(r))
+                }
+            }
+            Mod => {
+                let y = b.as_i64();
+                if y == 0 {
+                    return Err(Error::Profile("modulo by zero".into()));
+                }
+                Ok(Value::I(a.as_i64() % y))
+            }
+            Lt | Le | Gt | Ge | Eq | Ne => {
+                let (x, y) = (a.as_f64(), b.as_f64());
+                let r = match op {
+                    Lt => x < y,
+                    Le => x <= y,
+                    Gt => x > y,
+                    Ge => x >= y,
+                    Eq => x == y,
+                    Ne => x != y,
+                    _ => unreachable!(),
+                };
+                Ok(Value::I(r as i64))
+            }
+            And | Or => unreachable!("short-circuited above"),
+        }
+    }
+
+    fn call(&mut self, name: &str, args: &[Expr], line: usize, frame: &mut Frame) -> Result<Value> {
+        // Cast intrinsics inserted by the parser for `(float)` / `(int)`.
+        if name == "__float" || name == "__int" {
+            let v = self.eval(&args[0], frame)?;
+            return Ok(match name {
+                "__float" => Value::F(v.as_f64()),
+                _ => Value::I(v.as_i64()),
+            });
+        }
+        if is_math_builtin(name) {
+            let x = self
+                .eval(args.first().ok_or_else(|| {
+                    Error::Profile(format!("line {line}: {name} needs an argument"))
+                })?, frame)?
+                .as_f64();
+            self.charge_flops(8.0);
+            let r = match name {
+                "sinf" | "sin" => x.sin(),
+                "cosf" | "cos" => x.cos(),
+                "tanf" => x.tan(),
+                "sqrtf" | "sqrt" => x.sqrt(),
+                "fabsf" | "fabs" => x.abs(),
+                "expf" | "exp" => x.exp(),
+                "logf" | "log" => x.ln(),
+                "floorf" => x.floor(),
+                "ceilf" => x.ceil(),
+                "powf" => {
+                    let y = self.eval(&args[1], frame)?.as_f64();
+                    x.powf(y)
+                }
+                _ => unreachable!(),
+            };
+            return Ok(Value::F(r));
+        }
+        if name == "printf" {
+            for a in args.iter().skip(1) {
+                let v = self.eval(a, frame)?;
+                self.data.printed.push(v.as_f64());
+            }
+            return Ok(Value::I(0));
+        }
+        // User function call.
+        let func = self
+            .prog
+            .function(name)
+            .ok_or_else(|| Error::Profile(format!("line {line}: unknown function '{name}'")))?
+            .clone();
+        if func.params.len() != args.len() {
+            return Err(Error::Profile(format!(
+                "line {line}: '{name}' expects {} args, got {}",
+                func.params.len(),
+                args.len()
+            )));
+        }
+        if self.depth >= 64 {
+            return Err(Error::Profile(format!(
+                "line {line}: call depth limit exceeded (recursion?)"
+            )));
+        }
+        let mut callee = Frame::new();
+        for (p, a) in func.params.iter().zip(args) {
+            if p.is_array {
+                match a {
+                    Expr::Var(vn, _) => match frame.lookup(vn) {
+                        Some(Binding::Array(h)) => callee.declare(&p.name, Binding::Array(h)),
+                        _ => {
+                            return Err(Error::Profile(format!(
+                                "line {line}: argument '{vn}' for array parameter '{}' is not an array",
+                                p.name
+                            )))
+                        }
+                    },
+                    _ => {
+                        return Err(Error::Profile(format!(
+                            "line {line}: array parameter '{}' needs an array variable argument",
+                            p.name
+                        )))
+                    }
+                }
+            } else {
+                let v = self.eval(a, frame)?;
+                let v = match p.ty {
+                    Ty::Int => Value::I(v.as_i64()),
+                    _ => Value::F(v.as_f64()),
+                };
+                callee.declare(&p.name, Binding::Scalar(v));
+            }
+        }
+        self.depth += 1;
+        let flow = self.exec_stmts(&func.body, &mut callee)?;
+        self.depth -= 1;
+        match flow {
+            Flow::Return(Some(v)) => Ok(v),
+            _ => Ok(Value::I(0)),
+        }
+    }
+}
+
+fn apply_compound(old: Value, op: AssignOp, rhs: Value) -> Value {
+    let both_int = matches!((old, rhs), (Value::I(_), Value::I(_)));
+    if both_int {
+        let (x, y) = (old.as_i64(), rhs.as_i64());
+        Value::I(match op {
+            AssignOp::Add => x.wrapping_add(y),
+            AssignOp::Sub => x.wrapping_sub(y),
+            AssignOp::Mul => x.wrapping_mul(y),
+            AssignOp::Div => {
+                if y == 0 {
+                    0
+                } else {
+                    x / y
+                }
+            }
+            AssignOp::Set => y,
+        })
+    } else {
+        let (x, y) = (old.as_f64(), rhs.as_f64());
+        Value::F(match op {
+            AssignOp::Add => x + y,
+            AssignOp::Sub => x - y,
+            AssignOp::Mul => x * y,
+            AssignOp::Div => x / y,
+            AssignOp::Set => y,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::canalyze::loops::extract_loops;
+    use crate::canalyze::parser::parse;
+
+    fn run(src: &str) -> ProfileData {
+        let prog = parse("t.c", src).unwrap();
+        let table = extract_loops(&prog);
+        profile(&prog, &table, ProfileLimits::default()).unwrap()
+    }
+
+    #[test]
+    fn counts_trips() {
+        let d = run(
+            "int main() {
+               float a[10];
+               for (int i = 0; i < 10; i++) { a[i] = (float)i; }
+               return 0;
+             }",
+        );
+        assert_eq!(d.loop_trips[0], 10);
+        assert_eq!(d.loop_entries[0], 1);
+    }
+
+    #[test]
+    fn nested_trips_multiply_and_entries_count() {
+        let d = run(
+            "int main() {
+               float a[4];
+               for (int i = 0; i < 4; i++) {
+                 for (int j = 0; j < 5; j++) { a[i] += 1.0f; }
+               }
+               return 0;
+             }",
+        );
+        assert_eq!(d.loop_trips[0], 4);
+        assert_eq!(d.loop_entries[1], 4);
+        assert_eq!(d.loop_trips[1], 20);
+    }
+
+    #[test]
+    fn numeric_semantics_match_c() {
+        let d = run(
+            "int main() {
+               int a = 7;
+               int b = 2;
+               printf(\"%d\", a / b);
+               printf(\"%f\", (float)a / (float)b);
+               printf(\"%d\", a % b);
+               return 0;
+             }",
+        );
+        assert_eq!(d.printed, vec![3.0, 3.5, 1.0]);
+    }
+
+    #[test]
+    fn functions_pass_arrays_by_reference() {
+        let d = run(
+            "void fill(float *x, int n, float v) {
+               for (int i = 0; i < n; i++) { x[i] = v; }
+             }
+             int main() {
+               float a[3];
+               fill(a, 3, 2.5f);
+               printf(\"%f\", a[0] + a[1] + a[2]);
+               return 0;
+             }",
+        );
+        assert_eq!(d.printed, vec![7.5]);
+    }
+
+    #[test]
+    fn math_builtins_work() {
+        let d = run(
+            "int main() {
+               printf(\"%f\", sqrtf(9.0f));
+               printf(\"%f\", cosf(0.0f));
+               return 0;
+             }",
+        );
+        assert_eq!(d.printed, vec![3.0, 1.0]);
+    }
+
+    #[test]
+    fn flops_attributed_to_innermost_loop() {
+        let d = run(
+            "int main() {
+               float a[8];
+               float s = 0.0f;
+               for (int i = 0; i < 8; i++) {
+                 for (int j = 0; j < 8; j++) { s += 1.5f * 2.0f; }
+               }
+               printf(\"%f\", s);
+               return 0;
+             }",
+        );
+        assert!(d.loop_flops[1] > d.loop_flops[0]);
+        assert!(d.total_flops() > 0.0);
+    }
+
+    #[test]
+    fn array_sizes_recorded_per_loop() {
+        let d = run(
+            "void f(float *q, int n) {
+               for (int i = 0; i < n; i++) { q[i] = 1.0f; }
+             }
+             int main() {
+               float big[256];
+               f(big, 256);
+               return 0;
+             }",
+        );
+        assert_eq!(d.loop_array_bytes[0].get("q"), Some(&1024));
+    }
+
+    #[test]
+    fn break_and_while_and_if() {
+        let d = run(
+            "int main() {
+               int n = 0;
+               while (1) { n++; if (n >= 5) break; }
+               printf(\"%d\", n);
+               return 0;
+             }",
+        );
+        assert_eq!(d.printed, vec![5.0]);
+        assert_eq!(d.loop_trips[0], 5);
+    }
+
+    #[test]
+    fn out_of_bounds_is_an_error() {
+        let prog = parse(
+            "t.c",
+            "int main() { float a[2]; a[5] = 1.0f; return 0; }",
+        )
+        .unwrap();
+        let table = extract_loops(&prog);
+        let e = profile(&prog, &table, ProfileLimits::default()).unwrap_err();
+        assert!(e.to_string().contains("out of bounds"));
+    }
+
+    #[test]
+    fn step_limit_stops_runaway() {
+        let prog = parse("t.c", "int main() { while (1) { int x = 0; } return 0; }").unwrap();
+        let table = extract_loops(&prog);
+        let e = profile(&prog, &table, ProfileLimits { max_steps: 10_000 }).unwrap_err();
+        assert!(e.to_string().contains("step limit"));
+    }
+
+    #[test]
+    fn recursion_depth_guard() {
+        let prog = parse(
+            "t.c",
+            "int f(int n) { return f(n + 1); } int main() { f(0); return 0; }",
+        )
+        .unwrap();
+        let table = extract_loops(&prog);
+        let e = profile(&prog, &table, ProfileLimits::default()).unwrap_err();
+        assert!(e.to_string().contains("depth"));
+    }
+
+    #[test]
+    fn transfer_bytes_sums_touched_arrays() {
+        let src = "void f(float *a, float *b, int n) {
+               for (int i = 0; i < n; i++) { a[i] = b[i] + 1.0f; }
+             }
+             int main() {
+               float x[100];
+               float y[100];
+               f(x, y, 100);
+               return 0;
+             }";
+        let prog = parse("t.c", src).unwrap();
+        let table = extract_loops(&prog);
+        let d = profile(&prog, &table, ProfileLimits::default()).unwrap();
+        assert_eq!(d.transfer_bytes(&table, LoopId(0)), 800);
+    }
+}

@@ -1,0 +1,373 @@
+//! Static semantic checking — the front half of the paper's Step 1 that a
+//! Clang-based analyzer gets for free: undeclared identifiers, unknown
+//! functions, call-arity mismatches, array/scalar confusion and duplicate
+//! declarations are reported *before* profiling, with line numbers,
+//! instead of surfacing as interpreter faults mid-run.
+
+use super::ast::*;
+use crate::{Error, Result};
+use std::collections::{HashMap, HashSet};
+
+/// What a name is bound to in a scope.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Sym {
+    Scalar,
+    Array,
+}
+
+/// Run all semantic checks over a program. Returns the list of non-fatal
+/// warnings; hard errors abort with a line-tagged [`Error::Analyze`].
+pub fn check(file: &str, prog: &Program) -> Result<Vec<String>> {
+    let mut warnings = Vec::new();
+    let sigs: HashMap<&str, &Function> =
+        prog.functions.iter().map(|f| (f.name.as_str(), f)).collect();
+
+    // Duplicate function names.
+    let mut seen = HashSet::new();
+    for f in &prog.functions {
+        if !seen.insert(f.name.as_str()) {
+            return Err(err(file, f.line, format!("duplicate function '{}'", f.name)));
+        }
+    }
+
+    for f in &prog.functions {
+        let mut cx = Check {
+            file,
+            sigs: &sigs,
+            scopes: vec![HashMap::new()],
+            warnings: &mut warnings,
+            func: f,
+        };
+        for p in &f.params {
+            cx.declare(&p.name, if p.is_array { Sym::Array } else { Sym::Scalar }, f.line)?;
+        }
+        cx.block(&f.body)?;
+    }
+    Ok(warnings)
+}
+
+fn err(file: &str, line: usize, msg: String) -> Error {
+    Error::Analyze {
+        file: file.to_string(),
+        line,
+        msg,
+    }
+}
+
+struct Check<'a> {
+    file: &'a str,
+    sigs: &'a HashMap<&'a str, &'a Function>,
+    scopes: Vec<HashMap<String, Sym>>,
+    warnings: &'a mut Vec<String>,
+    func: &'a Function,
+}
+
+impl<'a> Check<'a> {
+    fn declare(&mut self, name: &str, sym: Sym, line: usize) -> Result<()> {
+        let top = self.scopes.last_mut().unwrap();
+        if top.insert(name.to_string(), sym).is_some() {
+            return Err(err(
+                self.file,
+                line,
+                format!("'{name}' declared twice in the same scope"),
+            ));
+        }
+        // Shadowing an outer binding is legal C but worth a warning in
+        // numeric kernels.
+        if self.scopes[..self.scopes.len() - 1]
+            .iter()
+            .any(|s| s.contains_key(name))
+        {
+            self.warnings.push(format!(
+                "{}:{line}: '{name}' shadows an outer declaration (in {})",
+                self.file, self.func.name
+            ));
+        }
+        Ok(())
+    }
+
+    fn lookup(&self, name: &str) -> Option<Sym> {
+        self.scopes.iter().rev().find_map(|s| s.get(name).copied())
+    }
+
+    fn block(&mut self, body: &[Stmt]) -> Result<()> {
+        self.scopes.push(HashMap::new());
+        for s in body {
+            self.stmt(s)?;
+        }
+        self.scopes.pop();
+        Ok(())
+    }
+
+    fn stmt(&mut self, s: &Stmt) -> Result<()> {
+        match s {
+            Stmt::Decl { name, init, line, .. } => {
+                if let Some(e) = init {
+                    self.expr(e)?;
+                }
+                self.declare(name, Sym::Scalar, *line)
+            }
+            Stmt::ArrayDecl { name, size, line, .. } => {
+                self.expr(size)?;
+                self.declare(name, Sym::Array, *line)
+            }
+            Stmt::Assign { lv, rhs, line, .. } => {
+                self.expr(rhs)?;
+                match lv {
+                    LValue::Var(v) => match self.lookup(v) {
+                        Some(Sym::Scalar) => Ok(()),
+                        Some(Sym::Array) => Err(err(
+                            self.file,
+                            *line,
+                            format!("array '{v}' assigned as a scalar"),
+                        )),
+                        None => Err(err(self.file, *line, format!("assignment to undeclared '{v}'"))),
+                    },
+                    LValue::Index(a, idx) => {
+                        self.expr(idx)?;
+                        match self.lookup(a) {
+                            Some(Sym::Array) => Ok(()),
+                            Some(Sym::Scalar) => Err(err(
+                                self.file,
+                                *line,
+                                format!("scalar '{a}' indexed as an array"),
+                            )),
+                            None => Err(err(self.file, *line, format!("unknown array '{a}'"))),
+                        }
+                    }
+                }
+            }
+            Stmt::For { init, cond, step, body, .. } => {
+                self.scopes.push(HashMap::new());
+                if let Some(st) = init.as_deref() {
+                    self.stmt(st)?;
+                }
+                self.expr(cond)?;
+                if let Some(st) = step.as_deref() {
+                    self.stmt(st)?;
+                }
+                for s in body {
+                    self.stmt(s)?;
+                }
+                self.scopes.pop();
+                Ok(())
+            }
+            Stmt::While { cond, body, .. } => {
+                self.expr(cond)?;
+                self.block(body)
+            }
+            Stmt::If { cond, then, otherwise, .. } => {
+                self.expr(cond)?;
+                self.block(then)?;
+                self.block(otherwise)
+            }
+            Stmt::Return(e, line) => {
+                if let Some(e) = e {
+                    self.expr(e)?;
+                    if self.func.ret == Ty::Void {
+                        self.warnings.push(format!(
+                            "{}:{line}: returning a value from void function '{}'",
+                            self.file, self.func.name
+                        ));
+                    }
+                }
+                Ok(())
+            }
+            Stmt::ExprStmt(e, _) => self.expr(e),
+            Stmt::Break(_) | Stmt::Continue(_) => Ok(()),
+        }
+    }
+
+    fn expr(&mut self, e: &Expr) -> Result<()> {
+        match e {
+            Expr::IntLit(..) | Expr::FloatLit(..) | Expr::StrLit(..) => Ok(()),
+            Expr::Var(v, line) => match self.lookup(v) {
+                Some(Sym::Scalar) => Ok(()),
+                Some(Sym::Array) => Err(err(
+                    self.file,
+                    *line,
+                    format!("array '{v}' used as a scalar value"),
+                )),
+                None => Err(err(self.file, *line, format!("undeclared variable '{v}'"))),
+            },
+            Expr::Index(a, idx, line) => {
+                self.expr(idx)?;
+                match self.lookup(a) {
+                    Some(Sym::Array) => Ok(()),
+                    Some(Sym::Scalar) => {
+                        Err(err(self.file, *line, format!("scalar '{a}' indexed as an array")))
+                    }
+                    None => Err(err(self.file, *line, format!("unknown array '{a}'"))),
+                }
+            }
+            Expr::Bin(_, a, b, _) => {
+                self.expr(a)?;
+                self.expr(b)
+            }
+            Expr::Un(_, a, _) => self.expr(a),
+            Expr::Call(name, args, line) => {
+                if name.starts_with("__") || is_math_builtin(name) {
+                    for a in args {
+                        self.expr(a)?;
+                    }
+                    let need = if name == "powf" { 2 } else { 1 };
+                    if args.len() != need {
+                        return Err(err(
+                            self.file,
+                            *line,
+                            format!("'{name}' expects {need} argument(s), got {}", args.len()),
+                        ));
+                    }
+                    return Ok(());
+                }
+                if name == "printf" {
+                    if args.is_empty() || !matches!(args[0], Expr::StrLit(..)) {
+                        return Err(err(
+                            self.file,
+                            *line,
+                            "printf needs a format-string literal first".into(),
+                        ));
+                    }
+                    for a in args.iter().skip(1) {
+                        self.expr(a)?;
+                    }
+                    return Ok(());
+                }
+                match self.sigs.get(name.as_str()) {
+                    Some(f) => {
+                        if f.params.len() != args.len() {
+                            return Err(err(
+                                self.file,
+                                *line,
+                                format!(
+                                    "'{name}' expects {} argument(s), got {}",
+                                    f.params.len(),
+                                    args.len()
+                                ),
+                            ));
+                        }
+                        // Arguments are checked against the parameter kind:
+                        // array parameters take array *variables*, scalar
+                        // parameters take scalar expressions.
+                        for (p, a) in f.params.iter().zip(args) {
+                            if p.is_array {
+                                let ok = matches!(a, Expr::Var(v, _)
+                                    if self.lookup(v) == Some(Sym::Array));
+                                if !ok {
+                                    return Err(err(
+                                        self.file,
+                                        *line,
+                                        format!(
+                                            "argument for array parameter '{}' of '{name}' \
+                                             must be an array variable",
+                                            p.name
+                                        ),
+                                    ));
+                                }
+                            } else {
+                                self.expr(a)?;
+                            }
+                        }
+                        Ok(())
+                    }
+                    None => Err(err(self.file, *line, format!("unknown function '{name}'"))),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::canalyze::parser::parse;
+    use crate::workloads;
+
+    fn check_src(src: &str) -> Result<Vec<String>> {
+        let p = parse("t.c", src)?;
+        check("t.c", &p)
+    }
+
+    #[test]
+    fn bundled_workloads_are_clean() {
+        for (name, src) in workloads::ALL {
+            let p = parse(name, src).unwrap();
+            let warnings = check(name, &p).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(warnings.is_empty(), "{name}: {warnings:?}");
+        }
+    }
+
+    #[test]
+    fn undeclared_variable_is_caught() {
+        let e = check_src("int main() { int x = y + 1; return 0; }").unwrap_err();
+        assert!(e.to_string().contains("undeclared variable 'y'"));
+    }
+
+    #[test]
+    fn unknown_function_is_caught() {
+        let e = check_src("int main() { frob(1); return 0; }").unwrap_err();
+        assert!(e.to_string().contains("unknown function 'frob'"));
+    }
+
+    #[test]
+    fn arity_mismatch_is_caught() {
+        let e = check_src(
+            "float g(float x) { return x; }
+             int main() { float v = g(1.0f, 2.0f); return 0; }",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("expects 1 argument"));
+        let e2 = check_src("int main() { float v = sinf(); return 0; }").unwrap_err();
+        assert!(e2.to_string().contains("expects 1 argument"));
+    }
+
+    #[test]
+    fn array_scalar_confusion_is_caught() {
+        let e = check_src("int main() { float a[4]; float x = a + 1.0f; return 0; }").unwrap_err();
+        assert!(e.to_string().contains("used as a scalar"));
+        let e2 = check_src("int main() { int x = 3; x[0] = 1; return 0; }").unwrap_err();
+        assert!(e2.to_string().contains("indexed as an array"));
+    }
+
+    #[test]
+    fn array_param_needs_array_argument() {
+        let e = check_src(
+            "void f(float *a, int n) { a[0] = (float) n; }
+             int main() { int q = 2; f(q, 2); return 0; }",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("must be an array variable"));
+    }
+
+    #[test]
+    fn duplicate_declaration_is_caught() {
+        let e = check_src("int main() { int x = 1; int x = 2; return 0; }").unwrap_err();
+        assert!(e.to_string().contains("declared twice"));
+    }
+
+    #[test]
+    fn shadowing_warns_but_passes() {
+        let w = check_src(
+            "int main() {
+               int i = 0;
+               for (int i = 0; i < 3; i++) { int z = i; }
+               return 0;
+             }",
+        )
+        .unwrap();
+        assert_eq!(w.len(), 1);
+        assert!(w[0].contains("shadows"));
+    }
+
+    #[test]
+    fn printf_requires_format_literal() {
+        let e = check_src("int main() { int x = 1; printf(x); return 0; }").unwrap_err();
+        assert!(e.to_string().contains("format-string"));
+    }
+
+    #[test]
+    fn duplicate_function_is_caught() {
+        let e = check_src("void f() { } void f() { }").unwrap_err();
+        assert!(e.to_string().contains("duplicate function"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Automatic code conversion (Step 3 outputs): re-emit the analyzed C with
+//! OpenACC directives (GPU), OpenMP pragmas (many-core) or an OpenCL
+//! kernel/host split (FPGA) for the offload pattern the search selected.
+
+pub mod emit;
+pub mod openacc;
+pub mod opencl;
+pub mod openmp;
+
+pub use emit::{emit_program, Annotator, LoopAnnotation, Plain};
+pub use opencl::OpenClBundle;

@@ -1,0 +1,13 @@
+//! The Layer-3 coordinator: the environment-adaptive software flow
+//! (paper Fig. 1, Steps 1–7) as an end-to-end job — analyze, extract,
+//! search (power-aware), adjust, place, verify, and register the
+//! reconfiguration hook — plus report rendering.
+
+pub mod job;
+pub mod reconfig;
+pub mod report;
+pub mod steps;
+
+pub use job::{resolve_baseline, run_job, BaselineSource, Destination, GeneratedCode, JobConfig, JobReport};
+pub use reconfig::{reconfigure, Drift, DriftMonitor, ReconfigOutcome};
+pub use steps::{Step, StepLog, StepRecord};

@@ -1,0 +1,176 @@
+//! Step 7 — in-operation reconfiguration.
+//!
+//! The paper's flow does not end at deployment: the environment-adaptive
+//! software watches the running application and *re-adapts* when the
+//! environment drifts (input sizes grow, devices are added/removed, power
+//! budgets change). This module implements that loop over the simulated
+//! production environment:
+//!
+//! * [`DriftMonitor`] folds production measurements into a baseline window
+//!   and flags drift when the observed time or power leaves the tolerance
+//!   band;
+//! * [`reconfigure`] re-runs the offload search against the *new*
+//!   application model and reports whether the pattern/destination changed.
+
+use super::job::{run_job, JobConfig, JobReport};
+use crate::util::stats::Welford;
+use crate::verifier::Measurement;
+use crate::Result;
+
+/// Drift verdict for one observation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Drift {
+    /// Within tolerance.
+    Stable,
+    /// Processing time drifted past tolerance.
+    TimeDrift,
+    /// Power draw drifted past tolerance.
+    PowerDrift,
+    /// Both drifted.
+    Both,
+}
+
+/// Sliding statistics over production measurements with drift detection.
+#[derive(Debug)]
+pub struct DriftMonitor {
+    time: Welford,
+    power: Welford,
+    /// Relative tolerance before flagging drift (e.g. 0.25 = 25 %).
+    pub tolerance: f64,
+    /// Observations required before drift can be flagged.
+    pub min_samples: u64,
+    reference_time_s: f64,
+    reference_power_w: f64,
+}
+
+impl DriftMonitor {
+    /// Monitor around the deployed pattern's verified performance.
+    pub fn new(reference: &Measurement, tolerance: f64) -> Self {
+        Self {
+            time: Welford::new(),
+            power: Welford::new(),
+            tolerance,
+            min_samples: 3,
+            reference_time_s: reference.time_s,
+            reference_power_w: reference.mean_w,
+        }
+    }
+
+    /// Fold in one production observation and report the verdict.
+    pub fn observe(&mut self, time_s: f64, mean_w: f64) -> Drift {
+        self.time.push(time_s);
+        self.power.push(mean_w);
+        if self.time.count() < self.min_samples {
+            return Drift::Stable;
+        }
+        let t_drift = (self.time.mean() - self.reference_time_s).abs()
+            > self.tolerance * self.reference_time_s;
+        let p_drift = (self.power.mean() - self.reference_power_w).abs()
+            > self.tolerance * self.reference_power_w;
+        match (t_drift, p_drift) {
+            (false, false) => Drift::Stable,
+            (true, false) => Drift::TimeDrift,
+            (false, true) => Drift::PowerDrift,
+            (true, true) => Drift::Both,
+        }
+    }
+
+    /// Observations folded so far.
+    pub fn samples(&self) -> u64 {
+        self.time.count()
+    }
+}
+
+/// Outcome of a reconfiguration pass.
+pub struct ReconfigOutcome {
+    /// The fresh job report (new search over the drifted workload).
+    pub report: JobReport,
+    /// Whether the chosen pattern changed vs the previous deployment.
+    pub pattern_changed: bool,
+    /// Whether the destination changed.
+    pub device_changed: bool,
+}
+
+/// Re-run the offload search for a drifted workload. `previous` is the
+/// deployment being reconsidered; `new_cfg` carries the updated baseline
+/// (e.g. a re-measured, larger CPU time).
+pub fn reconfigure(
+    previous: &JobReport,
+    source: &str,
+    new_cfg: &JobConfig,
+) -> Result<ReconfigOutcome> {
+    let report = run_job(&previous.source, source, new_cfg)?;
+    let pattern_changed = report.best.pattern.genome != previous.best.pattern.genome;
+    let device_changed = report.device != previous.device;
+    Ok(ReconfigOutcome {
+        report,
+        pattern_changed,
+        device_changed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::{BaselineSource, Destination};
+    use crate::devices::DeviceKind;
+    use crate::workloads;
+
+    fn deploy() -> JobReport {
+        run_job("mriq.c", workloads::MRIQ_C, &JobConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn stable_production_reports_stable() {
+        let job = deploy();
+        let mut mon = DriftMonitor::new(&job.production, 0.25);
+        for _ in 0..6 {
+            let v = mon.observe(job.production.time_s * 1.02, job.production.mean_w * 0.99);
+            let _ = v;
+        }
+        assert_eq!(
+            mon.observe(job.production.time_s, job.production.mean_w),
+            Drift::Stable
+        );
+        assert_eq!(mon.samples(), 7);
+    }
+
+    #[test]
+    fn time_drift_is_flagged_after_min_samples() {
+        let job = deploy();
+        let mut mon = DriftMonitor::new(&job.production, 0.25);
+        assert_eq!(mon.observe(job.production.time_s * 2.0, job.production.mean_w), Drift::Stable);
+        assert_eq!(mon.observe(job.production.time_s * 2.0, job.production.mean_w), Drift::Stable);
+        let v = mon.observe(job.production.time_s * 2.0, job.production.mean_w);
+        assert_eq!(v, Drift::TimeDrift);
+    }
+
+    #[test]
+    fn power_drift_is_flagged_separately() {
+        let job = deploy();
+        let mut mon = DriftMonitor::new(&job.production, 0.1);
+        for _ in 0..2 {
+            mon.observe(job.production.time_s, job.production.mean_w * 1.5);
+        }
+        assert_eq!(
+            mon.observe(job.production.time_s, job.production.mean_w * 1.5),
+            Drift::PowerDrift
+        );
+    }
+
+    #[test]
+    fn reconfigure_rediscovers_a_valid_pattern() {
+        let job = deploy();
+        // Workload doubled: re-run with a 28 s baseline.
+        let cfg = JobConfig {
+            baseline: BaselineSource::Fixed(28.0),
+            destination: Destination::Device(DeviceKind::Fpga),
+            ..Default::default()
+        };
+        let out = reconfigure(&job, workloads::MRIQ_C, &cfg).unwrap();
+        assert!(out.report.best.value > 0.0);
+        assert!(!out.device_changed, "still the FPGA");
+        // The production run under the new load still beats its baseline.
+        assert!(out.report.production.time_s < out.report.baseline.time_s);
+    }
+}

@@ -1,0 +1,216 @@
+//! Report rendering: human-readable tables + Fig. 5-style ASCII power
+//! plots + machine-readable JSON for every job.
+
+use super::job::JobReport;
+use crate::util::json::Json;
+use crate::util::tablefmt::{ascii_plot, Table};
+use crate::verifier::Measurement;
+
+/// Render the loop table of an analysis (CLI `analyze`).
+pub fn loop_table(an: &crate::canalyze::Analysis) -> String {
+    let mut t = Table::new(&[
+        "loop", "func", "line", "depth", "kind", "parallel", "trips", "AI", "reason",
+    ]);
+    let profile = an.profile.as_ref();
+    for l in &an.loops {
+        let trips = profile
+            .map(|p| p.loop_trips[l.id.0].to_string())
+            .unwrap_or_else(|| l.static_trip.map(|t| t.to_string()).unwrap_or("?".into()));
+        let ai = profile
+            .map(|p| format!("{:.2}", p.dyn_intensity(&an.loops, l.id)))
+            .unwrap_or_else(|| format!("{:.2}", l.census.intensity()));
+        t.row(&[
+            l.id.to_string(),
+            l.func.clone(),
+            l.line.to_string(),
+            l.depth.to_string(),
+            if l.is_for { "for" } else { "while" }.to_string(),
+            if l.parallelizable { "yes" } else { "NO" }.to_string(),
+            trips,
+            ai,
+            l.not_parallel_reason.clone().unwrap_or_default(),
+        ]);
+    }
+    t.render()
+}
+
+/// Fig. 5-style comparison: power-vs-time plot of two measurements plus
+/// the W·s summary table.
+pub fn fig5(baseline: &Measurement, offloaded: &Measurement) -> String {
+    let base_pts = baseline.trace.points();
+    let off_pts = offloaded.trace.points();
+    let mut out = String::new();
+    out.push_str("Power consumption with offloading (Fig. 5 reproduction)\n\n");
+    out.push_str(&ascii_plot(
+        &[
+            ("cpu-only", &base_pts),
+            (&format!("{} offload", offloaded.device), &off_pts),
+        ],
+        64,
+        14,
+    ));
+    out.push('\n');
+    let mut t = Table::new(&["run", "time [s]", "mean power [W]", "energy [W*s]"]);
+    t.row(&[
+        "cpu-only".to_string(),
+        format!("{:.2}", baseline.time_s),
+        format!("{:.1}", baseline.mean_w),
+        format!("{:.0}", baseline.energy_ws),
+    ]);
+    t.row(&[
+        format!("{} offload", offloaded.device),
+        format!("{:.2}", offloaded.time_s),
+        format!("{:.1}", offloaded.mean_w),
+        format!("{:.0}", offloaded.energy_ws),
+    ]);
+    out.push_str(&t.render());
+    out.push_str(&format!(
+        "\nspeedup: {:.1}x   energy reduction: {:.1}x\n",
+        baseline.time_s / offloaded.time_s.max(1e-9),
+        baseline.energy_ws / offloaded.energy_ws.max(1e-9),
+    ));
+    out
+}
+
+/// Full job report (CLI `offload`).
+pub fn render_job(r: &JobReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("=== enadapt offload job: {} ===\n\n", r.source));
+    out.push_str(&r.steps.render());
+    out.push('\n');
+    out.push_str(&format!(
+        "chosen pattern : {} on {}\n",
+        r.best.pattern, r.device
+    ));
+    out.push_str(&format!("evaluation val : {:.6}\n", r.best.value));
+    out.push_str(&format!(
+        "trials         : {} verification measurements, {:.1} h simulated search cost\n\n",
+        r.trials,
+        r.search_cost_s / 3600.0
+    ));
+    out.push_str(&fig5(&r.baseline, &r.production));
+    out
+}
+
+/// Machine-readable job report.
+pub fn job_json(r: &JobReport) -> Json {
+    Json::obj(vec![
+        ("source", Json::str(r.source.clone())),
+        ("device", Json::str(r.device.name())),
+        ("pattern", Json::str(r.best.pattern.to_string())),
+        ("value", Json::num(r.best.value)),
+        ("baseline", r.baseline.to_json()),
+        ("production", r.production.to_json()),
+        ("trials", Json::num(r.trials as f64)),
+        ("search_cost_s", Json::num(r.search_cost_s)),
+        ("generated_kind", Json::str(r.generated.kind())),
+        (
+            "steps",
+            Json::arr(
+                r.steps
+                    .records
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("step", Json::num(s.step.number() as f64)),
+                            ("title", Json::str(s.step.title())),
+                            ("detail", Json::str(s.detail.clone())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Testbed description (CLI `report --env`, paper Fig. 4).
+pub fn env_report(cfg: &crate::verifier::VerifEnvConfig) -> String {
+    let mut t = Table::new(&["component", "model", "key parameters"]);
+    t.row(&[
+        "server".into(),
+        "Dell PowerEdge R740 (simulated)".into(),
+        format!("idle {:.0} W, IPMI {} Hz power sampling", cfg.server.idle_w, 1.0 / cfg.ipmi.period_s),
+    ]);
+    t.row(&[
+        "cpu".into(),
+        "small-core host".into(),
+        format!(
+            "{:.1} GFLOP/s effective, +{:.0} W active",
+            cfg.cpu.gflops / 1e9,
+            cfg.cpu.active_w
+        ),
+    ]);
+    t.row(&[
+        "many-core".into(),
+        "16-core OpenMP target".into(),
+        format!(
+            "{:.0} cores × {:.0}% eff, +{:.0} W active",
+            cfg.manycore.cores,
+            cfg.manycore.efficiency * 100.0,
+            cfg.manycore.active_w
+        ),
+    ]);
+    t.row(&[
+        "gpu".into(),
+        "mid-range CUDA/OpenACC target".into(),
+        format!(
+            "{:.0} GFLOP/s eff, PCIe {:.0} GB/s, +{:.0} W active",
+            cfg.gpu.gflops / 1e9,
+            cfg.gpu.pcie_bw / 1e9,
+            cfg.gpu.active_w
+        ),
+    ]);
+    t.row(&[
+        "fpga".into(),
+        "Intel PAC Arria10 GX (simulated)".into(),
+        format!(
+            "{:.0} MHz, II={:.0}, +{:.0} W active, compiles ≈{:.1} h",
+            cfg.fpga.clock_hz / 1e6,
+            cfg.fpga.ii,
+            cfg.fpga.active_w,
+            cfg.fpga.synth.compile_base_s / 3600.0
+        ),
+    ]);
+    t.row(&[
+        "timeout".into(),
+        "verification trial".into(),
+        format!("{:.0} s (→ {:.0} s in evaluation value)", cfg.timeout_s, 1000.0),
+    ]);
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::canalyze::analyze_source;
+    use crate::coordinator::job::{run_job, JobConfig};
+    use crate::workloads;
+
+    #[test]
+    fn loop_table_lists_all_loops() {
+        let an = analyze_source("mriq.c", workloads::MRIQ_C).unwrap();
+        let t = loop_table(&an);
+        assert_eq!(t.lines().count(), 2 + 19, "header + rule + 19 loops");
+        assert!(t.contains("computeQ"));
+        assert!(t.contains("while"));
+    }
+
+    #[test]
+    fn job_report_renders_and_json_parses() {
+        let r = run_job("mriq.c", workloads::MRIQ_C, &JobConfig::default()).unwrap();
+        let text = render_job(&r);
+        assert!(text.contains("Fig. 5"));
+        assert!(text.contains("speedup"));
+        let j = job_json(&r);
+        let parsed = crate::util::json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("device").unwrap().as_str(), Some("fpga"));
+    }
+
+    #[test]
+    fn env_report_mentions_testbed() {
+        let t = env_report(&crate::verifier::VerifEnvConfig::r740_pac());
+        assert!(t.contains("R740"));
+        assert!(t.contains("Arria10"));
+        assert!(t.contains("IPMI"));
+    }
+}

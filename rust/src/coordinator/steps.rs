@@ -1,0 +1,143 @@
+//! The environment-adaptive software processing flow (paper Fig. 1):
+//! seven steps from code analysis to in-operation reconfiguration, with a
+//! structured log of what each step decided.
+
+use std::time::Instant;
+
+/// The paper's seven steps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Step {
+    /// Step 1: Code analysis.
+    CodeAnalysis,
+    /// Step 2: Offloadable-part extraction.
+    OffloadableExtraction,
+    /// Step 3: Search for suitable offload parts.
+    OffloadSearch,
+    /// Step 4: Resource-amount adjustment.
+    ResourceAdjustment,
+    /// Step 5: Placement-location adjustment.
+    PlacementAdjustment,
+    /// Step 6: Execution-file placement and operation verification.
+    PlacementAndVerification,
+    /// Step 7: In-operation reconfiguration.
+    Reconfiguration,
+}
+
+impl Step {
+    /// 1-based step number.
+    pub fn number(self) -> u8 {
+        match self {
+            Step::CodeAnalysis => 1,
+            Step::OffloadableExtraction => 2,
+            Step::OffloadSearch => 3,
+            Step::ResourceAdjustment => 4,
+            Step::PlacementAdjustment => 5,
+            Step::PlacementAndVerification => 6,
+            Step::Reconfiguration => 7,
+        }
+    }
+
+    /// The paper's step title.
+    pub fn title(self) -> &'static str {
+        match self {
+            Step::CodeAnalysis => "Code analysis",
+            Step::OffloadableExtraction => "Offloadable-part extraction",
+            Step::OffloadSearch => "Search for suitable offload parts",
+            Step::ResourceAdjustment => "Resource-amount adjustment",
+            Step::PlacementAdjustment => "Placement-location adjustment",
+            Step::PlacementAndVerification => "Execution-file placement and operation verification",
+            Step::Reconfiguration => "In-operation reconfiguration",
+        }
+    }
+}
+
+/// One executed step with its findings.
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    /// Which step.
+    pub step: Step,
+    /// Human-readable findings.
+    pub detail: String,
+    /// Coordinator wall time spent, seconds.
+    pub elapsed_s: f64,
+}
+
+/// Step logger.
+#[derive(Debug, Default)]
+pub struct StepLog {
+    /// Records in execution order.
+    pub records: Vec<StepRecord>,
+}
+
+impl StepLog {
+    /// New empty log.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run a step closure, timing it and recording the returned detail.
+    pub fn run<T>(
+        &mut self,
+        step: Step,
+        f: impl FnOnce() -> crate::Result<(T, String)>,
+    ) -> crate::Result<T> {
+        let start = Instant::now();
+        let (value, detail) = f()?;
+        self.records.push(StepRecord {
+            step,
+            detail,
+            elapsed_s: start.elapsed().as_secs_f64(),
+        });
+        Ok(value)
+    }
+
+    /// Render the log as text.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for r in &self.records {
+            out.push_str(&format!(
+                "Step {}: {} — {}\n",
+                r.step.number(),
+                r.step.title(),
+                r.detail
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numbers_and_titles_match_paper() {
+        assert_eq!(Step::CodeAnalysis.number(), 1);
+        assert_eq!(Step::Reconfiguration.number(), 7);
+        assert!(Step::OffloadSearch.title().contains("Search"));
+    }
+
+    #[test]
+    fn log_records_in_order() {
+        let mut log = StepLog::new();
+        let v: i32 = log
+            .run(Step::CodeAnalysis, || Ok((42, "parsed".to_string())))
+            .unwrap();
+        assert_eq!(v, 42);
+        log.run(Step::OffloadableExtraction, || Ok(((), "16 loops".to_string())))
+            .unwrap();
+        assert_eq!(log.records.len(), 2);
+        assert!(log.render().contains("Step 1: Code analysis — parsed"));
+        assert!(log.render().contains("16 loops"));
+    }
+
+    #[test]
+    fn failing_step_propagates_and_is_not_recorded() {
+        let mut log = StepLog::new();
+        let r: crate::Result<()> = log.run(Step::CodeAnalysis, || {
+            Err(crate::Error::Verify("nope".into()))
+        });
+        assert!(r.is_err());
+        assert!(log.records.is_empty());
+    }
+}

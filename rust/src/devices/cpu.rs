@@ -1,0 +1,84 @@
+//! Host (small-core CPU) model — the baseline every offload pattern is
+//! compared against, and the executor of whatever loops stay on the CPU.
+//!
+//! The throughput constant is *calibrated*, not a datasheet number: the
+//! paper's testbed runs scalar C (gcc, no autovectorization) where a
+//! sinf/cosf pair costs ~100 ns, so effective weighted-FLOP throughput is
+//! ~1 GFLOP/s. With that, full-size MRI-Q (64³ voxels × 2048 k-samples)
+//! lands at the paper's ~14 s CPU-only time (Fig. 5).
+
+use super::traits::NestWork;
+
+/// Host CPU model.
+#[derive(Debug, Clone, Copy)]
+pub struct CpuModel {
+    /// Effective weighted-FLOP throughput, FLOP/s (scalar code).
+    pub gflops: f64,
+    /// Effective memory bandwidth for streaming loops, bytes/s.
+    pub mem_bw: f64,
+    /// Extra server draw while the CPU is busy, Watts (R740: ~121 W busy
+    /// vs ~105 W idle baseline → 16 W).
+    pub active_w: f64,
+}
+
+impl CpuModel {
+    /// Calibrated R740-class host (see module docs).
+    pub fn r740() -> Self {
+        Self {
+            gflops: 1.0e9,
+            mem_bw: 8.0e9,
+            active_w: 16.0,
+        }
+    }
+
+    /// Roofline execution time of a nest on the host.
+    pub fn nest_time_s(&self, w: &NestWork) -> f64 {
+        (w.flops / self.gflops).max(w.bytes / self.mem_bw)
+    }
+
+    /// Time for straight-line (non-loop) work given weighted FLOPs+bytes.
+    pub fn straightline_time_s(&self, flops: f64, bytes: f64) -> f64 {
+        (flops / self.gflops).max(bytes / self.mem_bw)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::canalyze::OpCensus;
+
+    fn work(flops: f64, bytes: f64) -> NestWork {
+        NestWork {
+            flops,
+            bytes,
+            transfer_bytes: 0.0,
+            entries: 1.0,
+            trips: 1.0,
+            census: OpCensus::default(),
+        }
+    }
+
+    #[test]
+    fn compute_bound_uses_flops() {
+        let cpu = CpuModel::r740();
+        let t = cpu.nest_time_s(&work(2.0e9, 1.0e6));
+        assert!((t - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memory_bound_uses_bandwidth() {
+        let cpu = CpuModel::r740();
+        let t = cpu.nest_time_s(&work(1.0e6, 16.0e9));
+        assert!((t - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn full_scale_mriq_lands_near_14s() {
+        // 64^3 voxels × 2048 k-samples, ~26 weighted FLOPs per inner
+        // iteration (2 specials ×8 + ~10 mul/add) → ~1.4e10 FLOPs.
+        let cpu = CpuModel::r740();
+        let flops = 262_144.0 * 2048.0 * 26.0;
+        let t = cpu.nest_time_s(&work(flops, flops * 0.6));
+        assert!((10.0..20.0).contains(&t), "t = {t}");
+    }
+}

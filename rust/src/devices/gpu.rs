@@ -1,0 +1,145 @@
+//! GPU model (CUDA/OpenACC migration destination).
+//!
+//! Captures the decision landscape that drives the paper's GA (§3.1):
+//! compute-dense loops with few launches win big; transfer-dominated or
+//! launch-dominated patterns *lose* to the CPU — which is why naive
+//! automatic parallelization fails and measurement-driven search is needed.
+
+use super::cpu::CpuModel;
+use super::traits::{Accelerator, DeviceKind, KernelEstimate, NestWork, TransferMode};
+
+/// GPU device model.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuModel {
+    /// Host model (for reference scaling).
+    pub host: CpuModel,
+    /// Effective weighted-FLOP throughput, FLOP/s.
+    pub gflops: f64,
+    /// Device memory bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// PCIe effective bandwidth, bytes/s.
+    pub pcie_bw: f64,
+    /// Per-transfer-event fixed latency, seconds.
+    pub pcie_latency_s: f64,
+    /// Kernel launch overhead, seconds per launch.
+    pub launch_s: f64,
+    /// Extra draw while a kernel runs, Watts.
+    pub active_w: f64,
+    /// Host draw while driving the GPU (driver/polling), Watts.
+    pub host_drive_w: f64,
+    /// Idle draw added to the server baseline while installed, Watts.
+    pub idle_extra_w: f64,
+}
+
+impl GpuModel {
+    /// Mid-range datacenter GPU calibrated against [`CpuModel::r740`]:
+    /// ≈10× on compute-dense nests before transfer costs, at a high
+    /// active draw. On MRI-Q this makes the GPU the *fastest* destination
+    /// but the FPGA the best *power-aware* one — the §3.3 selection
+    /// landscape this paper adds over the time-only previous method.
+    pub fn tesla() -> Self {
+        Self {
+            host: CpuModel::r740(),
+            gflops: 10.0e9,
+            mem_bw: 300.0e9,
+            pcie_bw: 8.0e9,
+            pcie_latency_s: 20.0e-6,
+            launch_s: 15.0e-6,
+            active_w: 120.0,
+            host_drive_w: 8.0,
+            idle_extra_w: 0.0,
+        }
+    }
+}
+
+impl Accelerator for GpuModel {
+    fn kind(&self) -> DeviceKind {
+        DeviceKind::Gpu
+    }
+
+    fn supports(&self, _work: &NestWork) -> Result<(), String> {
+        Ok(())
+    }
+
+    fn estimate(&self, w: &NestWork, xfer: TransferMode) -> KernelEstimate {
+        let compute = (w.flops / self.gflops).max(w.bytes / self.mem_bw);
+        // §3.1 transfer optimization: batched mode moves the payload once
+        // per run; naive per-entry mode pays it at every kernel entry.
+        let events = match xfer {
+            TransferMode::Batched => 1.0,
+            TransferMode::PerEntry => w.entries.max(1.0),
+        };
+        // In and out.
+        let transfer =
+            events * (2.0 * w.transfer_bytes / self.pcie_bw + 2.0 * self.pcie_latency_s);
+        KernelEstimate {
+            compute_s: compute,
+            transfer_s: transfer,
+            launch_s: self.launch_s * w.entries.max(1.0),
+            dyn_power_w: self.active_w,
+            host_power_w: self.host_drive_w,
+        }
+    }
+
+    fn prep_latency_s(&self, _work: &NestWork) -> f64 {
+        // OpenACC/CUDA compile of one pattern.
+        90.0
+    }
+
+    fn idle_w(&self) -> f64 {
+        self.idle_extra_w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::canalyze::OpCensus;
+
+    fn work(flops: f64, transfer: f64, entries: f64) -> NestWork {
+        NestWork {
+            flops,
+            bytes: flops * 0.5,
+            transfer_bytes: transfer,
+            entries,
+            trips: 1.0e6,
+            census: OpCensus::default(),
+        }
+    }
+
+    #[test]
+    fn compute_dense_nest_beats_cpu() {
+        let gpu = GpuModel::tesla();
+        let w = work(1.0e10, 4.0e6, 1.0);
+        let cpu_t = gpu.host.nest_time_s(&w);
+        let gpu_t = gpu.estimate(&w, TransferMode::Batched).total_s();
+        assert!(cpu_t / gpu_t > 5.0, "speedup {}", cpu_t / gpu_t);
+    }
+
+    #[test]
+    fn transfer_dominated_nest_loses_to_cpu() {
+        let gpu = GpuModel::tesla();
+        // Tiny compute, large payload (the vecadd case).
+        let w = work(1.0e5, 64.0e6, 1.0);
+        let cpu_t = gpu.host.nest_time_s(&w);
+        let gpu_t = gpu.estimate(&w, TransferMode::Batched).total_s();
+        assert!(gpu_t > cpu_t, "gpu {gpu_t} vs cpu {cpu_t}");
+    }
+
+    #[test]
+    fn batching_beats_per_entry_transfers() {
+        let gpu = GpuModel::tesla();
+        let w = work(1.0e9, 4.0e6, 500.0);
+        let naive = gpu.estimate(&w, TransferMode::PerEntry);
+        let batched = gpu.estimate(&w, TransferMode::Batched);
+        assert!(naive.transfer_s > 100.0 * batched.transfer_s);
+    }
+
+    #[test]
+    fn launch_overhead_scales_with_entries() {
+        let gpu = GpuModel::tesla();
+        let few = gpu.estimate(&work(1.0e9, 1.0e6, 2.0), TransferMode::Batched);
+        let many = gpu.estimate(&work(1.0e9, 1.0e6, 2000.0), TransferMode::Batched);
+        assert!(many.launch_s > few.launch_s * 500.0);
+    }
+}

@@ -1,0 +1,127 @@
+//! Many-core CPU model (OpenMP migration destination).
+//!
+//! §3.3 of the paper orders verification many-core → GPU → FPGA because
+//! the many-core is closest to the host: same memory space (no PCIe
+//! payload), trivial "compilation" (OpenMP pragma), cheap verification —
+//! but also the smallest gains and a sizable all-cores power draw.
+
+use super::cpu::CpuModel;
+use super::traits::{Accelerator, DeviceKind, KernelEstimate, NestWork, TransferMode};
+
+/// Many-core CPU (e.g. Xeon Phi-class or a second high-core-count socket).
+#[derive(Debug, Clone, Copy)]
+pub struct ManyCoreModel {
+    /// Host model the speedup is relative to.
+    pub host: CpuModel,
+    /// Usable parallel cores.
+    pub cores: f64,
+    /// Parallel efficiency in (0,1] (scheduling + NUMA losses).
+    pub efficiency: f64,
+    /// Aggregate memory bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Per-parallel-region fork/join overhead, seconds.
+    pub fork_join_s: f64,
+    /// Extra draw while all cores are busy, Watts.
+    pub active_w: f64,
+    /// Idle draw added to the server baseline, Watts.
+    pub idle_extra_w: f64,
+}
+
+impl ManyCoreModel {
+    /// 16-core OpenMP target, calibrated alongside [`CpuModel::r740`]:
+    /// ~10× effective speedup at a hefty all-cores draw, so it beats the
+    /// CPU on time but loses to the FPGA on energy (the §3.3 landscape).
+    pub fn xeon16() -> Self {
+        Self {
+            host: CpuModel::r740(),
+            cores: 16.0,
+            efficiency: 0.62,
+            mem_bw: 40.0e9,
+            fork_join_s: 30.0e-6,
+            active_w: 68.0,
+            idle_extra_w: 0.0,
+        }
+    }
+}
+
+impl Accelerator for ManyCoreModel {
+    fn kind(&self) -> DeviceKind {
+        DeviceKind::ManyCore
+    }
+
+    fn supports(&self, _work: &NestWork) -> Result<(), String> {
+        Ok(())
+    }
+
+    fn estimate(&self, w: &NestWork, _xfer: TransferMode) -> KernelEstimate {
+        let parallel = self.cores * self.efficiency;
+        let compute = (w.flops / (self.host.gflops * parallel)).max(w.bytes / self.mem_bw);
+        KernelEstimate {
+            compute_s: compute,
+            transfer_s: 0.0, // shared memory space
+            launch_s: self.fork_join_s * w.entries,
+            dyn_power_w: self.active_w,
+            host_power_w: 0.0, // the many-core *is* the host package
+        }
+    }
+
+    fn prep_latency_s(&self, _work: &NestWork) -> f64 {
+        // OpenMP pragma + recompile.
+        20.0
+    }
+
+    fn idle_w(&self) -> f64 {
+        self.idle_extra_w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::canalyze::OpCensus;
+
+    fn work(flops: f64, bytes: f64, entries: f64) -> NestWork {
+        NestWork {
+            flops,
+            bytes,
+            transfer_bytes: 4.0e6,
+            entries,
+            trips: 1000.0,
+            census: OpCensus::default(),
+        }
+    }
+
+    #[test]
+    fn speedup_is_bounded_by_cores() {
+        let mc = ManyCoreModel::xeon16();
+        let w = work(10.0e9, 1.0e6, 1.0);
+        let host_t = mc.host.nest_time_s(&w);
+        let mc_t = mc.estimate(&w, TransferMode::Batched).total_s();
+        let speedup = host_t / mc_t;
+        assert!(speedup <= 16.0 + 1e-9, "speedup {speedup}");
+        assert!(speedup > 8.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn no_transfer_cost() {
+        let mc = ManyCoreModel::xeon16();
+        let e = mc.estimate(&work(1.0e9, 1.0e6, 5.0), TransferMode::PerEntry);
+        assert_eq!(e.transfer_s, 0.0);
+    }
+
+    #[test]
+    fn fork_join_scales_with_entries() {
+        let mc = ManyCoreModel::xeon16();
+        let a = mc.estimate(&work(1.0e9, 1.0e6, 1.0), TransferMode::Batched);
+        let b = mc.estimate(&work(1.0e9, 1.0e6, 1000.0), TransferMode::Batched);
+        assert!(b.launch_s > a.launch_s * 100.0);
+    }
+
+    #[test]
+    fn memory_bound_nests_see_bandwidth_ceiling() {
+        let mc = ManyCoreModel::xeon16();
+        let w = work(1.0e6, 80.0e9, 1.0);
+        let t = mc.estimate(&w, TransferMode::Batched).compute_s;
+        assert!((t - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,21 @@
+//! Hardware models of the verification environment's migration
+//! destinations (Fig. 4 testbed substitute): host CPU, many-core CPU, GPU
+//! and FPGA, plus the FPGA resource/synthesis models used by the paper's
+//! precompile narrowing. See DESIGN.md §2 for the substitution rationale
+//! and §6 for calibration.
+
+pub mod cpu;
+pub mod fpga;
+pub mod gpu;
+pub mod manycore;
+pub mod resources;
+pub mod synth;
+pub mod traits;
+
+pub use cpu::CpuModel;
+pub use fpga::FpgaModel;
+pub use gpu::GpuModel;
+pub use manycore::ManyCoreModel;
+pub use resources::{estimate_lane, FpgaResources, OpCosts};
+pub use synth::{SynthEstimate, SynthModel};
+pub use traits::{Accelerator, DeviceKind, KernelEstimate, NestWork, TransferMode};

@@ -1,0 +1,211 @@
+//! FPGA resource accounting — Flip-Flops, Lookup Tables, DSP blocks and
+//! on-chip RAM. The paper's §3.2 narrows FPGA candidates by *precompiling*
+//! OpenCL and reading the reported resource usage ("the resources such as
+//! Flip Flop and Lookup Table to be created are known in the middle of
+//! compilation"); [`estimate_lane`] is the analytic stand-in for that
+//! mid-compile report.
+
+use crate::canalyze::OpCensus;
+
+/// Resource vector of an FPGA design (or budget of a part).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct FpgaResources {
+    /// Adaptive logic lookup tables.
+    pub luts: f64,
+    /// Flip-flops / registers.
+    pub ffs: f64,
+    /// DSP blocks (hard multipliers).
+    pub dsps: f64,
+    /// On-chip RAM, kilobytes.
+    pub ram_kb: f64,
+}
+
+impl FpgaResources {
+    /// Intel Arria 10 GX 1150 (the paper's Intel PAC card), minus the
+    /// board-support-package share the Acceleration Stack reserves.
+    pub fn arria10_gx() -> Self {
+        Self {
+            luts: 1_150_000.0 * 0.75,
+            ffs: 1_708_800.0 * 0.75,
+            dsps: 1_518.0 * 0.9,
+            ram_kb: 53_000.0 * 0.8,
+        }
+    }
+
+    /// Scale by a replication factor (pipeline lanes).
+    pub fn scale(&self, k: f64) -> Self {
+        Self {
+            luts: self.luts * k,
+            ffs: self.ffs * k,
+            dsps: self.dsps * k,
+            ram_kb: self.ram_kb * k,
+        }
+    }
+
+    /// Component-wise addition.
+    pub fn plus(&self, other: &Self) -> Self {
+        Self {
+            luts: self.luts + other.luts,
+            ffs: self.ffs + other.ffs,
+            dsps: self.dsps + other.dsps,
+            ram_kb: self.ram_kb + other.ram_kb,
+        }
+    }
+
+    /// Does `self` fit within `budget` at the given utilization cap
+    /// (routable designs stay below ~85% utilization)?
+    pub fn fits_in(&self, budget: &Self, util_cap: f64) -> bool {
+        self.luts <= budget.luts * util_cap
+            && self.ffs <= budget.ffs * util_cap
+            && self.dsps <= budget.dsps * util_cap
+            && self.ram_kb <= budget.ram_kb * util_cap
+    }
+
+    /// Highest utilization fraction across resource classes.
+    pub fn utilization_vs(&self, budget: &Self) -> f64 {
+        [
+            self.luts / budget.luts.max(1.0),
+            self.ffs / budget.ffs.max(1.0),
+            self.dsps / budget.dsps.max(1.0),
+            self.ram_kb / budget.ram_kb.max(1.0),
+        ]
+        .into_iter()
+        .fold(0.0, f64::max)
+    }
+}
+
+/// Per-operation resource cost table for one fully-pipelined lane (II=1).
+/// Numbers are representative of single-precision OpenCL-HLS results on
+/// Arria-10-class parts: an fp add ≈ 700 LUTs, an fp mul ≈ 1 DSP + glue, a
+/// divide ≈ 4 DSPs + heavy logic, sin/cos/sqrt cores ≈ 8 DSPs and several
+/// thousand LUTs.
+#[derive(Debug, Clone, Copy)]
+pub struct OpCosts {
+    /// LUTs per float add/sub.
+    pub lut_per_fadd: f64,
+    /// LUTs of glue per float multiply.
+    pub lut_per_fmul: f64,
+    /// DSPs per float multiply.
+    pub dsp_per_fmul: f64,
+    /// DSPs per float divide.
+    pub dsp_per_fdiv: f64,
+    /// LUTs per float divide.
+    pub lut_per_fdiv: f64,
+    /// DSPs per special-function core.
+    pub dsp_per_special: f64,
+    /// LUTs per special-function core.
+    pub lut_per_special: f64,
+    /// LUTs per integer op.
+    pub lut_per_iop: f64,
+    /// LUTs per memory port (load/store unit).
+    pub lut_per_memport: f64,
+    /// RAM kB per memory port (burst buffers).
+    pub ram_kb_per_memport: f64,
+    /// Fixed control overhead per kernel, LUTs.
+    pub lut_fixed: f64,
+    /// FF-to-LUT ratio of pipelined designs.
+    pub ff_per_lut: f64,
+}
+
+impl Default for OpCosts {
+    fn default() -> Self {
+        Self {
+            lut_per_fadd: 700.0,
+            lut_per_fmul: 150.0,
+            dsp_per_fmul: 1.0,
+            dsp_per_fdiv: 4.0,
+            lut_per_fdiv: 3000.0,
+            dsp_per_special: 8.0,
+            lut_per_special: 4500.0,
+            lut_per_iop: 60.0,
+            lut_per_memport: 900.0,
+            ram_kb_per_memport: 18.0,
+            lut_fixed: 12_000.0,
+            ff_per_lut: 1.6,
+        }
+    }
+}
+
+/// Estimate the resources of ONE pipeline lane implementing the loop body
+/// described by `census` (the mid-compile report of the paper's §3.2).
+pub fn estimate_lane(census: &OpCensus, costs: &OpCosts) -> FpgaResources {
+    let luts = costs.lut_fixed
+        + census.fadd as f64 * costs.lut_per_fadd
+        + census.fmul as f64 * costs.lut_per_fmul
+        + census.fdiv as f64 * costs.lut_per_fdiv
+        + census.fspecial as f64 * costs.lut_per_special
+        + census.iops as f64 * costs.lut_per_iop
+        + (census.loads + census.stores) as f64 * costs.lut_per_memport;
+    let dsps = census.fmul as f64 * costs.dsp_per_fmul
+        + census.fdiv as f64 * costs.dsp_per_fdiv
+        + census.fspecial as f64 * costs.dsp_per_special;
+    let ram = (census.loads + census.stores) as f64 * costs.ram_kb_per_memport;
+    FpgaResources {
+        luts,
+        ffs: luts * costs.ff_per_lut,
+        dsps,
+        ram_kb: ram,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn census(fadd: u64, fmul: u64, fspecial: u64, mem: u64) -> OpCensus {
+        OpCensus {
+            fadd,
+            fmul,
+            fdiv: 0,
+            fspecial,
+            iops: 2,
+            loads: mem,
+            stores: 1,
+            calls: 0,
+        }
+    }
+
+    #[test]
+    fn bigger_bodies_cost_more() {
+        let costs = OpCosts::default();
+        let small = estimate_lane(&census(1, 1, 0, 1), &costs);
+        let big = estimate_lane(&census(8, 8, 4, 6), &costs);
+        assert!(big.luts > small.luts);
+        assert!(big.dsps > small.dsps);
+        assert!(big.ram_kb > small.ram_kb);
+    }
+
+    #[test]
+    fn specials_dominate_dsp_usage() {
+        let costs = OpCosts::default();
+        let r = estimate_lane(&census(2, 3, 2, 2), &costs);
+        assert_eq!(r.dsps, 3.0 + 16.0);
+    }
+
+    #[test]
+    fn fits_in_respects_cap() {
+        let budget = FpgaResources::arria10_gx();
+        let half = budget.scale(0.5);
+        let near = budget.scale(0.86);
+        assert!(half.fits_in(&budget, 0.85));
+        assert!(!near.fits_in(&budget, 0.85));
+    }
+
+    #[test]
+    fn utilization_reports_max_class() {
+        let budget = FpgaResources::arria10_gx();
+        let mut r = budget.scale(0.1);
+        r.dsps = budget.dsps * 0.7;
+        assert!((r.utilization_vs(&budget) - 0.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mriq_like_body_fits_arria10() {
+        // computeQ inner body: ~5 adds, ~6 muls, 2 specials, 4 mem ports.
+        let costs = OpCosts::default();
+        let lane = estimate_lane(&census(5, 6, 2, 4), &costs);
+        assert!(lane.fits_in(&FpgaResources::arria10_gx(), 0.85));
+        // And several replicated lanes still fit.
+        assert!(lane.scale(4.0).fits_in(&FpgaResources::arria10_gx(), 0.85));
+    }
+}

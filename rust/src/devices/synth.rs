@@ -1,0 +1,143 @@
+//! FPGA synthesis model: lane replication, fit checking and compile-time
+//! estimation — the paper's §3.2 "precompile" narrowing stage plus the
+//! "several hours or more to compile OpenCL" cost that motivates narrowing
+//! instead of GA search for FPGAs.
+
+use super::resources::{estimate_lane, FpgaResources, OpCosts};
+use crate::canalyze::OpCensus;
+
+/// Synthesis outcome for a candidate loop body.
+#[derive(Debug, Clone, Copy)]
+pub struct SynthEstimate {
+    /// Replication factor chosen (pipeline lanes running in parallel).
+    pub lanes: u32,
+    /// Resources of the replicated design.
+    pub resources: FpgaResources,
+    /// Peak utilization fraction vs the part's budget.
+    pub utilization: f64,
+    /// Whether the design fits (≤ util cap) at ≥ 1 lane.
+    pub fits: bool,
+    /// Full-compile wall time estimate, seconds (hours-scale).
+    pub compile_s: f64,
+    /// Precompile (resource-report) wall time, seconds (minutes-scale).
+    pub precompile_s: f64,
+}
+
+/// Synthesis model configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SynthModel {
+    /// Part budget.
+    pub budget: FpgaResources,
+    /// Per-op cost table.
+    pub costs: OpCosts,
+    /// Routable-utilization cap.
+    pub util_cap: f64,
+    /// Max lanes the memory system can feed.
+    pub max_lanes: u32,
+    /// Base full-compile time, seconds (place & route floor).
+    pub compile_base_s: f64,
+    /// Additional compile seconds per utilization point (congestion).
+    pub compile_per_util_s: f64,
+    /// Precompile (HLS front-end resource report) time, seconds.
+    pub precompile_s: f64,
+}
+
+impl SynthModel {
+    /// Intel PAC / Acceleration Stack 1.2 defaults: ~2 h base compiles
+    /// growing toward 4–5 h for congested designs, ~3 min precompiles.
+    pub fn arria10() -> Self {
+        Self {
+            budget: FpgaResources::arria10_gx(),
+            costs: OpCosts::default(),
+            util_cap: 0.85,
+            max_lanes: 4,
+            compile_base_s: 2.0 * 3600.0,
+            compile_per_util_s: 3.0 * 3600.0,
+            precompile_s: 180.0,
+        }
+    }
+
+    /// Estimate synthesis of a loop body: replicate lanes while the design
+    /// fits, then report resources and compile times.
+    pub fn synthesize(&self, census: &OpCensus) -> SynthEstimate {
+        let lane = estimate_lane(census, &self.costs);
+        let mut lanes = 0u32;
+        let mut chosen = FpgaResources::default();
+        for k in 1..=self.max_lanes {
+            let r = lane.scale(k as f64);
+            if r.fits_in(&self.budget, self.util_cap) {
+                lanes = k;
+                chosen = r;
+            } else {
+                break;
+            }
+        }
+        let fits = lanes >= 1;
+        let utilization = if fits {
+            chosen.utilization_vs(&self.budget)
+        } else {
+            lane.utilization_vs(&self.budget)
+        };
+        SynthEstimate {
+            lanes: lanes.max(1),
+            resources: if fits { chosen } else { lane },
+            utilization,
+            fits,
+            compile_s: self.compile_base_s + self.compile_per_util_s * utilization,
+            precompile_s: self.precompile_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn census(fadd: u64, fmul: u64, fspecial: u64, mem: u64) -> OpCensus {
+        OpCensus {
+            fadd,
+            fmul,
+            fdiv: 0,
+            fspecial,
+            iops: 4,
+            loads: mem,
+            stores: 1,
+            calls: 0,
+        }
+    }
+
+    #[test]
+    fn small_body_replicates_to_max_lanes() {
+        let m = SynthModel::arria10();
+        let e = m.synthesize(&census(4, 5, 2, 4));
+        assert!(e.fits);
+        assert_eq!(e.lanes, m.max_lanes);
+    }
+
+    #[test]
+    fn huge_body_does_not_fit() {
+        let m = SynthModel::arria10();
+        // 200 special-function cores blow the DSP budget even at 1 lane.
+        let e = m.synthesize(&census(50, 300, 200, 40));
+        assert!(!e.fits);
+        assert!(e.utilization > m.util_cap);
+    }
+
+    #[test]
+    fn compile_time_is_hours_scale_and_grows_with_congestion() {
+        let m = SynthModel::arria10();
+        let light = m.synthesize(&census(2, 2, 0, 2));
+        let heavy = m.synthesize(&census(40, 60, 20, 10));
+        assert!(light.compile_s >= 2.0 * 3600.0);
+        assert!(heavy.compile_s > light.compile_s);
+        assert!(light.precompile_s < 600.0, "precompile is minutes");
+    }
+
+    #[test]
+    fn lanes_monotone_in_body_size() {
+        let m = SynthModel::arria10();
+        let small = m.synthesize(&census(2, 2, 1, 2)).lanes;
+        let big = m.synthesize(&census(60, 80, 40, 20)).lanes;
+        assert!(small >= big);
+    }
+}

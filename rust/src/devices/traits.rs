@@ -1,0 +1,127 @@
+//! Device-model abstractions for the verification environment.
+//!
+//! The paper measures candidate offload patterns on real hardware (Intel
+//! PAC Arria10 FPGA, NVIDIA GPU, many-core CPU). This repo has none of
+//! those, so each migration destination is an analytic model that maps a
+//! loop nest's *work summary* to a kernel-time/transfer-time/power
+//! estimate. The models are calibrated so MRI-Q reproduces the paper's
+//! Fig. 5 decision landscape (see DESIGN.md §2 and §6).
+
+use crate::canalyze::OpCensus;
+
+/// Offload destinations (the paper's §3.3 mixed environment).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    /// Small-core host CPU (the baseline, not an offload target).
+    Cpu,
+    /// Many-core CPU (OpenMP target; same memory space).
+    ManyCore,
+    /// GPU (CUDA/OpenACC target; PCIe transfers).
+    Gpu,
+    /// FPGA (OpenCL target; PCIe transfers, hours-long synthesis).
+    Fpga,
+}
+
+impl DeviceKind {
+    /// Human-readable name used in reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            DeviceKind::Cpu => "cpu",
+            DeviceKind::ManyCore => "many-core-cpu",
+            DeviceKind::Gpu => "gpu",
+            DeviceKind::Fpga => "fpga",
+        }
+    }
+}
+
+impl std::fmt::Display for DeviceKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Full-problem-scale work summary of one offloadable loop nest, computed
+/// by [`crate::verifier::AppModel`] from the analyzer's profile.
+#[derive(Debug, Clone, Copy)]
+pub struct NestWork {
+    /// Weighted floating-point operations (divides ×4, specials ×8).
+    pub flops: f64,
+    /// Memory traffic in bytes.
+    pub bytes: f64,
+    /// CPU↔device payload per transfer event, bytes.
+    pub transfer_bytes: f64,
+    /// Kernel launches per application run (loop-entry count).
+    pub entries: f64,
+    /// Loop-nest iterations per application run (innermost trip total).
+    pub trips: f64,
+    /// Static per-iteration census of the innermost hot body (FPGA
+    /// resource estimation).
+    pub census: OpCensus,
+}
+
+impl NestWork {
+    /// Arithmetic intensity (FLOP/byte).
+    pub fn intensity(&self) -> f64 {
+        self.flops / self.bytes.max(1.0)
+    }
+}
+
+/// How CPU↔device variable transfers are scheduled — the paper's §3.1
+/// transfer optimization: naive directive insertion transfers at every
+/// kernel entry; the proposed method batches variables at the outermost
+/// level so payloads cross PCIe once per run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransferMode {
+    /// Transfer per loop entry (what a naive OpenACC annotation does).
+    PerEntry,
+    /// Consolidated: variables batched at the top level, one round trip.
+    #[default]
+    Batched,
+}
+
+/// Per-nest execution estimate on a device.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KernelEstimate {
+    /// Pure device compute time, seconds.
+    pub compute_s: f64,
+    /// CPU↔device transfer time, seconds.
+    pub transfer_s: f64,
+    /// Launch/dispatch overhead, seconds.
+    pub launch_s: f64,
+    /// Extra device power draw while the kernel runs, Watts.
+    pub dyn_power_w: f64,
+    /// Extra *host* draw during the device phase (driver/polling), Watts.
+    pub host_power_w: f64,
+}
+
+impl KernelEstimate {
+    /// Total wall time of the offloaded nest.
+    pub fn total_s(&self) -> f64 {
+        self.compute_s + self.transfer_s + self.launch_s
+    }
+}
+
+/// A migration destination the verification environment can try.
+pub trait Accelerator: Send + Sync {
+    /// Which destination this is.
+    fn kind(&self) -> DeviceKind;
+
+    /// Can this nest run on the device at all? FPGA rejects nests whose
+    /// pipeline does not fit the resource budget (the paper's precompile
+    /// narrowing); other devices accept everything.
+    fn supports(&self, work: &NestWork) -> Result<(), String>;
+
+    /// Estimate execution of the nest.
+    fn estimate(&self, work: &NestWork, xfer: TransferMode) -> KernelEstimate;
+
+    /// One-time preparation latency charged per *measured pattern* in the
+    /// verification environment (FPGA: OpenCL synthesis, hours; GPU:
+    /// OpenACC compile, seconds). This is search cost, not run cost.
+    fn prep_latency_s(&self, work: &NestWork) -> f64 {
+        let _ = work;
+        0.0
+    }
+
+    /// Device idle draw added to the server baseline while installed.
+    fn idle_w(&self) -> f64;
+}

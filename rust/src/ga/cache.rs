@@ -1,0 +1,109 @@
+//! Evaluation cache: measurement trials in the verification environment
+//! are expensive (compile + run + power capture), so each distinct pattern
+//! is measured once — re-visited genomes reuse the stored value. The cache
+//! also doubles as the search log (every pattern ever measured).
+
+use super::genome::Genome;
+use std::collections::HashMap;
+
+/// Pattern → fitness cache with hit statistics.
+#[derive(Debug, Default)]
+pub struct EvalCache {
+    map: HashMap<Vec<bool>, f64>,
+    hits: u64,
+    misses: u64,
+}
+
+impl EvalCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Is the pattern already measured?
+    pub fn contains(&self, g: &Genome) -> bool {
+        self.map.contains_key(&g.bits)
+    }
+
+    /// Store a measured value directly (batch evaluation path). Counts as
+    /// a miss — a real measurement happened.
+    pub fn insert(&mut self, g: &Genome, value: f64) {
+        self.misses += 1;
+        self.map.insert(g.bits.clone(), value);
+    }
+
+    /// Look up or compute-and-store the fitness of `g`.
+    pub fn get_or_eval(&mut self, g: &Genome, eval: impl FnOnce(&Genome) -> f64) -> f64 {
+        if let Some(&v) = self.map.get(&g.bits) {
+            self.hits += 1;
+            return v;
+        }
+        self.misses += 1;
+        let v = eval(g);
+        self.map.insert(g.bits.clone(), v);
+        v
+    }
+
+    /// Number of distinct patterns measured.
+    pub fn distinct(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Cache hits (re-visited patterns — measurements *saved*).
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Cache misses (actual measurements run).
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// All measured `(pattern, value)` pairs (the search log).
+    pub fn entries(&self) -> impl Iterator<Item = (Genome, f64)> + '_ {
+        self.map.iter().map(|(bits, &v)| {
+            (
+                Genome {
+                    bits: bits.clone(),
+                },
+                v,
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn second_lookup_hits() {
+        let mut c = EvalCache::new();
+        let g = Genome::zeros(4);
+        let mut calls = 0;
+        let v1 = c.get_or_eval(&g, |_| {
+            calls += 1;
+            0.7
+        });
+        let v2 = c.get_or_eval(&g, |_| {
+            calls += 1;
+            0.9 // would differ — must not be called
+        });
+        assert_eq!(v1, 0.7);
+        assert_eq!(v2, 0.7);
+        assert_eq!(calls, 1);
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 1);
+        assert_eq!(c.distinct(), 1);
+    }
+
+    #[test]
+    fn distinct_patterns_both_evaluated() {
+        let mut c = EvalCache::new();
+        c.get_or_eval(&Genome::zeros(3), |_| 0.1);
+        c.get_or_eval(&Genome::single(3, 1), |_| 0.2);
+        assert_eq!(c.distinct(), 2);
+        let values: Vec<f64> = c.entries().map(|(_, v)| v).collect();
+        assert_eq!(values.len(), 2);
+    }
+}

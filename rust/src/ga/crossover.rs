@@ -1,0 +1,116 @@
+//! Crossover operators over bit genomes.
+
+use super::genome::Genome;
+use crate::util::prng::Pcg32;
+
+/// Crossover strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Crossover {
+    /// Single cut point.
+    OnePoint,
+    /// Two cut points (segment swap).
+    TwoPoint,
+    /// Per-bit coin flip.
+    Uniform,
+}
+
+impl Crossover {
+    /// Produce two children from two parents.
+    pub fn apply(&self, a: &Genome, b: &Genome, rng: &mut Pcg32) -> (Genome, Genome) {
+        assert_eq!(a.len(), b.len());
+        let n = a.len();
+        if n < 2 {
+            return (a.clone(), b.clone());
+        }
+        let mut c = a.bits.clone();
+        let mut d = b.bits.clone();
+        match *self {
+            Crossover::OnePoint => {
+                let cut = 1 + rng.below_usize(n - 1);
+                for i in cut..n {
+                    let t = c[i];
+                    c[i] = d[i];
+                    d[i] = t;
+                }
+            }
+            Crossover::TwoPoint => {
+                let mut p = 1 + rng.below_usize(n - 1);
+                let mut q = 1 + rng.below_usize(n - 1);
+                if p > q {
+                    std::mem::swap(&mut p, &mut q);
+                }
+                for i in p..q {
+                    let t = c[i];
+                    c[i] = d[i];
+                    d[i] = t;
+                }
+            }
+            Crossover::Uniform => {
+                for i in 0..n {
+                    if rng.chance(0.5) {
+                        let t = c[i];
+                        c[i] = d[i];
+                        d[i] = t;
+                    }
+                }
+            }
+        }
+        (Genome { bits: c }, Genome { bits: d })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parents(n: usize) -> (Genome, Genome) {
+        (
+            Genome {
+                bits: vec![true; n],
+            },
+            Genome {
+                bits: vec![false; n],
+            },
+        )
+    }
+
+    /// Crossover must conserve the multiset of bits at each position.
+    fn conserves(a: &Genome, b: &Genome, c: &Genome, d: &Genome) -> bool {
+        (0..a.len()).all(|i| {
+            let before = (a.bits[i] as u8) + (b.bits[i] as u8);
+            let after = (c.bits[i] as u8) + (d.bits[i] as u8);
+            before == after
+        })
+    }
+
+    #[test]
+    fn all_operators_conserve_bits() {
+        let mut rng = Pcg32::seed_from_u64(1);
+        for op in [Crossover::OnePoint, Crossover::TwoPoint, Crossover::Uniform] {
+            for _ in 0..100 {
+                let a = Genome::random(16, 0.4, &mut rng);
+                let b = Genome::random(16, 0.6, &mut rng);
+                let (c, d) = op.apply(&a, &b, &mut rng);
+                assert!(conserves(&a, &b, &c, &d), "{op:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn one_point_creates_mixed_children() {
+        let mut rng = Pcg32::seed_from_u64(2);
+        let (a, b) = parents(16);
+        let (c, _) = Crossover::OnePoint.apply(&a, &b, &mut rng);
+        let ones = c.ones();
+        assert!(ones > 0 && ones < 16, "child should mix: {c}");
+    }
+
+    #[test]
+    fn short_genomes_pass_through() {
+        let mut rng = Pcg32::seed_from_u64(3);
+        let (a, b) = parents(1);
+        let (c, d) = Crossover::TwoPoint.apply(&a, &b, &mut rng);
+        assert_eq!(c, a);
+        assert_eq!(d, b);
+    }
+}

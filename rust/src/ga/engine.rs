@@ -1,0 +1,287 @@
+//! The genetic-algorithm engine of the paper's §3.1 GPU flow: genomes are
+//! offload bit-patterns, fitness is the measured evaluation value
+//! `t^(-1/2)·p^(-1/2)`, and evolution runs generation by generation with
+//! elitism, selection, crossover and mutation. Every distinct pattern is
+//! measured at most once ([`super::cache::EvalCache`]).
+
+use super::cache::EvalCache;
+use super::crossover::Crossover;
+use super::genome::Genome;
+use super::mutate::mutate;
+use super::select::Selection;
+use crate::util::prng::Pcg32;
+
+/// GA hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct GaConfig {
+    /// Population size.
+    pub population: usize,
+    /// Generations to run.
+    pub generations: usize,
+    /// Probability a parent pair is crossed (else cloned).
+    pub crossover_rate: f64,
+    /// Per-bit mutation probability.
+    pub mutation_rate: f64,
+    /// Individuals copied unchanged to the next generation.
+    pub elite: usize,
+    /// Selection operator.
+    pub selection: Selection,
+    /// Crossover operator.
+    pub crossover: Crossover,
+    /// Initial per-bit 1-probability (sparse starts help: most loops
+    /// should stay on the CPU).
+    pub init_ones_p: f64,
+}
+
+impl Default for GaConfig {
+    fn default() -> Self {
+        Self {
+            population: 16,
+            generations: 20,
+            crossover_rate: 0.9,
+            mutation_rate: 0.05,
+            elite: 2,
+            selection: Selection::Roulette,
+            crossover: Crossover::TwoPoint,
+            init_ones_p: 0.25,
+        }
+    }
+}
+
+/// Per-generation statistics (the Fig. 2 bench's convergence series).
+#[derive(Debug, Clone, Copy)]
+pub struct GenStats {
+    /// Generation index (0-based).
+    pub generation: usize,
+    /// Best fitness in the population.
+    pub best: f64,
+    /// Mean fitness.
+    pub mean: f64,
+    /// Distinct patterns measured so far (cumulative search cost).
+    pub measured: usize,
+}
+
+/// GA outcome.
+#[derive(Debug, Clone)]
+pub struct GaResult {
+    /// Best genome ever seen.
+    pub best: Genome,
+    /// Its fitness.
+    pub best_value: f64,
+    /// Convergence history.
+    pub history: Vec<GenStats>,
+    /// Distinct patterns measured (expensive verification trials run).
+    pub measured: usize,
+    /// Cache hits (trials saved by the measure-once rule).
+    pub cache_hits: u64,
+}
+
+/// Run the GA. `eval` maps a genome to its fitness (measured in the
+/// verification environment); it is called exactly once per distinct
+/// pattern.
+pub fn run(
+    len: usize,
+    cfg: &GaConfig,
+    seed: u64,
+    mut eval: impl FnMut(&Genome) -> f64,
+) -> GaResult {
+    run_batched(len, cfg, seed, |genomes| {
+        genomes.iter().map(&mut eval).collect()
+    })
+}
+
+/// Like [`run`], but fitness is requested one *generation batch* at a time:
+/// `eval_batch` receives the distinct not-yet-measured genomes of the
+/// current generation and returns their fitness values in order. This is
+/// the hook the offload flows use to run verification trials concurrently
+/// (the real system drives several verification machines at once).
+pub fn run_batched(
+    len: usize,
+    cfg: &GaConfig,
+    seed: u64,
+    mut eval_batch: impl FnMut(&[Genome]) -> Vec<f64>,
+) -> GaResult {
+    assert!(len > 0, "empty genome");
+    assert!(cfg.population >= 2, "population too small");
+    let mut rng = Pcg32::seed_from_u64(seed);
+    let mut cache = EvalCache::new();
+
+    // Initial population: always include the all-CPU pattern (the safe
+    // baseline the paper compares against) plus random sparse patterns.
+    let mut pop: Vec<Genome> = Vec::with_capacity(cfg.population);
+    pop.push(Genome::zeros(len));
+    while pop.len() < cfg.population {
+        pop.push(Genome::random(len, cfg.init_ones_p, &mut rng));
+    }
+
+    let mut best = pop[0].clone();
+    let mut best_value = f64::NEG_INFINITY;
+    let mut history = Vec::with_capacity(cfg.generations);
+
+    for generation in 0..cfg.generations {
+        // Batch-measure the distinct genomes this generation adds, then
+        // read everything through the cache (measure-once rule).
+        let mut missing: Vec<Genome> = Vec::new();
+        for g in &pop {
+            if !cache.contains(g) && !missing.contains(g) {
+                missing.push(g.clone());
+            }
+        }
+        if !missing.is_empty() {
+            let values = eval_batch(&missing);
+            assert_eq!(values.len(), missing.len(), "eval_batch arity");
+            for (g, v) in missing.iter().zip(values) {
+                cache.insert(g, v);
+            }
+        }
+        let fitness: Vec<f64> = pop
+            .iter()
+            .map(|g| cache.get_or_eval(g, |_| unreachable!("pre-measured")))
+            .collect();
+
+        // Track the global best.
+        for (g, &f) in pop.iter().zip(&fitness) {
+            if f > best_value {
+                best_value = f;
+                best = g.clone();
+            }
+        }
+        let mean = fitness.iter().sum::<f64>() / fitness.len() as f64;
+        history.push(GenStats {
+            generation,
+            best: best_value,
+            mean,
+            measured: cache.distinct(),
+        });
+
+        if generation + 1 == cfg.generations {
+            break;
+        }
+
+        // Elitism: carry the top `elite` individuals.
+        let mut order: Vec<usize> = (0..pop.len()).collect();
+        order.sort_by(|&a, &b| fitness[b].partial_cmp(&fitness[a]).unwrap());
+        let mut next: Vec<Genome> = order
+            .iter()
+            .take(cfg.elite.min(pop.len()))
+            .map(|&i| pop[i].clone())
+            .collect();
+
+        // Offspring.
+        while next.len() < cfg.population {
+            let pa = cfg.selection.pick(&fitness, &mut rng);
+            let pb = cfg.selection.pick(&fitness, &mut rng);
+            let (mut c1, mut c2) = if rng.chance(cfg.crossover_rate) {
+                cfg.crossover.apply(&pop[pa], &pop[pb], &mut rng)
+            } else {
+                (pop[pa].clone(), pop[pb].clone())
+            };
+            mutate(&mut c1, cfg.mutation_rate, &mut rng);
+            mutate(&mut c2, cfg.mutation_rate, &mut rng);
+            next.push(c1);
+            if next.len() < cfg.population {
+                next.push(c2);
+            }
+        }
+        pop = next;
+    }
+
+    GaResult {
+        best,
+        best_value,
+        history,
+        measured: cache.distinct(),
+        cache_hits: cache.hits(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// OneMax: fitness = number of ones — the GA must find all-ones.
+    #[test]
+    fn solves_onemax() {
+        let cfg = GaConfig {
+            population: 24,
+            generations: 40,
+            ..Default::default()
+        };
+        let r = run(16, &cfg, 42, |g| g.ones() as f64);
+        assert_eq!(r.best.ones(), 16, "best {}", r.best);
+        assert_eq!(r.best_value, 16.0);
+    }
+
+    /// Deceptive target: only one specific pattern is good.
+    #[test]
+    fn finds_needle_with_enough_budget() {
+        let target = Genome {
+            bits: vec![true, false, true, true, false, false, true, false],
+        };
+        let t = target.clone();
+        let cfg = GaConfig {
+            population: 30,
+            generations: 60,
+            mutation_rate: 0.08,
+            ..Default::default()
+        };
+        let r = run(8, &cfg, 7, move |g| {
+            let d = g.distance(&t) as f64;
+            (8.0 - d) * (8.0 - d)
+        });
+        assert_eq!(r.best, target);
+    }
+
+    #[test]
+    fn best_is_monotone_nondecreasing() {
+        let cfg = GaConfig::default();
+        let r = run(12, &cfg, 3, |g| g.ones() as f64 * 0.1);
+        for w in r.history.windows(2) {
+            assert!(w[1].best >= w[0].best);
+        }
+    }
+
+    #[test]
+    fn cache_limits_measurements() {
+        let cfg = GaConfig {
+            population: 16,
+            generations: 30,
+            ..Default::default()
+        };
+        let mut calls = 0usize;
+        let r = run(6, &cfg, 11, |g| {
+            calls += 1;
+            g.ones() as f64
+        });
+        // 6-bit space has 64 patterns; eval calls can never exceed that.
+        assert!(calls <= 64, "calls {calls}");
+        assert_eq!(calls, r.measured);
+        assert!(r.cache_hits > 0, "revisits must hit the cache");
+    }
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let cfg = GaConfig::default();
+        let a = run(10, &cfg, 5, |g| g.ones() as f64);
+        let b = run(10, &cfg, 5, |g| g.ones() as f64);
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.measured, b.measured);
+    }
+
+    #[test]
+    fn all_cpu_baseline_always_measured() {
+        let cfg = GaConfig {
+            population: 4,
+            generations: 2,
+            ..Default::default()
+        };
+        let mut saw_zero = false;
+        run(5, &cfg, 9, |g| {
+            if g.ones() == 0 {
+                saw_zero = true;
+            }
+            1.0
+        });
+        assert!(saw_zero);
+    }
+}

@@ -1,0 +1,122 @@
+//! The paper's evaluation value ("goodness of fit"):
+//!
+//! > `(Processing time)^(-1/2) * (Power consumption)^(-1/2)` is set to
+//! > increase goodness of fit value for short processing time and low
+//! > power consumption. (§3.1, §3.3, §4.1b)
+//!
+//! Exponents are configurable because §3.3 notes the formula must be set
+//! differently per business operator (power is only part of operation
+//! cost); `time_only()` gives the previous papers' time-only fitness used
+//! as the ablation baseline in the Fig. 2 bench.
+
+/// Evaluation-value specification.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FitnessSpec {
+    /// Exponent `a` in `t^(-a)`.
+    pub time_exp: f64,
+    /// Exponent `b` in `p^(-b)`.
+    pub power_exp: f64,
+    /// Verification-trial timeout, seconds (paper: 3 minutes).
+    pub timeout_s: f64,
+    /// Time substituted when a trial times out (paper: 1,000 s).
+    pub timeout_time_s: f64,
+}
+
+impl Default for FitnessSpec {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+impl FitnessSpec {
+    /// The paper's setting: `t^(-1/2) · p^(-1/2)`, 3-minute timeout → 1000 s.
+    pub fn paper() -> Self {
+        Self {
+            time_exp: 0.5,
+            power_exp: 0.5,
+            timeout_s: 180.0,
+            timeout_time_s: 1000.0,
+        }
+    }
+
+    /// Time-only fitness (the previous papers' objective; ablation arm).
+    pub fn time_only() -> Self {
+        Self {
+            power_exp: 0.0,
+            ..Self::paper()
+        }
+    }
+
+    /// Power-weighted variant for operators whose electricity share of
+    /// operation cost is high (§3.3 discussion).
+    pub fn power_heavy() -> Self {
+        Self {
+            time_exp: 0.25,
+            power_exp: 0.75,
+            ..Self::paper()
+        }
+    }
+
+    /// Evaluation value of a measurement. Larger is better. `time_s` is
+    /// replaced by [`FitnessSpec::timeout_time_s`] when `timed_out`.
+    pub fn value(&self, time_s: f64, mean_power_w: f64, timed_out: bool) -> f64 {
+        let t = if timed_out {
+            self.timeout_time_s
+        } else {
+            time_s.max(1e-9)
+        };
+        let p = mean_power_w.max(1e-9);
+        t.powf(-self.time_exp) * p.powf(-self.power_exp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_values_for_fig5() {
+        // CPU-only: 14 s @ 121 W ; FPGA: 2 s @ 111 W — the offloaded
+        // pattern must score higher.
+        let f = FitnessSpec::paper();
+        let cpu = f.value(14.0, 121.0, false);
+        let fpga = f.value(2.0, 111.0, false);
+        assert!(fpga > cpu);
+        // Exact values: (14*121)^-0.5 and (2*111)^-0.5.
+        assert!((cpu - (14.0f64 * 121.0).powf(-0.5)).abs() < 1e-12);
+        assert!((fpga - (2.0f64 * 111.0).powf(-0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shorter_time_and_lower_power_both_help() {
+        let f = FitnessSpec::paper();
+        let base = f.value(10.0, 120.0, false);
+        assert!(f.value(5.0, 120.0, false) > base);
+        assert!(f.value(10.0, 60.0, false) > base);
+    }
+
+    #[test]
+    fn timeout_substitutes_1000s() {
+        let f = FitnessSpec::paper();
+        let timed = f.value(150.0, 120.0, true);
+        assert!((timed - (1000.0f64 * 120.0).powf(-0.5)).abs() < 1e-12);
+        // A timed-out 150 s trial scores worse than a clean 900 s one.
+        assert!(timed < f.value(900.0, 120.0, false));
+    }
+
+    #[test]
+    fn time_only_ignores_power() {
+        let f = FitnessSpec::time_only();
+        assert_eq!(f.value(4.0, 50.0, false), f.value(4.0, 500.0, false));
+    }
+
+    #[test]
+    fn power_heavy_prefers_low_power_trade() {
+        // 10% slower but 30% lower power: power-heavy must prefer it,
+        // while time-only must not.
+        let ph = FitnessSpec::power_heavy();
+        let to = FitnessSpec::time_only();
+        assert!(ph.value(11.0, 84.0, false) > ph.value(10.0, 120.0, false));
+        assert!(to.value(11.0, 84.0, false) < to.value(10.0, 120.0, false));
+    }
+}

@@ -1,0 +1,104 @@
+//! GA genome: one bit per parallelizable loop statement — 1 = offload to
+//! the device, 0 = keep on the CPU (§3.1: "it sets 1 for GPU execution and
+//! 0 for CPU execution; the value is set and geneticized").
+
+use crate::util::prng::Pcg32;
+
+/// A candidate offload pattern as a bit string.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Genome {
+    /// Gene per candidate loop (index = position in the candidate list).
+    pub bits: Vec<bool>,
+}
+
+impl Genome {
+    /// All-CPU pattern.
+    pub fn zeros(len: usize) -> Self {
+        Self {
+            bits: vec![false; len],
+        }
+    }
+
+    /// Single-loop pattern.
+    pub fn single(len: usize, idx: usize) -> Self {
+        let mut g = Self::zeros(len);
+        g.bits[idx] = true;
+        g
+    }
+
+    /// Uniform random pattern with per-bit probability `p`.
+    pub fn random(len: usize, p: f64, rng: &mut Pcg32) -> Self {
+        Self {
+            bits: (0..len).map(|_| rng.chance(p)).collect(),
+        }
+    }
+
+    /// Number of offloaded loops.
+    pub fn ones(&self) -> usize {
+        self.bits.iter().filter(|&&b| b).count()
+    }
+
+    /// Length of the genome.
+    pub fn len(&self) -> usize {
+        self.bits.len()
+    }
+
+    /// Is the genome empty?
+    pub fn is_empty(&self) -> bool {
+        self.bits.is_empty()
+    }
+
+    /// Hamming distance to another genome.
+    pub fn distance(&self, other: &Genome) -> usize {
+        assert_eq!(self.len(), other.len());
+        self.bits
+            .iter()
+            .zip(&other.bits)
+            .filter(|(a, b)| a != b)
+            .count()
+    }
+}
+
+impl std::fmt::Display for Genome {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for &b in &self.bits {
+            write!(f, "{}", if b { '1' } else { '0' })?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors() {
+        assert_eq!(Genome::zeros(4).to_string(), "0000");
+        assert_eq!(Genome::single(4, 2).to_string(), "0010");
+        assert_eq!(Genome::single(4, 2).ones(), 1);
+    }
+
+    #[test]
+    fn random_respects_probability() {
+        let mut rng = Pcg32::seed_from_u64(1);
+        let mut total = 0;
+        for _ in 0..200 {
+            total += Genome::random(16, 0.25, &mut rng).ones();
+        }
+        let frac = total as f64 / (200.0 * 16.0);
+        assert!((frac - 0.25).abs() < 0.05, "frac {frac}");
+    }
+
+    #[test]
+    fn distance_counts_differing_bits() {
+        let a = Genome {
+            bits: vec![true, false, true, false],
+        };
+        let b = Genome {
+            bits: vec![true, true, false, false],
+        };
+        assert_eq!(a.distance(&b), 2);
+        assert_eq!(a.distance(&a), 0);
+    }
+}

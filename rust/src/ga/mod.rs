@@ -1,0 +1,21 @@
+//! Evolutionary-computation engine for the paper's §3.1 automatic GPU
+//! offload: bit-genome = offload pattern, fitness = the measured
+//! power-aware evaluation value, with roulette/tournament selection,
+//! one/two-point/uniform crossover, bit-flip mutation, elitism and a
+//! measure-once evaluation cache.
+
+pub mod cache;
+pub mod crossover;
+pub mod engine;
+pub mod fitness;
+pub mod genome;
+pub mod mutate;
+pub mod select;
+
+pub use cache::EvalCache;
+pub use crossover::Crossover;
+pub use engine::{run, run_batched, GaConfig, GaResult, GenStats};
+pub use fitness::FitnessSpec;
+pub use genome::Genome;
+pub use mutate::mutate;
+pub use select::Selection;

@@ -1,0 +1,48 @@
+//! Mutation operator: per-bit flip.
+
+use super::genome::Genome;
+use crate::util::prng::Pcg32;
+
+/// Flip each bit independently with probability `rate`.
+pub fn mutate(g: &mut Genome, rate: f64, rng: &mut Pcg32) {
+    for b in &mut g.bits {
+        if rng.chance(rate) {
+            *b = !*b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_rate_is_identity() {
+        let mut rng = Pcg32::seed_from_u64(1);
+        let mut g = Genome::random(32, 0.5, &mut rng);
+        let before = g.clone();
+        mutate(&mut g, 0.0, &mut rng);
+        assert_eq!(g, before);
+    }
+
+    #[test]
+    fn one_rate_flips_everything() {
+        let mut rng = Pcg32::seed_from_u64(2);
+        let mut g = Genome::zeros(16);
+        mutate(&mut g, 1.0, &mut rng);
+        assert_eq!(g.ones(), 16);
+    }
+
+    #[test]
+    fn expected_flip_count_matches_rate() {
+        let mut rng = Pcg32::seed_from_u64(3);
+        let mut flips = 0usize;
+        for _ in 0..500 {
+            let mut g = Genome::zeros(20);
+            mutate(&mut g, 0.1, &mut rng);
+            flips += g.ones();
+        }
+        let frac = flips as f64 / (500.0 * 20.0);
+        assert!((frac - 0.1).abs() < 0.02, "frac {frac}");
+    }
+}

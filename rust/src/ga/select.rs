@@ -1,0 +1,95 @@
+//! Parent selection operators.
+
+use crate::util::prng::Pcg32;
+
+/// Selection strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Selection {
+    /// Fitness-proportional (roulette-wheel) selection — what (33) used;
+    /// degenerates gracefully when all fitnesses are equal.
+    Roulette,
+    /// Tournament of size `k` (more selection pressure, scale-free).
+    Tournament(usize),
+}
+
+impl Selection {
+    /// Pick one parent index given the population fitness values.
+    pub fn pick(&self, fitness: &[f64], rng: &mut Pcg32) -> usize {
+        assert!(!fitness.is_empty());
+        match *self {
+            Selection::Roulette => {
+                let total: f64 = fitness.iter().map(|f| f.max(0.0)).sum();
+                if total <= 0.0 {
+                    return rng.below_usize(fitness.len());
+                }
+                let mut target = rng.next_f64() * total;
+                for (i, f) in fitness.iter().enumerate() {
+                    target -= f.max(0.0);
+                    if target <= 0.0 {
+                        return i;
+                    }
+                }
+                fitness.len() - 1
+            }
+            Selection::Tournament(k) => {
+                let k = k.max(1);
+                let mut best = rng.below_usize(fitness.len());
+                for _ in 1..k {
+                    let c = rng.below_usize(fitness.len());
+                    if fitness[c] > fitness[best] {
+                        best = c;
+                    }
+                }
+                best
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roulette_prefers_fitter() {
+        let mut rng = Pcg32::seed_from_u64(1);
+        let fitness = [1.0, 9.0];
+        let n = 10_000;
+        let hits1 = (0..n)
+            .filter(|_| Selection::Roulette.pick(&fitness, &mut rng) == 1)
+            .count();
+        let frac = hits1 as f64 / n as f64;
+        assert!((frac - 0.9).abs() < 0.03, "frac {frac}");
+    }
+
+    #[test]
+    fn tournament_prefers_fitter() {
+        let mut rng = Pcg32::seed_from_u64(2);
+        let fitness = [0.1, 0.2, 0.9, 0.3];
+        let hits = (0..2_000)
+            .filter(|_| Selection::Tournament(3).pick(&fitness, &mut rng) == 2)
+            .count();
+        assert!(hits > 1_000, "hits {hits}");
+    }
+
+    #[test]
+    fn degenerate_all_zero_fitness_is_uniform() {
+        let mut rng = Pcg32::seed_from_u64(3);
+        let fitness = [0.0, 0.0, 0.0];
+        let mut seen = [0usize; 3];
+        for _ in 0..3_000 {
+            seen[Selection::Roulette.pick(&fitness, &mut rng)] += 1;
+        }
+        assert!(seen.iter().all(|&c| c > 800), "{seen:?}");
+    }
+
+    #[test]
+    fn indices_always_in_bounds() {
+        let mut rng = Pcg32::seed_from_u64(4);
+        let fitness = [0.5, 0.1];
+        for _ in 0..1000 {
+            assert!(Selection::Roulette.pick(&fitness, &mut rng) < 2);
+            assert!(Selection::Tournament(5).pick(&fitness, &mut rng) < 2);
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! # enadapt — Environment-Adaptive Software with Power-Aware Automatic Offloading
+//!
+//! Production-quality reproduction of *"Power Saving Evaluation with Automatic
+//! Offloading"* (Yoji Yamato, NTT, 2021): a framework that takes a
+//! once-written CPU program, automatically finds which loop statements to
+//! offload to a GPU, FPGA, or many-core CPU, and selects the pattern and
+//! destination that minimizes **both processing time and power consumption**
+//! using the paper's evaluation value `(time)^(-1/2) * (power)^(-1/2)`.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **Layer 3 (this crate)** — the coordinator: code analysis
+//!   ([`canalyze`]), evolutionary search ([`ga`]), the three offload flows
+//!   ([`offload`]), the verification environment with device and power
+//!   models ([`devices`], [`power`], [`verifier`]), code emission
+//!   ([`codegen`]) and the end-to-end orchestration ([`coordinator`]).
+//! * **Layer 2** — a JAX model of the evaluated application (MRI-Q) lowered
+//!   AOT to HLO text (`python/compile/model.py`), executed from Rust via
+//!   PJRT ([`runtime`]). Python never runs on the request path.
+//! * **Layer 1** — Pallas kernels for the MRI-Q hot loops
+//!   (`python/compile/kernels/mriq.py`), checked against a pure-jnp oracle.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the libxla rpath in this image)
+//! use enadapt::coordinator::{run_job, JobConfig};
+//!
+//! let job = run_job("mriq.c", enadapt::workloads::MRIQ_C, &JobConfig::default()).unwrap();
+//! println!("chosen: {} on {} — {:.0} W·s (baseline {:.0} W·s)",
+//!          job.best.pattern, job.device,
+//!          job.production.energy_ws, job.baseline.energy_ws);
+//! ```
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
+//! paper-vs-measured results.
+
+pub mod canalyze;
+pub mod codegen;
+pub mod coordinator;
+pub mod devices;
+pub mod ga;
+pub mod offload;
+pub mod power;
+pub mod runtime;
+pub mod util;
+pub mod verifier;
+pub mod workloads;
+
+/// Convenient re-exports of the types most applications need.
+pub mod prelude {
+    pub use crate::canalyze::{analyze_source, Analysis, LoopId, LoopInfo};
+    pub use crate::coordinator::{run_job, Destination, JobConfig, JobReport};
+    pub use crate::devices::{Accelerator, DeviceKind, TransferMode};
+    pub use crate::ga::{FitnessSpec, GaConfig, Genome};
+    pub use crate::offload::{
+        FpgaFlowConfig, GpuFlowConfig, MixedConfig, OffloadPattern, Requirements,
+    };
+    pub use crate::power::{PowerProfile, PowerTrace};
+    pub use crate::verifier::{AppModel, Measurement, VerifEnv, VerifEnvConfig};
+}
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Lexing / parsing / semantic error in the analyzed C source.
+    #[error("analysis error in {file}:{line}: {msg}")]
+    Analyze {
+        /// Source file name.
+        file: String,
+        /// 1-based line number.
+        line: usize,
+        /// Human-readable message.
+        msg: String,
+    },
+    /// Interpreter failure while profiling.
+    #[error("profile error: {0}")]
+    Profile(String),
+    /// Verification-environment failure.
+    #[error("verification error: {0}")]
+    Verify(String),
+    /// PJRT runtime failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    /// Configuration error.
+    #[error("config error: {0}")]
+    Config(String),
+    /// I/O error.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

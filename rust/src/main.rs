@@ -1,0 +1,301 @@
+//! `enadapt` — CLI for the environment-adaptive software coordinator.
+//!
+//! Subcommands map to the paper's workflow:
+//!
+//! * `analyze`   — Steps 1–2: loop table + parallelizability report.
+//! * `offload`   — Steps 1–7: full power-aware offload job.
+//! * `power`     — Fig. 5 reproduction for one pattern/destination.
+//! * `codegen`   — emit the converted code (OpenACC/OpenMP/OpenCL).
+//! * `calibrate` — execute the AOT HLO artifacts on PJRT (real timing).
+//! * `report`    — print the simulated testbed (Fig. 4).
+
+use enadapt::canalyze;
+use enadapt::coordinator::{self, BaselineSource, Destination, JobConfig};
+use enadapt::devices::DeviceKind;
+use enadapt::ga::FitnessSpec;
+use enadapt::runtime;
+use enadapt::util::args::{flag, opt, App, ArgError, CmdSpec, Parsed};
+use enadapt::util::json::Json;
+use enadapt::verifier::{AppModel, VerifEnvConfig};
+use enadapt::workloads;
+
+fn app() -> App {
+    let common = || {
+        vec![
+            opt("seed", "42", "search / measurement-noise seed"),
+            opt(
+                "baseline",
+                "paper",
+                "CPU baseline: 'paper' (14 s), 'measured' (run HLO), or seconds",
+            ),
+            flag("json", "emit machine-readable JSON on stdout"),
+        ]
+    };
+    App {
+        name: "enadapt",
+        about: "power-aware automatic offloading (Yamato 2021 reproduction)",
+        commands: vec![
+            CmdSpec {
+                name: "analyze",
+                about: "analyze a source: loop table, parallelizability, profile",
+                opts: vec![flag("json", "emit JSON")],
+                positionals: vec!["source"],
+            },
+            CmdSpec {
+                name: "offload",
+                about: "run the full Steps 1-7 offload job",
+                opts: {
+                    let mut o = common();
+                    o.push(opt("dest", "fpga", "destination: fpga|gpu|manycore|mixed"));
+                    o.push(flag("time-only", "ablation: previous papers' time-only fitness"));
+                    o.push(flag("no-transfer-opt", "ablation: disable §3.1 transfer batching"));
+                    o.push(opt("generations", "20", "GA generations (gpu/manycore)"));
+                    o.push(opt("population", "16", "GA population (gpu/manycore)"));
+                    o
+                },
+                positionals: vec!["source"],
+            },
+            CmdSpec {
+                name: "power",
+                about: "Fig. 5: power trace of cpu-only vs offloaded best pattern",
+                opts: {
+                    let mut o = common();
+                    o.push(opt("dest", "fpga", "destination: fpga|gpu|manycore"));
+                    o
+                },
+                positionals: vec!["source"],
+            },
+            CmdSpec {
+                name: "codegen",
+                about: "emit converted code for the chosen pattern",
+                opts: vec![
+                    opt("dest", "fpga", "destination: fpga|gpu|manycore"),
+                    opt("seed", "42", "search seed"),
+                ],
+                positionals: vec!["source"],
+            },
+            CmdSpec {
+                name: "calibrate",
+                about: "execute the AOT HLO artifacts via PJRT and report timings",
+                opts: vec![opt("runs", "3", "timed executions per artifact")],
+                positionals: vec![],
+            },
+            CmdSpec {
+                name: "report",
+                about: "print the simulated verification environment (Fig. 4)",
+                opts: vec![],
+                positionals: vec![],
+            },
+        ],
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = match app().parse(&argv) {
+        Ok(p) => p,
+        Err(ArgError::Help(h)) => {
+            println!("{h}");
+            return;
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&parsed) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+/// Load a bundled workload by name or a file from disk.
+fn load_source(arg: &str) -> enadapt::Result<(String, String)> {
+    if let Some(src) = workloads::by_name(arg) {
+        return Ok((format!("{}.c", arg.trim_end_matches(".c")), src.to_string()));
+    }
+    let text = std::fs::read_to_string(arg)?;
+    Ok((arg.to_string(), text))
+}
+
+fn parse_dest(s: &str) -> enadapt::Result<Destination> {
+    Ok(match s {
+        "fpga" => Destination::Device(DeviceKind::Fpga),
+        "gpu" => Destination::Device(DeviceKind::Gpu),
+        "manycore" | "many-core" => Destination::Device(DeviceKind::ManyCore),
+        "mixed" => Destination::Mixed,
+        other => {
+            return Err(enadapt::Error::Config(format!(
+                "unknown destination '{other}' (fpga|gpu|manycore|mixed)"
+            )))
+        }
+    })
+}
+
+fn parse_baseline(s: &str) -> enadapt::Result<BaselineSource> {
+    Ok(match s {
+        "paper" => BaselineSource::Fixed(14.0),
+        "measured" => BaselineSource::MeasuredHlo {
+            artifact: "mriq_cpu_small".into(),
+            full_k: 2048,
+            full_x: 262_144,
+        },
+        other => BaselineSource::Fixed(other.parse::<f64>().map_err(|_| {
+            enadapt::Error::Config(format!("bad --baseline '{other}' (paper|measured|<secs>)"))
+        })?),
+    })
+}
+
+fn job_config(p: &Parsed) -> enadapt::Result<JobConfig> {
+    let mut cfg = JobConfig {
+        seed: p
+            .get_u64("seed")
+            .map_err(|e| enadapt::Error::Config(e.to_string()))?,
+        destination: parse_dest(p.get("dest").unwrap_or("fpga"))?,
+        baseline: parse_baseline(p.get("baseline").unwrap_or("paper"))?,
+        ..Default::default()
+    };
+    if p.flag("time-only") {
+        cfg.fitness = FitnessSpec::time_only();
+        cfg.ga_flow.fitness = FitnessSpec::time_only();
+        cfg.fpga_flow.fitness = FitnessSpec::time_only();
+    }
+    if p.flag("no-transfer-opt") {
+        cfg.ga_flow.transfer_opt = false;
+        cfg.fpga_flow.transfer_opt = false;
+    }
+    if let Ok(g) = p.get_usize("generations") {
+        cfg.ga_flow.ga.generations = g;
+    }
+    if let Ok(n) = p.get_usize("population") {
+        cfg.ga_flow.ga.population = n;
+    }
+    cfg.ga_flow.seed = cfg.seed;
+    Ok(cfg)
+}
+
+fn dispatch(p: &Parsed) -> enadapt::Result<()> {
+    match p.cmd.as_str() {
+        "analyze" => {
+            let (name, src) = load_source(p.pos(0).unwrap())?;
+            let an = canalyze::analyze_source(&name, &src)?;
+            if p.flag("json") {
+                let loops: Vec<Json> = an
+                    .loops
+                    .iter()
+                    .map(|l| {
+                        Json::obj(vec![
+                            ("id", Json::num(l.id.0 as f64)),
+                            ("func", Json::str(l.func.clone())),
+                            ("line", Json::num(l.line as f64)),
+                            ("parallelizable", Json::Bool(l.parallelizable)),
+                            (
+                                "reason",
+                                l.not_parallel_reason
+                                    .clone()
+                                    .map(Json::str)
+                                    .unwrap_or(Json::Null),
+                            ),
+                        ])
+                    })
+                    .collect();
+                println!(
+                    "{}",
+                    Json::obj(vec![
+                        ("file", Json::str(an.file.clone())),
+                        ("n_loops", Json::num(an.n_loops() as f64)),
+                        ("processable", Json::num(an.parallelizable_ids().len() as f64)),
+                        ("loops", Json::arr(loops)),
+                    ])
+                    .to_string_pretty()
+                );
+            } else {
+                println!("{}", coordinator::report::loop_table(&an));
+                println!(
+                    "{} of {} loop statements are processable (offloadable)",
+                    an.parallelizable_ids().len(),
+                    an.n_loops()
+                );
+            }
+            Ok(())
+        }
+        "offload" => {
+            let (name, src) = load_source(p.pos(0).unwrap())?;
+            let cfg = job_config(p)?;
+            let report = coordinator::run_job(&name, &src, &cfg)?;
+            if p.flag("json") {
+                println!(
+                    "{}",
+                    coordinator::report::job_json(&report).to_string_pretty()
+                );
+            } else {
+                println!("{}", coordinator::report::render_job(&report));
+            }
+            Ok(())
+        }
+        "power" => {
+            let (name, src) = load_source(p.pos(0).unwrap())?;
+            let cfg = job_config(p)?;
+            let report = coordinator::run_job(&name, &src, &cfg)?;
+            println!(
+                "{}",
+                coordinator::report::fig5(&report.baseline, &report.production)
+            );
+            Ok(())
+        }
+        "codegen" => {
+            let (name, src) = load_source(p.pos(0).unwrap())?;
+            let cfg = job_config(p)?;
+            let report = coordinator::run_job(&name, &src, &cfg)?;
+            match &report.generated {
+                coordinator::GeneratedCode::OpenAcc(c) | coordinator::GeneratedCode::OpenMp(c) => {
+                    println!("{c}")
+                }
+                coordinator::GeneratedCode::OpenCl(b) => {
+                    println!("/* ===== kernels (.cl) ===== */\n{}", b.kernel_source);
+                    println!("/* ===== host (.c) ===== */\n{}", b.host_source);
+                }
+                coordinator::GeneratedCode::Unchanged => println!("{src}"),
+            }
+            Ok(())
+        }
+        "calibrate" => {
+            let runs = p.get_u64("runs").unwrap_or(3) as u32;
+            let arts = runtime::load_artifacts(&runtime::default_dir())?;
+            let rt = runtime::HloRuntime::cpu()?;
+            println!("platform: {} ({} devices)", rt.platform(), rt.device_count());
+            for v in &arts.variants {
+                let model = rt.load_artifact(v)?;
+                let t = runtime::time_model(&model, 1, runs)?;
+                let full = runtime::scale_to_full(t.mean_s, v.num_k, v.num_x, 2048, 262_144);
+                println!(
+                    "{:<22} K={:<4} X={:<5} mean {:>9.3} ms (±{:.3})  → full-size est {:>7.2} s",
+                    v.name,
+                    v.num_k,
+                    v.num_x,
+                    t.mean_s * 1e3,
+                    t.std_s * 1e3,
+                    full
+                );
+            }
+            Ok(())
+        }
+        "report" => {
+            println!(
+                "{}",
+                coordinator::report::env_report(&VerifEnvConfig::r740_pac())
+            );
+            let an = canalyze::analyze_source("mriq.c", workloads::MRIQ_C)?;
+            let cfg = VerifEnvConfig::r740_pac();
+            let app = AppModel::from_analysis(&an, &cfg.cpu, 14.0)?;
+            println!(
+                "\nMRI-Q app model: {} candidates, {:.1} s CPU baseline, work scale {:.0}x",
+                app.genome_len(),
+                app.total_cpu_s,
+                app.work_scale
+            );
+            Ok(())
+        }
+        other => Err(enadapt::Error::Config(format!("unhandled command {other}"))),
+    }
+}

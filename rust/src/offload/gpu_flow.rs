@@ -1,0 +1,232 @@
+//! §3.1 — automatic GPU offload of loop statements via evolutionary
+//! computation, with power in the goodness of fit (Fig. 2 flow):
+//!
+//! 1. gene per parallelizable loop (1 = GPU, 0 = CPU);
+//! 2. each individual is *measured* in the verification environment
+//!    (processing time **and** power consumption);
+//! 3. goodness of fit = `t^(-1/2) · p^(-1/2)` (configurable);
+//! 4. transfer-consolidated variants are generated when the §3.1
+//!    batching optimization is enabled.
+//!
+//! The same engine drives the many-core destination (§3.3) — only the
+//! device model differs.
+
+use super::pattern::OffloadPattern;
+use crate::devices::{DeviceKind, TransferMode};
+use crate::ga::{self, FitnessSpec, GaConfig, GaResult, Genome};
+use crate::verifier::{AppModel, Measurement, VerifEnv};
+use crate::{Error, Result};
+use std::collections::HashMap;
+
+/// A measured pattern with its evaluation value.
+#[derive(Debug, Clone)]
+pub struct Evaluated {
+    /// The pattern.
+    pub pattern: OffloadPattern,
+    /// Its measurement.
+    pub measurement: Measurement,
+    /// The paper's evaluation value (larger is better).
+    pub value: f64,
+}
+
+/// GA-flow configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuFlowConfig {
+    /// GA hyper-parameters.
+    pub ga: GaConfig,
+    /// Evaluation value (power-aware by default).
+    pub fitness: FitnessSpec,
+    /// Search seed.
+    pub seed: u64,
+    /// Apply the §3.1 transfer consolidation.
+    pub transfer_opt: bool,
+    /// Measure each generation's distinct patterns concurrently (models
+    /// several verification machines; identical results, lower wall time
+    /// on multi-core coordinators).
+    pub parallel_trials: bool,
+}
+
+impl Default for GpuFlowConfig {
+    fn default() -> Self {
+        Self {
+            ga: GaConfig::default(),
+            fitness: FitnessSpec::paper(),
+            seed: 42,
+            transfer_opt: true,
+            parallel_trials: false,
+        }
+    }
+}
+
+/// GA-flow outcome.
+#[derive(Debug, Clone)]
+pub struct GpuFlowOutcome {
+    /// Destination device searched.
+    pub device: DeviceKind,
+    /// CPU-only baseline measurement.
+    pub baseline: Measurement,
+    /// Baseline evaluation value.
+    pub baseline_value: f64,
+    /// Best measured pattern (may be the baseline if nothing improved).
+    pub best: Evaluated,
+    /// GA internals (convergence history for the Fig. 2 bench).
+    pub ga: GaResult,
+    /// Verification trials actually run (cache misses).
+    pub trials: usize,
+}
+
+/// Run the GA search against the GPU.
+pub fn run(app: &AppModel, env: &VerifEnv, cfg: &GpuFlowConfig) -> Result<GpuFlowOutcome> {
+    run_on(app, env, cfg, DeviceKind::Gpu)
+}
+
+/// Run the GA search against an arbitrary destination (GPU or many-core).
+pub fn run_on(
+    app: &AppModel,
+    env: &VerifEnv,
+    cfg: &GpuFlowConfig,
+    device: DeviceKind,
+) -> Result<GpuFlowOutcome> {
+    if app.genome_len() == 0 {
+        return Err(Error::Verify(format!(
+            "{}: no parallelizable loops to search",
+            app.name
+        )));
+    }
+    let xfer = if cfg.transfer_opt {
+        TransferMode::Batched
+    } else {
+        TransferMode::PerEntry
+    };
+
+    let baseline = env.measure_cpu_only(app);
+    let baseline_value = cfg
+        .fitness
+        .value(baseline.time_s, baseline.mean_w, baseline.timed_out);
+
+    // Measurement log so the best genome's Measurement can be recovered
+    // without a re-run.
+    let mut log: HashMap<Vec<bool>, Measurement> = HashMap::new();
+    let fitness = cfg.fitness;
+    let parallel = cfg.parallel_trials;
+    let ga_result = ga::run_batched(app.genome_len(), &cfg.ga, cfg.seed, |batch: &[Genome]| {
+        let measure_one = |g: &Genome| -> Measurement {
+            if g.ones() == 0 {
+                baseline.clone()
+            } else {
+                env.measure(app, &g.bits, device, xfer)
+            }
+        };
+        let measurements: Vec<Measurement> = if parallel && batch.len() > 1 {
+            // One scoped thread per trial — the generation's patterns run
+            // on "parallel verification machines".
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = batch
+                    .iter()
+                    .map(|g| scope.spawn(move || measure_one(g)))
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("trial")).collect()
+            })
+        } else {
+            batch.iter().map(measure_one).collect()
+        };
+        measurements
+            .into_iter()
+            .zip(batch)
+            .map(|(m, g)| {
+                let v = fitness.value(m.time_s, m.mean_w, m.timed_out);
+                log.insert(g.bits.clone(), m);
+                v
+            })
+            .collect()
+    });
+
+    let best_bits = ga_result.best.bits.clone();
+    let best_measure = log
+        .get(&best_bits)
+        .cloned()
+        .expect("best genome was measured");
+    let best = Evaluated {
+        pattern: OffloadPattern::from_genome(app, ga_result.best.clone()),
+        value: ga_result.best_value,
+        measurement: best_measure,
+    };
+    Ok(GpuFlowOutcome {
+        device,
+        baseline,
+        baseline_value,
+        best,
+        trials: ga_result.measured,
+        ga: ga_result,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::canalyze::analyze_source;
+    use crate::verifier::VerifEnvConfig;
+    use crate::workloads;
+
+    fn setup() -> (AppModel, VerifEnv) {
+        let an = analyze_source("mriq.c", workloads::MRIQ_C).unwrap();
+        let cfg = VerifEnvConfig::r740_pac();
+        let app = AppModel::from_analysis(&an, &cfg.cpu, 14.0).unwrap();
+        (app, cfg.build(99))
+    }
+
+    #[test]
+    fn ga_finds_an_improving_gpu_pattern() {
+        let (app, env) = setup();
+        let cfg = GpuFlowConfig {
+            ga: GaConfig {
+                population: 12,
+                generations: 12,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let out = run(&app, &env, &cfg).unwrap();
+        assert!(
+            out.best.value > out.baseline_value,
+            "best {} vs baseline {}",
+            out.best.value,
+            out.baseline_value
+        );
+        // The winning pattern must offload the dominant computeQ nest.
+        assert!(out.best.measurement.time_s < out.baseline.time_s / 2.0);
+        assert!(!out.best.pattern.offloaded_ids().is_empty());
+    }
+
+    #[test]
+    fn convergence_history_is_monotone() {
+        let (app, env) = setup();
+        let cfg = GpuFlowConfig {
+            ga: GaConfig {
+                population: 8,
+                generations: 6,
+                ..Default::default()
+            },
+            seed: 3,
+            ..Default::default()
+        };
+        let out = run(&app, &env, &cfg).unwrap();
+        for w in out.ga.history.windows(2) {
+            assert!(w[1].best >= w[0].best);
+        }
+        assert!(out.trials > 0);
+    }
+
+    #[test]
+    fn empty_candidate_list_is_an_error() {
+        let an = analyze_source(
+            "t.c",
+            "int main() { int n = 3; while (n > 0) { n--; } printf(\"%d\", n); return 0; }",
+        )
+        .unwrap();
+        let cfg = VerifEnvConfig::r740_pac();
+        let app = AppModel::from_analysis(&an, &cfg.cpu, 1.0).unwrap();
+        let env = cfg.build(1);
+        assert!(run(&app, &env, &GpuFlowConfig::default()).is_err());
+    }
+}

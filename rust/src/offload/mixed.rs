@@ -1,0 +1,230 @@
+//! §3.3 — automatic offload-destination selection in mixed environments
+//! (many-core CPU + GPU + FPGA all available).
+//!
+//! Verification order is chosen for search cost: **many-core → GPU →
+//! FPGA**. "FPGA verification that takes a long time is the last, and if a
+//! pattern that sufficiently satisfies the user requirements is found in
+//! the previous stage, FPGA verification will not be performed"; the
+//! many-core goes first because it differs least from the host. The
+//! destination is selected by the *power-aware* evaluation value, not just
+//! speed — this paper's delta over the previous method.
+
+use super::fpga_flow::{self, FpgaFlowConfig};
+use super::gpu_flow::{self, Evaluated, GpuFlowConfig};
+use super::requirements::Requirements;
+use crate::devices::DeviceKind;
+use crate::ga::FitnessSpec;
+use crate::verifier::{AppModel, Measurement, VerifEnv};
+use crate::Result;
+
+/// Mixed-environment search configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct MixedConfig {
+    /// Early-stop requirements.
+    pub requirements: Requirements,
+    /// Evaluation value used for the final selection.
+    pub fitness: FitnessSpec,
+    /// GA settings for the many-core and GPU stages.
+    pub ga_flow: GpuFlowConfig,
+    /// Narrowing settings for the FPGA stage.
+    pub fpga_flow: FpgaFlowConfig,
+}
+
+impl Default for MixedConfig {
+    fn default() -> Self {
+        Self {
+            requirements: Requirements::default(),
+            fitness: FitnessSpec::paper(),
+            ga_flow: GpuFlowConfig::default(),
+            fpga_flow: FpgaFlowConfig::default(),
+        }
+    }
+}
+
+/// Result of verifying one destination.
+#[derive(Debug, Clone)]
+pub struct DestinationResult {
+    /// The destination.
+    pub device: DeviceKind,
+    /// Best pattern found there.
+    pub best: Evaluated,
+    /// Verification trials run for this destination.
+    pub trials: u64,
+    /// Search cost charged for this destination, seconds.
+    pub search_cost_s: f64,
+}
+
+/// Mixed-environment outcome.
+#[derive(Debug, Clone)]
+pub struct MixedOutcome {
+    /// CPU-only baseline.
+    pub baseline: Measurement,
+    /// Baseline value.
+    pub baseline_value: f64,
+    /// Destinations verified, in order.
+    pub tried: Vec<DestinationResult>,
+    /// Destinations skipped by early stop.
+    pub skipped: Vec<DeviceKind>,
+    /// The selected destination + pattern.
+    pub chosen: DestinationResult,
+    /// True when the requirements early-stopped the search.
+    pub early_stopped: bool,
+}
+
+/// Run the §3.3 ordered verification.
+pub fn run(app: &AppModel, env: &VerifEnv, cfg: &MixedConfig) -> Result<MixedOutcome> {
+    let baseline = env.measure_cpu_only(app);
+    let baseline_value = cfg
+        .fitness
+        .value(baseline.time_s, baseline.mean_w, baseline.timed_out);
+
+    let order = [DeviceKind::ManyCore, DeviceKind::Gpu, DeviceKind::Fpga];
+    let mut tried: Vec<DestinationResult> = Vec::new();
+    let mut skipped: Vec<DeviceKind> = Vec::new();
+    let mut early_stopped = false;
+
+    for (i, &dest) in order.iter().enumerate() {
+        let trials_before = env.trials_run();
+        let cost_before = env.search_cost_s();
+        let best = match dest {
+            DeviceKind::Fpga => {
+                let out = fpga_flow::run(app, env, &cfg.fpga_flow)?;
+                out.best
+            }
+            _ => {
+                let out = gpu_flow::run_on(app, env, &cfg.ga_flow, dest)?;
+                out.best
+            }
+        };
+        let result = DestinationResult {
+            device: dest,
+            best,
+            trials: env.trials_run() - trials_before,
+            search_cost_s: env.search_cost_s() - cost_before,
+        };
+        let satisfied = cfg
+            .requirements
+            .satisfied(&baseline, &result.best.measurement);
+        tried.push(result);
+        if satisfied {
+            early_stopped = i + 1 < order.len();
+            skipped.extend(order[i + 1..].iter().copied());
+            break;
+        }
+    }
+
+    // Select by the evaluation value across verified destinations (the
+    // baseline wins only if nothing improved on it).
+    let chosen = tried
+        .iter()
+        .max_by(|a, b| a.best.value.partial_cmp(&b.best.value).unwrap())
+        .expect("at least one destination verified")
+        .clone();
+
+    Ok(MixedOutcome {
+        baseline,
+        baseline_value,
+        tried,
+        skipped,
+        chosen,
+        early_stopped,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::canalyze::analyze_source;
+    use crate::ga::GaConfig;
+    use crate::verifier::VerifEnvConfig;
+    use crate::workloads;
+
+    fn setup() -> (AppModel, VerifEnv) {
+        let an = analyze_source("mriq.c", workloads::MRIQ_C).unwrap();
+        let cfg = VerifEnvConfig::r740_pac();
+        let app = AppModel::from_analysis(&an, &cfg.cpu, 14.0).unwrap();
+        (app, cfg.build(17))
+    }
+
+    fn quick_cfg() -> MixedConfig {
+        MixedConfig {
+            ga_flow: GpuFlowConfig {
+                ga: GaConfig {
+                    population: 8,
+                    generations: 6,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn verification_order_is_manycore_gpu_fpga() {
+        let (app, env) = setup();
+        let mut cfg = quick_cfg();
+        // Impossible requirements: all three destinations get verified.
+        cfg.requirements = Requirements {
+            min_speedup: 1e9,
+            min_energy_ratio: 1e9,
+        };
+        let out = run(&app, &env, &cfg).unwrap();
+        let order: Vec<DeviceKind> = out.tried.iter().map(|t| t.device).collect();
+        assert_eq!(
+            order,
+            vec![DeviceKind::ManyCore, DeviceKind::Gpu, DeviceKind::Fpga]
+        );
+        assert!(!out.early_stopped);
+        assert!(out.skipped.is_empty());
+    }
+
+    #[test]
+    fn early_stop_skips_fpga_when_gpu_suffices() {
+        let (app, env) = setup();
+        let mut cfg = quick_cfg();
+        // Modest requirements the GPU (or even many-core) meets on MRI-Q.
+        cfg.requirements = Requirements {
+            min_speedup: 3.0,
+            min_energy_ratio: 1.5,
+        };
+        let out = run(&app, &env, &cfg).unwrap();
+        assert!(out.early_stopped);
+        assert!(out.skipped.contains(&DeviceKind::Fpga));
+        assert!(out.tried.len() < 3);
+    }
+
+    #[test]
+    fn full_search_selects_low_power_destination() {
+        let (app, env) = setup();
+        let mut cfg = quick_cfg();
+        cfg.requirements = Requirements {
+            min_speedup: 1e9,
+            min_energy_ratio: 1e9,
+        };
+        let out = run(&app, &env, &cfg).unwrap();
+        // With the power-aware value, the FPGA (low W, high speedup) wins
+        // MRI-Q (Fig. 5 conclusion).
+        assert_eq!(out.chosen.device, DeviceKind::Fpga);
+        assert!(out.chosen.best.value > out.baseline_value);
+    }
+
+    #[test]
+    fn fpga_search_cost_dwarfs_other_destinations() {
+        let (app, env) = setup();
+        let mut cfg = quick_cfg();
+        cfg.requirements = Requirements {
+            min_speedup: 1e9,
+            min_energy_ratio: 1e9,
+        };
+        let out = run(&app, &env, &cfg).unwrap();
+        let mc = out.tried.iter().find(|t| t.device == DeviceKind::ManyCore).unwrap();
+        let fpga = out.tried.iter().find(|t| t.device == DeviceKind::Fpga).unwrap();
+        assert!(
+            fpga.search_cost_s > 10.0 * mc.search_cost_s,
+            "fpga {} vs mc {}",
+            fpga.search_cost_s,
+            mc.search_cost_s
+        );
+    }
+}

@@ -1,0 +1,19 @@
+//! The paper's three offload flows: §3.1 GA-driven GPU offload with
+//! power-aware fitness ([`gpu_flow`]), §3.2 narrowing-driven FPGA offload
+//! ([`fpga_flow`]) and §3.3 mixed-environment destination selection
+//! ([`mixed`]), plus offload patterns, user requirements / cost model and
+//! the transfer-consolidation analysis.
+
+pub mod fpga_flow;
+pub mod gpu_flow;
+pub mod mixed;
+pub mod pattern;
+pub mod requirements;
+pub mod transfer;
+
+pub use fpga_flow::{FpgaFlowConfig, FpgaFlowOutcome, FunnelStats};
+pub use gpu_flow::{Evaluated, GpuFlowConfig, GpuFlowOutcome};
+pub use mixed::{DestinationResult, MixedConfig, MixedOutcome};
+pub use pattern::OffloadPattern;
+pub use requirements::{DataCenterCost, Requirements};
+pub use transfer::{plan as transfer_plan, ArrayTransfer, TransferPlan};

@@ -1,0 +1,132 @@
+//! Offload patterns: a GA genome bound to the candidate-loop list of a
+//! concrete application, resolvable to offload regions and code.
+
+use crate::canalyze::LoopId;
+use crate::ga::Genome;
+use crate::verifier::AppModel;
+
+/// A genome bound to an application's candidate loops.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OffloadPattern {
+    /// The bits (1 = offload), aligned with `candidates`.
+    pub genome: Genome,
+    /// Candidate loop ids in genome order.
+    pub candidates: Vec<LoopId>,
+}
+
+impl OffloadPattern {
+    /// All-CPU pattern for an app.
+    pub fn cpu_only(app: &AppModel) -> Self {
+        Self {
+            genome: Genome::zeros(app.genome_len()),
+            candidates: app.candidates.clone(),
+        }
+    }
+
+    /// Pattern offloading exactly one candidate loop.
+    pub fn single(app: &AppModel, id: LoopId) -> Self {
+        let pos = app
+            .candidates
+            .iter()
+            .position(|&c| c == id)
+            .expect("loop is a candidate");
+        Self {
+            genome: Genome::single(app.genome_len(), pos),
+            candidates: app.candidates.clone(),
+        }
+    }
+
+    /// Pattern offloading a set of candidate loops.
+    pub fn of_loops(app: &AppModel, ids: &[LoopId]) -> Self {
+        let mut g = Genome::zeros(app.genome_len());
+        for id in ids {
+            let pos = app
+                .candidates
+                .iter()
+                .position(|c| c == id)
+                .expect("loop is a candidate");
+            g.bits[pos] = true;
+        }
+        Self {
+            genome: g,
+            candidates: app.candidates.clone(),
+        }
+    }
+
+    /// From a raw GA genome.
+    pub fn from_genome(app: &AppModel, genome: Genome) -> Self {
+        assert_eq!(genome.len(), app.genome_len());
+        Self {
+            genome,
+            candidates: app.candidates.clone(),
+        }
+    }
+
+    /// The loop ids this pattern offloads.
+    pub fn offloaded_ids(&self) -> Vec<LoopId> {
+        self.candidates
+            .iter()
+            .zip(&self.genome.bits)
+            .filter(|(_, &b)| b)
+            .map(|(&id, _)| id)
+            .collect()
+    }
+
+    /// Bits slice for the verifier.
+    pub fn bits(&self) -> &[bool] {
+        &self.genome.bits
+    }
+}
+
+impl std::fmt::Display for OffloadPattern {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.genome.ones() == 0 {
+            return write!(f, "{} (cpu-only)", self.genome);
+        }
+        let ids: Vec<String> = self.offloaded_ids().iter().map(|i| i.to_string()).collect();
+        write!(f, "{} [{}]", self.genome, ids.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::canalyze::analyze_source;
+    use crate::devices::CpuModel;
+    use crate::workloads;
+
+    fn app() -> AppModel {
+        let an = analyze_source("mriq.c", workloads::MRIQ_C).unwrap();
+        AppModel::from_analysis(&an, &CpuModel::r740(), 14.0).unwrap()
+    }
+
+    #[test]
+    fn cpu_only_has_no_offloads() {
+        let a = app();
+        let p = OffloadPattern::cpu_only(&a);
+        assert!(p.offloaded_ids().is_empty());
+        assert!(p.to_string().contains("cpu-only"));
+    }
+
+    #[test]
+    fn single_and_of_loops_agree() {
+        let a = app();
+        let id = a.candidates[3];
+        let p1 = OffloadPattern::single(&a, id);
+        let p2 = OffloadPattern::of_loops(&a, &[id]);
+        assert_eq!(p1, p2);
+        assert_eq!(p1.offloaded_ids(), vec![id]);
+    }
+
+    #[test]
+    #[should_panic(expected = "loop is a candidate")]
+    fn non_candidate_loop_panics() {
+        let a = app();
+        // The while loop is never a candidate.
+        let non_candidate = (0..19)
+            .map(LoopId)
+            .find(|id| !a.candidates.contains(id))
+            .unwrap();
+        OffloadPattern::single(&a, non_candidate);
+    }
+}

@@ -1,0 +1,169 @@
+//! User requirements and the §3.3 data-center cost model.
+//!
+//! Mixed-environment search stops early when a destination "sufficiently
+//! satisfies the user requirements"; the paper's cost discussion (initial ⅓
+//! / operation ⅓ / other ⅓, power as part of operation cost, per-operator
+//! evaluation formulas) is captured by [`DataCenterCost`].
+
+use crate::verifier::Measurement;
+
+/// What the user demands of an offload result, relative to the CPU-only
+/// baseline.
+#[derive(Debug, Clone, Copy)]
+pub struct Requirements {
+    /// Required speedup (baseline time / offloaded time).
+    pub min_speedup: f64,
+    /// Required energy reduction (baseline W·s / offloaded W·s).
+    pub min_energy_ratio: f64,
+}
+
+impl Default for Requirements {
+    fn default() -> Self {
+        // The paper's example discussion: time to 1/5 and power halved
+        // make the offload clearly pay off.
+        Self {
+            min_speedup: 5.0,
+            min_energy_ratio: 2.0,
+        }
+    }
+}
+
+impl Requirements {
+    /// Trivially satisfiable requirements (never stop early).
+    pub fn any_improvement() -> Self {
+        Self {
+            min_speedup: 1.0,
+            min_energy_ratio: 1.0,
+        }
+    }
+
+    /// Does `m` satisfy the requirements vs `baseline`?
+    pub fn satisfied(&self, baseline: &Measurement, m: &Measurement) -> bool {
+        if m.timed_out {
+            return false;
+        }
+        let speedup = baseline.time_s / m.time_s.max(1e-9);
+        let energy_ratio = baseline.energy_ws / m.energy_ws.max(1e-9);
+        speedup >= self.min_speedup && energy_ratio >= self.min_energy_ratio
+    }
+}
+
+/// §3.3 cost structure of a data-center operator.
+#[derive(Debug, Clone, Copy)]
+pub struct DataCenterCost {
+    /// Share of total cost that is initial (hardware + development).
+    pub initial_frac: f64,
+    /// Share that is operation (power + maintenance).
+    pub operation_frac: f64,
+    /// Share that is other (service orders, …).
+    pub other_frac: f64,
+    /// Fraction of operation cost that is electric power.
+    pub power_share_of_operation: f64,
+    /// Hardware-price multiplier of the accelerator server vs plain CPU
+    /// servers (volume discounts vary per operator, §3.3).
+    pub accel_hw_multiplier: f64,
+}
+
+impl Default for DataCenterCost {
+    fn default() -> Self {
+        // "As a typical data center cost, the initial cost … is 1/3 of the
+        // total cost, the operation cost … is 1/3, and the other cost … is
+        // 1/3." (§3.3)
+        Self {
+            initial_frac: 1.0 / 3.0,
+            operation_frac: 1.0 / 3.0,
+            other_frac: 1.0 / 3.0,
+            power_share_of_operation: 0.5,
+            accel_hw_multiplier: 1.5,
+        }
+    }
+}
+
+impl DataCenterCost {
+    /// Relative total cost after offloading, vs 1.0 for the CPU-only fleet.
+    ///
+    /// `speedup` shrinks the number of servers needed (initial cost);
+    /// `power_ratio` (baseline energy / offloaded energy) shrinks the power
+    /// part of operation cost. The paper's example: time to 1/5 halves the
+    /// hardware even at 1.5× unit price, and halved power cuts operation
+    /// cost — but not proportionally, because operation has non-power
+    /// factors.
+    pub fn relative_cost(&self, speedup: f64, power_ratio: f64) -> f64 {
+        let speedup = speedup.max(1e-9);
+        let power_ratio = power_ratio.max(1e-9);
+        let initial = self.initial_frac * self.accel_hw_multiplier / speedup;
+        let operation = self.operation_frac
+            * (self.power_share_of_operation / power_ratio
+                + (1.0 - self.power_share_of_operation));
+        let other = self.other_frac;
+        initial + operation + other
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::canalyze::LoopId;
+    use crate::devices::DeviceKind;
+    use crate::power::PowerTrace;
+    use crate::verifier::{PhaseKind, TrialBreakdown};
+
+    fn meas(time_s: f64, energy_ws: f64, timed_out: bool) -> Measurement {
+        Measurement {
+            app: "t".into(),
+            device: DeviceKind::Fpga,
+            pattern: vec![],
+            regions: vec![LoopId(0)],
+            time_s,
+            mean_w: energy_ws / time_s,
+            energy_ws,
+            trace: PowerTrace::default(),
+            timed_out,
+            failure: None,
+            breakdown: TrialBreakdown::default(),
+            phase: PhaseKind::Verification,
+        }
+    }
+
+    #[test]
+    fn fig5_satisfies_default_requirements() {
+        let base = meas(14.0, 1690.0, false);
+        let fpga = meas(2.0, 223.0, false);
+        assert!(Requirements::default().satisfied(&base, &fpga));
+    }
+
+    #[test]
+    fn modest_improvement_fails_default() {
+        let base = meas(14.0, 1690.0, false);
+        let weak = meas(10.0, 1200.0, false);
+        assert!(!Requirements::default().satisfied(&base, &weak));
+        assert!(Requirements::any_improvement().satisfied(&base, &weak));
+    }
+
+    #[test]
+    fn timed_out_never_satisfies() {
+        let base = meas(14.0, 1690.0, false);
+        let t = meas(1.0, 100.0, true);
+        assert!(!Requirements::any_improvement().satisfied(&base, &t));
+    }
+
+    #[test]
+    fn cost_model_paper_example() {
+        // Time to 1/5 and power halved: total cost must drop, but by less
+        // than half (operation has non-power factors, §3.3).
+        let c = DataCenterCost::default();
+        let rel = c.relative_cost(5.0, 2.0);
+        assert!(rel < 1.0, "cost must drop: {rel}");
+        assert!(rel > 0.5, "but not halve: {rel}");
+        // No improvement = no change (modulo hw premium).
+        let flat = c.relative_cost(1.0, 1.0);
+        assert!(flat >= 1.0);
+    }
+
+    #[test]
+    fn cost_monotone_in_both_factors() {
+        let c = DataCenterCost::default();
+        assert!(c.relative_cost(4.0, 2.0) < c.relative_cost(2.0, 2.0));
+        assert!(c.relative_cost(2.0, 4.0) < c.relative_cost(2.0, 2.0));
+    }
+}

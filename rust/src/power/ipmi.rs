@@ -1,0 +1,161 @@
+//! Simulated IPMI power sensor — stands in for `ipmitool` on the Dell
+//! PowerEdge R740 used in the paper's testbed (§4.1c): polls the
+//! whole-server power draw at a fixed period (1 Hz default), with Gaussian
+//! sensor noise and Watt quantization, turning the exact [`PowerProfile`]
+//! the simulator produces into the discrete [`PowerTrace`] an operator
+//! actually sees.
+
+use super::trace::{PowerProfile, PowerSample, PowerTrace};
+use crate::util::prng::Pcg32;
+
+/// IPMI sampler configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct IpmiConfig {
+    /// Poll period in seconds (ipmitool sensor polling; 1.0 in the paper's
+    /// Fig. 5 trace).
+    pub period_s: f64,
+    /// Sensor noise standard deviation in Watts.
+    pub noise_w_std: f64,
+    /// Quantization step in Watts (IPMI reports integer Watts).
+    pub quantum_w: f64,
+}
+
+impl Default for IpmiConfig {
+    fn default() -> Self {
+        Self {
+            period_s: 1.0,
+            noise_w_std: 0.8,
+            quantum_w: 1.0,
+        }
+    }
+}
+
+/// The simulated sensor.
+#[derive(Debug, Clone)]
+pub struct IpmiSampler {
+    cfg: IpmiConfig,
+}
+
+impl IpmiSampler {
+    /// Create a sampler.
+    pub fn new(cfg: IpmiConfig) -> Self {
+        assert!(cfg.period_s > 0.0, "poll period must be positive");
+        Self { cfg }
+    }
+
+    /// Sampler with the paper's 1 Hz setup.
+    pub fn one_hz() -> Self {
+        Self::new(IpmiConfig::default())
+    }
+
+    /// Sample a power profile: readings at `t = 0, p, 2p, …` covering the
+    /// whole profile (a final sample lands at the end time so trapezoidal
+    /// energy covers the full duration).
+    pub fn sample(&self, profile: &PowerProfile, rng: &mut Pcg32) -> PowerTrace {
+        let dur = profile.duration_s();
+        let mut samples = Vec::new();
+        let mut t = 0.0;
+        while t < dur {
+            samples.push(self.reading(profile, t, rng));
+            t += self.cfg.period_s;
+        }
+        samples.push(self.reading(profile, dur.max(0.0), rng));
+        PowerTrace::from_samples(samples)
+    }
+
+    fn reading(&self, profile: &PowerProfile, t: f64, rng: &mut Pcg32) -> PowerSample {
+        // Sample slightly *before* t so a reading at a phase boundary
+        // reports the phase just completed (sensor aggregation lag).
+        let exact = profile.watts_at((t - 1e-9).max(0.0));
+        let noisy = exact + rng.normal_ms(0.0, self.cfg.noise_w_std);
+        let q = self.cfg.quantum_w;
+        let quantized = if q > 0.0 { (noisy / q).round() * q } else { noisy };
+        PowerSample {
+            t_s: t,
+            watts: quantized.max(0.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat_profile(dur: f64, w: f64) -> PowerProfile {
+        let mut p = PowerProfile::new();
+        p.push(dur, w);
+        p
+    }
+
+    #[test]
+    fn one_hz_sample_count() {
+        let s = IpmiSampler::one_hz();
+        let mut rng = Pcg32::seed_from_u64(1);
+        let t = s.sample(&flat_profile(14.0, 121.0), &mut rng);
+        // 0..13 inclusive plus the final at 14.0 = 15 samples.
+        assert_eq!(t.samples.len(), 15);
+        assert_eq!(t.duration_s(), 14.0);
+    }
+
+    #[test]
+    fn sampled_energy_close_to_exact() {
+        let s = IpmiSampler::one_hz();
+        let mut rng = Pcg32::seed_from_u64(2);
+        let profile = flat_profile(14.0, 121.0);
+        let t = s.sample(&profile, &mut rng);
+        let exact = profile.energy_ws();
+        assert!(
+            (t.energy_ws() - exact).abs() / exact < 0.02,
+            "sampled {} vs exact {}",
+            t.energy_ws(),
+            exact
+        );
+    }
+
+    #[test]
+    fn noise_is_deterministic_per_seed() {
+        let s = IpmiSampler::one_hz();
+        let p = flat_profile(5.0, 100.0);
+        let a = s.sample(&p, &mut Pcg32::seed_from_u64(7));
+        let b = s.sample(&p, &mut Pcg32::seed_from_u64(7));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn quantization_produces_integer_watts() {
+        let s = IpmiSampler::one_hz();
+        let mut rng = Pcg32::seed_from_u64(3);
+        let t = s.sample(&flat_profile(3.0, 110.4), &mut rng);
+        for smp in &t.samples {
+            assert!((smp.watts - smp.watts.round()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn boundary_reading_reports_previous_phase() {
+        let mut p = PowerProfile::new();
+        p.push(2.0, 100.0);
+        p.push(2.0, 200.0);
+        let s = IpmiSampler::new(IpmiConfig {
+            period_s: 1.0,
+            noise_w_std: 0.0,
+            quantum_w: 0.0,
+        });
+        let mut rng = Pcg32::seed_from_u64(4);
+        let t = s.sample(&p, &mut rng);
+        // Reading at t=2.0 belongs to the first phase (sensor lag).
+        assert_eq!(t.samples[2].watts, 100.0);
+        assert_eq!(t.samples[3].watts, 200.0);
+        // Final reading at t=4.0 reports the last phase.
+        assert_eq!(t.samples.last().unwrap().watts, 200.0);
+    }
+
+    #[test]
+    fn short_profile_still_has_two_samples() {
+        let s = IpmiSampler::one_hz();
+        let mut rng = Pcg32::seed_from_u64(5);
+        let t = s.sample(&flat_profile(0.4, 50.0), &mut rng);
+        assert_eq!(t.samples.len(), 2);
+        assert!((t.duration_s() - 0.4).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,10 @@
+//! Power telemetry substrate: exact piecewise power profiles produced by
+//! the device models, an IPMI-style 1 Hz sampler (the paper measured the
+//! whole-server draw with `ipmitool` on a Dell R740), and Watt·second
+//! energy integration — the metric of the paper's Fig. 5.
+
+pub mod ipmi;
+pub mod trace;
+
+pub use ipmi::{IpmiConfig, IpmiSampler};
+pub use trace::{PowerProfile, PowerSample, PowerTrace};

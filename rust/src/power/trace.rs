@@ -1,0 +1,175 @@
+//! Power traces: timestamped Watt samples plus the piecewise-constant
+//! *phase* representation the device models produce. Energy is reported in
+//! Watt·seconds, the unit of the paper's headline result (Fig. 5:
+//! 1,690 W·s CPU-only → 223 W·s offloaded).
+
+/// One power reading.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerSample {
+    /// Seconds since the start of the measurement.
+    pub t_s: f64,
+    /// Whole-server power draw in Watts.
+    pub watts: f64,
+}
+
+/// A piecewise-constant power profile: the *ground truth* the simulated
+/// server produces while executing (before IPMI sampling discretizes it).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PowerProfile {
+    phases: Vec<(f64, f64)>, // (duration_s, watts)
+}
+
+impl PowerProfile {
+    /// Empty profile.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a phase of `duration_s` seconds drawing `watts`.
+    /// Zero-duration phases are dropped.
+    pub fn push(&mut self, duration_s: f64, watts: f64) {
+        assert!(duration_s >= 0.0 && watts >= 0.0, "negative phase");
+        if duration_s > 0.0 {
+            self.phases.push((duration_s, watts));
+        }
+    }
+
+    /// Total duration.
+    pub fn duration_s(&self) -> f64 {
+        self.phases.iter().map(|p| p.0).sum()
+    }
+
+    /// Exact energy of the profile (∫P dt) in Watt·seconds.
+    pub fn energy_ws(&self) -> f64 {
+        self.phases.iter().map(|p| p.0 * p.1).sum()
+    }
+
+    /// Mean power over the profile.
+    pub fn mean_w(&self) -> f64 {
+        let d = self.duration_s();
+        if d <= 0.0 {
+            0.0
+        } else {
+            self.energy_ws() / d
+        }
+    }
+
+    /// Instantaneous power at time `t` (last phase's value past the end,
+    /// 0.0 for an empty profile).
+    pub fn watts_at(&self, t: f64) -> f64 {
+        let mut acc = 0.0;
+        for &(d, w) in &self.phases {
+            acc += d;
+            if t < acc {
+                return w;
+            }
+        }
+        self.phases.last().map(|p| p.1).unwrap_or(0.0)
+    }
+
+    /// The phases as `(duration_s, watts)` pairs.
+    pub fn phases(&self) -> &[(f64, f64)] {
+        &self.phases
+    }
+}
+
+/// A sampled power trace (what `ipmitool` reports: 1 sample per poll).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PowerTrace {
+    /// Samples ordered by time.
+    pub samples: Vec<PowerSample>,
+}
+
+impl PowerTrace {
+    /// Construct from raw samples (must be time-ordered).
+    pub fn from_samples(samples: Vec<PowerSample>) -> Self {
+        debug_assert!(samples.windows(2).all(|w| w[0].t_s <= w[1].t_s));
+        Self { samples }
+    }
+
+    /// Trace duration (time of the last sample).
+    pub fn duration_s(&self) -> f64 {
+        self.samples.last().map(|s| s.t_s).unwrap_or(0.0)
+    }
+
+    /// Energy in Watt·seconds via trapezoidal integration — the same
+    /// estimate an operator computes from periodic IPMI readings.
+    pub fn energy_ws(&self) -> f64 {
+        self.samples
+            .windows(2)
+            .map(|w| 0.5 * (w[0].watts + w[1].watts) * (w[1].t_s - w[0].t_s))
+            .sum()
+    }
+
+    /// Mean power (energy / duration).
+    pub fn mean_w(&self) -> f64 {
+        let d = self.duration_s();
+        if d <= 0.0 {
+            self.samples.first().map(|s| s.watts).unwrap_or(0.0)
+        } else {
+            self.energy_ws() / d
+        }
+    }
+
+    /// Peak sample.
+    pub fn peak_w(&self) -> f64 {
+        self.samples.iter().map(|s| s.watts).fold(0.0, f64::max)
+    }
+
+    /// `(t, W)` pairs for plotting.
+    pub fn points(&self) -> Vec<(f64, f64)> {
+        self.samples.iter().map(|s| (s.t_s, s.watts)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_energy_and_mean() {
+        let mut p = PowerProfile::new();
+        p.push(14.0, 121.0);
+        assert!((p.energy_ws() - 1694.0).abs() < 1e-9);
+        assert!((p.mean_w() - 121.0).abs() < 1e-9);
+        assert_eq!(p.duration_s(), 14.0);
+    }
+
+    #[test]
+    fn profile_watts_at_lookup() {
+        let mut p = PowerProfile::new();
+        p.push(2.0, 100.0);
+        p.push(3.0, 110.0);
+        assert_eq!(p.watts_at(1.0), 100.0);
+        assert_eq!(p.watts_at(2.5), 110.0);
+        assert_eq!(p.watts_at(99.0), 110.0);
+    }
+
+    #[test]
+    fn zero_duration_phases_dropped() {
+        let mut p = PowerProfile::new();
+        p.push(0.0, 500.0);
+        p.push(1.0, 100.0);
+        assert_eq!(p.phases().len(), 1);
+    }
+
+    #[test]
+    fn trace_trapezoid_energy() {
+        let t = PowerTrace::from_samples(vec![
+            PowerSample { t_s: 0.0, watts: 100.0 },
+            PowerSample { t_s: 1.0, watts: 120.0 },
+            PowerSample { t_s: 2.0, watts: 100.0 },
+        ]);
+        assert!((t.energy_ws() - 220.0).abs() < 1e-9);
+        assert!((t.mean_w() - 110.0).abs() < 1e-9);
+        assert_eq!(t.peak_w(), 120.0);
+    }
+
+    #[test]
+    fn empty_trace_is_safe() {
+        let t = PowerTrace::default();
+        assert_eq!(t.energy_ws(), 0.0);
+        assert_eq!(t.mean_w(), 0.0);
+        assert_eq!(t.duration_s(), 0.0);
+    }
+}

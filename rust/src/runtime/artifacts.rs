@@ -1,0 +1,165 @@
+//! Artifact discovery: locate `artifacts/*.hlo.txt` + `meta.json` written
+//! by the compile path (`make artifacts`). Python never runs at request
+//! time — the Rust binary is self-contained once these files exist.
+
+use crate::util::json::{self, Json};
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// Metadata of one AOT-compiled model variant.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    /// Variant name (e.g. `mriq_cpu_small`).
+    pub name: String,
+    /// HLO text file (absolute path).
+    pub path: PathBuf,
+    /// k-space sample count.
+    pub num_k: usize,
+    /// Voxel count.
+    pub num_x: usize,
+    /// Input names in parameter order.
+    pub inputs: Vec<String>,
+    /// Output names in tuple order.
+    pub outputs: Vec<String>,
+}
+
+/// The artifact directory contents.
+#[derive(Debug, Clone)]
+pub struct ArtifactDir {
+    /// Directory path.
+    pub dir: PathBuf,
+    /// Variants from `meta.json`.
+    pub variants: Vec<ArtifactMeta>,
+}
+
+/// Resolve the artifact directory: `$ENADAPT_ARTIFACTS`, else `artifacts/`
+/// under the current directory, else under the crate root (so `cargo test`
+/// works from anywhere in the workspace).
+pub fn default_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("ENADAPT_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.exists() {
+        return cwd;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Load artifact metadata from a directory.
+pub fn load(dir: &Path) -> Result<ArtifactDir> {
+    let meta_path = dir.join("meta.json");
+    let text = std::fs::read_to_string(&meta_path).map_err(|e| {
+        Error::Runtime(format!(
+            "cannot read {} (run `make artifacts` first): {e}",
+            meta_path.display()
+        ))
+    })?;
+    let parsed = json::parse(&text)
+        .map_err(|e| Error::Runtime(format!("bad meta.json: {e}")))?;
+    let obj = match &parsed {
+        Json::Obj(m) => m,
+        _ => return Err(Error::Runtime("meta.json is not an object".into())),
+    };
+    let mut variants = Vec::new();
+    for (name, v) in obj {
+        let get_num = |key: &str| -> Result<usize> {
+            v.get(key)
+                .and_then(|j| j.as_f64())
+                .map(|f| f as usize)
+                .ok_or_else(|| Error::Runtime(format!("meta.json: {name}.{key} missing")))
+        };
+        let get_list = |key: &str| -> Vec<String> {
+            v.get(key)
+                .and_then(|j| j.as_arr())
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|x| x.as_str().map(|s| s.to_string()))
+                        .collect()
+                })
+                .unwrap_or_default()
+        };
+        let file = v
+            .get("file")
+            .and_then(|j| j.as_str())
+            .ok_or_else(|| Error::Runtime(format!("meta.json: {name}.file missing")))?;
+        variants.push(ArtifactMeta {
+            name: name.clone(),
+            path: dir.join(file),
+            num_k: get_num("num_k")?,
+            num_x: get_num("num_x")?,
+            inputs: get_list("inputs"),
+            outputs: get_list("outputs"),
+        });
+    }
+    variants.sort_by(|a, b| a.name.cmp(&b.name));
+    Ok(ArtifactDir {
+        dir: dir.to_path_buf(),
+        variants,
+    })
+}
+
+impl ArtifactDir {
+    /// Find a variant by name.
+    pub fn variant(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.variants
+            .iter()
+            .find(|v| v.name == name)
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "artifact '{name}' not found in {} (have: {})",
+                    self.dir.display(),
+                    self.variants
+                        .iter()
+                        .map(|v| v.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ))
+            })
+    }
+
+    /// True when all declared HLO files exist on disk.
+    pub fn complete(&self) -> bool {
+        !self.variants.is_empty() && self.variants.iter().all(|v| v.path.exists())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> Option<ArtifactDir> {
+        let dir = default_dir();
+        match load(&dir) {
+            Ok(a) if a.complete() => Some(a),
+            _ => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn meta_parses_and_files_exist() {
+        let Some(a) = artifacts_available() else { return };
+        assert!(a.variants.len() >= 4);
+        let small = a.variant("mriq_cpu_small").unwrap();
+        assert_eq!(small.num_k, 128);
+        assert_eq!(small.num_x, 512);
+        assert_eq!(small.inputs.len(), 8);
+        assert_eq!(small.outputs.len(), 2);
+    }
+
+    #[test]
+    fn missing_variant_reports_choices() {
+        let Some(a) = artifacts_available() else { return };
+        let err = a.variant("nope").unwrap_err().to_string();
+        assert!(err.contains("mriq_cpu_small"));
+    }
+
+    #[test]
+    fn missing_dir_is_a_clean_error() {
+        let err = load(Path::new("/nonexistent/artifacts")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

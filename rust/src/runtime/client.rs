@@ -1,0 +1,243 @@
+//! PJRT client wrapper: load HLO text → compile → execute, with wall-time
+//! measurement. This is the Layer-3 ⇄ Layer-2 bridge: the Rust coordinator
+//! executes the AOT-lowered JAX/Pallas computations natively via the `xla`
+//! crate (xla_extension 0.5.1, CPU plugin) — Python is never on this path.
+
+use super::artifacts::ArtifactMeta;
+use crate::{Error, Result};
+use std::path::Path;
+use std::time::Instant;
+
+/// A PJRT runtime session (one CPU client, many loaded executables).
+pub struct HloRuntime {
+    client: xla::PjRtClient,
+}
+
+impl HloRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
+        Ok(Self { client })
+    }
+
+    /// Platform name (e.g. `cpu`).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Device count.
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load + compile an HLO text file.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
+            Error::Runtime(format!("parse {}: {e}", path.display()))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {}: {e}", path.display())))?;
+        Ok(LoadedExecutable {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+
+    /// Load a catalogued artifact.
+    pub fn load_artifact(&self, meta: &ArtifactMeta) -> Result<LoadedModel> {
+        let exe = self.load_hlo_text(&meta.path)?;
+        Ok(LoadedModel {
+            exe,
+            meta: meta.clone(),
+        })
+    }
+}
+
+/// A compiled executable.
+pub struct LoadedExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Name (file stem).
+    pub name: String,
+}
+
+/// One timed execution result.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    /// Tuple outputs as f32 vectors.
+    pub outputs: Vec<Vec<f32>>,
+    /// Wall time of the execute call, seconds.
+    pub wall_s: f64,
+}
+
+impl LoadedExecutable {
+    /// Execute with f32 vector inputs; returns tuple outputs + wall time.
+    pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<RunResult> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|v| xla::Literal::vec1(v))
+            .collect();
+        let start = Instant::now();
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("execute {}: {e}", self.name)))?;
+        let wall_s = start.elapsed().as_secs_f64();
+        let first = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| Error::Runtime("no output buffers".into()))?;
+        let mut literal = first
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch {}: {e}", self.name)))?;
+        // Lowered with return_tuple=True: decompose the tuple.
+        let elements = literal
+            .decompose_tuple()
+            .map_err(|e| Error::Runtime(format!("untuple {}: {e}", self.name)))?;
+        let outputs = elements
+            .into_iter()
+            .map(|l| {
+                l.to_vec::<f32>()
+                    .map_err(|e| Error::Runtime(format!("to_vec {}: {e}", self.name)))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(RunResult { outputs, wall_s })
+    }
+}
+
+/// A compiled artifact with its metadata (knows how to build inputs).
+pub struct LoadedModel {
+    /// The executable.
+    pub exe: LoadedExecutable,
+    /// Catalogue entry.
+    pub meta: ArtifactMeta,
+}
+
+impl LoadedModel {
+    /// Synthetic MRI-Q inputs matching `python/compile/model.py`'s
+    /// `synth_inputs` (and `workloads/mriq.c`'s generator).
+    pub fn synth_inputs(&self) -> Vec<Vec<f32>> {
+        synth_mriq_inputs(self.meta.num_k, self.meta.num_x)
+    }
+
+    /// Execute on the synthetic inputs.
+    pub fn run_synth(&self) -> Result<RunResult> {
+        self.exe.run_f32(&self.synth_inputs())
+    }
+}
+
+/// Build the synthetic MRI-Q input set (stacked-spiral trajectory,
+/// 8×8×N voxel lattice) — must match the Python generator exactly so
+/// rust-side and python-side numerics are comparable.
+pub fn synth_mriq_inputs(num_k: usize, num_x: usize) -> Vec<Vec<f32>> {
+    const PI2: f32 = 6.2831855;
+    let mut kx = Vec::with_capacity(num_k);
+    let mut ky = Vec::with_capacity(num_k);
+    let mut kz = Vec::with_capacity(num_k);
+    let mut phi_r = Vec::with_capacity(num_k);
+    let mut phi_i = Vec::with_capacity(num_k);
+    for k in 0..num_k {
+        let t = k as f32 / num_k as f32;
+        kx.push(0.5 * (PI2 * 3.0 * t).cos());
+        ky.push(0.5 * (PI2 * 3.0 * t).sin());
+        kz.push(t - 0.5);
+        let window = 0.54 - 0.46 * (PI2 * t).cos();
+        phi_r.push((1.0 - 0.5 * t) * window);
+        phi_i.push((0.25 * (PI2 * t).sin()) * window);
+    }
+    let mut x = Vec::with_capacity(num_x);
+    let mut y = Vec::with_capacity(num_x);
+    let mut z = Vec::with_capacity(num_x);
+    for i in 0..num_x {
+        x.push(((i % 8) as f32 / 8.0 - 0.5) * 0.9);
+        y.push((((i / 8) % 8) as f32 / 8.0 - 0.5) * 0.9);
+        z.push(((i / 64) as f32 / 8.0 - 0.5) * 0.9);
+    }
+    vec![kx, ky, kz, x, y, z, phi_r, phi_i]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts;
+
+    fn runtime_and_artifacts() -> Option<(HloRuntime, artifacts::ArtifactDir)> {
+        let dir = artifacts::default_dir();
+        let arts = match artifacts::load(&dir) {
+            Ok(a) if a.complete() => a,
+            _ => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return None;
+            }
+        };
+        Some((HloRuntime::cpu().expect("cpu client"), arts))
+    }
+
+    #[test]
+    fn loads_and_runs_cpu_variant() {
+        let Some((rt, arts)) = runtime_and_artifacts() else { return };
+        assert_eq!(rt.platform(), "cpu");
+        assert!(rt.device_count() >= 1);
+        let model = rt
+            .load_artifact(arts.variant("mriq_cpu_small").unwrap())
+            .unwrap();
+        let out = model.run_synth().unwrap();
+        assert_eq!(out.outputs.len(), 2);
+        assert_eq!(out.outputs[0].len(), 512);
+        assert!(out.outputs[0].iter().all(|v| v.is_finite()));
+        assert!(out.wall_s > 0.0);
+    }
+
+    #[test]
+    fn cpu_and_offload_variants_agree_numerically() {
+        let Some((rt, arts)) = runtime_and_artifacts() else { return };
+        let cpu = rt
+            .load_artifact(arts.variant("mriq_cpu_small").unwrap())
+            .unwrap();
+        let off = rt
+            .load_artifact(arts.variant("mriq_offload_small").unwrap())
+            .unwrap();
+        let a = cpu.run_synth().unwrap();
+        let b = off.run_synth().unwrap();
+        for (qa, qb) in a.outputs.iter().zip(&b.outputs) {
+            assert_eq!(qa.len(), qb.len());
+            for (va, vb) in qa.iter().zip(qb) {
+                let tol = 3e-4_f32.max(3e-4 * va.abs());
+                assert!(
+                    (va - vb).abs() <= tol,
+                    "cpu {va} vs pallas {vb} (tol {tol})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn outputs_are_nontrivial() {
+        let Some((rt, arts)) = runtime_and_artifacts() else { return };
+        let model = rt
+            .load_artifact(arts.variant("mriq_cpu_small").unwrap())
+            .unwrap();
+        let out = model.run_synth().unwrap();
+        let energy: f32 = out.outputs[0]
+            .iter()
+            .zip(&out.outputs[1])
+            .map(|(r, i)| r * r + i * i)
+            .sum();
+        assert!(energy > 1.0, "energy {energy}");
+    }
+
+    #[test]
+    fn bad_path_is_clean_error() {
+        let Some((rt, _)) = runtime_and_artifacts() else { return };
+        match rt.load_hlo_text(Path::new("/nonexistent.hlo.txt")) {
+            Ok(_) => panic!("loading a nonexistent file must fail"),
+            Err(e) => assert!(e.to_string().contains("nonexistent")),
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, written
+//! once by `make artifacts`) and executes them natively from Rust via the
+//! `xla` crate. Python never runs on this path; interchange is HLO *text*
+//! (jax ≥ 0.5 emits 64-bit-id protos that xla_extension 0.5.1 rejects).
+
+pub mod artifacts;
+pub mod client;
+pub mod timing;
+
+pub use artifacts::{default_dir, load as load_artifacts, ArtifactDir, ArtifactMeta};
+pub use client::{synth_mriq_inputs, HloRuntime, LoadedExecutable, LoadedModel, RunResult};
+pub use timing::{scale_to_full, time_model, TimingStats};

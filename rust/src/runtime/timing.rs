@@ -1,0 +1,83 @@
+//! Execution timing: repeated-run wall-time statistics used to calibrate
+//! the verification environment's CPU baseline from *real* executed HLO
+//! (the paper measured its baseline on the real testbed CPU; we measure
+//! the real PJRT execution of the same computation and scale).
+
+use super::client::LoadedModel;
+use crate::util::stats::Welford;
+use crate::Result;
+
+/// Wall-time statistics of repeated executions.
+#[derive(Debug, Clone, Copy)]
+pub struct TimingStats {
+    /// Executions measured.
+    pub runs: u64,
+    /// Mean wall seconds.
+    pub mean_s: f64,
+    /// Sample standard deviation.
+    pub std_s: f64,
+    /// Fastest run.
+    pub min_s: f64,
+    /// Slowest run.
+    pub max_s: f64,
+}
+
+/// Time `runs` executions (after `warmup` unmeasured ones).
+pub fn time_model(model: &LoadedModel, warmup: u32, runs: u32) -> Result<TimingStats> {
+    let inputs = model.synth_inputs();
+    for _ in 0..warmup {
+        model.exe.run_f32(&inputs)?;
+    }
+    let mut w = Welford::new();
+    for _ in 0..runs.max(1) {
+        let r = model.exe.run_f32(&inputs)?;
+        w.push(r.wall_s);
+    }
+    Ok(TimingStats {
+        runs: w.count(),
+        mean_s: w.mean(),
+        std_s: w.stddev(),
+        min_s: w.min(),
+        max_s: w.max(),
+    })
+}
+
+/// Scale a measured sample-size wall time to the paper's full problem:
+/// MRI-Q work grows as `numX · numK`, so the full-size CPU time estimate is
+/// `measured · (full_x · full_k) / (x · k)`. Used by the coordinator to
+/// seed [`crate::verifier::AppModel`] with a *measured* baseline.
+pub fn scale_to_full(measured_s: f64, num_k: usize, num_x: usize, full_k: usize, full_x: usize) -> f64 {
+    measured_s * (full_k as f64 * full_x as f64) / (num_k as f64 * num_x as f64).max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts, HloRuntime};
+
+    #[test]
+    fn scaling_is_linear_in_work() {
+        let s = scale_to_full(0.01, 128, 512, 2048, 262_144);
+        assert!((s - 0.01 * 8192.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timing_stats_are_sane() {
+        let dir = artifacts::default_dir();
+        let arts = match artifacts::load(&dir) {
+            Ok(a) if a.complete() => a,
+            _ => {
+                eprintln!("skipping: artifacts not built");
+                return;
+            }
+        };
+        let rt = HloRuntime::cpu().unwrap();
+        let model = rt
+            .load_artifact(arts.variant("mriq_cpu_small").unwrap())
+            .unwrap();
+        let t = time_model(&model, 1, 3).unwrap();
+        assert_eq!(t.runs, 3);
+        assert!(t.mean_s > 0.0);
+        assert!(t.min_s <= t.mean_s && t.mean_s <= t.max_s);
+    }
+}

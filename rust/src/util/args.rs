@@ -1,0 +1,345 @@
+//! Tiny declarative CLI argument parser (replaces `clap`, unavailable
+//! offline). Supports subcommands, `--flag`, `--key value` / `--key=value`
+//! options with defaults, and positional arguments, plus generated help.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Declarative spec for one option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    /// Long name without the leading `--`.
+    pub name: &'static str,
+    /// Help text.
+    pub help: &'static str,
+    /// Default value (None = required if not a flag).
+    pub default: Option<&'static str>,
+    /// True for boolean flags (no value).
+    pub flag: bool,
+}
+
+/// Declarative spec for a subcommand.
+#[derive(Debug, Clone)]
+pub struct CmdSpec {
+    /// Subcommand name.
+    pub name: &'static str,
+    /// One-line description.
+    pub about: &'static str,
+    /// Options accepted by the subcommand.
+    pub opts: Vec<OptSpec>,
+    /// Names of positional arguments (all required, in order).
+    pub positionals: Vec<&'static str>,
+}
+
+/// Parsed arguments for a matched subcommand.
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    /// Matched subcommand name.
+    pub cmd: String,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+impl Parsed {
+    /// String value of an option (from CLI or default).
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Required string value; panics with a clear message if the spec was
+    /// wrong (missing default for a required option is a programming error
+    /// caught at parse time, so this is safe for spec'd options).
+    pub fn req(&self, name: &str) -> &str {
+        self.get(name)
+            .unwrap_or_else(|| panic!("option --{name} missing (spec error)"))
+    }
+
+    /// f64 value of an option.
+    pub fn get_f64(&self, name: &str) -> Result<f64, ArgError> {
+        let raw = self.get(name).ok_or_else(|| ArgError::Missing(name.to_string()))?;
+        raw.parse()
+            .map_err(|_| ArgError::Invalid(name.to_string(), raw.to_string()))
+    }
+
+    /// u64 value of an option.
+    pub fn get_u64(&self, name: &str) -> Result<u64, ArgError> {
+        let raw = self.get(name).ok_or_else(|| ArgError::Missing(name.to_string()))?;
+        raw.parse()
+            .map_err(|_| ArgError::Invalid(name.to_string(), raw.to_string()))
+    }
+
+    /// usize value of an option.
+    pub fn get_usize(&self, name: &str) -> Result<usize, ArgError> {
+        Ok(self.get_u64(name)? as usize)
+    }
+
+    /// True if a boolean flag was passed.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    /// Positional argument by index.
+    pub fn pos(&self, idx: usize) -> Option<&str> {
+        self.positionals.get(idx).map(|s| s.as_str())
+    }
+}
+
+/// Argument parsing error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ArgError {
+    /// No subcommand or an unknown one.
+    UnknownCommand(String),
+    /// Unknown option for the subcommand.
+    UnknownOption(String),
+    /// Required option missing.
+    Missing(String),
+    /// Value failed to parse.
+    Invalid(String, String),
+    /// The user asked for help; message is the help text.
+    Help(String),
+}
+
+impl fmt::Display for ArgError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArgError::UnknownCommand(c) => write!(f, "unknown command '{c}' (try --help)"),
+            ArgError::UnknownOption(o) => write!(f, "unknown option '{o}'"),
+            ArgError::Missing(o) => write!(f, "missing required option --{o}"),
+            ArgError::Invalid(o, v) => write!(f, "invalid value '{v}' for --{o}"),
+            ArgError::Help(h) => write!(f, "{h}"),
+        }
+    }
+}
+
+/// A CLI application: name, description and subcommands.
+#[derive(Debug, Clone)]
+pub struct App {
+    /// Binary name (for help output).
+    pub name: &'static str,
+    /// One-line description.
+    pub about: &'static str,
+    /// Subcommands.
+    pub commands: Vec<CmdSpec>,
+}
+
+impl App {
+    /// Render top-level help.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n", self.name, self.about, self.name);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<12} {}\n", c.name, c.about));
+        }
+        s.push_str(&format!("\nRun '{} <command> --help' for command options.\n", self.name));
+        s
+    }
+
+    /// Render help for one subcommand.
+    pub fn cmd_help(&self, cmd: &CmdSpec) -> String {
+        let mut s = format!("{} {} — {}\n\nUSAGE:\n  {} {}", self.name, cmd.name, cmd.about, self.name, cmd.name);
+        for p in &cmd.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [options]\n\nOPTIONS:\n");
+        for o in &cmd.opts {
+            let left = if o.flag {
+                format!("--{}", o.name)
+            } else if let Some(d) = o.default {
+                format!("--{} <v={d}>", o.name)
+            } else {
+                format!("--{} <v>", o.name)
+            };
+            s.push_str(&format!("  {:<28} {}\n", left, o.help));
+        }
+        s
+    }
+
+    /// Parse a raw argv (without the binary name).
+    pub fn parse(&self, argv: &[String]) -> Result<Parsed, ArgError> {
+        let first = argv.first().map(|s| s.as_str());
+        match first {
+            None | Some("--help") | Some("-h") | Some("help") => {
+                return Err(ArgError::Help(self.help()));
+            }
+            _ => {}
+        }
+        let cmd_name = first.unwrap();
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| ArgError::UnknownCommand(cmd_name.to_string()))?;
+
+        let mut values = BTreeMap::new();
+        let mut flags = BTreeMap::new();
+        let mut positionals = Vec::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(ArgError::Help(self.cmd_help(cmd)));
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = cmd
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| ArgError::UnknownOption(a.clone()))?;
+                if spec.flag {
+                    flags.insert(key, true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| ArgError::Missing(key.clone()))?
+                        }
+                    };
+                    values.insert(key, val);
+                }
+            } else {
+                positionals.push(a.clone());
+            }
+            i += 1;
+        }
+
+        // Apply defaults, check required.
+        for o in &cmd.opts {
+            if o.flag || values.contains_key(o.name) {
+                continue;
+            }
+            match o.default {
+                Some(d) => {
+                    values.insert(o.name.to_string(), d.to_string());
+                }
+                None => return Err(ArgError::Missing(o.name.to_string())),
+            }
+        }
+        if positionals.len() < cmd.positionals.len() {
+            return Err(ArgError::Missing(cmd.positionals[positionals.len()].to_string()));
+        }
+
+        Ok(Parsed {
+            cmd: cmd.name.to_string(),
+            values,
+            flags,
+            positionals,
+        })
+    }
+}
+
+/// Shorthand for a value option with a default.
+pub fn opt(name: &'static str, default: &'static str, help: &'static str) -> OptSpec {
+    OptSpec {
+        name,
+        help,
+        default: Some(default),
+        flag: false,
+    }
+}
+
+/// Shorthand for a required value option.
+pub fn opt_req(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec {
+        name,
+        help,
+        default: None,
+        flag: false,
+    }
+}
+
+/// Shorthand for a boolean flag.
+pub fn flag(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec {
+        name,
+        help,
+        default: None,
+        flag: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App {
+            name: "enadapt",
+            about: "test app",
+            commands: vec![CmdSpec {
+                name: "offload",
+                about: "run offload",
+                opts: vec![
+                    opt("seed", "42", "rng seed"),
+                    opt_req("dest", "destination"),
+                    flag("verbose", "chatty"),
+                ],
+                positionals: vec!["source"],
+            }],
+        }
+    }
+
+    fn argv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_and_positionals() {
+        let p = app()
+            .parse(&argv(&["offload", "mriq.c", "--dest", "fpga", "--verbose"]))
+            .unwrap();
+        assert_eq!(p.cmd, "offload");
+        assert_eq!(p.pos(0), Some("mriq.c"));
+        assert_eq!(p.req("dest"), "fpga");
+        assert_eq!(p.get_u64("seed").unwrap(), 42);
+        assert!(p.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let p = app()
+            .parse(&argv(&["offload", "x.c", "--dest=gpu", "--seed=7"]))
+            .unwrap();
+        assert_eq!(p.req("dest"), "gpu");
+        assert_eq!(p.get_u64("seed").unwrap(), 7);
+    }
+
+    #[test]
+    fn missing_required_is_error() {
+        let e = app().parse(&argv(&["offload", "x.c"])).unwrap_err();
+        assert_eq!(e, ArgError::Missing("dest".to_string()));
+    }
+
+    #[test]
+    fn missing_positional_is_error() {
+        let e = app().parse(&argv(&["offload", "--dest", "gpu"])).unwrap_err();
+        assert_eq!(e, ArgError::Missing("source".to_string()));
+    }
+
+    #[test]
+    fn unknown_bits_are_errors() {
+        assert!(matches!(
+            app().parse(&argv(&["nope"])).unwrap_err(),
+            ArgError::UnknownCommand(_)
+        ));
+        assert!(matches!(
+            app().parse(&argv(&["offload", "x.c", "--dest", "g", "--wat"])).unwrap_err(),
+            ArgError::UnknownOption(_)
+        ));
+    }
+
+    #[test]
+    fn help_paths() {
+        assert!(matches!(app().parse(&argv(&[])).unwrap_err(), ArgError::Help(_)));
+        assert!(matches!(
+            app().parse(&argv(&["offload", "--help"])).unwrap_err(),
+            ArgError::Help(_)
+        ));
+    }
+}

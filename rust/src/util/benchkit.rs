@@ -1,0 +1,101 @@
+//! Tiny wall-clock benchmark harness (replaces `criterion`, unavailable
+//! offline). Used by the `rust/benches/*` experiment drivers: warmup +
+//! timed iterations, robust statistics, aligned reporting.
+
+use crate::util::stats;
+use std::time::Instant;
+
+/// Statistics of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStat {
+    /// Benchmark name.
+    pub name: String,
+    /// Timed iterations.
+    pub iters: u32,
+    /// Mean seconds per iteration.
+    pub mean_s: f64,
+    /// Sample standard deviation.
+    pub std_s: f64,
+    /// Fastest iteration.
+    pub min_s: f64,
+    /// Median iteration.
+    pub median_s: f64,
+}
+
+impl BenchStat {
+    /// One-line report.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>10}/iter  (median {:>10}, min {:>10}, ±{:>9}, n={})",
+            self.name,
+            crate::util::tablefmt::fmt_secs(self.mean_s),
+            crate::util::tablefmt::fmt_secs(self.median_s),
+            crate::util::tablefmt::fmt_secs(self.min_s),
+            crate::util::tablefmt::fmt_secs(self.std_s),
+            self.iters
+        )
+    }
+}
+
+/// Run `f` for `warmup` unmeasured + `iters` measured iterations.
+pub fn bench(name: &str, warmup: u32, iters: u32, mut f: impl FnMut()) -> BenchStat {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters.max(1) as usize);
+    for _ in 0..iters.max(1) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    BenchStat {
+        name: name.to_string(),
+        iters: iters.max(1),
+        mean_s: stats::mean(&samples),
+        std_s: stats::stddev(&samples),
+        min_s: stats::min(&samples),
+        median_s: stats::median(&samples),
+    }
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n──── {title} {}", "─".repeat(64usize.saturating_sub(title.len())));
+}
+
+/// A paper-vs-measured assertion with a tolerance band; prints PASS/FAIL
+/// and returns whether it held (benches report, they don't panic).
+pub fn check_band(label: &str, measured: f64, lo: f64, hi: f64) -> bool {
+    let ok = (lo..=hi).contains(&measured);
+    println!(
+        "  [{}] {label}: {measured:.3} (expected band {lo:.3} – {hi:.3})",
+        if ok { "PASS" } else { "FAIL" }
+    );
+    ok
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_positive_times() {
+        let s = bench("spin", 1, 5, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(s.mean_s > 0.0);
+        assert!(s.min_s <= s.median_s);
+        assert_eq!(s.iters, 5);
+        assert!(s.row().contains("spin"));
+    }
+
+    #[test]
+    fn check_band_logic() {
+        assert!(check_band("x", 5.0, 4.0, 6.0));
+        assert!(!check_band("x", 7.0, 4.0, 6.0));
+    }
+}

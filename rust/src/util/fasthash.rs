@@ -1,0 +1,67 @@
+//! FNV-1a hasher (replaces `fxhash`/`ahash`, unavailable offline).
+//!
+//! The profiling interpreter resolves variables by `String` key millions
+//! of times per run; std's SipHash is DoS-resistant but slow for short
+//! keys. FNV-1a is the classic fast-small-key choice (§Perf iteration 1:
+//! analyze_source(mriq) 150 ms → see EXPERIMENTS.md).
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// FNV-1a 64-bit hasher.
+#[derive(Default)]
+pub struct Fnv64 {
+    state: u64,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+impl Hasher for Fnv64 {
+    fn finish(&self) -> u64 {
+        self.state ^ FNV_OFFSET
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        let mut h = if self.state == 0 { FNV_OFFSET } else { self.state };
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        self.state = h;
+    }
+}
+
+/// `HashMap` with the FNV hasher.
+pub type FastMap<K, V> = HashMap<K, V, BuildHasherDefault<Fnv64>>;
+
+/// Empty [`FastMap`].
+pub fn fast_map<K, V>() -> FastMap<K, V> {
+    FastMap::default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn behaves_like_a_map() {
+        let mut m: FastMap<String, i32> = fast_map();
+        m.insert("kx".into(), 1);
+        m.insert("phiMag".into(), 2);
+        assert_eq!(m.get("kx"), Some(&1));
+        assert_eq!(m.get("phiMag"), Some(&2));
+        assert_eq!(m.get("nope"), None);
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn distinct_keys_hash_distinctly_enough() {
+        use std::hash::{BuildHasher, BuildHasherDefault};
+        let bh: BuildHasherDefault<Fnv64> = Default::default();
+        let hashes: std::collections::HashSet<u64> = (0..1000)
+            .map(|i| bh.hash_one(format!("var{i}")))
+            .collect();
+        assert!(hashes.len() > 990, "collisions: {}", 1000 - hashes.len());
+    }
+}

@@ -1,0 +1,142 @@
+//! Lightweight leveled logger (replaces `log`/`env_logger`). Controlled by
+//! the `ENADAPT_LOG` environment variable (`error|warn|info|debug|trace`,
+//! default `info`), writes to stderr so stdout stays machine-readable.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+/// Log severity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Unrecoverable problems.
+    Error = 0,
+    /// Suspicious but recoverable.
+    Warn = 1,
+    /// Progress notes (default).
+    Info = 2,
+    /// Developer detail.
+    Debug = 3,
+    /// Firehose.
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255);
+
+fn level() -> u8 {
+    let cur = LEVEL.load(Ordering::Relaxed);
+    if cur != 255 {
+        return cur;
+    }
+    let parsed = match std::env::var("ENADAPT_LOG").as_deref() {
+        Ok("error") => 0,
+        Ok("warn") => 1,
+        Ok("debug") => 3,
+        Ok("trace") => 4,
+        _ => 2,
+    };
+    LEVEL.store(parsed, Ordering::Relaxed);
+    parsed
+}
+
+/// Override the log level programmatically (tests, CLI `--verbose`).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// True if `l` would currently be emitted.
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= level()
+}
+
+/// Emit a record (used via the macros below).
+pub fn log(l: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    let tag = match l {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    eprintln!("[{tag}] {module}: {msg}");
+}
+
+/// `info!`-style macros bound to this logger.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), format_args!($($arg)*))
+    };
+}
+
+/// Warning-level log macro.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($arg)*))
+    };
+}
+
+/// Debug-level log macro.
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($arg)*))
+    };
+}
+
+/// Simple scope timer: logs elapsed wall time at Debug when dropped.
+pub struct ScopeTimer {
+    name: &'static str,
+    start: Instant,
+}
+
+impl ScopeTimer {
+    /// Start timing a named scope.
+    pub fn new(name: &'static str) -> Self {
+        Self {
+            name,
+            start: Instant::now(),
+        }
+    }
+
+    /// Elapsed seconds so far.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Drop for ScopeTimer {
+    fn drop(&mut self) {
+        log(
+            Level::Debug,
+            "timer",
+            format_args!("{} took {:.3}s", self.name, self.elapsed_s()),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_level_controls_enabled() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+    }
+
+    #[test]
+    fn scope_timer_measures() {
+        let t = ScopeTimer::new("test");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.elapsed_s() >= 0.004);
+    }
+}

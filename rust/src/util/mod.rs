@@ -1,0 +1,15 @@
+//! In-tree substrates replacing crates that are unavailable in the offline
+//! registry (see DESIGN.md §3): PRNG, statistics, JSON, CLI argument
+//! parsing, a thread pool, table formatting, a property-testing harness and
+//! a lightweight logger. Each submodule is self-contained and unit-tested.
+
+pub mod args;
+pub mod benchkit;
+pub mod fasthash;
+pub mod json;
+pub mod logging;
+pub mod pool;
+pub mod prng;
+pub mod prop;
+pub mod stats;
+pub mod tablefmt;

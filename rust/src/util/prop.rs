@@ -1,0 +1,208 @@
+//! Minimal property-based testing harness (replaces `proptest`, which is
+//! unavailable offline). Provides seeded random case generation, a
+//! configurable case count, and greedy shrinking for the built-in
+//! strategies. Used by the test suites of `ga`, `canalyze`, `power` and
+//! `offload` to check invariants over randomized inputs.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the libxla rpath in this image)
+//! use enadapt::util::prop::{run, Gen};
+//!
+//! run("addition commutes", 200, |g| {
+//!     let a = g.i64_range(-1000, 1000);
+//!     let b = g.i64_range(-1000, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::prng::Pcg32;
+
+/// Per-case generator handed to the property closure. Records the draws so
+/// failures can be replayed and shrunk.
+pub struct Gen {
+    rng: Pcg32,
+    /// Shrink scale in (0,1]; 1.0 = full-size values. Shrinking reruns the
+    /// failing seed with smaller scales to find a smaller counterexample.
+    scale: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, scale: f64) -> Self {
+        Self {
+            rng: Pcg32::seed_from_u64(seed),
+            scale,
+        }
+    }
+
+    /// Uniform usize in `[lo, hi]` (inclusive), scaled toward `lo` when
+    /// shrinking.
+    pub fn usize_range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let span = ((hi - lo) as f64 * self.scale).round() as usize;
+        if span == 0 {
+            return lo;
+        }
+        lo + self.rng.below_usize(span + 1)
+    }
+
+    /// Uniform i64 in `[lo, hi]` (inclusive), scaled toward 0 when shrinking.
+    pub fn i64_range(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let lo_s = (lo as f64 * self.scale) as i64;
+        let hi_s = (hi as f64 * self.scale) as i64;
+        let (lo, hi) = (lo_s.min(hi_s), lo_s.max(hi_s));
+        let span = (hi - lo) as u64;
+        if span == 0 {
+            return lo;
+        }
+        if span <= u32::MAX as u64 {
+            lo + self.rng.below((span + 1) as u32) as i64
+        } else {
+            lo + (self.rng.next_u64() % (span + 1)) as i64
+        }
+    }
+
+    /// Uniform f64 in `[lo, hi)`, scaled toward `lo` when shrinking.
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.scale * self.rng.next_f64()
+    }
+
+    /// Strictly positive f64 in `[lo, hi)` that never shrinks below `lo`.
+    pub fn f64_pos(&mut self, lo: f64, hi: f64) -> f64 {
+        assert!(lo > 0.0 && hi > lo);
+        self.f64_range(lo, hi).max(lo)
+    }
+
+    /// Bernoulli.
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Vec of values from `f`, length in `[0, max_len]` (shrinks shorter).
+    pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let len = self.usize_range(0, max_len);
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Non-empty Vec, length in `[1, max_len]`.
+    pub fn vec1<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let len = self.usize_range(1, max_len.max(1));
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Pick one of the given items.
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        self.rng.choose(items)
+    }
+
+    /// Bit vector of the given length (shrinks toward all-zero).
+    pub fn bits(&mut self, len: usize) -> Vec<bool> {
+        (0..len).map(|_| self.rng.chance(0.5 * self.scale.max(0.05))).collect()
+    }
+
+    /// Access the underlying PRNG (for custom draws; these still replay
+    /// deterministically but do not shrink).
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+}
+
+/// Run a property over `cases` random cases. Panics (failing the enclosing
+/// `#[test]`) with the seed and the smallest reproduction scale on failure.
+///
+/// Set `ENADAPT_PROP_SEED` to replay a specific base seed.
+pub fn run(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    let base_seed = std::env::var("ENADAPT_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xE17A_DA97u64);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case.wrapping_mul(0x9E37_79B9));
+        let outcome = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed, 1.0);
+            prop(&mut g);
+        });
+        if let Err(panic) = outcome {
+            // Greedy shrink: rerun the same seed at smaller scales and
+            // report the smallest scale that still fails.
+            let mut failing_scale = 1.0;
+            for &scale in &[0.02, 0.05, 0.1, 0.25, 0.5, 0.75] {
+                let failed = std::panic::catch_unwind(|| {
+                    let mut g = Gen::new(seed, scale);
+                    prop(&mut g);
+                })
+                .is_err();
+                if failed {
+                    failing_scale = scale;
+                    break;
+                }
+            }
+            let msg = panic_message(&panic);
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}, min scale {failing_scale}): {msg}\n\
+                 replay with ENADAPT_PROP_SEED={base_seed}"
+            );
+        }
+    }
+}
+
+fn panic_message(p: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        run("sort is idempotent", 50, |g| {
+            let mut v = g.vec(32, |g| g.i64_range(-100, 100));
+            v.sort_unstable();
+            let w = {
+                let mut w = v.clone();
+                w.sort_unstable();
+                w
+            };
+            assert_eq!(v, w);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            run("always fails", 3, |_g| {
+                panic!("intentional");
+            });
+        });
+        let msg = panic_message(&result.unwrap_err());
+        assert!(msg.contains("seed"), "got: {msg}");
+        assert!(msg.contains("intentional"), "got: {msg}");
+    }
+
+    #[test]
+    fn ranges_respect_bounds() {
+        run("bounds", 100, |g| {
+            let x = g.usize_range(3, 10);
+            assert!((3..=10).contains(&x));
+            let y = g.i64_range(-5, 5);
+            assert!((-5..=5).contains(&y));
+            let z = g.f64_range(1.0, 2.0);
+            assert!((1.0..2.0).contains(&z));
+        });
+    }
+
+    #[test]
+    fn vec1_is_nonempty() {
+        run("vec1", 50, |g| {
+            let v = g.vec1(8, |g| g.bool());
+            assert!(!v.is_empty() && v.len() <= 8);
+        });
+    }
+}

@@ -1,0 +1,175 @@
+//! ASCII table and sparkline/plot rendering for CLI reports and bench
+//! output (the benches regenerate the paper's figure as a text series plus
+//! an ASCII power-vs-time plot, Fig. 5 style).
+
+/// A simple column-aligned ASCII table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Create a table with the given column headers.
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match the header arity).
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Append a row of &str.
+    pub fn row_str(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    /// Render with `|`-separated aligned columns and a rule under the header.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.chars().count());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+/// Render an ASCII line plot of `(x, y)` series — used to print the Fig. 5
+/// power-vs-time traces. Multiple series are overlaid with distinct glyphs.
+pub fn ascii_plot(series: &[(&str, &[(f64, f64)])], width: usize, height: usize) -> String {
+    const GLYPHS: [char; 6] = ['*', 'o', '+', 'x', '#', '@'];
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|(_, pts)| pts.iter().copied()).collect();
+    if all.is_empty() {
+        return String::from("(empty plot)\n");
+    }
+    let xmin = all.iter().map(|p| p.0).fold(f64::INFINITY, f64::min);
+    let xmax = all.iter().map(|p| p.0).fold(f64::NEG_INFINITY, f64::max);
+    let ymin = all.iter().map(|p| p.1).fold(f64::INFINITY, f64::min);
+    let ymax = all.iter().map(|p| p.1).fold(f64::NEG_INFINITY, f64::max);
+    let xspan = (xmax - xmin).max(1e-12);
+    let yspan = (ymax - ymin).max(1e-12);
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        let glyph = GLYPHS[si % GLYPHS.len()];
+        for &(x, y) in pts.iter() {
+            let cx = (((x - xmin) / xspan) * (width - 1) as f64).round() as usize;
+            let cy = (((y - ymin) / yspan) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            grid[row][cx.min(width - 1)] = glyph;
+        }
+    }
+
+    let mut out = String::new();
+    for (i, row) in grid.iter().enumerate() {
+        let yv = ymax - (i as f64 / (height - 1) as f64) * yspan;
+        out.push_str(&format!("{:>9.1} |", yv));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>9} +{}\n", "", "-".repeat(width)));
+    out.push_str(&format!(
+        "{:>9}  {:<w$.1}{:>r$.1}\n",
+        "",
+        xmin,
+        xmax,
+        w = width / 2,
+        r = width - width / 2
+    ));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("   {} {}\n", GLYPHS[si % GLYPHS.len()], name));
+    }
+    out
+}
+
+/// Format seconds compactly (`1.23s`, `45ms`, `12.3us`).
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.1}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.1}us", s * 1e6)
+    } else {
+        format!("{:.0}ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["pattern", "time_s", "watt"]);
+        t.row_str(&["cpu-only", "14.0", "121"]);
+        t.row_str(&["fpga", "2.0", "111"]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // All lines same width.
+        assert!(lines.iter().all(|l| l.chars().count() == lines[0].chars().count()));
+        assert!(s.contains("cpu-only"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_str(&["only-one"]);
+    }
+
+    #[test]
+    fn plot_contains_series_glyphs() {
+        let a: Vec<(f64, f64)> = (0..20).map(|i| (i as f64, 121.0)).collect();
+        let b: Vec<(f64, f64)> = (0..20).map(|i| (i as f64, 111.0)).collect();
+        let p = ascii_plot(&[("cpu", &a), ("fpga", &b)], 40, 10);
+        assert!(p.contains('*'));
+        assert!(p.contains('o'));
+        assert!(p.contains("cpu"));
+        assert!(p.contains("fpga"));
+    }
+
+    #[test]
+    fn plot_empty_is_safe() {
+        assert_eq!(ascii_plot(&[], 10, 5), "(empty plot)\n");
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(14.0), "14.00s");
+        assert_eq!(fmt_secs(0.045), "45.0ms");
+        assert_eq!(fmt_secs(12.3e-6), "12.3us");
+    }
+}

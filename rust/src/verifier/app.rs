@@ -1,0 +1,263 @@
+//! Application work model: turns the analyzer's static + dynamic profile
+//! of a program into full-problem-scale work terms the device models
+//! consume.
+//!
+//! The profiling interpreter runs the *sample-size* program (e.g. MRI-Q at
+//! 512 voxels × 128 k-samples); the paper's testbed runs the full size
+//! (64³ voxels × 2048 k-samples, 14 s CPU-only). The model bridges the two
+//! with a single calibration: the target CPU-only time. FLOP/byte/trip
+//! counts scale linearly with the work factor `s`; array payload sizes and
+//! loop-driven entry counts scale with the problem's linear dimension
+//! (≈ `√s` — documented approximation, DESIGN.md §6).
+
+use crate::canalyze::{Analysis, LoopId};
+use crate::devices::{CpuModel, NestWork};
+use crate::{Error, Result};
+
+/// Full-scale work attributed to one loop statement.
+#[derive(Debug, Clone)]
+pub struct LoopWork {
+    /// The loop.
+    pub id: LoopId,
+    /// Inclusive work of the loop's nest if offloaded as a region root.
+    pub work: NestWork,
+    /// Host CPU time of the inclusive region, seconds.
+    pub cpu_time_s: f64,
+    /// Parent loop, if nested.
+    pub parent: Option<LoopId>,
+    /// Is this loop a legal offload candidate?
+    pub parallelizable: bool,
+}
+
+/// The application as the verification environment sees it.
+#[derive(Debug, Clone)]
+pub struct AppModel {
+    /// Application name (reports).
+    pub name: String,
+    /// Candidate loop ids in genome order (the paper's "processable loop
+    /// statements" — 16 for MRI-Q).
+    pub candidates: Vec<LoopId>,
+    /// Work for every loop (indexed by `LoopId.0`).
+    pub loops: Vec<LoopWork>,
+    /// Full-app CPU-only time (the calibration target), seconds.
+    pub total_cpu_s: f64,
+    /// Work scale factor applied to the sample profile.
+    pub work_scale: f64,
+}
+
+impl AppModel {
+    /// Build from an analysis with a measured/target CPU-only time.
+    ///
+    /// Requires a dynamic profile (the paper's flow always measures in the
+    /// verification environment before searching).
+    pub fn from_analysis(an: &Analysis, cpu: &CpuModel, target_cpu_s: f64) -> Result<Self> {
+        let profile = an.profile.as_ref().ok_or_else(|| {
+            Error::Verify(format!("{}: no dynamic profile (program has no main)", an.file))
+        })?;
+        let total_flops = profile.total_flops().max(1.0);
+        let sample_cpu_s = cpu.straightline_time_s(total_flops, profile.total_bytes());
+        let s = target_cpu_s / sample_cpu_s.max(1e-12);
+        let data_scale = s.sqrt().max(1.0);
+
+        let loops = an
+            .loops
+            .iter()
+            .map(|l| {
+                let incl_flops = profile.inclusive_flops(&an.loops, l.id) * s;
+                let incl_bytes = profile.inclusive_bytes(&an.loops, l.id) * s;
+                // Innermost-hot loop of the nest: max exclusive dyn FLOPs.
+                let hot = l
+                    .nest_ids(&an.loops)
+                    .into_iter()
+                    .max_by(|a, b| {
+                        profile.loop_flops[a.0]
+                            .partial_cmp(&profile.loop_flops[b.0])
+                            .unwrap()
+                    })
+                    .unwrap_or(l.id);
+                let trips = profile.loop_trips[hot.0] as f64 * s;
+                let entries_sample = profile.loop_entries[l.id.0] as f64;
+                // Call-structure entries are size-invariant; loop-driven
+                // entries grow with the linear dimension.
+                let entries = if entries_sample <= 2.0 {
+                    entries_sample
+                } else {
+                    entries_sample * data_scale
+                };
+                let transfer = profile.transfer_bytes(&an.loops, l.id) as f64 * data_scale;
+                let work = NestWork {
+                    flops: incl_flops,
+                    bytes: incl_bytes,
+                    transfer_bytes: transfer,
+                    entries: entries.max(1.0),
+                    trips: trips.max(1.0),
+                    census: an.loops[hot.0].census,
+                };
+                LoopWork {
+                    id: l.id,
+                    work,
+                    cpu_time_s: cpu.straightline_time_s(incl_flops, incl_bytes),
+                    parent: l.parent,
+                    parallelizable: l.parallelizable,
+                }
+            })
+            .collect();
+
+        Ok(Self {
+            name: an.file.clone(),
+            candidates: an.parallelizable_ids(),
+            loops,
+            total_cpu_s: target_cpu_s,
+            work_scale: s,
+        })
+    }
+
+    /// Number of genes (candidate loops).
+    pub fn genome_len(&self) -> usize {
+        self.candidates.len()
+    }
+
+    /// Resolve a genome (bit per candidate) to the *offload regions*:
+    /// maximal selected loops with no selected ancestor. A selected inner
+    /// loop whose ancestor is also selected is subsumed by the ancestor's
+    /// region (directive semantics: the outer pragma owns the nest).
+    pub fn regions(&self, bits: &[bool]) -> Vec<LoopId> {
+        assert_eq!(bits.len(), self.candidates.len(), "genome arity");
+        let selected: Vec<LoopId> = self
+            .candidates
+            .iter()
+            .zip(bits)
+            .filter(|(_, &b)| b)
+            .map(|(&id, _)| id)
+            .collect();
+        let is_selected = |id: LoopId| selected.contains(&id);
+        selected
+            .iter()
+            .copied()
+            .filter(|&id| {
+                // Walk ancestors; drop if any is selected.
+                let mut p = self.loops[id.0].parent;
+                while let Some(a) = p {
+                    if is_selected(a) {
+                        return false;
+                    }
+                    p = self.loops[a.0].parent;
+                }
+                true
+            })
+            .collect()
+    }
+
+    /// CPU time left on the host when the given regions are offloaded.
+    pub fn host_remainder_s(&self, regions: &[LoopId]) -> f64 {
+        let offloaded: f64 = regions.iter().map(|r| self.loops[r.0].cpu_time_s).sum();
+        (self.total_cpu_s - offloaded).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::canalyze::analyze_source;
+    use crate::workloads;
+
+    fn mriq_model() -> AppModel {
+        let an = analyze_source("mriq.c", workloads::MRIQ_C).unwrap();
+        AppModel::from_analysis(&an, &CpuModel::r740(), 14.0).unwrap()
+    }
+
+    #[test]
+    fn mriq_has_16_genes_and_14s_baseline() {
+        let m = mriq_model();
+        assert_eq!(m.genome_len(), 16);
+        assert!((m.total_cpu_s - 14.0).abs() < 1e-9);
+        assert!(m.work_scale > 1.0);
+    }
+
+    #[test]
+    fn compute_q_nest_dominates_cpu_time() {
+        let m = mriq_model();
+        // The computeQ outer loop's inclusive time ≈ total.
+        let max_loop = m
+            .loops
+            .iter()
+            .max_by(|a, b| a.cpu_time_s.partial_cmp(&b.cpu_time_s).unwrap())
+            .unwrap();
+        assert!(max_loop.cpu_time_s > 0.9 * m.total_cpu_s);
+    }
+
+    #[test]
+    fn regions_subsume_nested_selection() {
+        let m = mriq_model();
+        // Find outer computeQ candidate position and its inner child.
+        let outer = m
+            .loops
+            .iter()
+            .max_by(|a, b| a.cpu_time_s.partial_cmp(&b.cpu_time_s).unwrap())
+            .unwrap()
+            .id;
+        let inner = m
+            .loops
+            .iter()
+            .find(|l| l.parent == Some(outer))
+            .unwrap()
+            .id;
+        let pos_outer = m.candidates.iter().position(|&c| c == outer).unwrap();
+        let pos_inner = m.candidates.iter().position(|&c| c == inner).unwrap();
+        let mut bits = vec![false; m.genome_len()];
+        bits[pos_outer] = true;
+        bits[pos_inner] = true;
+        let regions = m.regions(&bits);
+        assert_eq!(regions, vec![outer], "inner subsumed by outer");
+        // Inner alone is its own region.
+        let mut bits2 = vec![false; m.genome_len()];
+        bits2[pos_inner] = true;
+        assert_eq!(m.regions(&bits2), vec![inner]);
+    }
+
+    #[test]
+    fn host_remainder_shrinks_with_offload() {
+        let m = mriq_model();
+        let all_zero = m.regions(&vec![false; m.genome_len()]);
+        assert!(all_zero.is_empty());
+        assert_eq!(m.host_remainder_s(&[]), m.total_cpu_s);
+        let outer = m
+            .loops
+            .iter()
+            .max_by(|a, b| a.cpu_time_s.partial_cmp(&b.cpu_time_s).unwrap())
+            .unwrap()
+            .id;
+        let rem = m.host_remainder_s(&[outer]);
+        assert!(rem < 0.1 * m.total_cpu_s, "remainder {rem}");
+    }
+
+    #[test]
+    fn inner_loop_entries_scale_with_dimension() {
+        let m = mriq_model();
+        let outer = m
+            .loops
+            .iter()
+            .max_by(|a, b| a.cpu_time_s.partial_cmp(&b.cpu_time_s).unwrap())
+            .unwrap()
+            .id;
+        let inner = m
+            .loops
+            .iter()
+            .find(|l| l.parent == Some(outer))
+            .unwrap();
+        // Offloading the inner loop alone means one launch per outer trip —
+        // entries must be large (the per-entry penalty the GA must learn).
+        assert!(inner.work.entries > 1_000.0, "entries {}", inner.work.entries);
+        assert!((m.loops[outer.0].work.entries - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn requires_profile() {
+        let an = analyze_source(
+            "lib.c",
+            "void f(float *a, int n) { for (int i = 0; i < n; i++) a[i] = 0.0f; }",
+        )
+        .unwrap();
+        assert!(AppModel::from_analysis(&an, &CpuModel::r740(), 1.0).is_err());
+    }
+}

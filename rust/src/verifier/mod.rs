@@ -1,0 +1,12 @@
+//! The verification environment (paper Fig. 4): application work model,
+//! measurement trials with device + power simulation, timeout handling and
+//! trial accounting. This is where every candidate offload pattern is
+//! "actually measured" — the core of the paper's methodology.
+
+pub mod app;
+pub mod env;
+pub mod trial;
+
+pub use app::{AppModel, LoopWork};
+pub use env::{ServerModel, VerifEnv, VerifEnvConfig};
+pub use trial::{Measurement, PhaseKind, TrialBreakdown};

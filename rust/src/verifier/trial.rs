@@ -1,0 +1,124 @@
+//! Measurement records produced by the verification environment.
+
+use crate::canalyze::LoopId;
+use crate::devices::DeviceKind;
+use crate::power::PowerTrace;
+use crate::util::json::Json;
+
+/// Which stage of the flow produced a measurement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhaseKind {
+    /// Search-time trial in the verification environment.
+    Verification,
+    /// Final confirmation run of the chosen pattern (Step 6).
+    Production,
+}
+
+/// Wall-time breakdown of a trial.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TrialBreakdown {
+    /// Host CPU portions, seconds.
+    pub cpu_s: f64,
+    /// CPU↔device transfers, seconds.
+    pub transfer_s: f64,
+    /// Device kernel time (incl. launches), seconds.
+    pub kernel_s: f64,
+}
+
+/// One measured trial: the paper's (processing time, power consumption)
+/// pair plus the full power trace for Fig. 5-style plots.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Application name.
+    pub app: String,
+    /// Destination device of offloaded regions.
+    pub device: DeviceKind,
+    /// The genome measured (bit per candidate loop).
+    pub pattern: Vec<bool>,
+    /// Offload region roots the pattern resolved to.
+    pub regions: Vec<LoopId>,
+    /// Wall processing time, seconds (pre-substitution; see `timed_out`).
+    pub time_s: f64,
+    /// Mean whole-server power from the IPMI trace, Watts.
+    pub mean_w: f64,
+    /// Energy from the IPMI trace, Watt·seconds.
+    pub energy_ws: f64,
+    /// The sampled power trace.
+    pub trace: PowerTrace,
+    /// Trial exceeded the timeout (or failed): evaluation value must use
+    /// the substituted 1,000 s time.
+    pub timed_out: bool,
+    /// Failure reason when the pattern could not run at all (e.g. FPGA
+    /// kernel too large for the part).
+    pub failure: Option<String>,
+    /// Time breakdown.
+    pub breakdown: TrialBreakdown,
+    /// Verification vs production measurement.
+    pub phase: PhaseKind,
+}
+
+impl Measurement {
+    /// Pattern as a `0101…` string.
+    pub fn pattern_string(&self) -> String {
+        self.pattern
+            .iter()
+            .map(|&b| if b { '1' } else { '0' })
+            .collect()
+    }
+
+    /// Machine-readable report.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("app", Json::str(self.app.clone())),
+            ("device", Json::str(self.device.name())),
+            ("pattern", Json::str(self.pattern_string())),
+            (
+                "regions",
+                Json::arr(self.regions.iter().map(|r| Json::num(r.0 as f64)).collect()),
+            ),
+            ("time_s", Json::num(self.time_s)),
+            ("mean_w", Json::num(self.mean_w)),
+            ("energy_ws", Json::num(self.energy_ws)),
+            ("timed_out", Json::Bool(self.timed_out)),
+            (
+                "failure",
+                match &self.failure {
+                    Some(f) => Json::str(f.clone()),
+                    None => Json::Null,
+                },
+            ),
+            ("cpu_s", Json::num(self.breakdown.cpu_s)),
+            ("transfer_s", Json::num(self.breakdown.transfer_s)),
+            ("kernel_s", Json::num(self.breakdown.kernel_s)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_shape() {
+        let m = Measurement {
+            app: "mriq.c".into(),
+            device: DeviceKind::Fpga,
+            pattern: vec![true, false, true],
+            regions: vec![LoopId(1)],
+            time_s: 2.0,
+            mean_w: 111.0,
+            energy_ws: 223.0,
+            trace: PowerTrace::default(),
+            timed_out: false,
+            failure: None,
+            breakdown: TrialBreakdown::default(),
+            phase: PhaseKind::Verification,
+        };
+        assert_eq!(m.pattern_string(), "101");
+        let j = m.to_json();
+        assert_eq!(j.get("device").unwrap().as_str(), Some("fpga"));
+        assert_eq!(j.get("energy_ws").unwrap().as_f64(), Some(223.0));
+        let text = j.to_string_pretty();
+        assert!(crate::util::json::parse(&text).is_ok());
+    }
+}

@@ -1,0 +1,118 @@
+//! Bundled C-subset workloads used by the examples, tests and benches.
+//!
+//! * [`MRIQ_C`] — the paper's evaluated application (Parboil MRI-Q, §4.1),
+//!   written so the dependence analyzer finds exactly the paper's
+//!   **16 processable loop statements**.
+//! * [`STENCIL_C`] — 2D Jacobi stencil (IoT image-processing stand-in).
+//! * [`HISTO_C`] — histogram with non-parallelizable binning/scan loops.
+//! * [`VECADD_C`] — transfer-dominated quickstart workload.
+
+/// Parboil MRI-Q (C subset), 16 processable loops — the paper's §4 subject.
+pub const MRIQ_C: &str = include_str!("mriq.c");
+
+/// 2D Jacobi 5-point stencil with ping-pong buffers.
+pub const STENCIL_C: &str = include_str!("stencil.c");
+
+/// Histogram with indirect stores and a prefix scan.
+pub const HISTO_C: &str = include_str!("histo.c");
+
+/// Vector addition (quickstart).
+pub const VECADD_C: &str = include_str!("vecadd.c");
+
+/// Name → source lookup for the CLI (`enadapt analyze mriq` etc.).
+pub fn by_name(name: &str) -> Option<&'static str> {
+    match name {
+        "mriq" | "mriq.c" => Some(MRIQ_C),
+        "stencil" | "stencil.c" => Some(STENCIL_C),
+        "histo" | "histo.c" => Some(HISTO_C),
+        "vecadd" | "vecadd.c" => Some(VECADD_C),
+        _ => None,
+    }
+}
+
+/// All bundled workloads as `(name, source)` pairs.
+pub const ALL: &[(&str, &str)] = &[
+    ("mriq", MRIQ_C),
+    ("stencil", STENCIL_C),
+    ("histo", HISTO_C),
+    ("vecadd", VECADD_C),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::canalyze::analyze_source;
+
+    #[test]
+    fn mriq_has_exactly_16_processable_loops() {
+        let an = analyze_source("mriq.c", MRIQ_C).unwrap();
+        assert_eq!(
+            an.parallelizable_ids().len(),
+            16,
+            "paper (§4.1b): 16 processable loop statements for MRI-Q; reasons: {:#?}",
+            an.loops
+                .iter()
+                .filter(|l| !l.parallelizable)
+                .map(|l| (l.id, l.line, l.not_parallel_reason.clone()))
+                .collect::<Vec<_>>()
+        );
+        assert_eq!(an.n_loops(), 19, "19 loop statements total");
+    }
+
+    #[test]
+    fn mriq_profile_is_dominated_by_compute_q() {
+        let an = analyze_source("mriq.c", MRIQ_C).unwrap();
+        let p = an.profile.as_ref().unwrap();
+        // The computeQ outer loop nest must dominate dynamic FLOPs (the
+        // paper offloads it for the 7x speedup).
+        let outer = an
+            .loops
+            .iter()
+            .find(|l| l.func == "computeQ" && l.depth == 0)
+            .unwrap();
+        let share = p.flop_share(&an.loops, outer.id);
+        assert!(share > 0.9, "computeQ share = {share}");
+    }
+
+    #[test]
+    fn mriq_prints_plausible_output() {
+        let an = analyze_source("mriq.c", MRIQ_C).unwrap();
+        let out = &an.profile.as_ref().unwrap().printed;
+        assert_eq!(out.len(), 8);
+        assert!(out.iter().all(|v| v.is_finite()));
+        // Energy and peak are positive.
+        assert!(out[6] > 0.0 && out[7] > 0.0);
+    }
+
+    #[test]
+    fn all_workloads_analyze_cleanly() {
+        for (name, src) in ALL {
+            let an = analyze_source(name, src).unwrap();
+            assert!(an.n_loops() > 0, "{name} has loops");
+            assert!(an.profile.is_some(), "{name} profiles");
+            assert!(!an.parallelizable_ids().is_empty(), "{name} has candidates");
+        }
+    }
+
+    #[test]
+    fn histo_binning_is_rejected() {
+        let an = analyze_source("histo.c", HISTO_C).unwrap();
+        let rejected: Vec<_> = an.loops.iter().filter(|l| !l.parallelizable).collect();
+        assert!(!rejected.is_empty());
+        let reasons: Vec<_> = rejected
+            .iter()
+            .filter_map(|l| l.not_parallel_reason.as_deref())
+            .collect();
+        assert!(
+            reasons.iter().any(|r| r.contains("indirect store")),
+            "reasons: {reasons:?}"
+        );
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("mriq").is_some());
+        assert!(by_name("mriq.c").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,109 @@
+//! CLI tests: drive the real `enadapt` binary end-to-end (cargo builds it
+//! for integration tests and exposes the path via `CARGO_BIN_EXE_*`).
+
+use std::process::Command;
+
+fn enadapt(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_enadapt"))
+        .args(args)
+        .output()
+        .expect("spawn enadapt")
+}
+
+#[test]
+fn help_lists_commands() {
+    let out = enadapt(&["--help"]);
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["analyze", "offload", "power", "codegen", "calibrate", "report"] {
+        assert!(text.contains(cmd), "missing {cmd}");
+    }
+}
+
+#[test]
+fn analyze_mriq_reports_16_of_19() {
+    let out = enadapt(&["analyze", "mriq"]);
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("16 of 19 loop statements are processable"), "{text}");
+    assert!(text.contains("computeQ"));
+}
+
+#[test]
+fn analyze_json_is_valid() {
+    let out = enadapt(&["analyze", "mriq", "--json"]);
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    let j = enadapt::util::json::parse(&text).expect("valid json");
+    assert_eq!(j.get("processable").unwrap().as_f64(), Some(16.0));
+    assert_eq!(j.get("n_loops").unwrap().as_f64(), Some(19.0));
+}
+
+#[test]
+fn offload_fpga_prints_fig5() {
+    let out = enadapt(&["offload", "mriq", "--dest", "fpga"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Step 7"));
+    assert!(text.contains("Fig. 5"));
+    assert!(text.contains("energy reduction"));
+}
+
+#[test]
+fn offload_json_has_production_numbers() {
+    let out = enadapt(&[
+        "offload", "mriq", "--dest", "gpu", "--json", "--generations", "4", "--population", "6",
+    ]);
+    assert!(out.status.success());
+    let j = enadapt::util::json::parse(&String::from_utf8_lossy(&out.stdout)).unwrap();
+    let prod = j.get("production").unwrap();
+    assert!(prod.get("time_s").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(j.get("device").unwrap().as_str(), Some("gpu"));
+}
+
+#[test]
+fn codegen_manycore_emits_openmp() {
+    let out = enadapt(&["codegen", "vecadd", "--dest", "manycore"]);
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("#pragma omp parallel for") || text.contains("(cpu-only)") || !text.is_empty());
+}
+
+#[test]
+fn report_prints_testbed() {
+    let out = enadapt(&["report"]);
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Arria10"));
+    assert!(text.contains("16 candidates"));
+}
+
+#[test]
+fn unknown_command_fails_cleanly() {
+    let out = enadapt(&["bogus"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn bad_destination_fails_cleanly() {
+    let out = enadapt(&["offload", "mriq", "--dest", "asic"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown destination"));
+}
+
+#[test]
+fn file_source_works() {
+    let dir = std::env::temp_dir().join("enadapt_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tiny.c");
+    std::fs::write(
+        &path,
+        "int main() { float a[8]; for (int i = 0; i < 8; i++) { a[i] = (float) i; } \
+         printf(\"%f\", a[7]); return 0; }",
+    )
+    .unwrap();
+    let out = enadapt(&["analyze", path.to_str().unwrap()]);
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("1 of 1"));
+}

@@ -1,0 +1,179 @@
+//! Failure-injection tests: what the verification environment and flows do
+//! when things go wrong — oversized FPGA kernels, trials past the timeout,
+//! missing profiles/artifacts, degenerate search spaces.
+
+use enadapt::canalyze::analyze_source;
+use enadapt::devices::{Accelerator, DeviceKind, FpgaModel, NestWork, TransferMode};
+use enadapt::ga::FitnessSpec;
+use enadapt::offload::{fpga_flow, FpgaFlowConfig};
+use enadapt::verifier::{AppModel, VerifEnvConfig};
+use enadapt::workloads;
+
+/// Build a program whose hot loop body contains ~200 special-function
+/// cores — no Arria10 pipeline fits that (DSP budget ≈ 1,160 usable, each
+/// sin/cos core ≈ 8 DSPs + 4,500 LUTs), so the precompile stage must
+/// reject it and the flow must fall back gracefully.
+fn monster_source() -> String {
+    let mut terms: Vec<String> = Vec::new();
+    for k in 0..100 {
+        terms.push(format!("sinf(b[i] * {k}.0f)"));
+        terms.push(format!("cosf(a[i] * {k}.5f)"));
+    }
+    format!(
+        "#define N 64\n\
+         int main() {{\n\
+           float a[N];\n\
+           float b[N];\n\
+           for (int i = 0; i < N; i++) {{ a[i] = (float) i; b[i] = 1.0f; }}\n\
+           for (int i = 0; i < N; i++) {{\n\
+             a[i] = {};\n\
+           }}\n\
+           float s = 0.0f;\n\
+           for (int i = 0; i < N; i++) {{ s += a[i]; }}\n\
+           printf(\"%f\", s);\n\
+           return 0;\n\
+         }}\n",
+        terms.join(" + ")
+    )
+}
+
+#[test]
+fn oversized_kernel_is_rejected_at_precompile() {
+    let monster_src = monster_source();
+    let an = analyze_source("monster.c", &monster_src).unwrap();
+    let cfg = VerifEnvConfig::r740_pac();
+    let app = AppModel::from_analysis(&an, &cfg.cpu, 5.0).unwrap();
+    // The trig-monster loop does not fit the Arria10 (≥40 special cores).
+    let monster = app
+        .loops
+        .iter()
+        .filter(|l| l.parallelizable)
+        .max_by_key(|l| l.work.census.fspecial)
+        .unwrap();
+    assert!(
+        cfg.fpga.supports(&monster.work).is_err(),
+        "monster body must be rejected: census {:?}",
+        monster.work.census
+    );
+    // The flow still completes (falls back to other candidates/baseline).
+    let env = VerifEnvConfig::r740_pac().build(1);
+    let out = fpga_flow::run(&app, &env, &FpgaFlowConfig::default()).unwrap();
+    assert!(out.funnel.after_fit < out.funnel.after_trips || out.funnel.after_fit > 0);
+    assert!(!out
+        .best
+        .pattern
+        .offloaded_ids()
+        .contains(&monster.id));
+}
+
+#[test]
+fn unsupported_pattern_measures_as_failed_timeout() {
+    let monster_src = monster_source();
+    let an = analyze_source("monster.c", &monster_src).unwrap();
+    let cfg = VerifEnvConfig::r740_pac();
+    let app = AppModel::from_analysis(&an, &cfg.cpu, 5.0).unwrap();
+    let env = VerifEnvConfig::r740_pac().build(2);
+    let monster = app
+        .loops
+        .iter()
+        .filter(|l| l.parallelizable)
+        .max_by_key(|l| l.work.census.fspecial)
+        .unwrap()
+        .id;
+    let pos = app.candidates.iter().position(|&c| c == monster).unwrap();
+    let mut bits = vec![false; app.genome_len()];
+    bits[pos] = true;
+    let m = env.measure(&app, &bits, DeviceKind::Fpga, TransferMode::Batched);
+    assert!(m.timed_out, "unsupported kernel behaves as a failed trial");
+    assert!(m.failure.is_some());
+    // Its evaluation value uses the 1000 s substitution and is therefore
+    // worse than the plain CPU run.
+    let f = FitnessSpec::paper();
+    let cpu = env.measure_cpu_only(&app);
+    assert!(
+        f.value(m.time_s, m.mean_w, m.timed_out)
+            < f.value(cpu.time_s, cpu.mean_w, cpu.timed_out)
+    );
+}
+
+#[test]
+fn trials_past_the_timeout_are_flagged() {
+    let an = analyze_source("mriq.c", workloads::MRIQ_C).unwrap();
+    let mut cfg = VerifEnvConfig::r740_pac();
+    cfg.timeout_s = 1.0; // absurd 1 s timeout: the 14 s CPU run must trip it
+    let app = AppModel::from_analysis(&an, &cfg.cpu, 14.0).unwrap();
+    let env = cfg.build(3);
+    let m = env.measure_cpu_only(&app);
+    assert!(m.timed_out);
+    let f = FitnessSpec::paper();
+    let v = f.value(m.time_s, m.mean_w, m.timed_out);
+    assert!((v - (1000.0 * m.mean_w).powf(-0.5)).abs() < 1e-12);
+}
+
+#[test]
+fn per_entry_inner_loop_can_time_out_entirely() {
+    // Offloading the MRI-Q inner k-loop per-entry at full scale launches
+    // tens of thousands of kernels; with a tight timeout this times out —
+    // the exact failure mode the paper's measurement-driven search learns
+    // to avoid.
+    let an = analyze_source("mriq.c", workloads::MRIQ_C).unwrap();
+    let mut cfg = VerifEnvConfig::r740_pac();
+    cfg.timeout_s = 5.0;
+    let app = AppModel::from_analysis(&an, &cfg.cpu, 14.0).unwrap();
+    let env = cfg.build(4);
+    let outer = app
+        .loops
+        .iter()
+        .max_by(|a, b| a.cpu_time_s.partial_cmp(&b.cpu_time_s).unwrap())
+        .unwrap()
+        .id;
+    let inner = app.loops.iter().find(|l| l.parent == Some(outer)).unwrap().id;
+    let pos = app.candidates.iter().position(|&c| c == inner).unwrap();
+    let mut bits = vec![false; app.genome_len()];
+    bits[pos] = true;
+    let naive = env.measure(&app, &bits, DeviceKind::Gpu, TransferMode::PerEntry);
+    assert!(naive.timed_out, "per-entry inner offload must blow the 5 s budget (took {:.2} s)", naive.time_s);
+}
+
+#[test]
+fn profileless_source_fails_model_building_cleanly() {
+    let an = analyze_source(
+        "lib.c",
+        "void f(float *a, int n) { for (int i = 0; i < n; i++) { a[i] = 0.0f; } }",
+    )
+    .unwrap();
+    let cfg = VerifEnvConfig::r740_pac();
+    let err = AppModel::from_analysis(&an, &cfg.cpu, 1.0).unwrap_err();
+    assert!(err.to_string().contains("no dynamic profile"));
+}
+
+#[test]
+fn missing_artifacts_dir_reports_make_hint() {
+    let err = enadapt::runtime::load_artifacts(std::path::Path::new("/no/such/dir")).unwrap_err();
+    assert!(err.to_string().contains("make artifacts"));
+}
+
+#[test]
+fn fpga_model_rejection_reason_is_actionable() {
+    let fpga = FpgaModel::arria10();
+    let w = NestWork {
+        flops: 1e9,
+        bytes: 1e8,
+        transfer_bytes: 1e6,
+        entries: 1.0,
+        trips: 1e6,
+        census: enadapt::canalyze::OpCensus {
+            fadd: 100,
+            fmul: 500,
+            fdiv: 20,
+            fspecial: 300,
+            iops: 50,
+            loads: 40,
+            stores: 10,
+            calls: 0,
+        },
+    };
+    let reason = fpga.supports(&w).unwrap_err();
+    assert!(reason.contains("utilization"), "{reason}");
+    assert!(reason.contains("Arria10"), "{reason}");
+}

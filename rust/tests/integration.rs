@@ -1,0 +1,173 @@
+//! Cross-module integration tests: every bundled workload through every
+//! destination, report/JSON integrity, codegen consistency with the
+//! chosen pattern, and the runtime bridge (when artifacts are built).
+
+use enadapt::canalyze::analyze_source;
+use enadapt::coordinator::{report, run_job, BaselineSource, Destination, GeneratedCode, JobConfig};
+use enadapt::devices::DeviceKind;
+use enadapt::ga::GaConfig;
+use enadapt::offload::GpuFlowConfig;
+use enadapt::util::json;
+use enadapt::workloads;
+
+fn quick_cfg(dest: Destination, baseline_s: f64) -> JobConfig {
+    JobConfig {
+        destination: dest,
+        baseline: BaselineSource::Fixed(baseline_s),
+        ga_flow: GpuFlowConfig {
+            ga: GaConfig {
+                population: 8,
+                generations: 6,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn every_workload_completes_a_gpu_job() {
+    for (name, src) in workloads::ALL {
+        let cfg = quick_cfg(Destination::Device(DeviceKind::Gpu), 5.0);
+        let job = run_job(name, src, &cfg).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(job.steps.records.len(), 7, "{name}");
+        assert!(job.best.value > 0.0, "{name}");
+        // Rendering must never panic and must mention the workload.
+        let text = report::render_job(&job);
+        assert!(text.contains(*name), "{name}");
+    }
+}
+
+#[test]
+fn every_workload_completes_an_fpga_job() {
+    for (name, src) in workloads::ALL {
+        let cfg = quick_cfg(Destination::Device(DeviceKind::Fpga), 5.0);
+        let job = run_job(name, src, &cfg).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(job.production.time_s > 0.0, "{name}");
+    }
+}
+
+#[test]
+fn mixed_job_on_mriq_chooses_low_power_destination() {
+    let cfg = quick_cfg(Destination::Mixed, 14.0);
+    let job = run_job("mriq.c", workloads::MRIQ_C, &cfg).unwrap();
+    // With default (satisfiable) requirements the search may stop early at
+    // the many-core; the chosen destination must improve on the baseline.
+    assert!(job.production.energy_ws < job.baseline.energy_ws);
+    assert!(job.production.time_s < job.baseline.time_s);
+}
+
+#[test]
+fn generated_code_matches_chosen_pattern() {
+    let cfg = quick_cfg(Destination::Device(DeviceKind::Gpu), 14.0);
+    let job = run_job("mriq.c", workloads::MRIQ_C, &cfg).unwrap();
+    let regions = job.app.regions(job.best.pattern.bits());
+    match &job.generated {
+        GeneratedCode::OpenAcc(code) => {
+            assert_eq!(
+                code.matches("#pragma acc parallel loop").count(),
+                regions.len(),
+                "one pragma per region"
+            );
+        }
+        GeneratedCode::Unchanged => assert!(regions.is_empty()),
+        other => panic!("gpu job must emit OpenACC, got {}", other.kind()),
+    }
+}
+
+#[test]
+fn fpga_job_kernel_count_matches_regions() {
+    let cfg = quick_cfg(Destination::Device(DeviceKind::Fpga), 14.0);
+    let job = run_job("mriq.c", workloads::MRIQ_C, &cfg).unwrap();
+    let regions = job.app.regions(job.best.pattern.bits());
+    if let GeneratedCode::OpenCl(b) = &job.generated {
+        assert_eq!(b.kernel_names.len(), regions.len());
+        assert_eq!(
+            b.kernel_source.matches("__kernel void").count(),
+            regions.len()
+        );
+    } else if !regions.is_empty() {
+        panic!("fpga job with regions must emit OpenCL");
+    }
+}
+
+#[test]
+fn job_json_roundtrips_and_has_required_fields() {
+    let cfg = quick_cfg(Destination::Device(DeviceKind::Fpga), 14.0);
+    let job = run_job("mriq.c", workloads::MRIQ_C, &cfg).unwrap();
+    let j = report::job_json(&job);
+    let text = j.to_string_pretty();
+    let back = json::parse(&text).unwrap();
+    for key in [
+        "source",
+        "device",
+        "pattern",
+        "value",
+        "baseline",
+        "production",
+        "trials",
+        "steps",
+    ] {
+        assert!(back.get(key).is_some(), "missing {key}");
+    }
+    assert_eq!(back.get("steps").unwrap().as_arr().unwrap().len(), 7);
+}
+
+#[test]
+fn deterministic_jobs_for_same_seed() {
+    let cfg = quick_cfg(Destination::Device(DeviceKind::Fpga), 14.0);
+    let a = run_job("mriq.c", workloads::MRIQ_C, &cfg).unwrap();
+    let b = run_job("mriq.c", workloads::MRIQ_C, &cfg).unwrap();
+    assert_eq!(a.best.pattern.genome, b.best.pattern.genome);
+    assert_eq!(a.production.energy_ws, b.production.energy_ws);
+}
+
+#[test]
+fn different_seeds_may_differ_but_stay_valid() {
+    for seed in [1, 2, 3] {
+        let mut cfg = quick_cfg(Destination::Device(DeviceKind::Gpu), 14.0);
+        cfg.seed = seed;
+        cfg.ga_flow.seed = seed;
+        let job = run_job("mriq.c", workloads::MRIQ_C, &cfg).unwrap();
+        assert!(job.best.value >= 0.0);
+        assert_eq!(job.best.pattern.genome.len(), 16);
+    }
+}
+
+#[test]
+fn runtime_bridge_calibrates_baseline_when_artifacts_exist() {
+    let arts = enadapt::runtime::load_artifacts(&enadapt::runtime::default_dir());
+    match arts {
+        Ok(a) if a.complete() => {
+            let cfg = JobConfig {
+                baseline: BaselineSource::MeasuredHlo {
+                    artifact: "mriq_cpu_small".into(),
+                    full_k: 2048,
+                    full_x: 262_144,
+                },
+                ..quick_cfg(Destination::Device(DeviceKind::Fpga), 0.0)
+            };
+            let job = run_job("mriq.c", workloads::MRIQ_C, &cfg).unwrap();
+            // Measured baseline is machine-dependent but must be seconds-
+            // scale and the offload must still win.
+            assert!(job.baseline.time_s > 0.5, "baseline {}", job.baseline.time_s);
+            assert!(job.production.time_s < job.baseline.time_s);
+        }
+        _ => eprintln!("skipping: artifacts not built"),
+    }
+}
+
+#[test]
+fn analyze_then_model_pipeline_is_consistent() {
+    for (name, src) in workloads::ALL {
+        let an = analyze_source(name, src).unwrap();
+        let cfg = enadapt::verifier::VerifEnvConfig::r740_pac();
+        let app = enadapt::verifier::AppModel::from_analysis(&an, &cfg.cpu, 3.0).unwrap();
+        assert_eq!(app.genome_len(), an.parallelizable_ids().len(), "{name}");
+        // Offloading everything never leaves negative host time.
+        let all = vec![true; app.genome_len()];
+        let regions = app.regions(&all);
+        assert!(app.host_remainder_s(&regions) >= 0.0, "{name}");
+    }
+}

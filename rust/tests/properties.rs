@@ -1,0 +1,332 @@
+//! Property-based tests (via the in-tree `util::prop` harness) over the
+//! coordinator's key invariants: pattern→region resolution, fitness
+//! monotonicity, GA engine behaviour, power accounting, JSON round-trips
+//! and parser/emitter fixpoints on randomized programs.
+
+use enadapt::canalyze::{analyze_source, LoopId};
+use enadapt::codegen::{emit_program, Plain};
+use enadapt::devices::{DeviceKind, TransferMode};
+use enadapt::ga::{self, FitnessSpec, GaConfig, Genome};
+use enadapt::power::{IpmiConfig, IpmiSampler, PowerProfile};
+use enadapt::util::json::{self, Json};
+use enadapt::util::prng::Pcg32;
+use enadapt::util::prop::{run, Gen};
+use enadapt::verifier::{AppModel, VerifEnvConfig};
+use enadapt::workloads;
+
+fn mriq_app() -> AppModel {
+    let an = analyze_source("mriq.c", workloads::MRIQ_C).unwrap();
+    let cfg = VerifEnvConfig::r740_pac();
+    AppModel::from_analysis(&an, &cfg.cpu, 14.0).unwrap()
+}
+
+#[test]
+fn prop_regions_are_disjoint_and_subsumed() {
+    let app = mriq_app();
+    run("regions disjoint & subsumed", 300, move |g: &mut Gen| {
+        let bits = g.bits(app.genome_len());
+        let regions = app.regions(&bits);
+        // 1. Every region is a selected candidate.
+        for r in &regions {
+            let pos = app.candidates.iter().position(|c| c == r).unwrap();
+            assert!(bits[pos], "region {r} not selected");
+        }
+        // 2. No region is an ancestor of another region.
+        for a in &regions {
+            for b in &regions {
+                if a == b {
+                    continue;
+                }
+                let mut p = app.loops[b.0].parent;
+                while let Some(anc) = p {
+                    assert_ne!(anc, *a, "region {b} nested inside region {a}");
+                    p = app.loops[anc.0].parent;
+                }
+            }
+        }
+        // 3. Region count never exceeds selected count.
+        let ones = bits.iter().filter(|&&b| b).count();
+        assert!(regions.len() <= ones);
+        // 4. Host remainder stays in [0, total].
+        let rem = app.host_remainder_s(&regions);
+        assert!(rem >= 0.0 && rem <= app.total_cpu_s + 1e-9);
+    });
+}
+
+#[test]
+fn prop_measurement_accounting_is_consistent() {
+    let app = mriq_app();
+    run("measurement accounting", 120, move |g: &mut Gen| {
+        let bits = g.bits(app.genome_len());
+        let dev = *g.pick(&[DeviceKind::Gpu, DeviceKind::Fpga, DeviceKind::ManyCore]);
+        let xfer = if g.bool() {
+            TransferMode::Batched
+        } else {
+            TransferMode::PerEntry
+        };
+        let env = VerifEnvConfig::r740_pac().build(g.rng().next_u64());
+        let m = env.measure(&app, &bits, dev, xfer);
+        assert!(m.time_s > 0.0);
+        assert!(m.mean_w > 0.0);
+        // Trapezoidal energy must equal mean power × duration (identity).
+        let dur = m.trace.duration_s();
+        if dur > 0.0 {
+            let recomputed = m.mean_w * dur;
+            assert!(
+                (recomputed - m.energy_ws).abs() <= 1e-6 * m.energy_ws.max(1.0),
+                "energy {} vs mean*dur {}",
+                m.energy_ws,
+                recomputed
+            );
+        }
+        // Power bounded by idle and idle + all-device ceiling.
+        assert!(m.mean_w >= env.cfg.server.idle_w - 10.0);
+        assert!(m.mean_w <= env.cfg.server.idle_w + 160.0);
+        // Breakdown sums to roughly the wall time.
+        let sum = m.breakdown.cpu_s + m.breakdown.transfer_s + m.breakdown.kernel_s;
+        assert!((sum - m.time_s).abs() <= 1e-6 * m.time_s.max(1.0));
+    });
+}
+
+#[test]
+fn prop_fitness_monotone_in_time_and_power() {
+    run("fitness monotonicity", 500, |g: &mut Gen| {
+        let spec = FitnessSpec::paper();
+        let t = g.f64_pos(0.1, 900.0);
+        let p = g.f64_pos(10.0, 400.0);
+        let dt = g.f64_pos(0.01, 100.0);
+        let dp = g.f64_pos(0.1, 100.0);
+        assert!(spec.value(t, p, false) > spec.value(t + dt, p, false));
+        assert!(spec.value(t, p, false) > spec.value(t, p + dp, false));
+        // Timeout is always at least as bad as any clean sub-timeout run.
+        assert!(spec.value(t.min(179.0), p, false) >= spec.value(t.min(179.0), p, true));
+    });
+}
+
+#[test]
+fn prop_ga_respects_genome_space() {
+    run("ga genome space", 25, |g: &mut Gen| {
+        let len = g.usize_range(2, 12);
+        let pop = g.usize_range(4, 12);
+        let gens = g.usize_range(2, 8);
+        let seed = g.rng().next_u64();
+        let cfg = GaConfig {
+            population: pop,
+            generations: gens,
+            ..Default::default()
+        };
+        let mut evals = 0usize;
+        let r = ga::run(len, &cfg, seed, |genome| {
+            evals += 1;
+            assert_eq!(genome.len(), len);
+            genome.ones() as f64
+        });
+        assert_eq!(r.best.len(), len);
+        // Measure-once: distinct evaluations bounded by the space size.
+        assert!(evals <= 1usize << len.min(20));
+        assert_eq!(evals, r.measured);
+        // Best history is monotone.
+        for w in r.history.windows(2) {
+            assert!(w[1].best >= w[0].best);
+        }
+    });
+}
+
+#[test]
+fn prop_crossover_conserves_and_mutation_bounds() {
+    run("crossover/mutation invariants", 300, |g: &mut Gen| {
+        let len = g.usize_range(2, 24);
+        let mut rng = Pcg32::seed_from_u64(g.rng().next_u64());
+        let a = Genome::random(len, 0.5, &mut rng);
+        let b = Genome::random(len, 0.5, &mut rng);
+        let op = *g.pick(&[
+            ga::Crossover::OnePoint,
+            ga::Crossover::TwoPoint,
+            ga::Crossover::Uniform,
+        ]);
+        let (c, d) = op.apply(&a, &b, &mut rng);
+        for i in 0..len {
+            assert_eq!(
+                a.bits[i] as u8 + b.bits[i] as u8,
+                c.bits[i] as u8 + d.bits[i] as u8,
+                "bit multiset at {i}"
+            );
+        }
+        let mut m = c.clone();
+        ga::mutate(&mut m, 0.0, &mut rng);
+        assert_eq!(m, c, "zero-rate mutation is identity");
+    });
+}
+
+#[test]
+fn prop_power_trace_energy_close_to_profile() {
+    run("ipmi energy ≈ exact energy", 150, |g: &mut Gen| {
+        let mut profile = PowerProfile::new();
+        let phases = g.usize_range(1, 6);
+        for _ in 0..phases {
+            profile.push(g.f64_pos(0.5, 20.0), g.f64_pos(50.0, 300.0));
+        }
+        let sampler = IpmiSampler::new(IpmiConfig {
+            period_s: 1.0,
+            noise_w_std: 0.0,
+            quantum_w: 0.0,
+        });
+        let mut rng = Pcg32::seed_from_u64(g.rng().next_u64());
+        let trace = sampler.sample(&profile, &mut rng);
+        let exact = profile.energy_ws();
+        let sampled = trace.energy_ws();
+        // 1 Hz sampling of piecewise-constant power: error bounded by one
+        // sample period's worth of the max power swing per phase boundary.
+        let tol = 0.5 + (phases as f64) * 300.0;
+        assert!(
+            (sampled - exact).abs() <= tol,
+            "sampled {sampled} vs exact {exact} (phases {phases})"
+        );
+        assert!(trace.peak_w() <= 300.0 + 1e-9);
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn gen_json(g: &mut Gen, depth: usize) -> Json {
+        if depth == 0 {
+            return match g.usize_range(0, 3) {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool()),
+                2 => Json::Num((g.i64_range(-1_000_000, 1_000_000)) as f64),
+                _ => Json::Str(format!("s{}", g.i64_range(0, 999))),
+            };
+        }
+        match g.usize_range(0, 5) {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num(g.f64_range(-1e6, 1e6)),
+            3 => Json::Str(format!("k\"é\n{}", g.i64_range(0, 99))),
+            4 => Json::Arr((0..g.usize_range(0, 4)).map(|_| gen_json(g, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..g.usize_range(0, 4))
+                    .map(|i| (format!("k{i}"), gen_json(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    run("json roundtrip", 300, |g: &mut Gen| {
+        let v = gen_json(g, 3);
+        let compact = json::parse(&v.to_string_compact()).unwrap();
+        let pretty = json::parse(&v.to_string_pretty()).unwrap();
+        assert_eq!(json_eq(&v, &compact), true, "compact");
+        assert_eq!(json_eq(&v, &pretty), true, "pretty");
+    });
+}
+
+/// Structural equality with float tolerance (serialization may shorten).
+fn json_eq(a: &Json, b: &Json) -> bool {
+    match (a, b) {
+        (Json::Num(x), Json::Num(y)) => (x - y).abs() <= 1e-9 * x.abs().max(1.0),
+        (Json::Arr(xs), Json::Arr(ys)) => {
+            xs.len() == ys.len() && xs.iter().zip(ys).all(|(x, y)| json_eq(x, y))
+        }
+        (Json::Obj(xs), Json::Obj(ys)) => {
+            xs.len() == ys.len()
+                && xs
+                    .iter()
+                    .zip(ys)
+                    .all(|((ka, va), (kb, vb))| ka == kb && json_eq(va, vb))
+        }
+        _ => a == b,
+    }
+}
+
+#[test]
+fn prop_emit_parse_fixpoint_on_random_programs() {
+    run("emit→parse fixpoint", 80, |g: &mut Gen| {
+        let src = random_program(g);
+        let p1 = match enadapt::canalyze::parser::parse("rand.c", &src) {
+            Ok(p) => p,
+            Err(e) => panic!("generator produced unparsable source: {e}\n{src}"),
+        };
+        let emitted = emit_program(&p1, &Plain);
+        let p2 = enadapt::canalyze::parser::parse("rand2.c", &emitted)
+            .unwrap_or_else(|e| panic!("emitted source unparsable: {e}\n{emitted}"));
+        assert_eq!(p1.n_loops, p2.n_loops);
+        // Emission is a fixpoint after one round trip.
+        let emitted2 = emit_program(&p2, &Plain);
+        assert_eq!(emitted, emitted2);
+    });
+}
+
+/// Generate a small random-but-valid C-subset program.
+fn random_program(g: &mut Gen) -> String {
+    let mut src = String::from("void f(float *a, float *b, int n) {\n");
+    let n_stmts = g.usize_range(1, 5);
+    for i in 0..n_stmts {
+        src.push_str(&random_stmt(g, i, 1));
+    }
+    src.push_str("}\n");
+    src
+}
+
+fn random_expr(g: &mut Gen, idx_var: &str) -> String {
+    match g.usize_range(0, 4) {
+        0 => format!("a[{idx_var}]"),
+        1 => format!("b[{idx_var}]"),
+        2 => format!("{}.5f", g.i64_range(0, 9)),
+        3 => format!("sinf(a[{idx_var}])"),
+        _ => format!("(a[{idx_var}] + {}.0f)", g.i64_range(1, 5)),
+    }
+}
+
+fn random_stmt(g: &mut Gen, uniq: usize, depth: usize) -> String {
+    let pad = "  ".repeat(depth);
+    match g.usize_range(0, 3) {
+        0 => {
+            let e = random_expr(g, "0");
+            format!("{pad}float t{uniq} = {e};\n")
+        }
+        1 => {
+            let v = format!("i{uniq}");
+            let body = format!(
+                "{pad}  a[{v}] = {};\n",
+                random_expr(g, &v).replace("a[", "b[") // avoid self-alias noise
+            );
+            format!(
+                "{pad}for (int {v} = 0; {v} < n; {v}++) {{\n{body}{pad}}}\n"
+            )
+        }
+        2 => {
+            let e = random_expr(g, "0");
+            format!("{pad}if (n > {}) {{ b[0] = {e}; }}\n", g.i64_range(0, 9))
+        }
+        _ => {
+            let e = random_expr(g, "0");
+            format!("{pad}b[1] = {e};\n")
+        }
+    }
+}
+
+#[test]
+fn prop_transfer_plan_mode_consistency() {
+    let an = analyze_source("mriq.c", workloads::MRIQ_C).unwrap();
+    let candidates: Vec<LoopId> = an.parallelizable_ids();
+    run("transfer plan consistency", 150, move |g: &mut Gen| {
+        let k = g.usize_range(1, 4.min(candidates.len()));
+        let mut picked = Vec::new();
+        for _ in 0..k {
+            let c = *g.pick(&candidates);
+            if !picked.contains(&c) {
+                picked.push(c);
+            }
+        }
+        let plan = enadapt::offload::transfer_plan(&an, &picked);
+        let all_batched = plan
+            .arrays
+            .values()
+            .all(|t| *t == enadapt::offload::ArrayTransfer::BatchedOnce);
+        assert_eq!(
+            plan.mode() == TransferMode::Batched,
+            all_batched,
+            "mode must reflect per-array verdicts"
+        );
+        assert_eq!(plan.batched_count() == plan.arrays.len(), all_batched);
+    });
+}
