@@ -1,0 +1,105 @@
+//! Bench: fleet-coordinator throughput — jobs/sec and shared-cache hit
+//! rate for the 4-workload × 3-destination matrix at pool sizes 1/2/4/8.
+//!
+//! This is the perf trajectory of the PR that turned the serial
+//! one-job-at-a-time coordinator into a concurrent fleet with a shared
+//! cross-job measurement cache: wall-clock should drop roughly with the
+//! worker count (until the machine runs out of cores) while the per-job
+//! results stay bit-identical to the serial path (see `tests/fleet.rs`).
+//!
+//! Emits a final JSON object on stdout for the perf dashboard.
+
+use enadapt::coordinator::{fleet, run_fleet, Destination, FleetConfig, FleetSpec, JobConfig};
+use enadapt::ga::GaConfig;
+use enadapt::offload::GpuFlowConfig;
+use enadapt::util::benchkit::section;
+use enadapt::util::json::Json;
+use enadapt::util::tablefmt::Table;
+
+fn template() -> JobConfig {
+    JobConfig {
+        ga_flow: GpuFlowConfig {
+            ga: GaConfig {
+                population: 8,
+                generations: 6,
+                ..Default::default()
+            },
+            parallel_trials: false,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// 4 workloads × {gpu, fpga, manycore} (mixed excluded: it is itself a
+/// three-destination sweep and would skew the per-job numbers).
+fn matrix() -> Vec<FleetSpec> {
+    fleet::full_matrix()
+        .into_iter()
+        .filter(|s| !matches!(s.destination, Destination::Mixed))
+        .collect()
+}
+
+fn main() {
+    println!("=== fleet_throughput: concurrent offload matrix, shared measurement cache ===");
+    let specs = matrix();
+    println!(
+        "matrix: {} jobs ({} workloads x 3 destinations)\n",
+        specs.len(),
+        specs.len() / 3
+    );
+
+    section("pool-size sweep");
+    let mut table = Table::new(&[
+        "workers",
+        "wall [s]",
+        "serial [s]",
+        "speedup",
+        "jobs/s",
+        "cache hits",
+        "hit rate",
+    ]);
+    let mut series = Vec::new();
+    for workers in [1usize, 2, 4, 8] {
+        let cfg = FleetConfig {
+            template: template(),
+            workers,
+            ..Default::default()
+        };
+        let report = run_fleet(&specs, &cfg).expect("fleet run");
+        let failed = report.jobs.iter().filter(|j| j.report.is_err()).count();
+        assert_eq!(failed, 0, "all fleet jobs must succeed");
+        table.row(&[
+            workers.to_string(),
+            format!("{:.3}", report.wall_s),
+            format!("{:.3}", report.serial_wall_s),
+            format!("{:.2}x", report.speedup()),
+            format!("{:.2}", report.jobs_per_s()),
+            report.cache_hits.to_string(),
+            format!("{:.0}%", report.hit_rate() * 100.0),
+        ]);
+        series.push(Json::obj(vec![
+            ("workers", Json::num(workers as f64)),
+            ("jobs", Json::num(report.jobs.len() as f64)),
+            ("wall_s", Json::num(report.wall_s)),
+            ("serial_wall_s", Json::num(report.serial_wall_s)),
+            ("speedup", Json::num(report.speedup())),
+            ("jobs_per_s", Json::num(report.jobs_per_s())),
+            ("cache_hits", Json::num(report.cache_hits as f64)),
+            ("cache_misses", Json::num(report.cache_misses as f64)),
+            ("hit_rate", Json::num(report.hit_rate())),
+        ]));
+    }
+    println!("{}", table.render());
+
+    section("machine-readable result");
+    println!(
+        "{}",
+        Json::obj(vec![
+            ("bench", Json::str("fleet_throughput")),
+            ("matrix_jobs", Json::num(specs.len() as f64)),
+            ("series", Json::arr(series)),
+        ])
+        .to_string_pretty()
+    );
+}

@@ -28,6 +28,9 @@ use crate::Result;
 pub struct Analysis {
     /// Source file name (diagnostics, reports).
     pub file: String,
+    /// FNV-1a hash of `(file, source text)` — the application identity the
+    /// shared [`crate::util::measure_cache::MeasureCache`] keys trials by.
+    pub src_hash: u64,
     /// Parsed program.
     pub program: Program,
     /// Loop table in source order, classified for parallelizability.
@@ -103,10 +106,21 @@ pub fn analyze_source_with_limits(
     };
     Ok(Analysis {
         file: file.to_string(),
+        src_hash: hash_source(file, text),
         program,
         loops: table,
         profile,
     })
+}
+
+/// Content identity of an analyzed source (FNV-1a over name + text).
+fn hash_source(file: &str, text: &str) -> u64 {
+    use std::hash::Hasher;
+    let mut h = crate::util::fasthash::Fnv64::default();
+    h.write(file.as_bytes());
+    h.write(&[0]);
+    h.write(text.as_bytes());
+    h.finish()
 }
 
 #[cfg(test)]

@@ -1,0 +1,427 @@
+//! Fleet scheduler: run many offload jobs (a workload × destination
+//! matrix) concurrently on the [`crate::util::pool::ThreadPool`], sharing
+//! one [`MeasureCache`] so identical verification trials are run once
+//! across the whole fleet — the production-deployment shape the paper's
+//! companion work implies (many applications adapted to many devices,
+//! continuously) rather than the one-app-at-a-time evaluation of §4.
+//!
+//! Determinism: every job seeds its own verification environment from the
+//! shared template, and trials are pure functions of
+//! `(app, pattern, destination, transfer, environment)`, so a fleet run
+//! produces exactly the per-job *results* (chosen pattern, device,
+//! measurements, evaluation values) the equivalent serial
+//! [`run_job`](super::job::run_job) calls would — the cache only removes
+//! duplicate work, never changes it (tested in `tests/fleet.rs`). The
+//! per-job `trials` counters are the one deliberate exception: a job
+//! counts only the trials it actually ran, and which concurrent job wins
+//! the race to measure a shared key is scheduling-dependent — so trial
+//! counts report the dedup, not the search.
+
+use super::job::{Destination, JobConfig, JobReport};
+use super::pipeline::Pipeline;
+use crate::devices::DeviceKind;
+use crate::util::json::Json;
+use crate::util::measure_cache::MeasureCache;
+use crate::util::pool::ThreadPool;
+use crate::util::tablefmt::Table;
+use crate::workloads;
+use crate::Result;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One job of the fleet: a workload bound to an offload destination.
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    /// Workload name (report key; also the analyzed file name).
+    pub workload: String,
+    /// C source text.
+    pub source: String,
+    /// Offload destination for this job.
+    pub destination: Destination,
+}
+
+/// Fleet configuration.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Per-job template (seed, baseline, GA/narrowing settings). Each
+    /// job's `destination` is overridden by its [`FleetSpec`].
+    pub template: JobConfig,
+    /// Concurrent jobs (0 = one per core, at least 2).
+    pub workers: usize,
+    /// Optional JSON persistence path for the shared cache: loaded before
+    /// the run when it exists, saved after — repeated CLI invocations
+    /// deduplicate trials across processes.
+    pub cache_path: Option<PathBuf>,
+    /// Share the measurement cache across jobs (on by default; off gives
+    /// the exact serial trial counts, for A/B measurement).
+    pub share_cache: bool,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            // The fleet parallelizes across whole jobs; per-generation
+            // trial threads on top would only oversubscribe the machine.
+            template: JobConfig {
+                ga_flow: crate::offload::GpuFlowConfig {
+                    parallel_trials: false,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            workers: 0,
+            cache_path: None,
+            share_cache: true,
+        }
+    }
+}
+
+/// Outcome of one fleet job.
+pub struct FleetJobOutcome {
+    /// Workload name.
+    pub workload: String,
+    /// Requested destination.
+    pub destination: Destination,
+    /// Wall time this job took inside the pool, seconds.
+    pub wall_s: f64,
+    /// The job report (with its own Steps 1–7 log), or the error.
+    pub report: Result<JobReport>,
+}
+
+/// Aggregate fleet outcome.
+pub struct FleetReport {
+    /// Per-job outcomes, in spec order.
+    pub jobs: Vec<FleetJobOutcome>,
+    /// Fleet wall-clock, seconds.
+    pub wall_s: f64,
+    /// Sum of per-job wall times — the serial-execution estimate the
+    /// speedup is computed against.
+    pub serial_wall_s: f64,
+    /// Concurrent workers used.
+    pub workers: usize,
+    /// Shared-cache hits (verification trials saved across jobs).
+    pub cache_hits: u64,
+    /// Shared-cache misses (trials actually run through the cache).
+    pub cache_misses: u64,
+    /// Distinct measurements in the cache after the run.
+    pub cache_entries: usize,
+    /// Entries preloaded from `cache_path` (cross-invocation reuse).
+    pub cache_preloaded: usize,
+}
+
+impl FleetReport {
+    /// Wall-clock speedup vs running the jobs back to back.
+    pub fn speedup(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            1.0
+        } else {
+            self.serial_wall_s / self.wall_s
+        }
+    }
+
+    /// Shared-cache hit rate in [0, 1].
+    pub fn hit_rate(&self) -> f64 {
+        let total = (self.cache_hits + self.cache_misses) as f64;
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total
+        }
+    }
+
+    /// Completed jobs per second of fleet wall-clock.
+    pub fn jobs_per_s(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.jobs.len() as f64 / self.wall_s
+        }
+    }
+
+    /// Aggregate W·s-savings table (per-app Fig. 5 comparison) plus the
+    /// cache and concurrency summary.
+    pub fn table(&self) -> String {
+        let mut t = Table::new(&[
+            "workload",
+            "dest",
+            "chosen",
+            "pattern",
+            "time [s]",
+            "base [W*s]",
+            "offl [W*s]",
+            "saved",
+        ]);
+        let mut base_total = 0.0;
+        let mut off_total = 0.0;
+        for j in &self.jobs {
+            match &j.report {
+                Ok(r) => {
+                    base_total += r.baseline.energy_ws;
+                    off_total += r.production.energy_ws;
+                    t.row(&[
+                        j.workload.clone(),
+                        dest_name(j.destination).to_string(),
+                        r.device.name().to_string(),
+                        r.best.pattern.genome.to_string(),
+                        format!("{:.2}", r.production.time_s),
+                        format!("{:.0}", r.baseline.energy_ws),
+                        format!("{:.0}", r.production.energy_ws),
+                        format!(
+                            "{:.1}x",
+                            r.baseline.energy_ws / r.production.energy_ws.max(1e-9)
+                        ),
+                    ]);
+                }
+                Err(e) => {
+                    t.row(&[
+                        j.workload.clone(),
+                        dest_name(j.destination).to_string(),
+                        "FAILED".into(),
+                        String::new(),
+                        String::new(),
+                        String::new(),
+                        String::new(),
+                        e.to_string(),
+                    ]);
+                }
+            }
+        }
+        let mut out = String::from("=== enadapt fleet: workload x destination matrix ===\n\n");
+        out.push_str(&t.render());
+        out.push_str(&format!(
+            "\nfleet energy   : {:.0} W·s baseline → {:.0} W·s offloaded ({:.1}x reduction)\n",
+            base_total,
+            off_total,
+            base_total / off_total.max(1e-9)
+        ));
+        out.push_str(&format!(
+            "wall clock     : {:.2} s on {} workers ({:.2} s serial, {:.1}x speedup, {:.2} jobs/s)\n",
+            self.wall_s,
+            self.workers,
+            self.serial_wall_s,
+            self.speedup(),
+            self.jobs_per_s()
+        ));
+        out.push_str(&format!(
+            "shared cache   : {} hits / {} misses ({:.0}% hit rate), {} entries ({} preloaded)\n",
+            self.cache_hits,
+            self.cache_misses,
+            self.hit_rate() * 100.0,
+            self.cache_entries,
+            self.cache_preloaded
+        ));
+        out
+    }
+
+    /// Machine-readable fleet report.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "jobs",
+                Json::arr(
+                    self.jobs
+                        .iter()
+                        .map(|j| match &j.report {
+                            Ok(r) => Json::obj(vec![
+                                ("workload", Json::str(j.workload.clone())),
+                                ("destination", Json::str(dest_name(j.destination))),
+                                ("ok", Json::Bool(true)),
+                                ("device", Json::str(r.device.name())),
+                                ("pattern", Json::str(r.best.pattern.genome.to_string())),
+                                ("value", Json::num(r.best.value)),
+                                ("time_s", Json::num(r.production.time_s)),
+                                ("mean_w", Json::num(r.production.mean_w)),
+                                ("energy_ws", Json::num(r.production.energy_ws)),
+                                ("baseline_energy_ws", Json::num(r.baseline.energy_ws)),
+                                ("trials", Json::num(r.trials as f64)),
+                                ("wall_s", Json::num(j.wall_s)),
+                            ]),
+                            Err(e) => Json::obj(vec![
+                                ("workload", Json::str(j.workload.clone())),
+                                ("destination", Json::str(dest_name(j.destination))),
+                                ("ok", Json::Bool(false)),
+                                ("error", Json::str(e.to_string())),
+                                ("wall_s", Json::num(j.wall_s)),
+                            ]),
+                        })
+                        .collect(),
+                ),
+            ),
+            ("wall_s", Json::num(self.wall_s)),
+            ("serial_wall_s", Json::num(self.serial_wall_s)),
+            ("speedup", Json::num(self.speedup())),
+            ("jobs_per_s", Json::num(self.jobs_per_s())),
+            ("workers", Json::num(self.workers as f64)),
+            (
+                "cache",
+                Json::obj(vec![
+                    ("hits", Json::num(self.cache_hits as f64)),
+                    ("misses", Json::num(self.cache_misses as f64)),
+                    ("hit_rate", Json::num(self.hit_rate())),
+                    ("entries", Json::num(self.cache_entries as f64)),
+                    ("preloaded", Json::num(self.cache_preloaded as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Destination label for fleet reports.
+pub fn dest_name(d: Destination) -> &'static str {
+    match d {
+        Destination::Device(k) => k.name(),
+        Destination::Mixed => "mixed",
+    }
+}
+
+/// The full sweep: every bundled workload × {gpu, fpga, manycore, mixed}.
+pub fn full_matrix() -> Vec<FleetSpec> {
+    let dests = [
+        Destination::Device(DeviceKind::Gpu),
+        Destination::Device(DeviceKind::Fpga),
+        Destination::Device(DeviceKind::ManyCore),
+        Destination::Mixed,
+    ];
+    let mut specs = Vec::new();
+    for (name, src) in workloads::ALL {
+        for d in dests.iter().copied() {
+            specs.push(FleetSpec {
+                workload: (*name).to_string(),
+                source: (*src).to_string(),
+                destination: d,
+            });
+        }
+    }
+    specs
+}
+
+/// Run a fleet of jobs concurrently with a shared measurement cache.
+pub fn run_fleet(specs: &[FleetSpec], cfg: &FleetConfig) -> Result<FleetReport> {
+    let cache = Arc::new(match &cfg.cache_path {
+        Some(p) if p.exists() => MeasureCache::load(p)?,
+        _ => MeasureCache::new(),
+    });
+    let preloaded = cache.len();
+
+    let workers = if cfg.workers == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(2)
+            .max(2)
+    } else {
+        cfg.workers
+    };
+    let pool = ThreadPool::new(workers.max(1));
+
+    let items: Vec<(FleetSpec, JobConfig, Option<Arc<MeasureCache>>)> = specs
+        .iter()
+        .map(|s| {
+            let mut jc = cfg.template.clone();
+            jc.destination = s.destination;
+            let shared = if cfg.share_cache {
+                Some(Arc::clone(&cache))
+            } else {
+                None
+            };
+            (s.clone(), jc, shared)
+        })
+        .collect();
+
+    let start = Instant::now();
+    let jobs = pool.map(items, |(spec, jc, shared)| {
+        let t = Instant::now();
+        let mut pipeline = Pipeline::new(jc);
+        if let Some(c) = shared {
+            pipeline = pipeline.with_cache(c);
+        }
+        let report = pipeline.run(&spec.workload, &spec.source);
+        FleetJobOutcome {
+            workload: spec.workload,
+            destination: spec.destination,
+            wall_s: t.elapsed().as_secs_f64(),
+            report,
+        }
+    });
+    let wall_s = start.elapsed().as_secs_f64();
+
+    // Persistence failure must not discard a completed run's results.
+    if let Some(p) = &cfg.cache_path {
+        if let Err(e) = cache.save(p) {
+            crate::log_warn!(
+                "failed to persist measurement cache to {}: {e}",
+                p.display()
+            );
+        }
+    }
+
+    let serial_wall_s = jobs.iter().map(|j| j.wall_s).sum();
+    Ok(FleetReport {
+        jobs,
+        wall_s,
+        serial_wall_s,
+        workers: pool.size(),
+        cache_hits: cache.hits(),
+        cache_misses: cache.misses(),
+        cache_entries: cache.len(),
+        cache_preloaded: preloaded,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ga::GaConfig;
+    use crate::offload::GpuFlowConfig;
+
+    fn quick_template() -> JobConfig {
+        JobConfig {
+            ga_flow: GpuFlowConfig {
+                ga: GaConfig {
+                    population: 6,
+                    generations: 4,
+                    ..Default::default()
+                },
+                parallel_trials: false,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn small_fleet_completes_and_shares_trials() {
+        let specs: Vec<FleetSpec> = full_matrix()
+            .into_iter()
+            .filter(|s| s.workload == "mriq")
+            .filter(|s| !matches!(s.destination, Destination::Mixed))
+            .collect();
+        assert_eq!(specs.len(), 3);
+        let cfg = FleetConfig {
+            template: quick_template(),
+            workers: 2,
+            ..Default::default()
+        };
+        let report = run_fleet(&specs, &cfg).unwrap();
+        assert_eq!(report.jobs.len(), 3);
+        for j in &report.jobs {
+            let r = j.report.as_ref().expect("job succeeds");
+            assert_eq!(r.steps.records.len(), 7, "per-job step log retained");
+        }
+        // The three jobs share at least the CPU-only baseline trial.
+        assert!(report.cache_hits > 0, "hits {}", report.cache_hits);
+        assert!(report.table().contains("shared cache"));
+        let j = report.to_json();
+        assert_eq!(j.get("jobs").unwrap().as_arr().unwrap().len(), 3);
+        assert!(j.get("cache").unwrap().get("hits").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn full_matrix_covers_all_pairs() {
+        let m = full_matrix();
+        assert_eq!(m.len(), crate::workloads::ALL.len() * 4);
+        assert!(m
+            .iter()
+            .any(|s| s.workload == "vecadd" && matches!(s.destination, Destination::Mixed)));
+    }
+}

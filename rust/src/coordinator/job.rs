@@ -2,17 +2,14 @@
 //! (Steps 1–7) over a source program, producing the converted code, the
 //! chosen pattern/destination and the production verification measurement.
 
-use super::steps::{Step, StepLog};
-use crate::canalyze::{self, Analysis};
+use super::steps::StepLog;
+use crate::canalyze::Analysis;
 use crate::codegen;
-use crate::devices::{DeviceKind, TransferMode};
+use crate::devices::DeviceKind;
 use crate::ga::FitnessSpec;
-use crate::offload::{
-    fpga_flow, gpu_flow, mixed, Evaluated, FpgaFlowConfig, GpuFlowConfig, MixedConfig,
-    Requirements,
-};
+use crate::offload::{Evaluated, FpgaFlowConfig, GpuFlowConfig, Requirements};
 use crate::verifier::{AppModel, Measurement, VerifEnvConfig};
-use crate::{Error, Result};
+use crate::Result;
 
 /// Where the CPU-only baseline time comes from.
 #[derive(Debug, Clone)]
@@ -132,203 +129,11 @@ impl GeneratedCode {
     }
 }
 
-/// Run the full Steps 1–7 job.
+/// Run the full Steps 1–7 job (one-shot convenience over
+/// [`super::pipeline::Pipeline`], which holds the stage bodies and powers
+/// the concurrent fleet scheduler).
 pub fn run_job(source_name: &str, source: &str, cfg: &JobConfig) -> Result<JobReport> {
-    let mut steps = StepLog::new();
-
-    // Step 1: code analysis.
-    let analysis = steps.run(Step::CodeAnalysis, || {
-        let an = canalyze::analyze_source(source_name, source)?;
-        let detail = format!(
-            "parsed {} functions, {} loop statements, profiled {} dynamic FLOPs",
-            an.program.functions.len(),
-            an.n_loops(),
-            an.profile
-                .as_ref()
-                .map(|p| p.total_flops())
-                .unwrap_or(0.0) as u64
-        );
-        Ok((an, detail))
-    })?;
-
-    // Step 2: offloadable-part extraction.
-    let candidates = steps.run(Step::OffloadableExtraction, || {
-        let ids = analysis.parallelizable_ids();
-        if ids.is_empty() {
-            return Err(Error::Verify(format!(
-                "{source_name}: no parallelizable loop statements"
-            )));
-        }
-        let detail = format!(
-            "{} of {} loop statements are processable",
-            ids.len(),
-            analysis.n_loops()
-        );
-        Ok((ids, detail))
-    })?;
-    let _ = candidates;
-
-    // Baseline calibration (part of building the verification environment).
-    let target_cpu_s = resolve_baseline(&cfg.baseline)?;
-    let app = AppModel::from_analysis(&analysis, &cfg.env.cpu, target_cpu_s)?;
-    let env = cfg.env.clone().build(cfg.seed);
-
-    // Step 3: search for suitable offload parts.
-    let (best, device) = steps.run(Step::OffloadSearch, || {
-        let (best, device, detail) = match cfg.destination {
-            Destination::Device(DeviceKind::Fpga) => {
-                let out = fpga_flow::run(&app, &env, &cfg.fpga_flow)?;
-                let d = format!(
-                    "FPGA narrowing: {} → {} → {} → {} candidates, {} singles + {} combos measured; best {}",
-                    out.funnel.candidates,
-                    out.funnel.after_intensity,
-                    out.funnel.after_trips,
-                    out.funnel.after_fit,
-                    out.funnel.first_round,
-                    out.funnel.second_round,
-                    out.best.pattern
-                );
-                (out.best, DeviceKind::Fpga, d)
-            }
-            Destination::Device(DeviceKind::Cpu) => {
-                return Err(Error::Config("cannot offload to the CPU itself".into()))
-            }
-            Destination::Device(kind) => {
-                let out = gpu_flow::run_on(&app, &env, &cfg.ga_flow, kind)?;
-                let d = format!(
-                    "GA on {kind}: {} generations, {} patterns measured; best {} (value {:.5})",
-                    out.ga.history.len(),
-                    out.trials,
-                    out.best.pattern,
-                    out.best.value
-                );
-                (out.best, kind, d)
-            }
-            Destination::Mixed => {
-                let mcfg = MixedConfig {
-                    requirements: cfg.requirements,
-                    fitness: cfg.fitness,
-                    ga_flow: cfg.ga_flow,
-                    fpga_flow: cfg.fpga_flow,
-                };
-                let out = mixed::run(&app, &env, &mcfg)?;
-                let d = format!(
-                    "mixed: tried [{}], skipped [{}], chose {}",
-                    out.tried
-                        .iter()
-                        .map(|t| t.device.name())
-                        .collect::<Vec<_>>()
-                        .join(" → "),
-                    out.skipped
-                        .iter()
-                        .map(|d| d.name())
-                        .collect::<Vec<_>>()
-                        .join(", "),
-                    out.chosen.device
-                );
-                (out.chosen.best, out.chosen.device, d)
-            }
-        };
-        Ok(((best, device), detail))
-    })?;
-
-    let baseline = env.measure_cpu_only(&app);
-
-    // Step 4: resource-amount adjustment (FPGA lanes / GPU share).
-    steps.run(Step::ResourceAdjustment, || {
-        let detail = match device {
-            DeviceKind::Fpga => {
-                let regions = app.regions(best.pattern.bits());
-                let synths: Vec<String> = regions
-                    .iter()
-                    .map(|r| {
-                        let e = cfg.env.fpga.synthesis(&app.loops[r.0].work);
-                        format!(
-                            "{}: {} lanes, {:.0}% util",
-                            r,
-                            e.lanes,
-                            e.utilization * 100.0
-                        )
-                    })
-                    .collect();
-                format!("FPGA synthesis plan: [{}]", synths.join("; "))
-            }
-            _ => "no device-side resource partitioning needed".to_string(),
-        };
-        Ok(((), detail))
-    })?;
-
-    // Step 5: placement-location adjustment.
-    steps.run(Step::PlacementAdjustment, || {
-        Ok((
-            (),
-            format!(
-                "placed on production server class r740-pac ({} destination)",
-                device
-            ),
-        ))
-    })?;
-
-    // Step 6: execution-file placement + operation verification.
-    let (generated, production) = steps.run(Step::PlacementAndVerification, || {
-        let regions = app.regions(best.pattern.bits());
-        let generated = if regions.is_empty() {
-            GeneratedCode::Unchanged
-        } else {
-            match device {
-                DeviceKind::Gpu => GeneratedCode::OpenAcc(codegen::openacc::generate(
-                    &analysis,
-                    &regions,
-                    TransferMode::Batched,
-                )),
-                DeviceKind::ManyCore => GeneratedCode::OpenMp(codegen::openmp::generate(
-                    &analysis, &regions, 16,
-                )),
-                DeviceKind::Fpga => {
-                    GeneratedCode::OpenCl(codegen::opencl::generate(&analysis, &regions))
-                }
-                DeviceKind::Cpu => GeneratedCode::Unchanged,
-            }
-        };
-        // Final confirmation run of the chosen pattern.
-        let mut production = env.measure(
-            &app,
-            best.pattern.bits(),
-            if regions.is_empty() { DeviceKind::Cpu } else { device },
-            TransferMode::Batched,
-        );
-        production.phase = crate::verifier::PhaseKind::Production;
-        let detail = format!(
-            "generated {} code; production run: {:.2} s, {:.1} W, {:.0} W·s",
-            generated.kind(),
-            production.time_s,
-            production.mean_w,
-            production.energy_ws
-        );
-        Ok(((generated, production), detail))
-    })?;
-
-    // Step 7: in-operation reconfiguration (registered, not triggered).
-    steps.run(Step::Reconfiguration, || {
-        Ok((
-            (),
-            "reconfiguration hook registered (re-run search on workload drift)".to_string(),
-        ))
-    })?;
-
-    Ok(JobReport {
-        source: source_name.to_string(),
-        steps,
-        analysis,
-        app,
-        baseline,
-        best,
-        device,
-        production,
-        generated,
-        trials: env.trials_run(),
-        search_cost_s: env.search_cost_s(),
-    })
+    super::pipeline::Pipeline::new(cfg.clone()).run(source_name, source)
 }
 
 /// Resolve the baseline time, executing real HLO when requested.

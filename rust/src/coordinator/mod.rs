@@ -1,13 +1,19 @@
 //! The Layer-3 coordinator: the environment-adaptive software flow
 //! (paper Fig. 1, Steps 1–7) as an end-to-end job — analyze, extract,
 //! search (power-aware), adjust, place, verify, and register the
-//! reconfiguration hook — plus report rendering.
+//! reconfiguration hook — plus the concurrent fleet scheduler that runs a
+//! whole workload × destination matrix against a shared measurement
+//! cache, and report rendering.
 
+pub mod fleet;
 pub mod job;
+pub mod pipeline;
 pub mod reconfig;
 pub mod report;
 pub mod steps;
 
+pub use fleet::{run_fleet, FleetConfig, FleetJobOutcome, FleetReport, FleetSpec};
 pub use job::{resolve_baseline, run_job, BaselineSource, Destination, GeneratedCode, JobConfig, JobReport};
+pub use pipeline::Pipeline;
 pub use reconfig::{reconfigure, Drift, DriftMonitor, ReconfigOutcome};
 pub use steps::{Step, StepLog, StepRecord};

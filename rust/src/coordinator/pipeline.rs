@@ -1,0 +1,342 @@
+//! The reusable Steps 1–7 pipeline.
+//!
+//! [`super::job::run_job`] used to own the whole per-job flow inline;
+//! the fleet scheduler ([`super::fleet`]) needs to run many jobs
+//! concurrently against a *shared* measurement cache, so the per-job body
+//! lives here as discrete stages that borrow the verification environment
+//! (`&VerifEnv`) instead of owning it. A [`Pipeline`] is one job's
+//! configuration plus an optional [`MeasureCache`]; `run` composes the
+//! stages exactly as the paper's Fig. 1 orders them, and each stage is
+//! independently callable for tools that want to stop midway (the CLI
+//! `analyze` command is stage 1–2 alone).
+
+use super::job::{resolve_baseline, Destination, GeneratedCode, JobConfig, JobReport};
+use super::steps::{Step, StepLog};
+use crate::canalyze::{self, Analysis};
+use crate::codegen;
+use crate::devices::{DeviceKind, TransferMode};
+use crate::offload::{fpga_flow, gpu_flow, mixed, Evaluated, MixedConfig};
+use crate::util::measure_cache::MeasureCache;
+use crate::verifier::{AppModel, Measurement, VerifEnv};
+use crate::{Error, Result};
+use std::sync::Arc;
+
+/// One job's configuration, bound to an optional shared measurement cache.
+pub struct Pipeline {
+    cfg: JobConfig,
+    cache: Option<Arc<MeasureCache>>,
+}
+
+impl Pipeline {
+    /// Pipeline for a job configuration (no shared cache).
+    pub fn new(cfg: JobConfig) -> Self {
+        Self { cfg, cache: None }
+    }
+
+    /// Share a measurement cache across pipelines: repeated verification
+    /// trials (same source, pattern, destination, transfer mode and
+    /// environment) are answered from the cache — the fleet scheduler's
+    /// cross-job "measure once" rule.
+    pub fn with_cache(mut self, cache: Arc<MeasureCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// The job configuration this pipeline runs.
+    pub fn config(&self) -> &JobConfig {
+        &self.cfg
+    }
+
+    /// Run the full Steps 1–7 job.
+    pub fn run(&self, source_name: &str, source: &str) -> Result<JobReport> {
+        let mut steps = StepLog::new();
+        let analysis = self.analyze_stage(&mut steps, source_name, source)?;
+        let (app, env) = self.build_env(&analysis)?;
+        let (best, device) = self.search_stage(&mut steps, &app, &env)?;
+        let baseline = env.measure_cpu_only(&app);
+        self.adjust_stage(&mut steps, &app, &best, device)?;
+        self.placement_stage(&mut steps, device)?;
+        let (generated, production) =
+            self.verify_stage(&mut steps, &analysis, &app, &env, &best, device)?;
+        self.reconfig_stage(&mut steps)?;
+
+        Ok(JobReport {
+            source: source_name.to_string(),
+            steps,
+            analysis,
+            app,
+            baseline,
+            best,
+            device,
+            production,
+            generated,
+            trials: env.trials_run(),
+            search_cost_s: env.search_cost_s(),
+        })
+    }
+
+    /// Steps 1–2: code analysis and offloadable-part extraction.
+    pub fn analyze_stage(
+        &self,
+        steps: &mut StepLog,
+        source_name: &str,
+        source: &str,
+    ) -> Result<Analysis> {
+        let analysis = steps.run(Step::CodeAnalysis, || {
+            let an = canalyze::analyze_source(source_name, source)?;
+            let detail = format!(
+                "parsed {} functions, {} loop statements, profiled {} dynamic FLOPs",
+                an.program.functions.len(),
+                an.n_loops(),
+                an.profile
+                    .as_ref()
+                    .map(|p| p.total_flops())
+                    .unwrap_or(0.0) as u64
+            );
+            Ok((an, detail))
+        })?;
+
+        steps.run(Step::OffloadableExtraction, || {
+            let ids = analysis.parallelizable_ids();
+            if ids.is_empty() {
+                return Err(Error::Verify(format!(
+                    "{source_name}: no parallelizable loop statements"
+                )));
+            }
+            let detail = format!(
+                "{} of {} loop statements are processable",
+                ids.len(),
+                analysis.n_loops()
+            );
+            Ok(((), detail))
+        })?;
+        Ok(analysis)
+    }
+
+    /// Baseline calibration: build the application model and the (possibly
+    /// cache-backed) verification environment.
+    pub fn build_env(&self, analysis: &Analysis) -> Result<(AppModel, VerifEnv)> {
+        let target_cpu_s = resolve_baseline(&self.cfg.baseline)?;
+        let app = AppModel::from_analysis(analysis, &self.cfg.env.cpu, target_cpu_s)?;
+        let mut env = self.cfg.env.clone().build(self.cfg.seed);
+        if let Some(cache) = &self.cache {
+            env.attach_cache(Arc::clone(cache));
+        }
+        Ok((app, env))
+    }
+
+    /// Step 3: search for suitable offload parts on the configured
+    /// destination (GA, narrowing or mixed-order verification).
+    pub fn search_stage(
+        &self,
+        steps: &mut StepLog,
+        app: &AppModel,
+        env: &VerifEnv,
+    ) -> Result<(Evaluated, DeviceKind)> {
+        let cfg = &self.cfg;
+        steps.run(Step::OffloadSearch, || {
+            let (best, device, detail) = match cfg.destination {
+                Destination::Device(DeviceKind::Fpga) => {
+                    let out = fpga_flow::run(app, env, &cfg.fpga_flow)?;
+                    let d = format!(
+                        "FPGA narrowing: {} → {} → {} → {} candidates, {} singles + {} combos measured; best {}",
+                        out.funnel.candidates,
+                        out.funnel.after_intensity,
+                        out.funnel.after_trips,
+                        out.funnel.after_fit,
+                        out.funnel.first_round,
+                        out.funnel.second_round,
+                        out.best.pattern
+                    );
+                    (out.best, DeviceKind::Fpga, d)
+                }
+                Destination::Device(DeviceKind::Cpu) => {
+                    return Err(Error::Config("cannot offload to the CPU itself".into()))
+                }
+                Destination::Device(kind) => {
+                    let out = gpu_flow::run_on(app, env, &cfg.ga_flow, kind)?;
+                    let d = format!(
+                        "GA on {kind}: {} generations, {} patterns measured; best {} (value {:.5})",
+                        out.ga.history.len(),
+                        out.trials,
+                        out.best.pattern,
+                        out.best.value
+                    );
+                    (out.best, kind, d)
+                }
+                Destination::Mixed => {
+                    let mcfg = MixedConfig {
+                        requirements: cfg.requirements,
+                        fitness: cfg.fitness,
+                        ga_flow: cfg.ga_flow,
+                        fpga_flow: cfg.fpga_flow,
+                    };
+                    let out = mixed::run(app, env, &mcfg)?;
+                    let d = format!(
+                        "mixed: tried [{}], skipped [{}], chose {}",
+                        out.tried
+                            .iter()
+                            .map(|t| t.device.name())
+                            .collect::<Vec<_>>()
+                            .join(" → "),
+                        out.skipped
+                            .iter()
+                            .map(|d| d.name())
+                            .collect::<Vec<_>>()
+                            .join(", "),
+                        out.chosen.device
+                    );
+                    (out.chosen.best, out.chosen.device, d)
+                }
+            };
+            Ok(((best, device), detail))
+        })
+    }
+
+    /// Step 4: resource-amount adjustment (FPGA lanes / GPU share).
+    pub fn adjust_stage(
+        &self,
+        steps: &mut StepLog,
+        app: &AppModel,
+        best: &Evaluated,
+        device: DeviceKind,
+    ) -> Result<()> {
+        let cfg = &self.cfg;
+        steps.run(Step::ResourceAdjustment, || {
+            let detail = match device {
+                DeviceKind::Fpga => {
+                    let regions = app.regions(best.pattern.bits());
+                    let synths: Vec<String> = regions
+                        .iter()
+                        .map(|r| {
+                            let e = cfg.env.fpga.synthesis(&app.loops[r.0].work);
+                            format!(
+                                "{}: {} lanes, {:.0}% util",
+                                r,
+                                e.lanes,
+                                e.utilization * 100.0
+                            )
+                        })
+                        .collect();
+                    format!("FPGA synthesis plan: [{}]", synths.join("; "))
+                }
+                _ => "no device-side resource partitioning needed".to_string(),
+            };
+            Ok(((), detail))
+        })
+    }
+
+    /// Step 5: placement-location adjustment.
+    pub fn placement_stage(&self, steps: &mut StepLog, device: DeviceKind) -> Result<()> {
+        steps.run(Step::PlacementAdjustment, || {
+            Ok((
+                (),
+                format!(
+                    "placed on production server class r740-pac ({} destination)",
+                    device
+                ),
+            ))
+        })
+    }
+
+    /// Step 6: execution-file placement + operation verification — code
+    /// generation for the chosen pattern plus the production confirmation
+    /// run.
+    pub fn verify_stage(
+        &self,
+        steps: &mut StepLog,
+        analysis: &Analysis,
+        app: &AppModel,
+        env: &VerifEnv,
+        best: &Evaluated,
+        device: DeviceKind,
+    ) -> Result<(GeneratedCode, Measurement)> {
+        steps.run(Step::PlacementAndVerification, || {
+            let regions = app.regions(best.pattern.bits());
+            let generated = if regions.is_empty() {
+                GeneratedCode::Unchanged
+            } else {
+                match device {
+                    DeviceKind::Gpu => GeneratedCode::OpenAcc(codegen::openacc::generate(
+                        analysis,
+                        &regions,
+                        TransferMode::Batched,
+                    )),
+                    DeviceKind::ManyCore => GeneratedCode::OpenMp(codegen::openmp::generate(
+                        analysis, &regions, 16,
+                    )),
+                    DeviceKind::Fpga => {
+                        GeneratedCode::OpenCl(codegen::opencl::generate(analysis, &regions))
+                    }
+                    DeviceKind::Cpu => GeneratedCode::Unchanged,
+                }
+            };
+            // Final confirmation run of the chosen pattern.
+            let mut production = env.measure(
+                app,
+                best.pattern.bits(),
+                if regions.is_empty() { DeviceKind::Cpu } else { device },
+                TransferMode::Batched,
+            );
+            production.phase = crate::verifier::PhaseKind::Production;
+            let detail = format!(
+                "generated {} code; production run: {:.2} s, {:.1} W, {:.0} W·s",
+                generated.kind(),
+                production.time_s,
+                production.mean_w,
+                production.energy_ws
+            );
+            Ok(((generated, production), detail))
+        })
+    }
+
+    /// Step 7: in-operation reconfiguration (registered, not triggered).
+    pub fn reconfig_stage(&self, steps: &mut StepLog) -> Result<()> {
+        steps.run(Step::Reconfiguration, || {
+            Ok((
+                (),
+                "reconfiguration hook registered (re-run search on workload drift)".to_string(),
+            ))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    #[test]
+    fn pipeline_matches_run_job() {
+        let cfg = JobConfig::default();
+        let via_pipeline = Pipeline::new(cfg.clone()).run("mriq.c", workloads::MRIQ_C).unwrap();
+        let via_run_job = super::super::job::run_job("mriq.c", workloads::MRIQ_C, &cfg).unwrap();
+        assert_eq!(
+            via_pipeline.best.pattern.genome,
+            via_run_job.best.pattern.genome
+        );
+        assert_eq!(via_pipeline.device, via_run_job.device);
+        assert_eq!(
+            via_pipeline.production.energy_ws,
+            via_run_job.production.energy_ws
+        );
+        assert_eq!(via_pipeline.steps.records.len(), 7);
+    }
+
+    #[test]
+    fn shared_cache_does_not_change_results() {
+        use crate::util::measure_cache::MeasureCache;
+        let cfg = JobConfig::default();
+        let cache = Arc::new(MeasureCache::new());
+        let cached = Pipeline::new(cfg.clone())
+            .with_cache(Arc::clone(&cache))
+            .run("mriq.c", workloads::MRIQ_C)
+            .unwrap();
+        let plain = Pipeline::new(cfg).run("mriq.c", workloads::MRIQ_C).unwrap();
+        assert_eq!(cached.best.pattern.genome, plain.best.pattern.genome);
+        assert_eq!(cached.device, plain.device);
+        assert_eq!(cached.production.time_s, plain.production.time_s);
+        assert_eq!(cached.production.energy_ws, plain.production.energy_ws);
+        assert!(cache.misses() > 0);
+    }
+}

@@ -32,6 +32,18 @@ impl DeviceKind {
             DeviceKind::Fpga => "fpga",
         }
     }
+
+    /// Inverse of [`DeviceKind::name`] (used when reloading persisted
+    /// measurement-cache entries).
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "cpu" => Some(DeviceKind::Cpu),
+            "many-core-cpu" => Some(DeviceKind::ManyCore),
+            "gpu" => Some(DeviceKind::Gpu),
+            "fpga" => Some(DeviceKind::Fpga),
+            _ => None,
+        }
+    }
 }
 
 impl std::fmt::Display for DeviceKind {
@@ -70,7 +82,7 @@ impl NestWork {
 /// transfer optimization: naive directive insertion transfers at every
 /// kernel entry; the proposed method batches variables at the outermost
 /// level so payloads cross PCIe once per run.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum TransferMode {
     /// Transfer per loop entry (what a naive OpenACC annotation does).
     PerEntry,

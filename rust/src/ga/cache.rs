@@ -1,7 +1,14 @@
 //! Evaluation cache: measurement trials in the verification environment
 //! are expensive (compile + run + power capture), so each distinct pattern
-//! is measured once — re-visited genomes reuse the stored value. The cache
-//! also doubles as the search log (every pattern ever measured).
+//! is measured once *within a search* — re-visited genomes reuse the
+//! stored fitness. The cache also doubles as the search log (every
+//! pattern ever measured).
+//!
+//! This is the engine-local half of a two-level scheme: cross-job and
+//! cross-invocation deduplication of the underlying verification trials
+//! lives in the shared, thread-safe
+//! [`crate::util::measure_cache::MeasureCache`] the fleet coordinator
+//! attaches to each job's environment (DESIGN.md §7).
 
 use super::genome::Genome;
 use std::collections::HashMap;

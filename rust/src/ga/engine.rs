@@ -94,7 +94,10 @@ pub fn run(
 /// `eval_batch` receives the distinct not-yet-measured genomes of the
 /// current generation and returns their fitness values in order. This is
 /// the hook the offload flows use to run verification trials concurrently
-/// (the real system drives several verification machines at once).
+/// on the bounded scoped worker pool ([`crate::util::pool::scoped_map`])
+/// — the real system drives several verification machines at once, and
+/// because trials are deterministic per pattern the parallel results are
+/// bit-identical to serial evaluation.
 pub fn run_batched(
     len: usize,
     cfg: &GaConfig,

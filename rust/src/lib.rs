@@ -60,11 +60,11 @@ pub mod prelude {
     pub use crate::verifier::{AppModel, Measurement, VerifEnv, VerifEnvConfig};
 }
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type. (Hand-rolled `Display`/`Error` impls — the
+/// offline build has no `thiserror`; see DESIGN.md §3.)
+#[derive(Debug)]
 pub enum Error {
     /// Lexing / parsing / semantic error in the analyzed C source.
-    #[error("analysis error in {file}:{line}: {msg}")]
     Analyze {
         /// Source file name.
         file: String,
@@ -74,20 +74,45 @@ pub enum Error {
         msg: String,
     },
     /// Interpreter failure while profiling.
-    #[error("profile error: {0}")]
     Profile(String),
     /// Verification-environment failure.
-    #[error("verification error: {0}")]
     Verify(String),
     /// PJRT runtime failure.
-    #[error("runtime error: {0}")]
     Runtime(String),
     /// Configuration error.
-    #[error("config error: {0}")]
     Config(String),
     /// I/O error.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Analyze { file, line, msg } => {
+                write!(f, "analysis error in {file}:{line}: {msg}")
+            }
+            Error::Profile(m) => write!(f, "profile error: {m}"),
+            Error::Verify(m) => write!(f, "verification error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.

@@ -4,6 +4,8 @@
 //!
 //! * `analyze`   — Steps 1–2: loop table + parallelizability report.
 //! * `offload`   — Steps 1–7: full power-aware offload job.
+//! * `fleet`     — the workload × destination matrix, run concurrently
+//!   with a shared cross-job measurement cache.
 //! * `power`     — Fig. 5 reproduction for one pattern/destination.
 //! * `codegen`   — emit the converted code (OpenACC/OpenMP/OpenCL).
 //! * `calibrate` — execute the AOT HLO artifacts on PJRT (real timing).
@@ -54,6 +56,24 @@ fn app() -> App {
                     o
                 },
                 positionals: vec!["source"],
+            },
+            CmdSpec {
+                name: "fleet",
+                about: "run the full workload x destination matrix concurrently \
+                        (shared cross-job measurement cache)",
+                opts: {
+                    let mut o = common();
+                    o.push(opt("workers", "0", "concurrent jobs (0 = one per core)"));
+                    o.push(opt(
+                        "cache",
+                        "",
+                        "JSON cache file for cross-invocation trial reuse (empty = none)",
+                    ));
+                    o.push(opt("generations", "20", "GA generations (gpu/manycore stages)"));
+                    o.push(opt("population", "16", "GA population (gpu/manycore stages)"));
+                    o
+                },
+                positionals: vec![],
             },
             CmdSpec {
                 name: "power",
@@ -109,13 +129,20 @@ fn main() {
     }
 }
 
-/// Load a bundled workload by name or a file from disk.
+/// Load a bundled workload by (tolerant) name or a file from disk. When
+/// neither resolves, the error lists the valid bundled names.
 fn load_source(arg: &str) -> enadapt::Result<(String, String)> {
-    if let Some(src) = workloads::by_name(arg) {
-        return Ok((format!("{}.c", arg.trim_end_matches(".c")), src.to_string()));
+    if let Some((name, src)) = workloads::resolve(arg) {
+        return Ok((format!("{name}.c"), src.to_string()));
     }
-    let text = std::fs::read_to_string(arg)?;
-    Ok((arg.to_string(), text))
+    match std::fs::read_to_string(arg) {
+        Ok(text) => Ok((arg.to_string(), text)),
+        Err(e) => Err(enadapt::Error::Config(format!(
+            "unknown workload '{arg}' and not a readable file ({e}); \
+             bundled workloads: {}",
+            workloads::names().join(", ")
+        ))),
+    }
 }
 
 fn parse_dest(s: &str) -> enadapt::Result<Destination> {
@@ -230,6 +257,31 @@ fn dispatch(p: &Parsed) -> enadapt::Result<()> {
                 );
             } else {
                 println!("{}", coordinator::report::render_job(&report));
+            }
+            Ok(())
+        }
+        "fleet" => {
+            let mut template = job_config(p)?;
+            // Jobs are the unit of concurrency; per-generation trial
+            // threads on top would oversubscribe the machine.
+            template.ga_flow.parallel_trials = false;
+            let cfg = coordinator::FleetConfig {
+                template,
+                workers: p
+                    .get_usize("workers")
+                    .map_err(|e| enadapt::Error::Config(e.to_string()))?,
+                cache_path: p
+                    .get("cache")
+                    .filter(|s| !s.is_empty())
+                    .map(std::path::PathBuf::from),
+                share_cache: true,
+            };
+            let specs = coordinator::fleet::full_matrix();
+            let report = coordinator::run_fleet(&specs, &cfg)?;
+            if p.flag("json") {
+                println!("{}", report.to_json().to_string_pretty());
+            } else {
+                println!("{}", report.table());
             }
             Ok(())
         }

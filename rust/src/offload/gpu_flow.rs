@@ -40,9 +40,11 @@ pub struct GpuFlowConfig {
     pub seed: u64,
     /// Apply the §3.1 transfer consolidation.
     pub transfer_opt: bool,
-    /// Measure each generation's distinct patterns concurrently (models
-    /// several verification machines; identical results, lower wall time
-    /// on multi-core coordinators).
+    /// Measure each generation's distinct patterns concurrently on the
+    /// scoped worker pool (models several verification machines; identical
+    /// results — trials are deterministic per pattern — at lower wall time
+    /// on multi-core coordinators). On by default; the fleet coordinator
+    /// turns it off because it already parallelizes across whole jobs.
     pub parallel_trials: bool,
 }
 
@@ -53,7 +55,7 @@ impl Default for GpuFlowConfig {
             fitness: FitnessSpec::paper(),
             seed: 42,
             transfer_opt: true,
-            parallel_trials: false,
+            parallel_trials: true,
         }
     }
 }
@@ -118,15 +120,14 @@ pub fn run_on(
             }
         };
         let measurements: Vec<Measurement> = if parallel && batch.len() > 1 {
-            // One scoped thread per trial — the generation's patterns run
-            // on "parallel verification machines".
-            std::thread::scope(|scope| {
-                let handles: Vec<_> = batch
-                    .iter()
-                    .map(|g| scope.spawn(move || measure_one(g)))
-                    .collect();
-                handles.into_iter().map(|h| h.join().expect("trial")).collect()
-            })
+            // The generation's distinct patterns run on "parallel
+            // verification machines": a bounded scoped map over the
+            // machine's cores, so a population of 16 no longer serializes
+            // 16 trials (and no longer spawns 16 unbounded threads).
+            let workers = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(2);
+            crate::util::pool::scoped_map(workers, batch, |g| measure_one(g))
         } else {
             batch.iter().map(measure_one).collect()
         };
@@ -215,6 +216,30 @@ mod tests {
             assert!(w[1].best >= w[0].best);
         }
         assert!(out.trials > 0);
+    }
+
+    #[test]
+    fn parallel_trials_match_serial_exactly() {
+        let (app, env) = setup();
+        let mk = |parallel_trials| GpuFlowConfig {
+            ga: GaConfig {
+                population: 8,
+                generations: 5,
+                ..Default::default()
+            },
+            seed: 9,
+            parallel_trials,
+            ..Default::default()
+        };
+        let env_serial = VerifEnvConfig::r740_pac().build(99);
+        let serial = run(&app, &env_serial, &mk(false)).unwrap();
+        let parallel = run(&app, &env, &mk(true)).unwrap();
+        assert_eq!(serial.best.pattern.genome, parallel.best.pattern.genome);
+        assert_eq!(
+            serial.best.measurement.energy_ws,
+            parallel.best.measurement.energy_ws
+        );
+        assert_eq!(serial.trials, parallel.trials);
     }
 
     #[test]

@@ -32,6 +32,19 @@ impl Hasher for Fnv64 {
     }
 }
 
+/// Fold a sequence of words into one FNV-1a style hash, starting from
+/// `seed` XORed into the offset basis. Shared by the measurement-cache
+/// identities (application hash, environment fingerprint) so the mixing
+/// scheme lives in exactly one place.
+pub fn fold_u64s(seed: u64, words: impl IntoIterator<Item = u64>) -> u64 {
+    let mut h = FNV_OFFSET ^ seed;
+    for w in words {
+        h ^= w;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
 /// `HashMap` with the FNV hasher.
 pub type FastMap<K, V> = HashMap<K, V, BuildHasherDefault<Fnv64>>;
 

@@ -1,0 +1,365 @@
+//! Shared, thread-safe measurement cache — the fleet coordinator's
+//! cross-job "measure once" rule (DESIGN.md §7).
+//!
+//! The GA engine already avoids re-measuring a pattern *within* one search
+//! ([`crate::ga::cache::EvalCache`]), but identical verification trials
+//! recur far more broadly: every flow re-measures the CPU-only baseline,
+//! the mixed flow re-runs the GA per destination, and a fleet run sweeps
+//! the same workloads over many destinations with the same seed. The
+//! verification environment is deterministic per
+//! `(application, pattern, destination, transfer mode, environment)`, so
+//! those trials are pure functions — this cache memoizes them across
+//! concurrent jobs and (via JSON persistence) across CLI invocations.
+//!
+//! Keys combine the source content hash (via
+//! [`crate::verifier::AppModel::measure_hash`]), the genome bits, the
+//! destination, the transfer mode and the environment fingerprint
+//! ([`crate::verifier::VerifEnvConfig::fingerprint`], which folds in every
+//! device-model parameter plus the noise seed) — any environment change
+//! invalidates naturally by changing the key.
+//!
+//! Concurrency: a per-key slot mutex gives a hard *measure-once*
+//! guarantee — two jobs racing on the same key block on the slot, the
+//! first runs the trial, the second gets the stored result. Distinct keys
+//! never contend beyond a brief map-lock.
+
+use crate::devices::{DeviceKind, TransferMode};
+use crate::util::json::{self, Json};
+use crate::verifier::Measurement;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Identity of one verification trial.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct MeasureKey {
+    /// Application identity (source content + calibration, see
+    /// [`crate::verifier::AppModel::measure_hash`]).
+    pub app_hash: u64,
+    /// Offload pattern (bit per candidate loop).
+    pub pattern: Vec<bool>,
+    /// Destination device.
+    pub device: DeviceKind,
+    /// §3.1 transfer mode.
+    pub xfer: TransferMode,
+    /// Environment fingerprint (device models + noise seed).
+    pub env_fingerprint: u64,
+}
+
+type Slot = Arc<Mutex<Option<Measurement>>>;
+
+/// Thread-safe trial cache with hit statistics and JSON persistence.
+#[derive(Debug, Default)]
+pub struct MeasureCache {
+    map: Mutex<HashMap<MeasureKey, Slot>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl MeasureCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Look up `key`, running `measure` exactly once per distinct key even
+    /// under concurrent access. Returns the measurement and whether it was
+    /// a cache hit (a verification trial *saved*).
+    pub fn get_or_measure(
+        &self,
+        key: MeasureKey,
+        measure: impl FnOnce() -> Measurement,
+    ) -> (Measurement, bool) {
+        let slot: Slot = {
+            let mut map = self.map.lock().unwrap();
+            map.entry(key).or_default().clone()
+        };
+        // The slot lock serializes same-key callers only: the first one in
+        // measures while later ones wait for the stored result.
+        let mut guard = slot.lock().unwrap();
+        if let Some(m) = guard.as_ref() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return (m.clone(), true);
+        }
+        let m = measure();
+        *guard = Some(m.clone());
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        (m, false)
+    }
+
+    /// Trials saved (lookups answered from the cache).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Trials actually run through this cache.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Hit rate in [0, 1] (0 when nothing was looked up).
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits() as f64;
+        let total = h + self.misses() as f64;
+        if total <= 0.0 {
+            0.0
+        } else {
+            h / total
+        }
+    }
+
+    /// Distinct completed measurements stored.
+    pub fn len(&self) -> usize {
+        self.map
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|s| s.lock().unwrap().is_some())
+            .count()
+    }
+
+    /// Is the cache empty?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Serialize every completed entry (pending slots are skipped).
+    pub fn to_json(&self) -> Json {
+        let map = self.map.lock().unwrap();
+        let mut entries: Vec<(MeasureKey, Measurement)> = map
+            .iter()
+            .filter_map(|(k, slot)| slot.lock().unwrap().clone().map(|m| (k.clone(), m)))
+            .collect();
+        // Stable order so persisted files diff cleanly.
+        entries.sort_by(|a, b| key_sort_token(&a.0).cmp(&key_sort_token(&b.0)));
+        Json::obj(vec![
+            ("version", Json::num(1.0)),
+            (
+                "entries",
+                Json::arr(
+                    entries
+                        .into_iter()
+                        .map(|(k, m)| {
+                            Json::obj(vec![
+                                ("app_hash", Json::str(format!("{:016x}", k.app_hash))),
+                                (
+                                    "pattern",
+                                    Json::str(
+                                        k.pattern
+                                            .iter()
+                                            .map(|&b| if b { '1' } else { '0' })
+                                            .collect::<String>(),
+                                    ),
+                                ),
+                                ("device", Json::str(k.device.name())),
+                                (
+                                    "xfer",
+                                    Json::str(match k.xfer {
+                                        TransferMode::Batched => "batched",
+                                        TransferMode::PerEntry => "per-entry",
+                                    }),
+                                ),
+                                ("env", Json::str(format!("{:016x}", k.env_fingerprint))),
+                                ("measurement", m.to_json_full()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Rebuild a cache from [`MeasureCache::to_json`] output. Statistics
+    /// start at zero; malformed entries are an error (a corrupt cache file
+    /// should be deleted, not silently half-loaded).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let bad = |what: &str| Error::Config(format!("measurement cache: {what}"));
+        let entries = j
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .ok_or_else(|| bad("missing 'entries'"))?;
+        let cache = Self::new();
+        {
+            let mut map = cache.map.lock().unwrap();
+            for e in entries {
+                let key = MeasureKey {
+                    app_hash: parse_hex(e.get("app_hash").and_then(|v| v.as_str()))
+                        .ok_or_else(|| bad("bad app_hash"))?,
+                    pattern: e
+                        .get("pattern")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| bad("bad pattern"))?
+                        .chars()
+                        .map(|c| c == '1')
+                        .collect(),
+                    device: e
+                        .get("device")
+                        .and_then(|v| v.as_str())
+                        .and_then(DeviceKind::from_name)
+                        .ok_or_else(|| bad("bad device"))?,
+                    xfer: match e.get("xfer").and_then(|v| v.as_str()) {
+                        Some("batched") => TransferMode::Batched,
+                        Some("per-entry") => TransferMode::PerEntry,
+                        _ => return Err(bad("bad xfer")),
+                    },
+                    env_fingerprint: parse_hex(e.get("env").and_then(|v| v.as_str()))
+                        .ok_or_else(|| bad("bad env fingerprint"))?,
+                };
+                let m = e
+                    .get("measurement")
+                    .and_then(Measurement::from_json)
+                    .ok_or_else(|| bad("bad measurement"))?;
+                map.insert(key, Arc::new(Mutex::new(Some(m))));
+            }
+        }
+        Ok(cache)
+    }
+
+    /// Persist to a JSON file (compact; entries in stable order).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_compact())?;
+        Ok(())
+    }
+
+    /// Load a cache persisted by [`MeasureCache::save`].
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let parsed = json::parse(&text)
+            .map_err(|e| Error::Config(format!("measurement cache {}: {e}", path.display())))?;
+        Self::from_json(&parsed)
+    }
+}
+
+fn key_sort_token(k: &MeasureKey) -> (u64, u64, String, &'static str, u8) {
+    (
+        k.app_hash,
+        k.env_fingerprint,
+        k.pattern.iter().map(|&b| if b { '1' } else { '0' }).collect(),
+        k.device.name(),
+        matches!(k.xfer, TransferMode::PerEntry) as u8,
+    )
+}
+
+fn parse_hex(s: Option<&str>) -> Option<u64> {
+    u64::from_str_radix(s?, 16).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::canalyze::LoopId;
+    use crate::power::PowerTrace;
+    use crate::verifier::{PhaseKind, TrialBreakdown};
+
+    fn fake_measurement(time_s: f64) -> Measurement {
+        Measurement {
+            app: "t.c".into(),
+            device: DeviceKind::Fpga,
+            pattern: vec![true],
+            regions: vec![LoopId(0)],
+            time_s,
+            mean_w: 111.0,
+            energy_ws: time_s * 111.0,
+            trace: PowerTrace::default(),
+            timed_out: false,
+            failure: None,
+            breakdown: TrialBreakdown::default(),
+            phase: PhaseKind::Verification,
+        }
+    }
+
+    fn key(bit: bool, env: u64) -> MeasureKey {
+        MeasureKey {
+            app_hash: 7,
+            pattern: vec![bit],
+            device: DeviceKind::Fpga,
+            xfer: TransferMode::Batched,
+            env_fingerprint: env,
+        }
+    }
+
+    #[test]
+    fn second_lookup_hits_and_reuses() {
+        let c = MeasureCache::new();
+        let (a, hit_a) = c.get_or_measure(key(true, 1), || fake_measurement(2.0));
+        let (b, hit_b) = c.get_or_measure(key(true, 1), || fake_measurement(99.0));
+        assert!(!hit_a && hit_b);
+        assert_eq!(a.time_s, 2.0);
+        assert_eq!(b.time_s, 2.0, "second measure closure must not run");
+        assert_eq!((c.hits(), c.misses()), (1, 1));
+        assert_eq!(c.len(), 1);
+        assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distinct_env_fingerprints_do_not_collide() {
+        let c = MeasureCache::new();
+        c.get_or_measure(key(true, 1), || fake_measurement(1.0));
+        let (m, hit) = c.get_or_measure(key(true, 2), || fake_measurement(5.0));
+        assert!(!hit, "changed environment must re-measure");
+        assert_eq!(m.time_s, 5.0);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_entries() {
+        let c = MeasureCache::new();
+        c.get_or_measure(key(true, 1), || fake_measurement(2.0));
+        c.get_or_measure(key(false, 1), || fake_measurement(14.0));
+        let back = MeasureCache::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.len(), 2);
+        let (m, hit) = back.get_or_measure(key(false, 1), || fake_measurement(0.0));
+        assert!(hit, "persisted entry must answer the lookup");
+        assert_eq!(m.time_s, 14.0);
+    }
+
+    #[test]
+    fn save_and_load_file() {
+        let dir = std::env::temp_dir().join("enadapt_measure_cache_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.json");
+        let c = MeasureCache::new();
+        c.get_or_measure(key(true, 9), || fake_measurement(3.0));
+        c.save(&path).unwrap();
+        let back = MeasureCache::load(&path).unwrap();
+        assert_eq!(back.len(), 1);
+        let (_, hit) = back.get_or_measure(key(true, 9), || fake_measurement(0.0));
+        assert!(hit);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_cache_is_a_clean_error() {
+        let parsed = json::parse(r#"{"version": 1, "entries": [{"app_hash": "zz"}]}"#).unwrap();
+        assert!(MeasureCache::from_json(&parsed).is_err());
+    }
+
+    #[test]
+    fn concurrent_same_key_measures_once() {
+        use std::sync::atomic::AtomicUsize;
+        let c = Arc::new(MeasureCache::new());
+        let evals = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let c = Arc::clone(&c);
+            let evals = Arc::clone(&evals);
+            handles.push(std::thread::spawn(move || {
+                let (m, _) = c.get_or_measure(key(true, 3), || {
+                    evals.fetch_add(1, Ordering::SeqCst);
+                    // Widen the race window.
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                    fake_measurement(4.0)
+                });
+                assert_eq!(m.time_s, 4.0);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(evals.load(Ordering::SeqCst), 1, "measure-once violated");
+        assert_eq!(c.misses(), 1);
+        assert_eq!(c.hits(), 7);
+    }
+}

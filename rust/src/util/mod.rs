@@ -8,6 +8,7 @@ pub mod benchkit;
 pub mod fasthash;
 pub mod json;
 pub mod logging;
+pub mod measure_cache;
 pub mod pool;
 pub mod prng;
 pub mod prop;

@@ -106,6 +106,59 @@ impl ThreadPool {
     }
 }
 
+/// Bounded *scoped* parallel map: applies `f` to each item on at most
+/// `max_workers` worker threads, preserving order. Unlike
+/// [`ThreadPool::map`] the items and closure may borrow local state
+/// (no `'static` bound) — this is what the GA flows use to evaluate a
+/// generation's patterns concurrently against a borrowed `&VerifEnv`
+/// without spawning one thread per trial.
+///
+/// Panics in `f` propagate when the scope joins.
+pub fn scoped_map<T, R, F>(max_workers: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = max_workers.max(1).min(n);
+    if workers == 1 {
+        return items.iter().map(&f).collect();
+    }
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    thread::scope(|scope| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let next = &next;
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                if tx.send((i, r)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx.iter() {
+            slots[i] = Some(r);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("scoped_map slot filled"))
+            .collect()
+    })
+}
+
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         drop(self.sender.take());
@@ -171,5 +224,37 @@ mod tests {
         let pool = ThreadPool::new(2);
         let out: Vec<u32> = pool.map(Vec::<u32>::new(), |x| x);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn scoped_map_preserves_order_and_borrows() {
+        let offset = 100u64; // borrowed by the closure: no 'static bound
+        let items: Vec<u64> = (0..57).collect();
+        let out = scoped_map(4, &items, |&x| x + offset);
+        assert_eq!(out, (100..157).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn scoped_map_single_worker_and_empty() {
+        let items = vec![1, 2, 3];
+        assert_eq!(scoped_map(1, &items, |&x| x * 2), vec![2, 4, 6]);
+        let empty: Vec<i32> = Vec::new();
+        assert!(scoped_map(8, &empty, |&x| x).is_empty());
+    }
+
+    #[test]
+    fn scoped_map_bounds_concurrency() {
+        use std::sync::atomic::AtomicUsize;
+        let live = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        let items: Vec<u32> = (0..64).collect();
+        scoped_map(3, &items, |&x| {
+            let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            live.fetch_sub(1, Ordering::SeqCst);
+            x
+        });
+        assert!(peak.load(Ordering::SeqCst) <= 3, "peak {}", peak.load(Ordering::SeqCst));
     }
 }

@@ -43,6 +43,11 @@ pub struct AppModel {
     pub total_cpu_s: f64,
     /// Work scale factor applied to the sample profile.
     pub work_scale: f64,
+    /// Identity of this model for the shared measurement cache: hashes the
+    /// source content, the calibration target and the host CPU model, so
+    /// two jobs measuring the same pattern of the same program in the same
+    /// environment share one verification trial (DESIGN.md §7).
+    pub measure_hash: u64,
 }
 
 impl AppModel {
@@ -103,12 +108,23 @@ impl AppModel {
             })
             .collect();
 
+        let measure_hash = crate::util::fasthash::fold_u64s(
+            an.src_hash,
+            [
+                target_cpu_s.to_bits(),
+                cpu.gflops.to_bits(),
+                cpu.mem_bw.to_bits(),
+                cpu.active_w.to_bits(),
+            ],
+        );
+
         Ok(Self {
             name: an.file.clone(),
             candidates: an.parallelizable_ids(),
             loops,
             total_cpu_s: target_cpu_s,
             work_scale: s,
+            measure_hash,
         })
     }
 

@@ -11,9 +11,10 @@ use crate::devices::{
     Accelerator, CpuModel, DeviceKind, FpgaModel, GpuModel, ManyCoreModel, TransferMode,
 };
 use crate::power::{IpmiConfig, IpmiSampler, PowerProfile};
+use crate::util::measure_cache::{MeasureCache, MeasureKey};
 use crate::util::prng::Pcg32;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::Arc;
 
 /// Server chassis model.
 #[derive(Debug, Clone, Copy)]
@@ -64,11 +65,90 @@ impl VerifEnvConfig {
     pub fn build(self, seed: u64) -> VerifEnv {
         VerifEnv {
             seed,
+            fingerprint: self.fingerprint(seed),
             sampler: IpmiSampler::new(self.ipmi),
             trials: AtomicU64::new(0),
-            search_cost_s: Mutex::new(0.0),
+            search_cost_ns: AtomicU64::new(0),
+            cache: None,
             cfg: self,
         }
+    }
+
+    /// Environment identity for the shared measurement cache: folds every
+    /// device-model parameter plus the noise seed into one hash, so any
+    /// configuration change (a different timeout, a retuned FPGA clock, a
+    /// new seed) keys different cache entries (DESIGN.md §7).
+    pub fn fingerprint(&self, seed: u64) -> u64 {
+        let s = &self.fpga.synth;
+        let c = &s.costs;
+        let fields = [
+            self.server.idle_w,
+            self.cpu.gflops,
+            self.cpu.mem_bw,
+            self.cpu.active_w,
+            self.manycore.cores,
+            self.manycore.efficiency,
+            self.manycore.mem_bw,
+            self.manycore.fork_join_s,
+            self.manycore.active_w,
+            self.manycore.idle_extra_w,
+            // The nested host models feed ManyCoreModel::estimate (and may
+            // feed future GPU scaling); they are independent of self.cpu,
+            // so they must key cache entries too.
+            self.manycore.host.gflops,
+            self.manycore.host.mem_bw,
+            self.manycore.host.active_w,
+            self.gpu.host.gflops,
+            self.gpu.host.mem_bw,
+            self.gpu.host.active_w,
+            self.gpu.gflops,
+            self.gpu.mem_bw,
+            self.gpu.pcie_bw,
+            self.gpu.pcie_latency_s,
+            self.gpu.launch_s,
+            self.gpu.active_w,
+            self.gpu.host_drive_w,
+            self.gpu.idle_extra_w,
+            self.fpga.clock_hz,
+            self.fpga.ii,
+            self.fpga.ddr_bw,
+            self.fpga.pcie_bw,
+            self.fpga.pcie_latency_s,
+            self.fpga.launch_s,
+            self.fpga.active_w,
+            self.fpga.host_drive_w,
+            self.fpga.idle_extra_w,
+            s.budget.luts,
+            s.budget.ffs,
+            s.budget.dsps,
+            s.budget.ram_kb,
+            s.util_cap,
+            s.max_lanes as f64,
+            s.compile_base_s,
+            s.compile_per_util_s,
+            s.precompile_s,
+            c.lut_per_fadd,
+            c.lut_per_fmul,
+            c.dsp_per_fmul,
+            c.dsp_per_fdiv,
+            c.lut_per_fdiv,
+            c.dsp_per_special,
+            c.lut_per_special,
+            c.lut_per_iop,
+            c.lut_per_memport,
+            c.ram_kb_per_memport,
+            c.lut_fixed,
+            c.ff_per_lut,
+            self.ipmi.period_s,
+            self.ipmi.noise_w_std,
+            self.ipmi.quantum_w,
+            self.timeout_s,
+            self.timing_jitter,
+        ];
+        crate::util::fasthash::fold_u64s(
+            seed.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            fields.into_iter().map(f64::to_bits),
+        )
     }
 }
 
@@ -77,9 +157,14 @@ pub struct VerifEnv {
     /// Configuration (public for reports).
     pub cfg: VerifEnvConfig,
     seed: u64,
+    fingerprint: u64,
     sampler: IpmiSampler,
     trials: AtomicU64,
-    search_cost_s: Mutex<f64>,
+    // Integer nanoseconds: atomic integer addition is associative, so the
+    // accumulated cost is identical no matter what order parallel trials
+    // complete in (an f64 accumulator would drift in the low bits).
+    search_cost_ns: AtomicU64,
+    cache: Option<Arc<MeasureCache>>,
 }
 
 impl VerifEnv {
@@ -93,6 +178,25 @@ impl VerifEnv {
         }
     }
 
+    /// Attach a shared measurement cache: subsequent [`VerifEnv::measure`]
+    /// calls answer repeated `(app, pattern, destination, transfer)`
+    /// trials from the cache instead of re-running them. Hits do not count
+    /// toward [`VerifEnv::trials_run`] or the search-cost budget — they
+    /// are trials *saved*.
+    pub fn attach_cache(&mut self, cache: Arc<MeasureCache>) {
+        self.cache = Some(cache);
+    }
+
+    /// The attached shared measurement cache, if any.
+    pub fn measure_cache(&self) -> Option<&Arc<MeasureCache>> {
+        self.cache.as_ref()
+    }
+
+    /// The environment fingerprint this instance keys cache entries with.
+    pub fn env_fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
     /// Measurement trials run so far.
     pub fn trials_run(&self) -> u64 {
         self.trials.load(Ordering::Relaxed)
@@ -101,12 +205,15 @@ impl VerifEnv {
     /// Cumulative simulated search cost (pattern compiles + runs), seconds.
     /// This is the §3.2/§3.3 budget that makes FPGA search expensive.
     pub fn search_cost_s(&self) -> f64 {
-        *self.search_cost_s.lock().unwrap()
+        self.search_cost_ns.load(Ordering::Relaxed) as f64 / 1e9
     }
 
     /// Charge search-cost seconds (compilation of a pattern etc.).
+    /// Quantized to whole nanoseconds so concurrent charges accumulate
+    /// deterministically regardless of completion order.
     pub fn charge_search_cost(&self, s: f64) {
-        *self.search_cost_s.lock().unwrap() += s;
+        let ns = (s.max(0.0) * 1e9).round() as u64;
+        self.search_cost_ns.fetch_add(ns, Ordering::Relaxed);
     }
 
     /// Measure the all-CPU baseline (the "normal CPU without offload" run
@@ -123,6 +230,31 @@ impl VerifEnv {
     ///   the bits and measures the plain CPU run).
     /// * `xfer` — §3.1 transfer consolidation on/off.
     pub fn measure(
+        &self,
+        app: &AppModel,
+        bits: &[bool],
+        dest: DeviceKind,
+        xfer: TransferMode,
+    ) -> Measurement {
+        if let Some(cache) = &self.cache {
+            let key = MeasureKey {
+                app_hash: app.measure_hash,
+                pattern: bits.to_vec(),
+                device: dest,
+                xfer,
+                env_fingerprint: self.fingerprint,
+            };
+            let (m, _hit) =
+                cache.get_or_measure(key, || self.measure_uncached(app, bits, dest, xfer));
+            return m;
+        }
+        self.measure_uncached(app, bits, dest, xfer)
+    }
+
+    /// The actual simulated trial (always runs; charges trial counters and
+    /// search cost). [`VerifEnv::measure`] wraps this with the shared
+    /// cache when one is attached.
+    fn measure_uncached(
         &self,
         app: &AppModel,
         bits: &[bool],
@@ -332,6 +464,46 @@ mod tests {
         assert_eq!(m1.time_s, m2.time_s);
         assert_eq!(m1.energy_ws, m2.energy_ws);
         let _ = cfg;
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_sensitive() {
+        let base = VerifEnvConfig::r740_pac();
+        let fp = base.fingerprint(7);
+        assert_eq!(fp, VerifEnvConfig::r740_pac().fingerprint(7), "deterministic");
+        assert_ne!(fp, base.fingerprint(8), "seed-sensitive");
+        let mut hot = VerifEnvConfig::r740_pac();
+        hot.server.idle_w += 1.0;
+        assert_ne!(fp, hot.fingerprint(7), "idle-draw-sensitive");
+        let mut short = VerifEnvConfig::r740_pac();
+        short.timeout_s = 60.0;
+        assert_ne!(fp, short.fingerprint(7), "timeout-sensitive");
+    }
+
+    #[test]
+    fn cached_env_dedupes_trials_and_matches_uncached() {
+        use crate::util::measure_cache::MeasureCache;
+        use std::sync::Arc;
+        let an = analyze_source("mriq.c", workloads::MRIQ_C).unwrap();
+        let cfg = VerifEnvConfig::r740_pac();
+        let app = AppModel::from_analysis(&an, &cfg.cpu, 14.0).unwrap();
+        let mut env = cfg.build(42);
+        let cache = Arc::new(MeasureCache::new());
+        env.attach_cache(Arc::clone(&cache));
+
+        let m1 = env.measure_cpu_only(&app);
+        let m2 = env.measure_cpu_only(&app);
+        assert_eq!(env.trials_run(), 1, "second trial answered by the cache");
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert_eq!(m1.time_s, m2.time_s);
+        assert_eq!(m1.energy_ws, m2.energy_ws);
+
+        // Cached results are bit-identical to an uncached environment.
+        let plain = VerifEnvConfig::r740_pac().build(42);
+        let reference = plain.measure_cpu_only(&app);
+        assert_eq!(m1.time_s, reference.time_s);
+        assert_eq!(m1.mean_w, reference.mean_w);
+        assert_eq!(m1.energy_ws, reference.energy_ws);
     }
 
     #[test]

@@ -66,6 +66,78 @@ impl Measurement {
             .collect()
     }
 
+    /// Full serialization including the power trace and phase — enough to
+    /// reconstruct the measurement bit-for-bit via [`Measurement::from_json`]
+    /// (the measurement-cache's cross-invocation persistence format).
+    pub fn to_json_full(&self) -> Json {
+        let mut j = match self.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("to_json returns an object"),
+        };
+        j.insert(
+            "trace".to_string(),
+            Json::arr(
+                self.trace
+                    .samples
+                    .iter()
+                    .map(|s| Json::arr(vec![Json::num(s.t_s), Json::num(s.watts)]))
+                    .collect(),
+            ),
+        );
+        j.insert(
+            "phase".to_string(),
+            Json::str(match self.phase {
+                PhaseKind::Verification => "verification",
+                PhaseKind::Production => "production",
+            }),
+        );
+        Json::Obj(j)
+    }
+
+    /// Reconstruct a measurement persisted by [`Measurement::to_json_full`].
+    pub fn from_json(j: &Json) -> Option<Measurement> {
+        let pattern: Vec<bool> = j.get("pattern")?.as_str()?.chars().map(|c| c == '1').collect();
+        let regions: Vec<LoopId> = j
+            .get("regions")?
+            .as_arr()?
+            .iter()
+            .filter_map(|r| r.as_f64().map(|v| LoopId(v as usize)))
+            .collect();
+        let samples: Vec<crate::power::PowerSample> = j
+            .get("trace")?
+            .as_arr()?
+            .iter()
+            .filter_map(|s| {
+                let a = s.as_arr()?;
+                Some(crate::power::PowerSample {
+                    t_s: a.first()?.as_f64()?,
+                    watts: a.get(1)?.as_f64()?,
+                })
+            })
+            .collect();
+        Some(Measurement {
+            app: j.get("app")?.as_str()?.to_string(),
+            device: DeviceKind::from_name(j.get("device")?.as_str()?)?,
+            pattern,
+            regions,
+            time_s: j.get("time_s")?.as_f64()?,
+            mean_w: j.get("mean_w")?.as_f64()?,
+            energy_ws: j.get("energy_ws")?.as_f64()?,
+            trace: PowerTrace::from_samples(samples),
+            timed_out: j.get("timed_out")?.as_bool()?,
+            failure: j.get("failure").and_then(|f| f.as_str()).map(|s| s.to_string()),
+            breakdown: TrialBreakdown {
+                cpu_s: j.get("cpu_s")?.as_f64()?,
+                transfer_s: j.get("transfer_s")?.as_f64()?,
+                kernel_s: j.get("kernel_s")?.as_f64()?,
+            },
+            phase: match j.get("phase")?.as_str()? {
+                "production" => PhaseKind::Production,
+                _ => PhaseKind::Verification,
+            },
+        })
+    }
+
     /// Machine-readable report.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -120,5 +192,45 @@ mod tests {
         assert_eq!(j.get("energy_ws").unwrap().as_f64(), Some(223.0));
         let text = j.to_string_pretty();
         assert!(crate::util::json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn full_json_roundtrips_exactly() {
+        let m = Measurement {
+            app: "mriq.c".into(),
+            device: DeviceKind::Gpu,
+            pattern: vec![true, false],
+            regions: vec![LoopId(3)],
+            time_s: 1.9372625,
+            mean_w: 112.625,
+            energy_ws: 218.1875,
+            trace: PowerTrace::from_samples(vec![
+                crate::power::PowerSample { t_s: 0.0, watts: 121.0 },
+                crate::power::PowerSample { t_s: 1.9372625, watts: 111.0 },
+            ]),
+            timed_out: false,
+            failure: Some("why".into()),
+            breakdown: TrialBreakdown {
+                cpu_s: 0.25,
+                transfer_s: 0.125,
+                kernel_s: 1.5622625,
+            },
+            phase: PhaseKind::Production,
+        };
+        let text = m.to_json_full().to_string_compact();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let back = Measurement::from_json(&parsed).unwrap();
+        assert_eq!(back.app, m.app);
+        assert_eq!(back.device, m.device);
+        assert_eq!(back.pattern, m.pattern);
+        assert_eq!(back.regions, m.regions);
+        assert_eq!(back.time_s, m.time_s);
+        assert_eq!(back.mean_w, m.mean_w);
+        assert_eq!(back.energy_ws, m.energy_ws);
+        assert_eq!(back.trace, m.trace);
+        assert_eq!(back.timed_out, m.timed_out);
+        assert_eq!(back.failure, m.failure);
+        assert_eq!(back.breakdown.kernel_s, m.breakdown.kernel_s);
+        assert_eq!(back.phase, m.phase);
     }
 }

@@ -1,0 +1,62 @@
+/*
+ * Histogram with indirect stores and a prefix scan — the workload whose
+ * hot loops the dependence analysis must REJECT: the binning loop writes
+ * h[bin[i]] (indirect store, possible write-write collisions) and the
+ * scan carries a running sum across iterations. Data generation, bin
+ * indexing and the zeroing loop remain offloadable.
+ */
+
+void genData(float *data, int n) {
+  for (int i = 0; i < n; i++) {
+    data[i] = 0.5f + 0.5f * sinf(0.37f * (float) i);
+  }
+}
+
+void binIndex(int *bin, float *data, int n, int nb) {
+  for (int i = 0; i < n; i++) {
+    int b = (int) (data[i] * (float) nb);
+    if (b > nb - 1) {
+      b = nb - 1;
+    }
+    bin[i] = b;
+  }
+}
+
+void histogram(float *h, int *bin, int n) {
+  for (int i = 0; i < n; i++) {
+    h[bin[i]] += 1.0f;
+  }
+}
+
+void prefixScan(float *cum, float *h, int nb) {
+  float run = 0.0f;
+  for (int j = 0; j < nb; j++) {
+    run += h[j];
+    cum[j] = run;
+  }
+}
+
+int main() {
+  float data[1024];
+  int bin[1024];
+  float h[32];
+  float cum[32];
+
+  genData(data, 1024);
+  binIndex(bin, data, 1024, 32);
+  for (int j = 0; j < 32; j++) {
+    h[j] = 0.0f;
+  }
+  histogram(h, bin, 1024);
+  prefixScan(cum, h, 32);
+
+  float total = cum[31];
+  float maxBin = 0.0f;
+  for (int j = 0; j < 32; j++) {
+    if (h[j] > maxBin) {
+      maxBin = h[j];
+    }
+  }
+  printf("%f %f\n", total, maxBin);
+  return 0;
+}

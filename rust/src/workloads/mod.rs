@@ -19,15 +19,27 @@ pub const HISTO_C: &str = include_str!("histo.c");
 /// Vector addition (quickstart).
 pub const VECADD_C: &str = include_str!("vecadd.c");
 
+/// Resolve a user-supplied name to the canonical `(name, source)` pair.
+/// Tolerant: matching is case-insensitive, surrounding whitespace is
+/// ignored and a trailing `.c` is stripped, so `MRIQ`, `mriq.c` and
+/// `Mriq.C` all resolve to `("mriq", MRIQ_C)`. This is the single home
+/// of the normalization rule — the CLI derives its display name from the
+/// canonical name returned here.
+pub fn resolve(name: &str) -> Option<(&'static str, &'static str)> {
+    let lower = name.trim().to_ascii_lowercase();
+    let base = lower.strip_suffix(".c").unwrap_or(&lower);
+    ALL.iter().find(|(n, _)| *n == base).copied()
+}
+
 /// Name → source lookup for the CLI (`enadapt analyze mriq` etc.).
+/// See [`resolve`] for the tolerance rules.
 pub fn by_name(name: &str) -> Option<&'static str> {
-    match name {
-        "mriq" | "mriq.c" => Some(MRIQ_C),
-        "stencil" | "stencil.c" => Some(STENCIL_C),
-        "histo" | "histo.c" => Some(HISTO_C),
-        "vecadd" | "vecadd.c" => Some(VECADD_C),
-        _ => None,
-    }
+    resolve(name).map(|(_, src)| src)
+}
+
+/// The bundled workload names (for CLI error messages).
+pub fn names() -> Vec<&'static str> {
+    ALL.iter().map(|(n, _)| *n).collect()
 }
 
 /// All bundled workloads as `(name, source)` pairs.
@@ -114,5 +126,26 @@ mod tests {
         assert!(by_name("mriq").is_some());
         assert!(by_name("mriq.c").is_some());
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn by_name_is_tolerant() {
+        assert_eq!(by_name("MRIQ"), Some(MRIQ_C));
+        assert_eq!(by_name("Mriq.C"), Some(MRIQ_C));
+        assert_eq!(by_name("  stencil.c "), Some(STENCIL_C));
+        assert_eq!(by_name("VecAdd"), Some(VECADD_C));
+        assert!(by_name("mriq.cpp").is_none());
+    }
+
+    #[test]
+    fn names_lists_all() {
+        assert_eq!(names(), vec!["mriq", "stencil", "histo", "vecadd"]);
+    }
+
+    #[test]
+    fn resolve_returns_canonical_name() {
+        assert_eq!(resolve("Mriq.C").map(|(n, _)| n), Some("mriq"));
+        assert_eq!(resolve(" HISTO "), Some(("histo", HISTO_C)));
+        assert!(resolve("nope").is_none());
     }
 }

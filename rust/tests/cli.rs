@@ -70,6 +70,35 @@ fn codegen_manycore_emits_openmp() {
 }
 
 #[test]
+fn fleet_json_completes_matrix_with_cache_hits() {
+    let out = enadapt(&["fleet", "--json", "--population", "6", "--generations", "4"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let j = enadapt::util::json::parse(&String::from_utf8_lossy(&out.stdout)).unwrap();
+    let jobs = j.get("jobs").unwrap().as_arr().unwrap();
+    // Full matrix: 4 workloads x {gpu, fpga, manycore, mixed}.
+    assert_eq!(jobs.len(), 16);
+    assert!(jobs.iter().all(|job| job.get("ok").unwrap().as_bool() == Some(true)));
+    let hits = j.get("cache").unwrap().get("hits").unwrap().as_f64().unwrap();
+    assert!(hits > 0.0, "shared cache must deduplicate trials");
+}
+
+#[test]
+fn unknown_workload_lists_bundled_names() {
+    let out = enadapt(&["analyze", "no-such-workload"]);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("mriq"), "{err}");
+    assert!(err.contains("vecadd"), "{err}");
+}
+
+#[test]
+fn workload_names_are_case_insensitive() {
+    let out = enadapt(&["analyze", "MRIQ"]);
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("16 of 19"));
+}
+
+#[test]
 fn report_prints_testbed() {
     let out = enadapt(&["report"]);
     assert!(out.status.success());

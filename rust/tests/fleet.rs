@@ -1,0 +1,169 @@
+//! Fleet-coordinator integration tests: determinism vs the serial
+//! single-job path, cross-job and cross-invocation trial deduplication via
+//! the shared measurement cache, and matrix coverage.
+
+use enadapt::coordinator::{
+    fleet, run_fleet, run_job, Destination, FleetConfig, FleetSpec, JobConfig, JobReport,
+};
+use enadapt::devices::DeviceKind;
+use enadapt::ga::GaConfig;
+use enadapt::offload::GpuFlowConfig;
+use enadapt::util::json::Json;
+use enadapt::workloads;
+
+fn quick_template() -> JobConfig {
+    JobConfig {
+        ga_flow: GpuFlowConfig {
+            ga: GaConfig {
+                population: 6,
+                generations: 4,
+                ..Default::default()
+            },
+            parallel_trials: false,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn small_matrix() -> Vec<FleetSpec> {
+    let mut specs = Vec::new();
+    for workload in ["mriq", "vecadd"] {
+        for dest in [
+            Destination::Device(DeviceKind::Gpu),
+            Destination::Device(DeviceKind::Fpga),
+        ] {
+            let (_, src) = workloads::ALL
+                .iter()
+                .find(|(n, _)| *n == workload)
+                .unwrap();
+            specs.push(FleetSpec {
+                workload: workload.to_string(),
+                source: src.to_string(),
+                destination: dest,
+            });
+        }
+    }
+    specs
+}
+
+/// Canonical per-job result: the fields the acceptance criterion pins
+/// (chosen pattern, device, W·s) plus time/value for good measure.
+fn canonical(r: &JobReport) -> String {
+    Json::obj(vec![
+        ("pattern", Json::str(r.best.pattern.genome.to_string())),
+        ("device", Json::str(r.device.name())),
+        ("value", Json::num(r.best.value)),
+        ("time_s", Json::num(r.production.time_s)),
+        ("mean_w", Json::num(r.production.mean_w)),
+        ("energy_ws", Json::num(r.production.energy_ws)),
+        ("baseline_energy_ws", Json::num(r.baseline.energy_ws)),
+    ])
+    .to_string_compact()
+}
+
+#[test]
+fn fleet_results_are_byte_identical_to_serial_run_job() {
+    let specs = small_matrix();
+    let cfg = FleetConfig {
+        template: quick_template(),
+        workers: 4,
+        ..Default::default()
+    };
+    let report = run_fleet(&specs, &cfg).unwrap();
+    assert!(report.cache_hits > 0, "fleet must share trials across jobs");
+
+    for (spec, outcome) in specs.iter().zip(&report.jobs) {
+        let mut jc = quick_template();
+        jc.destination = spec.destination;
+        let serial = run_job(&spec.workload, &spec.source, &jc).unwrap();
+        let fleet_report = outcome.report.as_ref().unwrap();
+        assert_eq!(
+            canonical(fleet_report),
+            canonical(&serial),
+            "{} on {:?} diverged from the serial path",
+            spec.workload,
+            spec.destination
+        );
+    }
+}
+
+#[test]
+fn fleet_cache_persists_across_invocations() {
+    let dir = std::env::temp_dir().join("enadapt_fleet_cache_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("fleet_cache.json");
+    let _ = std::fs::remove_file(&path);
+
+    let specs = small_matrix();
+    let cfg = FleetConfig {
+        template: quick_template(),
+        workers: 2,
+        cache_path: Some(path.clone()),
+        ..Default::default()
+    };
+
+    let first = run_fleet(&specs, &cfg).unwrap();
+    assert_eq!(first.cache_preloaded, 0);
+    assert!(first.cache_misses > 0);
+    assert!(path.exists(), "cache file written");
+
+    // Second invocation: every trial of the identical run is preloaded.
+    let second = run_fleet(&specs, &cfg).unwrap();
+    assert!(second.cache_preloaded > 0, "cache reloaded from disk");
+    assert_eq!(
+        second.cache_misses, 0,
+        "identical rerun must be fully served by the persisted cache"
+    );
+    for (a, b) in first.jobs.iter().zip(&second.jobs) {
+        assert_eq!(
+            canonical(a.report.as_ref().unwrap()),
+            canonical(b.report.as_ref().unwrap()),
+            "persisted trials changed a result"
+        );
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn unshared_cache_fleet_still_matches_serial() {
+    let specs: Vec<FleetSpec> = small_matrix().into_iter().take(2).collect();
+    let cfg = FleetConfig {
+        template: quick_template(),
+        workers: 2,
+        share_cache: false,
+        ..Default::default()
+    };
+    let report = run_fleet(&specs, &cfg).unwrap();
+    assert_eq!(report.cache_hits, 0, "no shared cache, no hits");
+    for (spec, outcome) in specs.iter().zip(&report.jobs) {
+        let mut jc = quick_template();
+        jc.destination = spec.destination;
+        let serial = run_job(&spec.workload, &spec.source, &jc).unwrap();
+        assert_eq!(
+            canonical(outcome.report.as_ref().unwrap()),
+            canonical(&serial)
+        );
+    }
+}
+
+#[test]
+fn fleet_report_aggregates_are_consistent() {
+    let specs = small_matrix();
+    let cfg = FleetConfig {
+        template: quick_template(),
+        workers: 2,
+        ..Default::default()
+    };
+    let report = run_fleet(&specs, &cfg).unwrap();
+    assert_eq!(report.workers, 2);
+    assert!(report.wall_s > 0.0);
+    assert!(report.serial_wall_s >= report.wall_s * 0.5, "sanity");
+    assert!(report.jobs_per_s() > 0.0);
+    assert!((0.0..=1.0).contains(&report.hit_rate()));
+    let table = report.table();
+    assert!(table.contains("mriq"));
+    assert!(table.contains("hit rate"));
+    // The matrix helper covers every workload and destination.
+    assert_eq!(fleet::full_matrix().len(), workloads::ALL.len() * 4);
+}
