@@ -1,0 +1,170 @@
+//! Bench: **power_meters** — cross-sensor validation of the meter layer.
+//!
+//! Runs the Fig. 5 MRI-Q measurements (CPU-only and best-FPGA-pattern)
+//! under every meter backend (1 Hz IPMI, high-rate RAPL-style, exact
+//! oracle) and checks:
+//!
+//! * every backend lands in the DESIGN.md §1 bands (which are asserted
+//!   under the IPMI meter by the unit tests);
+//! * per-component W·s sum to the whole-server total within 1e-6;
+//! * backends agree with the oracle within sampling tolerance;
+//! * the measurement hot path cost per backend (samples/s scale with the
+//!   meter rate, so RAPL is the expensive one).
+
+use enadapt::canalyze::analyze_source;
+use enadapt::devices::{DeviceKind, TransferMode};
+use enadapt::power::{Component, MeterConfig};
+use enadapt::util::benchkit::{bench, check_band, section};
+use enadapt::util::tablefmt::Table;
+use enadapt::verifier::{AppModel, VerifEnvConfig};
+use enadapt::workloads;
+
+fn main() {
+    println!("=== power_meters: sensor backends on the Fig. 5 measurements ===");
+
+    let an = analyze_source("mriq.c", workloads::MRIQ_C).expect("analyze");
+    let base_cfg = VerifEnvConfig::r740_pac();
+    let app = AppModel::from_analysis(&an, &base_cfg.cpu, 14.0).expect("app model");
+    let best_bits = {
+        // The dominant computeQ nest — the Fig. 5 winning pattern.
+        let outer = app
+            .loops
+            .iter()
+            .max_by(|a, b| a.cpu_time_s.partial_cmp(&b.cpu_time_s).unwrap())
+            .unwrap()
+            .id;
+        let pos = app.candidates.iter().position(|&c| c == outer).unwrap();
+        let mut bits = vec![false; app.genome_len()];
+        bits[pos] = true;
+        bits
+    };
+
+    let meters = [
+        MeterConfig::from_name("ipmi").unwrap(),
+        MeterConfig::from_name("rapl").unwrap(),
+        MeterConfig::Oracle,
+    ];
+
+    section("per-meter Fig. 5 numbers + component attribution");
+    let mut t = Table::new(&[
+        "meter", "run", "time [s]", "mean [W]", "peak [W]", "energy [W*s]", "idle", "host",
+        "accel", "xfer",
+    ]);
+    let mut ok = true;
+    let mut oracle_cpu = 0.0;
+    let mut oracle_fpga = 0.0;
+    for m in meters {
+        let mut cfg = VerifEnvConfig::r740_pac();
+        cfg.meter = m;
+        let env = cfg.build(42);
+        let cpu = env.measure_cpu_only(&app);
+        let fpga = env.measure(&app, &best_bits, DeviceKind::Fpga, TransferMode::Batched);
+        if let MeterConfig::Oracle = m {
+            oracle_cpu = cpu.energy_ws;
+            oracle_fpga = fpga.energy_ws;
+        }
+        for (label, meas) in [("cpu-only", &cpu), ("fpga", &fpga)] {
+            let c = &meas.report.components;
+            t.row(&[
+                m.name().to_string(),
+                label.to_string(),
+                format!("{:.2}", meas.time_s),
+                format!("{:.1}", meas.mean_w),
+                format!("{:.1}", meas.report.peak_w),
+                format!("{:.0}", meas.energy_ws),
+                format!("{:.0}", c.idle_ws),
+                format!("{:.0}", c.host_cpu_ws),
+                format!("{:.1}", c.accelerator_ws),
+                format!("{:.1}", c.transfer_ws),
+            ]);
+            let sum = c.total_ws();
+            if (sum - meas.energy_ws).abs() > 1e-6 * meas.energy_ws.max(1.0) {
+                println!(
+                    "FAIL [{} {label}] components sum {} != total {}",
+                    m.name(),
+                    sum,
+                    meas.energy_ws
+                );
+                ok = false;
+            }
+        }
+        ok &= check_band(
+            &format!("{} cpu-only energy [W*s]", m.name()),
+            cpu.energy_ws,
+            1500.0,
+            1900.0,
+        );
+        ok &= check_band(
+            &format!("{} offloaded energy [W*s]", m.name()),
+            fpga.energy_ws,
+            150.0,
+            360.0,
+        );
+        ok &= check_band(
+            &format!("{} energy ratio", m.name()),
+            cpu.energy_ws / fpga.energy_ws,
+            4.0,
+            12.0,
+        );
+    }
+    println!("{}", t.render());
+
+    section("cross-sensor agreement vs oracle");
+    for m in meters {
+        let mut cfg = VerifEnvConfig::r740_pac();
+        cfg.meter = m;
+        let env = cfg.build(42);
+        let cpu = env.measure_cpu_only(&app);
+        let fpga = env.measure(&app, &best_bits, DeviceKind::Fpga, TransferMode::Batched);
+        // The short (~2 s) offloaded trace leaves 1 Hz IPMI only a few
+        // samples, so its tolerance is wider than the 14 s baseline's.
+        ok &= check_band(
+            &format!("{} / oracle (cpu-only)", m.name()),
+            cpu.energy_ws / oracle_cpu,
+            0.95,
+            1.05,
+        );
+        ok &= check_band(
+            &format!("{} / oracle (fpga)", m.name()),
+            fpga.energy_ws / oracle_fpga,
+            0.80,
+            1.20,
+        );
+    }
+
+    section("measurement hot path per backend");
+    for m in meters {
+        let mut cfg = VerifEnvConfig::r740_pac();
+        cfg.meter = m;
+        let env = cfg.build(7);
+        println!(
+            "{}",
+            bench(&format!("measure(cpu-only) [{}]", m.name()), 3, 30, || {
+                let meas = env.measure_cpu_only(&app);
+                std::hint::black_box(meas.energy_ws);
+            })
+            .row()
+        );
+    }
+
+    // Component coverage sanity: the FPGA run exercises all four
+    // components under the attributing meters.
+    let mut cfg = VerifEnvConfig::r740_pac();
+    cfg.meter = MeterConfig::Oracle;
+    let env = cfg.build(42);
+    let fpga = env.measure(&app, &best_bits, DeviceKind::Fpga, TransferMode::Batched);
+    for c in Component::ALL {
+        if fpga.report.components.get(c) <= 0.0 {
+            println!("FAIL component {} has no energy in the FPGA run", c.name());
+            ok = false;
+        }
+    }
+
+    println!(
+        "\npower_meters: {}",
+        if ok { "ALL BANDS PASS" } else { "SOME BANDS FAILED" }
+    );
+    if !ok {
+        std::process::exit(1);
+    }
+}

@@ -139,8 +139,34 @@ impl FleetReport {
         }
     }
 
-    /// Aggregate W·s-savings table (per-app Fig. 5 comparison) plus the
-    /// cache and concurrency summary.
+    /// Fleet-level energy ledger: per-component W·s of the production
+    /// runs, aggregated across all successful jobs.
+    pub fn production_ledger(&self) -> crate::power::ComponentEnergy {
+        let mut ledger = crate::power::ComponentEnergy::default();
+        for j in &self.jobs {
+            if let Ok(r) = &j.report {
+                ledger.add(&r.production.report.components);
+            }
+        }
+        ledger
+    }
+
+    /// Same aggregation for the CPU-only baselines (what the fleet would
+    /// have burned without offloading).
+    pub fn baseline_ledger(&self) -> crate::power::ComponentEnergy {
+        let mut ledger = crate::power::ComponentEnergy::default();
+        for j in &self.jobs {
+            if let Ok(r) = &j.report {
+                ledger.add(&r.baseline.report.components);
+            }
+        }
+        ledger
+    }
+
+    /// Aggregate W·s-savings table (per-app Fig. 5 comparison) with
+    /// per-component columns and the per-job energy-reduction ratio (the
+    /// paper's headline 7.6×), plus the fleet energy ledger and the cache
+    /// and concurrency summary.
     pub fn table(&self) -> String {
         let mut t = Table::new(&[
             "workload",
@@ -150,7 +176,9 @@ impl FleetReport {
             "time [s]",
             "base [W*s]",
             "offl [W*s]",
-            "saved",
+            "idle [W*s]",
+            "dyn [W*s]",
+            "energy red",
         ]);
         let mut base_total = 0.0;
         let mut off_total = 0.0;
@@ -159,6 +187,7 @@ impl FleetReport {
                 Ok(r) => {
                     base_total += r.baseline.energy_ws;
                     off_total += r.production.energy_ws;
+                    let c = &r.production.report.components;
                     t.row(&[
                         j.workload.clone(),
                         dest_name(j.destination).to_string(),
@@ -167,6 +196,8 @@ impl FleetReport {
                         format!("{:.2}", r.production.time_s),
                         format!("{:.0}", r.baseline.energy_ws),
                         format!("{:.0}", r.production.energy_ws),
+                        format!("{:.0}", c.idle_ws),
+                        format!("{:.0}", c.dynamic_ws()),
                         format!(
                             "{:.1}x",
                             r.baseline.energy_ws / r.production.energy_ws.max(1e-9)
@@ -182,6 +213,8 @@ impl FleetReport {
                         String::new(),
                         String::new(),
                         String::new(),
+                        String::new(),
+                        String::new(),
                         e.to_string(),
                     ]);
                 }
@@ -189,11 +222,22 @@ impl FleetReport {
         }
         let mut out = String::from("=== enadapt fleet: workload x destination matrix ===\n\n");
         out.push_str(&t.render());
+        let prod = self.production_ledger();
+        let base = self.baseline_ledger();
         out.push_str(&format!(
             "\nfleet energy   : {:.0} W·s baseline → {:.0} W·s offloaded ({:.1}x reduction)\n",
             base_total,
             off_total,
             base_total / off_total.max(1e-9)
+        ));
+        out.push_str(&format!(
+            "energy ledger  : idle {:.0} | host-cpu {:.0} | accel {:.0} | transfer {:.0} W·s \
+             (dynamic-only {:.1}x reduction vs baseline)\n",
+            prod.idle_ws,
+            prod.host_cpu_ws,
+            prod.accelerator_ws,
+            prod.transfer_ws,
+            base.dynamic_ws() / prod.dynamic_ws().max(1e-9)
         ));
         out.push_str(&format!(
             "wall clock     : {:.2} s on {} workers ({:.2} s serial, {:.1}x speedup, {:.2} jobs/s)\n",
@@ -234,6 +278,13 @@ impl FleetReport {
                                 ("mean_w", Json::num(r.production.mean_w)),
                                 ("energy_ws", Json::num(r.production.energy_ws)),
                                 ("baseline_energy_ws", Json::num(r.baseline.energy_ws)),
+                                (
+                                    "energy_reduction",
+                                    Json::num(
+                                        r.baseline.energy_ws / r.production.energy_ws.max(1e-9),
+                                    ),
+                                ),
+                                ("report", r.production.report.to_json()),
                                 ("trials", Json::num(r.trials as f64)),
                                 ("wall_s", Json::num(j.wall_s)),
                             ]),
@@ -262,6 +313,23 @@ impl FleetReport {
                     ("entries", Json::num(self.cache_entries as f64)),
                     ("preloaded", Json::num(self.cache_preloaded as f64)),
                 ]),
+            ),
+            (
+                "energy_ledger_ws",
+                Json::obj({
+                    let prod = self.production_ledger();
+                    let base = self.baseline_ledger();
+                    vec![
+                        ("idle", Json::num(prod.idle_ws)),
+                        ("host_cpu", Json::num(prod.host_cpu_ws)),
+                        ("accel", Json::num(prod.accelerator_ws)),
+                        ("transfer", Json::num(prod.transfer_ws)),
+                        ("dynamic", Json::num(prod.dynamic_ws())),
+                        ("total", Json::num(prod.total_ws())),
+                        ("baseline_total", Json::num(base.total_ws())),
+                        ("baseline_dynamic", Json::num(base.dynamic_ws())),
+                    ]
+                }),
             ),
         ])
     }
@@ -410,10 +478,26 @@ mod tests {
         }
         // The three jobs share at least the CPU-only baseline trial.
         assert!(report.cache_hits > 0, "hits {}", report.cache_hits);
-        assert!(report.table().contains("shared cache"));
+        let table = report.table();
+        assert!(table.contains("shared cache"));
+        assert!(table.contains("energy red"), "per-job reduction column");
+        assert!(table.contains("energy ledger"), "fleet component ledger");
+        // The fleet ledger equals the sum of the per-job attributions.
+        let ledger = report.production_ledger();
+        let by_hand: f64 = report
+            .jobs
+            .iter()
+            .filter_map(|j| j.report.as_ref().ok())
+            .map(|r| r.production.report.components.total_ws())
+            .sum();
+        assert!((ledger.total_ws() - by_hand).abs() <= 1e-6 * by_hand.max(1.0));
         let j = report.to_json();
         assert_eq!(j.get("jobs").unwrap().as_arr().unwrap().len(), 3);
         assert!(j.get("cache").unwrap().get("hits").unwrap().as_f64().unwrap() > 0.0);
+        let lg = j.get("energy_ledger_ws").unwrap();
+        assert!(lg.get("total").unwrap().as_f64().unwrap() > 0.0);
+        let first = &j.get("jobs").unwrap().as_arr().unwrap()[0];
+        assert!(first.get("energy_reduction").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

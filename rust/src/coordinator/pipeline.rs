@@ -279,12 +279,20 @@ impl Pipeline {
                 TransferMode::Batched,
             );
             production.phase = crate::verifier::PhaseKind::Production;
+            let c = &production.report.components;
             let detail = format!(
-                "generated {} code; production run: {:.2} s, {:.1} W, {:.0} W·s",
+                "generated {} code; production run: {:.2} s, {:.1} W, {:.0} W·s \
+                 (idle {:.0} + host {:.0} + accel {:.0} + xfer {:.0} W·s, peak {:.0} W, {} meter)",
                 generated.kind(),
                 production.time_s,
                 production.mean_w,
-                production.energy_ws
+                production.energy_ws,
+                c.idle_ws,
+                c.host_cpu_ws,
+                c.accelerator_ws,
+                c.transfer_ws,
+                production.report.peak_w,
+                production.report.meter,
             );
             Ok(((generated, production), detail))
         })

@@ -69,6 +69,43 @@ pub fn fig5(baseline: &Measurement, offloaded: &Measurement) -> String {
         baseline.time_s / offloaded.time_s.max(1e-9),
         baseline.energy_ws / offloaded.energy_ws.max(1e-9),
     ));
+    out.push('\n');
+    out.push_str(&component_ledger(baseline, offloaded));
+    out
+}
+
+/// Per-component W·s ledger of two measurements, plus the idle-inclusive
+/// vs dynamic-only energy split (the number the companion paper's
+/// per-device-class power evaluation needs).
+pub fn component_ledger(baseline: &Measurement, offloaded: &Measurement) -> String {
+    use crate::power::Component;
+    let mut t = Table::new(&["component", "cpu-only [W*s]", "offload [W*s]"]);
+    let (b, o) = (&baseline.report.components, &offloaded.report.components);
+    for c in Component::ALL {
+        t.row(&[
+            c.name().to_string(),
+            format!("{:.1}", b.get(c)),
+            format!("{:.1}", o.get(c)),
+        ]);
+    }
+    t.row(&[
+        "total".to_string(),
+        format!("{:.1}", b.total_ws()),
+        format!("{:.1}", o.total_ws()),
+    ]);
+    let mut out = String::from("Per-component energy attribution\n\n");
+    out.push_str(&t.render());
+    out.push_str(&format!(
+        "\nmeter: {} ({})   energy split: idle-inclusive {:.1}x, dynamic-only {:.1}x reduction\n",
+        offloaded.report.meter,
+        if offloaded.report.sample_hz > 0.0 {
+            format!("{:.0} Hz", offloaded.report.sample_hz)
+        } else {
+            "exact".to_string()
+        },
+        b.total_ws() / o.total_ws().max(1e-9),
+        b.dynamic_ws() / o.dynamic_ws().max(1e-9),
+    ));
     out
 }
 
@@ -126,10 +163,20 @@ pub fn job_json(r: &JobReport) -> Json {
 /// Testbed description (CLI `report --env`, paper Fig. 4).
 pub fn env_report(cfg: &crate::verifier::VerifEnvConfig) -> String {
     let mut t = Table::new(&["component", "model", "key parameters"]);
+    let meter = cfg.meter.build();
     t.row(&[
         "server".into(),
         "Dell PowerEdge R740 (simulated)".into(),
-        format!("idle {:.0} W, IPMI {} Hz power sampling", cfg.server.idle_w, 1.0 / cfg.ipmi.period_s),
+        format!(
+            "idle {:.0} W, {} power meter{}",
+            cfg.server.idle_w,
+            cfg.meter.name().to_uppercase(),
+            if meter.sample_hz() > 0.0 {
+                format!(" at {} Hz", meter.sample_hz())
+            } else {
+                " (exact)".to_string()
+            }
+        ),
     ]);
     t.row(&[
         "cpu".into(),
@@ -201,9 +248,31 @@ mod tests {
         let text = render_job(&r);
         assert!(text.contains("Fig. 5"));
         assert!(text.contains("speedup"));
+        assert!(text.contains("Per-component energy attribution"));
         let j = job_json(&r);
         let parsed = crate::util::json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(parsed.get("device").unwrap().as_str(), Some("fpga"));
+        // The production measurement carries its energy report.
+        let rep = parsed.get("production").unwrap().get("report").unwrap();
+        assert_eq!(rep.get("meter").unwrap().as_str(), Some("ipmi"));
+        assert!(rep.get("components_ws").unwrap().get("accel").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn component_ledger_columns_sum_to_totals() {
+        let r = run_job("mriq.c", workloads::MRIQ_C, &JobConfig::default()).unwrap();
+        let text = component_ledger(&r.baseline, &r.production);
+        assert!(text.contains("host-cpu") && text.contains("accel"));
+        assert!(text.contains("dynamic-only"));
+        for m in [&r.baseline, &r.production] {
+            let sum = m.report.components.total_ws();
+            assert!(
+                (sum - m.energy_ws).abs() <= 1e-6 * m.energy_ws.max(1.0),
+                "components {} vs whole-server {}",
+                sum,
+                m.energy_ws
+            );
+        }
     }
 
     #[test]

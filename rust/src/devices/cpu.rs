@@ -40,6 +40,12 @@ impl CpuModel {
     pub fn straightline_time_s(&self, flops: f64, bytes: f64) -> f64 {
         (flops / self.gflops).max(bytes / self.mem_bw)
     }
+
+    /// Component-tagged draw of a host-busy phase (prologue, epilogue and
+    /// loops that stay on the CPU): idle base plus the CPU's active draw.
+    pub fn busy_power(&self, idle_w: f64) -> crate::power::ComponentPower {
+        crate::power::ComponentPower::host_busy(idle_w, self.active_w)
+    }
 }
 
 #[cfg(test)]

@@ -8,6 +8,7 @@
 //! Fig. 5 decision landscape (see DESIGN.md §2 and §6).
 
 use crate::canalyze::OpCensus;
+use crate::power::ComponentPower;
 
 /// Offload destinations (the paper's §3.3 mixed environment).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -110,6 +111,29 @@ impl KernelEstimate {
     /// Total wall time of the offloaded nest.
     pub fn total_s(&self) -> f64 {
         self.compute_s + self.transfer_s + self.launch_s
+    }
+
+    /// Component-tagged draw during the CPU↔device transfer phase: the
+    /// host CPU is busy driving DMA (full active draw) and the transfer
+    /// machinery adds the device's host-side drive power.
+    pub fn transfer_power(&self, idle_w: f64, host_active_w: f64) -> ComponentPower {
+        ComponentPower {
+            idle_w,
+            host_cpu_w: host_active_w,
+            accelerator_w: 0.0,
+            transfer_w: self.host_power_w,
+        }
+    }
+
+    /// Component-tagged draw during the kernel phase: the accelerator runs
+    /// at its dynamic draw while the host only polls the driver.
+    pub fn kernel_power(&self, idle_w: f64) -> ComponentPower {
+        ComponentPower {
+            idle_w,
+            host_cpu_w: self.host_power_w,
+            accelerator_w: self.dyn_power_w,
+            transfer_w: 0.0,
+        }
     }
 }
 

@@ -20,6 +20,11 @@ pub struct FitnessSpec {
     pub timeout_s: f64,
     /// Time substituted when a trial times out (paper: 1,000 s).
     pub timeout_time_s: f64,
+    /// Optional operator Watt cap (§3.3: the evaluation is "set per
+    /// business operator"): a pattern whose *measured peak* draw exceeds
+    /// this budget is rejected — it scores like a timed-out trial and the
+    /// offload flows never select it over a cap-respecting pattern.
+    pub watt_cap: Option<f64>,
 }
 
 impl Default for FitnessSpec {
@@ -36,6 +41,7 @@ impl FitnessSpec {
             power_exp: 0.5,
             timeout_s: 180.0,
             timeout_time_s: 1000.0,
+            watt_cap: None,
         }
     }
 
@@ -57,6 +63,19 @@ impl FitnessSpec {
         }
     }
 
+    /// Same spec with an operator Watt cap.
+    pub fn with_watt_cap(self, cap_w: f64) -> Self {
+        Self {
+            watt_cap: Some(cap_w),
+            ..self
+        }
+    }
+
+    /// Does a measured peak draw violate the operator's Watt cap?
+    pub fn exceeds_cap(&self, peak_w: f64) -> bool {
+        self.watt_cap.is_some_and(|cap| peak_w > cap)
+    }
+
     /// Evaluation value of a measurement. Larger is better. `time_s` is
     /// replaced by [`FitnessSpec::timeout_time_s`] when `timed_out`.
     pub fn value(&self, time_s: f64, mean_power_w: f64, timed_out: bool) -> f64 {
@@ -67,6 +86,15 @@ impl FitnessSpec {
         };
         let p = mean_power_w.max(1e-9);
         t.powf(-self.time_exp) * p.powf(-self.power_exp)
+    }
+
+    /// Evaluation value of a full measurement record: like
+    /// [`FitnessSpec::value`], but a measured peak above the Watt cap is
+    /// scored like a timeout — the §3.3 operator constraint the offload
+    /// flows search under.
+    pub fn value_of(&self, m: &crate::verifier::Measurement) -> f64 {
+        let capped = self.exceeds_cap(m.report.peak_w);
+        self.value(m.time_s, m.mean_w, m.timed_out || capped)
     }
 }
 
@@ -108,6 +136,38 @@ mod tests {
     fn time_only_ignores_power() {
         let f = FitnessSpec::time_only();
         assert_eq!(f.value(4.0, 50.0, false), f.value(4.0, 500.0, false));
+    }
+
+    #[test]
+    fn watt_cap_scores_violators_like_timeouts() {
+        use crate::canalyze::LoopId;
+        use crate::power::{EnergyReport, PowerTrace};
+        use crate::verifier::{Measurement, PhaseKind, TrialBreakdown};
+        let meas = |peak_w: f64| Measurement {
+            app: "t.c".into(),
+            device: crate::devices::DeviceKind::Gpu,
+            pattern: vec![true],
+            regions: vec![LoopId(0)],
+            time_s: 2.0,
+            mean_w: 150.0,
+            energy_ws: 300.0,
+            trace: PowerTrace::default(),
+            report: EnergyReport::legacy(2.0, 300.0, 150.0, peak_w),
+            timed_out: false,
+            failure: None,
+            breakdown: TrialBreakdown::default(),
+            phase: PhaseKind::Verification,
+        };
+        let f = FitnessSpec::paper().with_watt_cap(200.0);
+        assert!(f.exceeds_cap(230.0) && !f.exceeds_cap(200.0));
+        let under = f.value_of(&meas(190.0));
+        let over = f.value_of(&meas(230.0));
+        assert!((under - f.value(2.0, 150.0, false)).abs() < 1e-15);
+        assert!((over - f.value(2.0, 150.0, true)).abs() < 1e-15);
+        assert!(under > over);
+        // Without a cap, peak draw does not matter.
+        let unc = FitnessSpec::paper();
+        assert_eq!(unc.value_of(&meas(230.0)), unc.value_of(&meas(190.0)));
     }
 
     #[test]

@@ -56,7 +56,10 @@ pub mod prelude {
     pub use crate::offload::{
         FpgaFlowConfig, GpuFlowConfig, MixedConfig, OffloadPattern, Requirements,
     };
-    pub use crate::power::{PowerProfile, PowerTrace};
+    pub use crate::power::{
+        AttributedProfile, ComponentEnergy, EnergyReport, MeterConfig, PowerMeter, PowerProfile,
+        PowerTrace,
+    };
     pub use crate::verifier::{AppModel, Measurement, VerifEnv, VerifEnvConfig};
 }
 

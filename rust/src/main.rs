@@ -30,6 +30,18 @@ fn app() -> App {
                 "paper",
                 "CPU baseline: 'paper' (14 s), 'measured' (run HLO), or seconds",
             ),
+            opt(
+                "meter",
+                "ipmi",
+                "power meter backend: ipmi (1 Hz whole-server), rapl \
+                 (high-rate per-component), oracle (exact)",
+            ),
+            opt(
+                "watt-cap",
+                "",
+                "operator Watt cap: reject patterns whose measured peak \
+                 exceeds this draw (empty = none)",
+            ),
             flag("json", "emit machine-readable JSON on stdout"),
         ]
     };
@@ -182,10 +194,23 @@ fn job_config(p: &Parsed) -> enadapt::Result<JobConfig> {
         baseline: parse_baseline(p.get("baseline").unwrap_or("paper"))?,
         ..Default::default()
     };
+    if let Some(name) = p.get("meter").filter(|s| !s.is_empty()) {
+        cfg.env.meter = enadapt::power::MeterConfig::from_name(name).ok_or_else(|| {
+            enadapt::Error::Config(format!("unknown meter '{name}' (ipmi|rapl|oracle)"))
+        })?;
+    }
     if p.flag("time-only") {
         cfg.fitness = FitnessSpec::time_only();
         cfg.ga_flow.fitness = FitnessSpec::time_only();
         cfg.fpga_flow.fitness = FitnessSpec::time_only();
+    }
+    if let Some(cap) = p.get("watt-cap").filter(|s| !s.is_empty()) {
+        let cap: f64 = cap.parse().map_err(|_| {
+            enadapt::Error::Config(format!("bad --watt-cap '{cap}' (expected Watts)"))
+        })?;
+        cfg.fitness = cfg.fitness.with_watt_cap(cap);
+        cfg.ga_flow.fitness = cfg.ga_flow.fitness.with_watt_cap(cap);
+        cfg.fpga_flow.fitness = cfg.fpga_flow.fitness.with_watt_cap(cap);
     }
     if p.flag("no-transfer-opt") {
         cfg.ga_flow.transfer_opt = false;

@@ -104,9 +104,7 @@ pub fn run(app: &AppModel, env: &VerifEnv, cfg: &FpgaFlowConfig) -> Result<FpgaF
     let cost_before = env.search_cost_s();
 
     let baseline = env.measure_cpu_only(app);
-    let baseline_value = cfg
-        .fitness
-        .value(baseline.time_s, baseline.mean_w, baseline.timed_out);
+    let baseline_value = cfg.fitness.value_of(&baseline);
 
     let mut funnel = FunnelStats {
         candidates: app.genome_len(),
@@ -175,7 +173,7 @@ pub fn run(app: &AppModel, env: &VerifEnv, cfg: &FpgaFlowConfig) -> Result<FpgaF
         // Full compile of the measured pattern: hours of search budget.
         env.charge_search_cost(fpga.prep_latency_s(&app.loops[id.0].work));
         let m = env.measure(app, pattern.bits(), DeviceKind::Fpga, xfer);
-        let value = cfg.fitness.value(m.time_s, m.mean_w, m.timed_out);
+        let value = cfg.fitness.value_of(&m);
         first_round.push(Evaluated {
             pattern,
             measurement: m,
@@ -214,7 +212,7 @@ pub fn run(app: &AppModel, env: &VerifEnv, cfg: &FpgaFlowConfig) -> Result<FpgaF
             .sum();
         env.charge_search_cost(prep);
         let m = env.measure(app, pattern.bits(), DeviceKind::Fpga, xfer);
-        let value = cfg.fitness.value(m.time_s, m.mean_w, m.timed_out);
+        let value = cfg.fitness.value_of(&m);
         second_round.push(Evaluated {
             pattern,
             measurement: m,
@@ -229,6 +227,11 @@ pub fn run(app: &AppModel, env: &VerifEnv, cfg: &FpgaFlowConfig) -> Result<FpgaF
         value: baseline_value,
     };
     for e in first_round.iter().chain(&second_round) {
+        // Operator Watt cap: a measured peak above the cap is never
+        // selected, regardless of its (timeout-penalized) value.
+        if cfg.fitness.exceeds_cap(e.measurement.report.peak_w) {
+            continue;
+        }
         if e.value > best.value {
             best = e.clone();
         }

@@ -102,9 +102,7 @@ pub fn run_on(
     };
 
     let baseline = env.measure_cpu_only(app);
-    let baseline_value = cfg
-        .fitness
-        .value(baseline.time_s, baseline.mean_w, baseline.timed_out);
+    let baseline_value = cfg.fitness.value_of(&baseline);
 
     // Measurement log so the best genome's Measurement can be recovered
     // without a re-run.
@@ -135,7 +133,7 @@ pub fn run_on(
             .into_iter()
             .zip(batch)
             .map(|(m, g)| {
-                let v = fitness.value(m.time_s, m.mean_w, m.timed_out);
+                let v = fitness.value_of(&m);
                 log.insert(g.bits.clone(), m);
                 v
             })
@@ -147,11 +145,39 @@ pub fn run_on(
         .get(&best_bits)
         .cloned()
         .expect("best genome was measured");
-    let best = Evaluated {
+    let mut best = Evaluated {
         pattern: OffloadPattern::from_genome(app, ga_result.best.clone()),
         value: ga_result.best_value,
         measurement: best_measure,
     };
+    // Hard Watt-cap guarantee: value_of already steers the GA away from
+    // cap violators (they score like timeouts), but if every measured
+    // pattern violated the cap the GA's "best" still would. Re-select the
+    // best cap-respecting measurement, falling back to the CPU-only
+    // baseline (the degenerate no-offload pattern) when nothing fits.
+    if cfg.fitness.exceeds_cap(best.measurement.report.peak_w) {
+        best = log
+            .iter()
+            .filter(|(_, m)| !cfg.fitness.exceeds_cap(m.report.peak_w))
+            .map(|(bits, m)| Evaluated {
+                pattern: OffloadPattern::from_genome(app, Genome { bits: bits.clone() }),
+                value: cfg.fitness.value_of(m),
+                measurement: m.clone(),
+            })
+            .max_by(|a, b| {
+                // Deterministic despite HashMap iteration order: break
+                // exact value ties by genome.
+                a.value
+                    .partial_cmp(&b.value)
+                    .unwrap()
+                    .then_with(|| a.pattern.genome.bits.cmp(&b.pattern.genome.bits))
+            })
+            .unwrap_or_else(|| Evaluated {
+                pattern: OffloadPattern::cpu_only(app),
+                value: baseline_value,
+                measurement: baseline.clone(),
+            });
+    }
     Ok(GpuFlowOutcome {
         device,
         baseline,
@@ -240,6 +266,40 @@ mod tests {
             parallel.best.measurement.energy_ws
         );
         assert_eq!(serial.trials, parallel.trials);
+    }
+
+    #[test]
+    fn watt_capped_search_never_selects_a_violating_pattern() {
+        let (app, env) = setup();
+        let ga = GaConfig {
+            population: 10,
+            generations: 8,
+            ..Default::default()
+        };
+        // Uncapped control: the winning GPU pattern runs the kernel at
+        // ≈233 W peak (105 idle + 120 active + 8 drive).
+        let unc = run(&app, &env, &GpuFlowConfig { ga, ..Default::default() }).unwrap();
+        assert!(
+            unc.best.measurement.report.peak_w > 150.0,
+            "control peak {}",
+            unc.best.measurement.report.peak_w
+        );
+        // A 150 W operator cap excludes every GPU-kernel pattern; the
+        // search must fall back to a cap-respecting one (ultimately the
+        // CPU-only baseline at ≈123 W peak).
+        let capped_cfg = GpuFlowConfig {
+            ga,
+            fitness: crate::ga::FitnessSpec::paper().with_watt_cap(150.0),
+            ..Default::default()
+        };
+        let env2 = VerifEnvConfig::r740_pac().build(99);
+        let capped = run(&app, &env2, &capped_cfg).unwrap();
+        assert!(
+            capped.best.measurement.report.peak_w <= 150.0,
+            "capped run selected peak {} W",
+            capped.best.measurement.report.peak_w
+        );
+        assert!(capped.best.value <= unc.best.value);
     }
 
     #[test]

@@ -74,9 +74,7 @@ pub struct MixedOutcome {
 /// Run the §3.3 ordered verification.
 pub fn run(app: &AppModel, env: &VerifEnv, cfg: &MixedConfig) -> Result<MixedOutcome> {
     let baseline = env.measure_cpu_only(app);
-    let baseline_value = cfg
-        .fitness
-        .value(baseline.time_s, baseline.mean_w, baseline.timed_out);
+    let baseline_value = cfg.fitness.value_of(&baseline);
 
     let order = [DeviceKind::ManyCore, DeviceKind::Gpu, DeviceKind::Fpga];
     let mut tried: Vec<DestinationResult> = Vec::new();

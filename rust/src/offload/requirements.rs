@@ -118,6 +118,12 @@ mod tests {
             mean_w: energy_ws / time_s,
             energy_ws,
             trace: PowerTrace::default(),
+            report: crate::power::EnergyReport::legacy(
+                time_s,
+                energy_ws,
+                energy_ws / time_s,
+                energy_ws / time_s,
+            ),
             timed_out,
             failure: None,
             breakdown: TrialBreakdown::default(),

@@ -54,10 +54,19 @@ impl IpmiSampler {
     pub fn sample(&self, profile: &PowerProfile, rng: &mut Pcg32) -> PowerTrace {
         let dur = profile.duration_s();
         let mut samples = Vec::new();
-        let mut t = 0.0;
-        while t < dur {
+        // Sample times are computed as `i * period`, not by accumulating
+        // `t += period`: repeated addition drifts by an ulp-scale error per
+        // step, which over a multi-hour trace at sub-second periods shifts
+        // readings across phase boundaries (and can change the sample
+        // count).
+        let mut i: u64 = 0;
+        loop {
+            let t = i as f64 * self.cfg.period_s;
+            if t >= dur {
+                break;
+            }
             samples.push(self.reading(profile, t, rng));
-            t += self.cfg.period_s;
+            i += 1;
         }
         samples.push(self.reading(profile, dur.max(0.0), rng));
         PowerTrace::from_samples(samples)
@@ -148,6 +157,40 @@ mod tests {
         assert_eq!(t.samples[3].watts, 200.0);
         // Final reading at t=4.0 reports the last phase.
         assert_eq!(t.samples.last().unwrap().watts, 200.0);
+    }
+
+    #[test]
+    fn multi_hour_trace_has_drift_free_sample_times() {
+        // Regression for the accumulating `t += period` schedule: at a
+        // 0.1 s period over 2 hours, repeated addition drifts ~1e-8 s by
+        // the end (enough to cross a phase boundary); `i * period` keeps
+        // every sample within one rounding of its ideal time.
+        let period = 0.1;
+        let hours = 2.0 * 3600.0;
+        let s = IpmiSampler::new(IpmiConfig {
+            period_s: period,
+            noise_w_std: 0.0,
+            quantum_w: 0.0,
+        });
+        let mut rng = Pcg32::seed_from_u64(6);
+        let t = s.sample(&flat_profile(hours, 110.0), &mut rng);
+        // 72,000 regular samples (i*0.1 < 7200) plus the final at the end.
+        assert_eq!(t.samples.len(), 72_001);
+        for (i, smp) in t.samples.iter().enumerate().take(72_000) {
+            // One multiplication rounds once: |t_i / period - i| stays at
+            // ulp scale. The accumulated schedule fails this by orders of
+            // magnitude late in the trace.
+            assert!(
+                (smp.t_s / period - i as f64).abs() < 1e-9,
+                "sample {i} drifted to t={}",
+                smp.t_s
+            );
+        }
+        assert_eq!(t.duration_s(), hours);
+        // Drift-free schedule keeps the flat-profile energy exact up to
+        // summation rounding (~1e-12 relative over 72k terms); the
+        // accumulating schedule errs orders of magnitude worse.
+        assert!((t.energy_ws() - 110.0 * hours).abs() / (110.0 * hours) < 1e-11);
     }
 
     #[test]

@@ -1,10 +1,17 @@
 //! Power telemetry substrate: exact piecewise power profiles produced by
-//! the device models, an IPMI-style 1 Hz sampler (the paper measured the
-//! whole-server draw with `ipmitool` on a Dell R740), and Watt·second
-//! energy integration — the metric of the paper's Fig. 5.
+//! the device models, pluggable sensor backends (the paper's IPMI-style
+//! 1 Hz sampler — `ipmitool` on a Dell R740 — plus a high-rate RAPL-style
+//! per-component meter and an exact oracle), component-attributed energy
+//! accounting, and Watt·second integration — the metric of the paper's
+//! Fig. 5. See DESIGN.md §8 for the meter/attribution layer.
 
 pub mod ipmi;
+pub mod meter;
 pub mod trace;
 
 pub use ipmi::{IpmiConfig, IpmiSampler};
+pub use meter::{
+    AttributedProfile, Component, ComponentEnergy, ComponentPower, EnergyReport, IpmiMeter,
+    Metered, MeterConfig, OracleMeter, PowerMeter, RaplConfig, RaplMeter,
+};
 pub use trace::{PowerProfile, PowerSample, PowerTrace};

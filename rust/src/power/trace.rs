@@ -82,9 +82,39 @@ pub struct PowerTrace {
 
 impl PowerTrace {
     /// Construct from raw samples (must be time-ordered).
+    ///
+    /// Panics on out-of-order samples — in release builds too: a malformed
+    /// trace (e.g. from a hand-edited cache file) would otherwise yield
+    /// negative trapezoid energy silently. Use
+    /// [`PowerTrace::try_from_samples`] to validate untrusted input.
     pub fn from_samples(samples: Vec<PowerSample>) -> Self {
-        debug_assert!(samples.windows(2).all(|w| w[0].t_s <= w[1].t_s));
-        Self { samples }
+        match Self::try_from_samples(samples) {
+            Ok(t) => t,
+            Err(e) => panic!("PowerTrace::from_samples: {e}"),
+        }
+    }
+
+    /// Validating constructor for untrusted sample data (persisted cache
+    /// files): rejects out-of-order timestamps and non-finite values
+    /// instead of producing a trace whose trapezoid energy is garbage.
+    pub fn try_from_samples(samples: Vec<PowerSample>) -> Result<Self, String> {
+        for (i, s) in samples.iter().enumerate() {
+            if !s.t_s.is_finite() || !s.watts.is_finite() {
+                return Err(format!(
+                    "sample {i} is non-finite (t={}, W={})",
+                    s.t_s, s.watts
+                ));
+            }
+        }
+        if let Some(i) = samples.windows(2).position(|w| w[0].t_s > w[1].t_s) {
+            return Err(format!(
+                "samples out of time order at index {}: t={} then t={}",
+                i + 1,
+                samples[i].t_s,
+                samples[i + 1].t_s
+            ));
+        }
+        Ok(Self { samples })
     }
 
     /// Trace duration (time of the last sample).
@@ -163,6 +193,22 @@ mod tests {
         assert!((t.energy_ws() - 220.0).abs() < 1e-9);
         assert!((t.mean_w() - 110.0).abs() < 1e-9);
         assert_eq!(t.peak_w(), 120.0);
+    }
+
+    #[test]
+    fn out_of_order_samples_are_rejected() {
+        let bad = vec![
+            PowerSample { t_s: 2.0, watts: 100.0 },
+            PowerSample { t_s: 1.0, watts: 100.0 },
+        ];
+        let err = PowerTrace::try_from_samples(bad.clone()).unwrap_err();
+        assert!(err.contains("out of time order"), "{err}");
+        // The panicking constructor rejects it in release builds too.
+        let panicked = std::panic::catch_unwind(|| PowerTrace::from_samples(bad)).is_err();
+        assert!(panicked, "from_samples must panic on out-of-order samples");
+        // Non-finite values are rejected as well.
+        let nan = vec![PowerSample { t_s: 0.0, watts: f64::NAN }];
+        assert!(PowerTrace::try_from_samples(nan).is_err());
     }
 
     #[test]

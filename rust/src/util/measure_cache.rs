@@ -134,8 +134,11 @@ impl MeasureCache {
             .collect();
         // Stable order so persisted files diff cleanly.
         entries.sort_by(|a, b| key_sort_token(&a.0).cmp(&key_sort_token(&b.0)));
+        // Schema v2: measurements carry an EnergyReport (per-component
+        // attribution + sensor metadata). v1 files (scalars only) are
+        // still loadable — see `from_json`.
         Json::obj(vec![
-            ("version", Json::num(1.0)),
+            ("version", Json::num(2.0)),
             (
                 "entries",
                 Json::arr(
@@ -174,8 +177,22 @@ impl MeasureCache {
     /// Rebuild a cache from [`MeasureCache::to_json`] output. Statistics
     /// start at zero; malformed entries are an error (a corrupt cache file
     /// should be deleted, not silently half-loaded).
+    ///
+    /// Versioned migration: schema v2 is the current format; v1 files
+    /// (pre-attribution, no `report` object per measurement) load with a
+    /// synthesized legacy [`crate::power::EnergyReport`]. Unknown versions
+    /// are a clean error rather than a misparse.
     pub fn from_json(j: &Json) -> Result<Self> {
         let bad = |what: &str| Error::Config(format!("measurement cache: {what}"));
+        let version = j
+            .get("version")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| bad("missing 'version'"))?;
+        if version != 1.0 && version != 2.0 {
+            return Err(bad(&format!(
+                "unsupported schema version {version} (supported: 1, 2)"
+            )));
+        }
         let entries = j
             .get("entries")
             .and_then(|e| e.as_arr())
@@ -250,7 +267,7 @@ fn parse_hex(s: Option<&str>) -> Option<u64> {
 mod tests {
     use super::*;
     use crate::canalyze::LoopId;
-    use crate::power::PowerTrace;
+    use crate::power::{ComponentEnergy, EnergyReport, PowerTrace};
     use crate::verifier::{PhaseKind, TrialBreakdown};
 
     fn fake_measurement(time_s: f64) -> Measurement {
@@ -263,6 +280,20 @@ mod tests {
             mean_w: 111.0,
             energy_ws: time_s * 111.0,
             trace: PowerTrace::default(),
+            report: EnergyReport {
+                meter: "oracle".into(),
+                sample_hz: 0.0,
+                time_s,
+                energy_ws: time_s * 111.0,
+                mean_w: 111.0,
+                peak_w: 125.0,
+                components: ComponentEnergy {
+                    idle_ws: time_s * 105.0,
+                    host_cpu_ws: time_s * 2.0,
+                    accelerator_ws: time_s * 3.0,
+                    transfer_ws: time_s * 1.0,
+                },
+            },
             timed_out: false,
             failure: None,
             breakdown: TrialBreakdown::default(),
@@ -334,6 +365,61 @@ mod tests {
     fn corrupt_cache_is_a_clean_error() {
         let parsed = json::parse(r#"{"version": 1, "entries": [{"app_hash": "zz"}]}"#).unwrap();
         assert!(MeasureCache::from_json(&parsed).is_err());
+    }
+
+    #[test]
+    fn unsupported_schema_version_is_rejected() {
+        let parsed = json::parse(r#"{"version": 99, "entries": []}"#).unwrap();
+        let err = MeasureCache::from_json(&parsed).unwrap_err().to_string();
+        assert!(err.contains("unsupported schema version"), "{err}");
+        let noversion = json::parse(r#"{"entries": []}"#).unwrap();
+        assert!(MeasureCache::from_json(&noversion).is_err());
+    }
+
+    #[test]
+    fn energy_report_round_trips_through_cache_json() {
+        let c = MeasureCache::new();
+        c.get_or_measure(key(true, 4), || fake_measurement(2.0));
+        let back = MeasureCache::from_json(&c.to_json()).unwrap();
+        let (m, hit) = back.get_or_measure(key(true, 4), || fake_measurement(0.0));
+        assert!(hit);
+        let expect = fake_measurement(2.0);
+        assert_eq!(m.report, expect.report, "EnergyReport survives persistence");
+        assert_eq!(m.report.components.accelerator_ws, 6.0);
+    }
+
+    #[test]
+    fn legacy_v1_cache_file_loads_with_synthesized_reports() {
+        // A v1 file as PR 1's code wrote it: version 1, measurements with
+        // scalar fields + trace but no "report" object.
+        let v1 = r#"{
+          "version": 1,
+          "entries": [{
+            "app_hash": "0000000000000007",
+            "pattern": "1",
+            "device": "fpga",
+            "xfer": "batched",
+            "env": "0000000000000001",
+            "measurement": {
+              "app": "t.c", "device": "fpga", "pattern": "1",
+              "regions": [0], "time_s": 2.0, "mean_w": 111.0,
+              "energy_ws": 222.0, "timed_out": false, "failure": null,
+              "cpu_s": 0.0, "transfer_s": 0.0, "kernel_s": 2.0,
+              "trace": [[0.0, 121.0], [2.0, 111.0]],
+              "phase": "verification"
+            }
+          }]
+        }"#;
+        let cache = MeasureCache::from_json(&json::parse(v1).unwrap()).unwrap();
+        assert_eq!(cache.len(), 1);
+        let (m, hit) = cache.get_or_measure(key(true, 1), || fake_measurement(0.0));
+        assert!(hit, "migrated v1 entry answers the lookup");
+        assert_eq!(m.energy_ws, 222.0);
+        assert_eq!(m.report.meter, "legacy-v1");
+        assert!((m.report.components.total_ws() - m.energy_ws).abs() < 1e-9);
+        // Re-serializing upgrades the file to schema v2.
+        let j = cache.to_json();
+        assert_eq!(j.get("version").unwrap().as_f64(), Some(2.0));
     }
 
     #[test]

@@ -10,7 +10,7 @@ use crate::canalyze::LoopId;
 use crate::devices::{
     Accelerator, CpuModel, DeviceKind, FpgaModel, GpuModel, ManyCoreModel, TransferMode,
 };
-use crate::power::{IpmiConfig, IpmiSampler, PowerProfile};
+use crate::power::{AttributedProfile, MeterConfig, PowerMeter};
 use crate::util::measure_cache::{MeasureCache, MeasureKey};
 use crate::util::prng::Pcg32;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -37,8 +37,8 @@ pub struct VerifEnvConfig {
     pub gpu: GpuModel,
     /// FPGA destination.
     pub fpga: FpgaModel,
-    /// IPMI sampler settings.
-    pub ipmi: IpmiConfig,
+    /// Power-meter backend (IPMI by default, per the paper's testbed).
+    pub meter: MeterConfig,
     /// Trial timeout, seconds (paper: 3 minutes).
     pub timeout_s: f64,
     /// Run-to-run relative timing jitter (σ).
@@ -55,7 +55,7 @@ impl VerifEnvConfig {
             manycore: ManyCoreModel::xeon16(),
             gpu: GpuModel::tesla(),
             fpga: FpgaModel::arria10(),
-            ipmi: IpmiConfig::default(),
+            meter: MeterConfig::default(),
             timeout_s: 180.0,
             timing_jitter: 0.01,
         }
@@ -66,7 +66,7 @@ impl VerifEnvConfig {
         VerifEnv {
             seed,
             fingerprint: self.fingerprint(seed),
-            sampler: IpmiSampler::new(self.ipmi),
+            meter: self.meter.build(),
             trials: AtomicU64::new(0),
             search_cost_ns: AtomicU64::new(0),
             cache: None,
@@ -81,6 +81,11 @@ impl VerifEnvConfig {
     pub fn fingerprint(&self, seed: u64) -> u64 {
         let s = &self.fpga.synth;
         let c = &s.costs;
+        // The meter contributes a variable-length field sequence; for the
+        // default IPMI backend it is bit-compatible with the pre-meter
+        // fingerprint so persisted v1 caches keep hitting (see
+        // `MeterConfig::fingerprint_fields`).
+        let meter_fp = self.meter.fingerprint_fields();
         let fields = [
             self.server.idle_w,
             self.cpu.gflops,
@@ -139,15 +144,14 @@ impl VerifEnvConfig {
             c.ram_kb_per_memport,
             c.lut_fixed,
             c.ff_per_lut,
-            self.ipmi.period_s,
-            self.ipmi.noise_w_std,
-            self.ipmi.quantum_w,
-            self.timeout_s,
-            self.timing_jitter,
         ];
         crate::util::fasthash::fold_u64s(
             seed.wrapping_mul(0x9E37_79B9_7F4A_7C15),
-            fields.into_iter().map(f64::to_bits),
+            fields
+                .into_iter()
+                .chain(meter_fp)
+                .chain([self.timeout_s, self.timing_jitter])
+                .map(f64::to_bits),
         )
     }
 }
@@ -158,7 +162,7 @@ pub struct VerifEnv {
     pub cfg: VerifEnvConfig,
     seed: u64,
     fingerprint: u64,
-    sampler: IpmiSampler,
+    meter: Box<dyn PowerMeter>,
     trials: AtomicU64,
     // Integer nanoseconds: atomic integer addition is associative, so the
     // accumulated cost is identical no matter what order parallel trials
@@ -294,8 +298,8 @@ impl VerifEnv {
         let device = self.device(dest);
 
         let idle = self.cfg.server.idle_w;
-        let cpu_busy = idle + self.cfg.cpu.active_w;
-        let mut profile = PowerProfile::new();
+        let host_busy = self.cfg.cpu.busy_power(idle);
+        let mut profile = AttributedProfile::new();
         let mut breakdown = TrialBreakdown::default();
         let mut failed: Option<String> = None;
 
@@ -306,7 +310,7 @@ impl VerifEnv {
 
         // Host prologue (setup + loops preceding the offload regions).
         let pre = jitter(&mut rng, host_s * 0.5);
-        profile.push(pre, cpu_busy);
+        profile.push(pre, host_busy);
         breakdown.cpu_s += pre;
 
         for &r in &regions {
@@ -319,17 +323,17 @@ impl VerifEnv {
             let est = dev.estimate(work, xfer);
             let transfer = jitter(&mut rng, est.transfer_s);
             let kernel = jitter(&mut rng, est.compute_s + est.launch_s);
-            // Transfers: host busy driving DMA.
-            profile.push(transfer, cpu_busy + est.host_power_w);
-            // Kernel: host mostly idle, device active.
-            profile.push(kernel, idle + est.dyn_power_w + est.host_power_w);
+            // Transfers: host busy driving DMA, transfer machinery active.
+            profile.push(transfer, est.transfer_power(idle, self.cfg.cpu.active_w));
+            // Kernel: host down to driver polling, accelerator active.
+            profile.push(kernel, est.kernel_power(idle));
             breakdown.transfer_s += transfer;
             breakdown.kernel_s += kernel;
         }
 
         // Host epilogue.
         let post = jitter(&mut rng, host_s * 0.5);
-        profile.push(post, cpu_busy);
+        profile.push(post, host_busy);
         breakdown.cpu_s += post;
 
         // Failed trials (e.g. FPGA kernel too large) behave like timeouts:
@@ -337,9 +341,7 @@ impl VerifEnv {
         let wall = profile.duration_s();
         let timed_out = failed.is_some() || wall > self.cfg.timeout_s;
 
-        let trace = self.sampler.sample(&profile, &mut rng);
-        let mean_w = trace.mean_w();
-        let energy = trace.energy_ws();
+        let metered = self.meter.measure(&profile, &mut rng);
         self.charge_search_cost(wall.min(self.cfg.timeout_s));
 
         Measurement {
@@ -348,9 +350,10 @@ impl VerifEnv {
             pattern: bits.to_vec(),
             regions,
             time_s: wall,
-            mean_w,
-            energy_ws: energy,
-            trace,
+            mean_w: metered.report.mean_w,
+            energy_ws: metered.report.energy_ws,
+            trace: metered.trace,
+            report: metered.report,
             timed_out,
             failure: failed,
             breakdown,
@@ -478,6 +481,63 @@ mod tests {
         let mut short = VerifEnvConfig::r740_pac();
         short.timeout_s = 60.0;
         assert_ne!(fp, short.fingerprint(7), "timeout-sensitive");
+        let mut oracle = VerifEnvConfig::r740_pac();
+        oracle.meter = crate::power::MeterConfig::Oracle;
+        assert_ne!(fp, oracle.fingerprint(7), "meter-sensitive");
+    }
+
+    #[test]
+    fn oracle_env_reports_exact_component_ledger() {
+        let an = analyze_source("mriq.c", workloads::MRIQ_C).unwrap();
+        let mut cfg = VerifEnvConfig::r740_pac();
+        cfg.meter = crate::power::MeterConfig::Oracle;
+        let app = AppModel::from_analysis(&an, &cfg.cpu, 14.0).unwrap();
+        let env = cfg.build(42);
+        let outer = app
+            .loops
+            .iter()
+            .max_by(|a, b| a.cpu_time_s.partial_cmp(&b.cpu_time_s).unwrap())
+            .unwrap()
+            .id;
+        let pos = app.candidates.iter().position(|&c| c == outer).unwrap();
+        let mut bits = vec![false; app.genome_len()];
+        bits[pos] = true;
+        let m = env.measure(&app, &bits, DeviceKind::Fpga, TransferMode::Batched);
+        assert_eq!(m.report.meter, "oracle");
+        // Exact integration: energy equals mean power × wall time exactly
+        // (both derive from the same profile), and the component ledger
+        // sums to the whole-server total.
+        assert!((m.energy_ws - m.mean_w * m.time_s).abs() <= 1e-9 * m.energy_ws);
+        let c = &m.report.components;
+        assert!(
+            (c.total_ws() - m.energy_ws).abs() <= 1e-6 * m.energy_ws,
+            "components {} vs total {}",
+            c.total_ws(),
+            m.energy_ws
+        );
+        // An FPGA offload run exercises every component.
+        assert!(c.idle_ws > 0.0 && c.host_cpu_ws > 0.0);
+        assert!(c.accelerator_ws > 0.0 && c.transfer_ws > 0.0);
+        // The idle base dominates this workload's draw (≈105 of ≈111 W).
+        assert!(c.idle_ws > c.dynamic_ws());
+    }
+
+    #[test]
+    fn rapl_env_stays_in_fig5_bands() {
+        let an = analyze_source("mriq.c", workloads::MRIQ_C).unwrap();
+        let mut cfg = VerifEnvConfig::r740_pac();
+        cfg.meter = crate::power::MeterConfig::Rapl(crate::power::RaplConfig::default());
+        let app = AppModel::from_analysis(&an, &cfg.cpu, 14.0).unwrap();
+        let env = cfg.build(42);
+        let m = env.measure_cpu_only(&app);
+        assert_eq!(m.report.meter, "rapl");
+        assert!((118.0..124.0).contains(&m.mean_w), "power {}", m.mean_w);
+        assert!((1500.0..1900.0).contains(&m.energy_ws), "energy {}", m.energy_ws);
+        // CPU-only: accelerator/transfer channels read only clamped sensor
+        // noise (≈0.08 W each), a vanishing share of the ≈1,690 W·s total.
+        assert!(m.report.components.accelerator_ws < 0.005 * m.energy_ws);
+        assert!(m.report.components.transfer_ws < 0.005 * m.energy_ws);
+        assert!(m.report.peak_w >= m.mean_w);
     }
 
     #[test]

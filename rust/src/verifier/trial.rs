@@ -2,7 +2,7 @@
 
 use crate::canalyze::LoopId;
 use crate::devices::DeviceKind;
-use crate::power::PowerTrace;
+use crate::power::{EnergyReport, PowerTrace};
 use crate::util::json::Json;
 
 /// Which stage of the flow produced a measurement.
@@ -43,8 +43,11 @@ pub struct Measurement {
     pub mean_w: f64,
     /// Energy from the IPMI trace, Watt·seconds.
     pub energy_ws: f64,
-    /// The sampled power trace.
+    /// The sampled whole-server power trace.
     pub trace: PowerTrace,
+    /// Component-attributed energy accounting plus sensor metadata (which
+    /// meter produced this measurement, at what rate, with what peak).
+    pub report: EnergyReport,
     /// Trial exceeded the timeout (or failed): evaluation value must use
     /// the substituted 1,000 s time.
     pub timed_out: bool,
@@ -95,6 +98,11 @@ impl Measurement {
     }
 
     /// Reconstruct a measurement persisted by [`Measurement::to_json_full`].
+    ///
+    /// Accepts both the current schema (with a `report` object) and the
+    /// pre-attribution v1 schema: legacy entries get a synthesized
+    /// [`EnergyReport::legacy`] whose dynamic energy is attributed to the
+    /// host CPU (the only thing the old scalars can support).
     pub fn from_json(j: &Json) -> Option<Measurement> {
         let pattern: Vec<bool> = j.get("pattern")?.as_str()?.chars().map(|c| c == '1').collect();
         let regions: Vec<LoopId> = j
@@ -115,15 +123,24 @@ impl Measurement {
                 })
             })
             .collect();
+        let trace = PowerTrace::try_from_samples(samples).ok()?;
+        let time_s = j.get("time_s")?.as_f64()?;
+        let mean_w = j.get("mean_w")?.as_f64()?;
+        let energy_ws = j.get("energy_ws")?.as_f64()?;
+        let report = match j.get("report") {
+            Some(r) => EnergyReport::from_json(r)?,
+            None => EnergyReport::legacy(time_s, energy_ws, mean_w, trace.peak_w()),
+        };
         Some(Measurement {
             app: j.get("app")?.as_str()?.to_string(),
             device: DeviceKind::from_name(j.get("device")?.as_str()?)?,
             pattern,
             regions,
-            time_s: j.get("time_s")?.as_f64()?,
-            mean_w: j.get("mean_w")?.as_f64()?,
-            energy_ws: j.get("energy_ws")?.as_f64()?,
-            trace: PowerTrace::from_samples(samples),
+            time_s,
+            mean_w,
+            energy_ws,
+            trace,
+            report,
             timed_out: j.get("timed_out")?.as_bool()?,
             failure: j.get("failure").and_then(|f| f.as_str()).map(|s| s.to_string()),
             breakdown: TrialBreakdown {
@@ -162,6 +179,7 @@ impl Measurement {
             ("cpu_s", Json::num(self.breakdown.cpu_s)),
             ("transfer_s", Json::num(self.breakdown.transfer_s)),
             ("kernel_s", Json::num(self.breakdown.kernel_s)),
+            ("report", self.report.to_json()),
         ])
     }
 }
@@ -181,6 +199,7 @@ mod tests {
             mean_w: 111.0,
             energy_ws: 223.0,
             trace: PowerTrace::default(),
+            report: EnergyReport::legacy(2.0, 223.0, 111.0, 121.0),
             timed_out: false,
             failure: None,
             breakdown: TrialBreakdown::default(),
@@ -208,6 +227,20 @@ mod tests {
                 crate::power::PowerSample { t_s: 0.0, watts: 121.0 },
                 crate::power::PowerSample { t_s: 1.9372625, watts: 111.0 },
             ]),
+            report: EnergyReport {
+                meter: "rapl".into(),
+                sample_hz: 20.0,
+                time_s: 1.9372625,
+                energy_ws: 218.1875,
+                mean_w: 112.625,
+                peak_w: 121.0,
+                components: crate::power::ComponentEnergy {
+                    idle_ws: 200.0,
+                    host_cpu_ws: 10.0,
+                    accelerator_ws: 6.1875,
+                    transfer_ws: 2.0,
+                },
+            },
             timed_out: false,
             failure: Some("why".into()),
             breakdown: TrialBreakdown {
@@ -232,5 +265,42 @@ mod tests {
         assert_eq!(back.failure, m.failure);
         assert_eq!(back.breakdown.kernel_s, m.breakdown.kernel_s);
         assert_eq!(back.phase, m.phase);
+        assert_eq!(back.report, m.report, "energy report round-trips exactly");
+    }
+
+    #[test]
+    fn v1_json_without_report_migrates_to_legacy() {
+        // A measurement serialized by the pre-attribution schema: no
+        // "report" object. Loading must synthesize a legacy report whose
+        // components sum to the recorded energy.
+        let v1 = r#"{
+            "app": "mriq.c", "device": "fpga", "pattern": "10",
+            "regions": [3], "time_s": 2.0, "mean_w": 111.0,
+            "energy_ws": 222.0, "timed_out": false, "failure": null,
+            "cpu_s": 0.3, "transfer_s": 0.1, "kernel_s": 1.6,
+            "trace": [[0.0, 121.0], [2.0, 111.0]], "phase": "production"
+        }"#;
+        let parsed = crate::util::json::parse(v1).unwrap();
+        let m = Measurement::from_json(&parsed).unwrap();
+        assert_eq!(m.report.meter, "legacy-v1");
+        assert_eq!(m.report.peak_w, 121.0);
+        assert!((m.report.components.total_ws() - m.energy_ws).abs() < 1e-9);
+        assert_eq!(m.report.components.host_cpu_ws, 222.0);
+    }
+
+    #[test]
+    fn malformed_trace_in_json_is_rejected() {
+        let bad = r#"{
+            "app": "a.c", "device": "gpu", "pattern": "1", "regions": [],
+            "time_s": 1.0, "mean_w": 100.0, "energy_ws": 100.0,
+            "timed_out": false, "failure": null,
+            "cpu_s": 0.0, "transfer_s": 0.0, "kernel_s": 1.0,
+            "trace": [[2.0, 100.0], [1.0, 100.0]], "phase": "verification"
+        }"#;
+        let parsed = crate::util::json::parse(bad).unwrap();
+        assert!(
+            Measurement::from_json(&parsed).is_none(),
+            "out-of-order trace must not load"
+        );
     }
 }

@@ -62,6 +62,45 @@ fn offload_json_has_production_numbers() {
 }
 
 #[test]
+fn power_command_prints_component_ledger() {
+    let out = enadapt(&["power", "mriq", "--meter", "oracle"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Per-component energy attribution"), "{text}");
+    assert!(text.contains("host-cpu") && text.contains("accel"));
+    assert!(text.contains("oracle"), "meter metadata shown: {text}");
+    assert!(text.contains("dynamic-only"));
+}
+
+#[test]
+fn unknown_meter_is_a_clean_error() {
+    let out = enadapt(&["power", "mriq", "--meter", "wattmeter"]);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown meter"), "{err}");
+}
+
+#[test]
+fn watt_capped_offload_respects_the_cap() {
+    let out = enadapt(&[
+        "offload", "mriq", "--dest", "gpu", "--watt-cap", "150", "--json",
+        "--generations", "4", "--population", "6",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let j = enadapt::util::json::parse(&String::from_utf8_lossy(&out.stdout)).unwrap();
+    let peak = j
+        .get("production")
+        .unwrap()
+        .get("report")
+        .unwrap()
+        .get("peak_w")
+        .unwrap()
+        .as_f64()
+        .unwrap();
+    assert!(peak <= 150.0, "selected pattern peaks at {peak} W over the cap");
+}
+
+#[test]
 fn codegen_manycore_emits_openmp() {
     let out = enadapt(&["codegen", "vecadd", "--dest", "manycore"]);
     assert!(out.status.success());

@@ -7,7 +7,10 @@ use enadapt::canalyze::{analyze_source, LoopId};
 use enadapt::codegen::{emit_program, Plain};
 use enadapt::devices::{DeviceKind, TransferMode};
 use enadapt::ga::{self, FitnessSpec, GaConfig, Genome};
-use enadapt::power::{IpmiConfig, IpmiSampler, PowerProfile};
+use enadapt::power::{
+    AttributedProfile, ComponentPower, IpmiConfig, IpmiMeter, IpmiSampler, MeterConfig,
+    OracleMeter, PowerMeter, PowerProfile, RaplConfig, RaplMeter,
+};
 use enadapt::util::json::{self, Json};
 use enadapt::util::prng::Pcg32;
 use enadapt::util::prop::{run, Gen};
@@ -184,6 +187,173 @@ fn prop_power_trace_energy_close_to_profile() {
         );
         assert!(trace.peak_w() <= 300.0 + 1e-9);
     });
+}
+
+/// Random component-tagged profile: 1–6 phases with idle-dominated draw
+/// (the shape every verification trial produces).
+fn gen_attributed_profile(g: &mut Gen) -> AttributedProfile {
+    let mut p = AttributedProfile::new();
+    let phases = g.usize_range(1, 6);
+    for _ in 0..phases {
+        p.push(
+            g.f64_pos(0.5, 10.0),
+            ComponentPower {
+                idle_w: g.f64_pos(50.0, 200.0),
+                host_cpu_w: g.f64_range(0.0, 50.0),
+                accelerator_w: g.f64_range(0.0, 150.0),
+                transfer_w: g.f64_range(0.0, 20.0),
+            },
+        );
+    }
+    p
+}
+
+/// Analytic bound on trapezoid-vs-exact error for a piecewise-constant
+/// profile sampled at period `p`: each phase boundary contributes at most
+/// one mis-integrated interval of the power swing, plus one partial
+/// interval at the end.
+fn sampling_error_bound(profile: &AttributedProfile, period: f64) -> f64 {
+    let totals: Vec<f64> = profile.phases().iter().map(|ph| ph.1.total_w()).collect();
+    let swings: f64 = totals.windows(2).map(|w| (w[1] - w[0]).abs()).sum();
+    let max_w = totals.iter().cloned().fold(0.0, f64::max);
+    period * (swings + max_w)
+}
+
+#[test]
+fn prop_sampled_energy_converges_to_exact_with_meter_rate() {
+    run("meter-rate convergence", 120, |g: &mut Gen| {
+        let profile = gen_attributed_profile(g);
+        let exact = profile.flatten().energy_ws();
+        let dur = profile.duration_s();
+        let mut rng = Pcg32::seed_from_u64(g.rng().next_u64());
+        // Oracle: exact by construction (bit-identical to the profile).
+        let oracle = OracleMeter.measure(&profile, &mut rng);
+        assert_eq!(oracle.report.energy_ws, exact, "oracle must be exact");
+        // Noise-free sampling at increasing rates: the error obeys the
+        // analytic bound, which shrinks linearly with the period.
+        for divisor in [8.0, 64.0, 512.0] {
+            let period = dur / divisor;
+            let meter = IpmiMeter::new(IpmiConfig {
+                period_s: period,
+                noise_w_std: 0.0,
+                quantum_w: 0.0,
+            });
+            let m = meter.measure(&profile, &mut rng);
+            let err = (m.report.energy_ws - exact).abs();
+            let bound = sampling_error_bound(&profile, period);
+            assert!(
+                err <= bound + 1e-9,
+                "period {period}: err {err} > bound {bound} (exact {exact})"
+            );
+        }
+        // At the finest rate the bound itself is small: convergence.
+        let fine_bound = sampling_error_bound(&profile, dur / 512.0);
+        assert!(
+            fine_bound < 0.12 * exact,
+            "bound {fine_bound} vs exact {exact}"
+        );
+    });
+}
+
+#[test]
+fn prop_all_meter_backends_agree_and_attribute_consistently() {
+    run("meter backend agreement", 80, |g: &mut Gen| {
+        let profile = gen_attributed_profile(g);
+        let exact = profile.flatten().energy_ws();
+        let dur = profile.duration_s();
+        let seed = g.rng().next_u64();
+        // Noise-free RAPL sampling error obeys the same analytic bound;
+        // default (noisy) RAPL adds the clamped-noise bias, covered by a
+        // 1 W·s-per-second margin.
+        let cases: Vec<(Box<dyn PowerMeter>, f64)> = vec![
+            (Box::new(OracleMeter), 0.0),
+            (
+                Box::new(IpmiMeter::new(IpmiConfig {
+                    period_s: 0.25,
+                    noise_w_std: 0.0,
+                    quantum_w: 0.0,
+                })),
+                sampling_error_bound(&profile, 0.25),
+            ),
+            (
+                Box::new(RaplMeter::new(RaplConfig::default())),
+                sampling_error_bound(&profile, RaplConfig::default().period_s) + 1.0 * dur,
+            ),
+        ];
+        for (meter, tol) in cases {
+            let mut rng = Pcg32::seed_from_u64(seed);
+            let m = meter.measure(&profile, &mut rng);
+            let err = (m.report.energy_ws - exact).abs();
+            assert!(
+                err <= tol + 1e-9,
+                "{}: energy {} vs exact {} (tol {})",
+                meter.name(),
+                m.report.energy_ws,
+                exact,
+                tol
+            );
+            // Attribution invariant: components sum to the whole-server
+            // total within 1e-6 on every backend.
+            let sum = m.report.components.total_ws();
+            assert!(
+                (sum - m.report.energy_ws).abs() <= 1e-6 * m.report.energy_ws.max(1.0),
+                "{}: components {} vs total {}",
+                meter.name(),
+                sum,
+                m.report.energy_ws
+            );
+            assert!(m.report.peak_w >= 0.0 && m.report.time_s == m.trace.duration_s());
+        }
+    });
+}
+
+#[test]
+fn meter_backends_agree_on_fig5_bands() {
+    // The DESIGN.md §1 bands are asserted under the default IPMI meter by
+    // the unit tests; every other backend must reproduce them too, and
+    // all backends must agree with the oracle within sampling tolerance.
+    let app = mriq_app();
+    let best_bits = {
+        let outer = app
+            .loops
+            .iter()
+            .max_by(|a, b| a.cpu_time_s.partial_cmp(&b.cpu_time_s).unwrap())
+            .unwrap()
+            .id;
+        let pos = app.candidates.iter().position(|&c| c == outer).unwrap();
+        let mut bits = vec![false; app.genome_len()];
+        bits[pos] = true;
+        bits
+    };
+    let mut energies = Vec::new();
+    for name in ["ipmi", "rapl", "oracle"] {
+        let mut cfg = VerifEnvConfig::r740_pac();
+        cfg.meter = MeterConfig::from_name(name).unwrap();
+        let env = cfg.build(42);
+        let cpu = env.measure_cpu_only(&app);
+        let fpga = env.measure(&app, &best_bits, DeviceKind::Fpga, TransferMode::Batched);
+        assert!((13.0..15.5).contains(&cpu.time_s), "{name} time {}", cpu.time_s);
+        assert!((118.0..124.0).contains(&cpu.mean_w), "{name} power {}", cpu.mean_w);
+        assert!(
+            (1500.0..1900.0).contains(&cpu.energy_ws),
+            "{name} energy {}",
+            cpu.energy_ws
+        );
+        assert!(
+            (150.0..360.0).contains(&fpga.energy_ws),
+            "{name} offl energy {}",
+            fpga.energy_ws
+        );
+        let ratio = cpu.energy_ws / fpga.energy_ws;
+        assert!((4.0..12.0).contains(&ratio), "{name} ratio {ratio}");
+        energies.push((cpu.energy_ws, fpga.energy_ws));
+    }
+    // Pairwise agreement: CPU-only within 5%, the short offloaded trace
+    // within 20% (1 Hz IPMI only gets a few samples of it).
+    for (a, b) in energies.iter().zip(energies.iter().skip(1)) {
+        assert!((a.0 / b.0 - 1.0).abs() < 0.05, "cpu {} vs {}", a.0, b.0);
+        assert!((a.1 / b.1 - 1.0).abs() < 0.20, "fpga {} vs {}", a.1, b.1);
+    }
 }
 
 #[test]
