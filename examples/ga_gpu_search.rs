@@ -9,8 +9,8 @@
 //! ```
 
 use enadapt::canalyze::analyze_source;
-use enadapt::ga::{FitnessSpec, GaConfig};
 use enadapt::offload::{gpu_flow, GpuFlowConfig};
+use enadapt::search::{FitnessSpec, GaConfig};
 use enadapt::util::tablefmt::Table;
 use enadapt::verifier::{AppModel, VerifEnvConfig};
 use enadapt::workloads;
@@ -54,6 +54,7 @@ fn main() -> enadapt::Result<()> {
                 seed: 2024,
                 transfer_opt,
                 parallel_trials: false,
+                ..Default::default()
             };
             let out = gpu_flow::run(&app, &env, &cfg)?;
             t.row(&[
@@ -68,7 +69,7 @@ fn main() -> enadapt::Result<()> {
 
             if label.starts_with("power-aware + batched") {
                 println!("convergence (best evaluation value per generation):");
-                for h in &out.ga.history {
+                for h in &out.search.history {
                     let bars = (h.best * 4000.0).min(60.0) as usize;
                     println!(
                         "  gen {:>2}  {:.5}  |{}",

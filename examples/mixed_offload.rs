@@ -8,8 +8,8 @@
 //! ```
 
 use enadapt::canalyze::analyze_source;
-use enadapt::ga::{FitnessSpec, GaConfig};
 use enadapt::offload::{mixed, GpuFlowConfig, MixedConfig, Requirements};
+use enadapt::search::{FitnessSpec, GaConfig};
 use enadapt::util::tablefmt::Table;
 use enadapt::verifier::{AppModel, VerifEnvConfig};
 use enadapt::workloads;

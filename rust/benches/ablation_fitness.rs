@@ -8,7 +8,7 @@
 
 use enadapt::canalyze::analyze_source;
 use enadapt::devices::DeviceKind;
-use enadapt::ga::{FitnessSpec, GaConfig};
+use enadapt::search::{FitnessSpec, GaConfig};
 use enadapt::offload::{gpu_flow, DataCenterCost, GpuFlowConfig};
 use enadapt::util::benchkit::{bench, check_band, section};
 use enadapt::util::tablefmt::Table;

@@ -12,8 +12,8 @@
 //! * GA engine throughput (synthetic fitness — pure engine cost).
 
 use enadapt::canalyze::analyze_source;
-use enadapt::ga::{self, FitnessSpec, GaConfig};
 use enadapt::offload::{gpu_flow, GpuFlowConfig};
+use enadapt::search::{run_synthetic, FitnessSpec, GaConfig, GaStrategy};
 use enadapt::util::benchkit::{bench, check_band, section};
 use enadapt::util::tablefmt::Table;
 use enadapt::verifier::{AppModel, VerifEnvConfig};
@@ -44,7 +44,7 @@ fn main() {
     )
     .expect("ga flow");
     println!("generation, best_value, mean_value, patterns_measured");
-    for h in &out.ga.history {
+    for h in &out.search.history {
         println!(
             "{:>4}, {:.6}, {:.6}, {}",
             h.generation, h.best, h.mean, h.measured
@@ -84,6 +84,7 @@ fn main() {
                 seed: 42,
                 transfer_opt,
                 parallel_trials: false,
+                ..Default::default()
             },
         )
         .expect("ga flow");
@@ -171,8 +172,9 @@ fn main() {
     section("GA engine throughput (synthetic fitness)");
     println!(
         "{}",
-        bench("ga::run 16x20 onemax(len=16)", 2, 20, || {
-            let r = ga::run(16, &ga_cfg, 7, |g| g.ones() as f64);
+        bench("ga strategy 16x20 onemax(len=16)", 2, 20, || {
+            let r =
+                run_synthetic(&GaStrategy { cfg: ga_cfg }, 16, 7, |g| g.ones() as f64).unwrap();
             std::hint::black_box(r.best_value);
         })
         .row()

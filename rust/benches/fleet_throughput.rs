@@ -10,7 +10,7 @@
 //! Emits a final JSON object on stdout for the perf dashboard.
 
 use enadapt::coordinator::{fleet, run_fleet, Destination, FleetConfig, FleetSpec, JobConfig};
-use enadapt::ga::GaConfig;
+use enadapt::search::GaConfig;
 use enadapt::offload::GpuFlowConfig;
 use enadapt::util::benchkit::section;
 use enadapt::util::json::Json;

@@ -10,7 +10,7 @@
 
 use enadapt::canalyze::analyze_source;
 use enadapt::devices::DeviceKind;
-use enadapt::ga::{FitnessSpec, GaConfig};
+use enadapt::search::{FitnessSpec, GaConfig};
 use enadapt::offload::{mixed, DataCenterCost, GpuFlowConfig, MixedConfig, Requirements};
 use enadapt::util::benchkit::{check_band, section};
 use enadapt::util::tablefmt::Table;

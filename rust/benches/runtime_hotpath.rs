@@ -14,8 +14,8 @@
 use enadapt::canalyze::analyze_source;
 use enadapt::coordinator::{run_job, Destination, JobConfig};
 use enadapt::devices::DeviceKind;
-use enadapt::ga::{self, GaConfig};
 use enadapt::runtime;
+use enadapt::search::{run_synthetic, GaConfig, GaStrategy};
 use enadapt::util::benchkit::{bench, section};
 use enadapt::verifier::{AppModel, VerifEnvConfig};
 use enadapt::workloads;
@@ -103,8 +103,16 @@ fn main() {
     );
     println!(
         "{}",
-        bench("ga::run 16x20 synthetic", 2, 20, || {
-            let r = ga::run(16, &GaConfig::default(), 9, |g| g.ones() as f64);
+        bench("ga strategy 16x20 synthetic", 2, 20, || {
+            let r = run_synthetic(
+                &GaStrategy {
+                    cfg: GaConfig::default(),
+                },
+                16,
+                9,
+                |g| g.ones() as f64,
+            )
+            .unwrap();
             std::hint::black_box(r.best_value);
         })
         .row()

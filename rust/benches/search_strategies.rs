@@ -1,0 +1,128 @@
+//! Bench: **search_strategies** — the pluggable search layer compared on
+//! one workload (MRI-Q → GPU destination).
+//!
+//! For each strategy (GA, deterministic annealing, exhaustive) it reports
+//! the best scalarized value, the Pareto-front size, the measured-trials
+//! count (the real search cost — verification trials are the expensive
+//! resource) and the wall time, then checks the ordering invariants:
+//!
+//! * exhaustive is ground truth — no strategy beats its best value;
+//! * the GA improves on the all-CPU baseline;
+//! * every front contains the baseline point (strictly lowest exact peak).
+
+use enadapt::canalyze::analyze_source;
+use enadapt::devices::DeviceKind;
+use enadapt::offload::{gpu_flow, GpuFlowConfig};
+use enadapt::search::{AnnealConfig, GaConfig, SearchStrategy};
+use enadapt::util::benchkit::{check_band, section};
+use enadapt::util::tablefmt::Table;
+use enadapt::verifier::{AppModel, VerifEnvConfig};
+use enadapt::workloads;
+use std::time::Instant;
+
+fn main() {
+    println!("=== search_strategies: GA vs annealing vs exhaustive on MRI-Q/GPU ===");
+
+    let an = analyze_source("mriq.c", workloads::MRIQ_C).expect("analyze");
+    let base_cfg = VerifEnvConfig::r740_pac();
+    let app = AppModel::from_analysis(&an, &base_cfg.cpu, 14.0).expect("app model");
+
+    let strategies = [
+        ("ga", SearchStrategy::Ga),
+        ("anneal", SearchStrategy::Anneal(AnnealConfig::default())),
+        (
+            "exhaustive",
+            SearchStrategy::Exhaustive { max_bits: 16 },
+        ),
+    ];
+
+    section("per-strategy search outcome (same seed, same guide)");
+    let mut t = Table::new(&[
+        "strategy",
+        "best value",
+        "best pattern",
+        "front",
+        "measured",
+        "archive hits",
+        "wall [s]",
+    ]);
+    let mut results = Vec::new();
+    for (label, strategy) in strategies {
+        let env = VerifEnvConfig::r740_pac().build(42);
+        let cfg = GpuFlowConfig {
+            ga: GaConfig::default(),
+            strategy,
+            seed: 42,
+            parallel_trials: false,
+            ..Default::default()
+        };
+        let start = Instant::now();
+        let out = gpu_flow::run_on(&app, &env, &cfg, DeviceKind::Gpu).expect("search");
+        let wall = start.elapsed().as_secs_f64();
+        t.row(&[
+            label.to_string(),
+            format!("{:.6}", out.best.value),
+            out.best.pattern.genome.to_string(),
+            out.search.front.len().to_string(),
+            out.search.measured.to_string(),
+            out.search.cache_hits.to_string(),
+            format!("{wall:.3}"),
+        ]);
+        results.push((label, out));
+    }
+    println!("{}", t.render());
+
+    let mut ok = true;
+    let exhaustive = &results
+        .iter()
+        .find(|(l, _)| *l == "exhaustive")
+        .unwrap()
+        .1;
+    for (label, out) in &results {
+        ok &= check_band(
+            &format!("{label} best ≤ exhaustive optimum (ratio)"),
+            out.best.value / exhaustive.best.value,
+            0.0,
+            1.0 + 1e-12,
+        );
+        if !out
+            .search
+            .front
+            .points
+            .iter()
+            .any(|s| s.genome.ones() == 0)
+        {
+            println!("FAIL [{label}] front lacks the all-CPU baseline point");
+            ok = false;
+        }
+    }
+    let ga = &results.iter().find(|(l, _)| *l == "ga").unwrap().1;
+    ok &= check_band(
+        "ga improves on the baseline (value ratio)",
+        ga.best.value / ga.baseline_value,
+        1.5,
+        50.0,
+    );
+    ok &= check_band(
+        "exhaustive measured the whole 16-bit space",
+        exhaustive.search.measured as f64,
+        65536.0,
+        65536.0,
+    );
+    // Search-cost ordering: the annealer and GA measure a tiny fraction
+    // of the space the exhaustive sweep pays for.
+    ok &= check_band(
+        "ga measured-trials share of the space",
+        ga.search.measured as f64 / 65536.0,
+        0.0,
+        0.05,
+    );
+
+    println!(
+        "\nsearch_strategies: {}",
+        if ok { "ALL BANDS PASS" } else { "SOME BANDS FAILED" }
+    );
+    if !ok {
+        std::process::exit(1);
+    }
+}

@@ -173,6 +173,7 @@ impl FleetReport {
             "dest",
             "chosen",
             "pattern",
+            "front",
             "time [s]",
             "base [W*s]",
             "offl [W*s]",
@@ -193,6 +194,7 @@ impl FleetReport {
                         dest_name(j.destination).to_string(),
                         r.device.name().to_string(),
                         r.best.pattern.genome.to_string(),
+                        r.front.len().to_string(),
                         format!("{:.2}", r.production.time_s),
                         format!("{:.0}", r.baseline.energy_ws),
                         format!("{:.0}", r.production.energy_ws),
@@ -209,6 +211,7 @@ impl FleetReport {
                         j.workload.clone(),
                         dest_name(j.destination).to_string(),
                         "FAILED".into(),
+                        String::new(),
                         String::new(),
                         String::new(),
                         String::new(),
@@ -274,6 +277,8 @@ impl FleetReport {
                                 ("device", Json::str(r.device.name())),
                                 ("pattern", Json::str(r.best.pattern.genome.to_string())),
                                 ("value", Json::num(r.best.value)),
+                                ("strategy", Json::str(r.strategy.clone())),
+                                ("front_size", Json::num(r.front.len() as f64)),
                                 ("time_s", Json::num(r.production.time_s)),
                                 ("mean_w", Json::num(r.production.mean_w)),
                                 ("energy_ws", Json::num(r.production.energy_ws)),
@@ -439,8 +444,8 @@ pub fn run_fleet(specs: &[FleetSpec], cfg: &FleetConfig) -> Result<FleetReport> 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ga::GaConfig;
     use crate::offload::GpuFlowConfig;
+    use crate::search::GaConfig;
 
     fn quick_template() -> JobConfig {
         JobConfig {
@@ -482,6 +487,7 @@ mod tests {
         assert!(table.contains("shared cache"));
         assert!(table.contains("energy red"), "per-job reduction column");
         assert!(table.contains("energy ledger"), "fleet component ledger");
+        assert!(table.contains("front"), "pareto front-size column");
         // The fleet ledger equals the sum of the per-job attributions.
         let ledger = report.production_ledger();
         let by_hand: f64 = report
@@ -498,6 +504,8 @@ mod tests {
         assert!(lg.get("total").unwrap().as_f64().unwrap() > 0.0);
         let first = &j.get("jobs").unwrap().as_arr().unwrap()[0];
         assert!(first.get("energy_reduction").unwrap().as_f64().unwrap() > 0.0);
+        assert!(first.get("front_size").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(first.get("strategy").unwrap().as_str().is_some());
     }
 
     #[test]

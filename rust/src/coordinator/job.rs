@@ -6,8 +6,8 @@ use super::steps::StepLog;
 use crate::canalyze::Analysis;
 use crate::codegen;
 use crate::devices::DeviceKind;
-use crate::ga::FitnessSpec;
 use crate::offload::{Evaluated, FpgaFlowConfig, GpuFlowConfig, Requirements};
+use crate::search::{FitnessSpec, ParetoFront};
 use crate::verifier::{AppModel, Measurement, VerifEnvConfig};
 use crate::Result;
 
@@ -95,6 +95,12 @@ pub struct JobReport {
     pub best: Evaluated,
     /// Destination the best pattern runs on.
     pub device: DeviceKind,
+    /// Search-strategy label (`ga`, `exhaustive`, `anneal`, `narrowing`,
+    /// or `mixed(<strategy>)`).
+    pub strategy: String,
+    /// Non-dominated `(time × W·s × peak-W)` front the search measured —
+    /// `best` is the configured scalarization's knee pick from it.
+    pub front: ParetoFront,
     /// Final production verification (Step 6 re-measurement).
     pub production: Measurement,
     /// Generated code for the chosen pattern.
@@ -181,7 +187,7 @@ mod tests {
         let cfg = JobConfig {
             destination: Destination::Device(DeviceKind::Gpu),
             ga_flow: GpuFlowConfig {
-                ga: crate::ga::GaConfig {
+                ga: crate::search::GaConfig {
                     population: 8,
                     generations: 6,
                     ..Default::default()

@@ -14,6 +14,6 @@ pub mod steps;
 
 pub use fleet::{run_fleet, FleetConfig, FleetJobOutcome, FleetReport, FleetSpec};
 pub use job::{resolve_baseline, run_job, BaselineSource, Destination, GeneratedCode, JobConfig, JobReport};
-pub use pipeline::Pipeline;
+pub use pipeline::{Pipeline, SearchStageOutcome};
 pub use reconfig::{reconfigure, Drift, DriftMonitor, ReconfigOutcome};
 pub use steps::{Step, StepLog, StepRecord};

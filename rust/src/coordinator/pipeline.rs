@@ -16,10 +16,24 @@ use crate::canalyze::{self, Analysis};
 use crate::codegen;
 use crate::devices::{DeviceKind, TransferMode};
 use crate::offload::{fpga_flow, gpu_flow, mixed, Evaluated, MixedConfig};
+use crate::search::ParetoFront;
 use crate::util::measure_cache::MeasureCache;
 use crate::verifier::{AppModel, Measurement, VerifEnv};
 use crate::{Error, Result};
 use std::sync::Arc;
+
+/// What Step 3 hands the rest of the pipeline: the scalarization's knee
+/// pick, the destination, the strategy label and the Pareto front.
+pub struct SearchStageOutcome {
+    /// Selected pattern + measurement + evaluation value.
+    pub best: Evaluated,
+    /// Destination it runs on.
+    pub device: DeviceKind,
+    /// Strategy label for reports.
+    pub strategy: String,
+    /// Non-dominated front of the search.
+    pub front: ParetoFront,
+}
 
 /// One job's configuration, bound to an optional shared measurement cache.
 pub struct Pipeline {
@@ -52,7 +66,13 @@ impl Pipeline {
         let mut steps = StepLog::new();
         let analysis = self.analyze_stage(&mut steps, source_name, source)?;
         let (app, env) = self.build_env(&analysis)?;
-        let (best, device) = self.search_stage(&mut steps, &app, &env)?;
+        let search = self.search_stage(&mut steps, &app, &env)?;
+        let SearchStageOutcome {
+            best,
+            device,
+            strategy,
+            front,
+        } = search;
         let baseline = env.measure_cpu_only(&app);
         self.adjust_stage(&mut steps, &app, &best, device)?;
         self.placement_stage(&mut steps, device)?;
@@ -68,6 +88,8 @@ impl Pipeline {
             baseline,
             best,
             device,
+            strategy,
+            front,
             production,
             generated,
             trials: env.trials_run(),
@@ -126,29 +148,42 @@ impl Pipeline {
     }
 
     /// Step 3: search for suitable offload parts on the configured
-    /// destination (GA, narrowing or mixed-order verification).
+    /// destination. The FPGA destination keeps the paper's §3.2 narrowing
+    /// funnel under the default GA strategy; any destination with a non-GA
+    /// strategy (exhaustive / anneal) drives the generic
+    /// [`crate::search::Strategy`] flow against that device model. Every
+    /// route returns the Pareto front plus the scalarization's knee pick.
     pub fn search_stage(
         &self,
         steps: &mut StepLog,
         app: &AppModel,
         env: &VerifEnv,
-    ) -> Result<(Evaluated, DeviceKind)> {
+    ) -> Result<SearchStageOutcome> {
         let cfg = &self.cfg;
         steps.run(Step::OffloadSearch, || {
-            let (best, device, detail) = match cfg.destination {
-                Destination::Device(DeviceKind::Fpga) => {
+            let (outcome, detail) = match cfg.destination {
+                Destination::Device(DeviceKind::Fpga) if cfg.ga_flow.strategy.uses_fpga_funnel() => {
                     let out = fpga_flow::run(app, env, &cfg.fpga_flow)?;
                     let d = format!(
-                        "FPGA narrowing: {} → {} → {} → {} candidates, {} singles + {} combos measured; best {}",
+                        "FPGA narrowing: {} → {} → {} → {} candidates, {} singles + {} combos measured; best {} (front {})",
                         out.funnel.candidates,
                         out.funnel.after_intensity,
                         out.funnel.after_trips,
                         out.funnel.after_fit,
                         out.funnel.first_round,
                         out.funnel.second_round,
-                        out.best.pattern
+                        out.best.pattern,
+                        out.front.len()
                     );
-                    (out.best, DeviceKind::Fpga, d)
+                    (
+                        SearchStageOutcome {
+                            best: out.best,
+                            device: DeviceKind::Fpga,
+                            strategy: "narrowing".to_string(),
+                            front: out.front,
+                        },
+                        d,
+                    )
                 }
                 Destination::Device(DeviceKind::Cpu) => {
                     return Err(Error::Config("cannot offload to the CPU itself".into()))
@@ -156,13 +191,23 @@ impl Pipeline {
                 Destination::Device(kind) => {
                     let out = gpu_flow::run_on(app, env, &cfg.ga_flow, kind)?;
                     let d = format!(
-                        "GA on {kind}: {} generations, {} patterns measured; best {} (value {:.5})",
-                        out.ga.history.len(),
+                        "{} on {kind}: {} rounds, {} patterns measured; best {} (value {:.5}, front {})",
+                        out.search.strategy,
+                        out.search.history.len(),
                         out.trials,
                         out.best.pattern,
-                        out.best.value
+                        out.best.value,
+                        out.search.front.len()
                     );
-                    (out.best, kind, d)
+                    (
+                        SearchStageOutcome {
+                            best: out.best,
+                            device: kind,
+                            strategy: out.search.strategy.to_string(),
+                            front: out.search.front,
+                        },
+                        d,
+                    )
                 }
                 Destination::Mixed => {
                     let mcfg = MixedConfig {
@@ -186,10 +231,18 @@ impl Pipeline {
                             .join(", "),
                         out.chosen.device
                     );
-                    (out.chosen.best, out.chosen.device, d)
+                    (
+                        SearchStageOutcome {
+                            best: out.chosen.best,
+                            device: out.chosen.device,
+                            strategy: format!("mixed({})", cfg.ga_flow.strategy.name()),
+                            front: out.chosen.front,
+                        },
+                        d,
+                    )
                 }
             };
-            Ok(((best, device), detail))
+            Ok((outcome, detail))
         })
     }
 

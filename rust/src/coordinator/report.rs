@@ -120,12 +120,52 @@ pub fn render_job(r: &JobReport) -> String {
         r.best.pattern, r.device
     ));
     out.push_str(&format!("evaluation val : {:.6}\n", r.best.value));
+    out.push_str(&format!("search strategy: {}\n", r.strategy));
+    out.push_str(&format!(
+        "pareto front   : {} non-dominated point(s); scalarization-last pick = {} (value {:.6})\n",
+        r.front.len(),
+        r.best.pattern.genome,
+        r.best.value
+    ));
     out.push_str(&format!(
         "trials         : {} verification measurements, {:.1} h simulated search cost\n\n",
         r.trials,
         r.search_cost_s / 3600.0
     ));
     out.push_str(&fig5(&r.baseline, &r.production));
+    out
+}
+
+/// The non-dominated `(time × energy × peak)` front as a table (CLI
+/// `offload --pareto`). The `knee` genome — the configured
+/// scalarization's pick — is marked so operators can see where their
+/// formula landed on the trade-off curve.
+pub fn pareto_table(
+    front: &crate::search::ParetoFront,
+    knee: Option<&crate::search::Genome>,
+) -> String {
+    let mut t = Table::new(&["pattern", "time [s]", "energy [W*s]", "peak [W]", "mean [W]"]);
+    for s in &front.points {
+        let o = &s.objectives;
+        let mut label = s.genome.to_string();
+        if s.genome.ones() == 0 {
+            label.push_str(" (cpu-only)");
+        }
+        if knee.is_some_and(|k| *k == s.genome) {
+            label.push_str(" <- knee");
+        }
+        t.row(&[
+            label,
+            format!("{:.2}", o.time_s),
+            format!("{:.0}", o.energy_ws),
+            format!("{:.1}", o.peak_w),
+            format!("{:.1}", o.mean_w),
+        ]);
+    }
+    let mut out = String::from(
+        "Pareto front (time x energy x peak-W, non-dominated; scalarization applied last)\n\n",
+    );
+    out.push_str(&t.render());
     out
 }
 
@@ -136,6 +176,24 @@ pub fn job_json(r: &JobReport) -> Json {
         ("device", Json::str(r.device.name())),
         ("pattern", Json::str(r.best.pattern.to_string())),
         ("value", Json::num(r.best.value)),
+        ("strategy", Json::str(r.strategy.clone())),
+        (
+            "front",
+            Json::arr(
+                r.front
+                    .points
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("pattern", Json::str(s.genome.to_string())),
+                            ("time_s", Json::num(s.objectives.time_s)),
+                            ("energy_ws", Json::num(s.objectives.energy_ws)),
+                            ("peak_w", Json::num(s.objectives.peak_w)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
         ("baseline", r.baseline.to_json()),
         ("production", r.production.to_json()),
         ("trials", Json::num(r.trials as f64)),
@@ -249,9 +307,22 @@ mod tests {
         assert!(text.contains("Fig. 5"));
         assert!(text.contains("speedup"));
         assert!(text.contains("Per-component energy attribution"));
+        assert!(text.contains("search strategy: narrowing"), "{text}");
+        assert!(text.contains("pareto front"), "{text}");
+        // The standalone front table marks baseline and knee.
+        let knee = r.front.knee(&crate::search::FitnessSpec::paper()).unwrap();
+        let table = pareto_table(&r.front, Some(&knee.genome));
+        assert!(table.contains("(cpu-only)"), "{table}");
+        assert!(table.contains("<- knee"), "{table}");
+        // Under the default spec the knee agrees with the flow's winner.
+        assert_eq!(knee.genome, r.best.pattern.genome);
         let j = job_json(&r);
         let parsed = crate::util::json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(parsed.get("device").unwrap().as_str(), Some("fpga"));
+        assert_eq!(parsed.get("strategy").unwrap().as_str(), Some("narrowing"));
+        let front = parsed.get("front").unwrap().as_arr().unwrap();
+        assert!(!front.is_empty());
+        assert!(front[0].get("peak_w").unwrap().as_f64().is_some());
         // The production measurement carries its energy report.
         let rep = parsed.get("production").unwrap().get("report").unwrap();
         assert_eq!(rep.get("meter").unwrap().as_str(), Some("ipmi"));

@@ -10,10 +10,12 @@
 //! ## Architecture (three layers)
 //!
 //! * **Layer 3 (this crate)** — the coordinator: code analysis
-//!   ([`canalyze`]), evolutionary search ([`ga`]), the three offload flows
-//!   ([`offload`]), the verification environment with device and power
-//!   models ([`devices`], [`power`], [`verifier`]), code emission
-//!   ([`codegen`]) and the end-to-end orchestration ([`coordinator`]).
+//!   ([`canalyze`]), the pluggable multi-objective search layer
+//!   ([`search`]: GA / exhaustive / annealing strategies over a Pareto
+//!   front, scalarization-last), the three offload flows ([`offload`]),
+//!   the verification environment with device and power models
+//!   ([`devices`], [`power`], [`verifier`]), code emission ([`codegen`])
+//!   and the end-to-end orchestration ([`coordinator`]).
 //! * **Layer 2** — a JAX model of the evaluated application (MRI-Q) lowered
 //!   AOT to HLO text (`python/compile/model.py`), executed from Rust via
 //!   PJRT ([`runtime`]). Python never runs on the request path.
@@ -39,10 +41,10 @@ pub mod canalyze;
 pub mod codegen;
 pub mod coordinator;
 pub mod devices;
-pub mod ga;
 pub mod offload;
 pub mod power;
 pub mod runtime;
+pub mod search;
 pub mod util;
 pub mod verifier;
 pub mod workloads;
@@ -52,13 +54,15 @@ pub mod prelude {
     pub use crate::canalyze::{analyze_source, Analysis, LoopId, LoopInfo};
     pub use crate::coordinator::{run_job, Destination, JobConfig, JobReport};
     pub use crate::devices::{Accelerator, DeviceKind, TransferMode};
-    pub use crate::ga::{FitnessSpec, GaConfig, Genome};
     pub use crate::offload::{
         FpgaFlowConfig, GpuFlowConfig, MixedConfig, OffloadPattern, Requirements,
     };
     pub use crate::power::{
         AttributedProfile, ComponentEnergy, EnergyReport, MeterConfig, PowerMeter, PowerProfile,
         PowerTrace,
+    };
+    pub use crate::search::{
+        FitnessSpec, GaConfig, Genome, Objectives, ParetoFront, SearchStrategy, Strategy,
     };
     pub use crate::verifier::{AppModel, Measurement, VerifEnv, VerifEnvConfig};
 }

@@ -14,8 +14,8 @@
 use enadapt::canalyze;
 use enadapt::coordinator::{self, BaselineSource, Destination, JobConfig};
 use enadapt::devices::DeviceKind;
-use enadapt::ga::FitnessSpec;
 use enadapt::runtime;
+use enadapt::search::{FitnessSpec, SearchStrategy};
 use enadapt::util::args::{flag, opt, App, ArgError, CmdSpec, Parsed};
 use enadapt::util::json::Json;
 use enadapt::verifier::{AppModel, VerifEnvConfig};
@@ -42,6 +42,13 @@ fn app() -> App {
                 "operator Watt cap: reject patterns whose measured peak \
                  exceeds this draw (empty = none)",
             ),
+            opt(
+                "strategy",
+                "ga",
+                "pattern-search strategy: ga (§3.1 evolutionary; FPGA uses \
+                 the §3.2 narrowing funnel), exhaustive (whole space, small \
+                 widths), anneal (deterministic hill-climber)",
+            ),
             flag("json", "emit machine-readable JSON on stdout"),
         ]
     };
@@ -61,6 +68,10 @@ fn app() -> App {
                 opts: {
                     let mut o = common();
                     o.push(opt("dest", "fpga", "destination: fpga|gpu|manycore|mixed"));
+                    o.push(flag(
+                        "pareto",
+                        "print the non-dominated (time x energy x peak-W) front",
+                    ));
                     o.push(flag("time-only", "ablation: previous papers' time-only fitness"));
                     o.push(flag("no-transfer-opt", "ablation: disable §3.1 transfer batching"));
                     o.push(opt("generations", "20", "GA generations (gpu/manycore)"));
@@ -199,6 +210,13 @@ fn job_config(p: &Parsed) -> enadapt::Result<JobConfig> {
             enadapt::Error::Config(format!("unknown meter '{name}' (ipmi|rapl|oracle)"))
         })?;
     }
+    if let Some(name) = p.get("strategy").filter(|s| !s.is_empty()) {
+        cfg.ga_flow.strategy = SearchStrategy::from_name(name).ok_or_else(|| {
+            enadapt::Error::Config(format!(
+                "unknown strategy '{name}' (ga|exhaustive|anneal)"
+            ))
+        })?;
+    }
     if p.flag("time-only") {
         cfg.fitness = FitnessSpec::time_only();
         cfg.ga_flow.fitness = FitnessSpec::time_only();
@@ -276,12 +294,24 @@ fn dispatch(p: &Parsed) -> enadapt::Result<()> {
             let cfg = job_config(p)?;
             let report = coordinator::run_job(&name, &src, &cfg)?;
             if p.flag("json") {
+                // The front is part of the JSON report already.
                 println!(
                     "{}",
                     coordinator::report::job_json(&report).to_string_pretty()
                 );
             } else {
                 println!("{}", coordinator::report::render_job(&report));
+                if p.flag("pareto") {
+                    // Mark the front's own knee under the configured
+                    // scalarization — guaranteed to be a front row (the
+                    // flow's winner can, in sensor-noise edge cases, sit a
+                    // float-ulp off the front).
+                    let knee = report.front.knee(&cfg.fitness).map(|s| s.genome.clone());
+                    println!(
+                        "{}",
+                        coordinator::report::pareto_table(&report.front, knee.as_ref())
+                    );
+                }
             }
             Ok(())
         }

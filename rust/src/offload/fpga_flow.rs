@@ -13,12 +13,18 @@
 //! 6. build **combination** patterns from the improving singles and run a
 //!    second measurement round;
 //! 7. pick the short-time / low-power pattern by the evaluation value.
+//!
+//! The funnel is the paper's hand-crafted small-candidate strategy: it
+//! measures a scripted pattern set instead of evolving one, and — like
+//! every search — it now reports the non-dominated
+//! `(time × W·s × peak-W)` front of everything it measured, with the
+//! [`FitnessSpec`] applied scalarization-last for the selection.
 
 use super::gpu_flow::Evaluated;
 use super::pattern::OffloadPattern;
 use crate::canalyze::LoopId;
 use crate::devices::{Accelerator, DeviceKind, TransferMode};
-use crate::ga::FitnessSpec;
+use crate::search::{FitnessSpec, Genome, ParetoFront, Scored};
 use crate::verifier::{AppModel, Measurement, VerifEnv};
 use crate::{Error, Result};
 
@@ -84,6 +90,9 @@ pub struct FpgaFlowOutcome {
     pub second_round: Vec<Evaluated>,
     /// The selected pattern (baseline if nothing improved).
     pub best: Evaluated,
+    /// Non-dominated `(time × W·s × peak-W)` front of everything the
+    /// funnel measured (baseline + both rounds).
+    pub front: ParetoFront,
     /// Simulated search cost charged for compiles + runs, seconds.
     pub search_cost_s: f64,
 }
@@ -220,7 +229,8 @@ pub fn run(app: &AppModel, env: &VerifEnv, cfg: &FpgaFlowConfig) -> Result<FpgaF
         });
     }
 
-    // --- Stage 6: select the short-time, low-power pattern. -------------
+    // --- Stage 6: select the short-time, low-power pattern
+    //     (scalarization-last over the measured set, operator-capped). ---
     let mut best = Evaluated {
         pattern: OffloadPattern::cpu_only(app),
         measurement: baseline.clone(),
@@ -237,6 +247,22 @@ pub fn run(app: &AppModel, env: &VerifEnv, cfg: &FpgaFlowConfig) -> Result<FpgaF
         }
     }
 
+    // The Pareto front of the funnel's search log — what other operators'
+    // scalarizations would pick their own knee from.
+    let mut scored: Vec<Scored> =
+        Vec::with_capacity(1 + first_round.len() + second_round.len());
+    scored.push(Scored {
+        genome: Genome::zeros(app.genome_len()),
+        objectives: baseline.objectives(),
+    });
+    for e in first_round.iter().chain(&second_round) {
+        scored.push(Scored {
+            genome: e.pattern.genome.clone(),
+            objectives: e.measurement.objectives(),
+        });
+    }
+    let front = ParetoFront::of(&scored);
+
     Ok(FpgaFlowOutcome {
         baseline,
         baseline_value,
@@ -244,6 +270,7 @@ pub fn run(app: &AppModel, env: &VerifEnv, cfg: &FpgaFlowConfig) -> Result<FpgaF
         first_round,
         second_round,
         best,
+        front,
         search_cost_s: env.search_cost_s() - cost_before,
     })
 }
@@ -305,6 +332,23 @@ mod tests {
             "cost {} s",
             out.search_cost_s
         );
+    }
+
+    #[test]
+    fn funnel_front_has_baseline_and_winner() {
+        let (app, env) = setup();
+        let out = run(&app, &env, &FpgaFlowConfig::default()).unwrap();
+        // The baseline has the strictly lowest exact peak draw → on the
+        // front; the paper's winner has the lowest energy → on the front.
+        assert!(out.front.points.iter().any(|s| s.genome.ones() == 0));
+        assert!(out.front.contains(&out.best.pattern.genome));
+        for a in &out.front.points {
+            for b in &out.front.points {
+                if a.genome != b.genome {
+                    assert!(!crate::search::dominates(&a.objectives, &b.objectives));
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,19 +1,26 @@
-//! §3.1 — automatic GPU offload of loop statements via evolutionary
-//! computation, with power in the goodness of fit (Fig. 2 flow):
+//! §3.1 — automatic offload of loop statements via a pluggable search
+//! strategy, with power in the goodness of fit (Fig. 2 flow):
 //!
-//! 1. gene per parallelizable loop (1 = GPU, 0 = CPU);
-//! 2. each individual is *measured* in the verification environment
+//! 1. gene per parallelizable loop (1 = device, 0 = CPU);
+//! 2. each proposed pattern is *measured* in the verification environment
 //!    (processing time **and** power consumption);
-//! 3. goodness of fit = `t^(-1/2) · p^(-1/2)` (configurable);
+//! 3. the search strategy (GA by default; exhaustive or annealing via
+//!    [`GpuFlowConfig::strategy`]) is guided by the scalarized evaluation
+//!    value `t^(-1/2) · p^(-1/2)` (configurable) and returns the full
+//!    non-dominated `(time × W·s × peak-W)` front alongside the winner;
 //! 4. transfer-consolidated variants are generated when the §3.1
 //!    batching optimization is enabled.
 //!
-//! The same engine drives the many-core destination (§3.3) — only the
-//! device model differs.
+//! The same flow drives the many-core destination (§3.3) and — under the
+//! non-GA strategies — the FPGA device model directly (the §3.2 narrowing
+//! funnel remains the default FPGA route; see
+//! [`super::fpga_flow`]).
 
 use super::pattern::OffloadPattern;
 use crate::devices::{DeviceKind, TransferMode};
-use crate::ga::{self, FitnessSpec, GaConfig, GaResult, Genome};
+use crate::search::{
+    self, FitnessSpec, GaConfig, Genome, SearchResult, SearchStrategy,
+};
 use crate::verifier::{AppModel, Measurement, VerifEnv};
 use crate::{Error, Result};
 use std::collections::HashMap;
@@ -29,18 +36,22 @@ pub struct Evaluated {
     pub value: f64,
 }
 
-/// GA-flow configuration.
+/// Strategy-flow configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct GpuFlowConfig {
-    /// GA hyper-parameters.
+    /// GA hyper-parameters (used when `strategy` is [`SearchStrategy::Ga`]).
     pub ga: GaConfig,
-    /// Evaluation value (power-aware by default).
+    /// Which search strategy proposes patterns (GA by default — the
+    /// paper's §3.1 flow, bit-identical to the pre-Pareto engine).
+    pub strategy: SearchStrategy,
+    /// Evaluation value (power-aware by default) — the guide
+    /// scalarization during the search and the knee pick afterwards.
     pub fitness: FitnessSpec,
     /// Search seed.
     pub seed: u64,
     /// Apply the §3.1 transfer consolidation.
     pub transfer_opt: bool,
-    /// Measure each generation's distinct patterns concurrently on the
+    /// Measure each proposal batch's distinct patterns concurrently on the
     /// scoped worker pool (models several verification machines; identical
     /// results — trials are deterministic per pattern — at lower wall time
     /// on multi-core coordinators). On by default; the fleet coordinator
@@ -52,6 +63,7 @@ impl Default for GpuFlowConfig {
     fn default() -> Self {
         Self {
             ga: GaConfig::default(),
+            strategy: SearchStrategy::Ga,
             fitness: FitnessSpec::paper(),
             seed: 42,
             transfer_opt: true,
@@ -60,7 +72,7 @@ impl Default for GpuFlowConfig {
     }
 }
 
-/// GA-flow outcome.
+/// Strategy-flow outcome.
 #[derive(Debug, Clone)]
 pub struct GpuFlowOutcome {
     /// Destination device searched.
@@ -71,18 +83,19 @@ pub struct GpuFlowOutcome {
     pub baseline_value: f64,
     /// Best measured pattern (may be the baseline if nothing improved).
     pub best: Evaluated,
-    /// GA internals (convergence history for the Fig. 2 bench).
-    pub ga: GaResult,
-    /// Verification trials actually run (cache misses).
+    /// Search internals: convergence history (the Fig. 2 bench), the
+    /// Pareto front, measured/hit counters and the strategy name.
+    pub search: SearchResult,
+    /// Verification trials actually run (archive misses).
     pub trials: usize,
 }
 
-/// Run the GA search against the GPU.
+/// Run the configured strategy against the GPU.
 pub fn run(app: &AppModel, env: &VerifEnv, cfg: &GpuFlowConfig) -> Result<GpuFlowOutcome> {
     run_on(app, env, cfg, DeviceKind::Gpu)
 }
 
-/// Run the GA search against an arbitrary destination (GPU or many-core).
+/// Run the configured strategy against an arbitrary destination.
 pub fn run_on(
     app: &AppModel,
     env: &VerifEnv,
@@ -107,84 +120,93 @@ pub fn run_on(
     // Measurement log so the best genome's Measurement can be recovered
     // without a re-run.
     let mut log: HashMap<Vec<bool>, Measurement> = HashMap::new();
-    let fitness = cfg.fitness;
     let parallel = cfg.parallel_trials;
-    let ga_result = ga::run_batched(app.genome_len(), &cfg.ga, cfg.seed, |batch: &[Genome]| {
-        let measure_one = |g: &Genome| -> Measurement {
-            if g.ones() == 0 {
-                baseline.clone()
+    let strategy = cfg.strategy.build(&cfg.ga);
+    let result = search::run_strategy(
+        &*strategy,
+        app.genome_len(),
+        cfg.fitness,
+        cfg.seed,
+        |batch: &[Genome]| {
+            let measure_one = |g: &Genome| -> Measurement {
+                if g.ones() == 0 {
+                    baseline.clone()
+                } else {
+                    env.measure(app, &g.bits, device, xfer)
+                }
+            };
+            let measurements: Vec<Measurement> = if parallel && batch.len() > 1 {
+                // The batch's distinct patterns run on "parallel
+                // verification machines": a bounded scoped map over the
+                // machine's cores, so a population of 16 no longer
+                // serializes 16 trials (and no longer spawns 16 unbounded
+                // threads).
+                let workers = std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(2);
+                crate::util::pool::scoped_map(workers, batch, |g| measure_one(g))
             } else {
-                env.measure(app, &g.bits, device, xfer)
-            }
-        };
-        let measurements: Vec<Measurement> = if parallel && batch.len() > 1 {
-            // The generation's distinct patterns run on "parallel
-            // verification machines": a bounded scoped map over the
-            // machine's cores, so a population of 16 no longer serializes
-            // 16 trials (and no longer spawns 16 unbounded threads).
-            let workers = std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(2);
-            crate::util::pool::scoped_map(workers, batch, |g| measure_one(g))
-        } else {
-            batch.iter().map(measure_one).collect()
-        };
-        measurements
-            .into_iter()
-            .zip(batch)
-            .map(|(m, g)| {
-                let v = fitness.value_of(&m);
-                log.insert(g.bits.clone(), m);
-                v
-            })
-            .collect()
-    });
+                batch.iter().map(measure_one).collect()
+            };
+            measurements
+                .into_iter()
+                .zip(batch)
+                .map(|(m, g)| {
+                    let o = m.objectives();
+                    log.insert(g.bits.clone(), m);
+                    o
+                })
+                .collect()
+        },
+    )?;
 
-    let best_bits = ga_result.best.bits.clone();
     let best_measure = log
-        .get(&best_bits)
+        .get(&result.best.bits)
         .cloned()
         .expect("best genome was measured");
     let mut best = Evaluated {
-        pattern: OffloadPattern::from_genome(app, ga_result.best.clone()),
-        value: ga_result.best_value,
+        pattern: OffloadPattern::from_genome(app, result.best.clone()),
+        value: result.best_value,
         measurement: best_measure,
     };
-    // Hard Watt-cap guarantee: value_of already steers the GA away from
-    // cap violators (they score like timeouts), but if every measured
-    // pattern violated the cap the GA's "best" still would. Re-select the
-    // best cap-respecting measurement, falling back to the CPU-only
-    // baseline (the degenerate no-offload pattern) when nothing fits.
+    // Hard Watt-cap guarantee: the scalarization already steers the search
+    // away from cap violators (they score like timeouts), but if every
+    // measured pattern violated the cap the strategy's "best" still would.
+    // Re-select the best cap-respecting measurement, falling back to the
+    // CPU-only baseline (the degenerate no-offload pattern) when nothing
+    // fits.
     if cfg.fitness.exceeds_cap(best.measurement.report.peak_w) {
-        best = log
+        // Select over borrowed log entries — the exhaustive strategy can
+        // leave 2^16 measurements here, so clone only the single winner.
+        let winner = log
             .iter()
             .filter(|(_, m)| !cfg.fitness.exceeds_cap(m.report.peak_w))
-            .map(|(bits, m)| Evaluated {
-                pattern: OffloadPattern::from_genome(app, Genome { bits: bits.clone() }),
-                value: cfg.fitness.value_of(m),
-                measurement: m.clone(),
-            })
-            .max_by(|a, b| {
+            .map(|(bits, m)| (bits, m, cfg.fitness.value_of(m)))
+            .max_by(|(abits, _, av), (bbits, _, bv)| {
                 // Deterministic despite HashMap iteration order: break
                 // exact value ties by genome.
-                a.value
-                    .partial_cmp(&b.value)
-                    .unwrap()
-                    .then_with(|| a.pattern.genome.bits.cmp(&b.pattern.genome.bits))
-            })
-            .unwrap_or_else(|| Evaluated {
+                av.total_cmp(bv).then_with(|| abits.cmp(bbits))
+            });
+        best = match winner {
+            Some((bits, m, value)) => Evaluated {
+                pattern: OffloadPattern::from_genome(app, Genome { bits: bits.clone() }),
+                value,
+                measurement: m.clone(),
+            },
+            None => Evaluated {
                 pattern: OffloadPattern::cpu_only(app),
                 value: baseline_value,
                 measurement: baseline.clone(),
-            });
+            },
+        };
     }
     Ok(GpuFlowOutcome {
         device,
         baseline,
         baseline_value,
         best,
-        trials: ga_result.measured,
-        ga: ga_result,
+        trials: result.measured,
+        search: result,
     })
 }
 
@@ -192,6 +214,7 @@ pub fn run_on(
 mod tests {
     use super::*;
     use crate::canalyze::analyze_source;
+    use crate::search::dominates;
     use crate::verifier::VerifEnvConfig;
     use crate::workloads;
 
@@ -223,6 +246,7 @@ mod tests {
         // The winning pattern must offload the dominant computeQ nest.
         assert!(out.best.measurement.time_s < out.baseline.time_s / 2.0);
         assert!(!out.best.pattern.offloaded_ids().is_empty());
+        assert_eq!(out.search.strategy, "ga");
     }
 
     #[test]
@@ -238,7 +262,7 @@ mod tests {
             ..Default::default()
         };
         let out = run(&app, &env, &cfg).unwrap();
-        for w in out.ga.history.windows(2) {
+        for w in out.search.history.windows(2) {
             assert!(w[1].best >= w[0].best);
         }
         assert!(out.trials > 0);
@@ -269,6 +293,47 @@ mod tests {
     }
 
     #[test]
+    fn search_front_is_sound_and_contains_the_baseline() {
+        let (app, env) = setup();
+        let cfg = GpuFlowConfig {
+            ga: GaConfig {
+                population: 10,
+                generations: 8,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let out = run(&app, &env, &cfg).unwrap();
+        let front = &out.search.front;
+        assert!(!front.is_empty());
+        // The all-CPU baseline has the strictly lowest exact peak draw, so
+        // it is always non-dominated.
+        assert!(
+            front.points.iter().any(|s| s.genome.ones() == 0),
+            "baseline missing from the front"
+        );
+        // Pairwise non-dominated.
+        for a in &front.points {
+            for b in &front.points {
+                if a.genome != b.genome {
+                    assert!(!dominates(&a.objectives, &b.objectives));
+                }
+            }
+        }
+        // Scalarization-last: the knee under the flow's own guide matches
+        // the selected winner's value (up to float noise — the winner may
+        // be represented on the front by an equal-valued dominator).
+        let knee = front.knee(&cfg.fitness).expect("non-empty front");
+        let kv = cfg.fitness.scalarize(&knee.objectives);
+        assert!(
+            (kv - out.best.value).abs() <= 1e-9 * out.best.value.abs().max(1e-12),
+            "knee {} vs best {}",
+            kv,
+            out.best.value
+        );
+    }
+
+    #[test]
     fn watt_capped_search_never_selects_a_violating_pattern() {
         let (app, env) = setup();
         let ga = GaConfig {
@@ -289,7 +354,7 @@ mod tests {
         // CPU-only baseline at ≈123 W peak).
         let capped_cfg = GpuFlowConfig {
             ga,
-            fitness: crate::ga::FitnessSpec::paper().with_watt_cap(150.0),
+            fitness: FitnessSpec::paper().with_watt_cap(150.0),
             ..Default::default()
         };
         let env2 = VerifEnvConfig::r740_pac().build(99);
@@ -300,6 +365,21 @@ mod tests {
             capped.best.measurement.report.peak_w
         );
         assert!(capped.best.value <= unc.best.value);
+    }
+
+    #[test]
+    fn anneal_strategy_improves_on_the_baseline() {
+        let (app, env) = setup();
+        let cfg = GpuFlowConfig {
+            strategy: SearchStrategy::Anneal(crate::search::AnnealConfig::default()),
+            parallel_trials: false,
+            ..Default::default()
+        };
+        let out = run(&app, &env, &cfg).unwrap();
+        assert_eq!(out.search.strategy, "anneal");
+        // The annealer starts at the baseline, so it can never do worse.
+        assert!(out.best.value >= out.baseline_value);
+        assert!(out.trials > 0 && out.trials <= 330);
     }
 
     #[test]

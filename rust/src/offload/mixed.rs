@@ -13,7 +13,7 @@ use super::fpga_flow::{self, FpgaFlowConfig};
 use super::gpu_flow::{self, Evaluated, GpuFlowConfig};
 use super::requirements::Requirements;
 use crate::devices::DeviceKind;
-use crate::ga::FitnessSpec;
+use crate::search::{FitnessSpec, ParetoFront};
 use crate::verifier::{AppModel, Measurement, VerifEnv};
 use crate::Result;
 
@@ -48,6 +48,8 @@ pub struct DestinationResult {
     pub device: DeviceKind,
     /// Best pattern found there.
     pub best: Evaluated,
+    /// Non-dominated front of everything measured on this destination.
+    pub front: ParetoFront,
     /// Verification trials run for this destination.
     pub trials: u64,
     /// Search cost charged for this destination, seconds.
@@ -84,19 +86,24 @@ pub fn run(app: &AppModel, env: &VerifEnv, cfg: &MixedConfig) -> Result<MixedOut
     for (i, &dest) in order.iter().enumerate() {
         let trials_before = env.trials_run();
         let cost_before = env.search_cost_s();
-        let best = match dest {
-            DeviceKind::Fpga => {
+        // The FPGA keeps the paper's §3.2 narrowing funnel under the
+        // default GA strategy; a non-GA strategy request (exhaustive /
+        // anneal) drives the generic strategy flow against the FPGA
+        // device model instead.
+        let (best, front) = match dest {
+            DeviceKind::Fpga if cfg.ga_flow.strategy.uses_fpga_funnel() => {
                 let out = fpga_flow::run(app, env, &cfg.fpga_flow)?;
-                out.best
+                (out.best, out.front)
             }
             _ => {
                 let out = gpu_flow::run_on(app, env, &cfg.ga_flow, dest)?;
-                out.best
+                (out.best, out.search.front)
             }
         };
         let result = DestinationResult {
             device: dest,
             best,
+            front,
             trials: env.trials_run() - trials_before,
             search_cost_s: env.search_cost_s() - cost_before,
         };
@@ -112,10 +119,11 @@ pub fn run(app: &AppModel, env: &VerifEnv, cfg: &MixedConfig) -> Result<MixedOut
     }
 
     // Select by the evaluation value across verified destinations (the
-    // baseline wins only if nothing improved on it).
+    // baseline wins only if nothing improved on it). `total_cmp` keeps
+    // the selection deterministic even for degenerate (NaN) values.
     let chosen = tried
         .iter()
-        .max_by(|a, b| a.best.value.partial_cmp(&b.best.value).unwrap())
+        .max_by(|a, b| a.best.value.total_cmp(&b.best.value))
         .expect("at least one destination verified")
         .clone();
 
@@ -133,7 +141,7 @@ pub fn run(app: &AppModel, env: &VerifEnv, cfg: &MixedConfig) -> Result<MixedOut
 mod tests {
     use super::*;
     use crate::canalyze::analyze_source;
-    use crate::ga::GaConfig;
+    use crate::search::GaConfig;
     use crate::verifier::VerifEnvConfig;
     use crate::workloads;
 

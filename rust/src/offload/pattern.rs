@@ -1,8 +1,8 @@
-//! Offload patterns: a GA genome bound to the candidate-loop list of a
-//! concrete application, resolvable to offload regions and code.
+//! Offload patterns: a search genome bound to the candidate-loop list of
+//! a concrete application, resolvable to offload regions and code.
 
 use crate::canalyze::LoopId;
-use crate::ga::Genome;
+use crate::search::Genome;
 use crate::verifier::AppModel;
 
 /// A genome bound to an application's candidate loops.

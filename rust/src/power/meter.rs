@@ -254,8 +254,15 @@ pub struct EnergyReport {
     pub energy_ws: f64,
     /// Mean whole-server power, Watts.
     pub mean_w: f64,
-    /// Peak whole-server power, Watts (drives the operator Watt cap).
+    /// Peak whole-server power, Watts, as the sensor saw it (drives the
+    /// operator Watt cap — the operator only sees the sensor).
     pub peak_w: f64,
+    /// Exact peak whole-server draw of the underlying profile, Watts —
+    /// noise- and sampling-free. The search layer's Pareto peak axis
+    /// ([`crate::search::Objectives`]): dominance must not wobble with
+    /// sensor luck, or the all-CPU baseline (the lowest-draw run) would be
+    /// knocked off fronts by lucky samples of busier patterns.
+    pub profile_peak_w: f64,
     /// Per-component attribution (sums to `energy_ws` within 1e-6).
     pub components: ComponentEnergy,
 }
@@ -272,6 +279,7 @@ impl EnergyReport {
             ("energy_ws", Json::num(self.energy_ws)),
             ("mean_w", Json::num(self.mean_w)),
             ("peak_w", Json::num(self.peak_w)),
+            ("profile_peak_w", Json::num(self.profile_peak_w)),
             (
                 "components_ws",
                 Json::obj(vec![
@@ -285,15 +293,22 @@ impl EnergyReport {
     }
 
     /// Reconstruct a report serialized by [`EnergyReport::to_json`].
+    /// Tolerates reports persisted before `profile_peak_w` existed by
+    /// falling back to the sensor peak.
     pub fn from_json(j: &crate::util::json::Json) -> Option<Self> {
         let c = j.get("components_ws")?;
+        let peak_w = j.get("peak_w")?.as_f64()?;
         Some(Self {
             meter: j.get("meter")?.as_str()?.to_string(),
             sample_hz: j.get("sample_hz")?.as_f64()?,
             time_s: j.get("time_s")?.as_f64()?,
             energy_ws: j.get("energy_ws")?.as_f64()?,
             mean_w: j.get("mean_w")?.as_f64()?,
-            peak_w: j.get("peak_w")?.as_f64()?,
+            peak_w,
+            profile_peak_w: j
+                .get("profile_peak_w")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(peak_w),
             components: ComponentEnergy {
                 idle_ws: c.get("idle")?.as_f64()?,
                 host_cpu_ws: c.get("host_cpu")?.as_f64()?,
@@ -325,6 +340,7 @@ impl EnergyReport {
             energy_ws,
             mean_w,
             peak_w,
+            profile_peak_w: peak_w,
             components: ComponentEnergy {
                 idle_ws: 0.0,
                 host_cpu_ws: energy_ws,
@@ -367,6 +383,7 @@ fn report_from_trace(
     meter: &'static str,
     sample_hz: f64,
     trace: &PowerTrace,
+    profile_peak_w: f64,
     components: ComponentEnergy,
 ) -> EnergyReport {
     EnergyReport {
@@ -376,6 +393,7 @@ fn report_from_trace(
         energy_ws: trace.energy_ws(),
         mean_w: trace.mean_w(),
         peak_w: trace.peak_w(),
+        profile_peak_w,
         components,
     }
 }
@@ -419,7 +437,8 @@ impl PowerMeter for IpmiMeter {
         } else {
             ComponentEnergy::default()
         };
-        let report = report_from_trace("ipmi", self.sample_hz(), &trace, components);
+        let report =
+            report_from_trace("ipmi", self.sample_hz(), &trace, profile.peak_w(), components);
         Metered { trace, report }
     }
 }
@@ -520,7 +539,8 @@ impl PowerMeter for RaplMeter {
             accelerator_ws: energy_of(&channel_traces[2]),
             transfer_ws: energy_of(&channel_traces[3]),
         };
-        let report = report_from_trace("rapl", self.sample_hz(), &trace, components);
+        let report =
+            report_from_trace("rapl", self.sample_hz(), &trace, profile.peak_w(), components);
         Metered { trace, report }
     }
 }
@@ -561,6 +581,7 @@ impl PowerMeter for OracleMeter {
             energy_ws: energy,
             mean_w: if dur > 0.0 { energy / dur } else { 0.0 },
             peak_w: profile.peak_w(),
+            profile_peak_w: profile.peak_w(),
             components: profile.component_energy(),
         };
         Metered { trace, report }
@@ -681,6 +702,7 @@ mod tests {
         assert_eq!(m.report.energy_ws, p.flatten().energy_ws());
         assert_eq!(m.report.time_s, p.duration_s());
         assert_eq!(m.report.peak_w, p.peak_w());
+        assert_eq!(m.report.profile_peak_w, p.peak_w());
         // The step trace re-integrates exactly too.
         assert!((m.trace.energy_ws() - m.report.energy_ws).abs() < 1e-9);
         // Attribution sums to the total.
@@ -703,6 +725,32 @@ mod tests {
         );
         assert_eq!(m.report.meter, "ipmi");
         assert!(m.report.peak_w > 0.0);
+        // The exact profile peak is carried regardless of what the 1 Hz
+        // sampler happened to catch.
+        assert_eq!(m.report.profile_peak_w, p.peak_w());
+    }
+
+    #[test]
+    fn report_json_round_trips_and_tolerates_missing_profile_peak() {
+        let p = fig5_like_profile();
+        let mut rng = Pcg32::seed_from_u64(2);
+        let report = IpmiMeter::new(IpmiConfig::default())
+            .measure(&p, &mut rng)
+            .report;
+        let text = report.to_json().to_string_compact();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(EnergyReport::from_json(&parsed).unwrap(), report);
+        // A report persisted before `profile_peak_w` existed falls back to
+        // the sensor peak.
+        let old = r#"{
+            "meter": "ipmi", "sample_hz": 1.0, "time_s": 2.0,
+            "energy_ws": 222.0, "mean_w": 111.0, "peak_w": 121.0,
+            "components_ws": {"idle": 210.0, "host_cpu": 8.0,
+                              "accel": 3.0, "transfer": 1.0}
+        }"#;
+        let parsed = crate::util::json::parse(old).unwrap();
+        let r = EnergyReport::from_json(&parsed).unwrap();
+        assert_eq!(r.profile_peak_w, 121.0);
     }
 
     #[test]

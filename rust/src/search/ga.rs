@@ -1,0 +1,286 @@
+//! The genetic-algorithm strategy of the paper's §3.1 GPU flow: genomes
+//! are offload bit-patterns, the guide value is the measured evaluation
+//! value `t^(-1/2)·p^(-1/2)`, and evolution runs generation by generation
+//! with elitism, selection, crossover and mutation. Moved — not rewritten
+//! — from the old `ga::engine`: same operators, same RNG stream, same
+//! measurement order, so a GA search is bit-identical to the pre-Pareto
+//! engine at the same seed. Every distinct pattern is measured at most
+//! once ([`super::Archive`]).
+
+use super::crossover::Crossover;
+use super::genome::Genome;
+use super::mutate::mutate;
+use super::select::Selection;
+use super::strategy::{SearchCtx, Strategy};
+use crate::util::prng::Pcg32;
+use crate::Result;
+
+/// GA hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct GaConfig {
+    /// Population size.
+    pub population: usize,
+    /// Generations to run.
+    pub generations: usize,
+    /// Probability a parent pair is crossed (else cloned).
+    pub crossover_rate: f64,
+    /// Per-bit mutation probability.
+    pub mutation_rate: f64,
+    /// Individuals copied unchanged to the next generation.
+    pub elite: usize,
+    /// Selection operator.
+    pub selection: Selection,
+    /// Crossover operator.
+    pub crossover: Crossover,
+    /// Initial per-bit 1-probability (sparse starts help: most loops
+    /// should stay on the CPU).
+    pub init_ones_p: f64,
+}
+
+impl Default for GaConfig {
+    fn default() -> Self {
+        Self {
+            population: 16,
+            generations: 20,
+            crossover_rate: 0.9,
+            mutation_rate: 0.05,
+            elite: 2,
+            selection: Selection::Roulette,
+            crossover: Crossover::TwoPoint,
+            init_ones_p: 0.25,
+        }
+    }
+}
+
+/// The §3.1 GA as a pluggable [`Strategy`].
+#[derive(Debug, Clone, Copy)]
+pub struct GaStrategy {
+    /// Hyper-parameters.
+    pub cfg: GaConfig,
+}
+
+impl Strategy for GaStrategy {
+    fn name(&self) -> &'static str {
+        "ga"
+    }
+
+    fn search(&self, ctx: &mut SearchCtx<'_>) -> Result<()> {
+        let cfg = &self.cfg;
+        let len = ctx.genome_len();
+        assert!(cfg.population >= 2, "population too small");
+        let mut rng = Pcg32::seed_from_u64(ctx.seed());
+
+        // Initial population: always include the all-CPU pattern (the safe
+        // baseline the paper compares against) plus random sparse patterns.
+        let mut pop: Vec<Genome> = Vec::with_capacity(cfg.population);
+        pop.push(Genome::zeros(len));
+        while pop.len() < cfg.population {
+            pop.push(Genome::random(len, cfg.init_ones_p, &mut rng));
+        }
+
+        let mut best_value = f64::NEG_INFINITY;
+        for generation in 0..cfg.generations {
+            // Batch-measure the generation's distinct new genomes, read
+            // everything through the archive (measure-once rule).
+            let fitness = ctx.values(&pop);
+
+            // Track the global best (strict improvement: a NaN fitness can
+            // never become the best).
+            for &f in &fitness {
+                if f > best_value {
+                    best_value = f;
+                }
+            }
+            let mean = fitness.iter().sum::<f64>() / fitness.len() as f64;
+            ctx.record(best_value, mean);
+
+            if generation + 1 == cfg.generations {
+                break;
+            }
+
+            // Elitism: carry the top `elite` individuals. `total_cmp` is a
+            // total order, so a NaN fitness (e.g. a failed trial scoring
+            // NaN) sorts deterministically instead of panicking the old
+            // `partial_cmp(..).unwrap()`.
+            let mut order: Vec<usize> = (0..pop.len()).collect();
+            order.sort_by(|&a, &b| fitness[b].total_cmp(&fitness[a]));
+            let mut next: Vec<Genome> = order
+                .iter()
+                .take(cfg.elite.min(pop.len()))
+                .map(|&i| pop[i].clone())
+                .collect();
+
+            // Offspring.
+            while next.len() < cfg.population {
+                let pa = cfg.selection.pick(&fitness, &mut rng);
+                let pb = cfg.selection.pick(&fitness, &mut rng);
+                let (mut c1, mut c2) = if rng.chance(cfg.crossover_rate) {
+                    cfg.crossover.apply(&pop[pa], &pop[pb], &mut rng)
+                } else {
+                    (pop[pa].clone(), pop[pb].clone())
+                };
+                mutate(&mut c1, cfg.mutation_rate, &mut rng);
+                mutate(&mut c2, cfg.mutation_rate, &mut rng);
+                next.push(c1);
+                if next.len() < cfg.population {
+                    next.push(c2);
+                }
+            }
+            pop = next;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::objective::{FitnessSpec, Objectives};
+    use crate::search::strategy::{run_strategy, run_synthetic, SearchResult};
+
+    fn ga(cfg: GaConfig) -> GaStrategy {
+        GaStrategy { cfg }
+    }
+
+    fn run_scalar(
+        len: usize,
+        cfg: &GaConfig,
+        seed: u64,
+        score: impl FnMut(&Genome) -> f64,
+    ) -> SearchResult {
+        run_synthetic(&ga(*cfg), len, seed, score).unwrap()
+    }
+
+    /// OneMax: score = number of ones — the GA must find all-ones.
+    #[test]
+    fn solves_onemax() {
+        let cfg = GaConfig {
+            population: 24,
+            generations: 40,
+            ..Default::default()
+        };
+        let r = run_scalar(16, &cfg, 42, |g| g.ones() as f64);
+        assert_eq!(r.best.ones(), 16, "best {}", r.best);
+        assert_eq!(r.best_objectives, Objectives::synthetic(16.0));
+    }
+
+    /// Deceptive target: only one specific pattern is good.
+    #[test]
+    fn finds_needle_with_enough_budget() {
+        let target = Genome {
+            bits: vec![true, false, true, true, false, false, true, false],
+        };
+        let t = target.clone();
+        let cfg = GaConfig {
+            population: 30,
+            generations: 60,
+            mutation_rate: 0.08,
+            ..Default::default()
+        };
+        let r = run_scalar(8, &cfg, 7, move |g| {
+            let d = g.distance(&t) as f64;
+            (8.0 - d) * (8.0 - d)
+        });
+        assert_eq!(r.best, target);
+    }
+
+    #[test]
+    fn best_is_monotone_nondecreasing() {
+        let cfg = GaConfig::default();
+        let r = run_scalar(12, &cfg, 3, |g| g.ones() as f64 * 0.1);
+        for w in r.history.windows(2) {
+            assert!(w[1].best >= w[0].best);
+        }
+        assert_eq!(r.history.len(), cfg.generations);
+    }
+
+    #[test]
+    fn archive_limits_measurements() {
+        let cfg = GaConfig {
+            population: 16,
+            generations: 30,
+            ..Default::default()
+        };
+        let mut calls = 0usize;
+        let r = run_scalar(6, &cfg, 11, |g| {
+            calls += 1;
+            g.ones() as f64
+        });
+        // 6-bit space has 64 patterns; eval calls can never exceed that.
+        assert!(calls <= 64, "calls {calls}");
+        assert_eq!(calls, r.measured);
+        assert!(r.cache_hits > 0, "revisits must hit the archive");
+    }
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let cfg = GaConfig::default();
+        let a = run_scalar(10, &cfg, 5, |g| g.ones() as f64);
+        let b = run_scalar(10, &cfg, 5, |g| g.ones() as f64);
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.measured, b.measured);
+    }
+
+    #[test]
+    fn all_cpu_baseline_always_measured() {
+        let cfg = GaConfig {
+            population: 4,
+            generations: 2,
+            ..Default::default()
+        };
+        let mut saw_zero = false;
+        run_scalar(5, &cfg, 9, |g| {
+            if g.ones() == 0 {
+                saw_zero = true;
+            }
+            1.0
+        });
+        assert!(saw_zero);
+    }
+
+    /// Regression (NaN-unsafe elitism): the old engine sorted with
+    /// `partial_cmp(..).unwrap()` and panicked the moment any fitness was
+    /// NaN. The `total_cmp` sort must survive a NaN-producing eval, and a
+    /// NaN pattern must never be selected as the best.
+    #[test]
+    fn nan_fitness_does_not_panic_and_is_never_best() {
+        let cfg = GaConfig {
+            population: 14,
+            generations: 18,
+            init_ones_p: 0.5,
+            mutation_rate: 0.1,
+            ..Default::default()
+        };
+        let nan = Objectives {
+            time_s: f64::NAN,
+            energy_ws: f64::NAN,
+            peak_w: f64::NAN,
+            measured_peak_w: f64::NAN,
+            mean_w: f64::NAN,
+            timed_out: false,
+        };
+        let r = run_strategy(&ga(cfg), 6, FitnessSpec::paper(), 11, |batch| {
+            batch
+                .iter()
+                .map(|g| {
+                    if g.ones() == 2 {
+                        nan
+                    } else {
+                        Objectives::synthetic(g.ones() as f64)
+                    }
+                })
+                .collect()
+        })
+        .unwrap();
+        // The all-CPU baseline (finite, value 1.0) is always measured, so
+        // the best is finite and never a NaN-ring pattern.
+        assert!(r.best_value.is_finite(), "best {}", r.best_value);
+        assert!(r.best_value >= 1.0);
+        assert_ne!(r.best.ones(), 2, "NaN pattern selected as best");
+        // The front only carries finite points.
+        for s in &r.front.points {
+            assert!(s.objectives.is_finite());
+            assert_ne!(s.genome.ones(), 2);
+        }
+    }
+}

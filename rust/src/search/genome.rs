@@ -1,6 +1,7 @@
-//! GA genome: one bit per parallelizable loop statement — 1 = offload to
-//! the device, 0 = keep on the CPU (§3.1: "it sets 1 for GPU execution and
-//! 0 for CPU execution; the value is set and geneticized").
+//! Search genome: one bit per parallelizable loop statement — 1 = offload
+//! to the device, 0 = keep on the CPU (§3.1: "it sets 1 for GPU execution
+//! and 0 for CPU execution; the value is set and geneticized"). Shared by
+//! every [`super::Strategy`], not just the GA.
 
 use crate::util::prng::Pcg32;
 
@@ -24,6 +25,17 @@ impl Genome {
         let mut g = Self::zeros(len);
         g.bits[idx] = true;
         g
+    }
+
+    /// Pattern number `idx` of the `2^len` space: bit `i` of `idx` maps to
+    /// gene `i`, so index 0 is the all-CPU baseline (the first pattern the
+    /// exhaustive strategy measures, matching the convention that every
+    /// search measures the baseline first).
+    pub fn from_index(len: usize, idx: usize) -> Self {
+        assert!(len < usize::BITS as usize, "space too wide to index");
+        Self {
+            bits: (0..len).map(|i| (idx >> i) & 1 == 1).collect(),
+        }
     }
 
     /// Uniform random pattern with per-bit probability `p`.
@@ -77,6 +89,21 @@ mod tests {
         assert_eq!(Genome::zeros(4).to_string(), "0000");
         assert_eq!(Genome::single(4, 2).to_string(), "0010");
         assert_eq!(Genome::single(4, 2).ones(), 1);
+    }
+
+    #[test]
+    fn from_index_enumerates_the_space() {
+        assert_eq!(Genome::from_index(4, 0), Genome::zeros(4));
+        assert_eq!(Genome::from_index(4, 1).to_string(), "1000");
+        assert_eq!(Genome::from_index(4, 0b1010).to_string(), "0101");
+        assert_eq!(Genome::from_index(4, 15).ones(), 4);
+        // Distinct indices give distinct genomes.
+        let all: Vec<Genome> = (0..16).map(|i| Genome::from_index(4, i)).collect();
+        for i in 0..16 {
+            for j in (i + 1)..16 {
+                assert_ne!(all[i], all[j]);
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,54 @@
+//! The pluggable multi-objective search layer (successor of the old
+//! single-strategy `ga` module).
+//!
+//! The paper's evaluation value `t^(-1/2)·p^(-1/2)` (§3.1) is, per §3.3,
+//! only one operator's *scalarization* — "the formula must be set
+//! differently per business operator". This layer therefore separates the
+//! three concerns the old GA engine fused:
+//!
+//! * **Objectives** ([`objective`]) — a measured trial is a *vector*
+//!   `(time, energy, peak draw)`; [`FitnessSpec`] is one scalarization,
+//!   applied *after* the search picks up a non-dominated front
+//!   (scalarization-last).
+//! * **Strategies** ([`strategy`]) — a [`Strategy`] proposes pattern
+//!   batches and observes archived objective vectors. Three
+//!   implementations: the §3.1 genetic algorithm ([`ga`], moved — not
+//!   rewritten — from the old engine, bit-identical per seed), an
+//!   [`Exhaustive`] sweep for small spaces (the FPGA flow's
+//!   few-candidates reality, Yamato 2020) and a deterministic
+//!   [`Annealing`] hill-climber as a cheap ablation arm.
+//! * **Pareto dominance** ([`pareto`]) — every search returns the
+//!   non-dominated `(time × W·s × peak-W)` front alongside the
+//!   guide-scalarized best, so different operators can pick different
+//!   knee points from one search.
+//!
+//! Invariants carried over from the old engine: each distinct pattern is
+//! measured at most once per search ([`Archive`]), evaluation batches
+//! receive only first-occurrence novel genomes in request order, and every
+//! strategy is deterministic per seed — so parallel trial evaluation and
+//! cross-job measurement caching stay bit-reproducible (DESIGN.md §4, §9).
+
+pub mod anneal;
+pub mod crossover;
+pub mod exhaustive;
+pub mod ga;
+pub mod genome;
+pub mod mutate;
+pub mod objective;
+pub mod pareto;
+pub mod select;
+pub mod strategy;
+
+pub use anneal::{AnnealConfig, Annealing};
+pub use crossover::Crossover;
+pub use exhaustive::Exhaustive;
+pub use ga::{GaConfig, GaStrategy};
+pub use genome::Genome;
+pub use mutate::mutate;
+pub use objective::{FitnessSpec, Objectives, Scored};
+pub use pareto::{dominates, ParetoFront};
+pub use select::Selection;
+pub use strategy::{
+    run_strategy, run_synthetic, Archive, GenStats, SearchCtx, SearchResult, SearchStrategy,
+    Strategy,
+};

@@ -1,0 +1,188 @@
+//! Pareto dominance over [`Objectives`] and non-dominated front
+//! construction.
+//!
+//! All three axes — processing time, consumed W·s, exact peak draw — are
+//! minimized. The front is what a search hands back before any operator
+//! scalarization is applied: different [`FitnessSpec`]s pick different
+//! knee points from the *same* measured front, so changing the operator's
+//! formula (§3.3) never requires re-measuring anything.
+
+use super::genome::Genome;
+use super::objective::{FitnessSpec, Objectives, Scored};
+
+/// Does `a` Pareto-dominate `b`? True iff `a` is no worse on every axis
+/// (time, energy, peak) and strictly better on at least one. Any
+/// comparison against a NaN axis is false, so NaN points neither dominate
+/// nor are dominated (fronts exclude them explicitly).
+pub fn dominates(a: &Objectives, b: &Objectives) -> bool {
+    let no_worse =
+        a.time_s <= b.time_s && a.energy_ws <= b.energy_ws && a.peak_w <= b.peak_w;
+    let better =
+        a.time_s < b.time_s || a.energy_ws < b.energy_ws || a.peak_w < b.peak_w;
+    no_worse && better
+}
+
+/// The non-dominated subset of a search's measured points.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ParetoFront {
+    /// Front members, sorted by ascending time (ties: energy, then peak,
+    /// then genome bits) — the presentation order reports use.
+    pub points: Vec<Scored>,
+}
+
+impl ParetoFront {
+    /// Build the front of `points`: drop non-finite entries, sort, and
+    /// keep the non-dominated ones. With the sort order above, a later
+    /// point can never dominate an earlier one, so a single append-only
+    /// sweep against the growing front suffices (fast even for the 2^16
+    /// exhaustive archive — front sizes stay small).
+    pub fn of(points: &[Scored]) -> Self {
+        let mut pts: Vec<Scored> = points
+            .iter()
+            .filter(|s| s.objectives.is_finite())
+            .cloned()
+            .collect();
+        pts.sort_by(|x, y| {
+            x.objectives
+                .time_s
+                .total_cmp(&y.objectives.time_s)
+                .then_with(|| x.objectives.energy_ws.total_cmp(&y.objectives.energy_ws))
+                .then_with(|| x.objectives.peak_w.total_cmp(&y.objectives.peak_w))
+                .then_with(|| x.genome.bits.cmp(&y.genome.bits))
+        });
+        let mut front: Vec<Scored> = Vec::new();
+        for p in pts {
+            if !front.iter().any(|f| dominates(&f.objectives, &p.objectives)) {
+                front.push(p);
+            }
+        }
+        Self { points: front }
+    }
+
+    /// Number of non-dominated points.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// Is the front empty?
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Is a pattern on the front?
+    pub fn contains(&self, genome: &Genome) -> bool {
+        self.points.iter().any(|s| &s.genome == genome)
+    }
+
+    /// The operator's knee point: the front member with the highest
+    /// scalarized value (strict improvement — the first of equal-valued
+    /// points in front order wins, deterministically).
+    pub fn knee(&self, spec: &FitnessSpec) -> Option<&Scored> {
+        let mut best: Option<(&Scored, f64)> = None;
+        for s in &self.points {
+            let v = spec.scalarize(&s.objectives);
+            match best {
+                None => best = Some((s, v)),
+                // Strict improvement only — a NaN value never wins.
+                Some((_, bv)) if v > bv => best = Some((s, v)),
+                _ => {}
+            }
+        }
+        best.map(|(s, _)| s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(bits: &[bool], t: f64, e: f64, p: f64) -> Scored {
+        Scored {
+            genome: Genome {
+                bits: bits.to_vec(),
+            },
+            objectives: Objectives {
+                time_s: t,
+                energy_ws: e,
+                peak_w: p,
+                measured_peak_w: p,
+                mean_w: e / t,
+                timed_out: false,
+            },
+        }
+    }
+
+    #[test]
+    fn dominance_basics() {
+        let a = point(&[true], 1.0, 100.0, 120.0);
+        let b = point(&[false], 2.0, 200.0, 130.0);
+        let c = point(&[true, true], 0.5, 300.0, 120.0);
+        assert!(dominates(&a.objectives, &b.objectives));
+        assert!(!dominates(&b.objectives, &a.objectives));
+        // Trade-off points do not dominate each other.
+        assert!(!dominates(&a.objectives, &c.objectives));
+        assert!(!dominates(&c.objectives, &a.objectives));
+        // A point never dominates itself (no strict improvement).
+        assert!(!dominates(&a.objectives, &a.objectives));
+    }
+
+    #[test]
+    fn front_keeps_each_axis_minimum_and_drops_dominated() {
+        let pts = vec![
+            point(&[false, false], 14.0, 1690.0, 121.0), // baseline: min peak
+            point(&[true, false], 2.0, 220.0, 129.0),    // min energy
+            point(&[false, true], 1.5, 400.0, 233.0),    // min time
+            point(&[true, true], 3.0, 500.0, 233.0),     // dominated by both offloads
+        ];
+        let front = ParetoFront::of(&pts);
+        assert_eq!(front.len(), 3);
+        assert!(front.contains(&pts[0].genome), "min-peak baseline survives");
+        assert!(front.contains(&pts[1].genome), "min-energy point survives");
+        assert!(front.contains(&pts[2].genome), "min-time point survives");
+        assert!(!front.contains(&pts[3].genome), "dominated point dropped");
+        // Pairwise non-dominated.
+        for a in &front.points {
+            for b in &front.points {
+                if a.genome != b.genome {
+                    assert!(!dominates(&a.objectives, &b.objectives));
+                }
+            }
+        }
+        // Sorted by ascending time.
+        for w in front.points.windows(2) {
+            assert!(w[0].objectives.time_s <= w[1].objectives.time_s);
+        }
+    }
+
+    #[test]
+    fn non_finite_points_are_excluded() {
+        let mut bad = point(&[true], 1.0, 100.0, 120.0);
+        bad.objectives.energy_ws = f64::NAN;
+        let good = point(&[false], 2.0, 200.0, 130.0);
+        let front = ParetoFront::of(&[bad.clone(), good.clone()]);
+        assert_eq!(front.len(), 1);
+        assert!(front.contains(&good.genome));
+        assert!(!front.contains(&bad.genome));
+    }
+
+    #[test]
+    fn knee_follows_the_scalarization() {
+        let pts = vec![
+            point(&[false, false], 14.0, 1690.0, 121.0),
+            point(&[true, false], 2.0, 220.0, 129.0),
+            point(&[false, true], 1.5, 400.0, 233.0),
+        ];
+        let front = ParetoFront::of(&pts);
+        // Paper spec: value = (t·p)^-1/2 = energy^-1/2 → min-energy wins.
+        let knee = front.knee(&FitnessSpec::paper()).unwrap();
+        assert_eq!(knee.genome, pts[1].genome);
+        // Time-only spec: the fastest point wins instead.
+        let knee_t = front.knee(&FitnessSpec::time_only()).unwrap();
+        assert_eq!(knee_t.genome, pts[2].genome);
+        // A Watt cap moves the knee to a cap-respecting point.
+        let capped = FitnessSpec::paper().with_watt_cap(125.0);
+        let knee_c = front.knee(&capped).unwrap();
+        assert_eq!(knee_c.genome, pts[0].genome);
+        assert!(ParetoFront::default().knee(&FitnessSpec::paper()).is_none());
+    }
+}

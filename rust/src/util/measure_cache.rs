@@ -1,8 +1,8 @@
 //! Shared, thread-safe measurement cache — the fleet coordinator's
 //! cross-job "measure once" rule (DESIGN.md §7).
 //!
-//! The GA engine already avoids re-measuring a pattern *within* one search
-//! ([`crate::ga::cache::EvalCache`]), but identical verification trials
+//! The search layer already avoids re-measuring a pattern *within* one
+//! search ([`crate::search::Archive`]), but identical verification trials
 //! recur far more broadly: every flow re-measures the CPU-only baseline,
 //! the mixed flow re-runs the GA per destination, and a fleet run sweeps
 //! the same workloads over many destinations with the same seed. The
@@ -287,6 +287,7 @@ mod tests {
                 energy_ws: time_s * 111.0,
                 mean_w: 111.0,
                 peak_w: 125.0,
+                profile_peak_w: 125.0,
                 components: ComponentEnergy {
                     idle_ws: time_s * 105.0,
                     host_cpu_ws: time_s * 2.0,

@@ -61,6 +61,22 @@ pub struct Measurement {
 }
 
 impl Measurement {
+    /// The search layer's objective vector of this trial: the three
+    /// minimized Pareto axes (time, energy, exact profile peak) plus the
+    /// scalarization inputs (sensor peak for the operator Watt cap, mean
+    /// power, timeout flag). `FitnessSpec::value_of` is exactly the
+    /// scalarization of this vector.
+    pub fn objectives(&self) -> crate::search::Objectives {
+        crate::search::Objectives {
+            time_s: self.time_s,
+            energy_ws: self.energy_ws,
+            peak_w: self.report.profile_peak_w,
+            measured_peak_w: self.report.peak_w,
+            mean_w: self.mean_w,
+            timed_out: self.timed_out,
+        }
+    }
+
     /// Pattern as a `0101…` string.
     pub fn pattern_string(&self) -> String {
         self.pattern
@@ -234,6 +250,7 @@ mod tests {
                 energy_ws: 218.1875,
                 mean_w: 112.625,
                 peak_w: 121.0,
+                profile_peak_w: 129.0,
                 components: crate::power::ComponentEnergy {
                     idle_ws: 200.0,
                     host_cpu_ws: 10.0,
@@ -266,6 +283,16 @@ mod tests {
         assert_eq!(back.breakdown.kernel_s, m.breakdown.kernel_s);
         assert_eq!(back.phase, m.phase);
         assert_eq!(back.report, m.report, "energy report round-trips exactly");
+        // The objective vector reads straight off the record.
+        let o = m.objectives();
+        assert_eq!(o.time_s, m.time_s);
+        assert_eq!(o.energy_ws, m.energy_ws);
+        assert_eq!(o.peak_w, 129.0, "Pareto axis is the exact profile peak");
+        assert_eq!(o.measured_peak_w, 121.0, "cap axis is the sensor peak");
+        assert_eq!(
+            crate::search::FitnessSpec::paper().scalarize(&o),
+            crate::search::FitnessSpec::paper().value_of(&m)
+        );
     }
 
     #[test]

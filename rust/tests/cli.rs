@@ -101,6 +101,40 @@ fn watt_capped_offload_respects_the_cap() {
 }
 
 #[test]
+fn exhaustive_pareto_prints_front_with_baseline_and_knee() {
+    // The acceptance path: exhaust MRI-Q's 16-bit space on the default
+    // FPGA destination and print the non-dominated front. It must contain
+    // the all-CPU baseline point and mark the scalarization's knee (the
+    // paper's offloaded point) — the knee marker only prints when the
+    // chosen pattern is actually on the front.
+    let out = enadapt(&["offload", "mriq", "--strategy", "exhaustive", "--pareto"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Pareto front"), "{text}");
+    assert!(text.contains("(cpu-only)"), "front lacks the baseline: {text}");
+    assert!(text.contains("<- knee"), "front lacks the knee marker: {text}");
+    assert!(text.contains("search strategy: exhaustive"), "{text}");
+}
+
+#[test]
+fn anneal_strategy_runs_on_the_gpu() {
+    let out = enadapt(&["offload", "mriq", "--dest", "gpu", "--strategy", "anneal", "--json"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let j = enadapt::util::json::parse(&String::from_utf8_lossy(&out.stdout)).unwrap();
+    assert_eq!(j.get("strategy").unwrap().as_str(), Some("anneal"));
+    assert_eq!(j.get("device").unwrap().as_str(), Some("gpu"));
+    assert!(!j.get("front").unwrap().as_arr().unwrap().is_empty());
+}
+
+#[test]
+fn unknown_strategy_is_a_clean_error() {
+    let out = enadapt(&["offload", "mriq", "--strategy", "tabu"]);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown strategy"), "{err}");
+}
+
+#[test]
 fn codegen_manycore_emits_openmp() {
     let out = enadapt(&["codegen", "vecadd", "--dest", "manycore"]);
     assert!(out.status.success());

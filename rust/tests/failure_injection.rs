@@ -4,7 +4,7 @@
 
 use enadapt::canalyze::analyze_source;
 use enadapt::devices::{Accelerator, DeviceKind, FpgaModel, NestWork, TransferMode};
-use enadapt::ga::FitnessSpec;
+use enadapt::search::FitnessSpec;
 use enadapt::offload::{fpga_flow, FpgaFlowConfig};
 use enadapt::verifier::{AppModel, VerifEnvConfig};
 use enadapt::workloads;

@@ -6,7 +6,7 @@ use enadapt::coordinator::{
     fleet, run_fleet, run_job, Destination, FleetConfig, FleetSpec, JobConfig, JobReport,
 };
 use enadapt::devices::DeviceKind;
-use enadapt::ga::GaConfig;
+use enadapt::search::GaConfig;
 use enadapt::offload::GpuFlowConfig;
 use enadapt::util::json::Json;
 use enadapt::workloads;

@@ -5,8 +5,8 @@
 use enadapt::canalyze::analyze_source;
 use enadapt::coordinator::{report, run_job, BaselineSource, Destination, GeneratedCode, JobConfig};
 use enadapt::devices::DeviceKind;
-use enadapt::ga::GaConfig;
 use enadapt::offload::GpuFlowConfig;
+use enadapt::search::GaConfig;
 use enadapt::util::json;
 use enadapt::workloads;
 

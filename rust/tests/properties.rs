@@ -1,15 +1,19 @@
 //! Property-based tests (via the in-tree `util::prop` harness) over the
 //! coordinator's key invariants: pattern→region resolution, fitness
-//! monotonicity, GA engine behaviour, power accounting, JSON round-trips
-//! and parser/emitter fixpoints on randomized programs.
+//! monotonicity, search-engine behaviour, Pareto-front soundness, power
+//! accounting, JSON round-trips and parser/emitter fixpoints on
+//! randomized programs.
 
 use enadapt::canalyze::{analyze_source, LoopId};
 use enadapt::codegen::{emit_program, Plain};
 use enadapt::devices::{DeviceKind, TransferMode};
-use enadapt::ga::{self, FitnessSpec, GaConfig, Genome};
 use enadapt::power::{
     AttributedProfile, ComponentPower, IpmiConfig, IpmiMeter, IpmiSampler, MeterConfig,
     OracleMeter, PowerMeter, PowerProfile, RaplConfig, RaplMeter,
+};
+use enadapt::search::{
+    self, dominates, Crossover, FitnessSpec, GaConfig, GaStrategy, Genome, Objectives, ParetoFront,
+    Scored,
 };
 use enadapt::util::json::{self, Json};
 use enadapt::util::prng::Pcg32;
@@ -119,11 +123,12 @@ fn prop_ga_respects_genome_space() {
             ..Default::default()
         };
         let mut evals = 0usize;
-        let r = ga::run(len, &cfg, seed, |genome| {
+        let r = search::run_synthetic(&GaStrategy { cfg }, len, seed, |genome| {
             evals += 1;
             assert_eq!(genome.len(), len);
             genome.ones() as f64
-        });
+        })
+        .unwrap();
         assert_eq!(r.best.len(), len);
         // Measure-once: distinct evaluations bounded by the space size.
         assert!(evals <= 1usize << len.min(20));
@@ -136,17 +141,64 @@ fn prop_ga_respects_genome_space() {
 }
 
 #[test]
+fn prop_pareto_front_is_sound_and_complete() {
+    run("pareto front soundness", 150, |g: &mut Gen| {
+        // Random point cloud with distinct genomes.
+        let n = g.usize_range(1, 40);
+        let mut pts: Vec<Scored> = Vec::with_capacity(n);
+        for i in 0..n {
+            let o = Objectives {
+                time_s: g.f64_pos(0.5, 20.0),
+                energy_ws: g.f64_pos(50.0, 2000.0),
+                peak_w: g.f64_pos(100.0, 250.0),
+                measured_peak_w: g.f64_pos(100.0, 250.0),
+                mean_w: g.f64_pos(50.0, 250.0),
+                timed_out: false,
+            };
+            pts.push(Scored {
+                genome: Genome::from_index(8, i),
+                objectives: o,
+            });
+        }
+        let front = ParetoFront::of(&pts);
+        assert!(!front.is_empty());
+        // Soundness: no front member dominates another.
+        for a in &front.points {
+            for b in &front.points {
+                if a.genome != b.genome {
+                    assert!(!dominates(&a.objectives, &b.objectives));
+                }
+            }
+        }
+        // Completeness: every excluded point is dominated by some front
+        // member; every non-dominated point is on the front.
+        for p in &pts {
+            let on_front = front.contains(&p.genome);
+            let dominated = pts
+                .iter()
+                .any(|q| q.genome != p.genome && dominates(&q.objectives, &p.objectives));
+            assert_eq!(on_front, !dominated, "point {}", p.genome);
+        }
+        // The knee is a front member with the maximal scalarized value
+        // over the whole cloud (scalarization-last loses nothing for the
+        // paper spec's monotone value).
+        let knee = front.knee(&FitnessSpec::time_only()).unwrap();
+        let best_time = pts
+            .iter()
+            .map(|p| p.objectives.time_s)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(knee.objectives.time_s, best_time);
+    });
+}
+
+#[test]
 fn prop_crossover_conserves_and_mutation_bounds() {
     run("crossover/mutation invariants", 300, |g: &mut Gen| {
         let len = g.usize_range(2, 24);
         let mut rng = Pcg32::seed_from_u64(g.rng().next_u64());
         let a = Genome::random(len, 0.5, &mut rng);
         let b = Genome::random(len, 0.5, &mut rng);
-        let op = *g.pick(&[
-            ga::Crossover::OnePoint,
-            ga::Crossover::TwoPoint,
-            ga::Crossover::Uniform,
-        ]);
+        let op = *g.pick(&[Crossover::OnePoint, Crossover::TwoPoint, Crossover::Uniform]);
         let (c, d) = op.apply(&a, &b, &mut rng);
         for i in 0..len {
             assert_eq!(
@@ -156,7 +208,7 @@ fn prop_crossover_conserves_and_mutation_bounds() {
             );
         }
         let mut m = c.clone();
-        ga::mutate(&mut m, 0.0, &mut rng);
+        search::mutate(&mut m, 0.0, &mut rng);
         assert_eq!(m, c, "zero-rate mutation is identity");
     });
 }

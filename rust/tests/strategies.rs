@@ -1,0 +1,208 @@
+//! Strategy-layer integration tests: parity between GA / annealing /
+//! exhaustive on every small workload space, exhaustive-vs-brute-force
+//! agreement through the shared measurement cache, and the MRI-Q
+//! exhaustive Pareto front containing the paper's Fig. 5 endpoints.
+
+use enadapt::canalyze::analyze_source;
+use enadapt::devices::{DeviceKind, TransferMode};
+use enadapt::offload::{gpu_flow, GpuFlowConfig};
+use enadapt::search::{dominates, AnnealConfig, FitnessSpec, GaConfig, Genome, SearchStrategy};
+use enadapt::util::measure_cache::MeasureCache;
+use enadapt::verifier::{AppModel, VerifEnv, VerifEnvConfig};
+use enadapt::workloads;
+use std::sync::Arc;
+
+fn app_env(name: &str, src: &str, baseline_s: f64, seed: u64) -> (AppModel, VerifEnv) {
+    let an = analyze_source(name, src).unwrap();
+    let cfg = VerifEnvConfig::r740_pac();
+    let app = AppModel::from_analysis(&an, &cfg.cpu, baseline_s).unwrap();
+    (app, cfg.build(seed))
+}
+
+fn flow_cfg(strategy: SearchStrategy) -> GpuFlowConfig {
+    GpuFlowConfig {
+        ga: GaConfig {
+            population: 10,
+            generations: 8,
+            ..Default::default()
+        },
+        strategy,
+        parallel_trials: false,
+        ..Default::default()
+    }
+}
+
+/// On every workload whose pattern space fits in 8 bits, the exhaustive
+/// strategy is ground truth: GA and annealing share its trial purity
+/// (same env seed → identical per-pattern measurements), so their best
+/// scalarized value can never exceed the exhaustive optimum.
+#[test]
+fn exhaustive_bounds_ga_and_anneal_on_small_spaces() {
+    let mut tested = 0usize;
+    for (name, src) in workloads::ALL {
+        let (app, _) = app_env(name, src, 5.0, 7);
+        let len = app.genome_len();
+        if len > 8 {
+            continue;
+        }
+        tested += 1;
+        for device in [DeviceKind::Gpu, DeviceKind::ManyCore] {
+            let run = |strategy: SearchStrategy| {
+                let (app, env) = app_env(name, src, 5.0, 7);
+                gpu_flow::run_on(&app, &env, &flow_cfg(strategy), device).unwrap()
+            };
+            let ex = run(SearchStrategy::Exhaustive { max_bits: 8 });
+            let ga = run(SearchStrategy::Ga);
+            let an = run(SearchStrategy::Anneal(AnnealConfig::default()));
+            assert_eq!(ex.search.measured, 1usize << len, "{name}/{device}");
+            assert!(
+                ga.best.value <= ex.best.value,
+                "{name}/{device}: ga {} beats exhaustive {}",
+                ga.best.value,
+                ex.best.value
+            );
+            assert!(
+                an.best.value <= ex.best.value,
+                "{name}/{device}: anneal {} beats exhaustive {}",
+                an.best.value,
+                ex.best.value
+            );
+            // All three searched the same space with the same guide.
+            assert_eq!(ga.search.strategy, "ga");
+            assert_eq!(an.search.strategy, "anneal");
+            assert_eq!(ex.search.strategy, "exhaustive");
+        }
+    }
+    assert!(tested >= 1, "no bundled workload has a ≤8-bit space");
+}
+
+/// The exhaustive winner must agree with a brute-force recomputation
+/// straight from the cached Measurements: every re-lookup is a cache hit
+/// (no new trials), and the strict argmax over index order reproduces the
+/// strategy's best value and genome exactly.
+#[test]
+fn exhaustive_agrees_with_brute_force_over_cached_measurements() {
+    let mut tested = 0usize;
+    for (name, src) in workloads::ALL {
+        let (probe, _) = app_env(name, src, 5.0, 3);
+        let len = probe.genome_len();
+        if len > 8 {
+            continue;
+        }
+        tested += 1;
+        let cache = Arc::new(MeasureCache::new());
+        let (app, mut env) = app_env(name, src, 5.0, 3);
+        env.attach_cache(Arc::clone(&cache));
+        let out = gpu_flow::run_on(
+            &app,
+            &env,
+            &flow_cfg(SearchStrategy::Exhaustive { max_bits: 8 }),
+            DeviceKind::Gpu,
+        )
+        .unwrap();
+
+        let spec = FitnessSpec::paper();
+        let trials_before = env.trials_run();
+        let mut best_v = f64::NEG_INFINITY;
+        let mut best_g = Genome::zeros(len);
+        for idx in 0..(1usize << len) {
+            let g = Genome::from_index(len, idx);
+            let m = if g.ones() == 0 {
+                env.measure_cpu_only(&app)
+            } else {
+                env.measure(&app, &g.bits, DeviceKind::Gpu, TransferMode::Batched)
+            };
+            let v = spec.value_of(&m);
+            if v > best_v {
+                best_v = v;
+                best_g = g;
+            }
+        }
+        assert_eq!(
+            env.trials_run(),
+            trials_before,
+            "{name}: brute force re-ran a trial (cache miss)"
+        );
+        assert_eq!(out.best.value, best_v, "{name}: value drifted");
+        assert_eq!(out.best.pattern.genome, best_g, "{name}: genome drifted");
+    }
+    assert!(tested >= 1, "no bundled workload has a ≤8-bit space");
+}
+
+/// The acceptance check of the Pareto layer: exhausting MRI-Q's full
+/// 16-bit space against the FPGA yields a front that contains both Fig. 5
+/// endpoints — the all-CPU baseline (strictly lowest exact peak draw) and
+/// the paper's offloaded point (lowest energy, the default
+/// scalarization's knee) — and the knee stays inside the Fig. 5 bands.
+#[test]
+fn exhaustive_front_on_mriq_has_baseline_and_paper_point() {
+    let (app, env) = app_env("mriq.c", workloads::MRIQ_C, 14.0, 42);
+    let out = gpu_flow::run_on(
+        &app,
+        &env,
+        &flow_cfg(SearchStrategy::Exhaustive { max_bits: 16 }),
+        DeviceKind::Fpga,
+    )
+    .unwrap();
+    assert_eq!(out.search.measured, 1usize << 16, "whole space measured");
+
+    let front = &out.search.front;
+    assert!(front.len() >= 2, "front {}", front.len());
+    assert!(
+        front.points.iter().any(|s| s.genome.ones() == 0),
+        "front lacks the all-CPU baseline"
+    );
+    // The knee pick is on the front and lands in the Fig. 5 bands
+    // (DESIGN.md §1): the paper's offloaded point.
+    assert!(front.contains(&out.best.pattern.genome), "knee not on front");
+    assert!(
+        (1.2..3.5).contains(&out.best.measurement.time_s),
+        "time {}",
+        out.best.measurement.time_s
+    );
+    assert!(
+        (150.0..360.0).contains(&out.best.measurement.energy_ws),
+        "energy {}",
+        out.best.measurement.energy_ws
+    );
+    assert!(
+        out.best.value >= out.baseline_value,
+        "exhaustive best below baseline"
+    );
+    // Soundness: pairwise non-dominated.
+    for a in &front.points {
+        for b in &front.points {
+            if a.genome != b.genome {
+                assert!(
+                    !dominates(&a.objectives, &b.objectives),
+                    "{} dominates {}",
+                    a.genome,
+                    b.genome
+                );
+            }
+        }
+    }
+}
+
+/// Strategy choice routes through the coordinator pipeline: a non-GA
+/// strategy on the FPGA destination bypasses the narrowing funnel and
+/// searches the device directly, and the report carries the label.
+#[test]
+fn pipeline_routes_fpga_strategies() {
+    use enadapt::coordinator::{run_job, Destination, JobConfig};
+    let mut cfg = JobConfig {
+        destination: Destination::Device(DeviceKind::Fpga),
+        ..Default::default()
+    };
+    cfg.ga_flow.strategy = SearchStrategy::Anneal(AnnealConfig {
+        steps: 64,
+        ..Default::default()
+    });
+    cfg.ga_flow.parallel_trials = false;
+    let job = run_job("mriq.c", workloads::MRIQ_C, &cfg).unwrap();
+    assert_eq!(job.strategy, "anneal");
+    assert!(!job.front.is_empty());
+
+    let default_job = run_job("mriq.c", workloads::MRIQ_C, &JobConfig::default()).unwrap();
+    assert_eq!(default_job.strategy, "narrowing", "GA keeps the §3.2 funnel");
+}
