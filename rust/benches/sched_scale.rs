@@ -1,0 +1,117 @@
+//! Bench: power-budget scheduler scale sweep — 10 → 10,000 trace-driven
+//! arrivals on a 4-node cluster under a fleet Watt cap, with a mid-trace
+//! input-growth drift that exercises the re-adaptation loop.
+//!
+//! What this measures: the event loop plus shared-measurement-cache
+//! behavior at fleet scale. Deployments are bounded by the workload ×
+//! destination mix (12 here), so arrival 10,000 costs two cache lookups,
+//! not a search — the hit rate should climb toward 100% as the trace
+//! grows while arrivals/sec stays high. Every run reports the fleet W·s
+//! ledger against the all-CPU-everywhere counterfactual (the paper's
+//! Fig. 5 comparison at cluster scale).
+//!
+//! Emits a final JSON object on stdout for the perf dashboard.
+
+use enadapt::coordinator::sched::run_sched;
+use enadapt::coordinator::{ArrivalTrace, JobConfig, SchedConfig, SyntheticTraceConfig};
+use enadapt::devices::NodeSpec;
+use enadapt::offload::GpuFlowConfig;
+use enadapt::power::IdlePolicy;
+use enadapt::search::GaConfig;
+use enadapt::util::benchkit::section;
+use enadapt::util::json::Json;
+use enadapt::util::tablefmt::Table;
+use std::time::Instant;
+
+fn template() -> JobConfig {
+    JobConfig {
+        ga_flow: GpuFlowConfig {
+            ga: GaConfig {
+                population: 8,
+                generations: 6,
+                ..Default::default()
+            },
+            parallel_trials: false,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn cluster() -> Vec<NodeSpec> {
+    (0..4).map(|i| NodeSpec::r740_pac(&format!("node{i}"))).collect()
+}
+
+fn main() {
+    println!("=== sched_scale: trace-driven arrivals, fleet Watt cap, drift mid-trace ===\n");
+
+    section("arrival-count sweep (4 nodes, 800 W cap, drift at the midpoint)");
+    let mut table = Table::new(&[
+        "arrivals",
+        "admitted",
+        "dropped",
+        "reconfigs",
+        "wall [ms]",
+        "arrivals/s",
+        "hit rate",
+        "jobs [W*s]",
+        "cpu-only [W*s]",
+        "reduction",
+    ]);
+    let mut series = Vec::new();
+    for n in [10usize, 100, 1_000, 10_000] {
+        let mut syn = SyntheticTraceConfig::standard(n, 1.0, 11);
+        syn.drift_after = Some(n / 2);
+        syn.drift_scale = 2.0;
+        let trace = ArrivalTrace::poisson(&syn);
+        let cfg = SchedConfig {
+            template: template(),
+            nodes: cluster(),
+            fleet_watt_cap: Some(800.0),
+            idle_policy: IdlePolicy::gate_after(30.0),
+            ..Default::default()
+        };
+        let start = Instant::now();
+        let report = run_sched(&trace, &cfg).expect("sched run");
+        let wall_s = start.elapsed().as_secs_f64();
+        let hit_rate = report.cache_hits as f64
+            / ((report.cache_hits + report.cache_misses) as f64).max(1.0);
+        table.row(&[
+            n.to_string(),
+            report.admitted.to_string(),
+            report.dropped.to_string(),
+            report.reconfigs.len().to_string(),
+            format!("{:.1}", wall_s * 1e3),
+            format!("{:.0}", n as f64 / wall_s.max(1e-9)),
+            format!("{:.0}%", hit_rate * 100.0),
+            format!("{:.0}", report.production.total_ws()),
+            format!("{:.0}", report.counterfactual_ws),
+            format!("{:.1}x", report.jobs_reduction()),
+        ]);
+        series.push(Json::obj(vec![
+            ("arrivals", Json::num(n as f64)),
+            ("admitted", Json::num(report.admitted as f64)),
+            ("dropped", Json::num(report.dropped as f64)),
+            ("reconfigs", Json::num(report.reconfigs.len() as f64)),
+            ("wall_s", Json::num(wall_s)),
+            ("arrivals_per_s", Json::num(n as f64 / wall_s.max(1e-9))),
+            ("cache_hit_rate", Json::num(hit_rate)),
+            ("jobs_ws", Json::num(report.production.total_ws())),
+            ("counterfactual_ws", Json::num(report.counterfactual_ws)),
+            ("reduction", Json::num(report.jobs_reduction())),
+            ("searches", Json::num(report.searches as f64)),
+            ("horizon_s", Json::num(report.horizon_s)),
+        ]));
+    }
+    println!("{}", table.render());
+
+    section("machine-readable result");
+    println!(
+        "{}",
+        Json::obj(vec![
+            ("bench", Json::str("sched_scale")),
+            ("series", Json::arr(series)),
+        ])
+        .to_string_pretty()
+    );
+}

@@ -340,12 +340,9 @@ impl FleetReport {
     }
 }
 
-/// Destination label for fleet reports.
+/// Destination label for fleet reports (alias of [`Destination::name`]).
 pub fn dest_name(d: Destination) -> &'static str {
-    match d {
-        Destination::Device(k) => k.name(),
-        Destination::Mixed => "mixed",
-    }
+    d.name()
 }
 
 /// The full sweep: every bundled workload × {gpu, fpga, manycore, mixed}.

@@ -43,6 +43,33 @@ pub enum Destination {
     Mixed,
 }
 
+impl Destination {
+    /// Report/CLI label (`fpga`, `gpu`, `many-core-cpu`, `mixed`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Destination::Device(k) => k.name(),
+            Destination::Mixed => "mixed",
+        }
+    }
+
+    /// Parse a CLI/trace destination label.
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        Ok(match s {
+            "fpga" => Destination::Device(DeviceKind::Fpga),
+            "gpu" => Destination::Device(DeviceKind::Gpu),
+            "manycore" | "many-core" | "many-core-cpu" => {
+                Destination::Device(DeviceKind::ManyCore)
+            }
+            "mixed" => Destination::Mixed,
+            other => {
+                return Err(crate::Error::Config(format!(
+                    "unknown destination '{other}' (fpga|gpu|manycore|mixed)"
+                )))
+            }
+        })
+    }
+}
+
 /// Job configuration.
 #[derive(Debug, Clone)]
 pub struct JobConfig {
@@ -76,6 +103,18 @@ impl Default for JobConfig {
             requirements: Requirements::default(),
             env: VerifEnvConfig::r740_pac(),
         }
+    }
+}
+
+impl JobConfig {
+    /// Apply a transform to every [`FitnessSpec`] the flows consult: the
+    /// job default plus the GA-flow and narrowing-flow copies. Keeps
+    /// operator constraints (Watt caps, time-only ablations, fleet
+    /// sub-budgets) from silently missing one of the three holders.
+    pub fn map_fitness(&mut self, f: impl Fn(FitnessSpec) -> FitnessSpec) {
+        self.fitness = f(self.fitness);
+        self.ga_flow.fitness = f(self.ga_flow.fitness);
+        self.fpga_flow.fitness = f(self.fpga_flow.fitness);
     }
 }
 

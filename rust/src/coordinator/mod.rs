@@ -1,19 +1,27 @@
 //! The Layer-3 coordinator: the environment-adaptive software flow
 //! (paper Fig. 1, Steps 1–7) as an end-to-end job — analyze, extract,
-//! search (power-aware), adjust, place, verify, and register the
-//! reconfiguration hook — plus the concurrent fleet scheduler that runs a
-//! whole workload × destination matrix against a shared measurement
-//! cache, and report rendering.
+//! search (power-aware, §3.1–§3.3), adjust, place, verify, and register
+//! the Step 7 reconfiguration hook — plus two fleet-scale drivers: the
+//! concurrent one-shot matrix ([`fleet`], a workload × destination sweep
+//! against a shared measurement cache) and the trace-driven power-budget
+//! scheduler ([`sched`], arrivals packed onto a simulated cluster under a
+//! fleet-wide Watt cap with drift-triggered re-adaptation), and report
+//! rendering.
 
 pub mod fleet;
 pub mod job;
 pub mod pipeline;
 pub mod reconfig;
 pub mod report;
+pub mod sched;
 pub mod steps;
 
 pub use fleet::{run_fleet, FleetConfig, FleetJobOutcome, FleetReport, FleetSpec};
 pub use job::{resolve_baseline, run_job, BaselineSource, Destination, GeneratedCode, JobConfig, JobReport};
 pub use pipeline::{Pipeline, SearchStageOutcome};
-pub use reconfig::{reconfigure, Drift, DriftMonitor, ReconfigOutcome};
+pub use reconfig::{reconfigure, reconfigure_via, Drift, DriftMonitor, ReconfigOutcome};
+pub use sched::{
+    run_sched, run_sched_with_cache, Arrival, ArrivalTrace, SchedConfig, SchedJob, SchedOutcome,
+    SchedReport, SyntheticTraceConfig, TraceEvent,
+};
 pub use steps::{Step, StepLog, StepRecord};

@@ -11,11 +11,19 @@
 //!   band;
 //! * [`reconfigure`] re-runs the offload search against the *new*
 //!   application model and reports whether the pattern/destination changed.
+//!
+//! The trace-driven fleet scheduler ([`super::sched`]) drives this loop in
+//! production: every admitted run is folded into its deployment's monitor,
+//! and a flagged drift triggers [`reconfigure_via`] (the cache-aware
+//! variant) under the job's current fleet Watt sub-budget.
 
-use super::job::{run_job, JobConfig, JobReport};
+use super::job::{JobConfig, JobReport};
+use super::pipeline::Pipeline;
+use crate::util::measure_cache::MeasureCache;
 use crate::util::stats::Welford;
 use crate::verifier::Measurement;
 use crate::Result;
+use std::sync::Arc;
 
 /// Drift verdict for one observation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -99,7 +107,23 @@ pub fn reconfigure(
     source: &str,
     new_cfg: &JobConfig,
 ) -> Result<ReconfigOutcome> {
-    let report = run_job(&previous.source, source, new_cfg)?;
+    reconfigure_via(previous, source, new_cfg, None)
+}
+
+/// [`reconfigure`] with an optional shared measurement cache, so a fleet
+/// scheduler's mid-run re-searches reuse the trials the original
+/// deployments (and other jobs) already paid for.
+pub fn reconfigure_via(
+    previous: &JobReport,
+    source: &str,
+    new_cfg: &JobConfig,
+    cache: Option<&Arc<MeasureCache>>,
+) -> Result<ReconfigOutcome> {
+    let mut pipeline = Pipeline::new(new_cfg.clone());
+    if let Some(c) = cache {
+        pipeline = pipeline.with_cache(Arc::clone(c));
+    }
+    let report = pipeline.run(&previous.source, source)?;
     let pattern_changed = report.best.pattern.genome != previous.best.pattern.genome;
     let device_changed = report.device != previous.device;
     Ok(ReconfigOutcome {
@@ -112,7 +136,7 @@ pub fn reconfigure(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::job::{BaselineSource, Destination};
+    use crate::coordinator::job::{run_job, BaselineSource, Destination};
     use crate::devices::DeviceKind;
     use crate::workloads;
 
@@ -172,5 +196,50 @@ mod tests {
         assert!(!out.device_changed, "still the FPGA");
         // The production run under the new load still beats its baseline.
         assert!(out.report.production.time_s < out.report.baseline.time_s);
+    }
+
+    #[test]
+    fn tightened_watt_budget_forces_a_different_pattern() {
+        let job = deploy();
+        assert!(
+            job.best.pattern.genome.ones() > 0,
+            "original deployment offloads something"
+        );
+        // The fleet's power headroom collapsed while the workload grew:
+        // every MRI-Q pattern's host-busy phase peaks at ≈121 W (measured
+        // by the 1 Hz sensor at t = 0), so a 115 W sub-budget rejects all
+        // offload candidates and the re-search must fall back to the
+        // all-CPU pattern — a guaranteed pattern change.
+        let mut cfg = JobConfig {
+            baseline: BaselineSource::Fixed(28.0),
+            destination: Destination::Device(DeviceKind::Fpga),
+            ..Default::default()
+        };
+        cfg.map_fitness(|f| f.with_watt_cap(115.0));
+        let out = reconfigure(&job, workloads::MRIQ_C, &cfg).unwrap();
+        assert!(out.pattern_changed, "cap must dethrone the old pattern");
+        assert_eq!(out.report.best.pattern.genome.ones(), 0, "fell back to CPU");
+    }
+
+    #[test]
+    fn reconfigure_via_shared_cache_matches_uncached() {
+        use crate::util::measure_cache::MeasureCache;
+        let job = deploy();
+        let cfg = JobConfig {
+            baseline: BaselineSource::Fixed(28.0),
+            ..Default::default()
+        };
+        let cache = std::sync::Arc::new(MeasureCache::new());
+        let cached = reconfigure_via(&job, workloads::MRIQ_C, &cfg, Some(&cache)).unwrap();
+        let plain = reconfigure(&job, workloads::MRIQ_C, &cfg).unwrap();
+        assert_eq!(
+            cached.report.best.pattern.genome,
+            plain.report.best.pattern.genome
+        );
+        assert_eq!(
+            cached.report.production.energy_ws,
+            plain.report.production.energy_ws
+        );
+        assert!(cache.misses() > 0, "trials went through the cache");
     }
 }

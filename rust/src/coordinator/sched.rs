@@ -1,0 +1,1318 @@
+//! Power-budget fleet scheduler: trace-driven arrivals on a simulated
+//! cluster under a fleet-wide Watt cap.
+//!
+//! [`super::fleet`] runs a fixed workload × destination matrix once and
+//! stops; this module is the production shape the paper's fleet-level
+//! claim implies (millions of users, many applications, shared contended
+//! hardware — see the companion work on heterogeneous-device power
+//! reduction, arXiv 2108.09351): jobs *arrive* over simulated time on an
+//! [`ArrivalTrace`] (deterministic Poisson via [`crate::util::prng`], or
+//! an explicit trace file), an admission controller packs them onto a
+//! cluster of heterogeneous [`NodeSpec`] nodes under a fleet-wide Watt
+//! cap, and a re-adaptation loop feeds every production measurement into
+//! the deployment's [`DriftMonitor`] so drifted jobs are re-searched
+//! mid-run ([`reconfigure_via`]) under their *current* Watt sub-budget.
+//!
+//! Semantics (DESIGN.md §10):
+//!
+//! * **Deployments** — the first arrival of a `(workload, destination)`
+//!   pair runs the full Steps 1–7 search (through the shared
+//!   [`MeasureCache`], on the adaptation server — search cost is charged
+//!   to `search_cost_s`, not to cluster time). Later arrivals run the
+//!   deployed pattern directly.
+//! * **Admission** — a job needs a free node slot of its chosen
+//!   destination kind and mean-power headroom: the cluster's chassis-idle
+//!   floor plus all running jobs' dynamic mean draw plus the job's own
+//!   dynamic mean must stay within the fleet cap. Jobs that fit later
+//!   queue (first-fit in arrival order); jobs that cannot fit even on an
+//!   idle cluster are dropped.
+//! * **Idle charging** — every node's chassis idle draw is charged for
+//!   the whole simulated horizon, and powered-on-but-idle accelerator
+//!   slots are charged per [`IdlePolicy`] (power gating caps each idle
+//!   gap at `gate_after_s`).
+//! * **Re-adaptation** — each completed run is observed by the
+//!   deployment's [`DriftMonitor`]; any non-stable verdict re-runs the
+//!   search at the drifted scale with
+//!   [`crate::search::watt_sub_budget`]-derived caps, and the deployment
+//!   (pattern *and* destination) is replaced for subsequent arrivals.
+//!
+//! Everything is simulated-time, single-threaded and a pure function of
+//! `(trace, config, seed)`, so fleet ledger totals are bit-reproducible
+//! and asserted exactly in `tests/sched.rs`.
+
+use super::job::{BaselineSource, Destination, JobConfig, JobReport};
+use super::pipeline::Pipeline;
+use super::reconfig::{reconfigure_via, Drift, DriftMonitor};
+use crate::devices::{DeviceKind, NodeOccupancy, NodeSpec, TransferMode};
+use crate::power::{ComponentEnergy, IdleLedger, IdlePolicy};
+use crate::util::json::Json;
+use crate::util::measure_cache::MeasureCache;
+use crate::util::prng::Pcg32;
+use crate::util::tablefmt::Table;
+use crate::verifier::{AppModel, Measurement, VerifEnv};
+use crate::workloads;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// One job arrival: a workload instance bound for a destination at a
+/// workload scale (1.0 = the deployment's calibrated size; drifting
+/// traces grow it).
+#[derive(Debug, Clone)]
+pub struct Arrival {
+    /// Simulated arrival time, seconds.
+    pub at_s: f64,
+    /// Bundled workload name (canonical, e.g. `mriq`).
+    pub workload: String,
+    /// Requested destination.
+    pub destination: Destination,
+    /// Workload scale factor relative to the template baseline.
+    pub scale: f64,
+}
+
+/// One trace event: a job arrival or an operator action.
+#[derive(Debug, Clone)]
+pub enum TraceEvent {
+    /// A job arrives.
+    Arrival(Arrival),
+    /// The operator changes the fleet-wide Watt cap mid-run (`None`
+    /// removes it) — the "power budgets change" drift of Step 7.
+    SetCap {
+        /// When the new cap takes effect, seconds.
+        at_s: f64,
+        /// The new cap in Watts (`None` = uncapped).
+        cap_w: Option<f64>,
+    },
+}
+
+impl TraceEvent {
+    /// Event time.
+    pub fn at_s(&self) -> f64 {
+        match self {
+            TraceEvent::Arrival(a) => a.at_s,
+            TraceEvent::SetCap { at_s, .. } => *at_s,
+        }
+    }
+}
+
+/// A deterministic arrival trace: events sorted by time.
+#[derive(Debug, Clone, Default)]
+pub struct ArrivalTrace {
+    /// Events in time order (stable for ties).
+    pub events: Vec<TraceEvent>,
+}
+
+/// Synthetic-trace parameters (Poisson-like arrivals via [`Pcg32`]).
+#[derive(Debug, Clone)]
+pub struct SyntheticTraceConfig {
+    /// Number of arrivals to generate.
+    pub arrivals: usize,
+    /// Mean arrival rate, jobs per simulated second.
+    pub rate_per_s: f64,
+    /// Trace seed (independent of the measurement seed).
+    pub seed: u64,
+    /// Workload × destination mix to draw from (uniformly).
+    pub mix: Vec<(String, Destination)>,
+    /// Arrivals at and after this index run at `drift_scale` (a fleet-wide
+    /// input-growth drift); `None` = no drift.
+    pub drift_after: Option<usize>,
+    /// Scale applied after `drift_after`.
+    pub drift_scale: f64,
+}
+
+impl SyntheticTraceConfig {
+    /// Standard mix: every bundled workload × {fpga, gpu, many-core}.
+    pub fn standard(arrivals: usize, rate_per_s: f64, seed: u64) -> Self {
+        let mut mix = Vec::new();
+        for (name, _) in workloads::ALL {
+            for d in [
+                Destination::Device(DeviceKind::Fpga),
+                Destination::Device(DeviceKind::Gpu),
+                Destination::Device(DeviceKind::ManyCore),
+            ] {
+                mix.push(((*name).to_string(), d));
+            }
+        }
+        Self {
+            arrivals,
+            rate_per_s,
+            seed,
+            mix,
+            drift_after: None,
+            drift_scale: 2.0,
+        }
+    }
+}
+
+impl ArrivalTrace {
+    /// Generate a Poisson-like trace: exponential inter-arrival times and
+    /// a uniform draw over the workload mix, all from one [`Pcg32`] stream
+    /// (bit-reproducible per seed).
+    pub fn poisson(cfg: &SyntheticTraceConfig) -> Self {
+        assert!(cfg.rate_per_s > 0.0, "arrival rate must be positive");
+        assert!(!cfg.mix.is_empty(), "workload mix must be non-empty");
+        let mut rng = Pcg32::seed_from_u64(cfg.seed);
+        let mut t = 0.0;
+        let mut events = Vec::with_capacity(cfg.arrivals);
+        for i in 0..cfg.arrivals {
+            // Exponential gap: u ∈ [0,1) keeps 1-u in (0,1], so ln is finite.
+            t += -(1.0 - rng.next_f64()).ln() / cfg.rate_per_s;
+            let (workload, destination) = rng.choose(&cfg.mix).clone();
+            let scale = match cfg.drift_after {
+                Some(k) if i >= k => cfg.drift_scale,
+                _ => 1.0,
+            };
+            events.push(TraceEvent::Arrival(Arrival {
+                at_s: t,
+                workload,
+                destination,
+                scale,
+            }));
+        }
+        Self { events }
+    }
+
+    /// Parse a trace file. One event per line; `#` starts a comment:
+    ///
+    /// ```text
+    /// # <t_s> <workload> <destination> [scale]
+    /// 0.0  mriq fpga
+    /// 2.5  vecadd gpu 1.0
+    /// # operator action: change the fleet Watt cap
+    /// 5.0  cap 220
+    /// 60.0 cap none
+    /// ```
+    ///
+    /// Workload names resolve against the bundled workloads; destinations
+    /// are `fpga|gpu|manycore|mixed`. Events are sorted by time (stable
+    /// for ties).
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut events = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = match raw.split_once('#') {
+                Some((before, _)) => before,
+                None => raw,
+            };
+            let tokens: Vec<&str> = line.split_whitespace().collect();
+            if tokens.is_empty() {
+                continue;
+            }
+            let bad = |what: &str| {
+                Error::Config(format!("trace line {}: {what}: '{raw}'", lineno + 1))
+            };
+            if tokens.len() < 2 {
+                return Err(bad("expected '<t> <workload> <dest> [scale]' or '<t> cap <W>'"));
+            }
+            let at_s: f64 = tokens[0]
+                .parse()
+                .map_err(|_| bad("bad event time"))?;
+            if !at_s.is_finite() || at_s < 0.0 {
+                return Err(bad("event time must be finite and non-negative"));
+            }
+            if tokens[1] == "cap" {
+                if tokens.len() != 3 {
+                    return Err(bad("expected '<t> cap <W|none>'"));
+                }
+                let cap_w = if tokens[2] == "none" {
+                    None
+                } else {
+                    let w: f64 = tokens[2].parse().map_err(|_| bad("bad cap Watts"))?;
+                    if !w.is_finite() || w <= 0.0 {
+                        return Err(bad("cap Watts must be finite and positive"));
+                    }
+                    Some(w)
+                };
+                events.push(TraceEvent::SetCap { at_s, cap_w });
+                continue;
+            }
+            let workload = workloads::resolve(tokens[1])
+                .map(|(name, _)| name.to_string())
+                .ok_or_else(|| bad("unknown workload"))?;
+            if tokens.len() < 3 || tokens.len() > 4 {
+                return Err(bad("expected '<t> <workload> <dest> [scale]'"));
+            }
+            let destination = Destination::parse(tokens[2])?;
+            let scale: f64 = match tokens.get(3) {
+                Some(s) => s.parse().map_err(|_| bad("bad scale"))?,
+                None => 1.0,
+            };
+            if !scale.is_finite() || scale <= 0.0 {
+                return Err(bad("scale must be finite and positive"));
+            }
+            events.push(TraceEvent::Arrival(Arrival {
+                at_s,
+                workload,
+                destination,
+                scale,
+            }));
+        }
+        let mut trace = Self { events };
+        trace
+            .events
+            .sort_by(|a, b| a.at_s().partial_cmp(&b.at_s()).unwrap());
+        Ok(trace)
+    }
+
+    /// Load a trace file from disk.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::Config(format!("cannot read trace {}: {e}", path.display()))
+        })?;
+        Self::parse(&text)
+    }
+
+    /// Number of job arrivals (excluding operator events).
+    pub fn arrivals(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Arrival(_)))
+            .count()
+    }
+}
+
+/// Scheduler configuration.
+#[derive(Debug, Clone)]
+pub struct SchedConfig {
+    /// Per-job template (seed, baseline, search settings). Arrivals
+    /// override the destination and scale the baseline.
+    pub template: JobConfig,
+    /// The simulated cluster.
+    pub nodes: Vec<NodeSpec>,
+    /// Fleet-wide Watt cap on the committed mean draw (`None` = uncapped;
+    /// trace `cap` events override it mid-run).
+    pub fleet_watt_cap: Option<f64>,
+    /// Accelerator power-gating policy for idle charging.
+    pub idle_policy: IdlePolicy,
+    /// Relative drift tolerance before a deployment is re-searched.
+    pub drift_tolerance: f64,
+    /// Optional JSON persistence for the shared measurement cache.
+    pub cache_path: Option<PathBuf>,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        Self {
+            template: JobConfig::default(),
+            nodes: vec![NodeSpec::r740_pac("node0"), NodeSpec::r740_pac("node1")],
+            fleet_watt_cap: None,
+            idle_policy: IdlePolicy::default(),
+            drift_tolerance: 0.25,
+            cache_path: None,
+        }
+    }
+}
+
+/// Why a job never ran.
+const DROP_NO_SLOT: &str = "no node offers a slot of the chosen destination kind";
+
+/// One completed production run.
+#[derive(Debug, Clone)]
+pub struct CompletedJob {
+    /// Device the deployment actually ran on (`Cpu` when the deployed
+    /// pattern offloads nothing).
+    pub device: DeviceKind,
+    /// Node index the job was packed onto.
+    pub node: usize,
+    /// Deployed pattern bits.
+    pub pattern: String,
+    /// Production start, simulated seconds.
+    pub start_s: f64,
+    /// Production end, simulated seconds.
+    pub end_s: f64,
+    /// Measured processing time, seconds.
+    pub time_s: f64,
+    /// Measured mean whole-server draw, Watts.
+    pub mean_w: f64,
+    /// Dynamic (idle-excluded) mean draw, Watts — the admission currency.
+    pub dyn_mean_w: f64,
+    /// Component-attributed energy of the run.
+    pub energy: ComponentEnergy,
+    /// Whole-server energy, Watt·seconds.
+    pub energy_ws: f64,
+    /// The same arrival measured all-CPU (the counterfactual), W·s.
+    pub baseline_ws: f64,
+}
+
+/// Final state of one arrival.
+#[derive(Debug, Clone)]
+pub enum SchedOutcome {
+    /// Admitted and ran to completion.
+    Completed(CompletedJob),
+    /// Never admitted (capacity kind missing, or power-infeasible even on
+    /// an idle cluster).
+    Dropped {
+        /// Human-readable reason.
+        reason: String,
+    },
+}
+
+/// One arrival's record.
+#[derive(Debug, Clone)]
+pub struct SchedJob {
+    /// Arrival sequence number (trace order).
+    pub seq: usize,
+    /// Arrival time, simulated seconds.
+    pub arrival_s: f64,
+    /// Workload name.
+    pub workload: String,
+    /// Requested destination.
+    pub destination: Destination,
+    /// Workload scale.
+    pub scale: f64,
+    /// What happened.
+    pub outcome: SchedOutcome,
+}
+
+/// One drift-triggered re-search.
+#[derive(Debug, Clone)]
+pub struct ReconfigRecord {
+    /// When drift was flagged, simulated seconds.
+    pub at_s: f64,
+    /// Drifted deployment's workload.
+    pub workload: String,
+    /// Drifted deployment's requested destination.
+    pub destination: Destination,
+    /// The monitor's verdict.
+    pub drift: Drift,
+    /// Did the re-search choose a different pattern?
+    pub pattern_changed: bool,
+    /// Did it migrate to a different device?
+    pub device_changed: bool,
+    /// Pattern before the re-search.
+    pub old_pattern: String,
+    /// Pattern after.
+    pub new_pattern: String,
+    /// Device after.
+    pub new_device: DeviceKind,
+}
+
+/// Short label for a drift verdict.
+pub fn drift_name(d: Drift) -> &'static str {
+    match d {
+        Drift::Stable => "stable",
+        Drift::TimeDrift => "time",
+        Drift::PowerDrift => "power",
+        Drift::Both => "time+power",
+    }
+}
+
+/// Aggregate scheduler outcome: the fleet W·s ledger.
+pub struct SchedReport {
+    /// Per-arrival records, in trace order.
+    pub jobs: Vec<SchedJob>,
+    /// Drift-triggered re-searches, in simulated-time order.
+    pub reconfigs: Vec<ReconfigRecord>,
+    /// The cluster.
+    pub nodes: Vec<NodeSpec>,
+    /// Simulated horizon (last event or completion), seconds.
+    pub horizon_s: f64,
+    /// Arrivals admitted.
+    pub admitted: usize,
+    /// Arrivals dropped.
+    pub dropped: usize,
+    /// Component-attributed energy of all admitted runs.
+    pub production: ComponentEnergy,
+    /// Σ of the admitted arrivals' all-CPU baselines, W·s — the paper's
+    /// comparison at cluster scale.
+    pub counterfactual_ws: f64,
+    /// Chassis idle energy over the horizon (all nodes), W·s.
+    pub chassis_idle_ws: f64,
+    /// Accelerator idle energy (charged vs gated away), W·s.
+    pub accel_idle: IdleLedger,
+    /// Highest committed mean draw observed, Watts.
+    pub peak_committed_w: f64,
+    /// Fleet Watt cap in force at the end.
+    pub final_cap_w: Option<f64>,
+    /// Deployments searched (first arrivals + drift re-searches).
+    pub searches: usize,
+    /// Simulated search cost (compiles + trials), seconds.
+    pub search_cost_s: f64,
+    /// Shared-cache hits.
+    pub cache_hits: u64,
+    /// Shared-cache misses (distinct trials actually run).
+    pub cache_misses: u64,
+    /// Distinct measurements stored after the run.
+    pub cache_entries: usize,
+    /// Entries preloaded from `cache_path`.
+    pub cache_preloaded: usize,
+}
+
+impl SchedReport {
+    /// Fleet-level W·s reduction of the admitted jobs vs the all-CPU
+    /// counterfactual (the paper's headline ratio at cluster scale).
+    pub fn jobs_reduction(&self) -> f64 {
+        self.counterfactual_ws / self.production.total_ws().max(1e-9)
+    }
+
+    /// Everything the cluster burned: the jobs' dynamic energy plus the
+    /// chassis idle floor plus the charged accelerator idle.
+    pub fn fleet_total_ws(&self) -> f64 {
+        self.production.dynamic_ws() + self.chassis_idle_ws + self.accel_idle.charged_ws
+    }
+
+    /// Render the fleet W·s ledger table.
+    pub fn table(&self) -> String {
+        let mut t = Table::new(&[
+            "#",
+            "t_arr",
+            "workload",
+            "dest",
+            "chosen",
+            "pattern",
+            "start",
+            "end",
+            "W",
+            "W*s",
+            "base W*s",
+            "status",
+        ]);
+        for j in &self.jobs {
+            match &j.outcome {
+                SchedOutcome::Completed(c) => {
+                    t.row(&[
+                        j.seq.to_string(),
+                        format!("{:.1}", j.arrival_s),
+                        j.workload.clone(),
+                        j.destination.name().to_string(),
+                        c.device.name().to_string(),
+                        c.pattern.clone(),
+                        format!("{:.1}", c.start_s),
+                        format!("{:.1}", c.end_s),
+                        format!("{:.1}", c.mean_w),
+                        format!("{:.0}", c.energy_ws),
+                        format!("{:.0}", c.baseline_ws),
+                        "ok".to_string(),
+                    ]);
+                }
+                SchedOutcome::Dropped { reason } => {
+                    t.row(&[
+                        j.seq.to_string(),
+                        format!("{:.1}", j.arrival_s),
+                        j.workload.clone(),
+                        j.destination.name().to_string(),
+                        String::new(),
+                        String::new(),
+                        String::new(),
+                        String::new(),
+                        String::new(),
+                        String::new(),
+                        String::new(),
+                        format!("DROPPED: {reason}"),
+                    ]);
+                }
+            }
+        }
+        let mut out =
+            String::from("=== enadapt sched: trace-driven power-budget fleet ===\n\n");
+        out.push_str(&t.render());
+        let p = &self.production;
+        out.push_str(&format!(
+            "\nfleet W·s      : jobs {:.0} W·s offloaded vs {:.0} W·s all-CPU counterfactual \
+             ({:.1}x reduction)\n",
+            p.total_ws(),
+            self.counterfactual_ws,
+            self.jobs_reduction()
+        ));
+        out.push_str(&format!(
+            "energy ledger  : idle {:.0} | host-cpu {:.0} | accel {:.0} | transfer {:.0} W·s \
+             (admitted jobs)\n",
+            p.idle_ws, p.host_cpu_ws, p.accelerator_ws, p.transfer_ws
+        ));
+        out.push_str(&format!(
+            "cluster idle   : chassis {:.0} W·s over {:.1} s horizon; accel idle {:.0} W·s \
+             charged, {:.0} W·s gated away\n",
+            self.chassis_idle_ws,
+            self.horizon_s,
+            self.accel_idle.charged_ws,
+            self.accel_idle.gated_ws
+        ));
+        out.push_str(&format!(
+            "admission      : {} arrivals, {} admitted, {} dropped; peak committed {:.1} W \
+             (fleet cap: {})\n",
+            self.jobs.len(),
+            self.admitted,
+            self.dropped,
+            self.peak_committed_w,
+            match self.final_cap_w {
+                Some(c) => format!("{c:.0} W"),
+                None => "none".to_string(),
+            }
+        ));
+        out.push_str(&format!(
+            "re-adaptation  : {} drift-triggered re-searches ({} pattern changes, {} migrations)\n",
+            self.reconfigs.len(),
+            self.reconfigs.iter().filter(|r| r.pattern_changed).count(),
+            self.reconfigs.iter().filter(|r| r.device_changed).count(),
+        ));
+        out.push_str(&format!(
+            "searches       : {} deployments, {:.0} s simulated search cost\n",
+            self.searches, self.search_cost_s
+        ));
+        out.push_str(&format!(
+            "shared cache   : {} hits / {} misses ({:.0}% hit rate), {} entries ({} preloaded)\n",
+            self.cache_hits,
+            self.cache_misses,
+            100.0 * self.cache_hits as f64
+                / ((self.cache_hits + self.cache_misses) as f64).max(1.0),
+            self.cache_entries,
+            self.cache_preloaded
+        ));
+        out
+    }
+
+    /// Machine-readable report.
+    pub fn to_json(&self) -> Json {
+        let jobs: Vec<Json> = self
+            .jobs
+            .iter()
+            .map(|j| {
+                let mut fields = vec![
+                    ("seq", Json::num(j.seq as f64)),
+                    ("t_arr", Json::num(j.arrival_s)),
+                    ("workload", Json::str(j.workload.clone())),
+                    ("destination", Json::str(j.destination.name())),
+                    ("scale", Json::num(j.scale)),
+                ];
+                match &j.outcome {
+                    SchedOutcome::Completed(c) => {
+                        fields.push(("ok", Json::Bool(true)));
+                        fields.push(("device", Json::str(c.device.name())));
+                        fields.push(("pattern", Json::str(c.pattern.clone())));
+                        fields.push(("node", Json::num(c.node as f64)));
+                        fields.push(("start_s", Json::num(c.start_s)));
+                        fields.push(("end_s", Json::num(c.end_s)));
+                        fields.push(("time_s", Json::num(c.time_s)));
+                        fields.push(("mean_w", Json::num(c.mean_w)));
+                        fields.push(("dyn_mean_w", Json::num(c.dyn_mean_w)));
+                        fields.push(("energy_ws", Json::num(c.energy_ws)));
+                        fields.push(("baseline_energy_ws", Json::num(c.baseline_ws)));
+                    }
+                    SchedOutcome::Dropped { reason } => {
+                        fields.push(("ok", Json::Bool(false)));
+                        fields.push(("reason", Json::str(reason.clone())));
+                    }
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        let reconfigs: Vec<Json> = self
+            .reconfigs
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("at_s", Json::num(r.at_s)),
+                    ("workload", Json::str(r.workload.clone())),
+                    ("destination", Json::str(r.destination.name())),
+                    ("drift", Json::str(drift_name(r.drift))),
+                    ("pattern_changed", Json::Bool(r.pattern_changed)),
+                    ("device_changed", Json::Bool(r.device_changed)),
+                    ("old_pattern", Json::str(r.old_pattern.clone())),
+                    ("new_pattern", Json::str(r.new_pattern.clone())),
+                    ("new_device", Json::str(r.new_device.name())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("jobs", Json::arr(jobs)),
+            ("reconfigs", Json::arr(reconfigs)),
+            ("horizon_s", Json::num(self.horizon_s)),
+            ("admitted", Json::num(self.admitted as f64)),
+            ("dropped", Json::num(self.dropped as f64)),
+            (
+                "energy_ws",
+                Json::obj(vec![
+                    ("jobs_total", Json::num(self.production.total_ws())),
+                    ("jobs_dynamic", Json::num(self.production.dynamic_ws())),
+                    ("idle", Json::num(self.production.idle_ws)),
+                    ("host_cpu", Json::num(self.production.host_cpu_ws)),
+                    ("accel", Json::num(self.production.accelerator_ws)),
+                    ("transfer", Json::num(self.production.transfer_ws)),
+                    ("chassis_idle", Json::num(self.chassis_idle_ws)),
+                    ("accel_idle_charged", Json::num(self.accel_idle.charged_ws)),
+                    ("accel_idle_gated", Json::num(self.accel_idle.gated_ws)),
+                    ("fleet_total", Json::num(self.fleet_total_ws())),
+                    ("counterfactual_cpu", Json::num(self.counterfactual_ws)),
+                    ("reduction", Json::num(self.jobs_reduction())),
+                ]),
+            ),
+            (
+                "admission",
+                Json::obj(vec![
+                    ("peak_committed_w", Json::num(self.peak_committed_w)),
+                    (
+                        "fleet_watt_cap",
+                        match self.final_cap_w {
+                            Some(c) => Json::num(c),
+                            None => Json::Null,
+                        },
+                    ),
+                ]),
+            ),
+            (
+                "search",
+                Json::obj(vec![
+                    ("deployments", Json::num(self.searches as f64)),
+                    ("cost_s", Json::num(self.search_cost_s)),
+                ]),
+            ),
+            (
+                "cache",
+                Json::obj(vec![
+                    ("hits", Json::num(self.cache_hits as f64)),
+                    ("misses", Json::num(self.cache_misses as f64)),
+                    ("entries", Json::num(self.cache_entries as f64)),
+                    ("preloaded", Json::num(self.cache_preloaded as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Simulation internals
+// ---------------------------------------------------------------------------
+
+/// A deployed `(workload, destination)` adaptation.
+struct Deployment {
+    report: JobReport,
+    monitor: DriftMonitor,
+}
+
+impl Deployment {
+    fn new(report: JobReport, tolerance: f64) -> Self {
+        let monitor = DriftMonitor::new(&report.production, tolerance);
+        Self { report, monitor }
+    }
+
+    /// Device the deployed pattern actually occupies (`Cpu` when nothing
+    /// is offloaded).
+    fn run_device(&self) -> DeviceKind {
+        if self.report.best.pattern.genome.ones() == 0 {
+            DeviceKind::Cpu
+        } else {
+            self.report.device
+        }
+    }
+}
+
+/// A measured arrival waiting for (or given) a slot.
+struct PreparedRun {
+    job_idx: usize,
+    key: String,
+    device: DeviceKind,
+    production: Measurement,
+    dyn_mean_w: f64,
+    baseline_ws: f64,
+}
+
+/// A job occupying a slot.
+struct RunningJob {
+    seq: usize,
+    key: String,
+    node: usize,
+    device: DeviceKind,
+    slot: usize,
+    start_s: f64,
+    end_s: f64,
+    dyn_mean_w: f64,
+    obs_time_s: f64,
+    obs_mean_w: f64,
+    scale: f64,
+}
+
+/// Result of one admission attempt.
+enum Admit {
+    Placed { node: usize, slot: usize },
+    WaitCapacity,
+    WaitPower,
+    Never(String),
+}
+
+fn dep_key(workload: &str, destination: Destination) -> String {
+    format!("{workload}|{}", destination.name())
+}
+
+fn source_of(workload: &str) -> Result<(String, &'static str)> {
+    let (name, src) = workloads::resolve(workload)
+        .ok_or_else(|| Error::Config(format!("unknown workload '{workload}'")))?;
+    Ok((format!("{name}.c"), src))
+}
+
+struct SchedSim {
+    cfg: SchedConfig,
+    cap_w: Option<f64>,
+    base_s: f64,
+    env: VerifEnv,
+    cache: Arc<MeasureCache>,
+    nodes: Vec<NodeOccupancy>,
+    chassis_floor_w: f64,
+    deployments: HashMap<String, Deployment>,
+    apps: HashMap<(String, u64), Arc<AppModel>>,
+    analyses: HashMap<String, crate::canalyze::Analysis>,
+    jobs: Vec<SchedJob>,
+    reconfigs: Vec<ReconfigRecord>,
+    running: Vec<RunningJob>,
+    queue: VecDeque<PreparedRun>,
+    busy_intervals: HashMap<(usize, DeviceKind, usize), Vec<(f64, f64)>>,
+    horizon_s: f64,
+    peak_committed_w: f64,
+    searches: usize,
+    search_cost_s: f64,
+}
+
+impl SchedSim {
+    fn new(cfg: SchedConfig, cache: Arc<MeasureCache>) -> Result<Self> {
+        let base_s = super::job::resolve_baseline(&cfg.template.baseline)?;
+        let mut env = cfg.template.env.clone().build(cfg.template.seed);
+        env.attach_cache(Arc::clone(&cache));
+        let nodes: Vec<NodeOccupancy> = cfg
+            .nodes
+            .iter()
+            .map(|n| NodeOccupancy::new(n.clone()))
+            .collect();
+        let chassis_floor_w: f64 = cfg.nodes.iter().map(|n| n.chassis_idle_w).sum();
+        Ok(Self {
+            cap_w: cfg.fleet_watt_cap,
+            base_s,
+            env,
+            cache,
+            nodes,
+            chassis_floor_w,
+            deployments: HashMap::new(),
+            apps: HashMap::new(),
+            analyses: HashMap::new(),
+            jobs: Vec::new(),
+            reconfigs: Vec::new(),
+            running: Vec::new(),
+            queue: VecDeque::new(),
+            busy_intervals: HashMap::new(),
+            horizon_s: 0.0,
+            peak_committed_w: 0.0,
+            searches: 0,
+            search_cost_s: 0.0,
+            cfg,
+        })
+    }
+
+    /// Mean draw currently spoken for: the chassis floor plus every
+    /// running job's dynamic mean.
+    fn committed_w(&self) -> f64 {
+        self.chassis_floor_w + self.running.iter().map(|r| r.dyn_mean_w).sum::<f64>()
+    }
+
+    /// The Watt sub-budget a (re-)search runs under: the fleet headroom
+    /// left by everything except the job itself — the rest of the
+    /// cluster's chassis floor plus the other running jobs — so the job's
+    /// whole-server peak (which includes its own node's chassis idle) is
+    /// compared against it directly. `own_node` is the node the job runs
+    /// (or will run) on.
+    fn search_committed_w(&self, own_node: usize) -> f64 {
+        self.committed_w() - self.nodes[own_node].spec().chassis_idle_w
+    }
+
+    /// Job configuration for a (re-)search at a scale under the current
+    /// fleet headroom.
+    fn search_cfg(&self, destination: Destination, scale: f64, committed_w: f64) -> JobConfig {
+        let mut cfg = self.cfg.template.clone();
+        cfg.destination = destination;
+        cfg.baseline = BaselineSource::Fixed(self.base_s * scale);
+        cfg.ga_flow.seed = cfg.seed;
+        // Job concurrency is simulated; parallel trial threads would only
+        // make the cache hit/miss interleaving harder to reason about.
+        cfg.ga_flow.parallel_trials = false;
+        let cap_w = self.cap_w;
+        cfg.map_fitness(|f| f.with_fleet_headroom(cap_w, committed_w));
+        cfg
+    }
+
+    /// The application model of a workload at a scale (cached).
+    fn app_for(&mut self, workload: &str, scale: f64) -> Result<Arc<AppModel>> {
+        let key = (workload.to_string(), scale.to_bits());
+        if let Some(app) = self.apps.get(&key) {
+            return Ok(Arc::clone(app));
+        }
+        let (name, src) = source_of(workload)?;
+        if let std::collections::hash_map::Entry::Vacant(slot) =
+            self.analyses.entry(workload.to_string())
+        {
+            slot.insert(crate::canalyze::analyze_source(&name, src)?);
+        }
+        let an = &self.analyses[workload];
+        let app = Arc::new(AppModel::from_analysis(
+            an,
+            &self.cfg.template.env.cpu,
+            self.base_s * scale,
+        )?);
+        self.apps.insert(key, Arc::clone(&app));
+        Ok(app)
+    }
+
+    /// Search a deployment for a `(workload, destination)` pair if none
+    /// exists yet. The search runs on the adaptation server through the
+    /// shared cache; its simulated cost is charged to `search_cost_s`.
+    fn ensure_deployment(&mut self, workload: &str, d: Destination, scale: f64) -> Result<()> {
+        let key = dep_key(workload, d);
+        if self.deployments.contains_key(&key) {
+            return Ok(());
+        }
+        // Budget as if the job will land on the first node that could
+        // host its kind (unknown pre-search for mixed destinations; the
+        // cluster's first node is the deterministic stand-in).
+        let committed = self.search_committed_w(0);
+        let cfg = self.search_cfg(d, scale, committed);
+        let (name, src) = source_of(workload)?;
+        let pipeline = Pipeline::new(cfg).with_cache(Arc::clone(&self.cache));
+        let report = pipeline.run(&name, src)?;
+        self.searches += 1;
+        self.search_cost_s += report.search_cost_s;
+        self.deployments
+            .insert(key, Deployment::new(report, self.cfg.drift_tolerance));
+        Ok(())
+    }
+
+    /// Measure one arrival against its deployment: the production run
+    /// (deployed pattern at the arrival's scale) and the all-CPU
+    /// counterfactual. Pure and cached.
+    fn prepare(&mut self, job_idx: usize, a: &Arrival) -> Result<PreparedRun> {
+        let key = dep_key(&a.workload, a.destination);
+        let app = self.app_for(&a.workload, a.scale)?;
+        let dep = &self.deployments[&key];
+        let device = dep.run_device();
+        let bits = dep.report.best.pattern.bits().to_vec();
+        let production = self.env.measure(&app, &bits, device, TransferMode::Batched);
+        let baseline = self.env.measure_cpu_only(&app);
+        let dyn_mean_w = if production.time_s > 0.0 {
+            production.report.components.dynamic_ws() / production.time_s
+        } else {
+            0.0
+        };
+        Ok(PreparedRun {
+            job_idx,
+            key,
+            device,
+            production,
+            dyn_mean_w,
+            baseline_ws: baseline.energy_ws,
+        })
+    }
+
+    /// Can this prepared run start now?
+    fn try_admit(&mut self, p: &PreparedRun) -> Admit {
+        if !self
+            .nodes
+            .iter()
+            .any(|n| n.spec().slots(p.device) > 0)
+        {
+            return Admit::Never(DROP_NO_SLOT.to_string());
+        }
+        if let Some(cap) = self.cap_w {
+            if self.chassis_floor_w + p.dyn_mean_w > cap {
+                return Admit::Never(format!(
+                    "needs {:.1} W dynamic over a {:.0} W idle floor — over the {:.0} W fleet \
+                     cap even on an idle cluster",
+                    p.dyn_mean_w, self.chassis_floor_w, cap
+                ));
+            }
+            if self.committed_w() + p.dyn_mean_w > cap {
+                return Admit::WaitPower;
+            }
+        }
+        let node = match self.nodes.iter().position(|n| n.free(p.device) > 0) {
+            Some(i) => i,
+            None => return Admit::WaitCapacity,
+        };
+        let slot = self.nodes[node]
+            .acquire(p.device)
+            .expect("free slot just checked");
+        Admit::Placed { node, slot }
+    }
+
+    /// Start a prepared run at simulated time `t` on `(node, slot)`.
+    fn start(&mut self, p: PreparedRun, t: f64, node: usize, slot: usize) {
+        let m = &p.production;
+        let end_s = t + m.time_s;
+        self.horizon_s = self.horizon_s.max(end_s);
+        let job = &mut self.jobs[p.job_idx];
+        job.outcome = SchedOutcome::Completed(CompletedJob {
+            device: p.device,
+            node,
+            pattern: m.pattern.iter().map(|&b| if b { '1' } else { '0' }).collect(),
+            start_s: t,
+            end_s,
+            time_s: m.time_s,
+            mean_w: m.mean_w,
+            dyn_mean_w: p.dyn_mean_w,
+            energy: m.report.components,
+            energy_ws: m.energy_ws,
+            baseline_ws: p.baseline_ws,
+        });
+        self.running.push(RunningJob {
+            seq: p.job_idx,
+            key: p.key,
+            node,
+            device: p.device,
+            slot,
+            start_s: t,
+            end_s,
+            dyn_mean_w: p.dyn_mean_w,
+            obs_time_s: m.time_s,
+            obs_mean_w: m.mean_w,
+            scale: self.jobs[p.job_idx].scale,
+        });
+        self.peak_committed_w = self.peak_committed_w.max(self.committed_w());
+    }
+
+    /// Admit or queue (or drop) a prepared run.
+    fn admit_or_queue(&mut self, p: PreparedRun, t: f64) {
+        match self.try_admit(&p) {
+            Admit::Placed { node, slot } => self.start(p, t, node, slot),
+            Admit::WaitCapacity | Admit::WaitPower => self.queue.push_back(p),
+            Admit::Never(reason) => {
+                self.jobs[p.job_idx].outcome = SchedOutcome::Dropped { reason };
+            }
+        }
+    }
+
+    /// Re-scan the queue (first-fit in arrival order) after capacity or
+    /// cap changes.
+    fn retry_queue(&mut self, t: f64) {
+        let mut remaining = VecDeque::new();
+        while let Some(p) = self.queue.pop_front() {
+            match self.try_admit(&p) {
+                Admit::Placed { node, slot } => self.start(p, t, node, slot),
+                Admit::WaitCapacity | Admit::WaitPower => remaining.push_back(p),
+                Admit::Never(reason) => {
+                    self.jobs[p.job_idx].outcome = SchedOutcome::Dropped { reason };
+                }
+            }
+        }
+        self.queue = remaining;
+    }
+
+    /// Index of the next job to complete (earliest end, then lowest seq).
+    fn next_completion(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, r) in self.running.iter().enumerate() {
+            let better = match best {
+                None => true,
+                Some(b) => {
+                    let cur = &self.running[b];
+                    r.end_s < cur.end_s || (r.end_s == cur.end_s && r.seq < cur.seq)
+                }
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        best
+    }
+
+    /// Complete one running job: free its slot, feed the drift monitor,
+    /// re-search on drift, then retry the queue.
+    fn complete(&mut self, idx: usize) -> Result<()> {
+        let r = self.running.remove(idx);
+        self.nodes[r.node].release(r.device, r.slot);
+        self.busy_intervals
+            .entry((r.node, r.device, r.slot))
+            .or_default()
+            .push((r.start_s, r.end_s));
+        let t = r.end_s;
+
+        // Step 7: fold the production observation into the deployment's
+        // monitor; re-search on drift under the current fleet headroom.
+        let committed = self.search_committed_w(r.node);
+        let verdict = {
+            let dep = self
+                .deployments
+                .get_mut(&r.key)
+                .expect("completed job has a deployment");
+            dep.monitor.observe(r.obs_time_s, r.obs_mean_w)
+        };
+        if verdict != Drift::Stable {
+            let workload = r
+                .key
+                .split('|')
+                .next()
+                .expect("deployment keys are 'workload|dest'")
+                .to_string();
+            let destination = self.jobs[r.seq].destination;
+            let new_cfg = self.search_cfg(destination, r.scale, committed);
+            let (_, src) = source_of(&workload)?;
+            let cache = Arc::clone(&self.cache);
+            let tolerance = self.cfg.drift_tolerance;
+            let dep = self
+                .deployments
+                .get_mut(&r.key)
+                .expect("deployment still present");
+            let old_pattern = dep.report.best.pattern.genome.to_string();
+            let out = reconfigure_via(&dep.report, src, &new_cfg, Some(&cache))?;
+            let record = ReconfigRecord {
+                at_s: t,
+                workload,
+                destination,
+                drift: verdict,
+                pattern_changed: out.pattern_changed,
+                device_changed: out.device_changed,
+                old_pattern,
+                new_pattern: out.report.best.pattern.genome.to_string(),
+                new_device: out.report.device,
+            };
+            self.searches += 1;
+            self.search_cost_s += out.report.search_cost_s;
+            *dep = Deployment::new(out.report, tolerance);
+            self.reconfigs.push(record);
+        }
+
+        self.retry_queue(t);
+        Ok(())
+    }
+
+    /// Run the event loop over the trace.
+    fn run(&mut self, trace: &ArrivalTrace) -> Result<()> {
+        let mut ev_i = 0;
+        loop {
+            let next_event_t = trace.events.get(ev_i).map(|e| e.at_s());
+            let next_done = self.next_completion();
+            let next_done_t = next_done.map(|i| self.running[i].end_s);
+            match (next_event_t, next_done_t) {
+                (None, None) => break,
+                // Completions first on ties: they free capacity the
+                // simultaneous arrival may need.
+                (Some(te), Some(td)) if td <= te => self.complete(next_done.unwrap())?,
+                (None, Some(_)) => self.complete(next_done.unwrap())?,
+                (Some(te), _) => {
+                    self.horizon_s = self.horizon_s.max(te);
+                    match trace.events[ev_i].clone() {
+                        TraceEvent::SetCap { cap_w, .. } => {
+                            self.cap_w = cap_w;
+                            // A raised cap can admit queued jobs; a
+                            // lowered one can turn them into drops.
+                            self.retry_queue(te);
+                        }
+                        TraceEvent::Arrival(a) => {
+                            let seq = self.jobs.len();
+                            self.jobs.push(SchedJob {
+                                seq,
+                                arrival_s: a.at_s,
+                                workload: a.workload.clone(),
+                                destination: a.destination,
+                                scale: a.scale,
+                                outcome: SchedOutcome::Dropped {
+                                    reason: "pending".to_string(),
+                                },
+                            });
+                            self.ensure_deployment(&a.workload, a.destination, a.scale)?;
+                            let prepared = self.prepare(seq, &a)?;
+                            self.admit_or_queue(prepared, a.at_s);
+                        }
+                    }
+                    ev_i += 1;
+                }
+            }
+        }
+        // Anything still queued can never start (no events or running
+        // jobs left to change the situation).
+        while let Some(p) = self.queue.pop_front() {
+            self.jobs[p.job_idx].outcome = SchedOutcome::Dropped {
+                reason: "still queued when the trace ended".to_string(),
+            };
+        }
+        Ok(())
+    }
+
+    /// Fold the final ledger.
+    fn report(self, preloaded: usize) -> SchedReport {
+        let mut production = ComponentEnergy::default();
+        let mut counterfactual_ws = 0.0;
+        let mut admitted = 0;
+        let mut dropped = 0;
+        for j in &self.jobs {
+            match &j.outcome {
+                SchedOutcome::Completed(c) => {
+                    admitted += 1;
+                    production.add(&c.energy);
+                    counterfactual_ws += c.baseline_ws;
+                }
+                SchedOutcome::Dropped { .. } => dropped += 1,
+            }
+        }
+        let chassis_idle_ws = self.chassis_floor_w * self.horizon_s;
+        let mut accel_idle = IdleLedger::default();
+        for (ni, node) in self.cfg.nodes.iter().enumerate() {
+            for kind in [DeviceKind::ManyCore, DeviceKind::Gpu, DeviceKind::Fpga] {
+                let idle_w = node.slot_idle_w(kind);
+                if idle_w <= 0.0 {
+                    continue;
+                }
+                for slot in 0..node.slots(kind) {
+                    let empty = Vec::new();
+                    let busy = self
+                        .busy_intervals
+                        .get(&(ni, kind, slot))
+                        .unwrap_or(&empty);
+                    accel_idle.charge_slot(
+                        idle_w,
+                        busy,
+                        self.horizon_s,
+                        &self.cfg.idle_policy,
+                    );
+                }
+            }
+        }
+        SchedReport {
+            jobs: self.jobs,
+            reconfigs: self.reconfigs,
+            nodes: self.cfg.nodes,
+            horizon_s: self.horizon_s,
+            admitted,
+            dropped,
+            production,
+            counterfactual_ws,
+            chassis_idle_ws,
+            accel_idle,
+            peak_committed_w: self.peak_committed_w,
+            final_cap_w: self.cap_w,
+            searches: self.searches,
+            search_cost_s: self.search_cost_s,
+            cache_hits: self.cache.hits(),
+            cache_misses: self.cache.misses(),
+            cache_entries: self.cache.len(),
+            cache_preloaded: preloaded,
+        }
+    }
+}
+
+/// Run the scheduler over a trace with an explicit shared measurement
+/// cache (exposed so tests can re-derive per-job baselines from the same
+/// cache the run used).
+pub fn run_sched_with_cache(
+    trace: &ArrivalTrace,
+    cfg: &SchedConfig,
+    cache: Arc<MeasureCache>,
+) -> Result<SchedReport> {
+    if cfg.nodes.is_empty() {
+        return Err(Error::Config("sched: cluster has no nodes".into()));
+    }
+    let preloaded = cache.len();
+    let mut sim = SchedSim::new(cfg.clone(), cache)?;
+    sim.run(trace)?;
+    Ok(sim.report(preloaded))
+}
+
+/// Run the scheduler over a trace (cache loaded/persisted per
+/// `cfg.cache_path`).
+pub fn run_sched(trace: &ArrivalTrace, cfg: &SchedConfig) -> Result<SchedReport> {
+    let cache = Arc::new(match &cfg.cache_path {
+        Some(p) if p.exists() => MeasureCache::load(p)?,
+        _ => MeasureCache::new(),
+    });
+    let report = run_sched_with_cache(trace, cfg, Arc::clone(&cache))?;
+    if let Some(p) = &cfg.cache_path {
+        if let Err(e) = cache.save(p) {
+            crate::log_warn!(
+                "failed to persist measurement cache to {}: {e}",
+                p.display()
+            );
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_trace_is_deterministic_and_sorted() {
+        let cfg = SyntheticTraceConfig::standard(20, 0.5, 7);
+        let a = ArrivalTrace::poisson(&cfg);
+        let b = ArrivalTrace::poisson(&cfg);
+        assert_eq!(a.arrivals(), 20);
+        let times_a: Vec<f64> = a.events.iter().map(|e| e.at_s()).collect();
+        let times_b: Vec<f64> = b.events.iter().map(|e| e.at_s()).collect();
+        assert_eq!(times_a, times_b, "same seed, same trace");
+        assert!(times_a.windows(2).all(|w| w[0] <= w[1]), "sorted");
+        let other = ArrivalTrace::poisson(&SyntheticTraceConfig::standard(20, 0.5, 8));
+        let times_c: Vec<f64> = other.events.iter().map(|e| e.at_s()).collect();
+        assert_ne!(times_a, times_c, "seed changes the trace");
+    }
+
+    #[test]
+    fn drifting_synthetic_trace_scales_the_tail() {
+        let mut cfg = SyntheticTraceConfig::standard(6, 1.0, 3);
+        cfg.drift_after = Some(4);
+        cfg.drift_scale = 2.5;
+        let t = ArrivalTrace::poisson(&cfg);
+        let scales: Vec<f64> = t
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                TraceEvent::Arrival(a) => Some(a.scale),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(&scales[..4], &[1.0; 4]);
+        assert_eq!(&scales[4..], &[2.5; 2]);
+    }
+
+    #[test]
+    fn trace_parse_round_trips_events() {
+        let text = "\
+# a comment
+0.0  mriq fpga
+2.5  vecadd gpu 1.5   # inline comment
+5.0  cap 220
+60.0 cap none
+";
+        let t = ArrivalTrace::parse(text).unwrap();
+        assert_eq!(t.events.len(), 4);
+        assert_eq!(t.arrivals(), 2);
+        match &t.events[1] {
+            TraceEvent::Arrival(a) => {
+                assert_eq!(a.workload, "vecadd");
+                assert_eq!(a.destination.name(), "gpu");
+                assert_eq!(a.scale, 1.5);
+            }
+            other => panic!("expected arrival, got {other:?}"),
+        }
+        match &t.events[2] {
+            TraceEvent::SetCap { cap_w, .. } => assert_eq!(*cap_w, Some(220.0)),
+            other => panic!("expected cap event, got {other:?}"),
+        }
+        match &t.events[3] {
+            TraceEvent::SetCap { cap_w, .. } => assert_eq!(*cap_w, None),
+            other => panic!("expected cap event, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trace_parse_rejects_garbage() {
+        assert!(ArrivalTrace::parse("0.0 nosuchworkload fpga").is_err());
+        assert!(ArrivalTrace::parse("0.0 mriq asic").is_err());
+        assert!(ArrivalTrace::parse("x mriq fpga").is_err());
+        assert!(ArrivalTrace::parse("1.0 mriq fpga -2").is_err());
+        assert!(ArrivalTrace::parse("1.0 cap").is_err());
+        assert!(ArrivalTrace::parse("1.0 cap -5").is_err());
+        assert!(ArrivalTrace::parse("1.0 cap nan").is_err());
+        assert!(ArrivalTrace::parse("-1 mriq fpga").is_err());
+        assert!(ArrivalTrace::parse("").unwrap().events.is_empty());
+    }
+
+    #[test]
+    fn trace_parse_sorts_out_of_order_events() {
+        let t = ArrivalTrace::parse("9.0 mriq fpga\n1.0 vecadd gpu\n").unwrap();
+        assert!(t.events[0].at_s() < t.events[1].at_s());
+    }
+
+    #[test]
+    fn empty_cluster_is_rejected() {
+        let trace = ArrivalTrace::parse("0.0 mriq fpga\n").unwrap();
+        let cfg = SchedConfig {
+            nodes: Vec::new(),
+            ..Default::default()
+        };
+        assert!(run_sched(&trace, &cfg).is_err());
+    }
+}

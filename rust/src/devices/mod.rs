@@ -1,8 +1,11 @@
 //! Hardware models of the verification environment's migration
-//! destinations (Fig. 4 testbed substitute): host CPU, many-core CPU, GPU
-//! and FPGA, plus the FPGA resource/synthesis models used by the paper's
-//! precompile narrowing. See DESIGN.md §2 for the substitution rationale
-//! and §6 for calibration.
+//! destinations (the paper's Fig. 4 testbed substitute): host CPU,
+//! many-core CPU, GPU and FPGA, calibrated so MRI-Q lands in the Fig. 5
+//! bands (14 s / 121 W CPU-only → ≈2 s / ≈111 W offloaded); the FPGA
+//! resource/synthesis models behind the §3.2 precompile narrowing; and
+//! the cluster node capacity model ([`NodeSpec`] / [`NodeOccupancy`]) the
+//! power-budget fleet scheduler packs jobs onto. See DESIGN.md §2 for the
+//! substitution rationale and §6 for calibration.
 
 pub mod cpu;
 pub mod fpga;
@@ -16,6 +19,6 @@ pub use cpu::CpuModel;
 pub use fpga::FpgaModel;
 pub use gpu::GpuModel;
 pub use manycore::ManyCoreModel;
-pub use resources::{estimate_lane, FpgaResources, OpCosts};
+pub use resources::{estimate_lane, FpgaResources, NodeOccupancy, NodeSpec, OpCosts};
 pub use synth::{SynthEstimate, SynthModel};
 pub use traits::{Accelerator, DeviceKind, KernelEstimate, NestWork, TransferMode};

@@ -1,10 +1,22 @@
-//! FPGA resource accounting — Flip-Flops, Lookup Tables, DSP blocks and
-//! on-chip RAM. The paper's §3.2 narrows FPGA candidates by *precompiling*
-//! OpenCL and reading the reported resource usage ("the resources such as
-//! Flip Flop and Lookup Table to be created are known in the middle of
-//! compilation"); [`estimate_lane`] is the analytic stand-in for that
-//! mid-compile report.
+//! Resource accounting for the verification environment and the fleet
+//! scheduler.
+//!
+//! Two resource granularities live here:
+//!
+//! * **FPGA on-chip resources** — Flip-Flops, Lookup Tables, DSP blocks
+//!   and on-chip RAM. The paper's §3.2 narrows FPGA candidates by
+//!   *precompiling* OpenCL and reading the reported resource usage ("the
+//!   resources such as Flip Flop and Lookup Table to be created are known
+//!   in the middle of compilation"); [`estimate_lane`] is the analytic
+//!   stand-in for that mid-compile report.
+//! * **Cluster node capacity** — [`NodeSpec`] describes one simulated
+//!   server of the production cluster (how many host/GPU/FPGA/many-core
+//!   job slots it offers and what its chassis and per-accelerator idle
+//!   draws are), and [`NodeOccupancy`] tracks which slots are busy. The
+//!   power-budget fleet scheduler ([`crate::coordinator::sched`]) packs
+//!   arriving jobs onto these nodes under a fleet-wide Watt cap.
 
+use super::traits::DeviceKind;
 use crate::canalyze::OpCensus;
 
 /// Resource vector of an FPGA design (or budget of a part).
@@ -148,6 +160,161 @@ pub fn estimate_lane(census: &OpCensus, costs: &OpCosts) -> FpgaResources {
     }
 }
 
+/// One simulated server of the production cluster: job-slot capacity per
+/// destination kind plus the idle draws the fleet scheduler charges while
+/// the node is powered on.
+///
+/// A *slot* is one concurrently-runnable job: a `Cpu` slot is the host
+/// running an unoffloaded (all-CPU) deployment, the accelerator slots are
+/// exclusive device reservations. Idle draws are split between the chassis
+/// (always charged while the node is on) and per-accelerator extras
+/// (charged only while the device is powered on but idle — and power-gated
+/// away after [`crate::power::IdlePolicy::gate_after_s`]).
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    /// Node name (reports).
+    pub name: String,
+    /// Whole-chassis idle draw, Watts (server + installed devices at
+    /// rest — the Fig. 4 testbed's ≈105 W for an R740 + PAC).
+    pub chassis_idle_w: f64,
+    /// Concurrent all-CPU jobs the host runs.
+    pub host_slots: usize,
+    /// GPU job slots.
+    pub gpu_slots: usize,
+    /// FPGA job slots.
+    pub fpga_slots: usize,
+    /// Many-core CPU job slots.
+    pub manycore_slots: usize,
+    /// Extra GPU draw while powered on but idle, Watts (beyond the
+    /// chassis figure).
+    pub gpu_idle_w: f64,
+    /// Extra FPGA idle draw, Watts.
+    pub fpga_idle_w: f64,
+    /// Extra many-core idle draw, Watts.
+    pub manycore_idle_w: f64,
+}
+
+impl NodeSpec {
+    /// The paper's testbed server as a cluster node: one job slot per
+    /// destination. The measured 105 W chassis idle already includes the
+    /// installed accelerators at rest (Fig. 5's baseline), so the
+    /// per-accelerator idle extras are zero here.
+    pub fn r740_pac(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            chassis_idle_w: 105.0,
+            host_slots: 1,
+            gpu_slots: 1,
+            fpga_slots: 1,
+            manycore_slots: 1,
+            gpu_idle_w: 0.0,
+            fpga_idle_w: 0.0,
+            manycore_idle_w: 0.0,
+        }
+    }
+
+    /// A GPU-dense node whose accelerators are *not* folded into the
+    /// chassis idle figure — each powered-on idle GPU adds its own draw,
+    /// which the scheduler's gating policy can save.
+    pub fn gpu_box(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            chassis_idle_w: 90.0,
+            host_slots: 1,
+            gpu_slots: 2,
+            fpga_slots: 0,
+            manycore_slots: 0,
+            gpu_idle_w: 12.0,
+            fpga_idle_w: 0.0,
+            manycore_idle_w: 0.0,
+        }
+    }
+
+    /// Job slots this node offers for a destination kind.
+    pub fn slots(&self, kind: DeviceKind) -> usize {
+        match kind {
+            DeviceKind::Cpu => self.host_slots,
+            DeviceKind::Gpu => self.gpu_slots,
+            DeviceKind::Fpga => self.fpga_slots,
+            DeviceKind::ManyCore => self.manycore_slots,
+        }
+    }
+
+    /// Powered-on-but-idle draw of one slot of `kind`, Watts. Host slots
+    /// draw nothing beyond the chassis idle.
+    pub fn slot_idle_w(&self, kind: DeviceKind) -> f64 {
+        match kind {
+            DeviceKind::Cpu => 0.0,
+            DeviceKind::Gpu => self.gpu_idle_w,
+            DeviceKind::Fpga => self.fpga_idle_w,
+            DeviceKind::ManyCore => self.manycore_idle_w,
+        }
+    }
+}
+
+/// Live slot occupancy of one [`NodeSpec`] — the admission controller's
+/// view of what is free. Slots of a kind are indexed `0..slots(kind)` and
+/// acquired lowest-index-first so per-slot busy intervals (the idle-energy
+/// ledger's input) are deterministic.
+#[derive(Debug, Clone)]
+pub struct NodeOccupancy {
+    spec: NodeSpec,
+    busy: [Vec<bool>; 4],
+}
+
+/// Dense index for per-kind bookkeeping.
+fn kind_idx(kind: DeviceKind) -> usize {
+    match kind {
+        DeviceKind::Cpu => 0,
+        DeviceKind::ManyCore => 1,
+        DeviceKind::Gpu => 2,
+        DeviceKind::Fpga => 3,
+    }
+}
+
+impl NodeOccupancy {
+    /// All slots free.
+    pub fn new(spec: NodeSpec) -> Self {
+        let busy = [
+            vec![false; spec.slots(DeviceKind::Cpu)],
+            vec![false; spec.slots(DeviceKind::ManyCore)],
+            vec![false; spec.slots(DeviceKind::Gpu)],
+            vec![false; spec.slots(DeviceKind::Fpga)],
+        ];
+        Self { spec, busy }
+    }
+
+    /// The node description.
+    pub fn spec(&self) -> &NodeSpec {
+        &self.spec
+    }
+
+    /// Free slots of a kind.
+    pub fn free(&self, kind: DeviceKind) -> usize {
+        self.busy[kind_idx(kind)].iter().filter(|b| !**b).count()
+    }
+
+    /// Busy slots of a kind.
+    pub fn in_use(&self, kind: DeviceKind) -> usize {
+        self.busy[kind_idx(kind)].iter().filter(|b| **b).count()
+    }
+
+    /// Reserve the lowest-index free slot of a kind; `None` when full.
+    pub fn acquire(&mut self, kind: DeviceKind) -> Option<usize> {
+        let slots = &mut self.busy[kind_idx(kind)];
+        let idx = slots.iter().position(|b| !*b)?;
+        slots[idx] = true;
+        Some(idx)
+    }
+
+    /// Release a previously acquired slot.
+    pub fn release(&mut self, kind: DeviceKind, slot: usize) {
+        let slots = &mut self.busy[kind_idx(kind)];
+        assert!(slots[slot], "releasing a free slot");
+        slots[slot] = false;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -207,5 +374,44 @@ mod tests {
         assert!(lane.fits_in(&FpgaResources::arria10_gx(), 0.85));
         // And several replicated lanes still fit.
         assert!(lane.scale(4.0).fits_in(&FpgaResources::arria10_gx(), 0.85));
+    }
+
+    #[test]
+    fn r740_pac_node_offers_one_slot_per_destination() {
+        let n = NodeSpec::r740_pac("node0");
+        for kind in [
+            DeviceKind::Cpu,
+            DeviceKind::Gpu,
+            DeviceKind::Fpga,
+            DeviceKind::ManyCore,
+        ] {
+            assert_eq!(n.slots(kind), 1, "{kind}");
+        }
+        // The 105 W chassis figure already covers installed idle devices.
+        assert_eq!(n.chassis_idle_w, 105.0);
+        assert_eq!(n.slot_idle_w(DeviceKind::Fpga), 0.0);
+        assert_eq!(n.slot_idle_w(DeviceKind::Cpu), 0.0);
+    }
+
+    #[test]
+    fn occupancy_acquires_lowest_free_slot_first() {
+        let mut occ = NodeOccupancy::new(NodeSpec::gpu_box("g0"));
+        assert_eq!(occ.free(DeviceKind::Gpu), 2);
+        assert_eq!(occ.acquire(DeviceKind::Gpu), Some(0));
+        assert_eq!(occ.acquire(DeviceKind::Gpu), Some(1));
+        assert_eq!(occ.acquire(DeviceKind::Gpu), None, "node full");
+        assert_eq!(occ.in_use(DeviceKind::Gpu), 2);
+        occ.release(DeviceKind::Gpu, 0);
+        assert_eq!(occ.acquire(DeviceKind::Gpu), Some(0), "lowest index reused");
+        // A gpu_box has no FPGA slots at all.
+        assert_eq!(occ.free(DeviceKind::Fpga), 0);
+        assert_eq!(occ.acquire(DeviceKind::Fpga), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "releasing a free slot")]
+    fn releasing_a_free_slot_panics() {
+        let mut occ = NodeOccupancy::new(NodeSpec::r740_pac("n"));
+        occ.release(DeviceKind::Gpu, 0);
     }
 }

@@ -15,7 +15,9 @@
 //!   front, scalarization-last), the three offload flows ([`offload`]),
 //!   the verification environment with device and power models
 //!   ([`devices`], [`power`], [`verifier`]), code emission ([`codegen`])
-//!   and the end-to-end orchestration ([`coordinator`]).
+//!   and the end-to-end orchestration ([`coordinator`]) — from a single
+//!   Steps 1–7 job through the concurrent fleet matrix up to the
+//!   trace-driven power-budget scheduler ([`coordinator::sched`]).
 //! * **Layer 2** — a JAX model of the evaluated application (MRI-Q) lowered
 //!   AOT to HLO text (`python/compile/model.py`), executed from Rust via
 //!   PJRT ([`runtime`]). Python never runs on the request path.

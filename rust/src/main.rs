@@ -6,6 +6,9 @@
 //! * `offload`   — Steps 1–7: full power-aware offload job.
 //! * `fleet`     — the workload × destination matrix, run concurrently
 //!   with a shared cross-job measurement cache.
+//! * `sched`     — trace-driven power-budget fleet scheduler: arrivals
+//!   packed onto a simulated cluster under a fleet-wide Watt cap, with
+//!   drift-triggered re-adaptation (Step 7 in production).
 //! * `power`     — Fig. 5 reproduction for one pattern/destination.
 //! * `codegen`   — emit the converted code (OpenACC/OpenMP/OpenCL).
 //! * `calibrate` — execute the AOT HLO artifacts on PJRT (real timing).
@@ -13,7 +16,6 @@
 
 use enadapt::canalyze;
 use enadapt::coordinator::{self, BaselineSource, Destination, JobConfig};
-use enadapt::devices::DeviceKind;
 use enadapt::runtime;
 use enadapt::search::{FitnessSpec, SearchStrategy};
 use enadapt::util::args::{flag, opt, App, ArgError, CmdSpec, Parsed};
@@ -99,6 +101,53 @@ fn app() -> App {
                 positionals: vec![],
             },
             CmdSpec {
+                name: "sched",
+                about: "trace-driven power-budget fleet scheduler on a simulated \
+                        cluster (fleet Watt cap, drift-triggered re-adaptation)",
+                opts: {
+                    let mut o = common();
+                    o.push(opt(
+                        "trace",
+                        "",
+                        "arrival-trace file: '<t> <workload> <dest> [scale]' lines plus \
+                         '<t> cap <W|none>' operator events (empty = synthetic Poisson)",
+                    ));
+                    o.push(opt("arrivals", "32", "synthetic arrivals when no --trace"));
+                    o.push(opt("rate", "0.1", "synthetic Poisson arrival rate, jobs/s"));
+                    o.push(opt(
+                        "fleet-watt-cap",
+                        "",
+                        "fleet-wide cap on the committed mean draw, Watts (empty = none)",
+                    ));
+                    o.push(opt("nodes", "2", "r740-pac nodes in the simulated cluster"));
+                    o.push(opt(
+                        "gate-after",
+                        "30",
+                        "power-gate idle accelerators after this many idle seconds (0 = never)",
+                    ));
+                    o.push(opt(
+                        "drift-tolerance",
+                        "0.25",
+                        "relative production drift before a deployment is re-searched",
+                    ));
+                    o.push(opt(
+                        "drift-after",
+                        "",
+                        "synthetic traces: arrivals from this index on run at --drift-scale",
+                    ));
+                    o.push(opt("drift-scale", "2.0", "workload scale applied after --drift-after"));
+                    o.push(opt(
+                        "cache",
+                        "",
+                        "JSON cache file for cross-invocation trial reuse (empty = none)",
+                    ));
+                    o.push(opt("generations", "20", "GA generations (gpu/manycore stages)"));
+                    o.push(opt("population", "16", "GA population (gpu/manycore stages)"));
+                    o
+                },
+                positionals: vec![],
+            },
+            CmdSpec {
                 name: "power",
                 about: "Fig. 5: power trace of cpu-only vs offloaded best pattern",
                 opts: {
@@ -169,17 +218,7 @@ fn load_source(arg: &str) -> enadapt::Result<(String, String)> {
 }
 
 fn parse_dest(s: &str) -> enadapt::Result<Destination> {
-    Ok(match s {
-        "fpga" => Destination::Device(DeviceKind::Fpga),
-        "gpu" => Destination::Device(DeviceKind::Gpu),
-        "manycore" | "many-core" => Destination::Device(DeviceKind::ManyCore),
-        "mixed" => Destination::Mixed,
-        other => {
-            return Err(enadapt::Error::Config(format!(
-                "unknown destination '{other}' (fpga|gpu|manycore|mixed)"
-            )))
-        }
-    })
+    Destination::parse(s)
 }
 
 fn parse_baseline(s: &str) -> enadapt::Result<BaselineSource> {
@@ -218,17 +257,13 @@ fn job_config(p: &Parsed) -> enadapt::Result<JobConfig> {
         })?;
     }
     if p.flag("time-only") {
-        cfg.fitness = FitnessSpec::time_only();
-        cfg.ga_flow.fitness = FitnessSpec::time_only();
-        cfg.fpga_flow.fitness = FitnessSpec::time_only();
+        cfg.map_fitness(|_| FitnessSpec::time_only());
     }
     if let Some(cap) = p.get("watt-cap").filter(|s| !s.is_empty()) {
         let cap: f64 = cap.parse().map_err(|_| {
             enadapt::Error::Config(format!("bad --watt-cap '{cap}' (expected Watts)"))
         })?;
-        cfg.fitness = cfg.fitness.with_watt_cap(cap);
-        cfg.ga_flow.fitness = cfg.ga_flow.fitness.with_watt_cap(cap);
-        cfg.fpga_flow.fitness = cfg.fpga_flow.fitness.with_watt_cap(cap);
+        cfg.map_fitness(|f| f.with_watt_cap(cap));
     }
     if p.flag("no-transfer-opt") {
         cfg.ga_flow.transfer_opt = false;
@@ -333,6 +368,90 @@ fn dispatch(p: &Parsed) -> enadapt::Result<()> {
             };
             let specs = coordinator::fleet::full_matrix();
             let report = coordinator::run_fleet(&specs, &cfg)?;
+            if p.flag("json") {
+                println!("{}", report.to_json().to_string_pretty());
+            } else {
+                println!("{}", report.table());
+            }
+            Ok(())
+        }
+        "sched" => {
+            let mut template = job_config(p)?;
+            template.ga_flow.parallel_trials = false;
+            let fleet_watt_cap = match p.get("fleet-watt-cap").filter(|s| !s.is_empty()) {
+                Some(w) => {
+                    let cap = w.parse::<f64>().ok().filter(|c| c.is_finite() && *c > 0.0);
+                    Some(cap.ok_or_else(|| {
+                        enadapt::Error::Config(format!(
+                            "bad --fleet-watt-cap '{w}' (expected positive Watts)"
+                        ))
+                    })?)
+                }
+                None => None,
+            };
+            let gate_after = p
+                .get_f64("gate-after")
+                .map_err(|e| enadapt::Error::Config(e.to_string()))?;
+            let n_nodes = p
+                .get_usize("nodes")
+                .map_err(|e| enadapt::Error::Config(e.to_string()))?;
+            let seed = template.seed;
+            let cfg = enadapt::coordinator::SchedConfig {
+                template,
+                nodes: (0..n_nodes.max(1))
+                    .map(|i| enadapt::devices::NodeSpec::r740_pac(&format!("node{i}")))
+                    .collect(),
+                fleet_watt_cap,
+                idle_policy: if gate_after > 0.0 {
+                    enadapt::power::IdlePolicy::gate_after(gate_after)
+                } else {
+                    enadapt::power::IdlePolicy::default()
+                },
+                drift_tolerance: p
+                    .get_f64("drift-tolerance")
+                    .map_err(|e| enadapt::Error::Config(e.to_string()))?,
+                cache_path: p
+                    .get("cache")
+                    .filter(|s| !s.is_empty())
+                    .map(std::path::PathBuf::from),
+            };
+            let trace = match p.get("trace").filter(|s| !s.is_empty()) {
+                Some(path) => {
+                    enadapt::coordinator::ArrivalTrace::load(std::path::Path::new(path))?
+                }
+                None => {
+                    let rate = p
+                        .get_f64("rate")
+                        .map_err(|e| enadapt::Error::Config(e.to_string()))?;
+                    if !rate.is_finite() || rate <= 0.0 {
+                        return Err(enadapt::Error::Config(format!(
+                            "bad --rate '{rate}' (expected positive jobs/s)"
+                        )));
+                    }
+                    let mut syn = enadapt::coordinator::SyntheticTraceConfig::standard(
+                        p.get_usize("arrivals")
+                            .map_err(|e| enadapt::Error::Config(e.to_string()))?,
+                        rate,
+                        seed,
+                    );
+                    if let Some(k) = p.get("drift-after").filter(|s| !s.is_empty()) {
+                        syn.drift_after = Some(k.parse::<usize>().map_err(|_| {
+                            enadapt::Error::Config(format!("bad --drift-after '{k}'"))
+                        })?);
+                        let scale = p
+                            .get_f64("drift-scale")
+                            .map_err(|e| enadapt::Error::Config(e.to_string()))?;
+                        if !scale.is_finite() || scale <= 0.0 {
+                            return Err(enadapt::Error::Config(format!(
+                                "bad --drift-scale '{scale}' (expected positive)"
+                            )));
+                        }
+                        syn.drift_scale = scale;
+                    }
+                    enadapt::coordinator::ArrivalTrace::poisson(&syn)
+                }
+            };
+            let report = enadapt::coordinator::run_sched(&trace, &cfg)?;
             if p.flag("json") {
                 println!("{}", report.to_json().to_string_pretty());
             } else {

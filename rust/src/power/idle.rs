@@ -1,0 +1,172 @@
+//! Idle-energy accounting for powered-on-but-idle accelerators.
+//!
+//! The paper's Fig. 5 charges the whole-server idle base (≈105 W) for the
+//! duration of each *job*; a production cluster additionally burns idle
+//! power in the gaps *between* jobs — every installed accelerator draws
+//! its idle wattage whether or not anything is scheduled on it. The
+//! power-budget fleet scheduler ([`crate::coordinator::sched`]) charges
+//! that overhead through this module: each device slot's busy intervals
+//! are folded into an [`IdleLedger`], and an [`IdlePolicy`] models power
+//! gating — a device idle longer than `gate_after_s` is clock/power-gated
+//! and stops drawing until its next job wakes it.
+//!
+//! The accounting is exact and deterministic: charged and gated seconds
+//! are pure functions of the busy intervals and the horizon, so fleet
+//! ledger totals can be asserted bit-for-bit in tests.
+
+/// When (if ever) an idle device is power-gated.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IdlePolicy {
+    /// Gate a device after this many consecutive idle seconds (`None` =
+    /// never gate: the device draws idle power through every gap).
+    pub gate_after_s: Option<f64>,
+}
+
+impl Default for IdlePolicy {
+    fn default() -> Self {
+        // Ungated by default: gating is an opt-in saving the scheduler
+        // reports against.
+        Self { gate_after_s: None }
+    }
+}
+
+impl IdlePolicy {
+    /// Gate after `s` idle seconds.
+    pub fn gate_after(s: f64) -> Self {
+        assert!(s >= 0.0, "negative gating timeout");
+        Self {
+            gate_after_s: Some(s),
+        }
+    }
+}
+
+/// Split of one device slot's non-busy time into charged and gated-away
+/// seconds.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct IdleCharge {
+    /// Idle seconds that drew power (charged to the fleet ledger).
+    pub charged_s: f64,
+    /// Idle seconds saved by power gating.
+    pub gated_s: f64,
+}
+
+/// Split one slot's idle time over `[0, horizon_s]` given its busy
+/// intervals (sorted, non-overlapping `(start, end)` pairs — the shape
+/// [`crate::devices::NodeOccupancy`]'s lowest-index-first slot assignment
+/// produces). The slot is powered on at `t = 0`; each idle gap draws
+/// power for at most `gate_after_s` seconds before the device is gated.
+pub fn split_idle(busy: &[(f64, f64)], horizon_s: f64, policy: &IdlePolicy) -> IdleCharge {
+    let mut out = IdleCharge::default();
+    let mut cursor = 0.0;
+    let charge_gap = |gap_s: f64, out: &mut IdleCharge| {
+        if gap_s <= 0.0 {
+            return;
+        }
+        let charged = match policy.gate_after_s {
+            Some(g) => gap_s.min(g),
+            None => gap_s,
+        };
+        out.charged_s += charged;
+        out.gated_s += gap_s - charged;
+    };
+    for &(start, end) in busy {
+        assert!(
+            end >= start && start >= cursor,
+            "busy intervals must be sorted and non-overlapping"
+        );
+        charge_gap((start - cursor).min(horizon_s - cursor), &mut out);
+        cursor = end.max(cursor);
+    }
+    charge_gap(horizon_s - cursor, &mut out);
+    out
+}
+
+/// Accumulated idle energy across a cluster's device slots.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct IdleLedger {
+    /// Idle energy charged, Watt·seconds.
+    pub charged_ws: f64,
+    /// Idle energy saved by gating, Watt·seconds.
+    pub gated_ws: f64,
+}
+
+impl IdleLedger {
+    /// Fold in one slot: its idle draw in Watts and its busy intervals
+    /// over the simulation horizon.
+    pub fn charge_slot(
+        &mut self,
+        idle_w: f64,
+        busy: &[(f64, f64)],
+        horizon_s: f64,
+        policy: &IdlePolicy,
+    ) {
+        let c = split_idle(busy, horizon_s, policy);
+        self.charged_ws += idle_w * c.charged_s;
+        self.gated_ws += idle_w * c.gated_s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ungated_slot_charges_every_gap() {
+        let busy = [(2.0, 4.0), (6.0, 7.0)];
+        let c = split_idle(&busy, 10.0, &IdlePolicy::default());
+        // Gaps: [0,2) + [4,6) + [7,10) = 7 s, nothing gated.
+        assert_eq!(c.charged_s, 7.0);
+        assert_eq!(c.gated_s, 0.0);
+    }
+
+    #[test]
+    fn gating_caps_each_gap_independently() {
+        let busy = [(2.0, 4.0), (6.0, 7.0)];
+        let c = split_idle(&busy, 10.0, &IdlePolicy::gate_after(1.5));
+        // Per gap: min(2, 1.5) + min(2, 1.5) + min(3, 1.5) charged.
+        assert_eq!(c.charged_s, 4.5);
+        assert_eq!(c.gated_s, 2.5);
+        // Total always splits the full idle time.
+        assert_eq!(c.charged_s + c.gated_s, 7.0);
+    }
+
+    #[test]
+    fn fully_busy_slot_charges_nothing() {
+        let c = split_idle(&[(0.0, 10.0)], 10.0, &IdlePolicy::gate_after(1.0));
+        assert_eq!(c, IdleCharge::default());
+    }
+
+    #[test]
+    fn never_used_slot_is_one_long_gap() {
+        let c = split_idle(&[], 100.0, &IdlePolicy::gate_after(30.0));
+        assert_eq!(c.charged_s, 30.0);
+        assert_eq!(c.gated_s, 70.0);
+        let ungated = split_idle(&[], 100.0, &IdlePolicy::default());
+        assert_eq!(ungated.charged_s, 100.0);
+    }
+
+    #[test]
+    fn zero_timeout_gates_immediately() {
+        let c = split_idle(&[(1.0, 2.0)], 4.0, &IdlePolicy::gate_after(0.0));
+        assert_eq!(c.charged_s, 0.0);
+        assert_eq!(c.gated_s, 3.0);
+    }
+
+    #[test]
+    fn ledger_accumulates_watt_seconds() {
+        let mut ledger = IdleLedger::default();
+        ledger.charge_slot(12.0, &[(0.0, 5.0)], 10.0, &IdlePolicy::gate_after(2.0));
+        // One 5 s gap: 2 s charged, 3 s gated, at 12 W.
+        assert_eq!(ledger.charged_ws, 24.0);
+        assert_eq!(ledger.gated_ws, 36.0);
+        ledger.charge_slot(8.0, &[], 10.0, &IdlePolicy::default());
+        assert_eq!(ledger.charged_ws, 24.0 + 80.0);
+        assert_eq!(ledger.gated_ws, 36.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted and non-overlapping")]
+    fn unsorted_intervals_are_rejected() {
+        split_idle(&[(5.0, 6.0), (1.0, 2.0)], 10.0, &IdlePolicy::default());
+    }
+}

@@ -2,13 +2,18 @@
 //! the device models, pluggable sensor backends (the paper's IPMI-style
 //! 1 Hz sampler — `ipmitool` on a Dell R740 — plus a high-rate RAPL-style
 //! per-component meter and an exact oracle), component-attributed energy
-//! accounting, and Watt·second integration — the metric of the paper's
-//! Fig. 5. See DESIGN.md §8 for the meter/attribution layer.
+//! accounting, idle-energy accounting for power-gated accelerators, and
+//! Watt·second integration — the metric of the paper's Fig. 5 (whose
+//! bands the defaults are calibrated to: 1,690 W·s CPU-only vs ≈223 W·s
+//! offloaded for MRI-Q). See DESIGN.md §8 for the meter/attribution
+//! layer and §10 for the fleet scheduler's idle charging.
 
+pub mod idle;
 pub mod ipmi;
 pub mod meter;
 pub mod trace;
 
+pub use idle::{split_idle, IdleCharge, IdleLedger, IdlePolicy};
 pub use ipmi::{IpmiConfig, IpmiSampler};
 pub use meter::{
     AttributedProfile, Component, ComponentEnergy, ComponentPower, EnergyReport, IpmiMeter,

@@ -22,6 +22,18 @@
 //!   guide-scalarized best, so different operators can pick different
 //!   knee points from one search.
 //!
+//! The FPGA destination is the exception: under the default GA strategy
+//! it routes to the paper's §3.2 narrowing funnel
+//! ([`crate::offload::fpga_flow`]) instead of a generic [`Strategy`] —
+//! hours-long OpenCL compiles make evolutionary measurement infeasible,
+//! so candidates are narrowed by intensity, trip count and precompiled
+//! resource fit before anything is measured.
+//!
+//! Operator scalarizations compose: [`FitnessSpec::with_watt_cap`] is the
+//! §3.3 per-operator peak-draw constraint, and [`watt_sub_budget`]
+//! derives that cap per job from a *fleet-wide* Watt budget (the
+//! power-budget scheduler's admission headroom, DESIGN.md §10).
+//!
 //! Invariants carried over from the old engine: each distinct pattern is
 //! measured at most once per search ([`Archive`]), evaluation batches
 //! receive only first-occurrence novel genomes in request order, and every
@@ -45,7 +57,7 @@ pub use exhaustive::Exhaustive;
 pub use ga::{GaConfig, GaStrategy};
 pub use genome::Genome;
 pub use mutate::mutate;
-pub use objective::{FitnessSpec, Objectives, Scored};
+pub use objective::{watt_sub_budget, FitnessSpec, Objectives, Scored};
 pub use pareto::{dominates, ParetoFront};
 pub use select::Selection;
 pub use strategy::{

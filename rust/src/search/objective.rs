@@ -170,6 +170,37 @@ impl FitnessSpec {
     pub fn value_of(&self, m: &crate::verifier::Measurement) -> f64 {
         self.scalarize(&m.objectives())
     }
+
+    /// Same spec, capped at the per-job Watt sub-budget derived from a
+    /// fleet-wide cap (see [`watt_sub_budget`]) — the tighter of the
+    /// fleet headroom and any operator cap already set. With no fleet cap
+    /// the spec is returned unchanged.
+    pub fn with_fleet_headroom(self, fleet_cap_w: Option<f64>, committed_w: f64) -> Self {
+        match watt_sub_budget(fleet_cap_w, committed_w) {
+            Some(sub) => {
+                let cap = match self.watt_cap {
+                    Some(op) => op.min(sub),
+                    None => sub,
+                };
+                self.with_watt_cap(cap)
+            }
+            None => self,
+        }
+    }
+}
+
+/// Derive one job's operator Watt cap from a fleet-wide cap: the headroom
+/// the rest of the fleet leaves it. `committed_w` is the draw already
+/// spoken for *excluding* the job itself — the other nodes' idle floors
+/// plus the other running jobs' dynamic means — so the job's whole-server
+/// measured peak (which includes its own chassis idle) can be compared
+/// against the sub-budget directly. A fully-committed fleet yields a 0 W
+/// sub-budget: every offload candidate violates it, so the flows fall
+/// back to the all-CPU pattern (the unconditional degenerate choice —
+/// whether it may *run* is the admission controller's call, not the
+/// search's).
+pub fn watt_sub_budget(fleet_cap_w: Option<f64>, committed_w: f64) -> Option<f64> {
+    fleet_cap_w.map(|cap| (cap - committed_w).max(0.0))
 }
 
 #[cfg(test)]
@@ -281,6 +312,23 @@ mod tests {
         // Without a cap, peak draw does not matter.
         let unc = FitnessSpec::paper();
         assert_eq!(unc.value_of(&meas(230.0)), unc.value_of(&meas(190.0)));
+    }
+
+    #[test]
+    fn sub_budget_is_fleet_headroom() {
+        assert_eq!(watt_sub_budget(None, 210.0), None);
+        assert_eq!(watt_sub_budget(Some(330.0), 210.0), Some(120.0));
+        // Over-committed fleets clamp to a 0 W budget (nothing runnable).
+        assert_eq!(watt_sub_budget(Some(200.0), 210.0), Some(0.0));
+        let f = FitnessSpec::paper().with_fleet_headroom(Some(220.0), 105.0);
+        assert_eq!(f.watt_cap, Some(115.0));
+        assert!(f.exceeds_cap(121.0) && !f.exceeds_cap(110.0));
+        let unchanged = FitnessSpec::paper().with_fleet_headroom(None, 105.0);
+        assert_eq!(unchanged.watt_cap, None);
+        // An operator cap tighter than the fleet headroom survives.
+        let op = FitnessSpec::paper().with_watt_cap(110.0);
+        assert_eq!(op.with_fleet_headroom(Some(400.0), 105.0).watt_cap, Some(110.0));
+        assert_eq!(op.with_fleet_headroom(Some(200.0), 105.0).watt_cap, Some(95.0));
     }
 
     #[test]

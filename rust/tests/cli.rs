@@ -10,14 +10,50 @@ fn enadapt(args: &[&str]) -> std::process::Output {
         .expect("spawn enadapt")
 }
 
+/// Every subcommand the CLI exposes, in help order. The snapshot below
+/// and the README drift check both key off this list — extending the CLI
+/// means updating all three together.
+const COMMANDS: [&str; 8] = [
+    "analyze",
+    "offload",
+    "fleet",
+    "sched",
+    "power",
+    "codegen",
+    "calibrate",
+    "report",
+];
+
 #[test]
 fn help_lists_commands() {
     let out = enadapt(&["--help"]);
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for cmd in ["analyze", "offload", "power", "codegen", "calibrate", "report"] {
+    for cmd in COMMANDS {
         assert!(text.contains(cmd), "missing {cmd}");
     }
+}
+
+#[test]
+fn help_snapshot_matches_declared_commands() {
+    // Snapshot of the COMMANDS section: one `  <name>  <about…>` line per
+    // subcommand, in declaration order, and nothing else. Fails when a
+    // command is added/renamed without updating the docs layer.
+    let out = enadapt(&["--help"]);
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    let section = text
+        .split("COMMANDS:")
+        .nth(1)
+        .expect("help has a COMMANDS section")
+        .split("\n\n")
+        .next()
+        .unwrap();
+    let listed: Vec<&str> = section
+        .lines()
+        .filter_map(|l| l.split_whitespace().next())
+        .collect();
+    assert_eq!(listed, COMMANDS, "help snapshot drifted");
 }
 
 #[test]
@@ -192,6 +228,96 @@ fn bad_destination_fails_cleanly() {
     let out = enadapt(&["offload", "mriq", "--dest", "asic"]);
     assert!(!out.status.success());
     assert!(String::from_utf8_lossy(&out.stderr).contains("unknown destination"));
+}
+
+#[test]
+fn sched_synthetic_run_prints_deterministic_ledger() {
+    let args = [
+        "sched", "--arrivals", "5", "--rate", "0.5", "--fleet-watt-cap", "500",
+        "--seed", "7", "--population", "6", "--generations", "4", "--json",
+    ];
+    let a = enadapt(&args);
+    assert!(a.status.success(), "{}", String::from_utf8_lossy(&a.stderr));
+    let b = enadapt(&args);
+    assert_eq!(a.stdout, b.stdout, "same seed ⇒ byte-identical ledger");
+    let j = enadapt::util::json::parse(&String::from_utf8_lossy(&a.stdout)).unwrap();
+    assert_eq!(j.get("jobs").unwrap().as_arr().unwrap().len(), 5);
+    let energy = j.get("energy_ws").unwrap();
+    assert!(energy.get("counterfactual_cpu").unwrap().as_f64().unwrap() > 0.0);
+    assert!(energy.get("fleet_total").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn sched_trace_file_with_cap_event_renders_table() {
+    let dir = std::env::temp_dir().join("enadapt_sched_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.txt");
+    std::fs::write(&path, "0 mriq fpga\n5 cap 220\n10 mriq fpga 2.2\n").unwrap();
+    let out = enadapt(&["sched", "--trace", path.to_str().unwrap()]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("power-budget fleet"), "{text}");
+    assert!(text.contains("all-CPU counterfactual"), "{text}");
+    assert!(text.contains("re-adaptation"), "{text}");
+    assert!(text.contains("fleet cap: 220 W"), "{text}");
+}
+
+#[test]
+fn sched_rejects_bad_trace_and_bad_cap() {
+    let out = enadapt(&["sched", "--trace", "/no/such/trace.txt"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("cannot read trace"));
+    let out = enadapt(&["sched", "--fleet-watt-cap", "lots"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("fleet-watt-cap"));
+    // A zero arrival rate must be a clean config error, not a panic.
+    let out = enadapt(&["sched", "--arrivals", "5", "--rate", "0"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--rate"));
+}
+
+#[test]
+fn readme_quickstart_commands_exist_in_the_cli() {
+    // README.md code blocks must not drift from the CLI: every
+    // `enadapt <subcommand>` they show has to be a real subcommand.
+    let readme_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../README.md");
+    let readme = std::fs::read_to_string(readme_path).expect("README.md exists at the repo root");
+    let mut in_fence = false;
+    let mut checked = 0;
+    for line in readme.lines() {
+        if line.trim_start().starts_with("```") {
+            in_fence = !in_fence;
+            continue;
+        }
+        if !in_fence {
+            continue;
+        }
+        let mut rest = line;
+        while let Some(pos) = rest.find("enadapt ") {
+            rest = &rest[pos + "enadapt ".len()..];
+            let word: String = rest
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '-')
+                .collect();
+            // Skip flags and shell noise; bare lowercase words after the
+            // binary name are subcommands.
+            if !word.is_empty() && word.chars().all(|c| c.is_ascii_lowercase()) {
+                assert!(
+                    COMMANDS.contains(&word.as_str()),
+                    "README shows 'enadapt {word}' but the CLI has no such command"
+                );
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked >= 3, "README quickstart must show real commands (found {checked})");
+    // The quickstart must cover the three fleet-relevant drivers.
+    for cmd in ["offload", "fleet", "sched"] {
+        assert!(
+            readme.contains(&format!("enadapt {cmd}")),
+            "README quickstart lacks `enadapt {cmd}`"
+        );
+    }
 }
 
 #[test]
