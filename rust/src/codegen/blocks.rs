@@ -1,0 +1,153 @@
+//! Function-block substitution for the code generators: replace a
+//! detected block's root loop nest with a call into the chosen device's
+//! library / IP-core implementation (cuBLAS/cuFFT on the GPU path,
+//! `enadapt_ip_*` cores on the FPGA host program, CBLAS/FFTW on the
+//! many-core path), composing with the per-loop annotators via
+//! [`WithBlocks`].
+
+use super::emit::{Annotator, LoopAnnotation};
+use crate::canalyze::{Analysis, LoopId};
+use crate::devices::DeviceKind;
+use crate::verifier::AppModel;
+
+/// One block substitution: the loop to replace and the emitted call.
+#[derive(Debug, Clone)]
+pub struct BlockSub {
+    /// Root loop of the substituted nest.
+    pub root: LoopId,
+    /// Replacement lines (comment + library call).
+    pub lines: Vec<String>,
+}
+
+/// Build the substitutions for a plan's active blocks on a destination.
+/// Blocks without an implementation on `device` are skipped (the
+/// verifier fails such plans before codegen runs).
+pub fn substitutions(
+    an: &Analysis,
+    app: &AppModel,
+    bits: &[bool],
+    device: DeviceKind,
+) -> Vec<BlockSub> {
+    app.active_blocks(bits)
+        .into_iter()
+        .filter_map(|bi| {
+            let bw = &app.blocks[bi];
+            let im = app.block_impl(bi, device)?;
+            let info = &an.loops[bw.detected.root.0];
+            // Outputs first, then inputs, then the in-scalars (sizes).
+            let mut args: Vec<String> = info.arrays_written.iter().cloned().collect();
+            args.extend(
+                info.arrays_read
+                    .iter()
+                    .filter(|a| !info.arrays_written.contains(*a))
+                    .cloned(),
+            );
+            args.extend(info.scalars_in.iter().cloned());
+            Some(BlockSub {
+                root: bw.detected.root,
+                lines: vec![
+                    format!(
+                        "/* enadapt: {} block in {} (line {}) -> {} */",
+                        bw.detected.kind, bw.detected.func, bw.detected.line, im.library
+                    ),
+                    format!("{}({});", im.call_symbol, args.join(", ")),
+                ],
+            })
+        })
+        .collect()
+}
+
+/// Annotator combinator: block roots are replaced with their library
+/// call; every other loop defers to the wrapped per-loop annotator.
+pub struct WithBlocks<'a> {
+    inner: &'a dyn Annotator,
+    subs: &'a [BlockSub],
+}
+
+impl<'a> WithBlocks<'a> {
+    /// Wrap `inner`, substituting `subs`.
+    pub fn new(inner: &'a dyn Annotator, subs: &'a [BlockSub]) -> Self {
+        Self { inner, subs }
+    }
+}
+
+impl Annotator for WithBlocks<'_> {
+    fn prelude(&self) -> Vec<String> {
+        let mut p = self.inner.prelude();
+        if !self.subs.is_empty() {
+            p.push(format!(
+                "/* enadapt: {} function block(s) substituted with device library calls */",
+                self.subs.len()
+            ));
+        }
+        p
+    }
+
+    fn annotate(&self, loop_id: usize) -> Option<LoopAnnotation> {
+        if let Some(s) = self.subs.iter().find(|s| s.root.0 == loop_id) {
+            return Some(LoopAnnotation {
+                before: vec![],
+                after: vec![],
+                replace: Some(s.lines.clone()),
+            });
+        }
+        self.inner.annotate(loop_id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::canalyze::analyze_source;
+    use crate::codegen::openacc;
+    use crate::devices::CpuModel;
+    use crate::funcblock::BlockDb;
+    use crate::workloads;
+
+    fn gemm_app() -> (Analysis, AppModel) {
+        let an = analyze_source("gemm.c", workloads::GEMM_C).unwrap();
+        let app = AppModel::from_analysis_with_blocks(
+            &an,
+            &CpuModel::r740(),
+            14.0,
+            &BlockDb::standard(),
+        )
+        .unwrap();
+        (an, app)
+    }
+
+    #[test]
+    fn gpu_substitution_emits_cublas_call() {
+        let (an, app) = gemm_app();
+        let mut bits = vec![false; app.genome_len()];
+        *bits.last_mut().unwrap() = true;
+        let subs = substitutions(&an, &app, &bits, DeviceKind::Gpu);
+        assert_eq!(subs.len(), 1);
+        let text = openacc::generate_with_blocks(
+            &an,
+            &[],
+            crate::devices::TransferMode::Batched,
+            &subs,
+        );
+        assert!(text.contains("cublasSgemm("), "{text}");
+        assert!(text.contains("matmul block"), "{text}");
+        // The naive triple loop is gone from gemm() — main's loops stay.
+        let gemm_fn = text.split("void gemm").nth(1).unwrap().split("int main").next().unwrap();
+        assert!(!gemm_fn.contains("for ("), "{gemm_fn}");
+    }
+
+    #[test]
+    fn inactive_blocks_change_nothing() {
+        let (an, app) = gemm_app();
+        let bits = vec![false; app.genome_len()];
+        assert!(substitutions(&an, &app, &bits, DeviceKind::Gpu).is_empty());
+        let with = openacc::generate_with_blocks(
+            &an,
+            &[],
+            crate::devices::TransferMode::Batched,
+            &[],
+        );
+        let plain = openacc::generate(&an, &[], crate::devices::TransferMode::Batched);
+        assert_eq!(with, plain, "empty substitution list is the identity");
+    }
+}

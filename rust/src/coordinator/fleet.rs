@@ -173,6 +173,7 @@ impl FleetReport {
             "dest",
             "chosen",
             "pattern",
+            "blk",
             "front",
             "time [s]",
             "base [W*s]",
@@ -193,7 +194,14 @@ impl FleetReport {
                         j.workload.clone(),
                         dest_name(j.destination).to_string(),
                         r.device.name().to_string(),
-                        r.best.pattern.genome.to_string(),
+                        // Canonical plan rendering: `0101` loop-only,
+                        // `0101|10` when block genes exist.
+                        r.best.pattern.plan().to_string(),
+                        if r.blocks_detected() > 0 {
+                            format!("{}/{}", r.blocks_active(), r.blocks_detected())
+                        } else {
+                            "-".to_string()
+                        },
                         r.front.len().to_string(),
                         format!("{:.2}", r.production.time_s),
                         format!("{:.0}", r.baseline.energy_ws),
@@ -211,6 +219,7 @@ impl FleetReport {
                         j.workload.clone(),
                         dest_name(j.destination).to_string(),
                         "FAILED".into(),
+                        String::new(),
                         String::new(),
                         String::new(),
                         String::new(),
@@ -275,9 +284,11 @@ impl FleetReport {
                                 ("destination", Json::str(dest_name(j.destination))),
                                 ("ok", Json::Bool(true)),
                                 ("device", Json::str(r.device.name())),
-                                ("pattern", Json::str(r.best.pattern.genome.to_string())),
+                                ("pattern", Json::str(r.best.pattern.plan().to_string())),
                                 ("value", Json::num(r.best.value)),
                                 ("strategy", Json::str(r.strategy.clone())),
+                                ("blocks_detected", Json::num(r.blocks_detected() as f64)),
+                                ("blocks_active", Json::num(r.blocks_active() as f64)),
                                 ("front_size", Json::num(r.front.len() as f64)),
                                 ("time_s", Json::num(r.production.time_s)),
                                 ("mean_w", Json::num(r.production.mean_w)),

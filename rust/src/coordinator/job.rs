@@ -89,6 +89,11 @@ pub struct JobConfig {
     pub requirements: Requirements,
     /// Verification environment.
     pub env: VerifEnvConfig,
+    /// Enable function-block offloading: detect algorithmic blocks
+    /// (matmul/FFT/histogram) and add block destination genes to the
+    /// search ([`crate::funcblock`], DESIGN.md §11). Off by default —
+    /// loop-only jobs stay bit-identical to the pre-block behavior.
+    pub blocks: bool,
 }
 
 impl Default for JobConfig {
@@ -102,11 +107,20 @@ impl Default for JobConfig {
             fpga_flow: FpgaFlowConfig::default(),
             requirements: Requirements::default(),
             env: VerifEnvConfig::r740_pac(),
+            blocks: false,
         }
     }
 }
 
 impl JobConfig {
+    /// The block database this job detects against — `Some` only when
+    /// function-block offloading is enabled. The single owner of the
+    /// which-database rule, so the step log, the application model and
+    /// the scheduler can never disagree about what is detectable.
+    pub fn block_db(&self) -> Option<crate::funcblock::BlockDb> {
+        self.blocks.then(crate::funcblock::BlockDb::standard)
+    }
+
     /// Apply a transform to every [`FitnessSpec`] the flows consult: the
     /// job default plus the GA-flow and narrowing-flow copies. Keeps
     /// operator constraints (Watt caps, time-only ablations, fleet
@@ -148,6 +162,22 @@ pub struct JobReport {
     pub trials: u64,
     /// Simulated search cost, seconds.
     pub search_cost_s: f64,
+}
+
+impl JobReport {
+    /// Function blocks detected in the application (0 when block
+    /// offloading is disabled or nothing matched).
+    pub fn blocks_detected(&self) -> usize {
+        self.app.blocks.len()
+    }
+
+    /// Block destination genes active in the chosen pattern.
+    pub fn blocks_active(&self) -> usize {
+        self.best
+            .pattern
+            .genome
+            .block_ones(self.app.candidates.len())
+    }
 }
 
 /// The converted source for the chosen destination.

@@ -139,7 +139,15 @@ impl Pipeline {
     /// cache-backed) verification environment.
     pub fn build_env(&self, analysis: &Analysis) -> Result<(AppModel, VerifEnv)> {
         let target_cpu_s = resolve_baseline(&self.cfg.baseline)?;
-        let app = AppModel::from_analysis(analysis, &self.cfg.env.cpu, target_cpu_s)?;
+        let app = match self.cfg.block_db() {
+            Some(db) => AppModel::from_analysis_with_blocks(
+                analysis,
+                &self.cfg.env.cpu,
+                target_cpu_s,
+                &db,
+            )?,
+            None => AppModel::from_analysis(analysis, &self.cfg.env.cpu, target_cpu_s)?,
+        };
         let mut env = self.cfg.env.clone().build(self.cfg.seed);
         if let Some(cache) = &self.cache {
             env.attach_cache(Arc::clone(cache));
@@ -161,17 +169,30 @@ impl Pipeline {
     ) -> Result<SearchStageOutcome> {
         let cfg = &self.cfg;
         steps.run(Step::OffloadSearch, || {
+            // Detected function blocks widen the plan space (detection ran
+            // once, inside AppModel::from_analysis_with_blocks).
+            let block_note = if app.blocks.is_empty() {
+                String::new()
+            } else {
+                let names: Vec<String> = app
+                    .blocks
+                    .iter()
+                    .map(|b| format!("{}@{}", b.detected.kind, b.detected.func))
+                    .collect();
+                format!("; {} function block gene(s) [{}]", app.blocks.len(), names.join(", "))
+            };
             let (outcome, detail) = match cfg.destination {
                 Destination::Device(DeviceKind::Fpga) if cfg.ga_flow.strategy.uses_fpga_funnel() => {
                     let out = fpga_flow::run(app, env, &cfg.fpga_flow)?;
                     let d = format!(
-                        "FPGA narrowing: {} → {} → {} → {} candidates, {} singles + {} combos measured; best {} (front {})",
+                        "FPGA narrowing: {} → {} → {} → {} candidates, {} singles + {} combos + {} block subs measured; best {} (front {})",
                         out.funnel.candidates,
                         out.funnel.after_intensity,
                         out.funnel.after_trips,
                         out.funnel.after_fit,
                         out.funnel.first_round,
                         out.funnel.second_round,
+                        out.funnel.block_round,
                         out.best.pattern,
                         out.front.len()
                     );
@@ -242,7 +263,7 @@ impl Pipeline {
                     )
                 }
             };
-            Ok((outcome, detail))
+            Ok((outcome, format!("{detail}{block_note}")))
         })
     }
 
@@ -306,29 +327,36 @@ impl Pipeline {
     ) -> Result<(GeneratedCode, Measurement)> {
         steps.run(Step::PlacementAndVerification, || {
             let regions = app.regions(best.pattern.bits());
-            let generated = if regions.is_empty() {
+            let subs =
+                codegen::blocks::substitutions(analysis, app, best.pattern.bits(), device);
+            let generated = if regions.is_empty() && subs.is_empty() {
                 GeneratedCode::Unchanged
             } else {
                 match device {
-                    DeviceKind::Gpu => GeneratedCode::OpenAcc(codegen::openacc::generate(
-                        analysis,
-                        &regions,
-                        TransferMode::Batched,
-                    )),
-                    DeviceKind::ManyCore => GeneratedCode::OpenMp(codegen::openmp::generate(
-                        analysis, &regions, 16,
-                    )),
-                    DeviceKind::Fpga => {
-                        GeneratedCode::OpenCl(codegen::opencl::generate(analysis, &regions))
-                    }
+                    DeviceKind::Gpu => GeneratedCode::OpenAcc(
+                        codegen::openacc::generate_with_blocks(
+                            analysis,
+                            &regions,
+                            TransferMode::Batched,
+                            &subs,
+                        ),
+                    ),
+                    DeviceKind::ManyCore => GeneratedCode::OpenMp(
+                        codegen::openmp::generate_with_blocks(analysis, &regions, 16, &subs),
+                    ),
+                    DeviceKind::Fpga => GeneratedCode::OpenCl(
+                        codegen::opencl::generate_with_blocks(analysis, &regions, &subs),
+                    ),
                     DeviceKind::Cpu => GeneratedCode::Unchanged,
                 }
             };
-            // Final confirmation run of the chosen pattern.
+            // Final confirmation run of the chosen plan (a plan may
+            // offload nothing yet still substitute blocks).
+            let offloads = !regions.is_empty() || !subs.is_empty();
             let mut production = env.measure(
                 app,
                 best.pattern.bits(),
-                if regions.is_empty() { DeviceKind::Cpu } else { device },
+                if offloads { device } else { DeviceKind::Cpu },
                 TransferMode::Batched,
             );
             production.phase = crate::verifier::PhaseKind::Production;

@@ -121,6 +121,20 @@ pub fn render_job(r: &JobReport) -> String {
     ));
     out.push_str(&format!("evaluation val : {:.6}\n", r.best.value));
     out.push_str(&format!("search strategy: {}\n", r.strategy));
+    if r.blocks_detected() > 0 {
+        let names: Vec<String> = r
+            .app
+            .blocks
+            .iter()
+            .map(|b| format!("{}@{}", b.detected.kind, b.detected.func))
+            .collect();
+        out.push_str(&format!(
+            "function blocks: {} detected [{}], {} substituted in the chosen plan\n",
+            r.blocks_detected(),
+            names.join(", "),
+            r.blocks_active()
+        ));
+    }
     out.push_str(&format!(
         "pareto front   : {} non-dominated point(s); scalarization-last pick = {} (value {:.6})\n",
         r.front.len(),
@@ -177,6 +191,8 @@ pub fn job_json(r: &JobReport) -> Json {
         ("pattern", Json::str(r.best.pattern.to_string())),
         ("value", Json::num(r.best.value)),
         ("strategy", Json::str(r.strategy.clone())),
+        ("blocks_detected", Json::num(r.blocks_detected() as f64)),
+        ("blocks_active", Json::num(r.blocks_active() as f64)),
         (
             "front",
             Json::arr(

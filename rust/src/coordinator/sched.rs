@@ -315,8 +315,12 @@ pub struct CompletedJob {
     pub device: DeviceKind,
     /// Node index the job was packed onto.
     pub node: usize,
-    /// Deployed pattern bits.
+    /// Deployed plan in the canonical rendering (`0101` loop-only,
+    /// `0101|10` with block destination genes).
     pub pattern: String,
+    /// Function blocks substituted by the deployed plan (0 for loop-only
+    /// deployments).
+    pub blocks: usize,
     /// Production start, simulated seconds.
     pub start_s: f64,
     /// Production end, simulated seconds.
@@ -461,6 +465,7 @@ impl SchedReport {
             "dest",
             "chosen",
             "pattern",
+            "blk",
             "start",
             "end",
             "W",
@@ -478,6 +483,11 @@ impl SchedReport {
                         j.destination.name().to_string(),
                         c.device.name().to_string(),
                         c.pattern.clone(),
+                        if c.blocks > 0 {
+                            c.blocks.to_string()
+                        } else {
+                            "-".to_string()
+                        },
                         format!("{:.1}", c.start_s),
                         format!("{:.1}", c.end_s),
                         format!("{:.1}", c.mean_w),
@@ -492,6 +502,7 @@ impl SchedReport {
                         format!("{:.1}", j.arrival_s),
                         j.workload.clone(),
                         j.destination.name().to_string(),
+                        String::new(),
                         String::new(),
                         String::new(),
                         String::new(),
@@ -580,6 +591,7 @@ impl SchedReport {
                         fields.push(("ok", Json::Bool(true)));
                         fields.push(("device", Json::str(c.device.name())));
                         fields.push(("pattern", Json::str(c.pattern.clone())));
+                        fields.push(("blocks", Json::num(c.blocks as f64)));
                         fields.push(("node", Json::num(c.node as f64)));
                         fields.push(("start_s", Json::num(c.start_s)));
                         fields.push(("end_s", Json::num(c.end_s)));
@@ -703,6 +715,8 @@ struct PreparedRun {
     key: String,
     device: DeviceKind,
     production: Measurement,
+    pattern: String,
+    blocks: usize,
     dyn_mean_w: f64,
     baseline_ws: f64,
 }
@@ -840,11 +854,23 @@ impl SchedSim {
             slot.insert(crate::canalyze::analyze_source(&name, src)?);
         }
         let an = &self.analyses[workload];
-        let app = Arc::new(AppModel::from_analysis(
-            an,
-            &self.cfg.template.env.cpu,
-            self.base_s * scale,
-        )?);
+        // Must mirror the deployment pipeline's model (Pipeline::build_env,
+        // via the same JobConfig::block_db rule): block-enabled templates
+        // deploy plans with block genes, so the production app needs the
+        // same genome layout.
+        let app = Arc::new(match self.cfg.template.block_db() {
+            Some(db) => AppModel::from_analysis_with_blocks(
+                an,
+                &self.cfg.template.env.cpu,
+                self.base_s * scale,
+                &db,
+            )?,
+            None => AppModel::from_analysis(
+                an,
+                &self.cfg.template.env.cpu,
+                self.base_s * scale,
+            )?,
+        });
         self.apps.insert(key, Arc::clone(&app));
         Ok(app)
     }
@@ -881,6 +907,10 @@ impl SchedSim {
         let dep = &self.deployments[&key];
         let device = dep.run_device();
         let bits = dep.report.best.pattern.bits().to_vec();
+        // Shared accessors so the sched table/JSON can never drift from
+        // the fleet and job reports (canonical `0101|10` rendering).
+        let blocks = dep.report.blocks_active();
+        let pattern = dep.report.best.pattern.plan().to_string();
         let production = self.env.measure(&app, &bits, device, TransferMode::Batched);
         let baseline = self.env.measure_cpu_only(&app);
         let dyn_mean_w = if production.time_s > 0.0 {
@@ -893,6 +923,8 @@ impl SchedSim {
             key,
             device,
             production,
+            pattern,
+            blocks,
             dyn_mean_w,
             baseline_ws: baseline.energy_ws,
         })
@@ -938,7 +970,8 @@ impl SchedSim {
         job.outcome = SchedOutcome::Completed(CompletedJob {
             device: p.device,
             node,
-            pattern: m.pattern.iter().map(|&b| if b { '1' } else { '0' }).collect(),
+            pattern: p.pattern.clone(),
+            blocks: p.blocks,
             start_s: t,
             end_s,
             time_s: m.time_s,

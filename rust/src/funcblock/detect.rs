@@ -1,0 +1,523 @@
+//! Block detection: match known algorithmic blocks in the analyzer's
+//! output, both by **call-site signature** (a function whose name matches
+//! a database entry and whose body has the expected loop shape) and by
+//! **loop idiom** (structural recognition of a naive triple-loop matmul,
+//! a DFT double loop or an indirect-store histogram loop inside any
+//! function, whatever it is called).
+//!
+//! The idiom matchers are deliberately conservative — the ground-truth
+//! tests require **zero false positives** on MRI-Q, whose `computeQ`
+//! nest is a non-uniform DFT look-alike (sin/cos accumulation over a
+//! double loop). The discriminator is the twiddle argument: a true naive
+//! DFT computes `sin/cos(c · k · t)` from *both induction variables*,
+//! while MRI-Q's phase comes from array elements (`kx[k]·x[v]`) hoisted
+//! through scalars.
+
+use super::db::{BlockDb, BlockKind};
+use crate::canalyze::ast::*;
+use crate::canalyze::{Analysis, LoopId, LoopInfo};
+
+/// How a block was recognized.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DetectVia {
+    /// Function-name + signature match only.
+    Signature,
+    /// Structural loop-idiom match only.
+    Idiom,
+    /// Both matchers agreed.
+    Both,
+}
+
+impl DetectVia {
+    /// Report label.
+    pub fn name(self) -> &'static str {
+        match self {
+            DetectVia::Signature => "signature",
+            DetectVia::Idiom => "idiom",
+            DetectVia::Both => "signature+idiom",
+        }
+    }
+}
+
+/// One detected block: the loop nest a device implementation substitutes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DetectedBlock {
+    /// Which known block this is.
+    pub kind: BlockKind,
+    /// Root loop of the substituted nest.
+    pub root: LoopId,
+    /// Every loop id the substitution covers (the root's whole nest,
+    /// sorted) — loop genes over these are masked while the block gene
+    /// is active.
+    pub covered: Vec<LoopId>,
+    /// Enclosing function.
+    pub func: String,
+    /// Source line of the root loop.
+    pub line: usize,
+    /// Which matcher(s) found it.
+    pub via: DetectVia,
+}
+
+/// Detect known blocks in an analysis. Results are in root-loop order;
+/// overlapping candidates are dropped (first detection wins), so covered
+/// sets are pairwise disjoint.
+pub fn detect(an: &Analysis, db: &BlockDb) -> Vec<DetectedBlock> {
+    let mut found: Vec<DetectedBlock> = Vec::new();
+    for l in &an.loops {
+        let idiom = match_idiom(an, l);
+        let signature = match_signature(an, l, db);
+        let (kind, via) = match (idiom, signature) {
+            (Some(a), Some(b)) if a == b => (a, DetectVia::Both),
+            // Disagreement: trust the structural matcher.
+            (Some(a), Some(_)) | (Some(a), None) => (a, DetectVia::Idiom),
+            (None, Some(b)) => (b, DetectVia::Signature),
+            (None, None) => continue,
+        };
+        if db.entry(kind).is_none() {
+            continue;
+        }
+        let covered = l.nest_ids(&an.loops);
+        if found
+            .iter()
+            .any(|f| f.covered.iter().any(|id| covered.contains(id)))
+        {
+            continue; // overlaps an earlier detection
+        }
+        found.push(DetectedBlock {
+            kind,
+            root: l.id,
+            covered,
+            func: l.func.clone(),
+            line: l.line,
+            via,
+        });
+    }
+    found
+}
+
+// ---------------------------------------------------------------------------
+// Signature matching
+// ---------------------------------------------------------------------------
+
+/// Call-site signature match: the enclosing function's name is a known
+/// library entry point and the loop is that function's outermost loop
+/// with a relaxed version of the expected shape.
+fn match_signature(an: &Analysis, l: &LoopInfo, db: &BlockDb) -> Option<BlockKind> {
+    if l.depth != 0 {
+        return None;
+    }
+    let entry = db.by_name(&l.func)?;
+    let ok = match entry.kind {
+        BlockKind::Matmul => {
+            let (_, _, k) = chain3(an, l)?;
+            an.loops[k.0].census.fmul >= 1
+        }
+        BlockKind::Fft => {
+            let (_, k) = chain2(an, l)?;
+            an.loops[k.0].census.fspecial >= 2
+        }
+        BlockKind::Histogram => body_has_indirect_add(loop_body(an, l.id)?),
+    };
+    ok.then_some(entry.kind)
+}
+
+// ---------------------------------------------------------------------------
+// Idiom matching
+// ---------------------------------------------------------------------------
+
+/// Structural idiom match, independent of any function name.
+fn match_idiom(an: &Analysis, l: &LoopInfo) -> Option<BlockKind> {
+    if is_matmul_idiom(an, l) {
+        return Some(BlockKind::Matmul);
+    }
+    if is_dft_idiom(an, l) {
+        return Some(BlockKind::Fft);
+    }
+    if is_histogram_idiom(an, l) {
+        return Some(BlockKind::Histogram);
+    }
+    None
+}
+
+/// Naive triple-loop matmul rooted at `l`: a perfect 3-deep `for` chain
+/// `i → j → k` whose innermost body multiplies elements of two distinct
+/// arrays, one indexed by `(i, k)` and the other by `(k, j)`, into an
+/// accumulator — and nothing transcendental.
+fn is_matmul_idiom(an: &Analysis, l: &LoopInfo) -> bool {
+    let Some((i, j, k)) = chain3(an, l) else {
+        return false;
+    };
+    let kc = &an.loops[k.0].census;
+    if kc.fmul < 1 || kc.fspecial > 0 || kc.fdiv > 0 || kc.calls > 0 || kc.loads < 2 {
+        return false;
+    }
+    let (Some(ii), Some(jj), Some(kk)) = (
+        an.loops[i.0].induction.clone(),
+        an.loops[j.0].induction.clone(),
+        an.loops[k.0].induction.clone(),
+    ) else {
+        return false;
+    };
+    if ii == jj || jj == kk || ii == kk {
+        return false;
+    }
+    let Some(body) = loop_body(an, k) else {
+        return false;
+    };
+    body_has_matmul_product(body, &ii, &jj, &kk)
+}
+
+/// Naive DFT double loop rooted at `l`: a perfect 2-deep `for` chain
+/// whose innermost body accumulates `sin`/`cos` of a twiddle argument
+/// that depends on **both induction variables** (resolving one level of
+/// local scalar bindings).
+fn is_dft_idiom(an: &Analysis, l: &LoopInfo) -> bool {
+    let Some((outer, inner)) = chain2(an, l) else {
+        return false;
+    };
+    let ic = &an.loops[inner.0].census;
+    if ic.fspecial < 2 || ic.fmul < 2 || ic.calls > 0 {
+        return false;
+    }
+    let (Some(oi), Some(ni)) = (
+        an.loops[outer.0].induction.clone(),
+        an.loops[inner.0].induction.clone(),
+    ) else {
+        return false;
+    };
+    let Some(body) = loop_body(an, inner) else {
+        return false;
+    };
+    // At least one accumulation in the inner body.
+    if !body.iter().any(
+        |s| matches!(s, Stmt::Assign { op: AssignOp::Add | AssignOp::Sub, .. }),
+    ) {
+        return false;
+    }
+    sincos_arg_mentions_both(body, &oi, &ni)
+}
+
+/// Histogram loop: a `for` loop with a canonical induction whose body
+/// increments an indirectly-indexed array element (`h[bin[i]] += …`).
+fn is_histogram_idiom(an: &Analysis, l: &LoopInfo) -> bool {
+    if !l.is_for || l.induction.is_none() || !l.children.is_empty() {
+        return false;
+    }
+    match loop_body(an, l.id) {
+        Some(body) => body_has_indirect_add(body),
+        None => false,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AST helpers
+// ---------------------------------------------------------------------------
+
+/// `l` with exactly one nested loop, both `for`. Returns `(outer, inner)`.
+fn chain2(an: &Analysis, l: &LoopInfo) -> Option<(LoopId, LoopId)> {
+    if !l.is_for || l.children.len() != 1 {
+        return None;
+    }
+    let inner = l.children[0];
+    let li = &an.loops[inner.0];
+    if !li.is_for || !li.children.is_empty() {
+        return None;
+    }
+    Some((l.id, inner))
+}
+
+/// `l` heading a perfect 3-deep `for` chain. Returns `(i, j, k)`.
+fn chain3(an: &Analysis, l: &LoopInfo) -> Option<(LoopId, LoopId, LoopId)> {
+    if !l.is_for || l.children.len() != 1 {
+        return None;
+    }
+    let mid = l.children[0];
+    let (j, k) = chain2(an, &an.loops[mid.0])?;
+    Some((l.id, j, k))
+}
+
+/// Body statements of the `for` loop with id `id`.
+fn loop_body(an: &Analysis, id: LoopId) -> Option<&[Stmt]> {
+    fn in_stmts(body: &[Stmt], id: usize) -> Option<&[Stmt]> {
+        for s in body {
+            match s {
+                Stmt::For { loop_id, body: b, .. } | Stmt::While { loop_id, body: b, .. } => {
+                    if *loop_id == id {
+                        return Some(b);
+                    }
+                    if let Some(f) = in_stmts(b, id) {
+                        return Some(f);
+                    }
+                }
+                Stmt::If { then, otherwise, .. } => {
+                    if let Some(f) = in_stmts(then, id).or_else(|| in_stmts(otherwise, id)) {
+                        return Some(f);
+                    }
+                }
+                _ => {}
+            }
+        }
+        None
+    }
+    an.program
+        .functions
+        .iter()
+        .find_map(|f| in_stmts(&f.body, id.0))
+}
+
+/// Does any assignment in `body` multiply elements of two distinct arrays
+/// indexed by `(ii, kk)` and `(kk, jj)`?
+fn body_has_matmul_product(body: &[Stmt], ii: &str, jj: &str, kk: &str) -> bool {
+    fn exprs_of(s: &Stmt) -> Vec<&Expr> {
+        match s {
+            Stmt::Assign { rhs, .. } => vec![rhs],
+            Stmt::Decl { init: Some(e), .. } => vec![e],
+            Stmt::If { cond, then, otherwise, .. } => {
+                let mut v = vec![cond];
+                v.extend(then.iter().flat_map(exprs_of));
+                v.extend(otherwise.iter().flat_map(exprs_of));
+                v
+            }
+            _ => Vec::new(),
+        }
+    }
+    fn scan(e: &Expr, ii: &str, jj: &str, kk: &str) -> bool {
+        if let Expr::Bin(BinOp::Mul, a, b, _) = e {
+            if let (Some(an), Some(bn)) = (array_of(a), array_of(b)) {
+                if an != bn
+                    && a.mentions(kk)
+                    && b.mentions(kk)
+                    && ((a.mentions(ii) && b.mentions(jj))
+                        || (a.mentions(jj) && b.mentions(ii)))
+                {
+                    return true;
+                }
+            }
+        }
+        match e {
+            Expr::Bin(_, a, b, _) => scan(a, ii, jj, kk) || scan(b, ii, jj, kk),
+            Expr::Un(_, a, _) => scan(a, ii, jj, kk),
+            Expr::Call(_, args, _) => args.iter().any(|a| scan(a, ii, jj, kk)),
+            Expr::Index(_, idx, _) => scan(idx, ii, jj, kk),
+            _ => false,
+        }
+    }
+    body.iter()
+        .flat_map(exprs_of)
+        .any(|e| scan(e, ii, jj, kk))
+}
+
+/// The array name of an expression that is (possibly a cast of) an array
+/// load.
+fn array_of(e: &Expr) -> Option<&str> {
+    match e {
+        Expr::Index(name, _, _) => Some(name),
+        Expr::Un(_, a, _) => array_of(a),
+        Expr::Call(name, args, _) if name.starts_with("__") && args.len() == 1 => {
+            array_of(&args[0])
+        }
+        _ => None,
+    }
+}
+
+/// Does any `sinf`/`cosf` (or `sin`/`cos`) argument in `body` mention both
+/// induction variables, after resolving one level of local declarations?
+fn sincos_arg_mentions_both(body: &[Stmt], outer: &str, inner: &str) -> bool {
+    // One-level local bindings: `float ang = …; cosf(ang)`.
+    let mut locals: Vec<(&str, &Expr)> = Vec::new();
+    for s in body {
+        if let Stmt::Decl { name, init: Some(e), .. } = s {
+            locals.push((name.as_str(), e));
+        }
+    }
+    let resolve = |e: &Expr, var: &str| -> bool {
+        if e.mentions(var) {
+            return true;
+        }
+        if let Expr::Var(n, _) = e {
+            if let Some((_, init)) = locals.iter().find(|(ln, _)| *ln == n.as_str()) {
+                return init.mentions(var);
+            }
+        }
+        false
+    };
+    fn calls<'a>(e: &'a Expr, out: &mut Vec<&'a Expr>) {
+        match e {
+            Expr::Call(name, args, _) => {
+                if matches!(name.as_str(), "sinf" | "cosf" | "sin" | "cos") {
+                    out.extend(args.iter());
+                }
+                for a in args {
+                    calls(a, out);
+                }
+            }
+            Expr::Bin(_, a, b, _) => {
+                calls(a, out);
+                calls(b, out);
+            }
+            Expr::Un(_, a, _) => calls(a, out),
+            Expr::Index(_, idx, _) => calls(idx, out),
+            _ => {}
+        }
+    }
+    fn stmt_exprs<'a>(s: &'a Stmt, out: &mut Vec<&'a Expr>) {
+        match s {
+            Stmt::Assign { rhs, .. } => calls(rhs, out),
+            Stmt::Decl { init: Some(e), .. } => calls(e, out),
+            Stmt::ExprStmt(e, _) | Stmt::Return(Some(e), _) => calls(e, out),
+            Stmt::If { cond, then, otherwise, .. } => {
+                calls(cond, out);
+                for s in then.iter().chain(otherwise) {
+                    stmt_exprs(s, out);
+                }
+            }
+            _ => {}
+        }
+    }
+    let mut args = Vec::new();
+    for s in body {
+        stmt_exprs(s, &mut args);
+    }
+    args.iter().any(|&a| resolve(a, outer) && resolve(a, inner))
+}
+
+/// Does `body` contain `h[b[i]] += …` (an indirectly-indexed compound
+/// add — the histogram update deps analysis rejects as an indirect
+/// store)?
+fn body_has_indirect_add(body: &[Stmt]) -> bool {
+    fn idx_has_load(e: &Expr) -> bool {
+        match e {
+            Expr::Index(..) => true,
+            Expr::Bin(_, a, b, _) => idx_has_load(a) || idx_has_load(b),
+            Expr::Un(_, a, _) => idx_has_load(a),
+            Expr::Call(_, args, _) => args.iter().any(idx_has_load),
+            _ => false,
+        }
+    }
+    body.iter().any(|s| match s {
+        Stmt::Assign {
+            lv: LValue::Index(_, idx),
+            op: AssignOp::Add,
+            ..
+        } => idx_has_load(idx),
+        Stmt::If { then, otherwise, .. } => {
+            body_has_indirect_add(then) || body_has_indirect_add(otherwise)
+        }
+        _ => false,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::canalyze::analyze_source;
+    use crate::workloads;
+
+    fn blocks_of(src: &str) -> Vec<DetectedBlock> {
+        let an = analyze_source("t.c", src).unwrap();
+        detect(&an, &BlockDb::standard())
+    }
+
+    #[test]
+    fn anonymous_triple_loop_matmul_is_found_by_idiom() {
+        let found = blocks_of(
+            "void compute(float *c, float *a, float *b, int n) {
+               for (int i = 0; i < n; i++) {
+                 for (int j = 0; j < n; j++) {
+                   float s = 0.0f;
+                   for (int k = 0; k < n; k++) {
+                     s += a[i * n + k] * b[k * n + j];
+                   }
+                   c[i * n + j] = s;
+                 }
+               }
+             }",
+        );
+        assert_eq!(found.len(), 1);
+        assert_eq!(found[0].kind, BlockKind::Matmul);
+        assert_eq!(found[0].via, DetectVia::Idiom);
+        assert_eq!(found[0].root, LoopId(0));
+        assert_eq!(found[0].covered, vec![LoopId(0), LoopId(1), LoopId(2)]);
+    }
+
+    #[test]
+    fn anonymous_dft_double_loop_is_found_by_idiom() {
+        let found = blocks_of(
+            "void transform(float *xr, float *xi, float *inr, int n) {
+               for (int k = 0; k < n; k++) {
+                 float sr = 0.0f;
+                 float si = 0.0f;
+                 for (int t = 0; t < n; t++) {
+                   float ang = 6.2831853f * (float) k * (float) t / (float) n;
+                   sr += inr[t] * cosf(ang);
+                   si += inr[t] * sinf(ang);
+                 }
+                 xr[k] = sr;
+                 xi[k] = si;
+               }
+             }",
+        );
+        assert_eq!(found.len(), 1);
+        assert_eq!(found[0].kind, BlockKind::Fft);
+        assert_eq!(found[0].covered.len(), 2);
+    }
+
+    #[test]
+    fn mriq_has_zero_false_positives() {
+        let an = analyze_source("mriq.c", workloads::MRIQ_C).unwrap();
+        let found = detect(&an, &BlockDb::standard());
+        assert!(
+            found.is_empty(),
+            "MRI-Q must detect no blocks (computeQ is a NUFFT, not a DFT): {found:?}"
+        );
+    }
+
+    #[test]
+    fn stencil_and_vecadd_have_no_blocks() {
+        for (name, src) in [
+            ("stencil.c", workloads::STENCIL_C),
+            ("vecadd.c", workloads::VECADD_C),
+        ] {
+            let an = analyze_source(name, src).unwrap();
+            assert!(detect(&an, &BlockDb::standard()).is_empty(), "{name}");
+        }
+    }
+
+    #[test]
+    fn histo_histogram_function_is_detected() {
+        let an = analyze_source("histo.c", workloads::HISTO_C).unwrap();
+        let found = detect(&an, &BlockDb::standard());
+        assert_eq!(found.len(), 1, "{found:?}");
+        assert_eq!(found[0].kind, BlockKind::Histogram);
+        assert_eq!(found[0].func, "histogram");
+        assert_eq!(found[0].via, DetectVia::Both);
+    }
+
+    #[test]
+    fn empty_db_detects_nothing() {
+        let an = analyze_source("histo.c", workloads::HISTO_C).unwrap();
+        assert!(detect(&an, &BlockDb::empty()).is_empty());
+    }
+
+    #[test]
+    fn renamed_matmul_is_caught_by_signature_with_relaxed_shape() {
+        // Tiled-ish accumulation the precise product matcher misses
+        // (single array), but the gemm name + 3-deep shape accepts.
+        let found = blocks_of(
+            "void gemm(float *c, float *a, int n) {
+               for (int i = 0; i < n; i++) {
+                 for (int j = 0; j < n; j++) {
+                   float s = 0.0f;
+                   for (int k = 0; k < n; k++) {
+                     s += a[i * n + k] * a[k * n + j];
+                   }
+                   c[i * n + j] = s;
+                 }
+               }
+             }",
+        );
+        assert_eq!(found.len(), 1);
+        assert_eq!(found[0].kind, BlockKind::Matmul);
+        assert_eq!(found[0].via, DetectVia::Signature);
+    }
+}

@@ -1,0 +1,32 @@
+//! Function-block offloading (arXiv:2004.09883 companion flow): detect
+//! whole algorithmic blocks — matrix multiply, FFT, histogram — in the
+//! analyzed source and substitute tuned device **library / IP-core
+//! implementations** instead of (or alongside) per-loop directive
+//! offloading.
+//!
+//! Three pieces:
+//!
+//! * [`BlockDb`] — the database of known blocks with per-device
+//!   implementation models ([`BlockImplModel`]: GPU library à la
+//!   cuBLAS/cuFFT, FPGA IP core, many-core BLAS), each a calibrated
+//!   time/transfer/power estimate with the PR 2 component tags.
+//! * [`detect()`] — matches blocks in [`crate::canalyze`] output by
+//!   call-site signature *and* by loop idiom (the naive triple-loop
+//!   matmul, the O(n²) DFT double loop, the indirect-store histogram).
+//! * [`OffloadPlan`] — block destination genes layered on top of the
+//!   §3.1 loop bitmask; the whole search / verification / fleet stack
+//!   operates on the combined gene vector (DESIGN.md §11).
+//!
+//! Everything stays a deterministic pure function of
+//! `(source, config, seed)`: detection is static, block measurements are
+//! keyed into the shared [`crate::util::measure_cache::MeasureCache`]
+//! (schema v3) by the plan fingerprint, and a plan with **no** active
+//! blocks measures bit-identically to the pre-block behavior.
+
+pub mod db;
+pub mod detect;
+pub mod plan;
+
+pub use db::{AlgoClass, BlockDb, BlockEntry, BlockImplModel, BlockKind};
+pub use detect::{detect, DetectVia, DetectedBlock};
+pub use plan::OffloadPlan;

@@ -1,0 +1,118 @@
+//! Offload plans: block substitutions layered on top of the per-loop
+//! pattern bitmask.
+//!
+//! A plan is one bit vector — the first `n_loops` genes are the classic
+//! §3.1 loop genes (1 = offload that candidate loop), the remaining genes
+//! are **block destination genes** (1 = substitute that detected block
+//! with the destination device's library / IP-core implementation).
+//! Every search [`crate::search::Strategy`] operates on the combined
+//! vector unchanged; the verifier masks loop genes covered by an active
+//! block when resolving regions
+//! ([`crate::verifier::AppModel::regions`]).
+
+/// A combined loop + block plan over one application.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct OffloadPlan {
+    /// Number of leading loop genes.
+    pub n_loops: usize,
+    /// The full gene vector (`n_loops` loop genes, then block genes).
+    pub bits: Vec<bool>,
+}
+
+impl OffloadPlan {
+    /// Build a plan from a full gene vector.
+    pub fn new(n_loops: usize, bits: Vec<bool>) -> Self {
+        assert!(bits.len() >= n_loops, "plan shorter than its loop genes");
+        Self { n_loops, bits }
+    }
+
+    /// A loop-only plan (no detected blocks).
+    pub fn loop_only(bits: Vec<bool>) -> Self {
+        let n_loops = bits.len();
+        Self { n_loops, bits }
+    }
+
+    /// The loop genes.
+    pub fn loop_bits(&self) -> &[bool] {
+        &self.bits[..self.n_loops]
+    }
+
+    /// The block genes.
+    pub fn block_bits(&self) -> &[bool] {
+        &self.bits[self.n_loops..]
+    }
+
+    /// Number of block genes.
+    pub fn n_blocks(&self) -> usize {
+        self.bits.len() - self.n_loops
+    }
+
+    /// Indices of the active (substituted) blocks.
+    pub fn active_blocks(&self) -> Vec<usize> {
+        self.block_bits()
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Does this plan substitute any block?
+    pub fn has_active_blocks(&self) -> bool {
+        self.block_bits().iter().any(|&b| b)
+    }
+
+    /// Is this the all-CPU plan (no loops offloaded, no blocks
+    /// substituted)?
+    pub fn is_cpu_only(&self) -> bool {
+        self.bits.iter().all(|&b| !b)
+    }
+}
+
+impl std::fmt::Display for OffloadPlan {
+    /// `0101` for loop-only plans; `0101|10` when block genes exist.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for &b in self.loop_bits() {
+            write!(f, "{}", if b { '1' } else { '0' })?;
+        }
+        if self.n_blocks() > 0 {
+            write!(f, "|")?;
+            for &b in self.block_bits() {
+                write!(f, "{}", if b { '1' } else { '0' })?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_and_display() {
+        let p = OffloadPlan::new(3, vec![true, false, false, true, false]);
+        assert_eq!(p.loop_bits(), &[true, false, false]);
+        assert_eq!(p.block_bits(), &[true, false]);
+        assert_eq!(p.n_blocks(), 2);
+        assert_eq!(p.active_blocks(), vec![0]);
+        assert!(p.has_active_blocks());
+        assert!(!p.is_cpu_only());
+        assert_eq!(p.to_string(), "100|10");
+    }
+
+    #[test]
+    fn loop_only_plan_has_no_separator() {
+        let p = OffloadPlan::loop_only(vec![false, true]);
+        assert_eq!(p.n_blocks(), 0);
+        assert_eq!(p.to_string(), "01");
+        assert!(!p.has_active_blocks());
+        assert!(OffloadPlan::loop_only(vec![false, false]).is_cpu_only());
+    }
+
+    #[test]
+    #[should_panic(expected = "shorter")]
+    fn undersized_plan_panics() {
+        OffloadPlan::new(4, vec![true]);
+    }
+}

@@ -43,6 +43,7 @@ pub mod canalyze;
 pub mod codegen;
 pub mod coordinator;
 pub mod devices;
+pub mod funcblock;
 pub mod offload;
 pub mod power;
 pub mod runtime;
@@ -56,6 +57,7 @@ pub mod prelude {
     pub use crate::canalyze::{analyze_source, Analysis, LoopId, LoopInfo};
     pub use crate::coordinator::{run_job, Destination, JobConfig, JobReport};
     pub use crate::devices::{Accelerator, DeviceKind, TransferMode};
+    pub use crate::funcblock::{BlockDb, BlockKind, DetectedBlock, OffloadPlan};
     pub use crate::offload::{
         FpgaFlowConfig, GpuFlowConfig, MixedConfig, OffloadPattern, Requirements,
     };

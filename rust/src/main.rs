@@ -51,6 +51,12 @@ fn app() -> App {
                  the §3.2 narrowing funnel), exhaustive (whole space, small \
                  widths), anneal (deterministic hill-climber)",
             ),
+            flag(
+                "blocks",
+                "function-block offloading: detect algorithmic blocks \
+                 (matmul/fft/histogram) and let the search substitute \
+                 device library / IP-core implementations",
+            ),
             flag("json", "emit machine-readable JSON on stdout"),
         ]
     };
@@ -61,6 +67,13 @@ fn app() -> App {
             CmdSpec {
                 name: "analyze",
                 about: "analyze a source: loop table, parallelizability, profile",
+                opts: vec![flag("json", "emit JSON")],
+                positionals: vec!["source"],
+            },
+            CmdSpec {
+                name: "blocks",
+                about: "list detectable function blocks (matmul/fft/histogram) \
+                        and their device library / IP-core implementations",
                 opts: vec![flag("json", "emit JSON")],
                 positionals: vec!["source"],
             },
@@ -269,6 +282,9 @@ fn job_config(p: &Parsed) -> enadapt::Result<JobConfig> {
         cfg.ga_flow.transfer_opt = false;
         cfg.fpga_flow.transfer_opt = false;
     }
+    if p.flag("blocks") {
+        cfg.blocks = true;
+    }
     if let Ok(g) = p.get_usize("generations") {
         cfg.ga_flow.ga.generations = g;
     }
@@ -320,6 +336,91 @@ fn dispatch(p: &Parsed) -> enadapt::Result<()> {
                     "{} of {} loop statements are processable (offloadable)",
                     an.parallelizable_ids().len(),
                     an.n_loops()
+                );
+            }
+            Ok(())
+        }
+        "blocks" => {
+            let (name, src) = load_source(p.pos(0).unwrap())?;
+            let an = canalyze::analyze_source(&name, &src)?;
+            let db = enadapt::funcblock::BlockDb::standard();
+            let found = enadapt::funcblock::detect(&an, &db);
+            let impls_of = |kind| {
+                use enadapt::devices::DeviceKind;
+                [DeviceKind::Gpu, DeviceKind::Fpga, DeviceKind::ManyCore]
+                    .into_iter()
+                    .filter_map(|d| {
+                        db.entry(kind)
+                            .and_then(|e| e.impl_for(d))
+                            .map(|i| (d, i.library))
+                    })
+                    .collect::<Vec<_>>()
+            };
+            if p.flag("json") {
+                let blocks: Vec<Json> = found
+                    .iter()
+                    .map(|b| {
+                        Json::obj(vec![
+                            ("kind", Json::str(b.kind.name())),
+                            ("func", Json::str(b.func.clone())),
+                            ("line", Json::num(b.line as f64)),
+                            ("root", Json::num(b.root.0 as f64)),
+                            (
+                                "covered",
+                                Json::arr(
+                                    b.covered.iter().map(|id| Json::num(id.0 as f64)).collect(),
+                                ),
+                            ),
+                            ("via", Json::str(b.via.name())),
+                            (
+                                "impls",
+                                Json::obj(
+                                    impls_of(b.kind)
+                                        .into_iter()
+                                        .map(|(d, lib)| (d.name(), Json::str(lib)))
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect();
+                println!(
+                    "{}",
+                    Json::obj(vec![
+                        ("file", Json::str(an.file.clone())),
+                        ("n_blocks", Json::num(found.len() as f64)),
+                        ("blocks", Json::arr(blocks)),
+                    ])
+                    .to_string_pretty()
+                );
+            } else {
+                let mut t = enadapt::util::tablefmt::Table::new(&[
+                    "block", "kind", "func", "line", "root", "covered", "via", "implementations",
+                ]);
+                for (i, b) in found.iter().enumerate() {
+                    let covered: Vec<String> =
+                        b.covered.iter().map(|id| id.to_string()).collect();
+                    let impls: Vec<String> = impls_of(b.kind)
+                        .into_iter()
+                        .map(|(d, lib)| format!("{}: {}", d.name(), lib))
+                        .collect();
+                    t.row(&[
+                        format!("B{i}"),
+                        b.kind.name().to_string(),
+                        b.func.clone(),
+                        b.line.to_string(),
+                        b.root.to_string(),
+                        covered.join(","),
+                        b.via.name().to_string(),
+                        impls.join("; "),
+                    ]);
+                }
+                println!("{}", t.render());
+                println!(
+                    "{} function block(s) detected (run `enadapt offload {} --blocks` \
+                     to search block-substituted plans)",
+                    found.len(),
+                    an.file.trim_end_matches(".c"),
                 );
             }
             Ok(())

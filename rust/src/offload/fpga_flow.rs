@@ -73,6 +73,9 @@ pub struct FunnelStats {
     pub first_round: usize,
     /// Combination patterns measured.
     pub second_round: usize,
+    /// Function-block substitutions measured (detected blocks with an
+    /// FPGA IP-core implementation).
+    pub block_round: usize,
 }
 
 /// Narrowing-flow outcome.
@@ -88,6 +91,8 @@ pub struct FpgaFlowOutcome {
     pub first_round: Vec<Evaluated>,
     /// Second-round (combination) measurements.
     pub second_round: Vec<Evaluated>,
+    /// Block-substitution measurements (IP cores).
+    pub block_round: Vec<Evaluated>,
     /// The selected pattern (baseline if nothing improved).
     pub best: Evaluated,
     /// Non-dominated `(time × W·s × peak-W)` front of everything the
@@ -116,7 +121,7 @@ pub fn run(app: &AppModel, env: &VerifEnv, cfg: &FpgaFlowConfig) -> Result<FpgaF
     let baseline_value = cfg.fitness.value_of(&baseline);
 
     let mut funnel = FunnelStats {
-        candidates: app.genome_len(),
+        candidates: app.candidates.len(),
         ..Default::default()
     };
 
@@ -229,6 +234,29 @@ pub fn run(app: &AppModel, env: &VerifEnv, cfg: &FpgaFlowConfig) -> Result<FpgaF
         });
     }
 
+    // --- Stage 5b: function-block substitutions. Detected blocks with an
+    //     FPGA implementation are pre-verified IP cores: integrating one
+    //     costs a modest place-and-route run, not a from-scratch OpenCL
+    //     compile, so every available block is measured. ---
+    // Search-cost charge for integrating one IP core, seconds.
+    const IP_INTEGRATION_S: f64 = 1800.0;
+    let mut block_round = Vec::new();
+    for bi in 0..app.blocks.len() {
+        if app.block_impl(bi, DeviceKind::Fpga).is_none() {
+            continue;
+        }
+        let pattern = OffloadPattern::of_blocks(app, &[bi]);
+        env.charge_search_cost(IP_INTEGRATION_S);
+        let m = env.measure(app, pattern.bits(), DeviceKind::Fpga, xfer);
+        let value = cfg.fitness.value_of(&m);
+        block_round.push(Evaluated {
+            pattern,
+            measurement: m,
+            value,
+        });
+    }
+    funnel.block_round = block_round.len();
+
     // --- Stage 6: select the short-time, low-power pattern
     //     (scalarization-last over the measured set, operator-capped). ---
     let mut best = Evaluated {
@@ -236,7 +264,7 @@ pub fn run(app: &AppModel, env: &VerifEnv, cfg: &FpgaFlowConfig) -> Result<FpgaF
         measurement: baseline.clone(),
         value: baseline_value,
     };
-    for e in first_round.iter().chain(&second_round) {
+    for e in first_round.iter().chain(&second_round).chain(&block_round) {
         // Operator Watt cap: a measured peak above the cap is never
         // selected, regardless of its (timeout-penalized) value.
         if cfg.fitness.exceeds_cap(e.measurement.report.peak_w) {
@@ -250,12 +278,12 @@ pub fn run(app: &AppModel, env: &VerifEnv, cfg: &FpgaFlowConfig) -> Result<FpgaF
     // The Pareto front of the funnel's search log — what other operators'
     // scalarizations would pick their own knee from.
     let mut scored: Vec<Scored> =
-        Vec::with_capacity(1 + first_round.len() + second_round.len());
+        Vec::with_capacity(1 + first_round.len() + second_round.len() + block_round.len());
     scored.push(Scored {
         genome: Genome::zeros(app.genome_len()),
         objectives: baseline.objectives(),
     });
-    for e in first_round.iter().chain(&second_round) {
+    for e in first_round.iter().chain(&second_round).chain(&block_round) {
         scored.push(Scored {
             genome: e.pattern.genome.clone(),
             objectives: e.measurement.objectives(),
@@ -269,6 +297,7 @@ pub fn run(app: &AppModel, env: &VerifEnv, cfg: &FpgaFlowConfig) -> Result<FpgaF
         funnel,
         first_round,
         second_round,
+        block_round,
         best,
         front,
         search_cost_s: env.search_cost_s() - cost_before,

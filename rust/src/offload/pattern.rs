@@ -36,6 +36,21 @@ impl OffloadPattern {
         }
     }
 
+    /// Pattern substituting exactly one detected function block (all
+    /// loop genes off).
+    pub fn of_blocks(app: &AppModel, block_indices: &[usize]) -> Self {
+        let mut g = Genome::zeros(app.genome_len());
+        let n = app.candidates.len();
+        for &bi in block_indices {
+            assert!(bi < app.blocks.len(), "block index in range");
+            g.bits[n + bi] = true;
+        }
+        Self {
+            genome: g,
+            candidates: app.candidates.clone(),
+        }
+    }
+
     /// Pattern offloading a set of candidate loops.
     pub fn of_loops(app: &AppModel, ids: &[LoopId]) -> Self {
         let mut g = Genome::zeros(app.genome_len());
@@ -76,6 +91,20 @@ impl OffloadPattern {
     pub fn bits(&self) -> &[bool] {
         &self.genome.bits
     }
+
+    /// Indices of the active block destination genes (empty for loop-only
+    /// genomes). Delegates to [`crate::funcblock::OffloadPlan`] — the
+    /// single owner of the gene-split rule.
+    pub fn active_block_indices(&self) -> Vec<usize> {
+        self.plan().active_blocks()
+    }
+
+    /// This pattern as an [`crate::funcblock::OffloadPlan`] — the
+    /// canonical loop-vs-block split used by the fleet/sched renderers
+    /// (`0101` for loop-only plans, `0101|10` with block genes).
+    pub fn plan(&self) -> crate::funcblock::OffloadPlan {
+        crate::funcblock::OffloadPlan::new(self.candidates.len(), self.genome.bits.clone())
+    }
 }
 
 impl std::fmt::Display for OffloadPattern {
@@ -84,7 +113,13 @@ impl std::fmt::Display for OffloadPattern {
             return write!(f, "{} (cpu-only)", self.genome);
         }
         let ids: Vec<String> = self.offloaded_ids().iter().map(|i| i.to_string()).collect();
-        write!(f, "{} [{}]", self.genome, ids.join(","))
+        write!(f, "{} [{}]", self.genome, ids.join(","))?;
+        let blocks = self.active_block_indices();
+        if !blocks.is_empty() {
+            let bs: Vec<String> = blocks.iter().map(|b| format!("B{b}")).collect();
+            write!(f, " +blocks[{}]", bs.join(","))?;
+        }
+        Ok(())
     }
 }
 

@@ -2,6 +2,15 @@
 //! to the device, 0 = keep on the CPU (§3.1: "it sets 1 for GPU execution
 //! and 0 for CPU execution; the value is set and geneticized"). Shared by
 //! every [`super::Strategy`], not just the GA.
+//!
+//! When function-block offloading is enabled
+//! ([`crate::funcblock`]), the genome gains one **block destination
+//! gene** per detected block, appended after the loop genes: 1 =
+//! substitute the block with the destination device's library / IP-core
+//! implementation. Strategies treat the combined vector uniformly; the
+//! verifier masks loop genes covered by an active block
+//! ([`crate::verifier::AppModel::regions`]). [`Genome::plan_split`] and
+//! [`Genome::block_ones`] are the layout accessors.
 
 use crate::util::prng::Pcg32;
 
@@ -60,6 +69,19 @@ impl Genome {
         self.bits.is_empty()
     }
 
+    /// Split a plan genome into `(loop genes, block genes)` given the
+    /// number of leading loop genes.
+    pub fn plan_split(&self, n_loops: usize) -> (&[bool], &[bool]) {
+        assert!(n_loops <= self.bits.len(), "more loop genes than bits");
+        self.bits.split_at(n_loops)
+    }
+
+    /// Number of active block destination genes (bits after the first
+    /// `n_loops` loop genes).
+    pub fn block_ones(&self, n_loops: usize) -> usize {
+        self.plan_split(n_loops).1.iter().filter(|&&b| b).count()
+    }
+
     /// Hamming distance to another genome.
     pub fn distance(&self, other: &Genome) -> usize {
         assert_eq!(self.len(), other.len());
@@ -115,6 +137,18 @@ mod tests {
         }
         let frac = total as f64 / (200.0 * 16.0);
         assert!((frac - 0.25).abs() < 0.05, "frac {frac}");
+    }
+
+    #[test]
+    fn plan_split_and_block_ones() {
+        let g = Genome {
+            bits: vec![true, false, false, true, true],
+        };
+        let (loops, blocks) = g.plan_split(3);
+        assert_eq!(loops, &[true, false, false]);
+        assert_eq!(blocks, &[true, true]);
+        assert_eq!(g.block_ones(3), 2);
+        assert_eq!(g.block_ones(5), 0, "loop-only view has no block genes");
     }
 
     #[test]

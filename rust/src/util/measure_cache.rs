@@ -38,8 +38,14 @@ pub struct MeasureKey {
     /// Application identity (source content + calibration, see
     /// [`crate::verifier::AppModel::measure_hash`]).
     pub app_hash: u64,
-    /// Offload pattern (bit per candidate loop).
+    /// Offload plan genes (loop genes, then block destination genes).
     pub pattern: Vec<bool>,
+    /// Plan identity: what the block genes *mean* — a hash of the
+    /// detected blocks and the implementation database
+    /// ([`crate::verifier::AppModel`]`::plan_fingerprint`). 0 for
+    /// loop-only plans, so schema-v2 entries keep hitting after the v3
+    /// migration.
+    pub plan: u64,
     /// Destination device.
     pub device: DeviceKind,
     /// §3.1 transfer mode.
@@ -134,11 +140,12 @@ impl MeasureCache {
             .collect();
         // Stable order so persisted files diff cleanly.
         entries.sort_by(|a, b| key_sort_token(&a.0).cmp(&key_sort_token(&b.0)));
-        // Schema v2: measurements carry an EnergyReport (per-component
-        // attribution + sensor metadata). v1 files (scalars only) are
-        // still loadable — see `from_json`.
+        // Schema v3: keys carry the plan fingerprint (function-block
+        // substitutions, DESIGN.md §11). v2 files (per-component
+        // EnergyReport, no plan) and v1 files (scalars only) are still
+        // loadable — see `from_json`.
         Json::obj(vec![
-            ("version", Json::num(2.0)),
+            ("version", Json::num(3.0)),
             (
                 "entries",
                 Json::arr(
@@ -165,6 +172,7 @@ impl MeasureCache {
                                     }),
                                 ),
                                 ("env", Json::str(format!("{:016x}", k.env_fingerprint))),
+                                ("plan", Json::str(format!("{:016x}", k.plan))),
                                 ("measurement", m.to_json_full()),
                             ])
                         })
@@ -178,19 +186,22 @@ impl MeasureCache {
     /// start at zero; malformed entries are an error (a corrupt cache file
     /// should be deleted, not silently half-loaded).
     ///
-    /// Versioned migration: schema v2 is the current format; v1 files
-    /// (pre-attribution, no `report` object per measurement) load with a
-    /// synthesized legacy [`crate::power::EnergyReport`]. Unknown versions
-    /// are a clean error rather than a misparse.
+    /// Versioned migration: schema v3 is the current format (per-key plan
+    /// fingerprint); v2 files (no `plan` per entry) migrate with plan 0 —
+    /// exactly the fingerprint loop-only plans key with, so every old
+    /// entry keeps hitting; v1 files (pre-attribution, no `report` object
+    /// per measurement) additionally load with a synthesized legacy
+    /// [`crate::power::EnergyReport`]. Unknown versions are a clean error
+    /// rather than a misparse.
     pub fn from_json(j: &Json) -> Result<Self> {
         let bad = |what: &str| Error::Config(format!("measurement cache: {what}"));
         let version = j
             .get("version")
             .and_then(|v| v.as_f64())
             .ok_or_else(|| bad("missing 'version'"))?;
-        if version != 1.0 && version != 2.0 {
+        if version != 1.0 && version != 2.0 && version != 3.0 {
             return Err(bad(&format!(
-                "unsupported schema version {version} (supported: 1, 2)"
+                "unsupported schema version {version} (supported: 1, 2, 3)"
             )));
         }
         let entries = j
@@ -223,6 +234,15 @@ impl MeasureCache {
                     },
                     env_fingerprint: parse_hex(e.get("env").and_then(|v| v.as_str()))
                         .ok_or_else(|| bad("bad env fingerprint"))?,
+                    // v1/v2 entries predate block plans and migrate as
+                    // loop-only (plan 0); a v3 entry *must* carry its
+                    // plan — a missing field there is corruption, not a
+                    // legacy file.
+                    plan: match e.get("plan") {
+                        Some(p) => parse_hex(p.as_str()).ok_or_else(|| bad("bad plan hash"))?,
+                        None if version < 3.0 => 0,
+                        None => return Err(bad("missing 'plan' in a v3 entry")),
+                    },
                 };
                 let m = e
                     .get("measurement")
@@ -249,10 +269,11 @@ impl MeasureCache {
     }
 }
 
-fn key_sort_token(k: &MeasureKey) -> (u64, u64, String, &'static str, u8) {
+fn key_sort_token(k: &MeasureKey) -> (u64, u64, u64, String, &'static str, u8) {
     (
         k.app_hash,
         k.env_fingerprint,
+        k.plan,
         k.pattern.iter().map(|&b| if b { '1' } else { '0' }).collect(),
         k.device.name(),
         matches!(k.xfer, TransferMode::PerEntry) as u8,
@@ -306,6 +327,7 @@ mod tests {
         MeasureKey {
             app_hash: 7,
             pattern: vec![bit],
+            plan: 0,
             device: DeviceKind::Fpga,
             xfer: TransferMode::Batched,
             env_fingerprint: env,
@@ -418,9 +440,82 @@ mod tests {
         assert_eq!(m.energy_ws, 222.0);
         assert_eq!(m.report.meter, "legacy-v1");
         assert!((m.report.components.total_ws() - m.energy_ws).abs() < 1e-9);
-        // Re-serializing upgrades the file to schema v2.
+        // Re-serializing upgrades the file to schema v3.
         let j = cache.to_json();
-        assert_eq!(j.get("version").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("version").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn v2_cache_file_migrates_to_v3_and_round_trips() {
+        // A v2 file as PR 2's code wrote it: version 2, full EnergyReport
+        // per measurement, but no per-entry "plan" field.
+        let v2 = r#"{
+          "version": 2,
+          "entries": [{
+            "app_hash": "0000000000000007",
+            "pattern": "1",
+            "device": "fpga",
+            "xfer": "batched",
+            "env": "0000000000000001",
+            "measurement": {
+              "app": "t.c", "device": "fpga", "pattern": "1",
+              "regions": [0], "time_s": 2.0, "mean_w": 111.0,
+              "energy_ws": 222.0, "timed_out": false, "failure": null,
+              "cpu_s": 0.0, "transfer_s": 0.0, "kernel_s": 2.0,
+              "trace": [[0.0, 121.0], [2.0, 111.0]],
+              "phase": "verification",
+              "report": {
+                "meter": "ipmi", "sample_hz": 1.0, "time_s": 2.0,
+                "energy_ws": 222.0, "mean_w": 111.0, "peak_w": 121.0,
+                "profile_peak_w": 121.0,
+                "components_ws": {
+                  "idle": 210.0, "host_cpu": 6.0, "accel": 4.0,
+                  "transfer": 2.0
+                }
+              }
+            }
+          }]
+        }"#;
+        let cache = MeasureCache::from_json(&json::parse(v2).unwrap()).unwrap();
+        assert_eq!(cache.len(), 1);
+        // v2 entries key as loop-only plans (plan 0), so the lookup a
+        // loop-only run performs today still hits.
+        let (m, hit) = cache.get_or_measure(key(true, 1), || fake_measurement(0.0));
+        assert!(hit, "migrated v2 entry answers the plan-0 lookup");
+        assert_eq!(m.energy_ws, 222.0);
+        assert_eq!(m.report.meter, "ipmi");
+        // Round trip: re-serializing upgrades to v3 with an explicit
+        // plan field, and the upgraded file loads back identically.
+        let j = cache.to_json();
+        assert_eq!(j.get("version").unwrap().as_f64(), Some(3.0));
+        let entry = &j.get("entries").unwrap().as_arr().unwrap()[0];
+        assert_eq!(entry.get("plan").unwrap().as_str(), Some("0000000000000000"));
+        let back = MeasureCache::from_json(&j).unwrap();
+        let (m2, hit2) = back.get_or_measure(key(true, 1), || fake_measurement(0.0));
+        assert!(hit2);
+        assert_eq!(m2.energy_ws, m.energy_ws);
+        assert_eq!(m2.report, m.report);
+        // Strictness: the same entry declared as v3 *without* a plan
+        // field is corruption, not a legacy file.
+        let v3_missing_plan = v2.replace("\"version\": 2", "\"version\": 3");
+        let err = MeasureCache::from_json(&json::parse(&v3_missing_plan).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("missing 'plan'"), "{err}");
+    }
+
+    #[test]
+    fn distinct_plan_fingerprints_do_not_collide() {
+        let c = MeasureCache::new();
+        let block_key = MeasureKey {
+            plan: 0xdead_beef,
+            ..key(true, 1)
+        };
+        c.get_or_measure(key(true, 1), || fake_measurement(1.0));
+        let (m, hit) = c.get_or_measure(block_key, || fake_measurement(9.0));
+        assert!(!hit, "a block-bearing plan must not reuse the loop-only trial");
+        assert_eq!(m.time_s, 9.0);
+        assert_eq!(c.len(), 2);
     }
 
     #[test]

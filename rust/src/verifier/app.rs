@@ -11,7 +11,8 @@
 //! (≈ `√s` — documented approximation, DESIGN.md §6).
 
 use crate::canalyze::{Analysis, LoopId};
-use crate::devices::{CpuModel, NestWork};
+use crate::devices::{CpuModel, DeviceKind, NestWork};
+use crate::funcblock::{BlockDb, BlockImplModel, DetectedBlock};
 use crate::{Error, Result};
 
 /// Full-scale work attributed to one loop statement.
@@ -29,6 +30,19 @@ pub struct LoopWork {
     pub parallelizable: bool,
 }
 
+/// Full-scale work of one detected function block (the nest a device
+/// library / IP core substitutes).
+#[derive(Debug, Clone)]
+pub struct BlockWork {
+    /// The detection record (kind, root loop, covered ids).
+    pub detected: DetectedBlock,
+    /// Inclusive work of the covered nest (same summary the device
+    /// models consume).
+    pub work: NestWork,
+    /// Host CPU time removed when the block is substituted, seconds.
+    pub cpu_time_s: f64,
+}
+
 /// The application as the verification environment sees it.
 #[derive(Debug, Clone)]
 pub struct AppModel {
@@ -37,6 +51,15 @@ pub struct AppModel {
     /// Candidate loop ids in genome order (the paper's "processable loop
     /// statements" — 16 for MRI-Q).
     pub candidates: Vec<LoopId>,
+    /// Detected function blocks in genome order (after the loop genes);
+    /// empty unless built via [`AppModel::from_analysis_with_blocks`].
+    pub blocks: Vec<BlockWork>,
+    /// Implementation database the blocks were detected against.
+    pub block_db: BlockDb,
+    /// Plan identity for the measurement cache: 0 for loop-only models,
+    /// else a hash of the detected blocks and the implementation
+    /// database (schema v3 key component — DESIGN.md §11).
+    pub plan_fingerprint: u64,
     /// Work for every loop (indexed by `LoopId.0`).
     pub loops: Vec<LoopWork>,
     /// Full-app CPU-only time (the calibration target), seconds.
@@ -121,6 +144,9 @@ impl AppModel {
         Ok(Self {
             name: an.file.clone(),
             candidates: an.parallelizable_ids(),
+            blocks: Vec::new(),
+            block_db: BlockDb::empty(),
+            plan_fingerprint: 0,
             loops,
             total_cpu_s: target_cpu_s,
             work_scale: s,
@@ -128,23 +154,130 @@ impl AppModel {
         })
     }
 
-    /// Number of genes (candidate loops).
+    /// [`AppModel::from_analysis`] plus function-block detection against
+    /// `db`: detected blocks become destination genes appended after the
+    /// loop genes, and the plan fingerprint keys their measurements in
+    /// the shared cache. When nothing is detected the model is
+    /// indistinguishable from the loop-only one (same genome, fingerprint
+    /// 0 — the bit-identity guarantee tested in `tests/funcblock.rs`).
+    pub fn from_analysis_with_blocks(
+        an: &Analysis,
+        cpu: &CpuModel,
+        target_cpu_s: f64,
+        db: &BlockDb,
+    ) -> Result<Self> {
+        let mut model = Self::from_analysis(an, cpu, target_cpu_s)?;
+        let detected = crate::funcblock::detect(an, db);
+        if detected.is_empty() {
+            return Ok(model);
+        }
+        let blocks: Vec<BlockWork> = {
+            let loops = &model.loops;
+            detected
+                .into_iter()
+                .map(|d| BlockWork {
+                    work: loops[d.root.0].work,
+                    cpu_time_s: loops[d.root.0].cpu_time_s,
+                    detected: d,
+                })
+                .collect()
+        };
+        model.blocks = blocks;
+        let words: Vec<u64> = model
+            .blocks
+            .iter()
+            .flat_map(|b| {
+                let mut w = vec![b.detected.kind.tag(), b.detected.root.0 as u64];
+                w.extend(b.detected.covered.iter().map(|id| id.0 as u64 + 1));
+                w
+            })
+            .collect();
+        model.plan_fingerprint =
+            crate::util::fasthash::fold_u64s(db.fingerprint(), words);
+        model.block_db = db.clone();
+        Ok(model)
+    }
+
+    /// Number of genes: candidate loops plus detected blocks.
     pub fn genome_len(&self) -> usize {
+        self.candidates.len() + self.blocks.len()
+    }
+
+    /// Number of leading loop genes.
+    pub fn n_loop_genes(&self) -> usize {
         self.candidates.len()
     }
 
-    /// Resolve a genome (bit per candidate) to the *offload regions*:
-    /// maximal selected loops with no selected ancestor. A selected inner
+    /// Split a gene vector into `(loop genes, block genes)`. Loop-only
+    /// vectors (no block genes) are accepted for compatibility with
+    /// pre-block callers.
+    pub fn split_bits<'a>(&self, bits: &'a [bool]) -> (&'a [bool], &'a [bool]) {
+        let n = self.candidates.len();
+        if bits.len() == n {
+            (bits, &[])
+        } else {
+            assert_eq!(bits.len(), self.genome_len(), "genome arity");
+            bits.split_at(n)
+        }
+    }
+
+    /// Indices of the blocks a plan substitutes.
+    pub fn active_blocks(&self, bits: &[bool]) -> Vec<usize> {
+        let (_, block_bits) = self.split_bits(bits);
+        block_bits
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// The implementation model of block `idx` on a destination.
+    pub fn block_impl(&self, idx: usize, device: DeviceKind) -> Option<&BlockImplModel> {
+        self.block_db
+            .entry(self.blocks[idx].detected.kind)
+            .and_then(|e| e.impl_for(device))
+    }
+
+    /// Is candidate loop `id` covered by (or an ancestor of) any active
+    /// block's nest? Such loop genes are masked out — the substituted
+    /// implementation owns the whole nest.
+    fn covered_by_active_block(&self, id: LoopId, block_bits: &[bool]) -> bool {
+        for (bi, &on) in block_bits.iter().enumerate() {
+            if !on {
+                continue;
+            }
+            let d = &self.blocks[bi].detected;
+            if d.covered.contains(&id) {
+                return true;
+            }
+            // Ancestors of the block root: offloading them would re-own
+            // the substituted nest, so they are masked too.
+            let mut p = self.loops[d.root.0].parent;
+            while let Some(a) = p {
+                if a == id {
+                    return true;
+                }
+                p = self.loops[a.0].parent;
+            }
+        }
+        false
+    }
+
+    /// Resolve a plan (loop genes + block genes) to the *offload
+    /// regions*: maximal selected loops with no selected ancestor, with
+    /// loop genes covered by an active block masked out. A selected inner
     /// loop whose ancestor is also selected is subsumed by the ancestor's
     /// region (directive semantics: the outer pragma owns the nest).
     pub fn regions(&self, bits: &[bool]) -> Vec<LoopId> {
-        assert_eq!(bits.len(), self.candidates.len(), "genome arity");
+        let (loop_bits, block_bits) = self.split_bits(bits);
         let selected: Vec<LoopId> = self
             .candidates
             .iter()
-            .zip(bits)
+            .zip(loop_bits)
             .filter(|(_, &b)| b)
             .map(|(&id, _)| id)
+            .filter(|&id| !self.covered_by_active_block(id, block_bits))
             .collect();
         let is_selected = |id: LoopId| selected.contains(&id);
         selected
@@ -168,6 +301,18 @@ impl AppModel {
     pub fn host_remainder_s(&self, regions: &[LoopId]) -> f64 {
         let offloaded: f64 = regions.iter().map(|r| self.loops[r.0].cpu_time_s).sum();
         (self.total_cpu_s - offloaded).max(0.0)
+    }
+
+    /// CPU time left on the host for a full plan: offloaded regions plus
+    /// substituted blocks both leave the host. Region masking guarantees
+    /// the two sets never overlap.
+    pub fn host_remainder_plan(&self, regions: &[LoopId], active_blocks: &[usize]) -> f64 {
+        let offloaded: f64 = regions.iter().map(|r| self.loops[r.0].cpu_time_s).sum();
+        let substituted: f64 = active_blocks
+            .iter()
+            .map(|&bi| self.blocks[bi].cpu_time_s)
+            .sum();
+        (self.total_cpu_s - offloaded - substituted).max(0.0)
     }
 }
 
@@ -275,5 +420,51 @@ mod tests {
         )
         .unwrap();
         assert!(AppModel::from_analysis(&an, &CpuModel::r740(), 1.0).is_err());
+    }
+
+    #[test]
+    fn block_model_extends_genome_and_masks_covered_loops() {
+        let an = analyze_source("gemm.c", workloads::GEMM_C).unwrap();
+        let db = crate::funcblock::BlockDb::standard();
+        let plain = AppModel::from_analysis(&an, &CpuModel::r740(), 14.0).unwrap();
+        let app = AppModel::from_analysis_with_blocks(&an, &CpuModel::r740(), 14.0, &db).unwrap();
+        assert_eq!(app.blocks.len(), 1, "one matmul block");
+        assert_eq!(app.genome_len(), plain.genome_len() + 1);
+        assert_ne!(app.plan_fingerprint, 0);
+        assert_eq!(plain.plan_fingerprint, 0);
+
+        // A plan with the block active masks the covered loop genes.
+        let root = app.blocks[0].detected.root;
+        let pos = app.candidates.iter().position(|&c| c == root).unwrap();
+        let mut bits = vec![false; app.genome_len()];
+        bits[pos] = true;
+        *bits.last_mut().unwrap() = true; // block gene
+        assert!(app.regions(&bits).is_empty(), "covered loop masked");
+        assert_eq!(app.active_blocks(&bits), vec![0]);
+        // Block inactive: the loop gene works exactly as before.
+        *bits.last_mut().unwrap() = false;
+        assert_eq!(app.regions(&bits), vec![root]);
+        assert!(app.active_blocks(&bits).is_empty());
+
+        // Host remainder: substituting the block removes its nest time.
+        let rem = app.host_remainder_plan(&[], &[0]);
+        assert!(rem < 0.2 * app.total_cpu_s, "remainder {rem}");
+        assert_eq!(app.host_remainder_plan(&[], &[]), app.total_cpu_s);
+        // The gemm nest has an implementation on every accelerator.
+        for d in [DeviceKind::Gpu, DeviceKind::Fpga, DeviceKind::ManyCore] {
+            assert!(app.block_impl(0, d).is_some(), "{d}");
+        }
+    }
+
+    #[test]
+    fn blockless_workload_builds_identical_model_with_blocks_enabled() {
+        let an = analyze_source("mriq.c", workloads::MRIQ_C).unwrap();
+        let db = crate::funcblock::BlockDb::standard();
+        let plain = AppModel::from_analysis(&an, &CpuModel::r740(), 14.0).unwrap();
+        let with = AppModel::from_analysis_with_blocks(&an, &CpuModel::r740(), 14.0, &db).unwrap();
+        assert!(with.blocks.is_empty(), "MRI-Q detects no blocks");
+        assert_eq!(with.genome_len(), plain.genome_len());
+        assert_eq!(with.plan_fingerprint, 0);
+        assert_eq!(with.measure_hash, plain.measure_hash);
     }
 }

@@ -244,6 +244,7 @@ impl VerifEnv {
             let key = MeasureKey {
                 app_hash: app.measure_hash,
                 pattern: bits.to_vec(),
+                plan: app.plan_fingerprint,
                 device: dest,
                 xfer,
                 env_fingerprint: self.fingerprint,
@@ -266,17 +267,27 @@ impl VerifEnv {
         xfer: TransferMode,
     ) -> Measurement {
         self.trials.fetch_add(1, Ordering::Relaxed);
-        // Per-trial RNG derived purely from (seed, pattern, dest, xfer):
+        let (loop_bits, _) = app.split_bits(bits);
+        // Substituted blocks (inert on the plain-CPU destination, like
+        // the loop genes).
+        let active: Vec<usize> = match dest {
+            DeviceKind::Cpu => Vec::new(),
+            _ => app.active_blocks(bits),
+        };
+        // Per-trial RNG derived purely from (seed, plan, dest, xfer):
         // measurements are reproducible regardless of thread scheduling,
         // and re-measuring the same pattern yields the same trace (the
         // real testbed's run-to-run noise is modeled by the jitter draw,
-        // not by call order).
+        // not by call order). Only the *loop* genes and the *active*
+        // blocks feed the stream, so a plan with no substituted blocks is
+        // bit-identical to the pre-block behavior even when the genome
+        // carries (all-zero) block genes.
         let mut h: u64 = 0xcbf2_9ce4_8422_2325 ^ self.seed;
         let mut mix = |b: u64| {
             h ^= b;
             h = h.wrapping_mul(0x0000_0100_0000_01B3);
         };
-        for &b in bits {
+        for &b in loop_bits {
             mix(b as u64 + 1);
         }
         mix(match dest {
@@ -289,6 +300,9 @@ impl VerifEnv {
             TransferMode::Batched => 23,
             TransferMode::PerEntry => 29,
         });
+        for &bi in &active {
+            mix(131 + bi as u64);
+        }
         let mut rng = Pcg32::seed_from_u64(h);
 
         let regions: Vec<LoopId> = match dest {
@@ -303,7 +317,7 @@ impl VerifEnv {
         let mut breakdown = TrialBreakdown::default();
         let mut failed: Option<String> = None;
 
-        let host_s = app.host_remainder_s(&regions);
+        let host_s = app.host_remainder_plan(&regions, &active);
         let jitter = |rng: &mut Pcg32, t: f64| -> f64 {
             (t * (1.0 + rng.normal_ms(0.0, self.cfg.timing_jitter))).max(0.0)
         };
@@ -329,6 +343,33 @@ impl VerifEnv {
             profile.push(kernel, est.kernel_power(idle));
             breakdown.transfer_s += transfer;
             breakdown.kernel_s += kernel;
+        }
+
+        // Substituted function blocks: the device library / IP core runs
+        // the whole nest, with the same transfer/kernel phase shape and
+        // component tags as an offloaded region.
+        if failed.is_none() {
+            for &bi in &active {
+                let bw = &app.blocks[bi];
+                match app.block_impl(bi, dest) {
+                    None => {
+                        failed = Some(format!(
+                            "no {} implementation for {dest}",
+                            bw.detected.kind
+                        ));
+                        break;
+                    }
+                    Some(im) => {
+                        let est = im.estimate(&bw.work, xfer);
+                        let transfer = jitter(&mut rng, est.transfer_s);
+                        let kernel = jitter(&mut rng, est.compute_s + est.launch_s);
+                        profile.push(transfer, est.transfer_power(idle, self.cfg.cpu.active_w));
+                        profile.push(kernel, est.kernel_power(idle));
+                        breakdown.transfer_s += transfer;
+                        breakdown.kernel_s += kernel;
+                    }
+                }
+            }
         }
 
         // Host epilogue.

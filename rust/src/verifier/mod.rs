@@ -7,6 +7,6 @@ pub mod app;
 pub mod env;
 pub mod trial;
 
-pub use app::{AppModel, LoopWork};
+pub use app::{AppModel, BlockWork, LoopWork};
 pub use env::{ServerModel, VerifEnv, VerifEnvConfig};
 pub use trial::{Measurement, PhaseKind, TrialBreakdown};

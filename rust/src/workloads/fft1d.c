@@ -1,0 +1,47 @@
+/*
+ * 1-D Fourier transform, written as the naive O(n^2) DFT double loop the
+ * function-block detector must recognize: the twiddle angle is computed
+ * from BOTH induction variables (k * t), which is what separates a true
+ * DFT from MRI-Q's non-uniform variant (whose phase comes from array
+ * elements). Block offloading replaces the whole nest with an
+ * O(n log n) library FFT (cuFFT / FFTW / streaming IP core).
+ */
+
+void fft1d(float *xr, float *xi, float *inr, float *ini, int n) {
+  for (int k = 0; k < n; k++) {
+    float sr = 0.0f;
+    float si = 0.0f;
+    for (int t = 0; t < n; t++) {
+      float ang = 6.2831853f * (float) k * (float) t / (float) n;
+      float c = cosf(ang);
+      float s = sinf(ang);
+      sr += inr[t] * c + ini[t] * s;
+      si += ini[t] * c - inr[t] * s;
+    }
+    xr[k] = sr;
+    xi[k] = si;
+  }
+}
+
+int main() {
+  float inr[96];
+  float ini[96];
+  float xr[96];
+  float xi[96];
+
+  for (int i = 0; i < 96; i++) {
+    inr[i] = sinf(0.21f * (float) i) + 0.5f * sinf(0.57f * (float) i);
+  }
+  for (int i = 0; i < 96; i++) {
+    ini[i] = 0.0f;
+  }
+
+  fft1d(xr, xi, inr, ini, 96);
+
+  float energy = 0.0f;
+  for (int k = 0; k < 96; k++) {
+    energy += xr[k] * xr[k] + xi[k] * xi[k];
+  }
+  printf("%f %f %f\n", xr[0], xi[1], energy);
+  return 0;
+}

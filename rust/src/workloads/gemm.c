@@ -1,0 +1,45 @@
+/*
+ * Dense matrix multiply, written as the naive triple loop the
+ * function-block detector must recognize: c = a * b over n x n matrices
+ * stored row-major in 1-D arrays. Loop-only offloading can ship the
+ * outer nest to a device as-is; block offloading replaces the whole
+ * gemm() nest with a tuned library (cuBLAS) or a systolic IP core.
+ */
+
+void gemm(float *c, float *a, float *b, int n) {
+  for (int i = 0; i < n; i++) {
+    for (int j = 0; j < n; j++) {
+      float s = 0.0f;
+      for (int k = 0; k < n; k++) {
+        s += a[i * n + k] * b[k * n + j];
+      }
+      c[i * n + j] = s;
+    }
+  }
+}
+
+int main() {
+  float a[1600];
+  float b[1600];
+  float c[1600];
+
+  for (int i = 0; i < 1600; i++) {
+    a[i] = 0.001f * (float) (i % 97);
+  }
+  for (int i = 0; i < 1600; i++) {
+    b[i] = 0.5f - 0.002f * (float) (i % 53);
+  }
+
+  gemm(c, a, b, 40);
+
+  float trace = 0.0f;
+  for (int i = 0; i < 40; i++) {
+    trace += c[i * 40 + i];
+  }
+  float total = 0.0f;
+  for (int i = 0; i < 1600; i++) {
+    total += c[i];
+  }
+  printf("%f %f\n", trace, total);
+  return 0;
+}

@@ -6,6 +6,10 @@
 //! * [`STENCIL_C`] — 2D Jacobi stencil (IoT image-processing stand-in).
 //! * [`HISTO_C`] — histogram with non-parallelizable binning/scan loops.
 //! * [`VECADD_C`] — transfer-dominated quickstart workload.
+//! * [`GEMM_C`] — naive triple-loop matrix multiply (the
+//!   [`crate::funcblock`] matmul detection target).
+//! * [`FFT1D_C`] — naive O(n²) DFT double loop (the funcblock FFT
+//!   detection target).
 
 /// Parboil MRI-Q (C subset), 16 processable loops — the paper's §4 subject.
 pub const MRIQ_C: &str = include_str!("mriq.c");
@@ -18,6 +22,12 @@ pub const HISTO_C: &str = include_str!("histo.c");
 
 /// Vector addition (quickstart).
 pub const VECADD_C: &str = include_str!("vecadd.c");
+
+/// Naive triple-loop dense matrix multiply (function-block target).
+pub const GEMM_C: &str = include_str!("gemm.c");
+
+/// Naive O(n²) DFT double loop (function-block target).
+pub const FFT1D_C: &str = include_str!("fft1d.c");
 
 /// Resolve a user-supplied name to the canonical `(name, source)` pair.
 /// Tolerant: matching is case-insensitive, surrounding whitespace is
@@ -48,6 +58,8 @@ pub const ALL: &[(&str, &str)] = &[
     ("stencil", STENCIL_C),
     ("histo", HISTO_C),
     ("vecadd", VECADD_C),
+    ("gemm", GEMM_C),
+    ("fft1d", FFT1D_C),
 ];
 
 #[cfg(test)]
@@ -139,7 +151,24 @@ mod tests {
 
     #[test]
     fn names_lists_all() {
-        assert_eq!(names(), vec!["mriq", "stencil", "histo", "vecadd"]);
+        assert_eq!(
+            names(),
+            vec!["mriq", "stencil", "histo", "vecadd", "gemm", "fft1d"]
+        );
+    }
+
+    #[test]
+    fn gemm_and_fft1d_have_the_naive_block_idioms() {
+        let gemm = analyze_source("gemm.c", GEMM_C).unwrap();
+        // Triple loop in gemm() + four main loops.
+        assert_eq!(gemm.n_loops(), 7);
+        assert!(gemm.loops.iter().any(|l| l.func == "gemm" && l.depth == 2));
+        let fft = analyze_source("fft1d.c", FFT1D_C).unwrap();
+        assert!(fft.loops.iter().any(|l| l.func == "fft1d" && l.depth == 1));
+        // Both profile cleanly and have offload candidates.
+        assert!(gemm.profile.is_some() && fft.profile.is_some());
+        assert!(!gemm.parallelizable_ids().is_empty());
+        assert!(!fft.parallelizable_ids().is_empty());
     }
 
     #[test]

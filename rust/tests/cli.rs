@@ -13,8 +13,9 @@ fn enadapt(args: &[&str]) -> std::process::Output {
 /// Every subcommand the CLI exposes, in help order. The snapshot below
 /// and the README drift check both key off this list — extending the CLI
 /// means updating all three together.
-const COMMANDS: [&str; 8] = [
+const COMMANDS: [&str; 9] = [
     "analyze",
+    "blocks",
     "offload",
     "fleet",
     "sched",
@@ -184,11 +185,65 @@ fn fleet_json_completes_matrix_with_cache_hits() {
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     let j = enadapt::util::json::parse(&String::from_utf8_lossy(&out.stdout)).unwrap();
     let jobs = j.get("jobs").unwrap().as_arr().unwrap();
-    // Full matrix: 4 workloads x {gpu, fpga, manycore, mixed}.
-    assert_eq!(jobs.len(), 16);
+    // Full matrix: 6 workloads x {gpu, fpga, manycore, mixed}.
+    assert_eq!(jobs.len(), 24);
     assert!(jobs.iter().all(|job| job.get("ok").unwrap().as_bool() == Some(true)));
     let hits = j.get("cache").unwrap().get("hits").unwrap().as_f64().unwrap();
     assert!(hits > 0.0, "shared cache must deduplicate trials");
+}
+
+#[test]
+fn blocks_command_lists_gemm_matmul() {
+    let out = enadapt(&["blocks", "gemm"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("matmul"), "{text}");
+    assert!(text.contains("cuBLAS"), "{text}");
+    assert!(text.contains("IP core"), "{text}");
+    assert!(text.contains("1 function block(s) detected"), "{text}");
+}
+
+#[test]
+fn blocks_json_reports_zero_for_mriq() {
+    let out = enadapt(&["blocks", "mriq", "--json"]);
+    assert!(out.status.success());
+    let j = enadapt::util::json::parse(&String::from_utf8_lossy(&out.stdout)).unwrap();
+    assert_eq!(j.get("n_blocks").unwrap().as_f64(), Some(0.0));
+}
+
+#[test]
+fn offload_blocks_flag_beats_loop_only_on_gemm() {
+    // The acceptance path at the CLI level: exhaust gemm's plan space on
+    // the GPU with and without block substitution. The block-bearing
+    // search must find a strictly lower-energy plan.
+    let base = [
+        "offload", "gemm", "--dest", "gpu", "--strategy", "exhaustive", "--json",
+    ];
+    let loop_only = enadapt(&base);
+    assert!(loop_only.status.success(), "{}", String::from_utf8_lossy(&loop_only.stderr));
+    let mut with_blocks_args = base.to_vec();
+    with_blocks_args.push("--blocks");
+    let with_blocks = enadapt(&with_blocks_args);
+    assert!(with_blocks.status.success(), "{}", String::from_utf8_lossy(&with_blocks.stderr));
+    let energy = |out: &std::process::Output| {
+        enadapt::util::json::parse(&String::from_utf8_lossy(&out.stdout))
+            .unwrap()
+            .get("production")
+            .unwrap()
+            .get("energy_ws")
+            .unwrap()
+            .as_f64()
+            .unwrap()
+    };
+    let j = enadapt::util::json::parse(&String::from_utf8_lossy(&with_blocks.stdout)).unwrap();
+    assert_eq!(j.get("blocks_detected").unwrap().as_f64(), Some(1.0));
+    assert_eq!(j.get("blocks_active").unwrap().as_f64(), Some(1.0));
+    assert!(
+        energy(&with_blocks) < energy(&loop_only),
+        "block-substituted plan must beat the loop-only plan on W·s: {} vs {}",
+        energy(&with_blocks),
+        energy(&loop_only)
+    );
 }
 
 #[test]

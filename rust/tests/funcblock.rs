@@ -1,0 +1,265 @@
+//! Function-block offloading integration tests: detection ground truth
+//! (exact spans, zero false positives on MRI-Q), the loop-only
+//! bit-identity guarantee, the Pareto acceptance criterion on gemm, and
+//! the block-aware scheduler's deterministic ledger.
+
+use enadapt::canalyze::analyze_source;
+use enadapt::coordinator::sched::{run_sched, SchedOutcome};
+use enadapt::coordinator::{ArrivalTrace, JobConfig, SchedConfig};
+use enadapt::devices::{DeviceKind, TransferMode};
+use enadapt::funcblock::{detect, BlockDb, BlockKind};
+use enadapt::offload::{gpu_flow, GpuFlowConfig};
+use enadapt::search::SearchStrategy;
+use enadapt::verifier::{AppModel, VerifEnvConfig};
+use enadapt::workloads;
+
+fn blocks_app(name: &str, src: &str, target_s: f64) -> AppModel {
+    let an = analyze_source(name, src).unwrap();
+    let cfg = VerifEnvConfig::r740_pac();
+    AppModel::from_analysis_with_blocks(&an, &cfg.cpu, target_s, &BlockDb::standard()).unwrap()
+}
+
+fn plain_app(name: &str, src: &str, target_s: f64) -> AppModel {
+    let an = analyze_source(name, src).unwrap();
+    let cfg = VerifEnvConfig::r740_pac();
+    AppModel::from_analysis(&an, &cfg.cpu, target_s).unwrap()
+}
+
+#[test]
+fn gemm_block_is_detected_with_exact_span() {
+    let an = analyze_source("gemm.c", workloads::GEMM_C).unwrap();
+    let found = detect(&an, &BlockDb::standard());
+    assert_eq!(found.len(), 1, "{found:?}");
+    let b = &found[0];
+    assert_eq!(b.kind, BlockKind::Matmul);
+    assert_eq!(b.func, "gemm");
+    // The triple loop is the first nest in the file: loops 0, 1, 2.
+    assert_eq!(b.root.0, 0);
+    assert_eq!(
+        b.covered.iter().map(|id| id.0).collect::<Vec<_>>(),
+        vec![0, 1, 2],
+        "exact covered span"
+    );
+    // The root loop's source line is the `for` inside gemm().
+    let root = &an.loops[b.root.0];
+    assert_eq!(root.func, "gemm");
+    assert_eq!(root.line, b.line);
+}
+
+#[test]
+fn fft1d_block_is_detected_with_exact_span() {
+    let an = analyze_source("fft1d.c", workloads::FFT1D_C).unwrap();
+    let found = detect(&an, &BlockDb::standard());
+    assert_eq!(found.len(), 1, "{found:?}");
+    let b = &found[0];
+    assert_eq!(b.kind, BlockKind::Fft);
+    assert_eq!(b.func, "fft1d");
+    assert_eq!(b.root.0, 0);
+    assert_eq!(
+        b.covered.iter().map(|id| id.0).collect::<Vec<_>>(),
+        vec![0, 1],
+        "the DFT double loop, nothing else"
+    );
+}
+
+#[test]
+fn mriq_19_loops_produce_zero_false_positive_blocks() {
+    let an = analyze_source("mriq.c", workloads::MRIQ_C).unwrap();
+    assert_eq!(an.n_loops(), 19);
+    let found = detect(&an, &BlockDb::standard());
+    assert!(found.is_empty(), "false positives on MRI-Q: {found:?}");
+}
+
+#[test]
+fn loop_only_plans_are_bit_identical_to_pre_block_behavior() {
+    // For EVERY bundled workload: measuring any plan whose block genes
+    // are all zero must be bit-identical to the pre-block (loop-only)
+    // model — same RNG stream, same ledger, same trace.
+    for (name, src) in workloads::ALL {
+        let plain = plain_app(name, src, 9.0);
+        let with = blocks_app(name, src, 9.0);
+        assert_eq!(
+            with.genome_len(),
+            plain.genome_len() + with.blocks.len(),
+            "{name}: block genes append to the loop genome"
+        );
+        let env_a = VerifEnvConfig::r740_pac().build(77);
+        let env_b = VerifEnvConfig::r740_pac().build(77);
+
+        // CPU baseline.
+        let a = env_a.measure_cpu_only(&plain);
+        let b = env_b.measure_cpu_only(&with);
+        assert_eq!(a.time_s, b.time_s, "{name} baseline time");
+        assert_eq!(a.energy_ws, b.energy_ws, "{name} baseline energy");
+        assert_eq!(a.report, b.report, "{name} baseline ledger");
+
+        // A single-loop offload on two destinations, block genes zero.
+        let mut loop_bits = vec![false; plain.genome_len()];
+        if !loop_bits.is_empty() {
+            loop_bits[0] = true;
+        }
+        let mut full_bits = loop_bits.clone();
+        full_bits.extend(std::iter::repeat(false).take(with.blocks.len()));
+        for dest in [DeviceKind::Gpu, DeviceKind::Fpga] {
+            let a = env_a.measure(&plain, &loop_bits, dest, TransferMode::Batched);
+            let b = env_b.measure(&with, &full_bits, dest, TransferMode::Batched);
+            assert_eq!(a.time_s, b.time_s, "{name} on {dest}");
+            assert_eq!(a.energy_ws, b.energy_ws, "{name} on {dest}");
+            assert_eq!(a.report, b.report, "{name} on {dest} ledger");
+            assert_eq!(a.trace, b.trace, "{name} on {dest} trace");
+        }
+    }
+}
+
+#[test]
+fn gemm_front_has_a_block_plan_dominating_the_best_loop_only_plan() {
+    // The acceptance criterion: exhaust the gemm plan space on the GPU.
+    // The front must contain a block-substituted plan strictly better on
+    // W·s than the best loop-only plan, and the all-CPU baseline stays
+    // on the front.
+    let plain = plain_app("gemm.c", workloads::GEMM_C, 14.0);
+    let with = blocks_app("gemm.c", workloads::GEMM_C, 14.0);
+    assert_eq!(with.blocks.len(), 1);
+    let n_loops = with.candidates.len();
+
+    let cfg = GpuFlowConfig {
+        strategy: SearchStrategy::Exhaustive { max_bits: 12 },
+        parallel_trials: false,
+        ..Default::default()
+    };
+    let env = VerifEnvConfig::r740_pac().build(42);
+    let loop_only = gpu_flow::run_on(&plain, &env, &cfg, DeviceKind::Gpu).unwrap();
+    let env2 = VerifEnvConfig::r740_pac().build(42);
+    let blocked = gpu_flow::run_on(&with, &env2, &cfg, DeviceKind::Gpu).unwrap();
+
+    // Best loop-only plan (the whole space was measured, so this is the
+    // true loop-only optimum under the paper scalarization).
+    let best_loop_ws = loop_only.best.measurement.energy_ws;
+
+    // Some block-substituted plan on the searched front strictly beats
+    // it on W·s.
+    let block_points: Vec<_> = blocked
+        .search
+        .front
+        .points
+        .iter()
+        .filter(|s| s.genome.block_ones(n_loops) > 0)
+        .collect();
+    assert!(!block_points.is_empty(), "no block plan on the front");
+    assert!(
+        block_points
+            .iter()
+            .any(|s| s.objectives.energy_ws < best_loop_ws),
+        "no block plan dominates the loop-only optimum on W·s \
+         (best loop-only {best_loop_ws} W·s)"
+    );
+    // The winner itself substitutes the block and improves energy.
+    assert!(blocked.best.pattern.genome.block_ones(n_loops) > 0);
+    assert!(blocked.best.measurement.energy_ws < best_loop_ws);
+    // The all-CPU baseline remains on the front.
+    assert!(
+        blocked.search.front.points.iter().any(|s| s.genome.ones() == 0),
+        "baseline missing from the block-bearing front"
+    );
+}
+
+#[test]
+fn fft_block_wins_by_complexity_class() {
+    // The library FFT replaces an O(n²) nest with O(n log n): on the
+    // FPGA the block substitution must beat the best loop-only plan by a
+    // wide margin on both time and energy.
+    let with = blocks_app("fft1d.c", workloads::FFT1D_C, 14.0);
+    assert_eq!(with.blocks.len(), 1);
+    assert_eq!(with.blocks[0].detected.kind, BlockKind::Fft);
+    let env = VerifEnvConfig::r740_pac().build(7);
+
+    let baseline = env.measure_cpu_only(&with);
+    let mut block_bits = vec![false; with.genome_len()];
+    *block_bits.last_mut().unwrap() = true;
+    let m = env.measure(&with, &block_bits, DeviceKind::Fpga, TransferMode::Batched);
+    assert!(!m.timed_out, "{:?}", m.failure);
+    assert!(
+        m.energy_ws < baseline.energy_ws / 5.0,
+        "block {} vs baseline {} W·s",
+        m.energy_ws,
+        baseline.energy_ws
+    );
+    assert!(m.time_s < baseline.time_s / 5.0);
+    // The ledger attributes the substituted kernel to the accelerator.
+    assert!(m.report.components.accelerator_ws > 0.0);
+}
+
+#[test]
+fn histo_histogram_block_unlocks_a_non_parallelizable_loop() {
+    // The histogram binning loop is rejected by the dependence analysis
+    // (indirect store), so no loop gene covers it — but the block gene
+    // substitutes an atomic device implementation and removes its host
+    // time.
+    let with = blocks_app("histo.c", workloads::HISTO_C, 14.0);
+    assert_eq!(with.blocks.len(), 1);
+    let b = &with.blocks[0];
+    assert_eq!(b.detected.kind, BlockKind::Histogram);
+    assert!(
+        !with.candidates.contains(&b.detected.root),
+        "the histogram loop must not be a loop-gene candidate"
+    );
+    let env = VerifEnvConfig::r740_pac().build(3);
+    let baseline = env.measure_cpu_only(&with);
+    let mut bits = vec![false; with.genome_len()];
+    *bits.last_mut().unwrap() = true;
+    let m = env.measure(&with, &bits, DeviceKind::Gpu, TransferMode::Batched);
+    assert!(!m.timed_out, "{:?}", m.failure);
+    assert!(m.time_s < baseline.time_s, "substitution must help");
+}
+
+#[test]
+fn sched_trace_mixing_block_and_loop_workloads_is_bit_identical_per_seed() {
+    // gemm (block-substituted), mriq (loop-only — no blocks detected)
+    // and fft1d (block-substituted) through the power-budget scheduler
+    // with block offloading enabled: the whole ledger must be a pure
+    // function of (trace, config, seed).
+    let trace = ArrivalTrace::parse(
+        "0  gemm gpu\n\
+         4  mriq fpga\n\
+         9  fft1d fpga\n\
+         15 gemm gpu\n",
+    )
+    .unwrap();
+    let template = JobConfig {
+        blocks: true,
+        ga_flow: enadapt::offload::GpuFlowConfig {
+            ga: enadapt::search::GaConfig {
+                population: 6,
+                generations: 4,
+                ..Default::default()
+            },
+            parallel_trials: false,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let cfg = SchedConfig {
+        template,
+        ..Default::default()
+    };
+    let a = run_sched(&trace, &cfg).unwrap();
+    let b = run_sched(&trace, &cfg).unwrap();
+    assert_eq!(
+        a.to_json().to_string_compact(),
+        b.to_json().to_string_compact(),
+        "block-bearing sched ledger must be bit-identical per seed"
+    );
+    assert_eq!(a.admitted, 4);
+    // At least one completed job ran a block-substituted deployment.
+    let blocks_run: usize = a
+        .jobs
+        .iter()
+        .filter_map(|j| match &j.outcome {
+            SchedOutcome::Completed(c) => Some(c.blocks),
+            _ => None,
+        })
+        .sum();
+    assert!(blocks_run > 0, "no block deployment in the mixed trace");
+    // And the table grew a block column.
+    assert!(a.table().contains("blk"));
+}
