@@ -1,17 +1,33 @@
-//! Bench: power-budget scheduler scale sweep — 10 → 10,000 trace-driven
-//! arrivals on a 4-node cluster under a fleet Watt cap, with a mid-trace
-//! input-growth drift that exercises the re-adaptation loop.
+//! Bench: power-budget scheduler scale sweep — 10 → 1,000,000
+//! trace-driven arrivals on a 4-node cluster under a fleet Watt cap, with
+//! a mid-trace input-growth drift that exercises the re-adaptation loop.
 //!
-//! What this measures: the event loop plus shared-measurement-cache
-//! behavior at fleet scale. Deployments are bounded by the workload ×
-//! destination mix (12 here), so arrival 10,000 costs two cache lookups,
-//! not a search — the hit rate should climb toward 100% as the trace
-//! grows while arrivals/sec stays high. Every run reports the fleet W·s
-//! ledger against the all-CPU-everywhere counterfactual (the paper's
-//! Fig. 5 comparison at cluster scale).
+//! What this measures: the event-driven engine (heap-merged completions,
+//! indexed occupancy, interned deployments, memoized arrivals) plus
+//! shared-measurement-cache behavior at fleet scale. Deployments are
+//! bounded by the workload × destination mix (12 here), so arrival
+//! 1,000,000 costs a memo lookup, not a search — the hit rate climbs
+//! toward 100% as the trace grows while arrivals/sec stays high. Every
+//! run reports the fleet W·s ledger against the all-CPU-everywhere
+//! counterfactual (the paper's Fig. 5 comparison at cluster scale).
+//!
+//! At the 10k point the retained time-stepped reference loop
+//! (`legacy_loop`) is run too and its JSON report asserted bit-identical
+//! to the event engine's — the equivalence contract of BENCH_sched.json.
+//! A federated `--clusters 4` point exercises the sharded coordinator at
+//! the 100k scale.
+//!
+//! Environment knobs (CI smoke uses both):
+//!
+//! * `SCHED_SCALE_MAX` — largest arrival count to sweep (default
+//!   1000000; CI smoke sets 100000).
+//! * `SCHED_SCALE_ASSERT=1` — enforce the BENCH_sched.json wall-clock
+//!   ceilings (100k ≤ 60 s, 1M ≤ 10 s for the engine sweep points) so
+//!   scalability regressions fail loudly instead of just reading slow.
 //!
 //! Emits a final JSON object on stdout for the perf dashboard.
 
+use enadapt::coordinator::sched::federation::{run_federated, FederationConfig};
 use enadapt::coordinator::sched::run_sched;
 use enadapt::coordinator::{ArrivalTrace, JobConfig, SchedConfig, SyntheticTraceConfig};
 use enadapt::devices::NodeSpec;
@@ -42,7 +58,39 @@ fn cluster() -> Vec<NodeSpec> {
     (0..4).map(|i| NodeSpec::r740_pac(&format!("node{i}"))).collect()
 }
 
+fn sweep_config() -> SchedConfig {
+    SchedConfig {
+        template: template(),
+        nodes: cluster(),
+        fleet_watt_cap: Some(800.0),
+        idle_policy: IdlePolicy::gate_after(30.0),
+        ..Default::default()
+    }
+}
+
+fn drifting_trace(n: usize) -> ArrivalTrace {
+    let mut syn = SyntheticTraceConfig::standard(n, 1.0, 11);
+    syn.drift_after = Some(n / 2);
+    syn.drift_scale = 2.0;
+    ArrivalTrace::poisson(&syn)
+}
+
+/// Wall-clock ceiling for a sweep point, seconds (BENCH_sched.json).
+fn wall_ceiling_s(n: usize) -> Option<f64> {
+    match n {
+        100_000 => Some(60.0),
+        1_000_000 => Some(10.0),
+        _ => None,
+    }
+}
+
 fn main() {
+    let max_arrivals: usize = std::env::var("SCHED_SCALE_MAX")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1_000_000);
+    let enforce = std::env::var("SCHED_SCALE_ASSERT").as_deref() == Ok("1");
+
     println!("=== sched_scale: trace-driven arrivals, fleet Watt cap, drift mid-trace ===\n");
 
     section("arrival-count sweep (4 nodes, 800 W cap, drift at the midpoint)");
@@ -59,18 +107,13 @@ fn main() {
         "reduction",
     ]);
     let mut series = Vec::new();
-    for n in [10usize, 100, 1_000, 10_000] {
-        let mut syn = SyntheticTraceConfig::standard(n, 1.0, 11);
-        syn.drift_after = Some(n / 2);
-        syn.drift_scale = 2.0;
-        let trace = ArrivalTrace::poisson(&syn);
-        let cfg = SchedConfig {
-            template: template(),
-            nodes: cluster(),
-            fleet_watt_cap: Some(800.0),
-            idle_policy: IdlePolicy::gate_after(30.0),
-            ..Default::default()
-        };
+    for n in [10usize, 100, 1_000, 10_000, 100_000, 1_000_000] {
+        if n > max_arrivals {
+            println!("(skipping {n} arrivals: SCHED_SCALE_MAX = {max_arrivals})");
+            continue;
+        }
+        let trace = drifting_trace(n);
+        let cfg = sweep_config();
         let start = Instant::now();
         let report = run_sched(&trace, &cfg).expect("sched run");
         let wall_s = start.elapsed().as_secs_f64();
@@ -102,8 +145,79 @@ fn main() {
             ("searches", Json::num(report.searches as f64)),
             ("horizon_s", Json::num(report.horizon_s)),
         ]));
+        if enforce {
+            if let Some(ceiling) = wall_ceiling_s(n) {
+                assert!(
+                    wall_s <= ceiling,
+                    "{n} arrivals took {wall_s:.2} s — over the {ceiling} s \
+                     BENCH_sched.json ceiling"
+                );
+            }
+        }
     }
     println!("{}", table.render());
+
+    // Equivalence contract: the event engine and the retained
+    // time-stepped reference loop must fold the identical report at the
+    // 10k standard point.
+    let mut legacy_equiv_10k = Json::Null;
+    if max_arrivals >= 10_000 {
+        section("legacy-loop equivalence (10k arrivals, bit-identical JSON)");
+        let trace = drifting_trace(10_000);
+        let event = run_sched(&trace, &sweep_config()).expect("event engine");
+        let start = Instant::now();
+        let legacy = run_sched(
+            &trace,
+            &SchedConfig {
+                legacy_loop: true,
+                ..sweep_config()
+            },
+        )
+        .expect("reference loop");
+        let legacy_wall_s = start.elapsed().as_secs_f64();
+        assert_eq!(
+            event.to_json().to_string_compact(),
+            legacy.to_json().to_string_compact(),
+            "event engine and reference loop disagree at 10k arrivals"
+        );
+        println!(
+            "ok: identical {}-job ledgers (reference loop took {:.1} ms)\n",
+            event.jobs.len(),
+            legacy_wall_s * 1e3
+        );
+        legacy_equiv_10k = Json::Bool(true);
+    }
+
+    // Federation point: the same drifting trace sharded across 4
+    // clusters with the Watt budget rebalanced by probed demand.
+    let mut federated = Json::Null;
+    if max_arrivals >= 100_000 {
+        section("federated sweep point (100k arrivals, --clusters 4)");
+        let trace = drifting_trace(100_000);
+        let fcfg = FederationConfig {
+            base: sweep_config(),
+            clusters: 4,
+            shard_seed: 1,
+        };
+        let start = Instant::now();
+        let report = run_federated(&trace, &fcfg).expect("federated run");
+        let wall_s = start.elapsed().as_secs_f64();
+        println!("{}", report.table());
+        federated = Json::obj(vec![
+            ("arrivals", Json::num(100_000.0)),
+            ("clusters", Json::num(4.0)),
+            ("admitted", Json::num(report.admitted as f64)),
+            ("dropped", Json::num(report.dropped as f64)),
+            ("wall_s", Json::num(wall_s)),
+            (
+                "arrivals_per_s",
+                Json::num(100_000.0 / wall_s.max(1e-9)),
+            ),
+            ("jobs_ws", Json::num(report.production.total_ws())),
+            ("counterfactual_ws", Json::num(report.counterfactual_ws)),
+            ("reduction", Json::num(report.jobs_reduction())),
+        ]);
+    }
 
     section("machine-readable result");
     println!(
@@ -111,6 +225,8 @@ fn main() {
         Json::obj(vec![
             ("bench", Json::str("sched_scale")),
             ("series", Json::arr(series)),
+            ("legacy_equiv_10k", legacy_equiv_10k),
+            ("federated_100k", federated),
         ])
         .to_string_pretty()
     );

@@ -20,6 +20,9 @@ pub use fleet::{run_fleet, FleetConfig, FleetJobOutcome, FleetReport, FleetSpec}
 pub use job::{resolve_baseline, run_job, BaselineSource, Destination, GeneratedCode, JobConfig, JobReport};
 pub use pipeline::{Pipeline, SearchStageOutcome};
 pub use reconfig::{reconfigure, reconfigure_via, Drift, DriftMonitor, ReconfigOutcome};
+pub use sched::federation::{
+    run_federated, ClusterLedger, FederationConfig, FederationReport,
+};
 pub use sched::{
     run_sched, run_sched_with_cache, Arrival, ArrivalTrace, SchedConfig, SchedJob, SchedOutcome,
     SchedReport, SyntheticTraceConfig, TraceEvent,

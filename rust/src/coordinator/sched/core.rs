@@ -1,0 +1,503 @@
+//! Shared simulation core for both scheduler engines: interned
+//! workload/deployment tables, cached application models, the deployment
+//! search + drift re-search, arrival measurement, and the final ledger
+//! fold.
+//!
+//! Every numeric path here is kept expression-for-expression identical to
+//! the original time-stepped simulator so both engines — and the seed
+//! code they replaced — fold to bit-identical [`SchedReport`]s:
+//!
+//! * committed Watts sum the `running` vector in insertion order (f64
+//!   addition is not associative; removal uses `Vec::remove`, which
+//!   preserves relative order) — the memoized value is a cached result of
+//!   the *same* left fold, recomputed only when the set changes;
+//! * interning replaces the old per-arrival `format!("{workload}|{dest}")`
+//!   deployment keys and `format!("{name}.c")` source lookups with dense
+//!   ids resolved once per distinct pair — pure lookup, no arithmetic;
+//! * the prepared-run memo returns the same cached [`Measurement`]-derived
+//!   scalars a fresh preparation would read back out of the
+//!   [`MeasureCache`], and credits the two lookups it skipped via
+//!   [`MeasureCache::note_hits`] so the report's cache ledger is
+//!   unchanged.
+
+use super::super::job::{BaselineSource, Destination, JobConfig, JobReport};
+use super::super::pipeline::Pipeline;
+use super::super::reconfig::{reconfigure_via, Drift, DriftMonitor};
+use super::{
+    CompletedJob, ReconfigRecord, SchedConfig, SchedJob, SchedOutcome, SchedReport,
+};
+use crate::devices::{DeviceKind, TransferMode};
+use crate::power::{ComponentEnergy, IdleLedger};
+use crate::util::measure_cache::MeasureCache;
+use crate::verifier::{AppModel, VerifEnv};
+use crate::workloads;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Why a job never ran.
+pub(super) const DROP_NO_SLOT: &str =
+    "no node offers a slot of the chosen destination kind";
+
+/// Dense code for a destination, used in the deployment-intern key.
+fn dest_code(d: Destination) -> u8 {
+    match d {
+        Destination::Device(DeviceKind::Cpu) => 0,
+        Destination::Device(DeviceKind::ManyCore) => 1,
+        Destination::Device(DeviceKind::Gpu) => 2,
+        Destination::Device(DeviceKind::Fpga) => 3,
+        Destination::Mixed => 4,
+    }
+}
+
+/// A deployed `(workload, destination)` adaptation.
+pub(super) struct Deployment {
+    pub(super) report: JobReport,
+    pub(super) monitor: DriftMonitor,
+}
+
+impl Deployment {
+    pub(super) fn new(report: JobReport, tolerance: f64) -> Self {
+        let monitor = DriftMonitor::new(&report.production, tolerance);
+        Self { report, monitor }
+    }
+
+    /// Device the deployed pattern actually occupies (`Cpu` when nothing
+    /// is offloaded).
+    pub(super) fn run_device(&self) -> DeviceKind {
+        if self.report.best.pattern.genome.ones() == 0 {
+            DeviceKind::Cpu
+        } else {
+            self.report.device
+        }
+    }
+}
+
+/// One interned deployment slot. `generation` bumps on every drift
+/// re-search so memoized preparations against the old pattern die.
+pub(super) struct DeploymentSlot {
+    pub(super) workload: u32,
+    pub(super) dep: Deployment,
+    pub(super) generation: u32,
+}
+
+/// The measured shape of one arrival against its deployment: everything
+/// `start_job` needs, detached from the full [`crate::verifier::Measurement`]
+/// so memoized arrivals share one small allocation.
+pub(super) struct PreparedMeasure {
+    pub(super) device: DeviceKind,
+    pub(super) pattern: Arc<str>,
+    pub(super) blocks: usize,
+    pub(super) time_s: f64,
+    pub(super) mean_w: f64,
+    pub(super) dyn_mean_w: f64,
+    pub(super) energy: ComponentEnergy,
+    pub(super) energy_ws: f64,
+    pub(super) baseline_ws: f64,
+}
+
+/// A measured arrival waiting for (or given) a slot.
+pub(super) struct PreparedRun {
+    pub(super) job_idx: usize,
+    pub(super) dep_id: u32,
+    pub(super) m: Arc<PreparedMeasure>,
+}
+
+/// A job occupying a slot.
+pub(super) struct RunningJob {
+    pub(super) seq: usize,
+    pub(super) dep_id: u32,
+    pub(super) node: usize,
+    pub(super) device: DeviceKind,
+    pub(super) slot: usize,
+    pub(super) start_s: f64,
+    pub(super) end_s: f64,
+    pub(super) dyn_mean_w: f64,
+    pub(super) obs_time_s: f64,
+    pub(super) obs_mean_w: f64,
+    pub(super) scale: f64,
+}
+
+/// Result of one admission attempt.
+pub(super) enum Admit {
+    Placed { node: usize, slot: usize },
+    WaitCapacity,
+    WaitPower,
+    Never(String),
+}
+
+/// Engine-independent simulation state.
+pub(super) struct SimCore {
+    pub(super) cfg: SchedConfig,
+    pub(super) cap_w: Option<f64>,
+    base_s: f64,
+    pub(super) env: VerifEnv,
+    pub(super) cache: Arc<MeasureCache>,
+    pub(super) chassis_floor_w: f64,
+    // Workload interning: id per distinct arrival name.
+    wl_by_name: HashMap<String, u32>,
+    pub(super) wl_names: Vec<Arc<str>>,
+    wl_files: Vec<String>,
+    wl_sources: Vec<&'static str>,
+    analyses: Vec<Option<crate::canalyze::Analysis>>,
+    // Deployment interning: dense id per (workload, destination).
+    deps_by_key: HashMap<(u32, u8), u32>,
+    pub(super) deployments: Vec<DeploymentSlot>,
+    apps: HashMap<(u32, u64), Arc<AppModel>>,
+    pub(super) jobs: Vec<SchedJob>,
+    pub(super) reconfigs: Vec<ReconfigRecord>,
+    pub(super) running: Vec<RunningJob>,
+    committed_cache_w: f64,
+    committed_dirty: bool,
+    pub(super) horizon_s: f64,
+    pub(super) peak_committed_w: f64,
+    searches: usize,
+    search_cost_s: f64,
+}
+
+impl SimCore {
+    pub(super) fn new(cfg: SchedConfig, cache: Arc<MeasureCache>) -> Result<Self> {
+        let base_s = super::super::job::resolve_baseline(&cfg.template.baseline)?;
+        let mut env = cfg.template.env.clone().build(cfg.template.seed);
+        env.attach_cache(Arc::clone(&cache));
+        let chassis_floor_w: f64 = cfg.nodes.iter().map(|n| n.chassis_idle_w).sum();
+        Ok(Self {
+            cap_w: cfg.fleet_watt_cap,
+            base_s,
+            env,
+            cache,
+            chassis_floor_w,
+            wl_by_name: HashMap::new(),
+            wl_names: Vec::new(),
+            wl_files: Vec::new(),
+            wl_sources: Vec::new(),
+            analyses: Vec::new(),
+            deps_by_key: HashMap::new(),
+            deployments: Vec::new(),
+            apps: HashMap::new(),
+            jobs: Vec::new(),
+            reconfigs: Vec::new(),
+            running: Vec::new(),
+            committed_cache_w: 0.0,
+            committed_dirty: true,
+            horizon_s: 0.0,
+            peak_committed_w: 0.0,
+            searches: 0,
+            search_cost_s: 0.0,
+            cfg,
+        })
+    }
+
+    /// Mean draw currently spoken for: the chassis floor plus every
+    /// running job's dynamic mean. The memo only skips re-summing an
+    /// unchanged `running` vector — on recompute the left fold (and so
+    /// the f64 result) is identical to summing on every call.
+    pub(super) fn committed_w(&mut self) -> f64 {
+        if self.committed_dirty {
+            self.committed_cache_w = self.chassis_floor_w
+                + self.running.iter().map(|r| r.dyn_mean_w).sum::<f64>();
+            self.committed_dirty = false;
+        }
+        self.committed_cache_w
+    }
+
+    /// The Watt sub-budget a (re-)search runs under: the fleet headroom
+    /// left by everything except the job itself — the rest of the
+    /// cluster's chassis floor plus the other running jobs — so the job's
+    /// whole-server peak (which includes its own node's chassis idle) is
+    /// compared against it directly. `own_node` is the node the job runs
+    /// (or will run) on.
+    pub(super) fn search_committed_w(&mut self, own_node: usize) -> f64 {
+        self.committed_w() - self.cfg.nodes[own_node].chassis_idle_w
+    }
+
+    /// Job configuration for a (re-)search at a scale under the current
+    /// fleet headroom.
+    fn search_cfg(&self, destination: Destination, scale: f64, committed_w: f64) -> JobConfig {
+        let mut cfg = self.cfg.template.clone();
+        cfg.destination = destination;
+        cfg.baseline = BaselineSource::Fixed(self.base_s * scale);
+        cfg.ga_flow.seed = cfg.seed;
+        // Job concurrency is simulated; parallel trial threads would only
+        // make the cache hit/miss interleaving harder to reason about.
+        cfg.ga_flow.parallel_trials = false;
+        let cap_w = self.cap_w;
+        cfg.map_fitness(|f| f.with_fleet_headroom(cap_w, committed_w));
+        cfg
+    }
+
+    /// Intern an arrival's workload name: resolve it once, cache the
+    /// `<name>.c` file label and source text, and hand back a dense id.
+    pub(super) fn intern_workload(&mut self, name: &str) -> Result<u32> {
+        if let Some(&id) = self.wl_by_name.get(name) {
+            return Ok(id);
+        }
+        let (canon, src) = workloads::resolve(name)
+            .ok_or_else(|| Error::Config(format!("unknown workload '{name}'")))?;
+        let id = self.wl_names.len() as u32;
+        self.wl_names.push(Arc::from(name));
+        self.wl_files.push(format!("{canon}.c"));
+        self.wl_sources.push(src);
+        self.analyses.push(None);
+        self.wl_by_name.insert(name.to_string(), id);
+        Ok(id)
+    }
+
+    /// The application model of a workload at a scale (cached).
+    fn app_for(&mut self, wid: u32, scale: f64) -> Result<Arc<AppModel>> {
+        let key = (wid, scale.to_bits());
+        if let Some(app) = self.apps.get(&key) {
+            return Ok(Arc::clone(app));
+        }
+        let w = wid as usize;
+        if self.analyses[w].is_none() {
+            let an =
+                crate::canalyze::analyze_source(&self.wl_files[w], self.wl_sources[w])?;
+            self.analyses[w] = Some(an);
+        }
+        let an = self.analyses[w].as_ref().expect("analysis just inserted");
+        // Must mirror the deployment pipeline's model (Pipeline::build_env,
+        // via the same JobConfig::block_db rule): block-enabled templates
+        // deploy plans with block genes, so the production app needs the
+        // same genome layout.
+        let app = Arc::new(match self.cfg.template.block_db() {
+            Some(db) => AppModel::from_analysis_with_blocks(
+                an,
+                &self.cfg.template.env.cpu,
+                self.base_s * scale,
+                &db,
+            )?,
+            None => AppModel::from_analysis(
+                an,
+                &self.cfg.template.env.cpu,
+                self.base_s * scale,
+            )?,
+        });
+        self.apps.insert(key, Arc::clone(&app));
+        Ok(app)
+    }
+
+    /// Deployment id for a `(workload, destination)` pair, searching it
+    /// first if none exists yet. The search runs on the adaptation server
+    /// through the shared cache; its simulated cost is charged to
+    /// `search_cost_s`.
+    pub(super) fn dep_id_for(
+        &mut self,
+        wid: u32,
+        d: Destination,
+        scale: f64,
+    ) -> Result<u32> {
+        let code = dest_code(d);
+        if let Some(&id) = self.deps_by_key.get(&(wid, code)) {
+            return Ok(id);
+        }
+        // Budget as if the job will land on the first node that could
+        // host its kind (unknown pre-search for mixed destinations; the
+        // cluster's first node is the deterministic stand-in).
+        let committed = self.search_committed_w(0);
+        let cfg = self.search_cfg(d, scale, committed);
+        let pipeline = Pipeline::new(cfg).with_cache(Arc::clone(&self.cache));
+        let report =
+            pipeline.run(&self.wl_files[wid as usize], self.wl_sources[wid as usize])?;
+        self.searches += 1;
+        self.search_cost_s += report.search_cost_s;
+        let id = self.deployments.len() as u32;
+        self.deployments.push(DeploymentSlot {
+            workload: wid,
+            dep: Deployment::new(report, self.cfg.drift_tolerance),
+            generation: 0,
+        });
+        self.deps_by_key.insert((wid, code), id);
+        Ok(id)
+    }
+
+    /// Measure one arrival against its deployment: the production run
+    /// (deployed pattern at the arrival's scale) and the all-CPU
+    /// counterfactual. Pure and cached.
+    pub(super) fn prepare_fresh(
+        &mut self,
+        dep_id: u32,
+        scale: f64,
+    ) -> Result<PreparedMeasure> {
+        let wid = self.deployments[dep_id as usize].workload;
+        let app = self.app_for(wid, scale)?;
+        let slot = &self.deployments[dep_id as usize];
+        let device = slot.dep.run_device();
+        let bits = slot.dep.report.best.pattern.bits().to_vec();
+        // Shared accessors so the sched table/JSON can never drift from
+        // the fleet and job reports (canonical `0101|10` rendering).
+        let blocks = slot.dep.report.blocks_active();
+        let pattern: Arc<str> = slot.dep.report.best.pattern.plan().to_string().into();
+        let production = self.env.measure(&app, &bits, device, TransferMode::Batched);
+        let baseline = self.env.measure_cpu_only(&app);
+        let dyn_mean_w = if production.time_s > 0.0 {
+            production.report.components.dynamic_ws() / production.time_s
+        } else {
+            0.0
+        };
+        Ok(PreparedMeasure {
+            device,
+            pattern,
+            blocks,
+            time_s: production.time_s,
+            mean_w: production.mean_w,
+            dyn_mean_w,
+            energy: production.report.components,
+            energy_ws: production.energy_ws,
+            baseline_ws: baseline.energy_ws,
+        })
+    }
+
+    /// Record a new arrival (outcome pending) and return its sequence
+    /// number.
+    pub(super) fn push_job(&mut self, a: &super::Arrival, wid: u32) -> usize {
+        let seq = self.jobs.len();
+        self.jobs.push(SchedJob {
+            seq,
+            arrival_s: a.at_s,
+            workload: Arc::clone(&self.wl_names[wid as usize]),
+            destination: a.destination,
+            scale: a.scale,
+            outcome: SchedOutcome::Dropped {
+                reason: "pending".to_string(),
+            },
+        });
+        seq
+    }
+
+    /// Start a prepared run at simulated time `t` on `(node, slot)`;
+    /// returns its completion time.
+    pub(super) fn start_job(
+        &mut self,
+        p: &PreparedRun,
+        t: f64,
+        node: usize,
+        slot: usize,
+    ) -> f64 {
+        let m = &*p.m;
+        let end_s = t + m.time_s;
+        self.horizon_s = self.horizon_s.max(end_s);
+        let scale = self.jobs[p.job_idx].scale;
+        self.jobs[p.job_idx].outcome = SchedOutcome::Completed(CompletedJob {
+            device: m.device,
+            node,
+            pattern: Arc::clone(&m.pattern),
+            blocks: m.blocks,
+            start_s: t,
+            end_s,
+            time_s: m.time_s,
+            mean_w: m.mean_w,
+            dyn_mean_w: m.dyn_mean_w,
+            energy: m.energy,
+            energy_ws: m.energy_ws,
+            baseline_ws: m.baseline_ws,
+        });
+        self.running.push(RunningJob {
+            seq: p.job_idx,
+            dep_id: p.dep_id,
+            node,
+            device: m.device,
+            slot,
+            start_s: t,
+            end_s,
+            dyn_mean_w: m.dyn_mean_w,
+            obs_time_s: m.time_s,
+            obs_mean_w: m.mean_w,
+            scale,
+        });
+        self.committed_dirty = true;
+        let committed = self.committed_w();
+        self.peak_committed_w = self.peak_committed_w.max(committed);
+        end_s
+    }
+
+    /// Remove the running job at `idx` (`Vec::remove` keeps the others'
+    /// relative order, preserving the committed-Watt summation order).
+    pub(super) fn remove_running(&mut self, idx: usize) -> RunningJob {
+        let r = self.running.remove(idx);
+        self.committed_dirty = true;
+        r
+    }
+
+    /// Step 7 for one completed job: fold the production observation into
+    /// the deployment's monitor and re-search on drift under the current
+    /// fleet headroom. Call after [`Self::remove_running`].
+    pub(super) fn complete_observe(&mut self, r: &RunningJob) -> Result<()> {
+        let committed = self.search_committed_w(r.node);
+        let verdict = self.deployments[r.dep_id as usize]
+            .dep
+            .monitor
+            .observe(r.obs_time_s, r.obs_mean_w);
+        if verdict != Drift::Stable {
+            let destination = self.jobs[r.seq].destination;
+            let new_cfg = self.search_cfg(destination, r.scale, committed);
+            let wid = self.deployments[r.dep_id as usize].workload as usize;
+            let workload = self.wl_names[wid].to_string();
+            let src = self.wl_sources[wid];
+            let cache = Arc::clone(&self.cache);
+            let tolerance = self.cfg.drift_tolerance;
+            let slot = &mut self.deployments[r.dep_id as usize];
+            let old_pattern = slot.dep.report.best.pattern.genome.to_string();
+            let out = reconfigure_via(&slot.dep.report, src, &new_cfg, Some(&cache))?;
+            let record = ReconfigRecord {
+                at_s: r.end_s,
+                workload,
+                destination,
+                drift: verdict,
+                pattern_changed: out.pattern_changed,
+                device_changed: out.device_changed,
+                old_pattern,
+                new_pattern: out.report.best.pattern.genome.to_string(),
+                new_device: out.report.device,
+            };
+            let cost = out.report.search_cost_s;
+            slot.dep = Deployment::new(out.report, tolerance);
+            slot.generation += 1;
+            self.searches += 1;
+            self.search_cost_s += cost;
+            self.reconfigs.push(record);
+        }
+        Ok(())
+    }
+
+    /// Fold the final ledger. `accel_idle` is supplied by the engine
+    /// (interval fold for the reference loop, incremental accumulators
+    /// for the event engine — bit-equal, see `power::idle`).
+    pub(super) fn report(self, preloaded: usize, accel_idle: IdleLedger) -> SchedReport {
+        let mut production = ComponentEnergy::default();
+        let mut counterfactual_ws = 0.0;
+        let mut admitted = 0;
+        let mut dropped = 0;
+        for j in &self.jobs {
+            match &j.outcome {
+                SchedOutcome::Completed(c) => {
+                    admitted += 1;
+                    production.add(&c.energy);
+                    counterfactual_ws += c.baseline_ws;
+                }
+                SchedOutcome::Dropped { .. } => dropped += 1,
+            }
+        }
+        let chassis_idle_ws = self.chassis_floor_w * self.horizon_s;
+        SchedReport {
+            jobs: self.jobs,
+            reconfigs: self.reconfigs,
+            nodes: self.cfg.nodes,
+            horizon_s: self.horizon_s,
+            admitted,
+            dropped,
+            production,
+            counterfactual_ws,
+            chassis_idle_ws,
+            accel_idle,
+            peak_committed_w: self.peak_committed_w,
+            final_cap_w: self.cap_w,
+            searches: self.searches,
+            search_cost_s: self.search_cost_s,
+            cache_hits: self.cache.hits(),
+            cache_misses: self.cache.misses(),
+            cache_entries: self.cache.len(),
+            cache_preloaded: preloaded,
+        }
+    }
+}

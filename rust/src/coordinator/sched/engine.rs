@@ -1,0 +1,214 @@
+//! The event-driven scheduler engine: the default hot path.
+//!
+//! Same simulation semantics as [`super::legacy`] (the retained
+//! reference loop), same ledger bit for bit — asserted per seed in
+//! `tests/sched.rs` — but with the linear scans replaced by indexes:
+//!
+//! * pending completions live in a [`CompletionQueue`] min-heap instead
+//!   of being rediscovered by an O(running) scan per step;
+//! * free slots live in per-kind heaps ([`ClusterIndex`]) that pop the
+//!   reference loop's first-fit choice directly;
+//! * repeat arrivals of a `(deployment, scale)` pair are answered by a
+//!   prepared-run memo instead of re-walking the measurement cache — the
+//!   two cache lookups a fresh preparation would have scored are credited
+//!   via [`MeasureCache::note_hits`](crate::util::measure_cache::MeasureCache::note_hits)
+//!   so the report's cache ledger is unchanged;
+//! * per-slot idle gaps are folded incrementally on release instead of
+//!   buffering every busy interval to the end of the run.
+//!
+//! The memo is keyed by the deployment's *generation*, which bumps on
+//! every drift re-search, so re-adapted deployments never serve stale
+//! measurements.
+
+use super::core::{Admit, PreparedMeasure, PreparedRun, SimCore, DROP_NO_SLOT};
+use super::events::CompletionQueue;
+use super::index::ClusterIndex;
+use super::{Arrival, ArrivalTrace, SchedOutcome, SchedReport, TraceEvent};
+use crate::Result;
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
+pub(super) struct EventSim {
+    core: SimCore,
+    index: ClusterIndex,
+    completions: CompletionQueue,
+    queue: VecDeque<PreparedRun>,
+    /// `(deployment, generation, scale bits)` → prepared measurement.
+    memo: HashMap<(u32, u32, u64), Arc<PreparedMeasure>>,
+}
+
+impl EventSim {
+    pub(super) fn new(core: SimCore) -> Self {
+        let index = ClusterIndex::new(&core.cfg.nodes);
+        Self {
+            core,
+            index,
+            completions: CompletionQueue::default(),
+            queue: VecDeque::new(),
+            memo: HashMap::new(),
+        }
+    }
+
+    /// Run the merged event loop: the trace cursor and the completion
+    /// heap race, completions first on ties (they free capacity the
+    /// simultaneous arrival may need), equal-time completions by lowest
+    /// sequence number — the reference loop's exact order.
+    pub(super) fn run(&mut self, trace: &ArrivalTrace) -> Result<()> {
+        let mut ev_i = 0;
+        loop {
+            let next_event_t = trace.events.get(ev_i).map(|e| e.at_s());
+            let next_done_t = self.completions.peek().map(|(t, _)| t);
+            match (next_event_t, next_done_t) {
+                (None, None) => break,
+                (Some(te), Some(td)) if td <= te => self.complete()?,
+                (None, Some(_)) => self.complete()?,
+                (Some(te), _) => {
+                    self.core.horizon_s = self.core.horizon_s.max(te);
+                    match trace.events[ev_i].clone() {
+                        TraceEvent::SetCap { cap_w, .. } => {
+                            self.core.cap_w = cap_w;
+                            // A raised cap can admit queued jobs; a
+                            // lowered one can turn them into drops.
+                            self.retry_queue(te);
+                        }
+                        TraceEvent::Arrival(a) => self.arrival(&a)?,
+                    }
+                    ev_i += 1;
+                }
+            }
+        }
+        // Anything still queued can never start (no events or running
+        // jobs left to change the situation).
+        while let Some(p) = self.queue.pop_front() {
+            self.core.jobs[p.job_idx].outcome = SchedOutcome::Dropped {
+                reason: "still queued when the trace ended".to_string(),
+            };
+        }
+        Ok(())
+    }
+
+    /// One arrival: intern, deploy if first of its `(workload,
+    /// destination)` pair, measure (memoized), then admit or queue.
+    fn arrival(&mut self, a: &Arrival) -> Result<()> {
+        let wid = self.core.intern_workload(&a.workload)?;
+        let seq = self.core.push_job(a, wid);
+        let dep_id = self.core.dep_id_for(wid, a.destination, a.scale)?;
+        let generation = self.core.deployments[dep_id as usize].generation;
+        let mkey = (dep_id, generation, a.scale.to_bits());
+        let m = match self.memo.get(&mkey) {
+            Some(m) => {
+                // The production + baseline lookups a fresh preparation
+                // would have made were both guaranteed cache hits.
+                self.core.cache.note_hits(2);
+                Arc::clone(m)
+            }
+            None => {
+                let m = Arc::new(self.core.prepare_fresh(dep_id, a.scale)?);
+                self.memo.insert(mkey, Arc::clone(&m));
+                m
+            }
+        };
+        let p = PreparedRun {
+            job_idx: seq,
+            dep_id,
+            m,
+        };
+        self.admit_or_queue(p, a.at_s);
+        Ok(())
+    }
+
+    /// Can this prepared run start now? Check order matches the
+    /// reference loop: impossible placements drop before the cap test,
+    /// the cap test sees the committed accumulator, and only then is a
+    /// slot popped.
+    fn try_admit(&mut self, p: &PreparedRun) -> Admit {
+        if self.index.total(p.m.device) == 0 {
+            return Admit::Never(DROP_NO_SLOT.to_string());
+        }
+        if let Some(cap) = self.core.cap_w {
+            if self.core.chassis_floor_w + p.m.dyn_mean_w > cap {
+                return Admit::Never(format!(
+                    "needs {:.1} W dynamic over a {:.0} W idle floor — over the {:.0} W fleet \
+                     cap even on an idle cluster",
+                    p.m.dyn_mean_w, self.core.chassis_floor_w, cap
+                ));
+            }
+            if self.core.committed_w() + p.m.dyn_mean_w > cap {
+                return Admit::WaitPower;
+            }
+        }
+        match self.index.acquire(p.m.device) {
+            Some((node, slot)) => Admit::Placed { node, slot },
+            None => Admit::WaitCapacity,
+        }
+    }
+
+    /// Start a prepared run and schedule its completion.
+    fn start(&mut self, p: PreparedRun, t: f64, node: usize, slot: usize) {
+        let end_s = self.core.start_job(&p, t, node, slot);
+        self.completions.push(end_s, p.job_idx);
+    }
+
+    /// Admit or queue (or drop) a prepared run.
+    fn admit_or_queue(&mut self, p: PreparedRun, t: f64) {
+        match self.try_admit(&p) {
+            Admit::Placed { node, slot } => self.start(p, t, node, slot),
+            Admit::WaitCapacity | Admit::WaitPower => self.queue.push_back(p),
+            Admit::Never(reason) => {
+                self.core.jobs[p.job_idx].outcome = SchedOutcome::Dropped { reason };
+            }
+        }
+    }
+
+    /// Complete the next pending job: free its slot (folding the idle
+    /// gap), feed the drift monitor, re-search on drift, then retry the
+    /// queue.
+    fn complete(&mut self) -> Result<()> {
+        let (_, seq) = self.completions.pop().expect("peeked completion exists");
+        let idx = self
+            .core
+            .running
+            .iter()
+            .position(|r| r.seq == seq)
+            .expect("completed job is running");
+        let r = self.core.remove_running(idx);
+        self.index.release(
+            r.node,
+            r.device,
+            r.slot,
+            r.start_s,
+            r.end_s,
+            &self.core.cfg.idle_policy,
+        );
+        self.core.complete_observe(&r)?;
+        self.retry_queue(r.end_s);
+        Ok(())
+    }
+
+    /// Re-scan the queue (first-fit in arrival order) after capacity or
+    /// cap changes.
+    fn retry_queue(&mut self, t: f64) {
+        if self.queue.is_empty() {
+            return;
+        }
+        let mut remaining = VecDeque::new();
+        while let Some(p) = self.queue.pop_front() {
+            match self.try_admit(&p) {
+                Admit::Placed { node, slot } => self.start(p, t, node, slot),
+                Admit::WaitCapacity | Admit::WaitPower => remaining.push_back(p),
+                Admit::Never(reason) => {
+                    self.core.jobs[p.job_idx].outcome = SchedOutcome::Dropped { reason };
+                }
+            }
+        }
+        self.queue = remaining;
+    }
+
+    /// Close out idle accounting and fold the final ledger.
+    pub(super) fn finish(self, preloaded: usize) -> SchedReport {
+        let accel_idle = self
+            .index
+            .finish_idle(self.core.horizon_s, &self.core.cfg.idle_policy);
+        self.core.report(preloaded, accel_idle)
+    }
+}

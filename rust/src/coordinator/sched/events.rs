@@ -1,0 +1,79 @@
+//! The event engine's completion queue: a min-heap over
+//! `(end time, sequence number)`.
+//!
+//! Replaces the reference loop's O(running) `next_completion` scan with
+//! O(log running) push/pop while keeping the *identical* total order —
+//! earliest end time first, ties broken by the lowest job sequence
+//! number — so both engines complete jobs in the same order and fold the
+//! same ledger.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// A finite `f64` with a total order, for heap keys. Constructing one
+/// from a NaN end time is a bug upstream (trace parsing rejects
+/// non-finite times and scales), so ordering panics rather than guessing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(super) struct OrdF64(pub(super) f64);
+
+impl Eq for OrdF64 {}
+
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0
+            .partial_cmp(&other.0)
+            .expect("event times are finite")
+    }
+}
+
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-heap of pending job completions.
+#[derive(Default)]
+pub(super) struct CompletionQueue {
+    heap: BinaryHeap<std::cmp::Reverse<(OrdF64, usize)>>,
+}
+
+impl CompletionQueue {
+    /// Schedule job `seq` to complete at `end_s`.
+    pub(super) fn push(&mut self, end_s: f64, seq: usize) {
+        self.heap.push(std::cmp::Reverse((OrdF64(end_s), seq)));
+    }
+
+    /// The next completion `(end_s, seq)` without removing it.
+    pub(super) fn peek(&self) -> Option<(f64, usize)> {
+        self.heap.peek().map(|std::cmp::Reverse((t, seq))| (t.0, *seq))
+    }
+
+    /// Remove and return the next completion.
+    pub(super) fn pop(&mut self) -> Option<(f64, usize)> {
+        self.heap.pop().map(|std::cmp::Reverse((t, seq))| (t.0, seq))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn completions_pop_earliest_first_then_lowest_seq() {
+        let mut q = CompletionQueue::default();
+        q.push(5.0, 2);
+        q.push(3.0, 7);
+        q.push(5.0, 1);
+        q.push(9.0, 0);
+        assert_eq!(q.peek(), Some((3.0, 7)));
+        assert_eq!(q.pop(), Some((3.0, 7)));
+        // Equal end times: the lower sequence number completes first,
+        // matching the reference loop's tie-break.
+        assert_eq!(q.pop(), Some((5.0, 1)));
+        assert_eq!(q.pop(), Some((5.0, 2)));
+        assert_eq!(q.pop(), Some((9.0, 0)));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.peek(), None);
+    }
+}

@@ -1,0 +1,473 @@
+//! Multi-cluster federation: one arrival trace deterministically sharded
+//! across N clusters, a global coordinator rebalancing the fleet Watt
+//! budget, and the per-cluster ledgers merged into one federation report.
+//!
+//! Semantics (DESIGN.md §12):
+//!
+//! * **Sharding** — each arrival is assigned to a cluster by one
+//!   [`Pcg32`] draw seeded from `shard_seed`, consumed in trace order, so
+//!   the split is a pure function of `(trace, shard_seed, clusters)` and
+//!   independent of everything else. Operator cap events are broadcast to
+//!   every cluster.
+//! * **Headroom rebalancing** — when any Watt cap is in play (the base
+//!   config's or a trace `cap` event's), the coordinator first runs each
+//!   cluster's shard *uncapped* through the shared measurement cache to
+//!   probe its demand (its peak committed Watts, floored at its chassis
+//!   idle), then splits every cap in proportion to demand:
+//!   `share_c = demand_c / Σ demand`. The probe is itself deterministic,
+//!   so the shares — and therefore the capped runs — are too.
+//! * **Merging** — cluster ledgers are summed (energies, admissions,
+//!   searches), the horizon is the latest cluster's, and cache statistics
+//!   are read once from the shared cache, exactly as a single-cluster run
+//!   reports them.
+//!
+//! With `clusters = 1` the share is exactly `demand / demand = 1.0`, so
+//! every cap is scaled by 1.0 (bit-exact) and the single cluster's ledger
+//! equals a plain [`run_sched`](super::run_sched) of the same trace —
+//! asserted in `tests/sched.rs`.
+
+use super::{run_sched_with_cache, Arrival, ArrivalTrace, SchedConfig, SchedReport, TraceEvent};
+use crate::power::{ComponentEnergy, IdleLedger};
+use crate::util::json::Json;
+use crate::util::measure_cache::MeasureCache;
+use crate::util::prng::Pcg32;
+use crate::util::tablefmt::Table;
+use crate::{Error, Result};
+use std::sync::Arc;
+
+/// Federation configuration: the per-cluster scheduler config plus the
+/// shard topology.
+#[derive(Debug, Clone)]
+pub struct FederationConfig {
+    /// Per-cluster configuration (node set, Watt cap, idle policy, job
+    /// template). Every cluster runs this config; the coordinator scales
+    /// its Watt caps by the cluster's demand share.
+    pub base: SchedConfig,
+    /// Number of clusters to shard across (≥ 1).
+    pub clusters: usize,
+    /// Seed for the arrival-to-cluster assignment.
+    pub shard_seed: u64,
+}
+
+impl Default for FederationConfig {
+    fn default() -> Self {
+        Self {
+            base: SchedConfig::default(),
+            clusters: 1,
+            shard_seed: 0,
+        }
+    }
+}
+
+/// One cluster's slice of the federation.
+#[derive(Debug)]
+pub struct ClusterLedger {
+    /// Cluster index (the shard id arrivals were assigned to).
+    pub cluster: usize,
+    /// Demand share of the fleet Watt budget in [0, 1].
+    pub share: f64,
+    /// The cluster's scaled initial Watt cap (`None` = uncapped).
+    pub cap_w: Option<f64>,
+    /// Arrivals sharded to this cluster.
+    pub arrivals: usize,
+    /// The cluster's full scheduler report.
+    pub report: SchedReport,
+}
+
+/// Merged ledger of a federated run.
+#[derive(Debug)]
+pub struct FederationReport {
+    /// Per-cluster ledgers, in cluster order.
+    pub clusters: Vec<ClusterLedger>,
+    /// Whether the coordinator probed demand and rebalanced Watt caps
+    /// (false when no cap was in play anywhere).
+    pub rebalanced: bool,
+    /// Latest cluster horizon, seconds.
+    pub horizon_s: f64,
+    /// Jobs that ran, fleet-wide.
+    pub admitted: usize,
+    /// Jobs that never ran, fleet-wide.
+    pub dropped: usize,
+    /// Summed production energy of all admitted jobs.
+    pub production: ComponentEnergy,
+    /// Summed all-CPU counterfactual, W·s.
+    pub counterfactual_ws: f64,
+    /// Summed chassis idle energy, W·s.
+    pub chassis_idle_ws: f64,
+    /// Summed accelerator idle ledger.
+    pub accel_idle: IdleLedger,
+    /// Deployment searches across all clusters (probe phase included).
+    pub searches: usize,
+    /// Summed simulated search cost, seconds.
+    pub search_cost_s: f64,
+    /// Shared-cache statistics (the federation runs one cache).
+    pub cache_hits: u64,
+    /// Measurements actually run.
+    pub cache_misses: u64,
+    /// Distinct cached measurements at the end.
+    pub cache_entries: usize,
+    /// Entries preloaded from disk.
+    pub cache_preloaded: usize,
+}
+
+impl FederationReport {
+    /// Fleet-wide W·s reduction of admitted jobs vs the all-CPU
+    /// counterfactual.
+    pub fn jobs_reduction(&self) -> f64 {
+        self.counterfactual_ws / self.production.total_ws().max(1e-9)
+    }
+
+    /// Everything the federation burned: dynamic job energy plus chassis
+    /// and charged accelerator idle.
+    pub fn fleet_total_ws(&self) -> f64 {
+        self.production.dynamic_ws() + self.chassis_idle_ws + self.accel_idle.charged_ws
+    }
+
+    /// Render the per-cluster summary table.
+    pub fn table(&self) -> String {
+        let mut t = Table::new(&[
+            "cluster", "share", "cap_W", "arrivals", "admitted", "dropped", "jobs_W*s",
+            "reconfigs",
+        ]);
+        for c in &self.clusters {
+            t.row(&[
+                c.cluster.to_string(),
+                format!("{:.3}", c.share),
+                match c.cap_w {
+                    Some(w) => format!("{w:.0}"),
+                    None => "-".to_string(),
+                },
+                c.arrivals.to_string(),
+                c.report.admitted.to_string(),
+                c.report.dropped.to_string(),
+                format!("{:.1}", c.report.production.total_ws()),
+                c.report.reconfigs.len().to_string(),
+            ]);
+        }
+        let mut out = t.render();
+        out.push_str(&format!(
+            "\nfederation: {} clusters{} | admitted {} dropped {} | jobs {:.1} W*s \
+             (cpu-only {:.1}, x{:.2}) | fleet {:.1} W*s | searches {} | horizon {:.1} s\n",
+            self.clusters.len(),
+            if self.rebalanced {
+                " (caps rebalanced by demand)"
+            } else {
+                ""
+            },
+            self.admitted,
+            self.dropped,
+            self.production.total_ws(),
+            self.counterfactual_ws,
+            self.jobs_reduction(),
+            self.fleet_total_ws(),
+            self.searches,
+            self.horizon_s,
+        ));
+        out
+    }
+
+    /// Machine-readable merged ledger (per-cluster summaries, not the
+    /// full per-job lists — those live in each `clusters[i].report`).
+    pub fn to_json(&self) -> Json {
+        let clusters: Vec<Json> = self
+            .clusters
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("cluster", Json::num(c.cluster as f64)),
+                    ("share", Json::num(c.share)),
+                    (
+                        "cap_w",
+                        match c.cap_w {
+                            Some(w) => Json::num(w),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("arrivals", Json::num(c.arrivals as f64)),
+                    ("admitted", Json::num(c.report.admitted as f64)),
+                    ("dropped", Json::num(c.report.dropped as f64)),
+                    ("jobs_ws", Json::num(c.report.production.total_ws())),
+                    ("counterfactual_ws", Json::num(c.report.counterfactual_ws)),
+                    ("chassis_idle_ws", Json::num(c.report.chassis_idle_ws)),
+                    ("horizon_s", Json::num(c.report.horizon_s)),
+                    ("reconfigs", Json::num(c.report.reconfigs.len() as f64)),
+                    (
+                        "peak_committed_w",
+                        Json::num(c.report.peak_committed_w),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("clusters", Json::arr(clusters)),
+            ("rebalanced", Json::Bool(self.rebalanced)),
+            ("horizon_s", Json::num(self.horizon_s)),
+            ("admitted", Json::num(self.admitted as f64)),
+            ("dropped", Json::num(self.dropped as f64)),
+            (
+                "energy_ws",
+                Json::obj(vec![
+                    ("jobs_total", Json::num(self.production.total_ws())),
+                    ("jobs_dynamic", Json::num(self.production.dynamic_ws())),
+                    ("chassis_idle", Json::num(self.chassis_idle_ws)),
+                    ("accel_idle_charged", Json::num(self.accel_idle.charged_ws)),
+                    ("accel_idle_gated", Json::num(self.accel_idle.gated_ws)),
+                    ("fleet_total", Json::num(self.fleet_total_ws())),
+                    ("counterfactual_cpu", Json::num(self.counterfactual_ws)),
+                    ("reduction", Json::num(self.jobs_reduction())),
+                ]),
+            ),
+            (
+                "search",
+                Json::obj(vec![
+                    ("deployments", Json::num(self.searches as f64)),
+                    ("cost_s", Json::num(self.search_cost_s)),
+                ]),
+            ),
+            (
+                "cache",
+                Json::obj(vec![
+                    ("hits", Json::num(self.cache_hits as f64)),
+                    ("misses", Json::num(self.cache_misses as f64)),
+                    ("entries", Json::num(self.cache_entries as f64)),
+                    ("preloaded", Json::num(self.cache_preloaded as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Deterministic arrival-to-cluster assignment: one [`Pcg32`] draw per
+/// arrival, consumed in trace order.
+fn shard_assignment(trace: &ArrivalTrace, clusters: usize, shard_seed: u64) -> Vec<usize> {
+    let mut rng = Pcg32::seed_from_u64(shard_seed);
+    trace
+        .events
+        .iter()
+        .filter(|e| matches!(e, TraceEvent::Arrival(_)))
+        .map(|_| rng.below(clusters as u32) as usize)
+        .collect()
+}
+
+/// Build cluster `c`'s shard: its assigned arrivals plus every cap event
+/// with the cap scaled by `cap_scale` (demand share). Event order — and
+/// therefore per-cluster determinism — is inherited from the trace.
+fn shard_trace(
+    trace: &ArrivalTrace,
+    assignment: &[usize],
+    c: usize,
+    cap_scale: Option<f64>,
+) -> ArrivalTrace {
+    let mut events = Vec::new();
+    let mut ai = 0;
+    for e in &trace.events {
+        match e {
+            TraceEvent::Arrival(a) => {
+                if assignment[ai] == c {
+                    events.push(TraceEvent::Arrival(Arrival {
+                        at_s: a.at_s,
+                        workload: a.workload.clone(),
+                        destination: a.destination,
+                        scale: a.scale,
+                    }));
+                }
+                ai += 1;
+            }
+            TraceEvent::SetCap { at_s, cap_w } => match cap_scale {
+                Some(s) => events.push(TraceEvent::SetCap {
+                    at_s: *at_s,
+                    cap_w: cap_w.map(|w| w * s),
+                }),
+                // Probe phase: caps stripped entirely.
+                None => {}
+            },
+        }
+    }
+    ArrivalTrace { events }
+}
+
+/// Run a federated fleet: shard, (optionally) probe demand to split the
+/// Watt budget, run every cluster through one shared measurement cache,
+/// and merge the ledgers. A pure function of `(trace, config)` — run it
+/// twice, get the identical report.
+pub fn run_federated(trace: &ArrivalTrace, cfg: &FederationConfig) -> Result<FederationReport> {
+    if cfg.clusters == 0 {
+        return Err(Error::Config("federation: need at least one cluster".into()));
+    }
+    if cfg.base.nodes.is_empty() {
+        return Err(Error::Config("sched: cluster has no nodes".into()));
+    }
+    let cache = Arc::new(match &cfg.base.cache_path {
+        Some(p) if p.exists() => MeasureCache::load(p)?,
+        _ => MeasureCache::new(),
+    });
+    let preloaded = cache.len();
+    let n = cfg.clusters;
+    let assignment = shard_assignment(trace, n, cfg.shard_seed);
+    let cluster_floor_w: f64 = cfg.base.nodes.iter().map(|s| s.chassis_idle_w).sum();
+
+    // Is any Watt cap in play? Only then is there a budget to rebalance.
+    let has_caps = cfg.base.fleet_watt_cap.is_some()
+        || trace
+            .events
+            .iter()
+            .any(|e| matches!(e, TraceEvent::SetCap { cap_w: Some(_), .. }));
+
+    // Phase 1 (probe): run each shard uncapped to learn its demand —
+    // its peak committed Watts, floored at the chassis idle it would pay
+    // anyway. Probe measurements land in the shared cache, so the capped
+    // runs replay them for free.
+    let shares: Vec<f64> = if has_caps && n > 1 {
+        let mut demand = Vec::with_capacity(n);
+        for c in 0..n {
+            let probe_trace = shard_trace(trace, &assignment, c, None);
+            let mut probe_cfg = cfg.base.clone();
+            probe_cfg.fleet_watt_cap = None;
+            probe_cfg.cache_path = None;
+            let r = run_sched_with_cache(&probe_trace, &probe_cfg, Arc::clone(&cache))?;
+            demand.push(r.peak_committed_w.max(cluster_floor_w));
+        }
+        let total: f64 = demand.iter().sum();
+        if total > 0.0 {
+            demand.iter().map(|d| d / total).collect()
+        } else {
+            vec![1.0 / n as f64; n]
+        }
+    } else if has_caps {
+        // One cluster owns the whole budget: share exactly 1.0, so the
+        // scaled caps are bit-identical to the unfederated ones.
+        vec![1.0; n]
+    } else {
+        vec![1.0 / n as f64; n]
+    };
+
+    // Phase 2: the real runs, caps scaled by demand share, sequentially
+    // in cluster order over the shared cache (deterministic hit/miss
+    // interleaving).
+    let mut clusters = Vec::with_capacity(n);
+    for (c, share) in shares.iter().copied().enumerate() {
+        let cap_scale = if has_caps { share } else { 1.0 };
+        let run_trace = shard_trace(trace, &assignment, c, Some(cap_scale));
+        let mut run_cfg = cfg.base.clone();
+        run_cfg.fleet_watt_cap = cfg.base.fleet_watt_cap.map(|w| w * cap_scale);
+        run_cfg.cache_path = None;
+        let cap_w = run_cfg.fleet_watt_cap;
+        let report = run_sched_with_cache(&run_trace, &run_cfg, Arc::clone(&cache))?;
+        clusters.push(ClusterLedger {
+            cluster: c,
+            share,
+            cap_w,
+            arrivals: run_trace.arrivals(),
+            report,
+        });
+    }
+
+    if let Some(p) = &cfg.base.cache_path {
+        if let Err(e) = cache.save(p) {
+            crate::log_warn!(
+                "failed to persist measurement cache to {}: {e}",
+                p.display()
+            );
+        }
+    }
+
+    // Merge.
+    let mut production = ComponentEnergy::default();
+    let mut accel_idle = IdleLedger::default();
+    let mut merged = FederationReport {
+        clusters: Vec::new(),
+        rebalanced: has_caps,
+        horizon_s: 0.0,
+        admitted: 0,
+        dropped: 0,
+        production: ComponentEnergy::default(),
+        counterfactual_ws: 0.0,
+        chassis_idle_ws: 0.0,
+        accel_idle: IdleLedger::default(),
+        searches: 0,
+        search_cost_s: 0.0,
+        cache_hits: cache.hits(),
+        cache_misses: cache.misses(),
+        cache_entries: cache.len(),
+        cache_preloaded: preloaded,
+    };
+    for c in &clusters {
+        merged.horizon_s = merged.horizon_s.max(c.report.horizon_s);
+        merged.admitted += c.report.admitted;
+        merged.dropped += c.report.dropped;
+        production.add(&c.report.production);
+        merged.counterfactual_ws += c.report.counterfactual_ws;
+        merged.chassis_idle_ws += c.report.chassis_idle_ws;
+        accel_idle.charged_ws += c.report.accel_idle.charged_ws;
+        accel_idle.gated_ws += c.report.accel_idle.gated_ws;
+        merged.searches += c.report.searches;
+        merged.search_cost_s += c.report.search_cost_s;
+    }
+    merged.production = production;
+    merged.accel_idle = accel_idle;
+    merged.clusters = clusters;
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_assignment_is_deterministic_and_covers_all_arrivals() {
+        let trace = ArrivalTrace::parse(
+            "0 mriq fpga\n1 vecadd gpu\n2 cap 400\n3 mriq fpga\n4 mriq fpga\n",
+        )
+        .unwrap();
+        let a = shard_assignment(&trace, 3, 42);
+        let b = shard_assignment(&trace, 3, 42);
+        assert_eq!(a, b, "same seed, same split");
+        assert_eq!(a.len(), 4, "one draw per arrival, cap events excluded");
+        assert!(a.iter().all(|&c| c < 3));
+        let c = shard_assignment(&trace, 3, 43);
+        assert_eq!(c.len(), 4);
+        // (Different seeds usually differ; not asserted — 81 collisions
+        // per 81 seed pairs would be a PRNG bug caught elsewhere.)
+    }
+
+    #[test]
+    fn shard_traces_partition_the_arrivals_and_scale_caps() {
+        let trace = ArrivalTrace::parse(
+            "0 mriq fpga\n1 vecadd gpu\n2 cap 400\n3 mriq fpga\n",
+        )
+        .unwrap();
+        let assignment = vec![0, 1, 0];
+        let t0 = shard_trace(&trace, &assignment, 0, Some(0.5));
+        let t1 = shard_trace(&trace, &assignment, 1, Some(0.5));
+        assert_eq!(t0.arrivals(), 2);
+        assert_eq!(t1.arrivals(), 1);
+        // Both shards carry the cap event, scaled.
+        for t in [&t0, &t1] {
+            let cap = t
+                .events
+                .iter()
+                .find_map(|e| match e {
+                    TraceEvent::SetCap { cap_w, .. } => Some(*cap_w),
+                    _ => None,
+                })
+                .expect("cap event broadcast to every shard");
+            assert_eq!(cap, Some(200.0));
+        }
+        // Probe shards strip caps entirely.
+        let probe = shard_trace(&trace, &assignment, 0, None);
+        assert!(probe
+            .events
+            .iter()
+            .all(|e| matches!(e, TraceEvent::Arrival(_))));
+    }
+
+    #[test]
+    fn zero_clusters_is_rejected() {
+        let trace = ArrivalTrace::parse("0 mriq fpga\n").unwrap();
+        let cfg = FederationConfig {
+            clusters: 0,
+            ..Default::default()
+        };
+        assert!(run_federated(&trace, &cfg).is_err());
+    }
+}

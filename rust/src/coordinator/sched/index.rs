@@ -1,0 +1,188 @@
+//! The event engine's cluster occupancy index: per-kind free-slot heaps
+//! plus incremental per-slot idle accumulators.
+//!
+//! The reference loop answers "where does this job go?" by scanning every
+//! node (`position(|n| n.free(kind) > 0)`) and then every slot inside it;
+//! first-fit therefore means *lowest node index, then lowest slot index*.
+//! A min-heap of packed `(node, slot)` pairs pops exactly that
+//! lexicographic minimum in O(log slots), so placement decisions — and
+//! with them every downstream ledger number — are unchanged.
+//!
+//! Idle energy is folded as slots are released (via
+//! [`SlotIdleAccum`], bit-equal to the reference loop's retained-interval
+//! [`split_idle`](crate::power::split_idle) fold) instead of buffering
+//! every busy interval until the end of the run.
+
+use crate::devices::{DeviceKind, NodeSpec};
+use crate::power::{IdleLedger, IdlePolicy, SlotIdleAccum};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::collections::HashMap;
+
+/// Dense index for per-kind bookkeeping (matches
+/// `devices::resources::kind_idx`).
+fn kind_idx(kind: DeviceKind) -> usize {
+    match kind {
+        DeviceKind::Cpu => 0,
+        DeviceKind::ManyCore => 1,
+        DeviceKind::Gpu => 2,
+        DeviceKind::Fpga => 3,
+    }
+}
+
+/// One accelerator slot that draws idle power when powered on but empty.
+struct IdleSlot {
+    idle_w: f64,
+    accum: SlotIdleAccum,
+}
+
+/// Indexed occupancy for the whole cluster.
+pub(super) struct ClusterIndex {
+    /// Free `(node, slot)` pairs per device kind; the heap minimum is the
+    /// reference loop's first-fit choice.
+    free: [BinaryHeap<Reverse<(u32, u32)>>; 4],
+    /// Total slots per kind across the cluster (for the "can this ever
+    /// run?" drop test).
+    total: [usize; 4],
+    /// Idle-charged accelerator slots, in the reference ledger's fold
+    /// order: node, then [ManyCore, Gpu, Fpga], then slot.
+    idle_slots: Vec<IdleSlot>,
+    /// `(node, kind_idx, slot)` → index into `idle_slots`.
+    idle_lookup: HashMap<(usize, usize, usize), usize>,
+}
+
+impl ClusterIndex {
+    pub(super) fn new(nodes: &[NodeSpec]) -> Self {
+        let mut free = [
+            BinaryHeap::new(),
+            BinaryHeap::new(),
+            BinaryHeap::new(),
+            BinaryHeap::new(),
+        ];
+        let mut total = [0usize; 4];
+        for (ni, node) in nodes.iter().enumerate() {
+            for kind in [
+                DeviceKind::Cpu,
+                DeviceKind::ManyCore,
+                DeviceKind::Gpu,
+                DeviceKind::Fpga,
+            ] {
+                let k = kind_idx(kind);
+                let n = node.slots(kind);
+                total[k] += n;
+                for slot in 0..n {
+                    free[k].push(Reverse((ni as u32, slot as u32)));
+                }
+            }
+        }
+        // Idle accumulators in the exact order the reference loop folds
+        // its ledger, so `finish_idle` adds the same f64s in the same
+        // sequence.
+        let mut idle_slots = Vec::new();
+        let mut idle_lookup = HashMap::new();
+        for (ni, node) in nodes.iter().enumerate() {
+            for kind in [DeviceKind::ManyCore, DeviceKind::Gpu, DeviceKind::Fpga] {
+                let idle_w = node.slot_idle_w(kind);
+                if idle_w <= 0.0 {
+                    continue;
+                }
+                for slot in 0..node.slots(kind) {
+                    idle_lookup.insert((ni, kind_idx(kind), slot), idle_slots.len());
+                    idle_slots.push(IdleSlot {
+                        idle_w,
+                        accum: SlotIdleAccum::default(),
+                    });
+                }
+            }
+        }
+        Self {
+            free,
+            total,
+            idle_slots,
+            idle_lookup,
+        }
+    }
+
+    /// Total slots of a kind across the cluster.
+    pub(super) fn total(&self, kind: DeviceKind) -> usize {
+        self.total[kind_idx(kind)]
+    }
+
+    /// Reserve the first-fit free slot of a kind; `None` when the cluster
+    /// is full for that kind.
+    pub(super) fn acquire(&mut self, kind: DeviceKind) -> Option<(usize, usize)> {
+        self.free[kind_idx(kind)]
+            .pop()
+            .map(|Reverse((node, slot))| (node as usize, slot as usize))
+    }
+
+    /// Release a slot whose job occupied `[start_s, end_s]`, folding the
+    /// idle gap before the job into the slot's accumulator.
+    pub(super) fn release(
+        &mut self,
+        node: usize,
+        kind: DeviceKind,
+        slot: usize,
+        start_s: f64,
+        end_s: f64,
+        policy: &IdlePolicy,
+    ) {
+        let k = kind_idx(kind);
+        self.free[k].push(Reverse((node as u32, slot as u32)));
+        if let Some(&i) = self.idle_lookup.get(&(node, k, slot)) {
+            self.idle_slots[i].accum.record_busy(start_s, end_s, policy);
+        }
+    }
+
+    /// Close out every idle-charged slot to the simulation horizon and
+    /// fold the cluster's accelerator idle ledger.
+    pub(super) fn finish_idle(&self, horizon_s: f64, policy: &IdlePolicy) -> IdleLedger {
+        let mut ledger = IdleLedger::default();
+        for s in &self.idle_slots {
+            let c = s.accum.finish(horizon_s, policy);
+            ledger.charged_ws += s.idle_w * c.charged_s;
+            ledger.gated_ws += s.idle_w * c.gated_s;
+        }
+        ledger
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_is_first_fit_by_node_then_slot() {
+        // Two gpu_box nodes, two GPU slots each: acquisition order must be
+        // (0,0), (0,1), (1,0), (1,1) — the reference loop's scan order.
+        let nodes = vec![NodeSpec::gpu_box("g0"), NodeSpec::gpu_box("g1")];
+        let mut idx = ClusterIndex::new(&nodes);
+        assert_eq!(idx.total(DeviceKind::Gpu), 4);
+        assert_eq!(idx.acquire(DeviceKind::Gpu), Some((0, 0)));
+        assert_eq!(idx.acquire(DeviceKind::Gpu), Some((0, 1)));
+        assert_eq!(idx.acquire(DeviceKind::Gpu), Some((1, 0)));
+        assert_eq!(idx.acquire(DeviceKind::Gpu), Some((1, 1)));
+        assert_eq!(idx.acquire(DeviceKind::Gpu), None, "cluster full");
+        // Releasing (0,1) makes it the next first-fit choice again.
+        idx.release(0, DeviceKind::Gpu, 1, 0.0, 5.0, &IdlePolicy::default());
+        assert_eq!(idx.acquire(DeviceKind::Gpu), Some((0, 1)));
+        // No FPGA slots on gpu_box nodes.
+        assert_eq!(idx.total(DeviceKind::Fpga), 0);
+        assert_eq!(idx.acquire(DeviceKind::Fpga), None);
+    }
+
+    #[test]
+    fn idle_ledger_matches_the_interval_fold() {
+        // One gpu_box: 2 GPU slots at 12 W idle. Busy [2,5] on slot 0,
+        // nothing on slot 1, horizon 10 → idle 7 s + 10 s = 17 s ⇒ 204 W·s.
+        let nodes = vec![NodeSpec::gpu_box("g0")];
+        let mut idx = ClusterIndex::new(&nodes);
+        let policy = IdlePolicy::default();
+        let (n, s) = idx.acquire(DeviceKind::Gpu).unwrap();
+        idx.release(n, DeviceKind::Gpu, s, 2.0, 5.0, &policy);
+        let ledger = idx.finish_idle(10.0, &policy);
+        let idle_w = nodes[0].slot_idle_w(DeviceKind::Gpu);
+        assert_eq!(ledger.charged_ws, idle_w * (7.0 + 10.0));
+        assert_eq!(ledger.gated_ws, 0.0);
+    }
+}

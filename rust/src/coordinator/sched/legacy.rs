@@ -1,0 +1,215 @@
+//! The retained time-stepped reference loop (`--legacy-loop`).
+//!
+//! A line-for-line port of the original `SchedSim` onto the shared
+//! [`SimCore`]: completions are rediscovered by an O(running) scan each
+//! step, placement rescans every node through [`NodeOccupancy`], every
+//! arrival is measured afresh through the cache (no memo), and per-slot
+//! busy intervals are buffered until the end of the run and folded with
+//! [`split_idle`](crate::power::split_idle). It exists purely as the
+//! equivalence oracle for the event engine — `tests/sched.rs` asserts
+//! both produce bit-identical [`SchedReport`]s — and is not the path the
+//! CLI or benchmarks exercise by default.
+
+use super::core::{Admit, PreparedRun, SimCore, DROP_NO_SLOT};
+use super::{Arrival, ArrivalTrace, SchedOutcome, SchedReport, TraceEvent};
+use crate::devices::{DeviceKind, NodeOccupancy};
+use crate::power::IdleLedger;
+use crate::Result;
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
+pub(super) struct LegacySim {
+    core: SimCore,
+    nodes: Vec<NodeOccupancy>,
+    queue: VecDeque<PreparedRun>,
+    busy_intervals: HashMap<(usize, DeviceKind, usize), Vec<(f64, f64)>>,
+}
+
+impl LegacySim {
+    pub(super) fn new(core: SimCore) -> Self {
+        let nodes = core
+            .cfg
+            .nodes
+            .iter()
+            .map(|n| NodeOccupancy::new(n.clone()))
+            .collect();
+        Self {
+            core,
+            nodes,
+            queue: VecDeque::new(),
+            busy_intervals: HashMap::new(),
+        }
+    }
+
+    /// Run the event loop over the trace.
+    pub(super) fn run(&mut self, trace: &ArrivalTrace) -> Result<()> {
+        let mut ev_i = 0;
+        loop {
+            let next_event_t = trace.events.get(ev_i).map(|e| e.at_s());
+            let next_done = self.next_completion();
+            let next_done_t = next_done.map(|i| self.core.running[i].end_s);
+            match (next_event_t, next_done_t) {
+                (None, None) => break,
+                // Completions first on ties: they free capacity the
+                // simultaneous arrival may need.
+                (Some(te), Some(td)) if td <= te => self.complete(next_done.unwrap())?,
+                (None, Some(_)) => self.complete(next_done.unwrap())?,
+                (Some(te), _) => {
+                    self.core.horizon_s = self.core.horizon_s.max(te);
+                    match trace.events[ev_i].clone() {
+                        TraceEvent::SetCap { cap_w, .. } => {
+                            self.core.cap_w = cap_w;
+                            self.retry_queue(te);
+                        }
+                        TraceEvent::Arrival(a) => self.arrival(&a)?,
+                    }
+                    ev_i += 1;
+                }
+            }
+        }
+        while let Some(p) = self.queue.pop_front() {
+            self.core.jobs[p.job_idx].outcome = SchedOutcome::Dropped {
+                reason: "still queued when the trace ended".to_string(),
+            };
+        }
+        Ok(())
+    }
+
+    /// One arrival, measured afresh every time (the original behaviour:
+    /// repeat arrivals re-walk the measurement cache and score real
+    /// hits).
+    fn arrival(&mut self, a: &Arrival) -> Result<()> {
+        let wid = self.core.intern_workload(&a.workload)?;
+        let seq = self.core.push_job(a, wid);
+        let dep_id = self.core.dep_id_for(wid, a.destination, a.scale)?;
+        let m = Arc::new(self.core.prepare_fresh(dep_id, a.scale)?);
+        let p = PreparedRun {
+            job_idx: seq,
+            dep_id,
+            m,
+        };
+        self.admit_or_queue(p, a.at_s);
+        Ok(())
+    }
+
+    /// Can this prepared run start now?
+    fn try_admit(&mut self, p: &PreparedRun) -> Admit {
+        if !self.nodes.iter().any(|n| n.spec().slots(p.m.device) > 0) {
+            return Admit::Never(DROP_NO_SLOT.to_string());
+        }
+        if let Some(cap) = self.core.cap_w {
+            if self.core.chassis_floor_w + p.m.dyn_mean_w > cap {
+                return Admit::Never(format!(
+                    "needs {:.1} W dynamic over a {:.0} W idle floor — over the {:.0} W fleet \
+                     cap even on an idle cluster",
+                    p.m.dyn_mean_w, self.core.chassis_floor_w, cap
+                ));
+            }
+            if self.core.committed_w() + p.m.dyn_mean_w > cap {
+                return Admit::WaitPower;
+            }
+        }
+        let node = match self.nodes.iter().position(|n| n.free(p.m.device) > 0) {
+            Some(i) => i,
+            None => return Admit::WaitCapacity,
+        };
+        let slot = self.nodes[node]
+            .acquire(p.m.device)
+            .expect("free slot just checked");
+        Admit::Placed { node, slot }
+    }
+
+    /// Admit or queue (or drop) a prepared run.
+    fn admit_or_queue(&mut self, p: PreparedRun, t: f64) {
+        match self.try_admit(&p) {
+            Admit::Placed { node, slot } => {
+                self.core.start_job(&p, t, node, slot);
+            }
+            Admit::WaitCapacity | Admit::WaitPower => self.queue.push_back(p),
+            Admit::Never(reason) => {
+                self.core.jobs[p.job_idx].outcome = SchedOutcome::Dropped { reason };
+            }
+        }
+    }
+
+    /// Re-scan the queue (first-fit in arrival order) after capacity or
+    /// cap changes.
+    fn retry_queue(&mut self, t: f64) {
+        let mut remaining = VecDeque::new();
+        while let Some(p) = self.queue.pop_front() {
+            match self.try_admit(&p) {
+                Admit::Placed { node, slot } => {
+                    self.core.start_job(&p, t, node, slot);
+                }
+                Admit::WaitCapacity | Admit::WaitPower => remaining.push_back(p),
+                Admit::Never(reason) => {
+                    self.core.jobs[p.job_idx].outcome = SchedOutcome::Dropped { reason };
+                }
+            }
+        }
+        self.queue = remaining;
+    }
+
+    /// Index of the next job to complete (earliest end, then lowest seq).
+    fn next_completion(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, r) in self.core.running.iter().enumerate() {
+            let better = match best {
+                None => true,
+                Some(b) => {
+                    let cur = &self.core.running[b];
+                    r.end_s < cur.end_s || (r.end_s == cur.end_s && r.seq < cur.seq)
+                }
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        best
+    }
+
+    /// Complete one running job: free its slot, buffer its busy interval,
+    /// feed the drift monitor, re-search on drift, then retry the queue.
+    fn complete(&mut self, idx: usize) -> Result<()> {
+        let r = self.core.remove_running(idx);
+        self.nodes[r.node].release(r.device, r.slot);
+        self.busy_intervals
+            .entry((r.node, r.device, r.slot))
+            .or_default()
+            .push((r.start_s, r.end_s));
+        self.core.complete_observe(&r)?;
+        self.retry_queue(r.end_s);
+        Ok(())
+    }
+
+    /// Fold the final ledger: the buffered per-slot busy intervals become
+    /// the accelerator idle charge (the original batch fold the event
+    /// engine's incremental accumulators are checked against).
+    pub(super) fn finish(self, preloaded: usize) -> SchedReport {
+        let LegacySim {
+            core,
+            busy_intervals,
+            ..
+        } = self;
+        let mut accel_idle = IdleLedger::default();
+        for (ni, node) in core.cfg.nodes.iter().enumerate() {
+            for kind in [DeviceKind::ManyCore, DeviceKind::Gpu, DeviceKind::Fpga] {
+                let idle_w = node.slot_idle_w(kind);
+                if idle_w <= 0.0 {
+                    continue;
+                }
+                for slot in 0..node.slots(kind) {
+                    let empty = Vec::new();
+                    let busy = busy_intervals.get(&(ni, kind, slot)).unwrap_or(&empty);
+                    accel_idle.charge_slot(
+                        idle_w,
+                        busy,
+                        core.horizon_s,
+                        &core.cfg.idle_policy,
+                    );
+                }
+            }
+        }
+        core.report(preloaded, accel_idle)
+    }
+}

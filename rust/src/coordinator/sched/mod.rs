@@ -10,8 +10,9 @@
 //! an explicit trace file), an admission controller packs them onto a
 //! cluster of heterogeneous [`NodeSpec`] nodes under a fleet-wide Watt
 //! cap, and a re-adaptation loop feeds every production measurement into
-//! the deployment's [`DriftMonitor`] so drifted jobs are re-searched
-//! mid-run ([`reconfigure_via`]) under their *current* Watt sub-budget.
+//! the deployment's drift monitor so drifted jobs are re-searched
+//! mid-run ([`super::reconfigure_via`]) under their *current* Watt
+//! sub-budget.
 //!
 //! Semantics (DESIGN.md §10):
 //!
@@ -31,7 +32,7 @@
 //!   slots are charged per [`IdlePolicy`] (power gating caps each idle
 //!   gap at `gate_after_s`).
 //! * **Re-adaptation** — each completed run is observed by the
-//!   deployment's [`DriftMonitor`]; any non-stable verdict re-runs the
+//!   deployment's drift monitor; any non-stable verdict re-runs the
 //!   search at the drifted scale with
 //!   [`crate::search::watt_sub_budget`]-derived caps, and the deployment
 //!   (pattern *and* destination) is replaced for subsequent arrivals.
@@ -39,21 +40,41 @@
 //! Everything is simulated-time, single-threaded and a pure function of
 //! `(trace, config, seed)`, so fleet ledger totals are bit-reproducible
 //! and asserted exactly in `tests/sched.rs`.
+//!
+//! Two engines produce that ledger (DESIGN.md §12):
+//!
+//! * the **event-driven engine** (the `engine` module, the default): a
+//!   [`std::collections::BinaryHeap`] completion queue merged against
+//!   the trace cursor, per-kind free-slot heaps and a memoized
+//!   committed-Watt accumulator (`index`), interned deployment keys
+//!   and a prepared-run memo (`core`) — the hot path that carries
+//!   `benches/sched_scale.rs` to 1M arrivals;
+//! * the **time-stepped reference loop** (`legacy`, selected by
+//!   [`SchedConfig::legacy_loop`] / `enadapt sched --legacy-loop`): the
+//!   original linear-scan simulator, retained so the equivalence suite
+//!   can assert the engines' ledgers are bit-identical.
+//!
+//! [`federation`] shards one trace across N clusters with a global
+//! coordinator that rebalances Watt headroom and merges the per-cluster
+//! ledgers (`enadapt sched --clusters N`).
 
-use super::job::{BaselineSource, Destination, JobConfig, JobReport};
-use super::pipeline::Pipeline;
-use super::reconfig::{reconfigure_via, Drift, DriftMonitor};
-use crate::devices::{DeviceKind, NodeOccupancy, NodeSpec, TransferMode};
+mod core;
+mod engine;
+mod events;
+pub mod federation;
+mod index;
+mod legacy;
+
+use super::job::{Destination, JobConfig};
+use super::reconfig::Drift;
+use crate::devices::{DeviceKind, NodeSpec};
 use crate::power::{ComponentEnergy, IdleLedger, IdlePolicy};
 use crate::util::json::Json;
 use crate::util::measure_cache::MeasureCache;
 use crate::util::prng::Pcg32;
 use crate::util::tablefmt::Table;
-use crate::verifier::{AppModel, Measurement, VerifEnv};
 use crate::workloads;
 use crate::{Error, Result};
-use std::collections::HashMap;
-use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
@@ -186,10 +207,13 @@ impl ArrivalTrace {
     /// ```
     ///
     /// Workload names resolve against the bundled workloads; destinations
-    /// are `fpga|gpu|manycore|mixed`. Events are sorted by time (stable
-    /// for ties).
+    /// are `fpga|gpu|manycore|mixed`. Events must already be in
+    /// non-decreasing time order (ties keep file order); an out-of-order
+    /// line, a non-finite time, or a NaN/non-positive scale is rejected
+    /// with its line number.
     pub fn parse(text: &str) -> Result<Self> {
         let mut events = Vec::new();
+        let mut last: Option<(f64, usize)> = None;
         for (lineno, raw) in text.lines().enumerate() {
             let line = match raw.split_once('#') {
                 Some((before, _)) => before,
@@ -211,6 +235,16 @@ impl ArrivalTrace {
             if !at_s.is_finite() || at_s < 0.0 {
                 return Err(bad("event time must be finite and non-negative"));
             }
+            if let Some((prev_t, prev_line)) = last {
+                if at_s < prev_t {
+                    return Err(Error::Config(format!(
+                        "trace line {}: event time {at_s} precedes line {prev_line} \
+                         (t = {prev_t}): traces must be listed in time order",
+                        lineno + 1
+                    )));
+                }
+            }
+            last = Some((at_s, lineno + 1));
             if tokens[1] == "cap" {
                 if tokens.len() != 3 {
                     return Err(bad("expected '<t> cap <W|none>'"));
@@ -248,11 +282,7 @@ impl ArrivalTrace {
                 scale,
             }));
         }
-        let mut trace = Self { events };
-        trace
-            .events
-            .sort_by(|a, b| a.at_s().partial_cmp(&b.at_s()).unwrap());
-        Ok(trace)
+        Ok(Self { events })
     }
 
     /// Load a trace file from disk.
@@ -289,6 +319,11 @@ pub struct SchedConfig {
     pub drift_tolerance: f64,
     /// Optional JSON persistence for the shared measurement cache.
     pub cache_path: Option<PathBuf>,
+    /// Run the retained time-stepped reference loop instead of the
+    /// event-driven engine. Both produce the same report bit for bit
+    /// (asserted in `tests/sched.rs`); the reference loop exists for that
+    /// equivalence suite and `enadapt sched --legacy-loop`.
+    pub legacy_loop: bool,
 }
 
 impl Default for SchedConfig {
@@ -300,12 +335,10 @@ impl Default for SchedConfig {
             idle_policy: IdlePolicy::default(),
             drift_tolerance: 0.25,
             cache_path: None,
+            legacy_loop: false,
         }
     }
 }
-
-/// Why a job never ran.
-const DROP_NO_SLOT: &str = "no node offers a slot of the chosen destination kind";
 
 /// One completed production run.
 #[derive(Debug, Clone)]
@@ -316,8 +349,9 @@ pub struct CompletedJob {
     /// Node index the job was packed onto.
     pub node: usize,
     /// Deployed plan in the canonical rendering (`0101` loop-only,
-    /// `0101|10` with block destination genes).
-    pub pattern: String,
+    /// `0101|10` with block destination genes). Shared across arrivals of
+    /// the same deployment (interned).
+    pub pattern: Arc<str>,
     /// Function blocks substituted by the deployed plan (0 for loop-only
     /// deployments).
     pub blocks: usize,
@@ -359,8 +393,9 @@ pub struct SchedJob {
     pub seq: usize,
     /// Arrival time, simulated seconds.
     pub arrival_s: f64,
-    /// Workload name.
-    pub workload: String,
+    /// Workload name (interned: arrivals of the same workload share one
+    /// allocation).
+    pub workload: Arc<str>,
     /// Requested destination.
     pub destination: Destination,
     /// Workload scale.
@@ -403,6 +438,7 @@ pub fn drift_name(d: Drift) -> &'static str {
 }
 
 /// Aggregate scheduler outcome: the fleet W·s ledger.
+#[derive(Debug)]
 pub struct SchedReport {
     /// Per-arrival records, in trace order.
     pub jobs: Vec<SchedJob>,
@@ -479,10 +515,10 @@ impl SchedReport {
                     t.row(&[
                         j.seq.to_string(),
                         format!("{:.1}", j.arrival_s),
-                        j.workload.clone(),
+                        j.workload.to_string(),
                         j.destination.name().to_string(),
                         c.device.name().to_string(),
-                        c.pattern.clone(),
+                        c.pattern.to_string(),
                         if c.blocks > 0 {
                             c.blocks.to_string()
                         } else {
@@ -500,7 +536,7 @@ impl SchedReport {
                     t.row(&[
                         j.seq.to_string(),
                         format!("{:.1}", j.arrival_s),
-                        j.workload.clone(),
+                        j.workload.to_string(),
                         j.destination.name().to_string(),
                         String::new(),
                         String::new(),
@@ -582,7 +618,7 @@ impl SchedReport {
                 let mut fields = vec![
                     ("seq", Json::num(j.seq as f64)),
                     ("t_arr", Json::num(j.arrival_s)),
-                    ("workload", Json::str(j.workload.clone())),
+                    ("workload", Json::str(j.workload.as_ref())),
                     ("destination", Json::str(j.destination.name())),
                     ("scale", Json::num(j.scale)),
                 ];
@@ -590,7 +626,7 @@ impl SchedReport {
                     SchedOutcome::Completed(c) => {
                         fields.push(("ok", Json::Bool(true)));
                         fields.push(("device", Json::str(c.device.name())));
-                        fields.push(("pattern", Json::str(c.pattern.clone())));
+                        fields.push(("pattern", Json::str(c.pattern.as_ref())));
                         fields.push(("blocks", Json::num(c.blocks as f64)));
                         fields.push(("node", Json::num(c.node as f64)));
                         fields.push(("start_s", Json::num(c.start_s)));
@@ -682,544 +718,11 @@ impl SchedReport {
     }
 }
 
-// ---------------------------------------------------------------------------
-// Simulation internals
-// ---------------------------------------------------------------------------
-
-/// A deployed `(workload, destination)` adaptation.
-struct Deployment {
-    report: JobReport,
-    monitor: DriftMonitor,
-}
-
-impl Deployment {
-    fn new(report: JobReport, tolerance: f64) -> Self {
-        let monitor = DriftMonitor::new(&report.production, tolerance);
-        Self { report, monitor }
-    }
-
-    /// Device the deployed pattern actually occupies (`Cpu` when nothing
-    /// is offloaded).
-    fn run_device(&self) -> DeviceKind {
-        if self.report.best.pattern.genome.ones() == 0 {
-            DeviceKind::Cpu
-        } else {
-            self.report.device
-        }
-    }
-}
-
-/// A measured arrival waiting for (or given) a slot.
-struct PreparedRun {
-    job_idx: usize,
-    key: String,
-    device: DeviceKind,
-    production: Measurement,
-    pattern: String,
-    blocks: usize,
-    dyn_mean_w: f64,
-    baseline_ws: f64,
-}
-
-/// A job occupying a slot.
-struct RunningJob {
-    seq: usize,
-    key: String,
-    node: usize,
-    device: DeviceKind,
-    slot: usize,
-    start_s: f64,
-    end_s: f64,
-    dyn_mean_w: f64,
-    obs_time_s: f64,
-    obs_mean_w: f64,
-    scale: f64,
-}
-
-/// Result of one admission attempt.
-enum Admit {
-    Placed { node: usize, slot: usize },
-    WaitCapacity,
-    WaitPower,
-    Never(String),
-}
-
-fn dep_key(workload: &str, destination: Destination) -> String {
-    format!("{workload}|{}", destination.name())
-}
-
-fn source_of(workload: &str) -> Result<(String, &'static str)> {
-    let (name, src) = workloads::resolve(workload)
-        .ok_or_else(|| Error::Config(format!("unknown workload '{workload}'")))?;
-    Ok((format!("{name}.c"), src))
-}
-
-struct SchedSim {
-    cfg: SchedConfig,
-    cap_w: Option<f64>,
-    base_s: f64,
-    env: VerifEnv,
-    cache: Arc<MeasureCache>,
-    nodes: Vec<NodeOccupancy>,
-    chassis_floor_w: f64,
-    deployments: HashMap<String, Deployment>,
-    apps: HashMap<(String, u64), Arc<AppModel>>,
-    analyses: HashMap<String, crate::canalyze::Analysis>,
-    jobs: Vec<SchedJob>,
-    reconfigs: Vec<ReconfigRecord>,
-    running: Vec<RunningJob>,
-    queue: VecDeque<PreparedRun>,
-    busy_intervals: HashMap<(usize, DeviceKind, usize), Vec<(f64, f64)>>,
-    horizon_s: f64,
-    peak_committed_w: f64,
-    searches: usize,
-    search_cost_s: f64,
-}
-
-impl SchedSim {
-    fn new(cfg: SchedConfig, cache: Arc<MeasureCache>) -> Result<Self> {
-        let base_s = super::job::resolve_baseline(&cfg.template.baseline)?;
-        let mut env = cfg.template.env.clone().build(cfg.template.seed);
-        env.attach_cache(Arc::clone(&cache));
-        let nodes: Vec<NodeOccupancy> = cfg
-            .nodes
-            .iter()
-            .map(|n| NodeOccupancy::new(n.clone()))
-            .collect();
-        let chassis_floor_w: f64 = cfg.nodes.iter().map(|n| n.chassis_idle_w).sum();
-        Ok(Self {
-            cap_w: cfg.fleet_watt_cap,
-            base_s,
-            env,
-            cache,
-            nodes,
-            chassis_floor_w,
-            deployments: HashMap::new(),
-            apps: HashMap::new(),
-            analyses: HashMap::new(),
-            jobs: Vec::new(),
-            reconfigs: Vec::new(),
-            running: Vec::new(),
-            queue: VecDeque::new(),
-            busy_intervals: HashMap::new(),
-            horizon_s: 0.0,
-            peak_committed_w: 0.0,
-            searches: 0,
-            search_cost_s: 0.0,
-            cfg,
-        })
-    }
-
-    /// Mean draw currently spoken for: the chassis floor plus every
-    /// running job's dynamic mean.
-    fn committed_w(&self) -> f64 {
-        self.chassis_floor_w + self.running.iter().map(|r| r.dyn_mean_w).sum::<f64>()
-    }
-
-    /// The Watt sub-budget a (re-)search runs under: the fleet headroom
-    /// left by everything except the job itself — the rest of the
-    /// cluster's chassis floor plus the other running jobs — so the job's
-    /// whole-server peak (which includes its own node's chassis idle) is
-    /// compared against it directly. `own_node` is the node the job runs
-    /// (or will run) on.
-    fn search_committed_w(&self, own_node: usize) -> f64 {
-        self.committed_w() - self.nodes[own_node].spec().chassis_idle_w
-    }
-
-    /// Job configuration for a (re-)search at a scale under the current
-    /// fleet headroom.
-    fn search_cfg(&self, destination: Destination, scale: f64, committed_w: f64) -> JobConfig {
-        let mut cfg = self.cfg.template.clone();
-        cfg.destination = destination;
-        cfg.baseline = BaselineSource::Fixed(self.base_s * scale);
-        cfg.ga_flow.seed = cfg.seed;
-        // Job concurrency is simulated; parallel trial threads would only
-        // make the cache hit/miss interleaving harder to reason about.
-        cfg.ga_flow.parallel_trials = false;
-        let cap_w = self.cap_w;
-        cfg.map_fitness(|f| f.with_fleet_headroom(cap_w, committed_w));
-        cfg
-    }
-
-    /// The application model of a workload at a scale (cached).
-    fn app_for(&mut self, workload: &str, scale: f64) -> Result<Arc<AppModel>> {
-        let key = (workload.to_string(), scale.to_bits());
-        if let Some(app) = self.apps.get(&key) {
-            return Ok(Arc::clone(app));
-        }
-        let (name, src) = source_of(workload)?;
-        if let std::collections::hash_map::Entry::Vacant(slot) =
-            self.analyses.entry(workload.to_string())
-        {
-            slot.insert(crate::canalyze::analyze_source(&name, src)?);
-        }
-        let an = &self.analyses[workload];
-        // Must mirror the deployment pipeline's model (Pipeline::build_env,
-        // via the same JobConfig::block_db rule): block-enabled templates
-        // deploy plans with block genes, so the production app needs the
-        // same genome layout.
-        let app = Arc::new(match self.cfg.template.block_db() {
-            Some(db) => AppModel::from_analysis_with_blocks(
-                an,
-                &self.cfg.template.env.cpu,
-                self.base_s * scale,
-                &db,
-            )?,
-            None => AppModel::from_analysis(
-                an,
-                &self.cfg.template.env.cpu,
-                self.base_s * scale,
-            )?,
-        });
-        self.apps.insert(key, Arc::clone(&app));
-        Ok(app)
-    }
-
-    /// Search a deployment for a `(workload, destination)` pair if none
-    /// exists yet. The search runs on the adaptation server through the
-    /// shared cache; its simulated cost is charged to `search_cost_s`.
-    fn ensure_deployment(&mut self, workload: &str, d: Destination, scale: f64) -> Result<()> {
-        let key = dep_key(workload, d);
-        if self.deployments.contains_key(&key) {
-            return Ok(());
-        }
-        // Budget as if the job will land on the first node that could
-        // host its kind (unknown pre-search for mixed destinations; the
-        // cluster's first node is the deterministic stand-in).
-        let committed = self.search_committed_w(0);
-        let cfg = self.search_cfg(d, scale, committed);
-        let (name, src) = source_of(workload)?;
-        let pipeline = Pipeline::new(cfg).with_cache(Arc::clone(&self.cache));
-        let report = pipeline.run(&name, src)?;
-        self.searches += 1;
-        self.search_cost_s += report.search_cost_s;
-        self.deployments
-            .insert(key, Deployment::new(report, self.cfg.drift_tolerance));
-        Ok(())
-    }
-
-    /// Measure one arrival against its deployment: the production run
-    /// (deployed pattern at the arrival's scale) and the all-CPU
-    /// counterfactual. Pure and cached.
-    fn prepare(&mut self, job_idx: usize, a: &Arrival) -> Result<PreparedRun> {
-        let key = dep_key(&a.workload, a.destination);
-        let app = self.app_for(&a.workload, a.scale)?;
-        let dep = &self.deployments[&key];
-        let device = dep.run_device();
-        let bits = dep.report.best.pattern.bits().to_vec();
-        // Shared accessors so the sched table/JSON can never drift from
-        // the fleet and job reports (canonical `0101|10` rendering).
-        let blocks = dep.report.blocks_active();
-        let pattern = dep.report.best.pattern.plan().to_string();
-        let production = self.env.measure(&app, &bits, device, TransferMode::Batched);
-        let baseline = self.env.measure_cpu_only(&app);
-        let dyn_mean_w = if production.time_s > 0.0 {
-            production.report.components.dynamic_ws() / production.time_s
-        } else {
-            0.0
-        };
-        Ok(PreparedRun {
-            job_idx,
-            key,
-            device,
-            production,
-            pattern,
-            blocks,
-            dyn_mean_w,
-            baseline_ws: baseline.energy_ws,
-        })
-    }
-
-    /// Can this prepared run start now?
-    fn try_admit(&mut self, p: &PreparedRun) -> Admit {
-        if !self
-            .nodes
-            .iter()
-            .any(|n| n.spec().slots(p.device) > 0)
-        {
-            return Admit::Never(DROP_NO_SLOT.to_string());
-        }
-        if let Some(cap) = self.cap_w {
-            if self.chassis_floor_w + p.dyn_mean_w > cap {
-                return Admit::Never(format!(
-                    "needs {:.1} W dynamic over a {:.0} W idle floor — over the {:.0} W fleet \
-                     cap even on an idle cluster",
-                    p.dyn_mean_w, self.chassis_floor_w, cap
-                ));
-            }
-            if self.committed_w() + p.dyn_mean_w > cap {
-                return Admit::WaitPower;
-            }
-        }
-        let node = match self.nodes.iter().position(|n| n.free(p.device) > 0) {
-            Some(i) => i,
-            None => return Admit::WaitCapacity,
-        };
-        let slot = self.nodes[node]
-            .acquire(p.device)
-            .expect("free slot just checked");
-        Admit::Placed { node, slot }
-    }
-
-    /// Start a prepared run at simulated time `t` on `(node, slot)`.
-    fn start(&mut self, p: PreparedRun, t: f64, node: usize, slot: usize) {
-        let m = &p.production;
-        let end_s = t + m.time_s;
-        self.horizon_s = self.horizon_s.max(end_s);
-        let job = &mut self.jobs[p.job_idx];
-        job.outcome = SchedOutcome::Completed(CompletedJob {
-            device: p.device,
-            node,
-            pattern: p.pattern.clone(),
-            blocks: p.blocks,
-            start_s: t,
-            end_s,
-            time_s: m.time_s,
-            mean_w: m.mean_w,
-            dyn_mean_w: p.dyn_mean_w,
-            energy: m.report.components,
-            energy_ws: m.energy_ws,
-            baseline_ws: p.baseline_ws,
-        });
-        self.running.push(RunningJob {
-            seq: p.job_idx,
-            key: p.key,
-            node,
-            device: p.device,
-            slot,
-            start_s: t,
-            end_s,
-            dyn_mean_w: p.dyn_mean_w,
-            obs_time_s: m.time_s,
-            obs_mean_w: m.mean_w,
-            scale: self.jobs[p.job_idx].scale,
-        });
-        self.peak_committed_w = self.peak_committed_w.max(self.committed_w());
-    }
-
-    /// Admit or queue (or drop) a prepared run.
-    fn admit_or_queue(&mut self, p: PreparedRun, t: f64) {
-        match self.try_admit(&p) {
-            Admit::Placed { node, slot } => self.start(p, t, node, slot),
-            Admit::WaitCapacity | Admit::WaitPower => self.queue.push_back(p),
-            Admit::Never(reason) => {
-                self.jobs[p.job_idx].outcome = SchedOutcome::Dropped { reason };
-            }
-        }
-    }
-
-    /// Re-scan the queue (first-fit in arrival order) after capacity or
-    /// cap changes.
-    fn retry_queue(&mut self, t: f64) {
-        let mut remaining = VecDeque::new();
-        while let Some(p) = self.queue.pop_front() {
-            match self.try_admit(&p) {
-                Admit::Placed { node, slot } => self.start(p, t, node, slot),
-                Admit::WaitCapacity | Admit::WaitPower => remaining.push_back(p),
-                Admit::Never(reason) => {
-                    self.jobs[p.job_idx].outcome = SchedOutcome::Dropped { reason };
-                }
-            }
-        }
-        self.queue = remaining;
-    }
-
-    /// Index of the next job to complete (earliest end, then lowest seq).
-    fn next_completion(&self) -> Option<usize> {
-        let mut best: Option<usize> = None;
-        for (i, r) in self.running.iter().enumerate() {
-            let better = match best {
-                None => true,
-                Some(b) => {
-                    let cur = &self.running[b];
-                    r.end_s < cur.end_s || (r.end_s == cur.end_s && r.seq < cur.seq)
-                }
-            };
-            if better {
-                best = Some(i);
-            }
-        }
-        best
-    }
-
-    /// Complete one running job: free its slot, feed the drift monitor,
-    /// re-search on drift, then retry the queue.
-    fn complete(&mut self, idx: usize) -> Result<()> {
-        let r = self.running.remove(idx);
-        self.nodes[r.node].release(r.device, r.slot);
-        self.busy_intervals
-            .entry((r.node, r.device, r.slot))
-            .or_default()
-            .push((r.start_s, r.end_s));
-        let t = r.end_s;
-
-        // Step 7: fold the production observation into the deployment's
-        // monitor; re-search on drift under the current fleet headroom.
-        let committed = self.search_committed_w(r.node);
-        let verdict = {
-            let dep = self
-                .deployments
-                .get_mut(&r.key)
-                .expect("completed job has a deployment");
-            dep.monitor.observe(r.obs_time_s, r.obs_mean_w)
-        };
-        if verdict != Drift::Stable {
-            let workload = r
-                .key
-                .split('|')
-                .next()
-                .expect("deployment keys are 'workload|dest'")
-                .to_string();
-            let destination = self.jobs[r.seq].destination;
-            let new_cfg = self.search_cfg(destination, r.scale, committed);
-            let (_, src) = source_of(&workload)?;
-            let cache = Arc::clone(&self.cache);
-            let tolerance = self.cfg.drift_tolerance;
-            let dep = self
-                .deployments
-                .get_mut(&r.key)
-                .expect("deployment still present");
-            let old_pattern = dep.report.best.pattern.genome.to_string();
-            let out = reconfigure_via(&dep.report, src, &new_cfg, Some(&cache))?;
-            let record = ReconfigRecord {
-                at_s: t,
-                workload,
-                destination,
-                drift: verdict,
-                pattern_changed: out.pattern_changed,
-                device_changed: out.device_changed,
-                old_pattern,
-                new_pattern: out.report.best.pattern.genome.to_string(),
-                new_device: out.report.device,
-            };
-            self.searches += 1;
-            self.search_cost_s += out.report.search_cost_s;
-            *dep = Deployment::new(out.report, tolerance);
-            self.reconfigs.push(record);
-        }
-
-        self.retry_queue(t);
-        Ok(())
-    }
-
-    /// Run the event loop over the trace.
-    fn run(&mut self, trace: &ArrivalTrace) -> Result<()> {
-        let mut ev_i = 0;
-        loop {
-            let next_event_t = trace.events.get(ev_i).map(|e| e.at_s());
-            let next_done = self.next_completion();
-            let next_done_t = next_done.map(|i| self.running[i].end_s);
-            match (next_event_t, next_done_t) {
-                (None, None) => break,
-                // Completions first on ties: they free capacity the
-                // simultaneous arrival may need.
-                (Some(te), Some(td)) if td <= te => self.complete(next_done.unwrap())?,
-                (None, Some(_)) => self.complete(next_done.unwrap())?,
-                (Some(te), _) => {
-                    self.horizon_s = self.horizon_s.max(te);
-                    match trace.events[ev_i].clone() {
-                        TraceEvent::SetCap { cap_w, .. } => {
-                            self.cap_w = cap_w;
-                            // A raised cap can admit queued jobs; a
-                            // lowered one can turn them into drops.
-                            self.retry_queue(te);
-                        }
-                        TraceEvent::Arrival(a) => {
-                            let seq = self.jobs.len();
-                            self.jobs.push(SchedJob {
-                                seq,
-                                arrival_s: a.at_s,
-                                workload: a.workload.clone(),
-                                destination: a.destination,
-                                scale: a.scale,
-                                outcome: SchedOutcome::Dropped {
-                                    reason: "pending".to_string(),
-                                },
-                            });
-                            self.ensure_deployment(&a.workload, a.destination, a.scale)?;
-                            let prepared = self.prepare(seq, &a)?;
-                            self.admit_or_queue(prepared, a.at_s);
-                        }
-                    }
-                    ev_i += 1;
-                }
-            }
-        }
-        // Anything still queued can never start (no events or running
-        // jobs left to change the situation).
-        while let Some(p) = self.queue.pop_front() {
-            self.jobs[p.job_idx].outcome = SchedOutcome::Dropped {
-                reason: "still queued when the trace ended".to_string(),
-            };
-        }
-        Ok(())
-    }
-
-    /// Fold the final ledger.
-    fn report(self, preloaded: usize) -> SchedReport {
-        let mut production = ComponentEnergy::default();
-        let mut counterfactual_ws = 0.0;
-        let mut admitted = 0;
-        let mut dropped = 0;
-        for j in &self.jobs {
-            match &j.outcome {
-                SchedOutcome::Completed(c) => {
-                    admitted += 1;
-                    production.add(&c.energy);
-                    counterfactual_ws += c.baseline_ws;
-                }
-                SchedOutcome::Dropped { .. } => dropped += 1,
-            }
-        }
-        let chassis_idle_ws = self.chassis_floor_w * self.horizon_s;
-        let mut accel_idle = IdleLedger::default();
-        for (ni, node) in self.cfg.nodes.iter().enumerate() {
-            for kind in [DeviceKind::ManyCore, DeviceKind::Gpu, DeviceKind::Fpga] {
-                let idle_w = node.slot_idle_w(kind);
-                if idle_w <= 0.0 {
-                    continue;
-                }
-                for slot in 0..node.slots(kind) {
-                    let empty = Vec::new();
-                    let busy = self
-                        .busy_intervals
-                        .get(&(ni, kind, slot))
-                        .unwrap_or(&empty);
-                    accel_idle.charge_slot(
-                        idle_w,
-                        busy,
-                        self.horizon_s,
-                        &self.cfg.idle_policy,
-                    );
-                }
-            }
-        }
-        SchedReport {
-            jobs: self.jobs,
-            reconfigs: self.reconfigs,
-            nodes: self.cfg.nodes,
-            horizon_s: self.horizon_s,
-            admitted,
-            dropped,
-            production,
-            counterfactual_ws,
-            chassis_idle_ws,
-            accel_idle,
-            peak_committed_w: self.peak_committed_w,
-            final_cap_w: self.cap_w,
-            searches: self.searches,
-            search_cost_s: self.search_cost_s,
-            cache_hits: self.cache.hits(),
-            cache_misses: self.cache.misses(),
-            cache_entries: self.cache.len(),
-            cache_preloaded: preloaded,
-        }
-    }
-}
-
 /// Run the scheduler over a trace with an explicit shared measurement
 /// cache (exposed so tests can re-derive per-job baselines from the same
-/// cache the run used).
+/// cache the run used). Dispatches to the event-driven engine, or to the
+/// retained time-stepped reference loop when `cfg.legacy_loop` is set —
+/// the two produce bit-identical reports.
 pub fn run_sched_with_cache(
     trace: &ArrivalTrace,
     cfg: &SchedConfig,
@@ -1229,9 +732,16 @@ pub fn run_sched_with_cache(
         return Err(Error::Config("sched: cluster has no nodes".into()));
     }
     let preloaded = cache.len();
-    let mut sim = SchedSim::new(cfg.clone(), cache)?;
-    sim.run(trace)?;
-    Ok(sim.report(preloaded))
+    let sim_core = core::SimCore::new(cfg.clone(), cache)?;
+    if cfg.legacy_loop {
+        let mut sim = legacy::LegacySim::new(sim_core);
+        sim.run(trace)?;
+        Ok(sim.finish(preloaded))
+    } else {
+        let mut sim = engine::EventSim::new(sim_core);
+        sim.run(trace)?;
+        Ok(sim.finish(preloaded))
+    }
 }
 
 /// Run the scheduler over a trace (cache loaded/persisted per
@@ -1334,9 +844,40 @@ mod tests {
     }
 
     #[test]
-    fn trace_parse_sorts_out_of_order_events() {
-        let t = ArrivalTrace::parse("9.0 mriq fpga\n1.0 vecadd gpu\n").unwrap();
-        assert!(t.events[0].at_s() < t.events[1].at_s());
+    fn trace_parse_rejects_out_of_order_events() {
+        // Out-of-order timestamps used to be silently sorted into place;
+        // they now fail loudly with the offending line number.
+        let err = ArrivalTrace::parse("9.0 mriq fpga\n1.0 vecadd gpu\n").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("line 2"), "line-numbered: {msg}");
+        // Cap events participate in the same ordering check.
+        let err = ArrivalTrace::parse("5.0 mriq fpga\n2.0 cap 300\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+        // Equal timestamps keep file order and stay legal.
+        assert!(ArrivalTrace::parse("3.0 mriq fpga\n3.0 vecadd gpu\n").is_ok());
+    }
+
+    #[test]
+    fn trace_parse_rejects_nan_scale() {
+        let err = ArrivalTrace::parse("0 mriq fpga\n1.0 mriq fpga nan\n").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("line 2"), "line-numbered: {msg}");
+        assert!(msg.contains("scale"), "names the bad field: {msg}");
+    }
+
+    #[test]
+    fn trace_parse_rejects_negative_scale() {
+        let err = ArrivalTrace::parse("1.0 mriq fpga -2\n").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("line 1"), "line-numbered: {msg}");
+        assert!(msg.contains("scale"), "names the bad field: {msg}");
+    }
+
+    #[test]
+    fn trace_parse_rejects_nonfinite_event_time() {
+        let err = ArrivalTrace::parse("nan mriq fpga\n").unwrap_err();
+        assert!(err.to_string().contains("line 1"), "{err}");
+        assert!(ArrivalTrace::parse("inf mriq fpga\n").is_err());
     }
 
     #[test]
@@ -1347,5 +888,24 @@ mod tests {
             ..Default::default()
         };
         assert!(run_sched(&trace, &cfg).is_err());
+    }
+
+    #[test]
+    fn legacy_flag_selects_the_reference_loop_with_the_same_ledger() {
+        let trace = ArrivalTrace::parse("0 mriq fpga\n4 vecadd gpu\n").unwrap();
+        let cfg = SchedConfig::default();
+        let event = run_sched(&trace, &cfg).unwrap();
+        let legacy = run_sched(
+            &trace,
+            &SchedConfig {
+                legacy_loop: true,
+                ..cfg
+            },
+        )
+        .unwrap();
+        assert_eq!(
+            event.to_json().to_string_compact(),
+            legacy.to_json().to_string_compact()
+        );
     }
 }

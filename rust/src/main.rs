@@ -156,6 +156,22 @@ fn app() -> App {
                     ));
                     o.push(opt("generations", "20", "GA generations (gpu/manycore stages)"));
                     o.push(opt("population", "16", "GA population (gpu/manycore stages)"));
+                    o.push(opt(
+                        "clusters",
+                        "1",
+                        "federate: shard arrivals across this many clusters (each gets \
+                         its own --nodes cluster; Watt caps are rebalanced by demand)",
+                    ));
+                    o.push(opt(
+                        "shard-seed",
+                        "0",
+                        "seed for the arrival-to-cluster shard assignment",
+                    ));
+                    o.push(flag(
+                        "legacy-loop",
+                        "run the retained time-stepped reference loop instead of the \
+                         event-driven engine (same ledger, bit for bit)",
+                    ));
                     o
                 },
                 positionals: vec![],
@@ -515,6 +531,7 @@ fn dispatch(p: &Parsed) -> enadapt::Result<()> {
                     .get("cache")
                     .filter(|s| !s.is_empty())
                     .map(std::path::PathBuf::from),
+                legacy_loop: p.flag("legacy-loop"),
             };
             let trace = match p.get("trace").filter(|s| !s.is_empty()) {
                 Some(path) => {
@@ -552,6 +569,25 @@ fn dispatch(p: &Parsed) -> enadapt::Result<()> {
                     enadapt::coordinator::ArrivalTrace::poisson(&syn)
                 }
             };
+            let clusters = p
+                .get_usize("clusters")
+                .map_err(|e| enadapt::Error::Config(e.to_string()))?;
+            if clusters > 1 {
+                let fcfg = enadapt::coordinator::FederationConfig {
+                    base: cfg,
+                    clusters,
+                    shard_seed: p
+                        .get_u64("shard-seed")
+                        .map_err(|e| enadapt::Error::Config(e.to_string()))?,
+                };
+                let report = enadapt::coordinator::run_federated(&trace, &fcfg)?;
+                if p.flag("json") {
+                    println!("{}", report.to_json().to_string_pretty());
+                } else {
+                    println!("{}", report.table());
+                }
+                return Ok(());
+            }
             let report = enadapt::coordinator::run_sched(&trace, &cfg)?;
             if p.flag("json") {
                 println!("{}", report.to_json().to_string_pretty());

@@ -58,27 +58,63 @@ pub struct IdleCharge {
 pub fn split_idle(busy: &[(f64, f64)], horizon_s: f64, policy: &IdlePolicy) -> IdleCharge {
     let mut out = IdleCharge::default();
     let mut cursor = 0.0;
-    let charge_gap = |gap_s: f64, out: &mut IdleCharge| {
-        if gap_s <= 0.0 {
-            return;
-        }
-        let charged = match policy.gate_after_s {
-            Some(g) => gap_s.min(g),
-            None => gap_s,
-        };
-        out.charged_s += charged;
-        out.gated_s += gap_s - charged;
-    };
     for &(start, end) in busy {
         assert!(
             end >= start && start >= cursor,
             "busy intervals must be sorted and non-overlapping"
         );
-        charge_gap((start - cursor).min(horizon_s - cursor), &mut out);
+        charge_gap((start - cursor).min(horizon_s - cursor), policy, &mut out);
         cursor = end.max(cursor);
     }
-    charge_gap(horizon_s - cursor, &mut out);
+    charge_gap(horizon_s - cursor, policy, &mut out);
     out
+}
+
+/// Incremental form of [`split_idle`] for event-driven simulators: feed
+/// busy intervals one at a time as jobs complete (in start order, the
+/// shape lowest-index-first slot assignment produces), then close out the
+/// final gap with [`Self::finish`] once the horizon is known.
+///
+/// Bit-equal to buffering the intervals and calling [`split_idle`] at the
+/// end, provided every interval ends at or before the horizon — which
+/// the scheduler guarantees (its horizon is the maximum completion time),
+/// making [`split_idle`]'s `min(horizon - cursor)` clamp a no-op. Both
+/// paths then charge the identical per-gap f64s in the identical order.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SlotIdleAccum {
+    cursor: f64,
+    charge: IdleCharge,
+}
+
+impl SlotIdleAccum {
+    /// Fold in the idle gap before one busy interval.
+    pub fn record_busy(&mut self, start: f64, end: f64, policy: &IdlePolicy) {
+        assert!(
+            end >= start && start >= self.cursor,
+            "busy intervals must be sorted and non-overlapping"
+        );
+        charge_gap(start - self.cursor, policy, &mut self.charge);
+        self.cursor = end.max(self.cursor);
+    }
+
+    /// Charge the trailing gap up to `horizon_s` and return the split.
+    pub fn finish(mut self, horizon_s: f64, policy: &IdlePolicy) -> IdleCharge {
+        charge_gap(horizon_s - self.cursor, policy, &mut self.charge);
+        self.charge
+    }
+}
+
+/// Charge one idle gap per the gating policy (no-op on empty gaps).
+fn charge_gap(gap_s: f64, policy: &IdlePolicy, out: &mut IdleCharge) {
+    if gap_s <= 0.0 {
+        return;
+    }
+    let charged = match policy.gate_after_s {
+        Some(g) => gap_s.min(g),
+        None => gap_s,
+    };
+    out.charged_s += charged;
+    out.gated_s += gap_s - charged;
 }
 
 /// Accumulated idle energy across a cluster's device slots.
@@ -168,5 +204,44 @@ mod tests {
     #[should_panic(expected = "sorted and non-overlapping")]
     fn unsorted_intervals_are_rejected() {
         split_idle(&[(5.0, 6.0), (1.0, 2.0)], 10.0, &IdlePolicy::default());
+    }
+
+    /// The incremental accumulator must agree with the batch fold bit for
+    /// bit on every policy — it is the event engine's replacement for
+    /// retaining busy intervals until the end of the run.
+    #[test]
+    fn incremental_accumulator_matches_split_idle() {
+        let cases: &[&[(f64, f64)]] = &[
+            &[],
+            &[(0.0, 10.0)],
+            &[(2.0, 4.0), (6.0, 7.0)],
+            &[(0.0, 1.0), (1.0, 2.0), (5.5, 9.25)],
+            &[(3.0, 3.0), (3.0, 8.0)],
+        ];
+        let policies = [
+            IdlePolicy::default(),
+            IdlePolicy::gate_after(0.0),
+            IdlePolicy::gate_after(1.5),
+            IdlePolicy::gate_after(30.0),
+        ];
+        for busy in cases {
+            for policy in &policies {
+                let batch = split_idle(busy, 10.0, policy);
+                let mut accum = SlotIdleAccum::default();
+                for &(s, e) in *busy {
+                    accum.record_busy(s, e, policy);
+                }
+                let inc = accum.finish(10.0, policy);
+                assert_eq!(inc, batch, "busy {busy:?} policy {policy:?}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted and non-overlapping")]
+    fn accumulator_rejects_out_of_order_intervals() {
+        let mut accum = SlotIdleAccum::default();
+        accum.record_busy(5.0, 6.0, &IdlePolicy::default());
+        accum.record_busy(1.0, 2.0, &IdlePolicy::default());
     }
 }

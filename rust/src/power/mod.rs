@@ -13,7 +13,7 @@ pub mod ipmi;
 pub mod meter;
 pub mod trace;
 
-pub use idle::{split_idle, IdleCharge, IdleLedger, IdlePolicy};
+pub use idle::{split_idle, IdleCharge, IdleLedger, IdlePolicy, SlotIdleAccum};
 pub use ipmi::{IpmiConfig, IpmiSampler};
 pub use meter::{
     AttributedProfile, Component, ComponentEnergy, ComponentPower, EnergyReport, IpmiMeter,

@@ -100,6 +100,16 @@ impl MeasureCache {
         self.hits.load(Ordering::Relaxed)
     }
 
+    /// Credit `n` hits without a lookup. For memo layers sitting *above*
+    /// the cache (e.g. the scheduler's prepared-arrival memo): when the
+    /// memo answers, the lookups it short-circuited would all have been
+    /// cache hits, so the hit ledger — a count of verification trials
+    /// saved — must still record them to stay comparable with an
+    /// unmemoized run.
+    pub fn note_hits(&self, n: u64) {
+        self.hits.fetch_add(n, Ordering::Relaxed);
+    }
+
     /// Trials actually run through this cache.
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
@@ -345,6 +355,15 @@ mod tests {
         assert_eq!((c.hits(), c.misses()), (1, 1));
         assert_eq!(c.len(), 1);
         assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn note_hits_credits_the_hit_ledger_without_a_lookup() {
+        let c = MeasureCache::new();
+        c.get_or_measure(key(true, 1), || fake_measurement(2.0));
+        c.note_hits(2);
+        assert_eq!((c.hits(), c.misses()), (2, 1));
+        assert_eq!(c.len(), 1, "no entries were added");
     }
 
     #[test]

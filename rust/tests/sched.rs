@@ -5,7 +5,8 @@
 
 use enadapt::coordinator::sched::{run_sched, run_sched_with_cache, SchedOutcome};
 use enadapt::coordinator::{
-    ArrivalTrace, Drift, JobConfig, SchedConfig, SyntheticTraceConfig,
+    run_federated, ArrivalTrace, Drift, FederationConfig, JobConfig, SchedConfig,
+    SyntheticTraceConfig,
 };
 use enadapt::devices::NodeSpec;
 use enadapt::offload::GpuFlowConfig;
@@ -185,6 +186,188 @@ fn time_drifted_trace_triggers_reconfigure_and_changes_the_pattern() {
         report.production.total_ws(),
         report.counterfactual_ws
     );
+}
+
+/// The event-driven engine (heaps, indexes, memoized arrivals) must fold
+/// the exact report of the retained time-stepped reference loop — every
+/// job energy, queue decision, drift re-search, idle split, and cache
+/// counter — on a standard drifting trace, per seed.
+#[test]
+fn event_engine_matches_legacy_loop_bit_for_bit() {
+    for seed in [7u64, 42] {
+        let mut syn = SyntheticTraceConfig::standard(250, 1.0, seed);
+        syn.drift_after = Some(125);
+        syn.drift_scale = 2.0;
+        let trace = ArrivalTrace::poisson(&syn);
+        let cfg = SchedConfig {
+            template: quick_template(),
+            nodes: two_node_cluster(),
+            fleet_watt_cap: Some(500.0),
+            idle_policy: enadapt::power::IdlePolicy::gate_after(20.0),
+            ..Default::default()
+        };
+        let event = run_sched(&trace, &cfg).unwrap();
+        let legacy = run_sched(
+            &trace,
+            &SchedConfig {
+                legacy_loop: true,
+                ..cfg.clone()
+            },
+        )
+        .unwrap();
+        assert_eq!(
+            event.to_json().to_string_compact(),
+            legacy.to_json().to_string_compact(),
+            "engines disagree at seed {seed}"
+        );
+        assert!(event.admitted > 0, "something must run at seed {seed}");
+    }
+}
+
+/// Same equivalence on a trace with operator cap events: mid-run cap
+/// tightening (queue → drop decisions), cap removal, and the drift
+/// re-search under the changed sub-budget all go through the indexed
+/// admission path.
+#[test]
+fn event_engine_matches_legacy_loop_on_cap_events() {
+    let trace = ArrivalTrace::parse(
+        "0  mriq fpga 1.0\n\
+         5  cap 220\n\
+         10 mriq fpga 2.2\n\
+         20 mriq fpga 2.2\n\
+         30 mriq fpga 2.2\n\
+         40 cap none\n\
+         45 vecadd gpu\n\
+         50 vecadd gpu 1.3\n",
+    )
+    .unwrap();
+    let cfg = SchedConfig {
+        nodes: two_node_cluster(),
+        ..Default::default()
+    };
+    let event = run_sched(&trace, &cfg).unwrap();
+    let legacy = run_sched(
+        &trace,
+        &SchedConfig {
+            legacy_loop: true,
+            ..cfg
+        },
+    )
+    .unwrap();
+    assert_eq!(
+        event.to_json().to_string_compact(),
+        legacy.to_json().to_string_compact()
+    );
+    assert!(!event.reconfigs.is_empty(), "cap squeeze must trigger drift");
+    assert!(event.dropped >= 1, "tightened cap must drop something");
+}
+
+#[test]
+fn federated_run_is_deterministic_and_merges_cluster_ledgers() {
+    let trace = ArrivalTrace::poisson(&SyntheticTraceConfig::standard(40, 0.5, 9));
+    let fcfg = FederationConfig {
+        base: SchedConfig {
+            template: quick_template(),
+            nodes: two_node_cluster(),
+            fleet_watt_cap: Some(600.0),
+            ..Default::default()
+        },
+        clusters: 4,
+        shard_seed: 1,
+    };
+    let a = run_federated(&trace, &fcfg).unwrap();
+    let b = run_federated(&trace, &fcfg).unwrap();
+    assert_eq!(
+        a.to_json().to_string_compact(),
+        b.to_json().to_string_compact(),
+        "federation must be a pure function of (trace, config)"
+    );
+
+    // The shard partitions the arrivals: nothing lost, nothing doubled.
+    assert_eq!(a.clusters.len(), 4);
+    let sharded: usize = a.clusters.iter().map(|c| c.arrivals).sum();
+    assert_eq!(sharded, 40);
+    assert_eq!(a.admitted + a.dropped, 40);
+    assert!(a.rebalanced, "a capped federation rebalances");
+
+    // Demand shares split the whole budget.
+    let share_sum: f64 = a.clusters.iter().map(|c| c.share).sum();
+    assert!((share_sum - 1.0).abs() < 1e-9, "shares sum to {share_sum}");
+    for c in &a.clusters {
+        assert_eq!(c.cap_w, Some(600.0 * c.share));
+    }
+
+    // The merged ledger is the per-cluster sum (up to f64 association:
+    // the merge adds components, the per-cluster totals add totals).
+    let jobs_ws: f64 = a.clusters.iter().map(|c| c.report.production.total_ws()).sum();
+    assert!(
+        (a.production.total_ws() - jobs_ws).abs() <= 1e-6 * jobs_ws.max(1.0),
+        "merged {} vs per-cluster sum {}",
+        a.production.total_ws(),
+        jobs_ws
+    );
+    let cf: f64 = a.clusters.iter().map(|c| c.report.counterfactual_ws).sum();
+    assert_eq!(a.counterfactual_ws, cf, "counterfactual merges in order");
+
+    // Engine independence extends to the federation: running every
+    // cluster on the reference loop folds the identical federation JSON.
+    let legacy_fcfg = FederationConfig {
+        base: SchedConfig {
+            legacy_loop: true,
+            ..fcfg.base.clone()
+        },
+        ..fcfg
+    };
+    let l = run_federated(&trace, &legacy_fcfg).unwrap();
+    assert_eq!(
+        a.to_json().to_string_compact(),
+        l.to_json().to_string_compact(),
+        "federated legacy loop must match the event engine"
+    );
+}
+
+/// `--clusters 1` must be a no-op wrapper: the single cluster owns the
+/// whole budget (share exactly 1.0, cap scaled bit-exactly), so its
+/// report — ledger totals, per-job energies, even cache counters — is
+/// the plain `run_sched` report verbatim.
+#[test]
+fn single_cluster_federation_matches_plain_sched_ledger() {
+    let trace = ArrivalTrace::parse(
+        "0  mriq fpga\n\
+         6  mriq fpga 1.4\n\
+         12 vecadd gpu\n\
+         18 cap 400\n\
+         24 mriq fpga\n",
+    )
+    .unwrap();
+    let base = SchedConfig {
+        template: quick_template(),
+        nodes: two_node_cluster(),
+        fleet_watt_cap: Some(500.0),
+        ..Default::default()
+    };
+    let plain = run_sched(&trace, &base).unwrap();
+    let fed = run_federated(
+        &trace,
+        &FederationConfig {
+            base: base.clone(),
+            clusters: 1,
+            shard_seed: 99,
+        },
+    )
+    .unwrap();
+    assert_eq!(fed.clusters.len(), 1);
+    assert_eq!(fed.clusters[0].share, 1.0);
+    assert_eq!(fed.clusters[0].cap_w, Some(500.0));
+    assert_eq!(
+        fed.clusters[0].report.to_json().to_string_compact(),
+        plain.to_json().to_string_compact(),
+        "one cluster, zero federation overhead — same report bit for bit"
+    );
+    assert_eq!(fed.admitted, plain.admitted);
+    assert_eq!(fed.production.total_ws(), plain.production.total_ws());
+    assert_eq!(fed.counterfactual_ws, plain.counterfactual_ws);
+    assert_eq!(fed.chassis_idle_ws, plain.chassis_idle_ws);
 }
 
 #[test]
