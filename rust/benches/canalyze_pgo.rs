@@ -1,0 +1,135 @@
+//! Bench: tree-walking vs lowered profiling interpreter (DESIGN.md §13).
+//!
+//! The canalyze profiler now runs on a pre-lowered, index-addressed op IR
+//! with profile-guided dispatch ordering and superinstructions
+//! (`canalyze::lower`). The tree-walker (`canalyze::profile`) is retained
+//! as the semantics-defining reference. This bench:
+//!
+//! * asserts — unconditionally, before any timing — that both
+//!   interpreters produce bit-identical `ProfileData` (incl. `printed`)
+//!   on every registered workload;
+//! * measures tree-walk vs lowered wall time per workload and reports the
+//!   speedup (the ISSUE target is ≥2× on mriq — measured, and enforced
+//!   only under `CANALYZE_PGO_ASSERT=1`);
+//! * measures the one-time `lower()` cost and the full
+//!   `analyze_source(mriq)` pipeline;
+//! * dumps the mriq opcode/pair histogram (`count_ops`) — the evidence
+//!   behind the dispatch layout;
+//! * emits a JSON block matching BENCH_canalyze.json `series_schema`.
+//!
+//! Env knobs:
+//!
+//! * `CANALYZE_PGO_ASSERT=1` — enforce the BENCH_canalyze.json ceilings
+//!   (CI does); without it, missed ceilings are informational.
+
+use enadapt::canalyze::loops::extract_loops;
+use enadapt::canalyze::lower::lower;
+use enadapt::canalyze::parser::parse;
+use enadapt::canalyze::profile::profile;
+use enadapt::canalyze::{analyze_source, analyze_source_with_limits, ProfileLimits};
+use enadapt::util::benchkit::{bench, check_band, section};
+use enadapt::util::json::Json;
+use enadapt::workloads;
+
+fn main() {
+    let enforce = std::env::var("CANALYZE_PGO_ASSERT").as_deref() == Ok("1");
+    println!("=== canalyze_pgo: tree-walker vs lowered op-IR interpreter ===");
+    if enforce {
+        println!("(CANALYZE_PGO_ASSERT=1 — enforcing BENCH_canalyze.json ceilings)");
+    }
+
+    let limits = ProfileLimits::default();
+    let mut series: Vec<Json> = Vec::new();
+    let mut mriq_speedup = 0.0f64;
+
+    section("per-workload interpreter wall time (bit-equality asserted first)");
+    for (name, src) in workloads::ALL {
+        let prog = parse(name, src).expect("bundled workload parses");
+        let table = extract_loops(&prog);
+        let unit = lower(&prog, &table).expect("bundled workload lowers");
+        // The contract comes first: both interpreters must agree bitwise
+        // before any timing is worth reporting (BENCH_canalyze.json
+        // "equivalence" — MeasureCache fingerprints, sched ledgers and
+        // funcblock detection all consume this profile downstream).
+        let t = profile(&prog, &table, limits).expect("tree-walker runs");
+        let l = unit.run(&table, limits).expect("lowered interpreter runs");
+        assert!(
+            t.bits_eq(&l),
+            "{name}: lowered profile diverges from the tree-walker"
+        );
+
+        let st = bench(&format!("tree-walk  {name}"), 1, 10, || {
+            std::hint::black_box(profile(&prog, &table, limits).unwrap().steps);
+        });
+        let sl = bench(&format!("lowered    {name}"), 1, 10, || {
+            std::hint::black_box(unit.run(&table, limits).unwrap().steps);
+        });
+        let slo = bench(&format!("lower()    {name}"), 2, 30, || {
+            std::hint::black_box(lower(&prog, &table).unwrap().op_count());
+        });
+        println!("{}", st.row());
+        println!("{}", sl.row());
+        println!("{}", slo.row());
+        let speedup = st.median_s / sl.median_s;
+        println!(
+            "    speedup {speedup:.2}x  ({} interpreted steps, {} lowered ops)",
+            t.steps,
+            unit.op_count()
+        );
+        if *name == "mriq" {
+            mriq_speedup = speedup;
+        }
+        series.push(Json::obj(vec![
+            ("workload", Json::str(*name)),
+            ("tree_s", Json::num(st.median_s)),
+            ("lowered_s", Json::num(sl.median_s)),
+            ("lower_s", Json::num(slo.median_s)),
+            ("speedup", Json::num(speedup)),
+            ("steps", Json::num(t.steps as f64)),
+            ("ops", Json::num(unit.op_count() as f64)),
+        ]));
+    }
+
+    section("full pipeline: analyze_source(mriq) — parse + sem + loops + lowered profile");
+    let sa = bench("analyze_source(mriq.c)", 1, 10, || {
+        let a = analyze_source("mriq.c", workloads::MRIQ_C).unwrap();
+        std::hint::black_box(a.n_loops());
+    });
+    println!("{}", sa.row());
+
+    section("mriq opcode/pair histogram (count_ops) — the PGO evidence");
+    let counted = ProfileLimits {
+        count_ops: true,
+        ..Default::default()
+    };
+    let an = analyze_source_with_limits("mriq.c", workloads::MRIQ_C, counted)
+        .expect("counted analyze runs");
+    let ops = an.op_profile.expect("count_ops was set");
+    println!("{}", ops.render());
+
+    section("ceilings (BENCH_canalyze.json)");
+    let mut ok = true;
+    ok &= check_band(
+        "mriq interpreter speedup (lowered vs tree-walk)",
+        mriq_speedup,
+        2.0,
+        f64::INFINITY,
+    );
+    ok &= check_band("analyze_source(mriq) wall (s)", sa.median_s, 0.0, 1.0);
+
+    println!("\n--- json ---");
+    let doc = Json::obj(vec![
+        ("bench", Json::str("canalyze_pgo")),
+        ("series", Json::arr(series)),
+        ("analyze_mriq_wall_s", Json::num(sa.median_s)),
+        ("mriq_speedup", Json::num(mriq_speedup)),
+        ("dispatched_ops_mriq", Json::num(ops.total() as f64)),
+    ]);
+    println!("{}", doc.to_string_pretty());
+
+    if enforce {
+        assert!(ok, "canalyze_pgo ceilings violated — see BENCH_canalyze.json");
+    } else if !ok {
+        println!("(ceilings missed — informational; set CANALYZE_PGO_ASSERT=1 to enforce)");
+    }
+}

@@ -1,0 +1,1793 @@
+//! Lowered profiling interpreter — the profile-guided fast path of
+//! `analyze_source` (DESIGN.md §13).
+//!
+//! [`lower`] pre-compiles every function body from the AST into a flat,
+//! index-addressed op IR: variables are resolved to frame slots at lower
+//! time (no per-step name hashing), literal-only subexpressions are
+//! folded, loop-condition constants are hoisted, and interpreter-step
+//! accounting is batched into per-basic-block chunks. On top of the flat
+//! IR sit the superinstructions the opcode-pair profile
+//! (`canalyze::pgo`, `enadapt analyze --profile-ops`) selected:
+//!
+//! * [`Op::LoopHead`] / [`Op::LoopNext`] — compare+branch(+induction
+//!   increment) fused for canonical counted loops;
+//! * [`Op::BrCmpFalse`] — compare+branch for `if` conditions;
+//! * [`Op::MulAcc`] / [`Op::MulAccIdx`] — the `s += a[i] * x`
+//!   multiply-accumulate spine of the mriq/gemm inner loops (indexed
+//!   load + multiply + compound add in one dispatch);
+//! * register operands — every arithmetic op reads slots directly, so
+//!   "load-slot + binop" is fused by construction.
+//!
+//! ## Bit-exactness contract
+//!
+//! The produced [`ProfileData`] (loop entries/trips/flops/bytes,
+//! `loop_array_bytes`, `printed`, `steps`) must be **bit-identical** to
+//! the tree-walking reference in [`super::profile`] for every program the
+//! semantic checker accepts: MeasureCache fingerprints, sched ledgers and
+//! funcblock detection all consume it. Two invariants make the batched
+//! step accounting exact:
+//!
+//! 1. Pending step counts are flushed (or folded into the op's own
+//!    `steps` field) *before* every op that can fail at runtime and
+//!    before every branch target, so the runaway guard trips at the
+//!    identical cumulative count — and with the identical error — as the
+//!    tree-walker's per-node check.
+//! 2. FLOP charges keep their evaluation order (weights differ); byte
+//!    charges are all 4.0 and commute, so fusing an indexed load with the
+//!    op that consumes it cannot reorder observable charge totals.
+//!
+//! `tests/canalyze_pgo.rs` enforces the contract differentially on all
+//! registered workloads and on randomized programs.
+
+use super::ast::*;
+use super::loops::LoopInfo;
+use super::pgo::OpProfile;
+use super::profile::{apply_compound, ArrayData, ProfileData, ProfileLimits, Value};
+use crate::util::fasthash::FastMap;
+use crate::{Error, Result};
+
+/// Sentinel register meaning "no value" (void returns).
+const NONE: u32 = u32::MAX;
+
+/// Call-depth limit, identical to the tree-walker's recursion guard.
+const MAX_DEPTH: usize = 64;
+
+/// One lowered instruction. Register fields index the current frame;
+/// `steps` fields are the batched interpreter-step count charged (and
+/// checked against the runaway limit) before the op's own work.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum Op {
+    /// Charge `n` interpreter steps (basic-block chunk).
+    Steps { n: u32 },
+    /// `dst = consts[k]`.
+    LoadK { dst: u32, k: u32 },
+    /// Charge `w` weighted FLOPs to the innermost loop (folded float
+    /// arithmetic, math-builtin cost).
+    ChargeFlops { w: f64 },
+    /// `dst = a + b` (C numeric semantics, charges on the float path).
+    Add { dst: u32, a: u32, b: u32 },
+    /// `dst = a - b`.
+    Sub { dst: u32, a: u32, b: u32 },
+    /// `dst = a * b`.
+    Mul { dst: u32, a: u32, b: u32 },
+    /// `dst = a / b` (int division-by-zero errors like the tree-walker).
+    Div { steps: u32, dst: u32, a: u32, b: u32 },
+    /// `dst = a % b` (int semantics, zero divisor errors).
+    Mod { steps: u32, dst: u32, a: u32, b: u32 },
+    /// `dst = I(a cmp b)` — comparisons are f64, charge-free.
+    Cmp { cmp: BinOp, dst: u32, a: u32, b: u32 },
+    /// `dst = -a`.
+    Neg { dst: u32, a: u32 },
+    /// `dst = I(!truthy(a))`.
+    Not { dst: u32, a: u32 },
+    /// `dst = I(truthy(a))` (short-circuit `&&`/`||` result).
+    Truthy { dst: u32, a: u32 },
+    /// `dst = I(a as i64)` — `(int)` cast, charge-free.
+    CastI { dst: u32, a: u32 },
+    /// `dst = F(a as f64)` — `(float)` cast.
+    CastF { dst: u32, a: u32 },
+    /// `dst = mathfn(a)` (cost charged by a preceding [`Op::ChargeFlops`]).
+    Math1 { kind: MathOp, dst: u32, a: u32 },
+    /// `dst = powf(a, b)` (cost charged between the argument evals).
+    Pow { dst: u32, a: u32, b: u32 },
+    /// Unconditional jump (loop back-edges, `break`, `if` joins).
+    Jump { steps: u32, to: u32 },
+    /// Jump to `to` when `src` is falsy.
+    BrFalse { steps: u32, src: u32, to: u32 },
+    /// Superinstruction: compare + branch-if-false (`if` conditions).
+    BrCmpFalse { steps: u32, cmp: BinOp, a: u32, b: u32, to: u32 },
+    /// Record a loop entry (+ touched-array sizes on the first entries)
+    /// and push the loop onto the attribution stack.
+    EnterLoop { steps: u32, loop_id: u32, touch_off: u32, touch_len: u32 },
+    /// Pop the loop attribution stack.
+    LeaveLoop,
+    /// Superinstruction: loop-head compare + trip count + exit branch.
+    LoopHead { steps: u32, cmp: BinOp, a: u32, b: u32, loop_id: u32, exit: u32 },
+    /// Superinstruction: canonical `for` back-edge — compound induction
+    /// step (+`by`), condition compare, trip count and branch to `body`.
+    LoopNext {
+        steps: u32,
+        ind: u32,
+        by: i64,
+        cmp: BinOp,
+        a: u32,
+        b: u32,
+        loop_id: u32,
+        body: u32,
+    },
+    /// Generic loop-head branch: trip-count on truthy, exit otherwise.
+    BrFalseTrip { steps: u32, src: u32, loop_id: u32, exit: u32 },
+    /// `slot = src` coerced to the slot's declared type.
+    StoreVar { slot: u32, src: u32, int_ty: bool },
+    /// `slot op= src` (compound scalar assign: 1 FLOP, then coerce).
+    CompoundVar { aop: AssignOp, slot: u32, src: u32, int_ty: bool },
+    /// `dst = arr[idx]` — bounds check, 4 bytes, load.
+    LoadIdx { steps: u32, dst: u32, arr: u32, idx: u32, aux: u32 },
+    /// `arr[idx] = src` — bounds check, store, 4 bytes.
+    StoreIdx { steps: u32, arr: u32, idx: u32, src: u32, aux: u32 },
+    /// `arr[idx] op= src` — bounds, load (4 bytes, 1 FLOP), store (4 bytes).
+    CompoundIdx { steps: u32, aop: AssignOp, arr: u32, idx: u32, src: u32, aux: u32 },
+    /// Superinstruction: `slot aop= a * b` (multiply-accumulate).
+    MulAcc { aop: AssignOp, slot: u32, a: u32, b: u32, int_ty: bool },
+    /// Superinstruction: `slot aop= src * arr[idx]` — the indexed-load +
+    /// mul-accumulate spine of the gemm/mriq inner loops.
+    MulAccIdx {
+        steps: u32,
+        aop: AssignOp,
+        slot: u32,
+        arr: u32,
+        idx: u32,
+        src: u32,
+        int_ty: bool,
+        aux: u32,
+    },
+    /// Array declaration: size check, fresh heap allocation, bind handle.
+    ArrDecl { steps: u32, slot: u32, size: u32, int_elems: bool, aux: u32 },
+    /// Recursion-depth guard, checked before argument evaluation.
+    DepthGuard { steps: u32, line: u32 },
+    /// Call `fns[fi]`, copying `argc` pre-coerced caller registers.
+    Call { steps: u32, fi: u32, dst: u32, args_off: u32, argc: u32 },
+    /// Return `src` (raw, uncoerced; [`NONE`] yields `I(0)`).
+    Ret { steps: u32, src: u32 },
+    /// Append `as_f64(src)` to the printed-output trace.
+    Print { src: u32 },
+}
+
+/// Math builtin selector for [`Op::Math1`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum MathOp {
+    Sin,
+    Cos,
+    Tan,
+    Sqrt,
+    Fabs,
+    Exp,
+    Log,
+    Floor,
+    Ceil,
+}
+
+impl MathOp {
+    #[inline(always)]
+    fn eval(self, x: f64) -> f64 {
+        match self {
+            MathOp::Sin => x.sin(),
+            MathOp::Cos => x.cos(),
+            MathOp::Tan => x.tan(),
+            MathOp::Sqrt => x.sqrt(),
+            MathOp::Fabs => x.abs(),
+            MathOp::Exp => x.exp(),
+            MathOp::Log => x.ln(),
+            MathOp::Floor => x.floor(),
+            MathOp::Ceil => x.ceil(),
+        }
+    }
+}
+
+/// Number of distinct opcodes (histogram dimension for `canalyze::pgo`).
+pub(crate) const N_OPS: usize = 36;
+
+/// Opcode names, indexed by [`Op::index`].
+pub(crate) const OP_NAMES: [&str; N_OPS] = [
+    "Steps",
+    "LoadK",
+    "ChargeFlops",
+    "Add",
+    "Sub",
+    "Mul",
+    "Div",
+    "Mod",
+    "Cmp",
+    "Neg",
+    "Not",
+    "Truthy",
+    "CastI",
+    "CastF",
+    "Math1",
+    "Pow",
+    "Jump",
+    "BrFalse",
+    "BrCmpFalse",
+    "EnterLoop",
+    "LeaveLoop",
+    "LoopHead",
+    "LoopNext",
+    "BrFalseTrip",
+    "StoreVar",
+    "CompoundVar",
+    "LoadIdx",
+    "StoreIdx",
+    "CompoundIdx",
+    "MulAcc",
+    "MulAccIdx",
+    "ArrDecl",
+    "DepthGuard",
+    "Call",
+    "Ret",
+    "Print",
+];
+
+impl Op {
+    /// Dense opcode index (aligned with [`OP_NAMES`]).
+    pub(crate) fn index(&self) -> usize {
+        match self {
+            Op::Steps { .. } => 0,
+            Op::LoadK { .. } => 1,
+            Op::ChargeFlops { .. } => 2,
+            Op::Add { .. } => 3,
+            Op::Sub { .. } => 4,
+            Op::Mul { .. } => 5,
+            Op::Div { .. } => 6,
+            Op::Mod { .. } => 7,
+            Op::Cmp { .. } => 8,
+            Op::Neg { .. } => 9,
+            Op::Not { .. } => 10,
+            Op::Truthy { .. } => 11,
+            Op::CastI { .. } => 12,
+            Op::CastF { .. } => 13,
+            Op::Math1 { .. } => 14,
+            Op::Pow { .. } => 15,
+            Op::Jump { .. } => 16,
+            Op::BrFalse { .. } => 17,
+            Op::BrCmpFalse { .. } => 18,
+            Op::EnterLoop { .. } => 19,
+            Op::LeaveLoop => 20,
+            Op::LoopHead { .. } => 21,
+            Op::LoopNext { .. } => 22,
+            Op::BrFalseTrip { .. } => 23,
+            Op::StoreVar { .. } => 24,
+            Op::CompoundVar { .. } => 25,
+            Op::LoadIdx { .. } => 26,
+            Op::StoreIdx { .. } => 27,
+            Op::CompoundIdx { .. } => 28,
+            Op::MulAcc { .. } => 29,
+            Op::MulAccIdx { .. } => 30,
+            Op::ArrDecl { .. } => 31,
+            Op::DepthGuard { .. } => 32,
+            Op::Call { .. } => 33,
+            Op::Ret { .. } => 34,
+            Op::Print { .. } => 35,
+        }
+    }
+}
+
+/// One lowered function.
+#[derive(Debug, Clone)]
+pub(crate) struct LFn {
+    /// Function name (diagnostics).
+    pub(crate) name: String,
+    /// Flat instruction stream; entry at index 0, always ends in `Ret`.
+    pub(crate) ops: Vec<Op>,
+    /// Frame size: parameters, declared locals, temporaries, hoisted
+    /// loop constants.
+    pub(crate) n_regs: u32,
+    /// Parameter count (entry check for `main`).
+    pub(crate) n_params: u32,
+}
+
+/// A whole program lowered to the op IR, ready to run (and re-run).
+///
+/// Produced by [`lower`]; executed with [`LoweredUnit::run`] (or
+/// [`LoweredUnit::run_counted`] for the opcode histogram).
+#[derive(Debug, Clone)]
+pub struct LoweredUnit {
+    pub(crate) fns: Vec<LFn>,
+    pub(crate) consts: Vec<Value>,
+    pub(crate) call_args: Vec<u32>,
+    /// `(slot, position)` pairs per loop region: the array-handle slot to
+    /// observe on loop entry and its interned position in
+    /// `ProfileData::loop_array_bytes[loop]`.
+    pub(crate) touch: Vec<(u32, u32)>,
+    /// `(line, name id)` diagnostic payloads for erroring ops.
+    pub(crate) aux: Vec<(u32, u32)>,
+    pub(crate) names: Vec<String>,
+    pub(crate) main: Option<u32>,
+}
+
+impl LoweredUnit {
+    /// Total lowered instruction count across all functions (bench/report
+    /// statistic).
+    pub fn op_count(&self) -> usize {
+        self.fns.iter().map(|f| f.ops.len()).sum()
+    }
+
+    /// Execute `main()` and collect a [`ProfileData`] — bit-identical to
+    /// [`super::profile::profile`] on the same program.
+    pub fn run(&self, table: &[LoopInfo], limits: ProfileLimits) -> Result<ProfileData> {
+        let mut prof = OpProfile::new();
+        self.run_inner::<false>(table, limits, &mut prof)
+    }
+
+    /// Like [`LoweredUnit::run`], additionally collecting the opcode /
+    /// opcode-pair frequency histogram (`enadapt analyze --profile-ops`).
+    pub fn run_counted(
+        &self,
+        table: &[LoopInfo],
+        limits: ProfileLimits,
+    ) -> Result<(ProfileData, OpProfile)> {
+        let mut prof = OpProfile::new();
+        let data = self.run_inner::<true>(table, limits, &mut prof)?;
+        Ok((data, prof))
+    }
+
+    fn run_inner<const COUNT: bool>(
+        &self,
+        table: &[LoopInfo],
+        limits: ProfileLimits,
+        prof: &mut OpProfile,
+    ) -> Result<ProfileData> {
+        let mi = self
+            .main
+            .ok_or_else(|| Error::Profile("program has no main()".into()))?
+            as usize;
+        if self.fns[mi].n_params != 0 {
+            return Err(Error::Profile("main() must take no parameters".into()));
+        }
+        let mut st = Machine {
+            heap: Vec::new(),
+            data: ProfileData::empty(table),
+            loop_stack: Vec::new(),
+            calls: Vec::new(),
+            frame: vec![Value::I(0); self.fns[mi].n_regs as usize],
+            max_steps: limits.max_steps,
+        };
+        exec::<COUNT>(self, &mut st, mi, prof)?;
+        Ok(st.data)
+    }
+}
+
+/// Lower a semantically checked program ([`super::sem::check`] must have
+/// passed) into a [`LoweredUnit`].
+pub fn lower(prog: &Program, table: &[LoopInfo]) -> Result<LoweredUnit> {
+    let mut fn_index: FastMap<String, u32> = FastMap::default();
+    for (i, f) in prog.functions.iter().enumerate() {
+        fn_index.insert(f.name.clone(), i as u32);
+    }
+    let main = fn_index.get("main").copied();
+    let mut lw = Lower {
+        prog,
+        table,
+        fn_index,
+        consts: Vec::new(),
+        const_ix: FastMap::default(),
+        call_args: Vec::new(),
+        touch: Vec::new(),
+        aux: Vec::new(),
+        names: Vec::new(),
+        name_ix: FastMap::default(),
+        ops: Vec::new(),
+        labels: Vec::new(),
+        pending: 0,
+        next_reg: 0,
+        scopes: Vec::new(),
+        loop_labels: Vec::new(),
+    };
+    let mut fns = Vec::with_capacity(prog.functions.len());
+    for f in &prog.functions {
+        fns.push(lw.lower_fn(f)?);
+    }
+    Ok(LoweredUnit {
+        fns,
+        consts: lw.consts,
+        call_args: lw.call_args,
+        touch: lw.touch,
+        aux: lw.aux,
+        names: lw.names,
+        main,
+    })
+}
+
+/// Convenience: lower + run once (the `analyze_source` profiling path).
+pub fn profile_lowered(
+    prog: &Program,
+    table: &[LoopInfo],
+    limits: ProfileLimits,
+) -> Result<ProfileData> {
+    lower(prog, table)?.run(table, limits)
+}
+
+/// What a name resolves to at lower time.
+#[derive(Debug, Clone, Copy)]
+enum NameSlot {
+    Scalar { reg: u32, int: bool },
+    Array { reg: u32 },
+}
+
+struct Lower<'a> {
+    prog: &'a Program,
+    table: &'a [LoopInfo],
+    fn_index: FastMap<String, u32>,
+    consts: Vec<Value>,
+    const_ix: FastMap<(u8, u64), u32>,
+    call_args: Vec<u32>,
+    touch: Vec<(u32, u32)>,
+    aux: Vec<(u32, u32)>,
+    names: Vec<String>,
+    name_ix: FastMap<String, u32>,
+    // Per-function state, reset by `lower_fn`.
+    ops: Vec<Op>,
+    labels: Vec<u32>,
+    pending: u32,
+    next_reg: u32,
+    scopes: Vec<Vec<(String, NameSlot)>>,
+    loop_labels: Vec<(u32, u32)>, // (continue target, break target)
+}
+
+impl<'a> Lower<'a> {
+    fn lower_fn(&mut self, f: &Function) -> Result<LFn> {
+        self.ops = Vec::new();
+        self.labels = Vec::new();
+        self.pending = 0;
+        self.next_reg = f.params.len() as u32;
+        self.loop_labels = Vec::new();
+        let base: Vec<(String, NameSlot)> = f
+            .params
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let reg = i as u32;
+                let slot = if p.is_array {
+                    NameSlot::Array { reg }
+                } else {
+                    NameSlot::Scalar { reg, int: p.ty == Ty::Int }
+                };
+                (p.name.clone(), slot)
+            })
+            .collect();
+        self.scopes = vec![base];
+        for s in &f.body {
+            self.lower_stmt(s)?;
+        }
+        // Fall-off-the-end return (the tree-walker yields I(0) there).
+        let steps = self.take();
+        self.ops.push(Op::Ret { steps, src: NONE });
+        self.patch();
+        Ok(LFn {
+            name: f.name.clone(),
+            ops: std::mem::take(&mut self.ops),
+            n_regs: self.next_reg,
+            n_params: f.params.len() as u32,
+        })
+    }
+
+    // ---- small helpers -------------------------------------------------
+
+    fn alloc(&mut self) -> u32 {
+        let r = self.next_reg;
+        self.next_reg += 1;
+        r
+    }
+
+    fn kconst(&mut self, v: Value) -> u32 {
+        let key = match v {
+            Value::I(x) => (0u8, x as u64),
+            Value::F(x) => (1u8, x.to_bits()),
+        };
+        if let Some(&k) = self.const_ix.get(&key) {
+            return k;
+        }
+        let k = self.consts.len() as u32;
+        self.consts.push(v);
+        self.const_ix.insert(key, k);
+        k
+    }
+
+    /// Materialize a constant into a fresh register (pure, step-free).
+    fn kreg(&mut self, v: Value) -> u32 {
+        let k = self.kconst(v);
+        let dst = self.alloc();
+        self.ops.push(Op::LoadK { dst, k });
+        dst
+    }
+
+    fn aux_id(&mut self, line: usize, name: &str) -> u32 {
+        let nid = match self.name_ix.get(name) {
+            Some(&i) => i,
+            None => {
+                let i = self.names.len() as u32;
+                self.names.push(name.to_string());
+                self.name_ix.insert(name.to_string(), i);
+                i
+            }
+        };
+        let a = self.aux.len() as u32;
+        self.aux.push((line as u32, nid));
+        a
+    }
+
+    fn new_label(&mut self) -> u32 {
+        self.labels.push(u32::MAX);
+        self.labels.len() as u32 - 1
+    }
+
+    /// Bind a label at the current op index (flushing pending steps so
+    /// jumps to the label cannot skip counted nodes).
+    fn bind(&mut self, l: u32) {
+        self.flush();
+        self.labels[l as usize] = self.ops.len() as u32;
+    }
+
+    fn flush(&mut self) {
+        if self.pending > 0 {
+            let n = std::mem::take(&mut self.pending);
+            self.ops.push(Op::Steps { n });
+        }
+    }
+
+    /// Take the pending step count to fold into an op's `steps` field.
+    fn take(&mut self) -> u32 {
+        std::mem::take(&mut self.pending)
+    }
+
+    fn patch(&mut self) {
+        for op in &mut self.ops {
+            match op {
+                Op::Jump { to, .. } | Op::BrFalse { to, .. } | Op::BrCmpFalse { to, .. } => {
+                    *to = self.labels[*to as usize];
+                }
+                Op::LoopHead { exit, .. } | Op::BrFalseTrip { exit, .. } => {
+                    *exit = self.labels[*exit as usize];
+                }
+                Op::LoopNext { body, .. } => {
+                    *body = self.labels[*body as usize];
+                }
+                _ => {}
+            }
+        }
+    }
+
+    fn resolve_opt(&self, name: &str) -> Option<NameSlot> {
+        for scope in self.scopes.iter().rev() {
+            for (n, s) in scope.iter().rev() {
+                if n == name {
+                    return Some(*s);
+                }
+            }
+        }
+        None
+    }
+
+    fn scalar_slot(&self, name: &str, line: usize) -> Result<(u32, bool)> {
+        match self.resolve_opt(name) {
+            Some(NameSlot::Scalar { reg, int }) => Ok((reg, int)),
+            _ => Err(lower_err(line, &format!("unresolved scalar '{name}'"))),
+        }
+    }
+
+    fn array_slot(&self, name: &str, line: usize) -> Result<u32> {
+        match self.resolve_opt(name) {
+            Some(NameSlot::Array { reg }) => Ok(reg),
+            _ => Err(lower_err(line, &format!("unresolved array '{name}'"))),
+        }
+    }
+
+    fn declare(&mut self, name: &str, slot: NameSlot) {
+        self.scopes.last_mut().unwrap().push((name.to_string(), slot));
+    }
+
+    /// Per-loop touched-array slots, resolved lexically at the loop site.
+    /// Positions follow the same sorted `arrays_read ∪ arrays_written`
+    /// union that `ArrayTable::build` interns, so runtime writes land at
+    /// the identical `loop_array_bytes` indices as the tree-walker's.
+    fn loop_touch(&mut self, loop_id: usize) -> (u32, u32) {
+        let table = self.table;
+        let off = self.touch.len() as u32;
+        let info = &table[loop_id];
+        for (pos, name) in info.arrays_read.union(&info.arrays_written).enumerate() {
+            if let Some(NameSlot::Array { reg }) = self.resolve_opt(name) {
+                self.touch.push((reg, pos as u32));
+            }
+        }
+        (off, self.touch.len() as u32 - off)
+    }
+
+    // ---- statements ----------------------------------------------------
+
+    fn lower_block(&mut self, body: &[Stmt]) -> Result<()> {
+        self.scopes.push(Vec::new());
+        for s in body {
+            self.lower_stmt(s)?;
+        }
+        self.scopes.pop();
+        Ok(())
+    }
+
+    fn lower_stmt(&mut self, s: &Stmt) -> Result<()> {
+        // Mirror of the tree-walker's per-statement `step()`.
+        self.pending += 1;
+        match s {
+            Stmt::Decl { ty, name, init, .. } => {
+                let int = *ty == Ty::Int;
+                match init {
+                    Some(e) => {
+                        let src = self.lower_expr(e)?;
+                        let slot = self.alloc();
+                        self.declare(name, NameSlot::Scalar { reg: slot, int });
+                        self.ops.push(Op::StoreVar { slot, src, int_ty: int });
+                    }
+                    None => {
+                        let zero = if int { Value::I(0) } else { Value::F(0.0) };
+                        let k = self.kconst(zero);
+                        let slot = self.alloc();
+                        self.declare(name, NameSlot::Scalar { reg: slot, int });
+                        self.ops.push(Op::LoadK { dst: slot, k });
+                    }
+                }
+                Ok(())
+            }
+            Stmt::ArrayDecl { ty, name, size, line } => {
+                let sz = self.lower_expr(size)?;
+                let slot = self.alloc();
+                self.declare(name, NameSlot::Array { reg: slot });
+                let aux = self.aux_id(*line, name);
+                let steps = self.take();
+                self.ops.push(Op::ArrDecl {
+                    steps,
+                    slot,
+                    size: sz,
+                    int_elems: *ty == Ty::Int,
+                    aux,
+                });
+                Ok(())
+            }
+            Stmt::Assign { lv, op, rhs, line } => self.lower_assign(lv, *op, rhs, *line),
+            Stmt::For { loop_id, init, cond, step, body, .. } => {
+                self.scopes.push(Vec::new());
+                if let Some(st) = init.as_deref() {
+                    self.lower_stmt(st)?;
+                }
+                let fused = self.fused_for(cond, step.as_deref())?;
+                let (touch_off, touch_len) = self.loop_touch(*loop_id);
+                let steps = self.take();
+                self.ops.push(Op::EnterLoop {
+                    steps,
+                    loop_id: *loop_id as u32,
+                    touch_off,
+                    touch_len,
+                });
+                let l_exit = self.new_label();
+                match fused {
+                    Some((cmp, a, b, ind, by)) => {
+                        // Canonical counted loop: fused head + back-edge.
+                        // Head steps: condition = cmp node + two leaves.
+                        self.pending += 3;
+                        let steps = self.take();
+                        self.ops.push(Op::LoopHead {
+                            steps,
+                            cmp,
+                            a,
+                            b,
+                            loop_id: *loop_id as u32,
+                            exit: l_exit,
+                        });
+                        let l_body = self.new_label();
+                        self.bind(l_body);
+                        let l_cont = self.new_label();
+                        self.loop_labels.push((l_cont, l_exit));
+                        self.lower_block(body)?;
+                        self.loop_labels.pop();
+                        self.bind(l_cont);
+                        // Back-edge steps: step stmt (1) + int literal (1)
+                        // + condition (3) — see the gate in `fused_for`.
+                        self.ops.push(Op::LoopNext {
+                            steps: 5,
+                            ind,
+                            by,
+                            cmp,
+                            a,
+                            b,
+                            loop_id: *loop_id as u32,
+                            body: l_body,
+                        });
+                    }
+                    None => {
+                        let l_cond = self.new_label();
+                        self.bind(l_cond);
+                        self.lower_loop_head(cond, *loop_id, l_exit)?;
+                        let l_cont = match step {
+                            Some(_) => self.new_label(),
+                            None => l_cond,
+                        };
+                        self.loop_labels.push((l_cont, l_exit));
+                        self.lower_block(body)?;
+                        self.loop_labels.pop();
+                        if let Some(st) = step.as_deref() {
+                            self.bind(l_cont);
+                            self.lower_stmt(st)?;
+                        }
+                        let steps = self.take();
+                        self.ops.push(Op::Jump { steps, to: l_cond });
+                    }
+                }
+                self.bind(l_exit);
+                self.ops.push(Op::LeaveLoop);
+                self.scopes.pop();
+                Ok(())
+            }
+            Stmt::While { loop_id, cond, body, .. } => {
+                let (touch_off, touch_len) = self.loop_touch(*loop_id);
+                let steps = self.take();
+                self.ops.push(Op::EnterLoop {
+                    steps,
+                    loop_id: *loop_id as u32,
+                    touch_off,
+                    touch_len,
+                });
+                let l_cond = self.new_label();
+                let l_exit = self.new_label();
+                self.bind(l_cond);
+                self.lower_loop_head(cond, *loop_id, l_exit)?;
+                self.loop_labels.push((l_cond, l_exit));
+                self.lower_block(body)?;
+                self.loop_labels.pop();
+                let steps = self.take();
+                self.ops.push(Op::Jump { steps, to: l_cond });
+                self.bind(l_exit);
+                self.ops.push(Op::LeaveLoop);
+                Ok(())
+            }
+            Stmt::If { cond, then, otherwise, .. } => {
+                let l_else = self.new_label();
+                match cond {
+                    Expr::Bin(op, a, b, _) if is_cmp(*op) => {
+                        self.pending += 1; // the comparison node
+                        let ra = self.lower_expr(a)?;
+                        let rb = self.lower_expr(b)?;
+                        let steps = self.take();
+                        self.ops.push(Op::BrCmpFalse { steps, cmp: *op, a: ra, b: rb, to: l_else });
+                    }
+                    _ => {
+                        let r = self.lower_expr(cond)?;
+                        let steps = self.take();
+                        self.ops.push(Op::BrFalse { steps, src: r, to: l_else });
+                    }
+                }
+                self.lower_block(then)?;
+                if otherwise.is_empty() {
+                    self.bind(l_else);
+                } else {
+                    let l_end = self.new_label();
+                    let steps = self.take();
+                    self.ops.push(Op::Jump { steps, to: l_end });
+                    self.bind(l_else);
+                    self.lower_block(otherwise)?;
+                    self.bind(l_end);
+                }
+                Ok(())
+            }
+            Stmt::Return(e, _) => {
+                let src = match e {
+                    Some(e) => self.lower_expr(e)?,
+                    None => NONE,
+                };
+                let steps = self.take();
+                self.ops.push(Op::Ret { steps, src });
+                Ok(())
+            }
+            Stmt::ExprStmt(e, _) => {
+                self.lower_expr(e)?;
+                Ok(())
+            }
+            Stmt::Break(_) | Stmt::Continue(_) => {
+                let target = match (s, self.loop_labels.last()) {
+                    (Stmt::Break(_), Some(&(_, brk))) => Some(brk),
+                    (Stmt::Continue(_), Some(&(cont, _))) => Some(cont),
+                    _ => None,
+                };
+                let steps = self.take();
+                match target {
+                    Some(to) => self.ops.push(Op::Jump { steps, to }),
+                    // Outside any loop the tree-walker lets the flow
+                    // escape to the function boundary, which returns I(0).
+                    None => self.ops.push(Op::Ret { steps, src: NONE }),
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn lower_assign(&mut self, lv: &LValue, op: AssignOp, rhs: &Expr, line: usize) -> Result<()> {
+        match lv {
+            LValue::Var(name) => {
+                let (slot, int) = self.scalar_slot(name, line)?;
+                if op == AssignOp::Set {
+                    let src = self.lower_expr(rhs)?;
+                    self.ops.push(Op::StoreVar { slot, src, int_ty: int });
+                    return Ok(());
+                }
+                // Multiply-accumulate superinstructions: `s aop= a * b`.
+                if let Expr::Bin(BinOp::Mul, a, b, _) = rhs {
+                    self.pending += 1; // the Mul node
+                    let ra = self.lower_expr(a)?;
+                    if let Expr::Index(an, idx, iline) = b.as_ref() {
+                        self.pending += 1; // the Index node
+                        let ri = self.lower_expr(idx)?;
+                        let arr = self.array_slot(an, *iline)?;
+                        let aux = self.aux_id(*iline, an);
+                        let steps = self.take();
+                        self.ops.push(Op::MulAccIdx {
+                            steps,
+                            aop: op,
+                            slot,
+                            arr,
+                            idx: ri,
+                            src: ra,
+                            int_ty: int,
+                            aux,
+                        });
+                    } else {
+                        let rb = self.lower_expr(b)?;
+                        self.ops.push(Op::MulAcc { aop: op, slot, a: ra, b: rb, int_ty: int });
+                    }
+                    return Ok(());
+                }
+                let src = self.lower_expr(rhs)?;
+                self.ops.push(Op::CompoundVar { aop: op, slot, src, int_ty: int });
+                Ok(())
+            }
+            LValue::Index(name, idx) => {
+                // Tree-walker order: RHS first, then the index expression.
+                let src = self.lower_expr(rhs)?;
+                let ri = self.lower_expr(idx)?;
+                let arr = self.array_slot(name, line)?;
+                let aux = self.aux_id(line, name);
+                let steps = self.take();
+                if op == AssignOp::Set {
+                    self.ops.push(Op::StoreIdx { steps, arr, idx: ri, src, aux });
+                } else {
+                    self.ops.push(Op::CompoundIdx { steps, aop: op, arr, idx: ri, src, aux });
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Lower a loop condition into a head op at the (already bound)
+    /// condition label: fused compare+trip+branch when the condition is a
+    /// comparison, generic truthiness branch otherwise.
+    fn lower_loop_head(&mut self, cond: &Expr, loop_id: usize, l_exit: u32) -> Result<()> {
+        match cond {
+            Expr::Bin(op, a, b, _) if is_cmp(*op) => {
+                self.pending += 1; // the comparison node
+                let ra = self.lower_expr(a)?;
+                let rb = self.lower_expr(b)?;
+                let steps = self.take();
+                self.ops.push(Op::LoopHead {
+                    steps,
+                    cmp: *op,
+                    a: ra,
+                    b: rb,
+                    loop_id: loop_id as u32,
+                    exit: l_exit,
+                });
+            }
+            _ => {
+                let r = self.lower_expr(cond)?;
+                let steps = self.take();
+                self.ops.push(Op::BrFalseTrip {
+                    steps,
+                    src: r,
+                    loop_id: loop_id as u32,
+                    exit: l_exit,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Gate for the fused counted-loop form: step `i += k` / `i -= k` on
+    /// an int-declared induction variable and a `leaf cmp leaf`
+    /// condition. Hoists literal condition operands into registers
+    /// (emitted at the current, pre-loop position — their per-iteration
+    /// step cost stays in `LoopHead.steps`/`LoopNext.steps`).
+    fn fused_for(
+        &mut self,
+        cond: &Expr,
+        step: Option<&Stmt>,
+    ) -> Result<Option<(BinOp, u32, u32, u32, i64)>> {
+        let (ind_name, by) = match step {
+            Some(Stmt::Assign {
+                lv: LValue::Var(v),
+                op: op @ (AssignOp::Add | AssignOp::Sub),
+                rhs: Expr::IntLit(k, _),
+                ..
+            }) => {
+                let by = if *op == AssignOp::Add {
+                    *k
+                } else {
+                    match k.checked_neg() {
+                        Some(n) => n,
+                        None => return Ok(None),
+                    }
+                };
+                (v.as_str(), by)
+            }
+            _ => return Ok(None),
+        };
+        let ind = match self.resolve_opt(ind_name) {
+            Some(NameSlot::Scalar { reg, int: true }) => reg,
+            _ => return Ok(None),
+        };
+        let (cmp, a, b) = match cond {
+            Expr::Bin(op, a, b, _) if is_cmp(*op) && is_leaf(a) && is_leaf(b) => {
+                (*op, a.as_ref(), b.as_ref())
+            }
+            _ => return Ok(None),
+        };
+        let ra = match self.hoist_leaf(a) {
+            Some(r) => r,
+            None => return Ok(None),
+        };
+        let rb = match self.hoist_leaf(b) {
+            Some(r) => r,
+            None => return Ok(None),
+        };
+        Ok(Some((cmp, ra, rb, ind, by)))
+    }
+
+    fn hoist_leaf(&mut self, e: &Expr) -> Option<u32> {
+        match e {
+            Expr::Var(n, _) => match self.resolve_opt(n) {
+                Some(NameSlot::Scalar { reg, .. }) => Some(reg),
+                _ => None,
+            },
+            Expr::IntLit(v, _) => Some(self.kreg(Value::I(*v))),
+            Expr::FloatLit(v, _) => Some(self.kreg(Value::F(*v))),
+            _ => None,
+        }
+    }
+
+    // ---- expressions ---------------------------------------------------
+
+    fn lower_expr(&mut self, e: &Expr) -> Result<u32> {
+        // Mirror of the tree-walker's per-node `step()`.
+        self.pending += 1;
+        match e {
+            Expr::IntLit(v, _) => Ok(self.kreg(Value::I(*v))),
+            Expr::FloatLit(v, _) => Ok(self.kreg(Value::F(*v))),
+            Expr::StrLit(_, _) => Ok(self.kreg(Value::I(0))),
+            Expr::Var(name, line) => {
+                let (reg, _) = self.scalar_slot(name, *line)?;
+                Ok(reg)
+            }
+            Expr::Index(name, idx, line) => {
+                let ri = self.lower_expr(idx)?;
+                let arr = self.array_slot(name, *line)?;
+                let aux = self.aux_id(*line, name);
+                let dst = self.alloc();
+                let steps = self.take();
+                self.ops.push(Op::LoadIdx { steps, dst, arr, idx: ri, aux });
+                Ok(dst)
+            }
+            Expr::Bin(op, a, b, line) => self.lower_bin(*op, a, b, *line),
+            Expr::Un(op, a, _) => {
+                if let Some(v) = lit_value(a) {
+                    self.pending += 1; // the literal operand
+                    let folded = match op {
+                        UnOp::Neg => match v {
+                            Value::I(x) => Value::I(x.wrapping_neg()),
+                            Value::F(x) => Value::F(-x),
+                        },
+                        UnOp::Not => Value::I(!v.truthy() as i64),
+                    };
+                    return Ok(self.kreg(folded));
+                }
+                let ra = self.lower_expr(a)?;
+                let dst = self.alloc();
+                match op {
+                    UnOp::Neg => self.ops.push(Op::Neg { dst, a: ra }),
+                    UnOp::Not => self.ops.push(Op::Not { dst, a: ra }),
+                }
+                Ok(dst)
+            }
+            Expr::Call(name, args, line) => self.lower_call(name, args, *line),
+        }
+    }
+
+    fn lower_bin(&mut self, op: BinOp, a: &Expr, b: &Expr, line: usize) -> Result<u32> {
+        // Short-circuit logical operators keep their conditional step
+        // counts: the right operand's nodes only execute on the taken path.
+        if op == BinOp::And {
+            let ra = self.lower_expr(a)?;
+            let l_false = self.new_label();
+            let l_end = self.new_label();
+            let steps = self.take();
+            self.ops.push(Op::BrFalse { steps, src: ra, to: l_false });
+            let rb = self.lower_expr(b)?;
+            let dst = self.alloc();
+            self.ops.push(Op::Truthy { dst, a: rb });
+            let steps = self.take();
+            self.ops.push(Op::Jump { steps, to: l_end });
+            self.bind(l_false);
+            let k = self.kconst(Value::I(0));
+            self.ops.push(Op::LoadK { dst, k });
+            self.bind(l_end);
+            return Ok(dst);
+        }
+        if op == BinOp::Or {
+            let ra = self.lower_expr(a)?;
+            let l_rhs = self.new_label();
+            let l_end = self.new_label();
+            let steps = self.take();
+            self.ops.push(Op::BrFalse { steps, src: ra, to: l_rhs });
+            let dst = self.alloc();
+            let k = self.kconst(Value::I(1));
+            self.ops.push(Op::LoadK { dst, k });
+            self.ops.push(Op::Jump { steps: 0, to: l_end });
+            self.bind(l_rhs);
+            let rb = self.lower_expr(b)?;
+            self.ops.push(Op::Truthy { dst, a: rb });
+            self.bind(l_end);
+            return Ok(dst);
+        }
+        // Constant folding: literal-only operands, preserving the
+        // tree-walker's numeric semantics, step counts and FLOP charges.
+        if let (Some(x), Some(y)) = (lit_value(a), lit_value(b)) {
+            if let Some(r) = self.fold_bin(op, x, y) {
+                self.pending += 2; // the two literal leaves
+                return Ok(r);
+            }
+        }
+        let ra = self.lower_expr(a)?;
+        let rb = self.lower_expr(b)?;
+        let dst = self.alloc();
+        match op {
+            BinOp::Add => self.ops.push(Op::Add { dst, a: ra, b: rb }),
+            BinOp::Sub => self.ops.push(Op::Sub { dst, a: ra, b: rb }),
+            BinOp::Mul => self.ops.push(Op::Mul { dst, a: ra, b: rb }),
+            BinOp::Div => {
+                let steps = self.take();
+                self.ops.push(Op::Div { steps, dst, a: ra, b: rb });
+            }
+            BinOp::Mod => {
+                let steps = self.take();
+                self.ops.push(Op::Mod { steps, dst, a: ra, b: rb });
+            }
+            BinOp::Lt | BinOp::Le | BinOp::Gt | BinOp::Ge | BinOp::Eq | BinOp::Ne => {
+                self.ops.push(Op::Cmp { cmp: op, dst, a: ra, b: rb });
+            }
+            BinOp::And | BinOp::Or => {
+                return Err(lower_err(line, "logical op reached generic lowering"));
+            }
+        }
+        Ok(dst)
+    }
+
+    /// Fold `x op y` for literal operands. Returns None when the fold
+    /// must be left to runtime (zero divisors error / both paths charge
+    /// differently than a constant can express). Float arithmetic still
+    /// charges its per-execution FLOP weight via [`Op::ChargeFlops`].
+    fn fold_bin(&mut self, op: BinOp, x: Value, y: Value) -> Option<u32> {
+        let both_int = matches!((x, y), (Value::I(_), Value::I(_)));
+        match op {
+            BinOp::Add | BinOp::Sub | BinOp::Mul | BinOp::Div => {
+                if both_int {
+                    let (p, q) = (x.as_i64(), y.as_i64());
+                    let r = match op {
+                        BinOp::Add => p.wrapping_add(q),
+                        BinOp::Sub => p.wrapping_sub(q),
+                        BinOp::Mul => p.wrapping_mul(q),
+                        BinOp::Div => {
+                            if q == 0 {
+                                return None; // runtime error path
+                            }
+                            p / q
+                        }
+                        _ => unreachable!(),
+                    };
+                    Some(self.kreg(Value::I(r)))
+                } else {
+                    let (p, q) = (x.as_f64(), y.as_f64());
+                    let w = if op == BinOp::Div { 4.0 } else { 1.0 };
+                    self.ops.push(Op::ChargeFlops { w });
+                    let r = match op {
+                        BinOp::Add => p + q,
+                        BinOp::Sub => p - q,
+                        BinOp::Mul => p * q,
+                        BinOp::Div => p / q,
+                        _ => unreachable!(),
+                    };
+                    Some(self.kreg(Value::F(r)))
+                }
+            }
+            BinOp::Mod => {
+                let q = y.as_i64();
+                if q == 0 {
+                    return None;
+                }
+                Some(self.kreg(Value::I(x.as_i64() % q)))
+            }
+            BinOp::Lt | BinOp::Le | BinOp::Gt | BinOp::Ge | BinOp::Eq | BinOp::Ne => {
+                let r = cmp_eval(op, x, y);
+                Some(self.kreg(Value::I(r as i64)))
+            }
+            BinOp::And | BinOp::Or => None,
+        }
+    }
+
+    fn lower_call(&mut self, name: &str, args: &[Expr], line: usize) -> Result<u32> {
+        // Cast intrinsics from `(float)` / `(int)`.
+        if name == "__float" || name == "__int" {
+            let ra = self.lower_expr(&args[0])?;
+            let dst = self.alloc();
+            if name == "__float" {
+                self.ops.push(Op::CastF { dst, a: ra });
+            } else {
+                self.ops.push(Op::CastI { dst, a: ra });
+            }
+            return Ok(dst);
+        }
+        if is_math_builtin(name) {
+            let ra = self.lower_expr(&args[0])?;
+            self.ops.push(Op::ChargeFlops { w: 8.0 });
+            let dst = self.alloc();
+            if name == "powf" {
+                let rb = self.lower_expr(&args[1])?;
+                self.ops.push(Op::Pow { dst, a: ra, b: rb });
+            } else {
+                let kind = match name {
+                    "sinf" | "sin" => MathOp::Sin,
+                    "cosf" | "cos" => MathOp::Cos,
+                    "tanf" => MathOp::Tan,
+                    "sqrtf" | "sqrt" => MathOp::Sqrt,
+                    "fabsf" | "fabs" => MathOp::Fabs,
+                    "expf" | "exp" => MathOp::Exp,
+                    "logf" | "log" => MathOp::Log,
+                    "floorf" => MathOp::Floor,
+                    "ceilf" => MathOp::Ceil,
+                    _ => return Err(lower_err(line, &format!("unknown builtin '{name}'"))),
+                };
+                self.ops.push(Op::Math1 { kind, dst, a: ra });
+            }
+            return Ok(dst);
+        }
+        if name == "printf" {
+            // The format string (args[0]) is never evaluated.
+            for a in args.iter().skip(1) {
+                let r = self.lower_expr(a)?;
+                self.ops.push(Op::Print { src: r });
+            }
+            return Ok(self.kreg(Value::I(0)));
+        }
+        // User function call.
+        let fi = match self.fn_index.get(name) {
+            Some(&i) => i,
+            None => return Err(lower_err(line, &format!("unknown function '{name}'"))),
+        };
+        let prog = self.prog;
+        let func = &prog.functions[fi as usize];
+        if func.params.len() != args.len() {
+            return Err(lower_err(line, &format!("arity mismatch calling '{name}'")));
+        }
+        // Depth is checked before any argument evaluation, like the
+        // tree-walker.
+        let steps = self.take();
+        self.ops.push(Op::DepthGuard { steps, line: line as u32 });
+        let mut argv = Vec::with_capacity(args.len());
+        for (p, a) in func.params.iter().zip(args) {
+            if p.is_array {
+                // Array arguments are passed by reference, never
+                // evaluated (no step, no charge).
+                let vn = match a {
+                    Expr::Var(vn, _) => vn,
+                    _ => return Err(lower_err(line, "array argument must be a variable")),
+                };
+                argv.push(self.array_slot(vn, line)?);
+            } else {
+                let r = self.lower_expr(a)?;
+                let coerced = self.alloc();
+                if p.ty == Ty::Int {
+                    self.ops.push(Op::CastI { dst: coerced, a: r });
+                } else {
+                    self.ops.push(Op::CastF { dst: coerced, a: r });
+                }
+                argv.push(coerced);
+            }
+        }
+        let args_off = self.call_args.len() as u32;
+        let argc = argv.len() as u32;
+        self.call_args.extend(argv);
+        let dst = self.alloc();
+        let steps = self.take();
+        self.ops.push(Op::Call { steps, fi, dst, args_off, argc });
+        Ok(dst)
+    }
+}
+
+fn is_cmp(op: BinOp) -> bool {
+    matches!(op, BinOp::Lt | BinOp::Le | BinOp::Gt | BinOp::Ge | BinOp::Eq | BinOp::Ne)
+}
+
+fn is_leaf(e: &Expr) -> bool {
+    matches!(e, Expr::Var(..) | Expr::IntLit(..) | Expr::FloatLit(..))
+}
+
+fn lit_value(e: &Expr) -> Option<Value> {
+    match e {
+        Expr::IntLit(v, _) => Some(Value::I(*v)),
+        Expr::FloatLit(v, _) => Some(Value::F(*v)),
+        _ => None,
+    }
+}
+
+#[inline(always)]
+fn cmp_eval(op: BinOp, a: Value, b: Value) -> bool {
+    let (x, y) = (a.as_f64(), b.as_f64());
+    match op {
+        BinOp::Lt => x < y,
+        BinOp::Le => x <= y,
+        BinOp::Gt => x > y,
+        BinOp::Ge => x >= y,
+        BinOp::Eq => x == y,
+        BinOp::Ne => x != y,
+        _ => unreachable!("non-comparison opcode in a compare"),
+    }
+}
+
+#[inline(always)]
+fn coerce(v: Value, int_ty: bool) -> Value {
+    if int_ty {
+        Value::I(v.as_i64())
+    } else {
+        Value::F(v.as_f64())
+    }
+}
+
+#[cold]
+#[inline(never)]
+fn lower_err(line: usize, msg: &str) -> Error {
+    Error::Profile(format!("line {line}: lowering failed: {msg}"))
+}
+
+#[cold]
+#[inline(never)]
+fn step_err(max: u64) -> Error {
+    Error::Profile(format!(
+        "step limit exceeded ({max}) — possible runaway loop"
+    ))
+}
+
+#[cold]
+#[inline(never)]
+fn bounds_err(unit: &LoweredUnit, aux: u32, i: i64, len: usize) -> Error {
+    let (line, nid) = unit.aux[aux as usize];
+    let name = &unit.names[nid as usize];
+    Error::Profile(format!(
+        "line {line}: index {i} out of bounds for '{name}' (len {len})"
+    ))
+}
+
+#[cold]
+#[inline(never)]
+fn size_err(unit: &LoweredUnit, aux: u32, n: i64) -> Error {
+    let (line, nid) = unit.aux[aux as usize];
+    let name = &unit.names[nid as usize];
+    Error::Profile(format!("line {line}: array '{name}' size {n} out of range"))
+}
+
+#[cold]
+#[inline(never)]
+fn depth_err(line: u32) -> Error {
+    Error::Profile(format!("line {line}: call depth limit exceeded (recursion?)"))
+}
+
+#[cold]
+#[inline(never)]
+fn int_div_err() -> Error {
+    Error::Profile("integer division by zero".into())
+}
+
+#[cold]
+#[inline(never)]
+fn modulo_err() -> Error {
+    Error::Profile("modulo by zero".into())
+}
+
+// ---- execution ---------------------------------------------------------
+
+struct CallRec {
+    fi: u32,
+    pc: u32,
+    dst: u32,
+    base_loops: u32,
+    frame: Vec<Value>,
+}
+
+struct Machine {
+    heap: Vec<ArrayData>,
+    data: ProfileData,
+    loop_stack: Vec<u32>,
+    calls: Vec<CallRec>,
+    frame: Vec<Value>,
+    max_steps: u64,
+}
+
+impl Machine {
+    #[inline(always)]
+    fn bump(&mut self, n: u32) -> Result<()> {
+        self.data.steps += n as u64;
+        if self.data.steps > self.max_steps {
+            return Err(step_err(self.max_steps));
+        }
+        Ok(())
+    }
+
+    #[inline(always)]
+    fn flops(&mut self, w: f64) {
+        match self.loop_stack.last() {
+            Some(&l) => self.data.loop_flops[l as usize] += w,
+            None => self.data.outside_flops += w,
+        }
+    }
+
+    #[inline(always)]
+    fn bytes4(&mut self) {
+        match self.loop_stack.last() {
+            Some(&l) => self.data.loop_bytes[l as usize] += 4.0,
+            None => self.data.outside_bytes += 4.0,
+        }
+    }
+
+    /// Resolve and bounds-check an indexed access.
+    #[inline(always)]
+    fn check_idx(&self, unit: &LoweredUnit, arr: u32, idx: u32, aux: u32) -> Result<(usize, usize)> {
+        let h = self.frame[arr as usize].as_i64() as usize;
+        let i = self.frame[idx as usize].as_i64();
+        let len = self.heap[h].len();
+        if i < 0 || i as usize >= len {
+            return Err(bounds_err(unit, aux, i, len));
+        }
+        Ok((h, i as usize))
+    }
+
+    /// `a * b` with the tree-walker's charge/overflow semantics.
+    #[inline(always)]
+    fn mul_value(&mut self, x: Value, y: Value) -> Value {
+        match (x, y) {
+            (Value::I(p), Value::I(q)) => Value::I(p.wrapping_mul(q)),
+            _ => {
+                self.flops(1.0);
+                Value::F(x.as_f64() * y.as_f64())
+            }
+        }
+    }
+}
+
+/// The dispatch loop. Match arms are ordered by measured opcode frequency
+/// on the registered workloads (`enadapt analyze --profile-ops`, DESIGN.md
+/// §13): the indexed loads, arithmetic and fused loop/mul-acc ops of the
+/// mriq/gemm inner loops first, control/allocation/diagnostic tails last.
+/// Error construction lives in `#[cold]` out-of-line functions.
+fn exec<const COUNT: bool>(
+    unit: &LoweredUnit,
+    st: &mut Machine,
+    main_fi: usize,
+    prof: &mut OpProfile,
+) -> Result<()> {
+    let mut fi = main_fi;
+    let mut pc = 0usize;
+    let mut ops: &[Op] = &unit.fns[fi].ops;
+    let mut prev = usize::MAX;
+    loop {
+        let op = ops[pc];
+        pc += 1;
+        if COUNT {
+            let ix = op.index();
+            prof.record(prev, ix);
+            prev = ix;
+        }
+        match op {
+            Op::LoadIdx { steps, dst, arr, idx, aux } => {
+                st.bump(steps)?;
+                let (h, i) = st.check_idx(unit, arr, idx, aux)?;
+                st.bytes4();
+                st.frame[dst as usize] = st.heap[h].get(i);
+            }
+            Op::MulAccIdx { steps, aop, slot, arr, idx, src, int_ty, aux } => {
+                st.bump(steps)?;
+                let (h, i) = st.check_idx(unit, arr, idx, aux)?;
+                st.bytes4();
+                let bv = st.heap[h].get(i);
+                let prod = st.mul_value(st.frame[src as usize], bv);
+                st.flops(1.0);
+                let v = apply_compound(st.frame[slot as usize], aop, prod);
+                st.frame[slot as usize] = coerce(v, int_ty);
+            }
+            Op::MulAcc { aop, slot, a, b, int_ty } => {
+                let prod = st.mul_value(st.frame[a as usize], st.frame[b as usize]);
+                st.flops(1.0);
+                let v = apply_compound(st.frame[slot as usize], aop, prod);
+                st.frame[slot as usize] = coerce(v, int_ty);
+            }
+            Op::Add { dst, a, b } => {
+                let (x, y) = (st.frame[a as usize], st.frame[b as usize]);
+                st.frame[dst as usize] = match (x, y) {
+                    (Value::I(p), Value::I(q)) => Value::I(p.wrapping_add(q)),
+                    _ => {
+                        st.flops(1.0);
+                        Value::F(x.as_f64() + y.as_f64())
+                    }
+                };
+            }
+            Op::Mul { dst, a, b } => {
+                let (x, y) = (st.frame[a as usize], st.frame[b as usize]);
+                st.frame[dst as usize] = st.mul_value(x, y);
+            }
+            Op::Math1 { kind, dst, a } => {
+                st.frame[dst as usize] = Value::F(kind.eval(st.frame[a as usize].as_f64()));
+            }
+            Op::LoopNext { steps, ind, by, cmp, a, b, loop_id, body } => {
+                st.bump(steps)?;
+                st.flops(1.0);
+                let v = st.frame[ind as usize].as_i64().wrapping_add(by);
+                st.frame[ind as usize] = Value::I(v);
+                if cmp_eval(cmp, st.frame[a as usize], st.frame[b as usize]) {
+                    st.data.loop_trips[loop_id as usize] += 1;
+                    pc = body as usize;
+                }
+            }
+            Op::LoopHead { steps, cmp, a, b, loop_id, exit } => {
+                st.bump(steps)?;
+                if cmp_eval(cmp, st.frame[a as usize], st.frame[b as usize]) {
+                    st.data.loop_trips[loop_id as usize] += 1;
+                } else {
+                    pc = exit as usize;
+                }
+            }
+            Op::Steps { n } => st.bump(n)?,
+            Op::StoreVar { slot, src, int_ty } => {
+                st.frame[slot as usize] = coerce(st.frame[src as usize], int_ty);
+            }
+            Op::CompoundVar { aop, slot, src, int_ty } => {
+                st.flops(1.0);
+                let v = apply_compound(st.frame[slot as usize], aop, st.frame[src as usize]);
+                st.frame[slot as usize] = coerce(v, int_ty);
+            }
+            Op::StoreIdx { steps, arr, idx, src, aux } => {
+                st.bump(steps)?;
+                let (h, i) = st.check_idx(unit, arr, idx, aux)?;
+                st.heap[h].set(i, st.frame[src as usize]);
+                st.bytes4();
+            }
+            Op::CompoundIdx { steps, aop, arr, idx, src, aux } => {
+                st.bump(steps)?;
+                let (h, i) = st.check_idx(unit, arr, idx, aux)?;
+                let old = st.heap[h].get(i);
+                st.bytes4();
+                st.flops(1.0);
+                let v = apply_compound(old, aop, st.frame[src as usize]);
+                st.heap[h].set(i, v);
+                st.bytes4();
+            }
+            Op::Sub { dst, a, b } => {
+                let (x, y) = (st.frame[a as usize], st.frame[b as usize]);
+                st.frame[dst as usize] = match (x, y) {
+                    (Value::I(p), Value::I(q)) => Value::I(p.wrapping_sub(q)),
+                    _ => {
+                        st.flops(1.0);
+                        Value::F(x.as_f64() - y.as_f64())
+                    }
+                };
+            }
+            Op::ChargeFlops { w } => st.flops(w),
+            Op::LoadK { dst, k } => st.frame[dst as usize] = unit.consts[k as usize],
+            Op::Cmp { cmp, dst, a, b } => {
+                let r = cmp_eval(cmp, st.frame[a as usize], st.frame[b as usize]);
+                st.frame[dst as usize] = Value::I(r as i64);
+            }
+            Op::BrCmpFalse { steps, cmp, a, b, to } => {
+                st.bump(steps)?;
+                if !cmp_eval(cmp, st.frame[a as usize], st.frame[b as usize]) {
+                    pc = to as usize;
+                }
+            }
+            Op::BrFalse { steps, src, to } => {
+                st.bump(steps)?;
+                if !st.frame[src as usize].truthy() {
+                    pc = to as usize;
+                }
+            }
+            Op::BrFalseTrip { steps, src, loop_id, exit } => {
+                st.bump(steps)?;
+                if st.frame[src as usize].truthy() {
+                    st.data.loop_trips[loop_id as usize] += 1;
+                } else {
+                    pc = exit as usize;
+                }
+            }
+            Op::Jump { steps, to } => {
+                st.bump(steps)?;
+                pc = to as usize;
+            }
+            Op::Div { steps, dst, a, b } => {
+                st.bump(steps)?;
+                let (x, y) = (st.frame[a as usize], st.frame[b as usize]);
+                st.frame[dst as usize] = match (x, y) {
+                    (Value::I(p), Value::I(q)) => {
+                        if q == 0 {
+                            return Err(int_div_err());
+                        }
+                        Value::I(p / q)
+                    }
+                    _ => {
+                        st.flops(4.0);
+                        Value::F(x.as_f64() / y.as_f64())
+                    }
+                };
+            }
+            Op::Mod { steps, dst, a, b } => {
+                st.bump(steps)?;
+                let q = st.frame[b as usize].as_i64();
+                if q == 0 {
+                    return Err(modulo_err());
+                }
+                let p = st.frame[a as usize].as_i64();
+                st.frame[dst as usize] = Value::I(p % q);
+            }
+            Op::Pow { dst, a, b } => {
+                let x = st.frame[a as usize].as_f64();
+                let y = st.frame[b as usize].as_f64();
+                st.frame[dst as usize] = Value::F(x.powf(y));
+            }
+            Op::Neg { dst, a } => {
+                st.frame[dst as usize] = match st.frame[a as usize] {
+                    Value::I(x) => Value::I(-x),
+                    Value::F(x) => Value::F(-x),
+                };
+            }
+            Op::Not { dst, a } => {
+                st.frame[dst as usize] = Value::I(!st.frame[a as usize].truthy() as i64);
+            }
+            Op::Truthy { dst, a } => {
+                st.frame[dst as usize] = Value::I(st.frame[a as usize].truthy() as i64);
+            }
+            Op::CastI { dst, a } => {
+                st.frame[dst as usize] = Value::I(st.frame[a as usize].as_i64());
+            }
+            Op::CastF { dst, a } => {
+                st.frame[dst as usize] = Value::F(st.frame[a as usize].as_f64());
+            }
+            Op::EnterLoop { steps, loop_id, touch_off, touch_len } => {
+                st.bump(steps)?;
+                let l = loop_id as usize;
+                st.data.loop_entries[l] += 1;
+                // Only the first few entries can observe new array sizes
+                // (same early-out as the tree-walker).
+                if st.data.loop_entries[l] <= 4 {
+                    let lo = touch_off as usize;
+                    for &(slot, pos) in &unit.touch[lo..lo + touch_len as usize] {
+                        let h = st.frame[slot as usize].as_i64() as usize;
+                        let bytes = st.heap[h].bytes();
+                        let entry = &mut st.data.loop_array_bytes[l][pos as usize];
+                        *entry = (*entry).max(bytes);
+                    }
+                }
+                st.loop_stack.push(loop_id);
+            }
+            Op::LeaveLoop => {
+                st.loop_stack.pop();
+            }
+            Op::Print { src } => {
+                let v = st.frame[src as usize].as_f64();
+                st.data.printed.push(v);
+            }
+            Op::ArrDecl { steps, slot, size, int_elems, aux } => {
+                st.bump(steps)?;
+                let n = st.frame[size as usize].as_i64();
+                if !(0..=100_000_000).contains(&n) {
+                    return Err(size_err(unit, aux, n));
+                }
+                let data = if int_elems {
+                    ArrayData::I(vec![0; n as usize])
+                } else {
+                    ArrayData::F(vec![0.0; n as usize])
+                };
+                st.heap.push(data);
+                st.frame[slot as usize] = Value::I(st.heap.len() as i64 - 1);
+            }
+            Op::DepthGuard { steps, line } => {
+                st.bump(steps)?;
+                if st.calls.len() >= MAX_DEPTH {
+                    return Err(depth_err(line));
+                }
+            }
+            Op::Call { steps, fi: nfi, dst, args_off, argc } => {
+                st.bump(steps)?;
+                let callee = &unit.fns[nfi as usize];
+                let mut nf = vec![Value::I(0); callee.n_regs as usize];
+                let lo = args_off as usize;
+                for (j, &src) in unit.call_args[lo..lo + argc as usize].iter().enumerate() {
+                    nf[j] = st.frame[src as usize];
+                }
+                let old = std::mem::replace(&mut st.frame, nf);
+                st.calls.push(CallRec {
+                    fi: fi as u32,
+                    pc: pc as u32,
+                    dst,
+                    base_loops: st.loop_stack.len() as u32,
+                    frame: old,
+                });
+                fi = nfi as usize;
+                pc = 0;
+                ops = &unit.fns[fi].ops;
+            }
+            Op::Ret { steps, src } => {
+                st.bump(steps)?;
+                // Return values are raw (uncoerced), like the tree-walker.
+                let v = if src == NONE {
+                    Value::I(0)
+                } else {
+                    st.frame[src as usize]
+                };
+                match st.calls.pop() {
+                    Some(rec) => {
+                        st.loop_stack.truncate(rec.base_loops as usize);
+                        st.frame = rec.frame;
+                        fi = rec.fi as usize;
+                        pc = rec.pc as usize;
+                        ops = &unit.fns[fi].ops;
+                        st.frame[rec.dst as usize] = v;
+                    }
+                    None => return Ok(()),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::canalyze::loops::extract_loops;
+    use crate::canalyze::parser::parse;
+    use crate::canalyze::profile::profile;
+    use crate::canalyze::sem;
+    use crate::workloads;
+
+    fn both(src: &str, limits: ProfileLimits) -> (Result<ProfileData>, Result<ProfileData>) {
+        let prog = parse("t.c", src).unwrap();
+        sem::check("t.c", &prog).unwrap();
+        let table = extract_loops(&prog);
+        let tree = profile(&prog, &table, limits);
+        let low = profile_lowered(&prog, &table, limits);
+        (tree, low)
+    }
+
+    fn assert_identical(src: &str) {
+        let (tree, low) = both(src, ProfileLimits::default());
+        let (t, l) = (tree.unwrap(), low.unwrap());
+        assert!(t.bits_eq(&l), "profiles diverge:\n tree={t:?}\n lowered={l:?}");
+    }
+
+    #[test]
+    fn workloads_bit_identical() {
+        for (name, src) in workloads::ALL {
+            let prog = parse(name, src).unwrap();
+            sem::check(name, &prog).unwrap();
+            let table = extract_loops(&prog);
+            let t = profile(&prog, &table, ProfileLimits::default()).unwrap();
+            let l = profile_lowered(&prog, &table, ProfileLimits::default()).unwrap();
+            assert!(t.bits_eq(&l), "{name}: lowered profile diverges from tree-walker");
+        }
+    }
+
+    #[test]
+    fn control_flow_and_calls_identical() {
+        assert_identical(
+            "int fib(int n) { if (n < 2) return n; return fib(n - 1) + fib(n - 2); }
+             int main() {
+               int acc = 0;
+               for (int i = 0; i < 12; i++) { acc += fib(i); }
+               while (acc > 100) { acc -= 7; }
+               printf(\"%d\", acc);
+               return 0;
+             }",
+        );
+    }
+
+    #[test]
+    fn short_circuit_and_breaks_identical() {
+        assert_identical(
+            "int main() {
+               int hits = 0;
+               for (int i = 0; i < 40; i++) {
+                 if (i % 3 == 0 && i % 5 != 0) { hits++; }
+                 if (i > 30 || hits > 8) { continue; }
+                 if (i == 37) { break; }
+               }
+               printf(\"%d\", hits);
+               return 0;
+             }",
+        );
+    }
+
+    #[test]
+    fn step_limit_boundary_is_identical() {
+        // Pin the runaway-guard boundary: with max_steps = N (the exact
+        // step count of the run) both interpreters succeed with
+        // steps == N; with N - 1 both fail with the identical error.
+        let src = "int main() {
+               float a[16];
+               float s = 0.0f;
+               for (int i = 0; i < 16; i++) { a[i] = (float)i; s += a[i] * 2.0f; }
+               printf(\"%f\", s);
+               return 0;
+             }";
+        let (tree, _) = both(src, ProfileLimits::default());
+        let n = tree.unwrap().steps;
+        let at = ProfileLimits { max_steps: n, ..Default::default() };
+        let (t_ok, l_ok) = both(src, at);
+        let (t_ok, l_ok) = (t_ok.unwrap(), l_ok.unwrap());
+        assert_eq!(t_ok.steps, n);
+        assert!(t_ok.bits_eq(&l_ok));
+        let under = ProfileLimits { max_steps: n - 1, ..Default::default() };
+        let (t_err, l_err) = both(src, under);
+        let (te, le) = (t_err.unwrap_err(), l_err.unwrap_err());
+        assert_eq!(te.to_string(), le.to_string());
+        assert!(te.to_string().contains("step limit"));
+    }
+
+    #[test]
+    fn runtime_errors_match_tree_walker() {
+        for src in [
+            "int main() { float a[4]; a[9] = 1.0f; return 0; }",
+            "int main() { int z = 0; int x = 7 / z; return 0; }",
+            "int main() { int z = 0; int x = 7 % z; return 0; }",
+            "int f(int n) { return f(n + 1); } int main() { f(0); return 0; }",
+        ] {
+            let (tree, low) = both(src, ProfileLimits::default());
+            let (te, le) = (tree.unwrap_err(), low.unwrap_err());
+            assert_eq!(te.to_string(), le.to_string(), "for {src}");
+        }
+    }
+
+    #[test]
+    fn superinstructions_are_emitted_for_gemm() {
+        let prog = parse("gemm.c", workloads::GEMM_C).unwrap();
+        let table = extract_loops(&prog);
+        let unit = lower(&prog, &table).unwrap();
+        let (mut next, mut head, mut mulacc) = (false, false, false);
+        for f in &unit.fns {
+            for o in &f.ops {
+                match o {
+                    Op::LoopNext { .. } => next = true,
+                    Op::LoopHead { .. } => head = true,
+                    Op::MulAcc { .. } | Op::MulAccIdx { .. } => mulacc = true,
+                    _ => {}
+                }
+            }
+        }
+        assert!(next, "no fused loop back-edge");
+        assert!(head, "no fused loop head");
+        assert!(mulacc, "no fused multiply-accumulate");
+    }
+
+    #[test]
+    fn entry_errors_match() {
+        let prog = parse("lib.c", "void f() { }").unwrap();
+        let table = extract_loops(&prog);
+        let unit = lower(&prog, &table).unwrap();
+        let e = unit.run(&table, ProfileLimits::default()).unwrap_err();
+        assert_eq!(e.to_string(), "profile error: program has no main()");
+    }
+}

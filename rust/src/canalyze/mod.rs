@@ -6,20 +6,28 @@
 //! Entry point: [`analyze_source`], which returns an [`Analysis`] holding
 //! the AST, the classified loop table and (when the program has a `main`)
 //! a dynamic profile.
+//!
+//! Profiling runs on the lowered op-IR interpreter ([`lower`], DESIGN.md
+//! §13); the tree-walker in [`profile`] is retained as the
+//! semantics-defining differential reference.
 
 pub mod ast;
 pub mod deps;
 pub mod intensity;
 pub mod lexer;
 pub mod loops;
+pub mod lower;
 pub mod parser;
+pub mod pgo;
 pub mod profile;
 pub mod sem;
 
 pub use ast::Program;
 pub use intensity::{by_intensity, by_trips, rank_loops, LoopRank};
 pub use loops::{LoopId, LoopInfo, OpCensus};
-pub use profile::{ProfileData, ProfileLimits};
+pub use lower::{lower, profile_lowered, LoweredUnit};
+pub use pgo::OpProfile;
+pub use profile::{ArrayTable, ProfileData, ProfileLimits};
 
 use crate::Result;
 
@@ -37,6 +45,10 @@ pub struct Analysis {
     pub loops: Vec<LoopInfo>,
     /// Dynamic profile (None when the program has no runnable `main`).
     pub profile: Option<ProfileData>,
+    /// Opcode/opcode-pair histogram from the lowered interpreter — only
+    /// collected when [`ProfileLimits::count_ops`] is set
+    /// (`enadapt analyze --profile-ops`).
+    pub op_profile: Option<OpProfile>,
 }
 
 impl Analysis {
@@ -99,10 +111,19 @@ pub fn analyze_source_with_limits(
     sem::check(file, &program)?;
     let mut table = loops::extract_loops(&program);
     deps::classify_loops(&program, &mut table);
-    let profile = if program.function("main").is_some() {
-        Some(profile::profile(&program, &table, limits)?)
+    // Profile on the lowered interpreter (bit-identical to the
+    // tree-walking reference in `profile`, asserted differentially in
+    // tests/canalyze_pgo.rs and the canalyze_pgo bench).
+    let (profile, op_profile) = if program.function("main").is_some() {
+        let unit = lower::lower(&program, &table)?;
+        if limits.count_ops {
+            let (data, ops) = unit.run_counted(&table, limits)?;
+            (Some(data), Some(ops))
+        } else {
+            (Some(unit.run(&table, limits)?), None)
+        }
     } else {
-        None
+        (None, None)
     };
     Ok(Analysis {
         file: file.to_string(),
@@ -110,6 +131,7 @@ pub fn analyze_source_with_limits(
         program,
         loops: table,
         profile,
+        op_profile,
     })
 }
 

@@ -1,0 +1,162 @@
+//! Opcode and opcode-pair frequency profiling for the lowered canalyze
+//! interpreter (DESIGN.md §13).
+//!
+//! When `ProfileLimits::count_ops` is set, the lowered interpreter
+//! ([`super::lower`]) records, per dispatched instruction, its opcode and
+//! the (previous, current) opcode pair. The resulting [`OpProfile`] is
+//! the evidence behind the interpreter's profile-guided layout: the
+//! dispatch-arm ordering, the hot/cold handler split and the
+//! superinstruction selection (fused loop heads/back-edges,
+//! compare+branch, indexed-load + multiply-accumulate) were all chosen
+//! from the pair histogram of the registered workloads, dumped with
+//! `enadapt analyze <src> --profile-ops`.
+
+use super::lower::{N_OPS, OP_NAMES};
+use crate::util::tablefmt::Table;
+
+/// Opcode / opcode-pair frequency histogram collected by one lowered
+/// interpreter run (see [`super::lower::LoweredUnit::run_counted`]).
+#[derive(Debug, Clone)]
+pub struct OpProfile {
+    /// `op_counts[op]` — dispatch count per opcode.
+    op_counts: Vec<u64>,
+    /// `pair_counts[prev * N_OPS + cur]` — dispatch count per ordered
+    /// (previous, current) opcode pair.
+    pair_counts: Vec<u64>,
+    /// Total instructions dispatched.
+    total: u64,
+}
+
+impl OpProfile {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Self {
+            op_counts: vec![0; N_OPS],
+            pair_counts: vec![0; N_OPS * N_OPS],
+            total: 0,
+        }
+    }
+
+    /// Record one dispatch. `prev` is the previous instruction's opcode
+    /// index, or `usize::MAX` at the start of a run.
+    #[inline(always)]
+    pub(crate) fn record(&mut self, prev: usize, cur: usize) {
+        self.op_counts[cur] += 1;
+        self.total += 1;
+        if prev != usize::MAX {
+            self.pair_counts[prev * N_OPS + cur] += 1;
+        }
+    }
+
+    /// Total instructions dispatched.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// The `n` most frequent opcodes, descending, zero counts omitted.
+    pub fn top_ops(&self, n: usize) -> Vec<(&'static str, u64)> {
+        let mut v: Vec<(&'static str, u64)> = OP_NAMES
+            .iter()
+            .zip(&self.op_counts)
+            .filter(|&(_, &c)| c > 0)
+            .map(|(&name, &c)| (name, c))
+            .collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+        v.truncate(n);
+        v
+    }
+
+    /// The `n` most frequent ordered opcode pairs, descending, zero
+    /// counts omitted — the superinstruction candidates.
+    pub fn top_pairs(&self, n: usize) -> Vec<(&'static str, &'static str, u64)> {
+        let mut v: Vec<(&'static str, &'static str, u64)> = self
+            .pair_counts
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(ix, &c)| (OP_NAMES[ix / N_OPS], OP_NAMES[ix % N_OPS], c))
+            .collect();
+        v.sort_by(|a, b| b.2.cmp(&a.2).then((a.0, a.1).cmp(&(b.0, b.1))));
+        v.truncate(n);
+        v
+    }
+
+    /// Render the histogram as two aligned tables (opcodes, then pairs)
+    /// — the `enadapt analyze --profile-ops` output.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("dispatched ops: {}\n\nop histogram:\n", self.total));
+        let mut ops = Table::new(&["op", "count", "share"]);
+        for (name, c) in self.top_ops(usize::MAX) {
+            let share = 100.0 * c as f64 / self.total.max(1) as f64;
+            ops.row(&[name.to_string(), c.to_string(), format!("{share:.1}%")]);
+        }
+        out.push_str(&ops.render());
+        out.push_str("\ntop op pairs (superinstruction candidates):\n");
+        let mut pairs = Table::new(&["prev", "next", "count"]);
+        for (a, b, c) in self.top_pairs(16) {
+            pairs.row(&[a.to_string(), b.to_string(), c.to_string()]);
+        }
+        out.push_str(&pairs.render());
+        out
+    }
+}
+
+impl Default for OpProfile {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::canalyze::loops::extract_loops;
+    use crate::canalyze::lower::lower;
+    use crate::canalyze::parser::parse;
+    use crate::canalyze::ProfileLimits;
+
+    #[test]
+    fn counts_are_consistent() {
+        let src = "int main() {
+               int s = 0;
+               for (int i = 0; i < 10; i++) { s += i; }
+               printf(\"%d\", s);
+               return 0;
+             }";
+        let prog = parse("t.c", src).unwrap();
+        let table = extract_loops(&prog);
+        let unit = lower(&prog, &table).unwrap();
+        let limits = ProfileLimits { count_ops: true, ..Default::default() };
+        let (data, prof) = unit.run_counted(&table, limits).unwrap();
+        assert_eq!(data.printed, vec![45.0]);
+        assert!(prof.total() > 0);
+        let op_sum: u64 = prof.top_ops(usize::MAX).iter().map(|(_, c)| c).sum();
+        assert_eq!(op_sum, prof.total());
+        // Pairs count every dispatch except the first.
+        let pair_sum: u64 = prof.top_pairs(usize::MAX).iter().map(|(_, _, c)| c).sum();
+        assert_eq!(pair_sum, prof.total() - 1);
+        // The fused back-edge dominates a counted loop.
+        assert!(prof.top_ops(3).iter().any(|(n, _)| *n == "LoopNext"));
+        // Rendering mentions the hottest op.
+        let text = prof.render();
+        assert!(text.contains("LoopNext"));
+    }
+
+    #[test]
+    fn uncounted_run_matches_counted() {
+        let src = "int main() {
+               float a[8];
+               for (int i = 0; i < 8; i++) { a[i] = (float)i * 0.5f; }
+               printf(\"%f\", a[7]);
+               return 0;
+             }";
+        let prog = parse("t.c", src).unwrap();
+        let table = extract_loops(&prog);
+        let unit = lower(&prog, &table).unwrap();
+        let plain = unit.run(&table, ProfileLimits::default()).unwrap();
+        let limits = ProfileLimits { count_ops: true, ..Default::default() };
+        let (counted, _) = unit.run_counted(&table, limits).unwrap();
+        assert!(plain.bits_eq(&counted));
+    }
+}

@@ -12,10 +12,63 @@ use super::ast::*;
 use super::loops::{LoopId, LoopInfo};
 use crate::util::fasthash::FastMap;
 use crate::{Error, Result};
-use std::collections::HashMap;
+
+/// Interned array-name table for per-loop transfer bookkeeping.
+///
+/// Array names are resolved to dense ids once (at lower/profile setup
+/// time) so the interpreters never hash strings on a loop entry. Both the
+/// tree-walker and the lowered interpreter (DESIGN.md §13) build this with
+/// [`ArrayTable::build`] from the same loop table, so their
+/// [`ProfileData`] values stay structurally identical.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ArrayTable {
+    /// Interned array names, indexed by id.
+    pub names: Vec<String>,
+    /// Per-loop touched-array ids, in sorted-name order (the order of
+    /// `arrays_read ∪ arrays_written`, which BTreeSet union yields).
+    pub loop_touch: Vec<Vec<u32>>,
+}
+
+impl ArrayTable {
+    /// Intern every array name touched by any loop region. Ids are
+    /// assigned in first-seen order over loops in table order, which is
+    /// deterministic for a given program.
+    pub fn build(table: &[LoopInfo]) -> Self {
+        let mut names: Vec<String> = Vec::new();
+        let mut index: FastMap<String, u32> = FastMap::default();
+        let loop_touch = table
+            .iter()
+            .map(|l| {
+                l.arrays_read
+                    .union(&l.arrays_written)
+                    .map(|n| match index.get(n) {
+                        Some(&id) => id,
+                        None => {
+                            let id = names.len() as u32;
+                            names.push(n.clone());
+                            index.insert(n.clone(), id);
+                            id
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        Self { names, loop_touch }
+    }
+
+    /// Name of an interned array id.
+    pub fn name(&self, id: u32) -> &str {
+        &self.names[id as usize]
+    }
+
+    /// Touched-array ids of one loop region.
+    pub fn touch(&self, id: LoopId) -> &[u32] {
+        &self.loop_touch[id.0]
+    }
+}
 
 /// Dynamic profile of one program run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ProfileData {
     /// Times each loop statement was entered.
     pub loop_entries: Vec<u64>,
@@ -31,8 +84,13 @@ pub struct ProfileData {
     /// Bytes moved outside any loop.
     pub outside_bytes: f64,
     /// Max observed byte-size of each array touched by each loop region
-    /// (for CPU↔device transfer modeling).
-    pub loop_array_bytes: Vec<HashMap<String, u64>>,
+    /// (for CPU↔device transfer modeling). Outer index: loop id; inner
+    /// index: position in `arrays.loop_touch[loop]` (0 = never observed
+    /// as a live array). Use [`ProfileData::array_bytes`] for the
+    /// name-keyed view.
+    pub loop_array_bytes: Vec<Vec<u64>>,
+    /// Interned array-name table `loop_array_bytes` is indexed by.
+    pub arrays: ArrayTable,
     /// Numeric values printed via `printf` (in order) — used as the
     /// program's observable output in tests.
     pub printed: Vec<f64>,
@@ -85,14 +143,76 @@ impl ProfileData {
     }
 
     /// Bytes that must cross CPU↔device when offloading the nest at `id`:
-    /// the arrays its region touches (max observed sizes).
+    /// the arrays its region touches (max observed sizes). The loop table
+    /// is accepted for API stability; the touched-array set is already
+    /// interned in [`ProfileData::arrays`].
     pub fn transfer_bytes(&self, table: &[LoopInfo], id: LoopId) -> u64 {
-        let info = &table[id.0];
-        let sizes = &self.loop_array_bytes[id.0];
-        info.arrays_read
-            .union(&info.arrays_written)
-            .map(|a| sizes.get(a).copied().unwrap_or(0))
-            .sum()
+        debug_assert_eq!(table.len(), self.loop_array_bytes.len());
+        self.loop_array_bytes[id.0].iter().sum()
+    }
+
+    /// Name-keyed view of `loop_array_bytes`: max observed byte size of
+    /// array `name` in loop `id`'s region, or `None` if the region does
+    /// not touch it / never observed it live.
+    pub fn array_bytes(&self, id: LoopId, name: &str) -> Option<u64> {
+        let touch = self.arrays.touch(id);
+        let pos = touch.iter().position(|&a| self.arrays.name(a) == name)?;
+        let b = self.loop_array_bytes[id.0][pos];
+        if b > 0 {
+            Some(b)
+        } else {
+            None
+        }
+    }
+
+    /// All observed `(array name, max bytes)` pairs for loop `id`.
+    pub fn array_bytes_named(&self, id: LoopId) -> Vec<(&str, u64)> {
+        self.arrays
+            .touch(id)
+            .iter()
+            .zip(&self.loop_array_bytes[id.0])
+            .filter(|&(_, &b)| b > 0)
+            .map(|(&a, &b)| (self.arrays.name(a), b))
+            .collect()
+    }
+
+    /// Bit-exact equality: like `==`, but floating-point fields are
+    /// compared by `to_bits`, so `NaN == NaN` and `-0.0 != 0.0`. This is
+    /// the contract the lowered interpreter (DESIGN.md §13) is tested
+    /// against the tree-walker with.
+    pub fn bits_eq(&self, other: &ProfileData) -> bool {
+        fn beq(a: &[f64], b: &[f64]) -> bool {
+            a.len() == b.len()
+                && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+        }
+        self.loop_entries == other.loop_entries
+            && self.loop_trips == other.loop_trips
+            && beq(&self.loop_flops, &other.loop_flops)
+            && beq(&self.loop_bytes, &other.loop_bytes)
+            && self.outside_flops.to_bits() == other.outside_flops.to_bits()
+            && self.outside_bytes.to_bits() == other.outside_bytes.to_bits()
+            && self.loop_array_bytes == other.loop_array_bytes
+            && self.arrays == other.arrays
+            && beq(&self.printed, &other.printed)
+            && self.steps == other.steps
+    }
+
+    /// Empty profile shaped for `table`, shared by both interpreters so
+    /// their outputs are structurally identical.
+    pub(crate) fn empty(table: &[LoopInfo]) -> Self {
+        let arrays = ArrayTable::build(table);
+        ProfileData {
+            loop_entries: vec![0; table.len()],
+            loop_trips: vec![0; table.len()],
+            loop_flops: vec![0.0; table.len()],
+            loop_bytes: vec![0.0; table.len()],
+            outside_flops: 0.0,
+            outside_bytes: 0.0,
+            loop_array_bytes: arrays.loop_touch.iter().map(|t| vec![0; t.len()]).collect(),
+            arrays,
+            printed: Vec::new(),
+            steps: 0,
+        }
     }
 }
 
@@ -101,17 +221,28 @@ impl ProfileData {
 pub struct ProfileLimits {
     /// Max interpreter steps before aborting (runaway guard).
     pub max_steps: u64,
+    /// Collect an opcode / opcode-pair frequency histogram while
+    /// profiling (lowered interpreter only; see `canalyze::pgo`). Off by
+    /// default — the counting dispatch loop is a separate
+    /// monomorphization, so the flag costs nothing when false.
+    pub count_ops: bool,
 }
 
 impl Default for ProfileLimits {
     fn default() -> Self {
         Self {
             max_steps: 200_000_000,
+            count_ops: false,
         }
     }
 }
 
-/// Run `main()` and collect a [`ProfileData`].
+/// Run `main()` under the reference tree-walking interpreter and collect
+/// a [`ProfileData`].
+///
+/// This is the semantics-defining implementation: the lowered interpreter
+/// in `canalyze::lower` (which `analyze_source` uses) is differentially
+/// tested to produce bit-identical output (DESIGN.md §13).
 pub fn profile(prog: &Program, table: &[LoopInfo], limits: ProfileLimits) -> Result<ProfileData> {
     let main = prog
         .function("main")
@@ -123,17 +254,7 @@ pub fn profile(prog: &Program, table: &[LoopInfo], limits: ProfileLimits) -> Res
         prog,
         table,
         heap: Vec::new(),
-        data: ProfileData {
-            loop_entries: vec![0; table.len()],
-            loop_trips: vec![0; table.len()],
-            loop_flops: vec![0.0; table.len()],
-            loop_bytes: vec![0.0; table.len()],
-            outside_flops: 0.0,
-            outside_bytes: 0.0,
-            loop_array_bytes: vec![HashMap::new(); table.len()],
-            printed: Vec::new(),
-            steps: 0,
-        },
+        data: ProfileData::empty(table),
         loop_stack: Vec::new(),
         limits,
         depth: 0,
@@ -155,29 +276,33 @@ pub fn profile(prog: &Program, table: &[LoopInfo], limits: ProfileLimits) -> Res
     Ok(interp.data)
 }
 
-/// Runtime value.
+/// Runtime value. Shared with the lowered interpreter (`canalyze::lower`)
+/// so numeric semantics are defined in exactly one place.
 #[derive(Debug, Clone, Copy, PartialEq)]
-enum Value {
+pub(crate) enum Value {
     I(i64),
     F(f64),
 }
 
 impl Value {
-    fn as_f64(self) -> f64 {
+    #[inline(always)]
+    pub(crate) fn as_f64(self) -> f64 {
         match self {
             Value::I(v) => v as f64,
             Value::F(v) => v,
         }
     }
 
-    fn as_i64(self) -> i64 {
+    #[inline(always)]
+    pub(crate) fn as_i64(self) -> i64 {
         match self {
             Value::I(v) => v,
             Value::F(v) => v as i64,
         }
     }
 
-    fn truthy(self) -> bool {
+    #[inline(always)]
+    pub(crate) fn truthy(self) -> bool {
         match self {
             Value::I(v) => v != 0,
             Value::F(v) => v != 0.0,
@@ -185,33 +310,36 @@ impl Value {
     }
 }
 
-/// Array storage.
+/// Array storage. Shared with the lowered interpreter.
 #[derive(Debug, Clone)]
-enum ArrayData {
+pub(crate) enum ArrayData {
     F(Vec<f64>),
     I(Vec<i64>),
 }
 
 impl ArrayData {
-    fn len(&self) -> usize {
+    #[inline(always)]
+    pub(crate) fn len(&self) -> usize {
         match self {
             ArrayData::F(v) => v.len(),
             ArrayData::I(v) => v.len(),
         }
     }
 
-    fn bytes(&self) -> u64 {
+    pub(crate) fn bytes(&self) -> u64 {
         4 * self.len() as u64
     }
 
-    fn get(&self, i: usize) -> Value {
+    #[inline(always)]
+    pub(crate) fn get(&self, i: usize) -> Value {
         match self {
             ArrayData::F(v) => Value::F(v[i]),
             ArrayData::I(v) => Value::I(v[i]),
         }
     }
 
-    fn set(&mut self, i: usize, val: Value) {
+    #[inline(always)]
+    pub(crate) fn set(&mut self, i: usize, val: Value) {
         match self {
             ArrayData::F(v) => v[i] = val.as_f64(),
             ArrayData::I(v) => v[i] = val.as_i64(),
@@ -525,13 +653,14 @@ impl<'a> Interp<'a> {
         if self.data.loop_entries[loop_id] > 4 {
             return;
         }
+        // `loop_touch_names[l]` and `arrays.loop_touch[l]` are built from
+        // the same sorted union, so position `i` here is the interned
+        // position in `loop_array_bytes[l]`.
         for i in 0..self.loop_touch_names[loop_id].len() {
             let name = &self.loop_touch_names[loop_id][i];
             if let Some(Binding::Array(h)) = frame.lookup(name) {
                 let bytes = self.heap[h].bytes();
-                let entry = self.data.loop_array_bytes[loop_id]
-                    .entry(name.clone())
-                    .or_insert(0);
+                let entry = &mut self.data.loop_array_bytes[loop_id][i];
                 *entry = (*entry).max(bytes);
             }
         }
@@ -761,7 +890,8 @@ impl<'a> Interp<'a> {
     }
 }
 
-fn apply_compound(old: Value, op: AssignOp, rhs: Value) -> Value {
+#[inline(always)]
+pub(crate) fn apply_compound(old: Value, op: AssignOp, rhs: Value) -> Value {
     let both_int = matches!((old, rhs), (Value::I(_), Value::I(_)));
     if both_int {
         let (x, y) = (old.as_i64(), rhs.as_i64());
@@ -903,7 +1033,9 @@ mod tests {
                return 0;
              }",
         );
-        assert_eq!(d.loop_array_bytes[0].get("q"), Some(&1024));
+        assert_eq!(d.array_bytes(LoopId(0), "q"), Some(1024));
+        assert_eq!(d.array_bytes(LoopId(0), "nosuch"), None);
+        assert_eq!(d.array_bytes_named(LoopId(0)), vec![("q", 1024)]);
     }
 
     #[test]
@@ -936,7 +1068,11 @@ mod tests {
     fn step_limit_stops_runaway() {
         let prog = parse("t.c", "int main() { while (1) { int x = 0; } return 0; }").unwrap();
         let table = extract_loops(&prog);
-        let e = profile(&prog, &table, ProfileLimits { max_steps: 10_000 }).unwrap_err();
+        let limits = ProfileLimits {
+            max_steps: 10_000,
+            ..Default::default()
+        };
+        let e = profile(&prog, &table, limits).unwrap_err();
         assert!(e.to_string().contains("step limit"));
     }
 

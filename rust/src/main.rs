@@ -67,7 +67,10 @@ fn app() -> App {
             CmdSpec {
                 name: "analyze",
                 about: "analyze a source: loop table, parallelizability, profile",
-                opts: vec![flag("json", "emit JSON")],
+                opts: vec![
+                    flag("json", "emit JSON"),
+                    flag("profile-ops", "dump the interpreter opcode/pair histogram"),
+                ],
                 positionals: vec!["source"],
             },
             CmdSpec {
@@ -315,7 +318,11 @@ fn dispatch(p: &Parsed) -> enadapt::Result<()> {
     match p.cmd.as_str() {
         "analyze" => {
             let (name, src) = load_source(p.pos(0).unwrap())?;
-            let an = canalyze::analyze_source(&name, &src)?;
+            let limits = canalyze::ProfileLimits {
+                count_ops: p.flag("profile-ops"),
+                ..Default::default()
+            };
+            let an = canalyze::analyze_source_with_limits(&name, &src, limits)?;
             if p.flag("json") {
                 let loops: Vec<Json> = an
                     .loops
@@ -353,6 +360,11 @@ fn dispatch(p: &Parsed) -> enadapt::Result<()> {
                     an.parallelizable_ids().len(),
                     an.n_loops()
                 );
+            }
+            if let Some(ops) = &an.op_profile {
+                println!("\n{}", ops.render());
+            } else if p.flag("profile-ops") {
+                println!("\n(no main() — nothing executed, no op histogram)");
             }
             Ok(())
         }

@@ -146,6 +146,556 @@ pub fn run(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwi
     }
 }
 
+// ---- C-subset program generation ---------------------------------------
+
+/// Generate a small, valid-by-construction program in the canalyze C
+/// subset: canonical and generic `for` loops, `while` loops, arrays with
+/// in-bounds index patterns, compound assignments (including the
+/// multiply-accumulate shapes the lowered interpreter fuses),
+/// short-circuit logic, casts, math builtins, `printf` and helper
+/// functions with scalar and array parameters.
+///
+/// Programs always terminate: loop trip counts are bounded, `while`
+/// counters decrement before anything else runs, and helpers never
+/// recurse. A small fraction of division/modulo sites keep a variable
+/// divisor so runtime-error equality stays exercised. Used by
+/// `tests/canalyze_pgo.rs` to diff the lowered interpreter
+/// (`canalyze::lower`) against the tree-walking reference.
+pub fn c_program(g: &mut Gen) -> String {
+    CProgGen::default().generate(g)
+}
+
+/// What bounds an in-scope canonical induction variable (safe-index
+/// candidates): a literal trip count, or the helper's `n` parameter.
+#[derive(Clone, Copy, PartialEq)]
+enum Bound {
+    Lit(usize),
+    NParam,
+}
+
+#[derive(Clone)]
+struct ArrDecl {
+    name: String,
+    /// Statically known length; `None` for helper array params (only
+    /// indexable through `NParam`-bounded induction variables).
+    len: Option<usize>,
+    int_elems: bool,
+}
+
+#[derive(Default)]
+struct CProgGen {
+    out: String,
+    indent: usize,
+    next_id: usize,
+    ints: Vec<String>,
+    floats: Vec<String>,
+    arrays: Vec<ArrDecl>,
+    /// In-scope canonical induction variables and their exclusive bounds.
+    ivars: Vec<(String, Bound)>,
+    loop_depth: usize,
+    /// Scalar helpers `float hK(float x, int n)` available to call.
+    scalar_helpers: Vec<String>,
+    /// Array helpers `float hK(float *a, int n)` available to call.
+    array_helpers: Vec<String>,
+}
+
+impl CProgGen {
+    fn generate(mut self, g: &mut Gen) -> String {
+        let n_scalar = g.usize_range(0, 2);
+        for _ in 0..n_scalar {
+            self.scalar_helper(g);
+        }
+        if g.bool() {
+            self.array_helper(g);
+        }
+        self.line("int main() {");
+        self.indent += 1;
+        self.block_body(g, 0);
+        // Deterministic observable output at the end of every program.
+        let e = self.expr(g, 2);
+        self.line(&format!("printf(\"%f\", {e});"));
+        self.line("return 0;");
+        self.indent -= 1;
+        self.line("}");
+        self.out
+    }
+
+    fn fresh(&mut self) -> String {
+        let id = self.next_id;
+        self.next_id += 1;
+        format!("v{id}")
+    }
+
+    fn line(&mut self, s: &str) {
+        for _ in 0..self.indent {
+            self.out.push_str("  ");
+        }
+        self.out.push_str(s);
+        self.out.push('\n');
+    }
+
+    /// Reset per-function scope state (helpers and main don't share it).
+    fn reset_scope(&mut self) {
+        self.ints.clear();
+        self.floats.clear();
+        self.arrays.clear();
+        self.ivars.clear();
+        self.loop_depth = 0;
+    }
+
+    fn scalar_helper(&mut self, g: &mut Gen) {
+        self.reset_scope();
+        let name = format!("h{}", self.next_id);
+        self.next_id += 1;
+        self.line(&format!("float {name}(float x, int n) {{"));
+        self.indent += 1;
+        self.floats.push("x".into());
+        self.ints.push("n".into());
+        self.block_body(g, 0);
+        let e = self.expr(g, 2);
+        self.line(&format!("return {e};"));
+        self.indent -= 1;
+        self.line("}");
+        self.scalar_helpers.push(name);
+        self.reset_scope();
+    }
+
+    fn array_helper(&mut self, g: &mut Gen) {
+        self.reset_scope();
+        let name = format!("h{}", self.next_id);
+        self.next_id += 1;
+        self.line(&format!("float {name}(float *a, int n) {{"));
+        self.indent += 1;
+        self.ints.push("n".into());
+        self.arrays.push(ArrDecl { name: "a".into(), len: None, int_elems: false });
+        self.line("float s = 0.0f;");
+        self.floats.push("s".into());
+        let q = self.fresh();
+        self.line(&format!("for (int {q} = 0; {q} < n; {q}++) {{"));
+        self.indent += 1;
+        self.ivars.push((q.clone(), Bound::NParam));
+        self.ints.push(q.clone());
+        self.loop_depth += 1;
+        match g.usize_range(0, 2) {
+            0 => {
+                let e = self.expr(g, 1);
+                self.line(&format!("s += {e} * a[{q}];"));
+            }
+            1 => {
+                let e = self.expr(g, 1);
+                self.line(&format!("a[{q}] += {e};"));
+            }
+            _ => self.line(&format!("s = (s + a[{q}]);")),
+        }
+        self.loop_depth -= 1;
+        self.ivars.pop();
+        self.ints.pop();
+        self.indent -= 1;
+        self.line("}");
+        self.line("return s;");
+        self.indent -= 1;
+        self.line("}");
+        self.array_helpers.push(name);
+        self.reset_scope();
+    }
+
+    /// Emit 1–5 statements, restoring declaration scope afterwards.
+    fn block_body(&mut self, g: &mut Gen, depth: usize) {
+        let saved = (self.ints.len(), self.floats.len(), self.arrays.len());
+        let n = g.usize_range(1, 5);
+        for _ in 0..n {
+            self.stmt(g, depth);
+        }
+        self.ints.truncate(saved.0);
+        self.floats.truncate(saved.1);
+        self.arrays.truncate(saved.2);
+    }
+
+    fn stmt(&mut self, g: &mut Gen, depth: usize) {
+        let choice = g.usize_range(0, 11);
+        match choice {
+            0 | 1 => self.decl_scalar(g),
+            2 => {
+                if depth < 2 && self.arrays.iter().filter(|a| a.len.is_some()).count() < 3 {
+                    self.decl_array(g);
+                } else {
+                    self.decl_scalar(g);
+                }
+            }
+            3 | 4 => self.assign_scalar(g),
+            5 => self.assign_array(g),
+            6 => {
+                let c = self.cond(g);
+                self.line(&format!("if ({c}) {{"));
+                self.indent += 1;
+                self.block_body(g, depth + 1);
+                self.indent -= 1;
+                if g.bool() {
+                    self.line("} else {");
+                    self.indent += 1;
+                    self.block_body(g, depth + 1);
+                    self.indent -= 1;
+                }
+                self.line("}");
+            }
+            7 | 8 => {
+                if self.loop_depth < 3 && depth < 3 {
+                    self.for_loop(g, depth);
+                } else {
+                    self.assign_scalar(g);
+                }
+            }
+            9 => {
+                if self.loop_depth < 3 && depth < 3 {
+                    self.while_loop(g, depth);
+                } else {
+                    self.decl_scalar(g);
+                }
+            }
+            10 => {
+                let e = self.expr(g, 2);
+                self.line(&format!("printf(\"%f\", {e});"));
+            }
+            _ => self.call_stmt(g),
+        }
+    }
+
+    fn decl_scalar(&mut self, g: &mut Gen) {
+        let v = self.fresh();
+        let e = self.expr(g, 2);
+        if g.bool() {
+            self.line(&format!("int {v} = {e};"));
+            self.ints.push(v);
+        } else {
+            self.line(&format!("float {v} = {e};"));
+            self.floats.push(v);
+        }
+    }
+
+    fn decl_array(&mut self, g: &mut Gen) {
+        let v = self.fresh();
+        let len = g.usize_range(4, 16);
+        let int_elems = g.bool();
+        let ty = if int_elems { "int" } else { "float" };
+        self.line(&format!("{ty} {v}[{len}];"));
+        self.arrays.push(ArrDecl { name: v.clone(), len: Some(len), int_elems });
+        // Usually fill it right away (observable loop + array traffic).
+        if g.bool() {
+            let i = self.fresh();
+            let e = self.expr(g, 1);
+            self.line(&format!("for (int {i} = 0; {i} < {len}; {i}++) {{ {v}[{i}] = {e}; }}"));
+        }
+    }
+
+    fn assign_scalar(&mut self, g: &mut Gen) {
+        let Some(v) = self.pick_scalar(g) else {
+            self.decl_scalar(g);
+            return;
+        };
+        let op = *g.pick(&["=", "+=", "-=", "*=", "/="]);
+        // Bias toward the multiply-accumulate shape on compound adds.
+        if op == "+=" && g.bool() {
+            let a = self.expr(g, 1);
+            let b = match self.safe_load(g) {
+                Some(load) => load,
+                None => self.expr(g, 1),
+            };
+            self.line(&format!("{v} += {a} * {b};"));
+            return;
+        }
+        let e = self.expr(g, 2);
+        self.line(&format!("{v} {op} {e};"));
+    }
+
+    fn assign_array(&mut self, g: &mut Gen) {
+        let Some((name, idx)) = self.safe_index(g) else {
+            self.assign_scalar(g);
+            return;
+        };
+        let op = *g.pick(&["=", "+=", "-=", "*=", "/="]);
+        let e = self.expr(g, 2);
+        self.line(&format!("{name}[{idx}] {op} {e};"));
+    }
+
+    fn for_loop(&mut self, g: &mut Gen, depth: usize) {
+        let trips = g.usize_range(1, 8);
+        if g.usize_range(0, 3) == 0 {
+            // Generic (non-canonical) form: Set-step assignment, so the
+            // lowered interpreter takes the unfused loop path.
+            let v = self.fresh();
+            self.line(&format!("int {v} = 0;"));
+            self.line(&format!("for ({v} = 0; {v} < {trips}; {v} = {v} + 2) {{"));
+            self.ints.push(v.clone());
+            self.indent += 1;
+            self.loop_depth += 1;
+            self.block_body(g, depth + 1);
+            self.loop_depth -= 1;
+            self.indent -= 1;
+            self.line("}");
+            return;
+        }
+        let v = self.fresh();
+        self.line(&format!("for (int {v} = 0; {v} < {trips}; {v}++) {{"));
+        self.indent += 1;
+        self.ivars.push((v.clone(), Bound::Lit(trips)));
+        self.ints.push(v.clone());
+        self.loop_depth += 1;
+        self.block_body(g, depth + 1);
+        if g.usize_range(0, 3) == 0 && trips > 1 {
+            let at = g.usize_range(0, trips - 1);
+            let kind = if g.bool() { "break" } else { "continue" };
+            self.line(&format!("if ({v} == {at}) {{ {kind}; }}"));
+        }
+        self.loop_depth -= 1;
+        self.ints.pop();
+        self.ivars.pop();
+        self.indent -= 1;
+        self.line("}");
+    }
+
+    fn while_loop(&mut self, g: &mut Gen, depth: usize) {
+        let v = self.fresh();
+        let start = g.usize_range(1, 8);
+        self.line(&format!("int {v} = {start};"));
+        self.line(&format!("while ({v} > 0) {{"));
+        self.indent += 1;
+        // Decrement first so `continue` below can never loop forever.
+        self.line(&format!("{v} -= 1;"));
+        self.ints.push(v.clone());
+        self.loop_depth += 1;
+        self.block_body(g, depth + 1);
+        if g.usize_range(0, 3) == 0 {
+            let at = g.usize_range(0, start - 1);
+            let kind = if g.bool() { "break" } else { "continue" };
+            self.line(&format!("if ({v} == {at}) {{ {kind}; }}"));
+        }
+        self.loop_depth -= 1;
+        self.ints.pop();
+        self.indent -= 1;
+        self.line("}");
+    }
+
+    fn call_stmt(&mut self, g: &mut Gen) {
+        if !self.array_helpers.is_empty() && g.bool() {
+            if let Some(pos) = self.pick_sized_array(g) {
+                let (name, len) = {
+                    let a = &self.arrays[pos];
+                    (a.name.clone(), a.len.unwrap())
+                };
+                let h = g.pick(&self.array_helpers).clone();
+                let n = g.usize_range(0, len);
+                self.line(&format!("{h}({name}, {n});"));
+                return;
+            }
+        }
+        if !self.scalar_helpers.is_empty() {
+            let h = g.pick(&self.scalar_helpers).clone();
+            let x = self.expr(g, 1);
+            let n = g.usize_range(0, 10);
+            let v = self.fresh();
+            self.line(&format!("float {v} = {h}({x}, {n});"));
+            self.floats.push(v);
+            return;
+        }
+        self.decl_scalar(g);
+    }
+
+    // ---- expressions ----
+
+    fn cond(&mut self, g: &mut Gen) -> String {
+        let a = self.expr(g, 1);
+        let b = self.expr(g, 1);
+        let cmp = *g.pick(&["<", "<=", ">", ">=", "==", "!="]);
+        let base = format!("({a} {cmp} {b})");
+        match g.usize_range(0, 4) {
+            0 => {
+                let c = self.cond_leaf(g);
+                format!("({base} && {c})")
+            }
+            1 => {
+                let c = self.cond_leaf(g);
+                format!("({base} || {c})")
+            }
+            _ => base,
+        }
+    }
+
+    fn cond_leaf(&mut self, g: &mut Gen) -> String {
+        let a = self.expr(g, 1);
+        let b = self.expr(g, 1);
+        let cmp = *g.pick(&["<", ">", "=="]);
+        format!("({a} {cmp} {b})")
+    }
+
+    fn expr(&mut self, g: &mut Gen, depth: usize) -> String {
+        if depth == 0 {
+            return self.leaf(g);
+        }
+        match g.usize_range(0, 9) {
+            0 | 1 => {
+                let a = self.expr(g, depth - 1);
+                let b = self.expr(g, depth - 1);
+                let op = *g.pick(&["+", "-", "*"]);
+                format!("({a} {op} {b})")
+            }
+            2 => {
+                let a = self.expr(g, depth - 1);
+                let b = self.divisor(g, depth - 1);
+                format!("({a} / {b})")
+            }
+            3 => {
+                let a = self.expr(g, depth - 1);
+                let b = self.divisor(g, depth - 1);
+                format!("({a} % {b})")
+            }
+            4 => {
+                let a = self.expr(g, depth - 1);
+                let cast = if g.bool() { "int" } else { "float" };
+                format!("(({cast})({a}))")
+            }
+            5 => {
+                let a = self.expr(g, depth - 1);
+                match g.usize_range(0, 3) {
+                    0 => format!("sqrtf(fabsf({a}))"),
+                    1 => format!("sinf({a})"),
+                    2 => format!("cosf({a})"),
+                    _ => {
+                        let p = g.usize_range(0, 3);
+                        format!("powf(fabsf({a}), {p}.0f)")
+                    }
+                }
+            }
+            6 => {
+                let a = self.expr(g, depth - 1);
+                if g.bool() {
+                    format!("(-{a})")
+                } else {
+                    format!("(!{a})")
+                }
+            }
+            7 => self.cond(g),
+            _ => self.leaf(g),
+        }
+    }
+
+    /// A divisor: usually a nonzero literal, occasionally an arbitrary
+    /// expression (keeps the divide-by-zero error path reachable).
+    fn divisor(&mut self, g: &mut Gen, depth: usize) -> String {
+        if g.usize_range(0, 9) < 9 {
+            let mag = g.i64_range(1, 9).max(1);
+            if g.bool() {
+                format!("{mag}")
+            } else {
+                format!("(-{mag})")
+            }
+        } else {
+            self.expr(g, depth)
+        }
+    }
+
+    fn leaf(&mut self, g: &mut Gen) -> String {
+        match g.usize_range(0, 5) {
+            0 => {
+                let v = g.i64_range(-20, 20);
+                if v < 0 {
+                    format!("({v})")
+                } else {
+                    format!("{v}")
+                }
+            }
+            1 => {
+                // Keep literals in plain decimal form for the lexer.
+                let v = (g.f64_range(-8.0, 8.0) * 1000.0).round() / 1000.0;
+                if v < 0.0 {
+                    format!("({v:?}f)")
+                } else {
+                    format!("{v:?}f")
+                }
+            }
+            2 | 3 => match self.pick_scalar(g) {
+                Some(v) => v,
+                None => "1".into(),
+            },
+            _ => match self.safe_load(g) {
+                Some(load) => load,
+                None => match self.pick_scalar(g) {
+                    Some(v) => v,
+                    None => "2.0f".into(),
+                },
+            },
+        }
+    }
+
+    // ---- scope queries ----
+
+    fn pick_scalar(&mut self, g: &mut Gen) -> Option<String> {
+        let n = self.ints.len() + self.floats.len();
+        if n == 0 {
+            return None;
+        }
+        let i = g.usize_range(0, n - 1);
+        Some(if i < self.ints.len() {
+            self.ints[i].clone()
+        } else {
+            self.floats[i - self.ints.len()].clone()
+        })
+    }
+
+    fn pick_sized_array(&mut self, g: &mut Gen) -> Option<usize> {
+        let sized: Vec<usize> = (0..self.arrays.len())
+            .filter(|&i| self.arrays[i].len.is_some())
+            .collect();
+        if sized.is_empty() {
+            return None;
+        }
+        Some(*g.pick(&sized))
+    }
+
+    /// An in-bounds `name[index]` pair, if any array + index is in scope.
+    fn safe_index(&mut self, g: &mut Gen) -> Option<(String, String)> {
+        if self.arrays.is_empty() {
+            return None;
+        }
+        let ai = g.usize_range(0, self.arrays.len() - 1);
+        let (name, len) = (self.arrays[ai].name.clone(), self.arrays[ai].len);
+        match len {
+            Some(len) => {
+                // Induction vars provably below the length, else a literal.
+                let fits: Vec<String> = self
+                    .ivars
+                    .iter()
+                    .filter(|(_, b)| matches!(b, Bound::Lit(k) if *k <= len))
+                    .map(|(v, _)| v.clone())
+                    .collect();
+                let idx = if !fits.is_empty() && g.bool() {
+                    g.pick(&fits).clone()
+                } else {
+                    format!("{}", g.usize_range(0, len - 1))
+                };
+                Some((name, idx))
+            }
+            None => {
+                // Helper array param: only `n`-bounded induction vars.
+                let fits: Vec<String> = self
+                    .ivars
+                    .iter()
+                    .filter(|(_, b)| *b == Bound::NParam)
+                    .map(|(v, _)| v.clone())
+                    .collect();
+                if fits.is_empty() {
+                    return None;
+                }
+                Some((name, g.pick(&fits).clone()))
+            }
+        }
+    }
+
+    fn safe_load(&mut self, g: &mut Gen) -> Option<String> {
+        let (name, idx) = self.safe_index(g)?;
+        Some(format!("{name}[{idx}]"))
+    }
+}
+
 fn panic_message(p: &Box<dyn std::any::Any + Send>) -> String {
     if let Some(s) = p.downcast_ref::<&str>() {
         s.to_string()

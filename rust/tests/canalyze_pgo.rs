@@ -1,0 +1,144 @@
+//! Differential tests for the lowered profiling interpreter
+//! (`canalyze::lower`, DESIGN.md §13) against the tree-walking reference
+//! (`canalyze::profile`): `ProfileData` and `printed` must be
+//! bit-identical — MeasureCache fingerprints, sched ledgers and
+//! funcblock detection all consume the profile downstream — and runtime
+//! errors (bounds, zero divisors, recursion depth, the step-limit
+//! runaway guard) must carry identical messages.
+
+use enadapt::canalyze::loops::extract_loops;
+use enadapt::canalyze::lower::profile_lowered;
+use enadapt::canalyze::parser::parse;
+use enadapt::canalyze::profile::profile;
+use enadapt::canalyze::{sem, ProfileLimits};
+use enadapt::util::prop::{c_program, run};
+use enadapt::workloads;
+
+/// Run both interpreters and require identical outcomes: bit-equal
+/// profiles on success, equal messages on error, never a mixed pair.
+fn assert_equivalent(name: &str, src: &str, limits: ProfileLimits) {
+    let prog = match parse(name, src) {
+        Ok(p) => p,
+        Err(e) => panic!("unparseable source ({e}):\n{src}"),
+    };
+    if let Err(e) = sem::check(name, &prog) {
+        panic!("sem-invalid source ({e}):\n{src}");
+    }
+    let table = extract_loops(&prog);
+    let tree = profile(&prog, &table, limits);
+    let lowered = profile_lowered(&prog, &table, limits);
+    match (tree, lowered) {
+        (Ok(t), Ok(l)) => {
+            assert!(
+                t.bits_eq(&l),
+                "profiles diverge on {name}:\n{src}\ntree:    {t:?}\nlowered: {l:?}"
+            );
+        }
+        (Err(te), Err(le)) => {
+            assert_eq!(
+                te.to_string(),
+                le.to_string(),
+                "error messages diverge on {name}:\n{src}"
+            );
+        }
+        (Ok(_), Err(le)) => panic!("tree-walker ok, lowered errs ({le}) on {name}:\n{src}"),
+        (Err(te), Ok(_)) => panic!("tree-walker errs ({te}), lowered ok on {name}:\n{src}"),
+    }
+}
+
+#[test]
+fn all_registered_workloads_are_bit_identical() {
+    for (name, src) in workloads::ALL {
+        let prog = parse(name, src).unwrap();
+        let table = extract_loops(&prog);
+        let t = profile(&prog, &table, ProfileLimits::default()).unwrap();
+        let l = profile_lowered(&prog, &table, ProfileLimits::default()).unwrap();
+        assert!(t.bits_eq(&l), "{name}: lowered profile diverges");
+        // `printed` is the program's observable output — pin it bitwise
+        // on its own so a bits_eq regression names the culprit.
+        let tp: Vec<u64> = t.printed.iter().map(|x| x.to_bits()).collect();
+        let lp: Vec<u64> = l.printed.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(tp, lp, "{name}: printed output diverges");
+    }
+}
+
+#[test]
+fn random_programs_are_bit_identical() {
+    run("lowered vs tree-walker on random programs", 80, |g| {
+        let src = c_program(g);
+        assert_equivalent("prop.c", &src, ProfileLimits::default());
+    });
+}
+
+#[test]
+fn random_programs_agree_under_tight_step_limits() {
+    // Random small step budgets drive the runaway guard through every
+    // batching boundary: both interpreters must trip at the same point
+    // with the same message, or both finish with bit-equal profiles.
+    run("step-limit equivalence on random programs", 80, |g| {
+        let src = c_program(g);
+        let max_steps = g.i64_range(1, 3_000) as u64;
+        assert_equivalent("prop.c", &src, ProfileLimits { max_steps, ..Default::default() });
+    });
+}
+
+#[test]
+fn mriq_step_limit_boundary_is_identical() {
+    let src = workloads::MRIQ_C;
+    let prog = parse("mriq.c", src).unwrap();
+    let table = extract_loops(&prog);
+    let n = profile(&prog, &table, ProfileLimits::default()).unwrap().steps;
+    // Exactly at the boundary both succeed with steps == n…
+    let at = ProfileLimits { max_steps: n, ..Default::default() };
+    let t = profile(&prog, &table, at).unwrap();
+    let l = profile_lowered(&prog, &table, at).unwrap();
+    assert_eq!(t.steps, n);
+    assert!(t.bits_eq(&l));
+    // …and one below it both fail with the identical runaway error.
+    let under = ProfileLimits { max_steps: n - 1, ..Default::default() };
+    let te = profile(&prog, &table, under).unwrap_err().to_string();
+    let le = profile_lowered(&prog, &table, under).unwrap_err().to_string();
+    assert_eq!(te, le);
+    assert!(te.contains("step limit exceeded"));
+}
+
+#[test]
+fn analyze_source_uses_the_lowered_profile() {
+    // The public pipeline profiles on the lowered interpreter; its output
+    // must equal the reference on a program exercising calls, arrays and
+    // both loop forms.
+    let src = "float dot(float *a, float *b, int n) {
+           float s = 0.0f;
+           for (int i = 0; i < n; i++) { s += a[i] * b[i]; }
+           return s;
+         }
+         int main() {
+           float x[24];
+           float y[24];
+           int i = 0;
+           while (i < 24) { x[i] = (float)i; y[i] = (float)(24 - i); i += 1; }
+           printf(\"%f\", dot(x, y, 24));
+           return 0;
+         }";
+    let an = enadapt::canalyze::analyze_source("dot.c", src).unwrap();
+    let got = an.profile.as_ref().unwrap();
+    let prog = parse("dot.c", src).unwrap();
+    let table = extract_loops(&prog);
+    let want = profile(&prog, &table, ProfileLimits::default()).unwrap();
+    assert!(want.bits_eq(got));
+    assert!(an.op_profile.is_none(), "op counting must be off by default");
+}
+
+#[test]
+fn op_histogram_rides_along_without_changing_the_profile() {
+    let limits = ProfileLimits { count_ops: true, ..Default::default() };
+    let an = enadapt::canalyze::analyze_source_with_limits("mriq.c", workloads::MRIQ_C, limits)
+        .unwrap();
+    let counted = an.profile.as_ref().unwrap();
+    let plain = enadapt::canalyze::analyze_source("mriq.c", workloads::MRIQ_C).unwrap();
+    assert!(plain.profile.as_ref().unwrap().bits_eq(counted));
+    let ops = an.op_profile.as_ref().expect("histogram requested");
+    assert!(ops.total() > 0);
+    assert!(!ops.top_ops(5).is_empty());
+    assert!(!ops.top_pairs(5).is_empty());
+}
