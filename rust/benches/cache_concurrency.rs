@@ -1,0 +1,335 @@
+//! Bench: sharded `MeasureCache` vs the legacy single-mutex cache under
+//! concurrent lookup load (DESIGN.md §14).
+//!
+//! Two phases per implementation and thread count:
+//!
+//! 1. **Correctness (always asserted)** — the threads concurrently warm
+//!    the same key set: the measure closure must run exactly once per
+//!    distinct key, and the hit + miss totals must be exact (every
+//!    non-first lookup a hit), never approximate.
+//! 2. **Throughput** — a fixed total of warm lookups over 256 distinct
+//!    keys is split across 1 / 4 / 16 threads, for the sharded store and
+//!    for an in-bench reimplementation of the pre-§14 cache (one global
+//!    `Mutex<HashMap>` in front of per-key slots — the exact lookup path
+//!    this crate shipped before sharding). The per-thread-count
+//!    lookups/sec series and the sharded-over-legacy speedup land in the
+//!    JSON result.
+//!
+//! Environment knobs (see BENCH_cache.json):
+//!
+//! * `CACHE_ASSERT=1` — enforce the speedup floor (sharded >= 2x legacy
+//!   lookups/sec at 16 threads). CI sets this; it stays opt-in because
+//!   the ratio is meaningless on single-core boxes where neither
+//!   implementation can overlap lookups.
+//!
+//! Emits a final JSON object on stdout for the perf dashboard.
+
+use enadapt::canalyze::LoopId;
+use enadapt::devices::{DeviceKind, TransferMode};
+use enadapt::power::{ComponentEnergy, EnergyReport, PowerTrace};
+use enadapt::util::benchkit::section;
+use enadapt::util::json::Json;
+use enadapt::util::measure_cache::{MeasureCache, MeasureKey};
+use enadapt::util::tablefmt::Table;
+use enadapt::verifier::{Measurement, PhaseKind, TrialBreakdown};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+const KEYS: usize = 256;
+const HAMMER_THREADS: usize = 8;
+/// Total warm lookups per timed point, split across the thread count so
+/// every point does the same amount of work.
+const TOTAL_LOOKUPS: usize = 1 << 18;
+
+type LegacySlot = Arc<Mutex<Option<Measurement>>>;
+
+/// The pre-sharding cache, reproduced as the baseline: every lookup —
+/// hit or miss — serializes on one global map mutex before reaching its
+/// per-key slot.
+#[derive(Default)]
+struct LegacyCache {
+    map: Mutex<HashMap<MeasureKey, LegacySlot>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl LegacyCache {
+    fn get_or_measure(
+        &self,
+        key: MeasureKey,
+        measure: impl FnOnce() -> Measurement,
+    ) -> (Measurement, bool) {
+        let slot = {
+            let mut map = self.map.lock().unwrap();
+            Arc::clone(map.entry(key).or_default())
+        };
+        let mut guard = slot.lock().unwrap();
+        match &*guard {
+            Some(m) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                (m.clone(), true)
+            }
+            None => {
+                let m = measure();
+                *guard = Some(m.clone());
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                (m, false)
+            }
+        }
+    }
+}
+
+fn fixture(time_s: f64) -> Measurement {
+    Measurement {
+        app: "t.c".into(),
+        device: DeviceKind::Fpga,
+        pattern: vec![true],
+        regions: vec![LoopId(0)],
+        time_s,
+        mean_w: 111.0,
+        energy_ws: time_s * 111.0,
+        trace: PowerTrace::default(),
+        report: EnergyReport {
+            meter: "oracle".into(),
+            sample_hz: 0.0,
+            time_s,
+            energy_ws: time_s * 111.0,
+            mean_w: 111.0,
+            peak_w: 125.0,
+            profile_peak_w: 125.0,
+            components: ComponentEnergy {
+                idle_ws: time_s * 105.0,
+                host_cpu_ws: time_s * 2.0,
+                accelerator_ws: time_s * 3.0,
+                transfer_ws: time_s * 1.0,
+            },
+        },
+        timed_out: false,
+        failure: None,
+        breakdown: TrialBreakdown::default(),
+        phase: PhaseKind::Verification,
+    }
+}
+
+fn keys() -> Vec<MeasureKey> {
+    (0..KEYS as u64)
+        .map(|env| MeasureKey {
+            app_hash: 7,
+            pattern: vec![env % 2 == 0],
+            plan: env / 2,
+            device: DeviceKind::Fpga,
+            xfer: TransferMode::Batched,
+            env_fingerprint: env,
+        })
+        .collect()
+}
+
+/// A cache under test, erased to a lookup closure plus counter readers.
+/// `lookup` must bump `evals` once per measure-closure execution.
+struct UnderTest<'a> {
+    name: &'static str,
+    lookup: &'a (dyn Fn(MeasureKey) -> (Measurement, bool) + Sync),
+    totals: &'a dyn Fn() -> (u64, u64),
+    evals: &'a AtomicUsize,
+}
+
+/// Concurrently warm the cache — every thread looks up every key once —
+/// then assert measure-once and exact totals. These assertions run
+/// unconditionally, at every thread count, for both implementations.
+fn warm_and_assert(cache: &UnderTest, ks: &[MeasureKey], threads: usize) {
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let lookup = cache.lookup;
+            s.spawn(move || {
+                for i in 0..ks.len() {
+                    // Rotate the start per thread so racers collide on
+                    // different keys at the same moment.
+                    let k = ks[(i + t * 17) % ks.len()].clone();
+                    let (m, _) = lookup(k);
+                    assert_eq!(m.time_s, 2.0);
+                }
+            });
+        }
+    });
+    let (hits, misses) = (cache.totals)();
+    assert_eq!(
+        cache.evals.load(Ordering::SeqCst),
+        ks.len(),
+        "{}: measure-once violated",
+        cache.name
+    );
+    assert_eq!(
+        misses as usize,
+        ks.len(),
+        "{}: one miss per distinct key",
+        cache.name
+    );
+    assert_eq!(
+        hits as usize,
+        threads * ks.len() - ks.len(),
+        "{}: every non-first lookup must be a hit — totals exact",
+        cache.name
+    );
+}
+
+/// Timed phase: `TOTAL_LOOKUPS` warm lookups split across `threads`.
+/// Returns lookups/sec. Asserts the counters moved by exactly the lookup
+/// count, all hits (totals stay exact under contention, not approximate).
+fn timed_lookups(cache: &UnderTest, ks: &[MeasureKey], threads: usize) -> f64 {
+    let per_thread = TOTAL_LOOKUPS / threads;
+    let (hits0, misses0) = (cache.totals)();
+    let start = Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let lookup = cache.lookup;
+            let name = cache.name;
+            s.spawn(move || {
+                let mut acc = 0.0f64;
+                for i in 0..per_thread {
+                    let k = ks[(i + t * 17) % ks.len()].clone();
+                    let (m, hit) = lookup(k);
+                    assert!(hit, "{name}: warm lookup missed");
+                    acc += m.time_s;
+                }
+                std::hint::black_box(acc);
+            });
+        }
+    });
+    let wall_s = start.elapsed().as_secs_f64();
+    let (hits1, misses1) = (cache.totals)();
+    assert_eq!(
+        hits1 - hits0,
+        (per_thread * threads) as u64,
+        "{}: hit total must move by exactly the lookup count",
+        cache.name
+    );
+    assert_eq!(
+        misses1, misses0,
+        "{}: warm phase must not miss",
+        cache.name
+    );
+    (per_thread * threads) as f64 / wall_s.max(1e-9)
+}
+
+/// Run warm + timed for both implementations at one thread count.
+/// Returns (sharded lookups/s, legacy lookups/s).
+fn point(ks: &[MeasureKey], threads: usize) -> (f64, f64) {
+    let sharded = MeasureCache::new();
+    let sharded_evals = AtomicUsize::new(0);
+    let sharded_lookup = |k: MeasureKey| {
+        sharded.get_or_measure(k, || {
+            sharded_evals.fetch_add(1, Ordering::SeqCst);
+            fixture(2.0)
+        })
+    };
+    let sharded_totals = || (sharded.hits(), sharded.misses());
+    let under = UnderTest {
+        name: "sharded",
+        lookup: &sharded_lookup,
+        totals: &sharded_totals,
+        evals: &sharded_evals,
+    };
+    warm_and_assert(&under, ks, threads);
+    let sharded_lps = timed_lookups(&under, ks, threads);
+
+    let legacy = LegacyCache::default();
+    let legacy_evals = AtomicUsize::new(0);
+    let legacy_lookup = |k: MeasureKey| {
+        legacy.get_or_measure(k, || {
+            legacy_evals.fetch_add(1, Ordering::SeqCst);
+            fixture(2.0)
+        })
+    };
+    let legacy_totals = || {
+        (
+            legacy.hits.load(Ordering::Relaxed),
+            legacy.misses.load(Ordering::Relaxed),
+        )
+    };
+    let under = UnderTest {
+        name: "legacy",
+        lookup: &legacy_lookup,
+        totals: &legacy_totals,
+        evals: &legacy_evals,
+    };
+    warm_and_assert(&under, ks, threads);
+    let legacy_lps = timed_lookups(&under, ks, threads);
+
+    (sharded_lps, legacy_lps)
+}
+
+fn main() {
+    let enforce = std::env::var("CACHE_ASSERT").as_deref() == Ok("1");
+    let ks = keys();
+
+    println!("=== cache_concurrency: sharded MeasureCache vs legacy single-mutex ===\n");
+
+    section(&format!(
+        "correctness: {HAMMER_THREADS} threads x {KEYS} colliding keys, both implementations"
+    ));
+    point(&ks, HAMMER_THREADS);
+    println!("ok: measure-once held and hit+miss totals were exact on both implementations");
+
+    section(&format!(
+        "throughput: {TOTAL_LOOKUPS} warm lookups over {KEYS} keys at 1/4/16 threads"
+    ));
+    let mut table = Table::new(&[
+        "threads",
+        "sharded [lookups/s]",
+        "legacy [lookups/s]",
+        "speedup",
+    ]);
+    let mut series = Vec::new();
+    let mut speedup_at_16 = 0.0;
+    for threads in [1usize, 4, 16] {
+        let (sharded_lps, legacy_lps) = point(&ks, threads);
+        let speedup = sharded_lps / legacy_lps.max(1e-9);
+        if threads == 16 {
+            speedup_at_16 = speedup;
+        }
+        table.row(&[
+            threads.to_string(),
+            format!("{sharded_lps:.0}"),
+            format!("{legacy_lps:.0}"),
+            format!("{speedup:.2}x"),
+        ]);
+        series.push(Json::obj(vec![
+            ("threads", Json::num(threads as f64)),
+            ("sharded_lookups_per_s", Json::num(sharded_lps)),
+            ("legacy_lookups_per_s", Json::num(legacy_lps)),
+            ("speedup", Json::num(speedup)),
+            ("hit_rate", Json::num(1.0)),
+        ]));
+    }
+    println!("{}", table.render());
+
+    if enforce {
+        assert!(
+            speedup_at_16 >= 2.0,
+            "sharded cache is only {speedup_at_16:.2}x the single-mutex baseline at 16 \
+             threads — under the 2x BENCH_cache.json floor"
+        );
+        println!("ok: {speedup_at_16:.2}x >= 2x speedup floor at 16 threads");
+    } else {
+        println!("(CACHE_ASSERT unset: speedup floor reported, not enforced)");
+    }
+
+    section("machine-readable result");
+    println!(
+        "{}",
+        Json::obj(vec![
+            ("bench", Json::str("cache_concurrency")),
+            ("keys", Json::num(KEYS as f64)),
+            ("total_lookups", Json::num(TOTAL_LOOKUPS as f64)),
+            ("series", Json::arr(series)),
+            ("speedup_at_16", Json::num(speedup_at_16)),
+            (
+                "correctness",
+                Json::str("measure-once + exact totals asserted"),
+            ),
+        ])
+        .to_string_pretty()
+    );
+}

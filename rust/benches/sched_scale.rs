@@ -15,7 +15,8 @@
 //! (`legacy_loop`) is run too and its JSON report asserted bit-identical
 //! to the event engine's — the equivalence contract of BENCH_sched.json.
 //! A federated `--clusters 4` point exercises the sharded coordinator at
-//! the 100k scale.
+//! the 100k scale, serially and with `--parallel-clusters`, asserting the
+//! two reports byte-identical.
 //!
 //! Environment knobs (CI smoke uses both):
 //!
@@ -189,20 +190,42 @@ fn main() {
     }
 
     // Federation point: the same drifting trace sharded across 4
-    // clusters with the Watt budget rebalanced by probed demand.
+    // clusters with the Watt budget rebalanced by probed demand — run
+    // serially and then with parallel clusters, asserted byte-identical
+    // (the --parallel-clusters contract of BENCH_sched.json).
     let mut federated = Json::Null;
     if max_arrivals >= 100_000 {
-        section("federated sweep point (100k arrivals, --clusters 4)");
+        section("federated sweep point (100k arrivals, --clusters 4, serial vs parallel)");
         let trace = drifting_trace(100_000);
         let fcfg = FederationConfig {
             base: sweep_config(),
             clusters: 4,
             shard_seed: 1,
+            ..Default::default()
         };
         let start = Instant::now();
         let report = run_federated(&trace, &fcfg).expect("federated run");
         let wall_s = start.elapsed().as_secs_f64();
+        let par_cfg = FederationConfig {
+            parallel: true,
+            ..fcfg
+        };
+        let par_start = Instant::now();
+        let par_report = run_federated(&trace, &par_cfg).expect("parallel federated run");
+        let par_wall_s = par_start.elapsed().as_secs_f64();
+        assert_eq!(
+            report.to_json().to_string_compact(),
+            par_report.to_json().to_string_compact(),
+            "parallel clusters changed the federation report"
+        );
         println!("{}", report.table());
+        println!(
+            "parallel clusters: identical report, wall {:.1} ms vs {:.1} ms serial \
+             ({:.2}x)\n",
+            par_wall_s * 1e3,
+            wall_s * 1e3,
+            wall_s / par_wall_s.max(1e-9)
+        );
         federated = Json::obj(vec![
             ("arrivals", Json::num(100_000.0)),
             ("clusters", Json::num(4.0)),
@@ -213,6 +236,8 @@ fn main() {
                 "arrivals_per_s",
                 Json::num(100_000.0 / wall_s.max(1e-9)),
             ),
+            ("parallel_wall_s", Json::num(par_wall_s)),
+            ("parallel_identical", Json::Bool(true)),
             ("jobs_ws", Json::num(report.production.total_ws())),
             ("counterfactual_ws", Json::num(report.counterfactual_ws)),
             ("reduction", Json::num(report.jobs_reduction())),

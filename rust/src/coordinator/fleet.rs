@@ -53,6 +53,12 @@ pub struct FleetConfig {
     /// the run when it exists, saved after — repeated CLI invocations
     /// deduplicate trials across processes.
     pub cache_path: Option<PathBuf>,
+    /// Optional append-only measurement log: existing records are
+    /// replayed on start and every completed measurement is appended +
+    /// flushed as it lands, so a fleet of searcher processes pools trials
+    /// without waiting for a clean exit. Compact it back into the
+    /// snapshot with `enadapt cache compact`.
+    pub cache_log: Option<PathBuf>,
     /// Share the measurement cache across jobs (on by default; off gives
     /// the exact serial trial counts, for A/B measurement).
     pub share_cache: bool,
@@ -72,6 +78,7 @@ impl Default for FleetConfig {
             },
             workers: 0,
             cache_path: None,
+            cache_log: None,
             share_cache: true,
         }
     }
@@ -383,6 +390,9 @@ pub fn run_fleet(specs: &[FleetSpec], cfg: &FleetConfig) -> Result<FleetReport> 
         Some(p) if p.exists() => MeasureCache::load(p)?,
         _ => MeasureCache::new(),
     });
+    if let Some(lp) = &cfg.cache_log {
+        cache.attach_log(lp)?;
+    }
     let preloaded = cache.len();
 
     let workers = if cfg.workers == 0 {

@@ -98,7 +98,10 @@ impl EventSim {
         let m = match self.memo.get(&mkey) {
             Some(m) => {
                 // The production + baseline lookups a fresh preparation
-                // would have made were both guaranteed cache hits.
+                // would have made were both guaranteed cache hits. Credited
+                // to this run's own cache (a per-run recording view under
+                // the parallel federation), where the serial-order counter
+                // reconstruction of DESIGN.md §14 accounts for it exactly.
                 self.core.cache.note_hits(2);
                 Arc::clone(m)
             }

@@ -2,7 +2,7 @@
 //! across N clusters, a global coordinator rebalancing the fleet Watt
 //! budget, and the per-cluster ledgers merged into one federation report.
 //!
-//! Semantics (DESIGN.md §12):
+//! Semantics (DESIGN.md §12, §14):
 //!
 //! * **Sharding** — each arrival is assigned to a cluster by one
 //!   [`Pcg32`] draw seeded from `shard_seed`, consumed in trace order, so
@@ -15,11 +15,23 @@
 //!   probe its demand (its peak committed Watts, floored at its chassis
 //!   idle), then splits every cap in proportion to demand:
 //!   `share_c = demand_c / Σ demand`. The probe is itself deterministic,
-//!   so the shares — and therefore the capped runs — are too.
+//!   so the shares — and therefore the capped runs — are too. With
+//!   `rebalance_at_caps`, the trace is additionally cut into segments at
+//!   its cap events and demand is re-probed per segment (arrivals from
+//!   the segment start onward), so each cap is split by the demand of the
+//!   epoch it governs rather than one up-front whole-trace probe.
+//! * **Parallelism** — with `parallel`, the probe and cluster runs
+//!   execute concurrently on [`crate::util::pool::scoped_map`] against
+//!   the shared sharded cache. Every run gets a *recording view* of the
+//!   cache ([`MeasureCache::fork_recording`]); afterwards the coordinator
+//!   replays the views' key sets in serial cluster order to reconstruct
+//!   the exact hit/miss/entry numbers the serial path reports, so the
+//!   emitted [`SchedReport`] JSON is byte-identical either way
+//!   (asserted in `tests/sched.rs`).
 //! * **Merging** — cluster ledgers are summed (energies, admissions,
-//!   searches), the horizon is the latest cluster's, and cache statistics
-//!   are read once from the shared cache, exactly as a single-cluster run
-//!   reports them.
+//!   searches) in cluster order, the horizon is the latest cluster's, and
+//!   cache statistics are the reconstructed totals, exactly as a
+//!   single-cluster run reports them.
 //!
 //! With `clusters = 1` the share is exactly `demand / demand = 1.0`, so
 //! every cap is scaled by 1.0 (bit-exact) and the single cluster's ledger
@@ -29,10 +41,11 @@
 use super::{run_sched_with_cache, Arrival, ArrivalTrace, SchedConfig, SchedReport, TraceEvent};
 use crate::power::{ComponentEnergy, IdleLedger};
 use crate::util::json::Json;
-use crate::util::measure_cache::MeasureCache;
+use crate::util::measure_cache::{MeasureCache, MeasureKey};
 use crate::util::prng::Pcg32;
 use crate::util::tablefmt::Table;
 use crate::{Error, Result};
+use std::collections::HashSet;
 use std::sync::Arc;
 
 /// Federation configuration: the per-cluster scheduler config plus the
@@ -47,6 +60,13 @@ pub struct FederationConfig {
     pub clusters: usize,
     /// Seed for the arrival-to-cluster assignment.
     pub shard_seed: u64,
+    /// Run probe and cluster simulations concurrently on the process
+    /// thread pool. Output is byte-identical to the serial path — this
+    /// trades threads for wall clock, nothing else.
+    pub parallel: bool,
+    /// Re-probe demand and re-split the Watt budget at every trace cap
+    /// event (per-segment shares) instead of the single up-front probe.
+    pub rebalance_at_caps: bool,
 }
 
 impl Default for FederationConfig {
@@ -55,6 +75,8 @@ impl Default for FederationConfig {
             base: SchedConfig::default(),
             clusters: 1,
             shard_seed: 0,
+            parallel: false,
+            rebalance_at_caps: false,
         }
     }
 }
@@ -64,7 +86,8 @@ impl Default for FederationConfig {
 pub struct ClusterLedger {
     /// Cluster index (the shard id arrivals were assigned to).
     pub cluster: usize,
-    /// Demand share of the fleet Watt budget in [0, 1].
+    /// Demand share of the fleet Watt budget in [0, 1] (the first
+    /// segment's share when rebalancing at cap events).
     pub share: f64,
     /// The cluster's scaled initial Watt cap (`None` = uncapped).
     pub cap_w: Option<f64>,
@@ -249,14 +272,53 @@ fn shard_assignment(trace: &ArrivalTrace, clusters: usize, shard_seed: u64) -> V
         .collect()
 }
 
+/// Cluster `c`'s demand-probe shard: its assigned arrivals from `from_s`
+/// onward (original arrival times kept), caps stripped entirely.
+fn probe_shard(
+    trace: &ArrivalTrace,
+    assignment: &[usize],
+    c: usize,
+    from_s: f64,
+) -> ArrivalTrace {
+    let mut events = Vec::new();
+    let mut ai = 0;
+    for e in &trace.events {
+        match e {
+            TraceEvent::Arrival(a) => {
+                if assignment[ai] == c && a.at_s >= from_s {
+                    events.push(TraceEvent::Arrival(Arrival {
+                        at_s: a.at_s,
+                        workload: a.workload.clone(),
+                        destination: a.destination,
+                        scale: a.scale,
+                    }));
+                }
+                ai += 1;
+            }
+            // Probe: caps stripped entirely.
+            TraceEvent::SetCap { .. } => {}
+        }
+    }
+    ArrivalTrace { events }
+}
+
+/// Segment index of time `t` in `seg_starts` (sorted, starting at 0.0):
+/// the last segment whose start is ≤ `t`, so a cap event sitting exactly
+/// on a segment boundary is scaled by the share of the epoch it opens.
+fn seg_index(seg_starts: &[f64], t: f64) -> usize {
+    seg_starts.partition_point(|s| *s <= t).saturating_sub(1)
+}
+
 /// Build cluster `c`'s shard: its assigned arrivals plus every cap event
-/// with the cap scaled by `cap_scale` (demand share). Event order — and
-/// therefore per-cluster determinism — is inherited from the trace.
+/// with the cap scaled by the demand share of the segment the event falls
+/// in (`scales[i]` covers `seg_starts[i]..`). Event order — and therefore
+/// per-cluster determinism — is inherited from the trace.
 fn shard_trace(
     trace: &ArrivalTrace,
     assignment: &[usize],
     c: usize,
-    cap_scale: Option<f64>,
+    seg_starts: &[f64],
+    scales: &[f64],
 ) -> ArrivalTrace {
     let mut events = Vec::new();
     let mut ai = 0;
@@ -273,23 +335,75 @@ fn shard_trace(
                 }
                 ai += 1;
             }
-            TraceEvent::SetCap { at_s, cap_w } => match cap_scale {
-                Some(s) => events.push(TraceEvent::SetCap {
+            TraceEvent::SetCap { at_s, cap_w } => {
+                let s = scales[seg_index(seg_starts, *at_s)];
+                events.push(TraceEvent::SetCap {
                     at_s: *at_s,
                     cap_w: cap_w.map(|w| w * s),
-                }),
-                // Probe phase: caps stripped entirely.
-                None => {}
-            },
+                });
+            }
         }
     }
     ArrivalTrace { events }
 }
 
+/// One simulation to run against the shared cache: its trace, its config
+/// and its private recording view of the cache.
+type RunInput = (ArrivalTrace, SchedConfig, Arc<MeasureCache>);
+
+/// Run a batch of cluster simulations, serially or concurrently on the
+/// process thread pool. Results come back in input order either way; in
+/// parallel mode the first error in input order wins (matching which
+/// error the serial path would surface).
+fn run_batch(inputs: &[RunInput], parallel: bool) -> Result<Vec<SchedReport>> {
+    if parallel && inputs.len() > 1 {
+        let workers = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(2)
+            .min(inputs.len());
+        crate::util::pool::scoped_map(workers, inputs, |(t, c, view)| {
+            run_sched_with_cache(t, c, Arc::clone(view))
+        })
+        .into_iter()
+        .collect()
+    } else {
+        inputs
+            .iter()
+            .map(|(t, c, view)| run_sched_with_cache(t, c, Arc::clone(view)))
+            .collect()
+    }
+}
+
+/// Fold one run's recording view into the serial-order reconstruction:
+/// keys this view looked up that no earlier-ordered run (or the preload)
+/// completed are the misses the serial path would have charged this run;
+/// everything else it looked up (plus its `note_hits` credits) would have
+/// been hits. Exact because per-view lookup totals and key sets are
+/// interleaving-invariant — the simulation never branches on cache state,
+/// and measurements are pure functions of their key.
+fn fold_view(
+    view: &MeasureCache,
+    seen: &mut HashSet<MeasureKey>,
+    cum_hits: &mut u64,
+    cum_misses: &mut u64,
+) {
+    let lookups_and_credits = view.hits() + view.misses();
+    let mut fresh = 0u64;
+    for k in view.recorded_keys() {
+        if seen.insert(k) {
+            fresh += 1;
+        }
+    }
+    *cum_misses += fresh;
+    // Cannot underflow: every fresh key took at least one lookup in this
+    // view, and lookups_and_credits ≥ the view's lookups ≥ fresh.
+    *cum_hits += lookups_and_credits - fresh;
+}
+
 /// Run a federated fleet: shard, (optionally) probe demand to split the
 /// Watt budget, run every cluster through one shared measurement cache,
 /// and merge the ledgers. A pure function of `(trace, config)` — run it
-/// twice, get the identical report.
+/// twice, get the identical report; flip `parallel`, still identical.
 pub fn run_federated(trace: &ArrivalTrace, cfg: &FederationConfig) -> Result<FederationReport> {
     if cfg.clusters == 0 {
         return Err(Error::Config("federation: need at least one cluster".into()));
@@ -301,7 +415,11 @@ pub fn run_federated(trace: &ArrivalTrace, cfg: &FederationConfig) -> Result<Fed
         Some(p) if p.exists() => MeasureCache::load(p)?,
         _ => MeasureCache::new(),
     });
-    let preloaded = cache.len();
+    if let Some(lp) = &cfg.base.cache_log {
+        cache.attach_log(lp)?;
+    }
+    let preload_keys = cache.completed_keys();
+    let preloaded = preload_keys.len();
     let n = cfg.clusters;
     let assignment = shard_assignment(trace, n, cfg.shard_seed);
     let cluster_floor_w: f64 = cfg.base.nodes.iter().map(|s| s.chassis_idle_w).sum();
@@ -313,54 +431,90 @@ pub fn run_federated(trace: &ArrivalTrace, cfg: &FederationConfig) -> Result<Fed
             .iter()
             .any(|e| matches!(e, TraceEvent::SetCap { cap_w: Some(_), .. }));
 
-    // Phase 1 (probe): run each shard uncapped to learn its demand —
-    // its peak committed Watts, floored at the chassis idle it would pay
-    // anyway. Probe measurements land in the shared cache, so the capped
-    // runs replay them for free.
-    let shares: Vec<f64> = if has_caps && n > 1 {
-        let mut demand = Vec::with_capacity(n);
-        for c in 0..n {
-            let probe_trace = shard_trace(trace, &assignment, c, None);
-            let mut probe_cfg = cfg.base.clone();
-            probe_cfg.fleet_watt_cap = None;
-            probe_cfg.cache_path = None;
-            let r = run_sched_with_cache(&probe_trace, &probe_cfg, Arc::clone(&cache))?;
-            demand.push(r.peak_committed_w.max(cluster_floor_w));
+    // Segment starts: [0.0] normally; with `rebalance_at_caps`, every
+    // cap event opens a new probe epoch (demand is re-probed from that
+    // time onward). A single segment makes the whole pipeline below
+    // reduce exactly to the classic one-probe path.
+    let seg_starts: Vec<f64> = if has_caps && n > 1 && cfg.rebalance_at_caps {
+        let mut cap_times: Vec<f64> = trace
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                TraceEvent::SetCap { at_s, .. } => Some(*at_s),
+                _ => None,
+            })
+            .collect();
+        cap_times.sort_by(|a, b| a.partial_cmp(b).expect("cap times are finite"));
+        let mut starts = vec![0.0];
+        for t in cap_times {
+            if t > *starts.last().unwrap() {
+                starts.push(t);
+            }
         }
-        let total: f64 = demand.iter().sum();
-        if total > 0.0 {
-            demand.iter().map(|d| d / total).collect()
-        } else {
-            vec![1.0 / n as f64; n]
+        starts
+    } else {
+        vec![0.0]
+    };
+
+    // Phase 1 (probe): run each cluster's shard uncapped, per segment, to
+    // learn its demand — its peak committed Watts, floored at the chassis
+    // idle it would pay anyway. Probe measurements land in the shared
+    // cache, so the capped runs replay them for free. `shares[s][c]` is
+    // cluster c's slice of any cap falling in segment s.
+    let mut probe_runs: Vec<RunInput> = Vec::new();
+    let shares: Vec<Vec<f64>> = if has_caps && n > 1 {
+        for &from_s in &seg_starts {
+            for c in 0..n {
+                let probe_trace = probe_shard(trace, &assignment, c, from_s);
+                let mut probe_cfg = cfg.base.clone();
+                probe_cfg.fleet_watt_cap = None;
+                probe_cfg.cache_path = None;
+                probe_cfg.cache_log = None;
+                probe_runs.push((probe_trace, probe_cfg, Arc::new(cache.fork_recording())));
+            }
         }
+        let probe_reports = run_batch(&probe_runs, cfg.parallel)?;
+        probe_reports
+            .chunks(n)
+            .map(|seg| {
+                let demand: Vec<f64> = seg
+                    .iter()
+                    .map(|r| r.peak_committed_w.max(cluster_floor_w))
+                    .collect();
+                let total: f64 = demand.iter().sum();
+                if total > 0.0 {
+                    demand.iter().map(|d| d / total).collect()
+                } else {
+                    vec![1.0 / n as f64; n]
+                }
+            })
+            .collect()
     } else if has_caps {
         // One cluster owns the whole budget: share exactly 1.0, so the
         // scaled caps are bit-identical to the unfederated ones.
-        vec![1.0; n]
+        vec![vec![1.0; n]]
     } else {
-        vec![1.0 / n as f64; n]
+        vec![vec![1.0 / n as f64; n]]
     };
 
-    // Phase 2: the real runs, caps scaled by demand share, sequentially
-    // in cluster order over the shared cache (deterministic hit/miss
-    // interleaving).
-    let mut clusters = Vec::with_capacity(n);
-    for (c, share) in shares.iter().copied().enumerate() {
-        let cap_scale = if has_caps { share } else { 1.0 };
-        let run_trace = shard_trace(trace, &assignment, c, Some(cap_scale));
+    // Phase 2: the real runs, caps scaled by demand share (per segment
+    // when rebalancing), each against its own recording view of the
+    // shared cache.
+    let mut run_inputs: Vec<RunInput> = Vec::with_capacity(n);
+    for c in 0..n {
+        let seg_scales: Vec<f64> = if has_caps {
+            shares.iter().map(|seg| seg[c]).collect()
+        } else {
+            vec![1.0; seg_starts.len()]
+        };
+        let run_trace = shard_trace(trace, &assignment, c, &seg_starts, &seg_scales);
         let mut run_cfg = cfg.base.clone();
-        run_cfg.fleet_watt_cap = cfg.base.fleet_watt_cap.map(|w| w * cap_scale);
+        run_cfg.fleet_watt_cap = cfg.base.fleet_watt_cap.map(|w| w * seg_scales[0]);
         run_cfg.cache_path = None;
-        let cap_w = run_cfg.fleet_watt_cap;
-        let report = run_sched_with_cache(&run_trace, &run_cfg, Arc::clone(&cache))?;
-        clusters.push(ClusterLedger {
-            cluster: c,
-            share,
-            cap_w,
-            arrivals: run_trace.arrivals(),
-            report,
-        });
+        run_cfg.cache_log = None;
+        run_inputs.push((run_trace, run_cfg, Arc::new(cache.fork_recording())));
     }
+    let reports = run_batch(&run_inputs, cfg.parallel)?;
 
     if let Some(p) = &cfg.base.cache_path {
         if let Err(e) = cache.save(p) {
@@ -369,6 +523,35 @@ pub fn run_federated(trace: &ArrivalTrace, cfg: &FederationConfig) -> Result<Fed
                 p.display()
             );
         }
+    }
+
+    // Reconstruct the serial-order cache counters from the recording
+    // views: probes fold first (segment-major, then cluster order — the
+    // order the serial path executes them), then each capped run in
+    // cluster order, overwriting the per-cluster report's cache stats
+    // with the cumulative values the shared serial counters would have
+    // shown at that point.
+    let mut seen: HashSet<MeasureKey> = preload_keys.into_iter().collect();
+    let mut cum_hits = 0u64;
+    let mut cum_misses = 0u64;
+    for (_, _, view) in &probe_runs {
+        fold_view(view, &mut seen, &mut cum_hits, &mut cum_misses);
+    }
+    let mut clusters = Vec::with_capacity(n);
+    for (c, mut report) in reports.into_iter().enumerate() {
+        let entries_before = seen.len();
+        fold_view(&run_inputs[c].2, &mut seen, &mut cum_hits, &mut cum_misses);
+        report.cache_hits = cum_hits;
+        report.cache_misses = cum_misses;
+        report.cache_entries = seen.len();
+        report.cache_preloaded = entries_before;
+        clusters.push(ClusterLedger {
+            cluster: c,
+            share: shares[0][c],
+            cap_w: run_inputs[c].1.fleet_watt_cap,
+            arrivals: run_inputs[c].0.arrivals(),
+            report,
+        });
     }
 
     // Merge.
@@ -386,9 +569,9 @@ pub fn run_federated(trace: &ArrivalTrace, cfg: &FederationConfig) -> Result<Fed
         accel_idle: IdleLedger::default(),
         searches: 0,
         search_cost_s: 0.0,
-        cache_hits: cache.hits(),
-        cache_misses: cache.misses(),
-        cache_entries: cache.len(),
+        cache_hits: cum_hits,
+        cache_misses: cum_misses,
+        cache_entries: seen.len(),
         cache_preloaded: preloaded,
     };
     for c in &clusters {
@@ -437,8 +620,8 @@ mod tests {
         )
         .unwrap();
         let assignment = vec![0, 1, 0];
-        let t0 = shard_trace(&trace, &assignment, 0, Some(0.5));
-        let t1 = shard_trace(&trace, &assignment, 1, Some(0.5));
+        let t0 = shard_trace(&trace, &assignment, 0, &[0.0], &[0.5]);
+        let t1 = shard_trace(&trace, &assignment, 1, &[0.0], &[0.5]);
         assert_eq!(t0.arrivals(), 2);
         assert_eq!(t1.arrivals(), 1);
         // Both shards carry the cap event, scaled.
@@ -454,11 +637,44 @@ mod tests {
             assert_eq!(cap, Some(200.0));
         }
         // Probe shards strip caps entirely.
-        let probe = shard_trace(&trace, &assignment, 0, None);
+        let probe = probe_shard(&trace, &assignment, 0, 0.0);
         assert!(probe
             .events
             .iter()
             .all(|e| matches!(e, TraceEvent::Arrival(_))));
+        assert_eq!(probe.arrivals(), 2);
+        // A later probe epoch keeps only arrivals from its start onward.
+        let late = probe_shard(&trace, &assignment, 0, 2.0);
+        assert_eq!(late.arrivals(), 1, "only the t=3 arrival remains");
+    }
+
+    #[test]
+    fn cap_events_scale_by_their_own_segment_share() {
+        let trace = ArrivalTrace::parse(
+            "0 mriq fpga\n2 cap 400\n3 mriq fpga\n5 cap 100\n",
+        )
+        .unwrap();
+        let assignment = vec![0, 0];
+        // Segments [0,2), [2,5), [5,∞) with distinct scales: each cap is
+        // scaled by the epoch it *opens* (boundary belongs to the new
+        // segment), not the one before it.
+        let seg_starts = [0.0, 2.0, 5.0];
+        let scales = [0.5, 0.25, 0.75];
+        let t = shard_trace(&trace, &assignment, 0, &seg_starts, &scales);
+        let caps: Vec<Option<f64>> = t
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                TraceEvent::SetCap { cap_w, .. } => Some(*cap_w),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(caps, vec![Some(100.0), Some(75.0)]);
+        assert_eq!(seg_index(&seg_starts, 0.0), 0);
+        assert_eq!(seg_index(&seg_starts, 1.9), 0);
+        assert_eq!(seg_index(&seg_starts, 2.0), 1);
+        assert_eq!(seg_index(&seg_starts, 4.0), 1);
+        assert_eq!(seg_index(&seg_starts, 99.0), 2);
     }
 
     #[test]

@@ -319,6 +319,11 @@ pub struct SchedConfig {
     pub drift_tolerance: f64,
     /// Optional JSON persistence for the shared measurement cache.
     pub cache_path: Option<PathBuf>,
+    /// Optional append-only measurement log: existing records are
+    /// replayed on start (pooling trials across searcher invocations) and
+    /// each completed measurement is appended + flushed as it lands. Fold
+    /// it back into the snapshot with `enadapt cache compact`.
+    pub cache_log: Option<PathBuf>,
     /// Run the retained time-stepped reference loop instead of the
     /// event-driven engine. Both produce the same report bit for bit
     /// (asserted in `tests/sched.rs`); the reference loop exists for that
@@ -335,6 +340,7 @@ impl Default for SchedConfig {
             idle_policy: IdlePolicy::default(),
             drift_tolerance: 0.25,
             cache_path: None,
+            cache_log: None,
             legacy_loop: false,
         }
     }
@@ -751,6 +757,9 @@ pub fn run_sched(trace: &ArrivalTrace, cfg: &SchedConfig) -> Result<SchedReport>
         Some(p) if p.exists() => MeasureCache::load(p)?,
         _ => MeasureCache::new(),
     });
+    if let Some(lp) = &cfg.cache_log {
+        cache.attach_log(lp)?;
+    }
     let report = run_sched_with_cache(trace, cfg, Arc::clone(&cache))?;
     if let Some(p) = &cfg.cache_path {
         if let Err(e) = cache.save(p) {

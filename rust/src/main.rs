@@ -9,6 +9,8 @@
 //! * `sched`     — trace-driven power-budget fleet scheduler: arrivals
 //!   packed onto a simulated cluster under a fleet-wide Watt cap, with
 //!   drift-triggered re-adaptation (Step 7 in production).
+//! * `cache`     — measurement-cache maintenance: fold an append-only
+//!   measurement log back into its stable v3 JSON snapshot.
 //! * `power`     — Fig. 5 reproduction for one pattern/destination.
 //! * `codegen`   — emit the converted code (OpenACC/OpenMP/OpenCL).
 //! * `calibrate` — execute the AOT HLO artifacts on PJRT (real timing).
@@ -110,6 +112,12 @@ fn app() -> App {
                         "",
                         "JSON cache file for cross-invocation trial reuse (empty = none)",
                     ));
+                    o.push(opt(
+                        "cache-log",
+                        "",
+                        "append-only measurement log: replayed on start, then every \
+                         completed trial is appended + flushed (empty = none)",
+                    ));
                     o.push(opt("generations", "20", "GA generations (gpu/manycore stages)"));
                     o.push(opt("population", "16", "GA population (gpu/manycore stages)"));
                     o
@@ -157,6 +165,12 @@ fn app() -> App {
                         "",
                         "JSON cache file for cross-invocation trial reuse (empty = none)",
                     ));
+                    o.push(opt(
+                        "cache-log",
+                        "",
+                        "append-only measurement log: replayed on start, then every \
+                         completed trial is appended + flushed (empty = none)",
+                    ));
                     o.push(opt("generations", "20", "GA generations (gpu/manycore stages)"));
                     o.push(opt("population", "16", "GA population (gpu/manycore stages)"));
                     o.push(opt(
@@ -171,6 +185,16 @@ fn app() -> App {
                         "seed for the arrival-to-cluster shard assignment",
                     ));
                     o.push(flag(
+                        "parallel-clusters",
+                        "run federation probe + cluster simulations concurrently \
+                         (byte-identical report to the serial path)",
+                    ));
+                    o.push(flag(
+                        "rebalance-at-caps",
+                        "federation: re-probe demand and re-split the Watt budget at \
+                         every trace cap event instead of one up-front probe",
+                    ));
+                    o.push(flag(
                         "legacy-loop",
                         "run the retained time-stepped reference loop instead of the \
                          event-driven engine (same ledger, bit for bit)",
@@ -178,6 +202,25 @@ fn app() -> App {
                     o
                 },
                 positionals: vec![],
+            },
+            CmdSpec {
+                name: "cache",
+                about: "measurement-cache maintenance (action: compact — fold an \
+                        append-only --log into its --snapshot)",
+                opts: vec![
+                    opt(
+                        "log",
+                        "",
+                        "append-only measurement log written by --cache-log runs",
+                    ),
+                    opt(
+                        "snapshot",
+                        "",
+                        "stable v3 JSON snapshot to fold the log into (created if absent)",
+                    ),
+                    flag("json", "emit machine-readable JSON on stdout"),
+                ],
+                positionals: vec!["action"],
             },
             CmdSpec {
                 name: "power",
@@ -493,6 +536,10 @@ fn dispatch(p: &Parsed) -> enadapt::Result<()> {
                     .get("cache")
                     .filter(|s| !s.is_empty())
                     .map(std::path::PathBuf::from),
+                cache_log: p
+                    .get("cache-log")
+                    .filter(|s| !s.is_empty())
+                    .map(std::path::PathBuf::from),
                 share_cache: true,
             };
             let specs = coordinator::fleet::full_matrix();
@@ -543,6 +590,10 @@ fn dispatch(p: &Parsed) -> enadapt::Result<()> {
                     .get("cache")
                     .filter(|s| !s.is_empty())
                     .map(std::path::PathBuf::from),
+                cache_log: p
+                    .get("cache-log")
+                    .filter(|s| !s.is_empty())
+                    .map(std::path::PathBuf::from),
                 legacy_loop: p.flag("legacy-loop"),
             };
             let trace = match p.get("trace").filter(|s| !s.is_empty()) {
@@ -591,6 +642,8 @@ fn dispatch(p: &Parsed) -> enadapt::Result<()> {
                     shard_seed: p
                         .get_u64("shard-seed")
                         .map_err(|e| enadapt::Error::Config(e.to_string()))?,
+                    parallel: p.flag("parallel-clusters"),
+                    rebalance_at_caps: p.flag("rebalance-at-caps"),
                 };
                 let report = enadapt::coordinator::run_federated(&trace, &fcfg)?;
                 if p.flag("json") {
@@ -607,6 +660,45 @@ fn dispatch(p: &Parsed) -> enadapt::Result<()> {
                 println!("{}", report.table());
             }
             Ok(())
+        }
+        "cache" => {
+            let action = p.pos(0).unwrap();
+            match action {
+                "compact" => {
+                    let log = p.get("log").filter(|s| !s.is_empty()).ok_or_else(|| {
+                        enadapt::Error::Config("cache compact: --log is required".into())
+                    })?;
+                    let snapshot =
+                        p.get("snapshot").filter(|s| !s.is_empty()).ok_or_else(|| {
+                            enadapt::Error::Config("cache compact: --snapshot is required".into())
+                        })?;
+                    let stats = enadapt::util::measure_cache::MeasureCache::compact(
+                        std::path::Path::new(log),
+                        std::path::Path::new(snapshot),
+                    )?;
+                    if p.flag("json") {
+                        println!(
+                            "{}",
+                            Json::obj(vec![
+                                ("snapshot_entries", Json::num(stats.snapshot_entries as f64)),
+                                ("log_records", Json::num(stats.log_records as f64)),
+                                ("entries", Json::num(stats.entries as f64)),
+                            ])
+                            .to_string_pretty()
+                        );
+                    } else {
+                        println!(
+                            "compacted {log} into {snapshot}: {} snapshot + {} log record(s) \
+                             -> {} entries (log truncated)",
+                            stats.snapshot_entries, stats.log_records, stats.entries
+                        );
+                    }
+                    Ok(())
+                }
+                other => Err(enadapt::Error::Config(format!(
+                    "unknown cache action '{other}' (supported: compact)"
+                ))),
+            }
         }
         "power" => {
             let (name, src) = load_source(p.pos(0).unwrap())?;

@@ -1,5 +1,5 @@
 //! Shared, thread-safe measurement cache — the fleet coordinator's
-//! cross-job "measure once" rule (DESIGN.md §7).
+//! cross-job "measure once" rule (DESIGN.md §7, §14).
 //!
 //! The search layer already avoids re-measuring a pattern *within* one
 //! search ([`crate::search::Archive`]), but identical verification trials
@@ -18,19 +18,43 @@
 //! device-model parameter plus the noise seed) — any environment change
 //! invalidates naturally by changing the key.
 //!
-//! Concurrency: a per-key slot mutex gives a hard *measure-once*
-//! guarantee — two jobs racing on the same key block on the slot, the
-//! first runs the trial, the second gets the stored result. Distinct keys
-//! never contend beyond a brief map-lock.
+//! Concurrency (DESIGN.md §14): the store is sharded — keys route to one
+//! of [`SHARD_COUNT`] sub-maps by the FNV-1a hash of the key
+//! ([`crate::util::fasthash::Fnv64`]), each behind its own `RwLock`, so
+//! lookups of distinct keys proceed in parallel and the common case (a
+//! completed entry) takes only a shard *read* lock. Within a shard, each
+//! key owns a [`OnceLock`] slot giving a hard *measure-once* guarantee:
+//! two callers racing on the same key both reach `get_or_init`, exactly
+//! one runs the trial, the other blocks until the stored result is ready.
+//!
+//! Persistence is two-tier: the stable-ordered schema-v3 JSON *snapshot*
+//! ([`MeasureCache::save`] / [`MeasureCache::load`], now written
+//! atomically via a same-directory temp file + rename), plus an optional
+//! append-only *log* ([`MeasureCache::attach_log`]) that records each
+//! completed measurement as one line-delimited JSON record, flushed as it
+//! lands — a fleet of searcher processes pools trials by replaying each
+//! other's logs, and [`MeasureCache::compact`] folds a log back into its
+//! snapshot. One process should own a log file at a time (appends are
+//! serialized in-process, not across processes); cross-process pooling
+//! goes log → compact → shared snapshot.
 
 use crate::devices::{DeviceKind, TransferMode};
+use crate::util::fasthash::Fnv64;
 use crate::util::json::{self, Json};
 use crate::verifier::Measurement;
 use crate::{Error, Result};
-use std::collections::HashMap;
-use std::path::Path;
+use std::collections::{HashMap, HashSet};
+use std::hash::{Hash, Hasher};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
+
+/// Number of independently locked sub-maps the store is split into.
+/// Sixteen shards already exceed any plausible searcher-thread count
+/// while keeping the fixed footprint of an empty cache trivial.
+pub const SHARD_COUNT: usize = 16;
+const SHARD_BITS: u32 = 4; // log2(SHARD_COUNT)
 
 /// Identity of one verification trial.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -54,20 +78,122 @@ pub struct MeasureKey {
     pub env_fingerprint: u64,
 }
 
-type Slot = Arc<Mutex<Option<Measurement>>>;
+/// A per-key measurement slot. `OnceLock` gives measure-once for free:
+/// `get_or_init` runs the closure exactly once per slot and blocks every
+/// concurrent racer until the value is stored.
+type Slot = Arc<OnceLock<Measurement>>;
+
+type ShardMap = RwLock<HashMap<MeasureKey, Slot>>;
+
+/// Shard index of a key: the *high* bits of its FNV-1a hash, so shard
+/// routing stays uncorrelated with the in-shard `HashMap` bucket choice
+/// (which consumes a different hash function anyway, but high bits cost
+/// nothing and make the independence explicit).
+fn shard_index(key: &MeasureKey) -> usize {
+    let mut h = Fnv64::default();
+    key.hash(&mut h);
+    (h.finish() >> (64 - SHARD_BITS)) as usize & (SHARD_COUNT - 1)
+}
+
+/// An attached append-only measurement log (see
+/// [`MeasureCache::attach_log`]).
+#[derive(Debug)]
+struct CacheLog {
+    path: PathBuf,
+    file: std::fs::File,
+}
+
+/// The shared sharded slot store. Separated from [`MeasureCache`] so
+/// recording views ([`MeasureCache::fork_recording`]) can share one store
+/// while keeping their own hit/miss ledgers.
+#[derive(Debug)]
+struct Store {
+    shards: Vec<ShardMap>,
+    log: Mutex<Option<CacheLog>>,
+}
+
+impl Default for Store {
+    fn default() -> Self {
+        Self {
+            shards: (0..SHARD_COUNT).map(|_| RwLock::new(HashMap::new())).collect(),
+            log: Mutex::new(None),
+        }
+    }
+}
+
+impl Store {
+    fn shard(&self, key: &MeasureKey) -> &ShardMap {
+        &self.shards[shard_index(key)]
+    }
+
+    /// Append one completed measurement to the attached log (no-op when
+    /// none is attached). One write + flush per record: a killed process
+    /// loses at most the record it was mid-write on, which the next
+    /// reader skips as a torn tail.
+    fn append_log(&self, key: &MeasureKey, m: &Measurement) {
+        let mut guard = self.log.lock().unwrap();
+        if let Some(log) = guard.as_mut() {
+            let mut line = entry_to_json(key, m).to_string_compact();
+            line.push('\n');
+            if let Err(e) = log.file.write_all(line.as_bytes()).and_then(|_| log.file.flush()) {
+                crate::log_warn!(
+                    "measurement cache: append to log {} failed: {e}",
+                    log.path.display()
+                );
+            }
+        }
+    }
+}
 
 /// Thread-safe trial cache with hit statistics and JSON persistence.
 #[derive(Debug, Default)]
 pub struct MeasureCache {
-    map: Mutex<HashMap<MeasureKey, Slot>>,
+    store: Arc<Store>,
+    // Counter ordering: `Relaxed` is *exact* here, not approximate. Each
+    // `fetch_add` is an atomic read-modify-write, so no increment is ever
+    // lost regardless of memory ordering; `Relaxed` only forgoes
+    // cross-variable ordering, which nothing needs — the measurement
+    // itself is published by the slot's `OnceLock` (release/acquire
+    // internally), and the totals are read after the worker threads have
+    // been joined (fleet, federation) or from the measuring thread itself.
     hits: AtomicU64,
     misses: AtomicU64,
+    /// `Some` on recording views ([`MeasureCache::fork_recording`]): the
+    /// distinct keys this view has looked up, for serial-order counter
+    /// reconstruction in the parallel federation.
+    recorded: Option<Mutex<HashSet<MeasureKey>>>,
 }
 
 impl MeasureCache {
     /// Empty cache.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// A recording view over the same shared store: lookups and
+    /// measurements land in the same sharded slots (measure-once holds
+    /// *across* views), but the hit/miss ledger starts at zero and every
+    /// distinct key the view touches is recorded
+    /// ([`MeasureCache::recorded_keys`]). The parallel federation gives
+    /// each cluster run its own view and reconstructs the exact serial
+    /// counter sequence from the per-view key sets afterwards
+    /// (DESIGN.md §14).
+    pub fn fork_recording(&self) -> MeasureCache {
+        MeasureCache {
+            store: Arc::clone(&self.store),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            recorded: Some(Mutex::new(HashSet::new())),
+        }
+    }
+
+    /// Distinct keys this recording view has looked up (hit or miss), in
+    /// unspecified order. Empty for non-recording caches.
+    pub fn recorded_keys(&self) -> Vec<MeasureKey> {
+        match &self.recorded {
+            Some(r) => r.lock().unwrap().iter().cloned().collect(),
+            None => Vec::new(),
+        }
     }
 
     /// Look up `key`, running `measure` exactly once per distinct key even
@@ -78,21 +204,39 @@ impl MeasureCache {
         key: MeasureKey,
         measure: impl FnOnce() -> Measurement,
     ) -> (Measurement, bool) {
-        let slot: Slot = {
-            let mut map = self.map.lock().unwrap();
-            map.entry(key).or_default().clone()
+        let shard = self.store.shard(&key);
+        // Read-mostly fast path: a key that already has a slot needs only
+        // the shard read lock, so completed entries never serialize.
+        let slot = {
+            let map = shard.read().unwrap();
+            map.get(&key).cloned()
         };
-        // The slot lock serializes same-key callers only: the first one in
-        // measures while later ones wait for the stored result.
-        let mut guard = slot.lock().unwrap();
-        if let Some(m) = guard.as_ref() {
+        let slot: Slot = match slot {
+            Some(s) => s,
+            None => {
+                let mut map = shard.write().unwrap();
+                Arc::clone(map.entry(key.clone()).or_default())
+            }
+        };
+        // Exactly one caller's closure runs; every racer blocks on the
+        // slot (not the shard) until the value is stored.
+        let mut ran = false;
+        let m = slot
+            .get_or_init(|| {
+                ran = true;
+                measure()
+            })
+            .clone();
+        if ran {
+            self.store.append_log(&key, &m);
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        } else {
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return (m.clone(), true);
         }
-        let m = measure();
-        *guard = Some(m.clone());
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        (m, false)
+        if let Some(rec) = &self.recorded {
+            rec.lock().unwrap().insert(key);
+        }
+        (m, !ran)
     }
 
     /// Trials saved (lookups answered from the cache).
@@ -126,14 +270,20 @@ impl MeasureCache {
         }
     }
 
-    /// Distinct completed measurements stored.
+    /// Distinct completed measurements stored (pending slots excluded).
     pub fn len(&self) -> usize {
-        self.map
-            .lock()
-            .unwrap()
-            .values()
-            .filter(|s| s.lock().unwrap().is_some())
-            .count()
+        self.store
+            .shards
+            .iter()
+            .map(|shard| {
+                shard
+                    .read()
+                    .unwrap()
+                    .values()
+                    .filter(|s| s.get().is_some())
+                    .count()
+            })
+            .sum()
     }
 
     /// Is the cache empty?
@@ -141,15 +291,50 @@ impl MeasureCache {
         self.len() == 0
     }
 
-    /// Serialize every completed entry (pending slots are skipped).
-    pub fn to_json(&self) -> Json {
-        let map = self.map.lock().unwrap();
-        let mut entries: Vec<(MeasureKey, Measurement)> = map
-            .iter()
-            .filter_map(|(k, slot)| slot.lock().unwrap().clone().map(|m| (k.clone(), m)))
-            .collect();
+    /// Keys of every completed measurement, in unspecified order.
+    pub fn completed_keys(&self) -> Vec<MeasureKey> {
+        let mut keys = Vec::new();
+        for shard in &self.store.shards {
+            let map = shard.read().unwrap();
+            keys.extend(
+                map.iter()
+                    .filter(|(_, s)| s.get().is_some())
+                    .map(|(k, _)| k.clone()),
+            );
+        }
+        keys
+    }
+
+    /// Every completed `(key, measurement)` pair in the stable snapshot
+    /// order (pending slots are skipped).
+    fn completed_entries(&self) -> Vec<(MeasureKey, Measurement)> {
+        let mut entries = Vec::new();
+        for shard in &self.store.shards {
+            let map = shard.read().unwrap();
+            entries.extend(
+                map.iter()
+                    .filter_map(|(k, slot)| slot.get().map(|m| (k.clone(), m.clone()))),
+            );
+        }
         // Stable order so persisted files diff cleanly.
         entries.sort_by(|a, b| key_sort_token(&a.0).cmp(&key_sort_token(&b.0)));
+        entries
+    }
+
+    /// Store a completed measurement directly (snapshot / log loading).
+    /// The first completion wins, matching the slot semantics — replayed
+    /// duplicates (e.g. snapshot/log overlap after an interrupted
+    /// compaction) carry identical payloads anyway, measurements being
+    /// deterministic per key.
+    fn insert_completed(&self, key: MeasureKey, m: Measurement) {
+        let shard = self.store.shard(&key);
+        let mut map = shard.write().unwrap();
+        let slot = map.entry(key).or_default();
+        let _ = slot.set(m);
+    }
+
+    /// Serialize every completed entry (pending slots are skipped).
+    pub fn to_json(&self) -> Json {
         // Schema v3: keys carry the plan fingerprint (function-block
         // substitutions, DESIGN.md §11). v2 files (per-component
         // EnergyReport, no plan) and v1 files (scalars only) are still
@@ -159,33 +344,9 @@ impl MeasureCache {
             (
                 "entries",
                 Json::arr(
-                    entries
+                    self.completed_entries()
                         .into_iter()
-                        .map(|(k, m)| {
-                            Json::obj(vec![
-                                ("app_hash", Json::str(format!("{:016x}", k.app_hash))),
-                                (
-                                    "pattern",
-                                    Json::str(
-                                        k.pattern
-                                            .iter()
-                                            .map(|&b| if b { '1' } else { '0' })
-                                            .collect::<String>(),
-                                    ),
-                                ),
-                                ("device", Json::str(k.device.name())),
-                                (
-                                    "xfer",
-                                    Json::str(match k.xfer {
-                                        TransferMode::Batched => "batched",
-                                        TransferMode::PerEntry => "per-entry",
-                                    }),
-                                ),
-                                ("env", Json::str(format!("{:016x}", k.env_fingerprint))),
-                                ("plan", Json::str(format!("{:016x}", k.plan))),
-                                ("measurement", m.to_json_full()),
-                            ])
-                        })
+                        .map(|(k, m)| entry_to_json(&k, &m))
                         .collect(),
                 ),
             ),
@@ -219,54 +380,33 @@ impl MeasureCache {
             .and_then(|e| e.as_arr())
             .ok_or_else(|| bad("missing 'entries'"))?;
         let cache = Self::new();
-        {
-            let mut map = cache.map.lock().unwrap();
-            for e in entries {
-                let key = MeasureKey {
-                    app_hash: parse_hex(e.get("app_hash").and_then(|v| v.as_str()))
-                        .ok_or_else(|| bad("bad app_hash"))?,
-                    pattern: e
-                        .get("pattern")
-                        .and_then(|v| v.as_str())
-                        .ok_or_else(|| bad("bad pattern"))?
-                        .chars()
-                        .map(|c| c == '1')
-                        .collect(),
-                    device: e
-                        .get("device")
-                        .and_then(|v| v.as_str())
-                        .and_then(DeviceKind::from_name)
-                        .ok_or_else(|| bad("bad device"))?,
-                    xfer: match e.get("xfer").and_then(|v| v.as_str()) {
-                        Some("batched") => TransferMode::Batched,
-                        Some("per-entry") => TransferMode::PerEntry,
-                        _ => return Err(bad("bad xfer")),
-                    },
-                    env_fingerprint: parse_hex(e.get("env").and_then(|v| v.as_str()))
-                        .ok_or_else(|| bad("bad env fingerprint"))?,
-                    // v1/v2 entries predate block plans and migrate as
-                    // loop-only (plan 0); a v3 entry *must* carry its
-                    // plan — a missing field there is corruption, not a
-                    // legacy file.
-                    plan: match e.get("plan") {
-                        Some(p) => parse_hex(p.as_str()).ok_or_else(|| bad("bad plan hash"))?,
-                        None if version < 3.0 => 0,
-                        None => return Err(bad("missing 'plan' in a v3 entry")),
-                    },
-                };
-                let m = e
-                    .get("measurement")
-                    .and_then(Measurement::from_json)
-                    .ok_or_else(|| bad("bad measurement"))?;
-                map.insert(key, Arc::new(Mutex::new(Some(m))));
-            }
+        for e in entries {
+            let (key, m) = entry_from_json(e, version)?;
+            cache.insert_completed(key, m);
         }
         Ok(cache)
     }
 
-    /// Persist to a JSON file (compact; entries in stable order).
+    /// Persist to a JSON file (compact; entries in stable order). The
+    /// write is atomic: the snapshot lands in a same-directory temp file
+    /// first and is renamed over the target, so a killed process can
+    /// never leave a half-written (truncated) cache behind — the old
+    /// snapshot survives intact until the rename commits.
     pub fn save(&self, path: &Path) -> Result<()> {
-        std::fs::write(path, self.to_json().to_string_compact())?;
+        let mut tmp_name = path
+            .file_name()
+            .map(|n| n.to_os_string())
+            .unwrap_or_else(|| std::ffi::OsString::from("measure_cache"));
+        // Pid-suffixed so concurrent savers never clobber each other's
+        // partial writes; same directory so the rename stays on one
+        // filesystem (rename is only atomic within a filesystem).
+        tmp_name.push(format!(".tmp.{}", std::process::id()));
+        let tmp = path.with_file_name(tmp_name);
+        std::fs::write(&tmp, self.to_json().to_string_compact())?;
+        if let Err(e) = std::fs::rename(&tmp, path) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e.into());
+        }
         Ok(())
     }
 
@@ -277,6 +417,185 @@ impl MeasureCache {
             .map_err(|e| Error::Config(format!("measurement cache {}: {e}", path.display())))?;
         Self::from_json(&parsed)
     }
+
+    /// Attach an append-only measurement log at `path`:
+    ///
+    /// 1. replay every record already in the file into the store (this is
+    ///    how a fleet of searcher processes pools measurements across
+    ///    invocations), then
+    /// 2. open the file for appending — from here on, every measurement
+    ///    completed through this cache (any view of the same store) is
+    ///    appended as one line-delimited v3-entry JSON record and flushed
+    ///    as it lands.
+    ///
+    /// Returns the number of records replayed. A torn trailing record —
+    /// a writer killed mid-append — is skipped with a line-numbered
+    /// warning; corruption anywhere *before* the tail is an error, same
+    /// as a corrupt snapshot.
+    pub fn attach_log(&self, path: &Path) -> Result<usize> {
+        let replayed = self.replay_log(path)?;
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)?;
+        *self.store.log.lock().unwrap() = Some(CacheLog {
+            path: path.to_path_buf(),
+            file,
+        });
+        Ok(replayed)
+    }
+
+    /// Replay a log file into the store without attaching a writer.
+    /// A missing file is an empty log (0 records). Replay does not touch
+    /// the hit/miss ledger — replayed entries count as preloaded, exactly
+    /// like snapshot entries.
+    pub fn replay_log(&self, path: &Path) -> Result<usize> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(0),
+            Err(e) => return Err(e.into()),
+        };
+        let lines: Vec<(usize, &str)> = text
+            .lines()
+            .enumerate()
+            .filter(|(_, l)| !l.trim().is_empty())
+            .collect();
+        let mut replayed = 0;
+        for (i, (lineno, line)) in lines.iter().enumerate() {
+            let record = json::parse(line)
+                .map_err(|e| e.to_string())
+                .and_then(|j| entry_from_json(&j, 3.0).map_err(|e| e.to_string()));
+            match record {
+                Ok((key, m)) => {
+                    self.insert_completed(key, m);
+                    replayed += 1;
+                }
+                // The last record of a log is allowed to be torn — that
+                // is what a writer killed mid-append leaves behind.
+                Err(e) if i + 1 == lines.len() => {
+                    crate::log_warn!(
+                        "measurement log {}: skipping torn trailing record at line {} ({e})",
+                        path.display(),
+                        lineno + 1
+                    );
+                }
+                Err(e) => {
+                    return Err(Error::Config(format!(
+                        "measurement log {}: corrupt record at line {} ({e}) — not the \
+                         trailing record, so this is damage, not a torn append; delete or \
+                         repair the log",
+                        path.display(),
+                        lineno + 1
+                    )));
+                }
+            }
+        }
+        Ok(replayed)
+    }
+
+    /// Fold an append-only measurement log into its snapshot: load the
+    /// snapshot (when it exists), replay the log on top, write the merged
+    /// set back atomically in the stable v3 order, then truncate the log.
+    /// The log is truncated only *after* the snapshot rename has landed —
+    /// a crash between the two leaves duplicate records (harmless: first
+    /// completion wins on replay), never lost ones.
+    pub fn compact(log: &Path, snapshot: &Path) -> Result<CompactStats> {
+        let cache = if snapshot.exists() {
+            Self::load(snapshot)?
+        } else {
+            Self::new()
+        };
+        let snapshot_entries = cache.len();
+        let log_records = cache.replay_log(log)?;
+        cache.save(snapshot)?;
+        std::fs::File::create(log)?;
+        Ok(CompactStats {
+            snapshot_entries,
+            log_records,
+            entries: cache.len(),
+        })
+    }
+}
+
+/// What a [`MeasureCache::compact`] run found and wrote.
+#[derive(Debug, Clone, Copy)]
+pub struct CompactStats {
+    /// Entries already in the snapshot before compaction.
+    pub snapshot_entries: usize,
+    /// Records replayed from the log (duplicates included).
+    pub log_records: usize,
+    /// Distinct entries in the snapshot afterwards.
+    pub entries: usize,
+}
+
+/// One `(key, measurement)` pair in the schema-v3 entry shape — the unit
+/// both the snapshot's `entries` array and the append log's records use.
+fn entry_to_json(k: &MeasureKey, m: &Measurement) -> Json {
+    Json::obj(vec![
+        ("app_hash", Json::str(format!("{:016x}", k.app_hash))),
+        (
+            "pattern",
+            Json::str(
+                k.pattern
+                    .iter()
+                    .map(|&b| if b { '1' } else { '0' })
+                    .collect::<String>(),
+            ),
+        ),
+        ("device", Json::str(k.device.name())),
+        (
+            "xfer",
+            Json::str(match k.xfer {
+                TransferMode::Batched => "batched",
+                TransferMode::PerEntry => "per-entry",
+            }),
+        ),
+        ("env", Json::str(format!("{:016x}", k.env_fingerprint))),
+        ("plan", Json::str(format!("{:016x}", k.plan))),
+        ("measurement", m.to_json_full()),
+    ])
+}
+
+/// Parse one entry object of the given schema version (see
+/// [`MeasureCache::from_json`] for the migration rules).
+fn entry_from_json(e: &Json, version: f64) -> Result<(MeasureKey, Measurement)> {
+    let bad = |what: &str| Error::Config(format!("measurement cache: {what}"));
+    let key = MeasureKey {
+        app_hash: parse_hex(e.get("app_hash").and_then(|v| v.as_str()))
+            .ok_or_else(|| bad("bad app_hash"))?,
+        pattern: e
+            .get("pattern")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| bad("bad pattern"))?
+            .chars()
+            .map(|c| c == '1')
+            .collect(),
+        device: e
+            .get("device")
+            .and_then(|v| v.as_str())
+            .and_then(DeviceKind::from_name)
+            .ok_or_else(|| bad("bad device"))?,
+        xfer: match e.get("xfer").and_then(|v| v.as_str()) {
+            Some("batched") => TransferMode::Batched,
+            Some("per-entry") => TransferMode::PerEntry,
+            _ => return Err(bad("bad xfer")),
+        },
+        env_fingerprint: parse_hex(e.get("env").and_then(|v| v.as_str()))
+            .ok_or_else(|| bad("bad env fingerprint"))?,
+        // v1/v2 entries predate block plans and migrate as loop-only
+        // (plan 0); a v3 entry *must* carry its plan — a missing field
+        // there is corruption, not a legacy file.
+        plan: match e.get("plan") {
+            Some(p) => parse_hex(p.as_str()).ok_or_else(|| bad("bad plan hash"))?,
+            None if version < 3.0 => 0,
+            None => return Err(bad("missing 'plan' in a v3 entry")),
+        },
+    };
+    let m = e
+        .get("measurement")
+        .and_then(Measurement::from_json)
+        .ok_or_else(|| bad("bad measurement"))?;
+    Ok((key, m))
 }
 
 fn key_sort_token(k: &MeasureKey) -> (u64, u64, u64, String, &'static str, u8) {
@@ -344,6 +663,14 @@ mod tests {
         }
     }
 
+    /// Unique temp dir per test so parallel tests never collide.
+    fn test_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("enadapt_measure_cache_{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
     #[test]
     fn second_lookup_hits_and_reuses() {
         let c = MeasureCache::new();
@@ -390,8 +717,7 @@ mod tests {
 
     #[test]
     fn save_and_load_file() {
-        let dir = std::env::temp_dir().join("enadapt_measure_cache_test");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = test_dir("save_load");
         let path = dir.join("cache.json");
         let c = MeasureCache::new();
         c.get_or_measure(key(true, 9), || fake_measurement(3.0));
@@ -400,7 +726,29 @@ mod tests {
         assert_eq!(back.len(), 1);
         let (_, hit) = back.get_or_measure(key(true, 9), || fake_measurement(0.0));
         assert!(hit);
-        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn save_replaces_the_target_atomically_and_leaves_no_temp() {
+        let dir = test_dir("atomic_save");
+        let path = dir.join("cache.json");
+        // A previous (here: unparsable) snapshot must survive any failed
+        // write and be *replaced*, never truncated in place.
+        std::fs::write(&path, "NOT JSON — a previous snapshot").unwrap();
+        let c = MeasureCache::new();
+        c.get_or_measure(key(true, 5), || fake_measurement(1.0));
+        c.save(&path).unwrap();
+        let back = MeasureCache::load(&path).unwrap();
+        assert_eq!(back.len(), 1);
+        let leftovers: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "temp must be renamed away: {leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
@@ -562,5 +910,173 @@ mod tests {
         assert_eq!(evals.load(Ordering::SeqCst), 1, "measure-once violated");
         assert_eq!(c.misses(), 1);
         assert_eq!(c.hits(), 7);
+    }
+
+    #[test]
+    fn hammer_colliding_keys_across_all_shards_with_exact_totals() {
+        use std::sync::atomic::AtomicUsize;
+        // Build a key set that provably covers every shard (≥ 2 keys
+        // each) — deterministic, since FNV routing is.
+        let mut keys = Vec::new();
+        let mut per_shard = vec![0usize; SHARD_COUNT];
+        let mut env = 0u64;
+        while per_shard.iter().any(|&n| n < 2) && env < 4096 {
+            let k = key(true, env);
+            per_shard[shard_index(&k)] += 1;
+            keys.push(k);
+            env += 1;
+        }
+        assert!(
+            per_shard.iter().all(|&n| n >= 2),
+            "FNV routing left shards empty within 4096 keys: {per_shard:?}"
+        );
+        let n_keys = keys.len();
+
+        const THREADS: usize = 8;
+        const ROUNDS: usize = 3;
+        let c = Arc::new(MeasureCache::new());
+        let keys = Arc::new(keys);
+        let evals = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for t in 0..THREADS {
+            let c = Arc::clone(&c);
+            let keys = Arc::clone(&keys);
+            let evals = Arc::clone(&evals);
+            handles.push(std::thread::spawn(move || {
+                for r in 0..ROUNDS {
+                    for i in 0..keys.len() {
+                        // Rotate the start per thread/round so racers
+                        // collide on different keys at the same moment.
+                        let k = keys[(i + t * 7 + r) % keys.len()].clone();
+                        let (m, _) = c.get_or_measure(k, || {
+                            evals.fetch_add(1, Ordering::SeqCst);
+                            fake_measurement(4.0)
+                        });
+                        assert_eq!(m.time_s, 4.0);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total = THREADS * ROUNDS * n_keys;
+        assert_eq!(evals.load(Ordering::SeqCst), n_keys, "measure-once violated");
+        assert_eq!(c.misses() as usize, n_keys, "one miss per distinct key");
+        assert_eq!(
+            c.hits() as usize,
+            total - n_keys,
+            "every non-first lookup is a hit — totals must be exact"
+        );
+        assert_eq!(c.len(), n_keys);
+    }
+
+    #[test]
+    fn recording_views_share_the_store_but_count_independently() {
+        let base = MeasureCache::new();
+        base.get_or_measure(key(true, 1), || fake_measurement(1.0));
+        let view = base.fork_recording();
+        assert_eq!((view.hits(), view.misses()), (0, 0));
+        let (_, hit) = view.get_or_measure(key(true, 1), || fake_measurement(9.0));
+        assert!(hit, "view shares the base store's entries");
+        view.get_or_measure(key(false, 1), || fake_measurement(2.0));
+        assert_eq!((view.hits(), view.misses()), (1, 1));
+        assert_eq!(
+            (base.hits(), base.misses()),
+            (0, 1),
+            "base ledger untouched by the view's lookups"
+        );
+        assert_eq!(base.len(), 2, "view measurement landed in the shared store");
+        assert_eq!(view.recorded_keys().len(), 2);
+        assert!(base.recorded_keys().is_empty(), "non-recording caches record nothing");
+    }
+
+    #[test]
+    fn append_log_replays_across_caches_and_counts_as_preload() {
+        let dir = test_dir("log_replay");
+        let log = dir.join("measure.log");
+        let a = MeasureCache::new();
+        assert_eq!(a.attach_log(&log).unwrap(), 0);
+        a.get_or_measure(key(true, 1), || fake_measurement(2.0));
+        a.get_or_measure(key(false, 1), || fake_measurement(3.0));
+        // A hit appends nothing: one record per *completed* measurement.
+        a.get_or_measure(key(true, 1), || fake_measurement(99.0));
+        let text = std::fs::read_to_string(&log).unwrap();
+        assert_eq!(text.lines().filter(|l| !l.trim().is_empty()).count(), 2);
+        // A second "process" attaches the same log and pools the trials.
+        let b = MeasureCache::new();
+        assert_eq!(b.attach_log(&log).unwrap(), 2);
+        assert_eq!(b.len(), 2);
+        let (m, hit) = b.get_or_measure(key(false, 1), || fake_measurement(0.0));
+        assert!(hit);
+        assert_eq!(m.time_s, 3.0);
+        assert_eq!(
+            (b.hits(), b.misses()),
+            (1, 0),
+            "replay itself must not touch the hit/miss ledger"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_trailing_log_record_is_skipped() {
+        let dir = test_dir("torn_tail");
+        let log = dir.join("measure.log");
+        let a = MeasureCache::new();
+        a.attach_log(&log).unwrap();
+        a.get_or_measure(key(true, 1), || fake_measurement(2.0));
+        a.get_or_measure(key(false, 1), || fake_measurement(3.0));
+        // Simulate a writer killed mid-append.
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&log).unwrap();
+        f.write_all(b"{\"app_hash\":\"00000000").unwrap();
+        let b = MeasureCache::new();
+        assert_eq!(b.replay_log(&log).unwrap(), 2, "intact prefix loads");
+        assert_eq!(b.len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corruption_before_the_log_tail_is_an_error() {
+        let dir = test_dir("mid_corrupt");
+        let log = dir.join("measure.log");
+        let valid = entry_to_json(&key(true, 1), &fake_measurement(1.0)).to_string_compact();
+        std::fs::write(&log, format!("GARBAGE RECORD\n{valid}\n")).unwrap();
+        let c = MeasureCache::new();
+        let err = c.replay_log(&log).unwrap_err().to_string();
+        assert!(err.contains("line 1"), "error must carry the line number: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compact_folds_the_log_into_the_snapshot_and_truncates() {
+        let dir = test_dir("compact");
+        let log = dir.join("measure.log");
+        let snap = dir.join("cache.json");
+        // Seed a snapshot with one entry...
+        let seed = MeasureCache::new();
+        seed.get_or_measure(key(true, 1), || fake_measurement(1.0));
+        seed.save(&snap).unwrap();
+        // ...and a log holding one overlapping + two new measurements.
+        let writer = MeasureCache::new();
+        writer.attach_log(&log).unwrap();
+        writer.get_or_measure(key(true, 1), || fake_measurement(1.0));
+        writer.get_or_measure(key(false, 1), || fake_measurement(2.0));
+        writer.get_or_measure(key(true, 2), || fake_measurement(3.0));
+        let stats = MeasureCache::compact(&log, &snap).unwrap();
+        assert_eq!(stats.snapshot_entries, 1);
+        assert_eq!(stats.log_records, 3);
+        assert_eq!(stats.entries, 3, "overlap deduplicates by key");
+        assert_eq!(
+            std::fs::metadata(&log).unwrap().len(),
+            0,
+            "log truncated after the snapshot landed"
+        );
+        let back = MeasureCache::load(&snap).unwrap();
+        assert_eq!(back.len(), 3);
+        let (m, hit) = back.get_or_measure(key(true, 2), || fake_measurement(0.0));
+        assert!(hit);
+        assert_eq!(m.time_s, 3.0);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

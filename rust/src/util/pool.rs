@@ -1,7 +1,10 @@
 //! Fixed-size thread pool with scoped parallel-map (replaces `tokio`/
 //! `rayon`, unavailable offline). The verification environment uses it to
 //! run independent measurement trials concurrently, which is how the real
-//! system would drive several verification machines at once.
+//! system would drive several verification machines at once; the
+//! multi-cluster federation drives its probe and cluster simulations over
+//! [`scoped_map`] against the shared sharded measurement cache
+//! (DESIGN.md §14).
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;

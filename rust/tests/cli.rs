@@ -13,12 +13,13 @@ fn enadapt(args: &[&str]) -> std::process::Output {
 /// Every subcommand the CLI exposes, in help order. The snapshot below
 /// and the README drift check both key off this list — extending the CLI
 /// means updating all three together.
-const COMMANDS: [&str; 9] = [
+const COMMANDS: [&str; 10] = [
     "analyze",
     "blocks",
     "offload",
     "fleet",
     "sched",
+    "cache",
     "power",
     "codegen",
     "calibrate",
@@ -329,6 +330,88 @@ fn sched_rejects_bad_trace_and_bad_cap() {
     let out = enadapt(&["sched", "--arrivals", "5", "--rate", "0"]);
     assert!(!out.status.success());
     assert!(String::from_utf8_lossy(&out.stderr).contains("--rate"));
+}
+
+/// The acceptance criterion at the CLI level: `--parallel-clusters` must
+/// emit the byte-identical federation JSON (per-cluster ledgers and the
+/// reconstructed cache counters included) as the serial path, per seed.
+#[test]
+fn sched_parallel_clusters_output_is_byte_identical_to_serial() {
+    let base = [
+        "sched", "--arrivals", "12", "--rate", "0.5", "--fleet-watt-cap", "800",
+        "--clusters", "4", "--shard-seed", "1", "--seed", "7",
+        "--population", "6", "--generations", "4", "--json",
+    ];
+    let serial = enadapt(&base);
+    assert!(serial.status.success(), "{}", String::from_utf8_lossy(&serial.stderr));
+    let mut parallel_args = base.to_vec();
+    parallel_args.push("--parallel-clusters");
+    let parallel = enadapt(&parallel_args);
+    assert!(parallel.status.success(), "{}", String::from_utf8_lossy(&parallel.stderr));
+    assert_eq!(
+        serial.stdout, parallel.stdout,
+        "--parallel-clusters must not change a byte of the report"
+    );
+    let j = enadapt::util::json::parse(&String::from_utf8_lossy(&serial.stdout)).unwrap();
+    assert_eq!(j.get("clusters").unwrap().as_arr().unwrap().len(), 4);
+    assert!(j.get("cache").unwrap().get("hits").unwrap().as_f64().unwrap() > 0.0);
+}
+
+/// `--cache-log` + `enadapt cache compact` round trip: a sched run
+/// appends its measurements to the log, compaction folds them into a v3
+/// snapshot, and a snapshot-only rerun re-measures nothing.
+#[test]
+fn sched_cache_log_compacts_into_a_snapshot() {
+    let dir = std::env::temp_dir().join("enadapt_cli_cache_log_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let log = dir.join("measure.log");
+    let snap = dir.join("cache.json");
+    let base = [
+        "sched", "--arrivals", "4", "--rate", "0.5", "--seed", "7",
+        "--population", "6", "--generations", "4", "--json",
+    ];
+
+    let mut first_args = base.to_vec();
+    first_args.extend(["--cache-log", log.to_str().unwrap()]);
+    let first = enadapt(&first_args);
+    assert!(first.status.success(), "{}", String::from_utf8_lossy(&first.stderr));
+    let j = enadapt::util::json::parse(&String::from_utf8_lossy(&first.stdout)).unwrap();
+    let cache = j.get("cache").unwrap();
+    assert_eq!(cache.get("preloaded").unwrap().as_f64(), Some(0.0));
+    let entries = cache.get("entries").unwrap().as_f64().unwrap();
+    assert!(entries > 0.0);
+
+    let compact = enadapt(&[
+        "cache", "compact",
+        "--log", log.to_str().unwrap(),
+        "--snapshot", snap.to_str().unwrap(),
+        "--json",
+    ]);
+    assert!(compact.status.success(), "{}", String::from_utf8_lossy(&compact.stderr));
+    let cj = enadapt::util::json::parse(&String::from_utf8_lossy(&compact.stdout)).unwrap();
+    assert_eq!(cj.get("entries").unwrap().as_f64(), Some(entries));
+    assert_eq!(std::fs::metadata(&log).unwrap().len(), 0, "log truncated");
+
+    let mut rerun_args = base.to_vec();
+    rerun_args.extend(["--cache", snap.to_str().unwrap()]);
+    let rerun = enadapt(&rerun_args);
+    assert!(rerun.status.success(), "{}", String::from_utf8_lossy(&rerun.stderr));
+    let rj = enadapt::util::json::parse(&String::from_utf8_lossy(&rerun.stdout)).unwrap();
+    let rcache = rj.get("cache").unwrap();
+    assert_eq!(rcache.get("preloaded").unwrap().as_f64(), Some(entries));
+    assert_eq!(rcache.get("misses").unwrap().as_f64(), Some(0.0));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cache_command_rejects_bad_usage() {
+    let out = enadapt(&["cache", "defrag"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown cache action"));
+    let out = enadapt(&["cache", "compact"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--log is required"));
 }
 
 #[test]

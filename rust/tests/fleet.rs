@@ -125,6 +125,69 @@ fn fleet_cache_persists_across_invocations() {
     let _ = std::fs::remove_file(&path);
 }
 
+/// The append-only measurement log pools trials across invocations
+/// *without* a snapshot: the first run appends every completed
+/// measurement as it lands, the second replays the log and re-measures
+/// nothing, and compaction folds the records into a v3 snapshot that a
+/// snapshot-only run then preloads.
+#[test]
+fn fleet_cache_log_pools_measurements_and_compacts() {
+    let dir = std::env::temp_dir().join("enadapt_fleet_cache_log_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let log = dir.join("measure.log");
+    let snap = dir.join("cache.json");
+
+    let specs: Vec<FleetSpec> = small_matrix().into_iter().take(2).collect();
+    let cfg = FleetConfig {
+        template: quick_template(),
+        workers: 2,
+        cache_log: Some(log.clone()),
+        ..Default::default()
+    };
+
+    let first = run_fleet(&specs, &cfg).unwrap();
+    assert_eq!(first.cache_preloaded, 0);
+    assert!(first.cache_misses > 0);
+    let records = std::fs::read_to_string(&log)
+        .unwrap()
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .count();
+    assert_eq!(
+        records as u64, first.cache_misses,
+        "one flushed log record per completed measurement"
+    );
+
+    // Second invocation replays the log: everything preloaded, nothing
+    // re-measured, identical results.
+    let second = run_fleet(&specs, &cfg).unwrap();
+    assert_eq!(second.cache_preloaded, first.cache_entries);
+    assert_eq!(second.cache_misses, 0, "log replay serves every trial");
+    for (a, b) in first.jobs.iter().zip(&second.jobs) {
+        assert_eq!(
+            canonical(a.report.as_ref().unwrap()),
+            canonical(b.report.as_ref().unwrap()),
+            "log-pooled trials changed a result"
+        );
+    }
+
+    // Compact the log into a snapshot and run snapshot-only.
+    let stats =
+        enadapt::util::measure_cache::MeasureCache::compact(&log, &snap).unwrap();
+    assert_eq!(stats.entries, first.cache_entries);
+    assert_eq!(std::fs::metadata(&log).unwrap().len(), 0, "log truncated");
+    let snap_cfg = FleetConfig {
+        cache_path: Some(snap),
+        cache_log: None,
+        ..cfg
+    };
+    let third = run_fleet(&specs, &snap_cfg).unwrap();
+    assert_eq!(third.cache_preloaded, first.cache_entries);
+    assert_eq!(third.cache_misses, 0, "compacted snapshot serves every trial");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn unshared_cache_fleet_still_matches_serial() {
     let specs: Vec<FleetSpec> = small_matrix().into_iter().take(2).collect();

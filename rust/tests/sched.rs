@@ -274,6 +274,7 @@ fn federated_run_is_deterministic_and_merges_cluster_ledgers() {
         },
         clusters: 4,
         shard_seed: 1,
+        ..Default::default()
     };
     let a = run_federated(&trace, &fcfg).unwrap();
     let b = run_federated(&trace, &fcfg).unwrap();
@@ -326,6 +327,132 @@ fn federated_run_is_deterministic_and_merges_cluster_ledgers() {
     );
 }
 
+/// The satellite acceptance gate: `--parallel-clusters` is a pure
+/// wall-clock optimization. Per seed, the 4-cluster federation report —
+/// per-cluster ledgers, merged totals, and the serial-order-reconstructed
+/// cache counters — must serialize byte-identically whether the probe and
+/// cluster simulations ran serially or concurrently on the thread pool.
+#[test]
+fn parallel_federation_is_byte_identical_to_serial_per_seed() {
+    for seed in [3u64, 11] {
+        let trace = ArrivalTrace::poisson(&SyntheticTraceConfig::standard(24, 0.5, seed));
+        let serial_cfg = FederationConfig {
+            base: SchedConfig {
+                template: quick_template(),
+                nodes: two_node_cluster(),
+                fleet_watt_cap: Some(600.0),
+                ..Default::default()
+            },
+            clusters: 4,
+            shard_seed: seed,
+            parallel: false,
+            ..Default::default()
+        };
+        let parallel_cfg = FederationConfig {
+            parallel: true,
+            ..serial_cfg.clone()
+        };
+        let s = run_federated(&trace, &serial_cfg).unwrap();
+        let p = run_federated(&trace, &parallel_cfg).unwrap();
+        assert_eq!(
+            s.to_json().to_string_compact(),
+            p.to_json().to_string_compact(),
+            "parallel federation diverged from serial at seed {seed}"
+        );
+        // The per-cluster SchedReports (cache counters included) must
+        // also agree bit for bit, not just the merged summary.
+        for (sc, pc) in s.clusters.iter().zip(&p.clusters) {
+            assert_eq!(
+                sc.report.to_json().to_string_compact(),
+                pc.report.to_json().to_string_compact(),
+                "cluster {} report diverged at seed {seed}",
+                sc.cluster
+            );
+        }
+        assert!(s.admitted > 0, "something must run at seed {seed}");
+        assert!(
+            s.cache_hits > 0 && s.cache_misses > 0,
+            "reconstructed counters populated at seed {seed}"
+        );
+    }
+}
+
+/// Cap-event rebalancing: re-probing demand per cap epoch is
+/// deterministic, parallel-safe, and still splits each cap across the
+/// whole budget. (With no cap events in the trace there is exactly one
+/// segment, so the flag is a no-op — also asserted.)
+#[test]
+fn rebalance_at_caps_is_deterministic_and_splits_every_cap() {
+    let trace = ArrivalTrace::parse(
+        "0  mriq fpga\n\
+         2  vecadd gpu\n\
+         6  mriq fpga 1.4\n\
+         10 cap 400\n\
+         14 mriq fpga\n\
+         18 vecadd gpu 1.3\n\
+         24 mriq fpga 2.0\n",
+    )
+    .unwrap();
+    let cfg = FederationConfig {
+        base: SchedConfig {
+            template: quick_template(),
+            nodes: two_node_cluster(),
+            fleet_watt_cap: Some(600.0),
+            ..Default::default()
+        },
+        clusters: 2,
+        shard_seed: 5,
+        parallel: false,
+        rebalance_at_caps: true,
+    };
+    let a = run_federated(&trace, &cfg).unwrap();
+    let b = run_federated(&trace, &cfg).unwrap();
+    assert_eq!(
+        a.to_json().to_string_compact(),
+        b.to_json().to_string_compact(),
+        "per-segment probing must stay deterministic"
+    );
+    let par = run_federated(
+        &trace,
+        &FederationConfig {
+            parallel: true,
+            ..cfg.clone()
+        },
+    )
+    .unwrap();
+    assert_eq!(
+        a.to_json().to_string_compact(),
+        par.to_json().to_string_compact(),
+        "segmented probing must be interleaving-invariant too"
+    );
+    assert!(a.rebalanced);
+    assert_eq!(a.admitted + a.dropped, 6);
+    // Initial caps still split the whole budget by first-segment shares.
+    let share_sum: f64 = a.clusters.iter().map(|c| c.share).sum();
+    assert!((share_sum - 1.0).abs() < 1e-9, "shares sum to {share_sum}");
+    for c in &a.clusters {
+        assert_eq!(c.cap_w, Some(600.0 * c.share));
+    }
+
+    // No cap events in the trace ⇒ one segment ⇒ identical reports with
+    // the flag on or off.
+    let flat = ArrivalTrace::parse("0 mriq fpga\n4 vecadd gpu\n8 mriq fpga\n").unwrap();
+    let off = run_federated(
+        &flat,
+        &FederationConfig {
+            rebalance_at_caps: false,
+            ..cfg.clone()
+        },
+    )
+    .unwrap();
+    let on = run_federated(&flat, &cfg).unwrap();
+    assert_eq!(
+        off.to_json().to_string_compact(),
+        on.to_json().to_string_compact(),
+        "no cap events: rebalance_at_caps must be a no-op"
+    );
+}
+
 /// `--clusters 1` must be a no-op wrapper: the single cluster owns the
 /// whole budget (share exactly 1.0, cap scaled bit-exactly), so its
 /// report — ledger totals, per-job energies, even cache counters — is
@@ -353,6 +480,7 @@ fn single_cluster_federation_matches_plain_sched_ledger() {
             base: base.clone(),
             clusters: 1,
             shard_seed: 99,
+            ..Default::default()
         },
     )
     .unwrap();
