@@ -122,6 +122,7 @@ fn keys() -> Vec<MeasureKey> {
             device: DeviceKind::Fpga,
             xfer: TransferMode::Batched,
             env_fingerprint: env,
+            dests: Vec::new(),
         })
         .collect()
 }

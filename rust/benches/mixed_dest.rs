@@ -1,0 +1,217 @@
+//! Bench: mixed-destination search (DESIGN.md §15) vs the classic
+//! single-destination flows.
+//!
+//! For each workload the bench runs the three single-destination searches
+//! (GPU GA, many-core GA, FPGA narrowing funnel) and the per-gene
+//! mixed-destination search over the full `{host, GPU, FPGA, many-core}`
+//! alphabet, recording for each flow:
+//!
+//! * search wall time (the cost of the 4x-wider plan space);
+//! * front quality — the minimum W·s over the flow's Pareto front and the
+//!   front size.
+//!
+//! Environment knobs (see BENCH_mixed.json):
+//!
+//! * `MIXED_ASSERT=1` — enforce the front-quality contract: on at least
+//!   one of the benched workloads the mixed front must contain a plan
+//!   with strictly lower W·s than every plan any single-destination flow
+//!   measured. CI sets this; the wall-time series is always reported,
+//!   never asserted (machine dependent).
+//!
+//! Emits a final JSON object on stdout for the perf dashboard.
+
+use enadapt::canalyze::analyze_source;
+use enadapt::devices::DeviceKind;
+use enadapt::offload::{fpga_flow, gpu_flow, mixed_dest, FpgaFlowConfig, GpuFlowConfig, MixedDestSpec};
+use enadapt::search::GaConfig;
+use enadapt::util::benchkit::section;
+use enadapt::util::json::Json;
+use enadapt::util::tablefmt::Table;
+use enadapt::verifier::{AppModel, VerifEnvConfig};
+use enadapt::workloads;
+use std::time::Instant;
+
+const SEED: u64 = 42;
+const TARGET_CPU_S: f64 = 14.0;
+
+/// One searched flow, reduced to the comparison axes.
+struct FlowPoint {
+    label: String,
+    wall_s: f64,
+    front_min_ws: f64,
+    front_len: usize,
+    trials: usize,
+}
+
+fn front_min_ws(points: &[enadapt::search::Scored]) -> f64 {
+    points
+        .iter()
+        .map(|s| s.objectives.energy_ws)
+        .fold(f64::INFINITY, f64::min)
+}
+
+fn ga_cfg() -> GpuFlowConfig {
+    GpuFlowConfig {
+        ga: GaConfig {
+            population: 16,
+            generations: 12,
+            ..GaConfig::default()
+        },
+        seed: SEED,
+        ..GpuFlowConfig::default()
+    }
+}
+
+fn single_flows(app: &AppModel) -> Vec<FlowPoint> {
+    let mut flows = Vec::new();
+    for device in [DeviceKind::Gpu, DeviceKind::ManyCore] {
+        let env = VerifEnvConfig::r740_pac().build(SEED);
+        let start = Instant::now();
+        let out = gpu_flow::run_on(app, &env, &ga_cfg(), device).expect("single-dest flow");
+        flows.push(FlowPoint {
+            label: device.name().to_string(),
+            wall_s: start.elapsed().as_secs_f64(),
+            front_min_ws: front_min_ws(&out.search.front.points),
+            front_len: out.search.front.points.len(),
+            trials: out.trials,
+        });
+    }
+    let env = VerifEnvConfig::r740_pac().build(SEED);
+    let start = Instant::now();
+    let out = fpga_flow::run(app, &env, &FpgaFlowConfig::default()).expect("fpga funnel");
+    flows.push(FlowPoint {
+        label: "fpga".into(),
+        wall_s: start.elapsed().as_secs_f64(),
+        front_min_ws: front_min_ws(&out.front.points),
+        front_len: out.front.points.len(),
+        trials: out.funnel.first_round + out.funnel.second_round + out.funnel.block_round,
+    });
+    flows
+}
+
+fn mixed_flow(app: &AppModel) -> (FlowPoint, usize) {
+    let env = VerifEnvConfig::r740_pac().build(SEED);
+    let start = Instant::now();
+    let out =
+        mixed_dest::run(app, &env, &ga_cfg(), &MixedDestSpec::default()).expect("mixed-dest flow");
+    (
+        FlowPoint {
+            label: "mixed".into(),
+            wall_s: start.elapsed().as_secs_f64(),
+            front_min_ws: front_min_ws(&out.search.front.points),
+            front_len: out.search.front.points.len(),
+            trials: out.trials,
+        },
+        out.refine_trials,
+    )
+}
+
+fn main() {
+    let enforce = std::env::var("MIXED_ASSERT").as_deref() == Ok("1");
+
+    println!("=== mixed_dest: per-gene destination search vs single-destination flows ===\n");
+
+    let mut series = Vec::new();
+    let mut any_dominates = false;
+    for (name, src) in [("mriq", workloads::MRIQ_C), ("gemm", workloads::GEMM_C)] {
+        let an = analyze_source(&format!("{name}.c"), src).expect("analyze");
+        let env_cfg = VerifEnvConfig::r740_pac();
+        let app =
+            AppModel::from_analysis(&an, &env_cfg.cpu, TARGET_CPU_S).expect("app model");
+
+        section(&format!(
+            "{name}: {} plan genes — 2^{} single-destination plans vs 4^{} mixed plans",
+            app.genome_len(),
+            app.genome_len(),
+            app.genome_len()
+        ));
+        let singles = single_flows(&app);
+        let (mixed, refine_trials) = mixed_flow(&app);
+
+        let single_best_ws = singles
+            .iter()
+            .map(|f| f.front_min_ws)
+            .fold(f64::INFINITY, f64::min);
+        let dominates = mixed.front_min_ws < single_best_ws;
+        any_dominates |= dominates;
+
+        let mut table = Table::new(&[
+            "flow",
+            "wall [s]",
+            "trials",
+            "front",
+            "front min [W*s]",
+        ]);
+        for f in singles.iter().chain(std::iter::once(&mixed)) {
+            table.row(&[
+                f.label.clone(),
+                format!("{:.3}", f.wall_s),
+                f.trials.to_string(),
+                f.front_len.to_string(),
+                format!("{:.0}", f.front_min_ws),
+            ]);
+        }
+        println!("{}", table.render());
+        println!(
+            "{name}: mixed front min {:.0} W·s vs best single-destination {:.0} W·s — {} \
+             ({refine_trials} refinement trials)\n",
+            mixed.front_min_ws,
+            single_best_ws,
+            if dominates {
+                "mixed plan strictly dominates"
+            } else {
+                "no strict mixed win"
+            }
+        );
+
+        let flow_json = |f: &FlowPoint| {
+            Json::obj(vec![
+                ("flow", Json::str(f.label.as_str())),
+                ("wall_s", Json::num(f.wall_s)),
+                ("trials", Json::num(f.trials as f64)),
+                ("front_len", Json::num(f.front_len as f64)),
+                ("front_min_ws", Json::num(f.front_min_ws)),
+            ])
+        };
+        series.push(Json::obj(vec![
+            ("workload", Json::str(name)),
+            ("genes", Json::num(app.genome_len() as f64)),
+            (
+                "flows",
+                Json::arr(
+                    singles
+                        .iter()
+                        .chain(std::iter::once(&mixed))
+                        .map(flow_json)
+                        .collect(),
+                ),
+            ),
+            ("single_best_ws", Json::num(single_best_ws)),
+            ("mixed_min_ws", Json::num(mixed.front_min_ws)),
+            ("mixed_dominates", Json::Bool(dominates)),
+        ]));
+    }
+
+    if enforce {
+        assert!(
+            any_dominates,
+            "no benched workload produced a mixed front plan with strictly lower W·s \
+             than the best single-destination plan — under the BENCH_mixed.json contract"
+        );
+        println!("ok: a mixed plan strictly dominates the best single-destination plan on W·s");
+    } else {
+        println!("(MIXED_ASSERT unset: front-quality contract reported, not enforced)");
+    }
+
+    section("machine-readable result");
+    println!(
+        "{}",
+        Json::obj(vec![
+            ("bench", Json::str("mixed_dest")),
+            ("seed", Json::num(SEED as f64)),
+            ("series", Json::arr(series)),
+            ("any_mixed_dominates", Json::Bool(any_dominates)),
+        ])
+        .to_string_pretty()
+    );
+}

@@ -30,31 +30,50 @@ pub fn substitutions(
 ) -> Vec<BlockSub> {
     app.active_blocks(bits)
         .into_iter()
-        .filter_map(|bi| {
-            let bw = &app.blocks[bi];
-            let im = app.block_impl(bi, device)?;
-            let info = &an.loops[bw.detected.root.0];
-            // Outputs first, then inputs, then the in-scalars (sizes).
-            let mut args: Vec<String> = info.arrays_written.iter().cloned().collect();
-            args.extend(
-                info.arrays_read
-                    .iter()
-                    .filter(|a| !info.arrays_written.contains(*a))
-                    .cloned(),
-            );
-            args.extend(info.scalars_in.iter().cloned());
-            Some(BlockSub {
-                root: bw.detected.root,
-                lines: vec![
-                    format!(
-                        "/* enadapt: {} block in {} (line {}) -> {} */",
-                        bw.detected.kind, bw.detected.func, bw.detected.line, im.library
-                    ),
-                    format!("{}({});", im.call_symbol, args.join(", ")),
-                ],
-            })
-        })
+        .filter_map(|bi| sub_for(an, app, bi, device))
         .collect()
+}
+
+/// Like [`substitutions`], but for a mixed-destination plan: each active
+/// block is substituted with the library call of **its own** destination
+/// gene (`dests` is the full per-gene device vector, loops first).
+pub fn substitutions_mixed(
+    an: &Analysis,
+    app: &AppModel,
+    dests: &[DeviceKind],
+) -> Vec<BlockSub> {
+    let bits: Vec<bool> = dests.iter().map(|&d| d != DeviceKind::Cpu).collect();
+    let n_loops = app.candidates.len();
+    app.active_blocks(&bits)
+        .into_iter()
+        .filter_map(|bi| sub_for(an, app, bi, dests[n_loops + bi]))
+        .collect()
+}
+
+/// The substitution of one active block on one device, if implemented.
+fn sub_for(an: &Analysis, app: &AppModel, bi: usize, device: DeviceKind) -> Option<BlockSub> {
+    let bw = &app.blocks[bi];
+    let im = app.block_impl(bi, device)?;
+    let info = &an.loops[bw.detected.root.0];
+    // Outputs first, then inputs, then the in-scalars (sizes).
+    let mut args: Vec<String> = info.arrays_written.iter().cloned().collect();
+    args.extend(
+        info.arrays_read
+            .iter()
+            .filter(|a| !info.arrays_written.contains(*a))
+            .cloned(),
+    );
+    args.extend(info.scalars_in.iter().cloned());
+    Some(BlockSub {
+        root: bw.detected.root,
+        lines: vec![
+            format!(
+                "/* enadapt: {} block in {} (line {}) -> {} */",
+                bw.detected.kind, bw.detected.func, bw.detected.line, im.library
+            ),
+            format!("{}({});", im.call_symbol, args.join(", ")),
+        ],
+    })
 }
 
 /// Annotator combinator: block roots are replaced with their library

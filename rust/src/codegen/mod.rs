@@ -1,15 +1,18 @@
 //! Automatic code conversion (Step 3 outputs): re-emit the analyzed C with
 //! OpenACC directives (GPU), OpenMP pragmas (many-core) or an OpenCL
-//! kernel/host split (FPGA) for the offload pattern the search selected.
+//! kernel/host split (FPGA) for the offload pattern the search selected —
+//! or, for a mixed-destination plan ([`mixed`], DESIGN.md §15), one
+//! output with per-region annotations in each region's own dialect.
 //! Function-block substitutions ([`blocks`]) replace a detected block's
 //! loop nest with the device library / IP-core call on every path.
 
 pub mod blocks;
 pub mod emit;
+pub mod mixed;
 pub mod openacc;
 pub mod opencl;
 pub mod openmp;
 
-pub use blocks::{substitutions, BlockSub, WithBlocks};
+pub use blocks::{substitutions, substitutions_mixed, BlockSub, WithBlocks};
 pub use emit::{emit_program, Annotator, LoopAnnotation, Plain};
 pub use opencl::OpenClBundle;

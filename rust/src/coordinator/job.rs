@@ -6,7 +6,7 @@ use super::steps::StepLog;
 use crate::canalyze::Analysis;
 use crate::codegen;
 use crate::devices::DeviceKind;
-use crate::offload::{Evaluated, FpgaFlowConfig, GpuFlowConfig, Requirements};
+use crate::offload::{Evaluated, FpgaFlowConfig, GpuFlowConfig, MixedDestSpec, Requirements};
 use crate::search::{FitnessSpec, ParetoFront};
 use crate::verifier::{AppModel, Measurement, VerifEnvConfig};
 use crate::Result;
@@ -94,6 +94,13 @@ pub struct JobConfig {
     /// search ([`crate::funcblock`], DESIGN.md §11). Off by default —
     /// loop-only jobs stay bit-identical to the pre-block behavior.
     pub blocks: bool,
+    /// Per-gene mixed-destination search (`--mixed-dest`, DESIGN.md §15):
+    /// when set, each loop/block gene carries its own destination from
+    /// the spec's alphabet instead of the single job destination. `None`
+    /// (the default) keeps the classic flows bit-identical; a singleton
+    /// alphabet routes through the classic single-destination flow for
+    /// that device, so its reports stay byte-identical too.
+    pub mixed_dest: Option<MixedDestSpec>,
 }
 
 impl Default for JobConfig {
@@ -108,6 +115,7 @@ impl Default for JobConfig {
             requirements: Requirements::default(),
             env: VerifEnvConfig::r740_pac(),
             blocks: false,
+            mixed_dest: None,
         }
     }
 }
@@ -149,8 +157,12 @@ pub struct JobReport {
     /// Destination the best pattern runs on.
     pub device: DeviceKind,
     /// Search-strategy label (`ga`, `exhaustive`, `anneal`, `narrowing`,
-    /// or `mixed(<strategy>)`).
+    /// `mixed(<strategy>)`, or `mixed-dest(<strategy>)`).
     pub strategy: String,
+    /// The mixed-destination spec the search ran under — `Some` only for
+    /// genuinely mixed searches (alphabet of two or more devices), so
+    /// single-destination reports render exactly as before.
+    pub mixed_spec: Option<MixedDestSpec>,
     /// Non-dominated `(time × W·s × peak-W)` front the search measured —
     /// `best` is the configured scalarization's knee pick from it.
     pub front: ParetoFront,
@@ -171,12 +183,14 @@ impl JobReport {
         self.app.blocks.len()
     }
 
-    /// Block destination genes active in the chosen pattern.
+    /// Block destination genes active in the chosen pattern. Goes through
+    /// the destination-aware [`crate::funcblock::OffloadPlan`] rather than
+    /// slicing the raw genome with
+    /// [`Genome::block_ones`](crate::search::Genome::block_ones), which
+    /// assumes the 1-bit-per-gene layout and would mis-count a
+    /// mixed-destination pattern.
     pub fn blocks_active(&self) -> usize {
-        self.best
-            .pattern
-            .genome
-            .block_ones(self.app.candidates.len())
+        self.best.pattern.plan().active_blocks().len()
     }
 }
 
@@ -188,6 +202,10 @@ pub enum GeneratedCode {
     OpenMp(String),
     /// OpenCL kernel/host split (FPGA).
     OpenCl(codegen::OpenClBundle),
+    /// Per-region annotated C for a mixed-destination plan (DESIGN.md
+    /// §15): OpenACC pragmas for GPU regions, OpenMP pragmas for
+    /// many-core regions, IP-core markers for FPGA regions.
+    Mixed(String),
     /// No offload chosen: original source unchanged.
     Unchanged,
 }
@@ -199,6 +217,7 @@ impl GeneratedCode {
             GeneratedCode::OpenAcc(_) => "openacc",
             GeneratedCode::OpenMp(_) => "openmp",
             GeneratedCode::OpenCl(_) => "opencl",
+            GeneratedCode::Mixed(_) => "mixed",
             GeneratedCode::Unchanged => "unchanged",
         }
     }

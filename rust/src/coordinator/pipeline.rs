@@ -15,7 +15,9 @@ use super::steps::{Step, StepLog};
 use crate::canalyze::{self, Analysis};
 use crate::codegen;
 use crate::devices::{DeviceKind, TransferMode};
-use crate::offload::{fpga_flow, gpu_flow, mixed, Evaluated, MixedConfig};
+use crate::offload::{
+    fpga_flow, gpu_flow, mixed, mixed_dest, Evaluated, MixedConfig, MixedDestSpec,
+};
 use crate::search::ParetoFront;
 use crate::util::measure_cache::MeasureCache;
 use crate::verifier::{AppModel, Measurement, VerifEnv};
@@ -61,6 +63,28 @@ impl Pipeline {
         &self.cfg
     }
 
+    /// The mixed-destination spec this job genuinely searches under —
+    /// `Some` only for an alphabet of two or more devices. A singleton
+    /// alphabet IS the classic single-destination search over a redundant
+    /// encoding, so [`Pipeline::effective_destination`] routes it through
+    /// the classic arm instead (byte-identical reports, including the
+    /// FPGA narrowing funnel).
+    fn mixed_multi(&self) -> Option<&MixedDestSpec> {
+        match &self.cfg.mixed_dest {
+            Some(spec) if spec.alphabet.len() >= 2 => Some(spec),
+            _ => None,
+        }
+    }
+
+    /// The destination the classic arms run against once a singleton
+    /// mixed alphabet has been folded onto its device.
+    fn effective_destination(&self) -> Destination {
+        match &self.cfg.mixed_dest {
+            Some(spec) if spec.alphabet.len() == 1 => Destination::Device(spec.alphabet[0]),
+            _ => self.cfg.destination,
+        }
+    }
+
     /// Run the full Steps 1–7 job.
     pub fn run(&self, source_name: &str, source: &str) -> Result<JobReport> {
         let mut steps = StepLog::new();
@@ -89,6 +113,7 @@ impl Pipeline {
             best,
             device,
             strategy,
+            mixed_spec: self.mixed_multi().cloned(),
             front,
             production,
             generated,
@@ -181,7 +206,39 @@ impl Pipeline {
                     .collect();
                 format!("; {} function block gene(s) [{}]", app.blocks.len(), names.join(", "))
             };
-            let (outcome, detail) = match cfg.destination {
+            // A genuinely mixed alphabet searches per-gene destinations;
+            // everything else (including a singleton `--mixed-dest`
+            // alphabet folded onto its device) takes the classic arms.
+            if let Some(spec) = self.mixed_multi() {
+                let out = mixed_dest::run(app, env, &cfg.ga_flow, spec)?;
+                let letters: Vec<String> = spec
+                    .alphabet
+                    .iter()
+                    .map(|d| crate::funcblock::dest_letter(*d).to_string())
+                    .collect();
+                let d = format!(
+                    "mixed-dest over [{}]: {} plans measured ({} by refinement); best {} (value {:.5}, front {})",
+                    letters.join(""),
+                    out.trials,
+                    out.refine_trials,
+                    out.best.pattern,
+                    out.best.value,
+                    out.search.front.len()
+                );
+                // The report device is the plan's dominant accelerator
+                // (where most kernel time runs), Cpu for an all-host plan.
+                let device = out.best.measurement.device;
+                return Ok((
+                    SearchStageOutcome {
+                        best: out.best,
+                        device,
+                        strategy: format!("mixed-dest({})", cfg.ga_flow.strategy.name()),
+                        front: out.search.front,
+                    },
+                    format!("{d}{block_note}"),
+                ));
+            }
+            let (outcome, detail) = match self.effective_destination() {
                 Destination::Device(DeviceKind::Fpga) if cfg.ga_flow.strategy.uses_fpga_funnel() => {
                     let out = fpga_flow::run(app, env, &cfg.fpga_flow)?;
                     let d = format!(
@@ -277,6 +334,20 @@ impl Pipeline {
     ) -> Result<()> {
         let cfg = &self.cfg;
         steps.run(Step::ResourceAdjustment, || {
+            // Mixed-destination plans partition per gene: report the
+            // gene-count per device instead of a single-device plan.
+            if let Some(dests) = best.pattern.dest_genes() {
+                let count = |d: DeviceKind| dests.iter().filter(|&&x| x == d).count();
+                let detail = format!(
+                    "mixed plan {}: {} host / {} gpu / {} fpga / {} many-core gene(s)",
+                    best.pattern.plan(),
+                    count(DeviceKind::Cpu),
+                    count(DeviceKind::Gpu),
+                    count(DeviceKind::Fpga),
+                    count(DeviceKind::ManyCore),
+                );
+                return Ok(((), detail));
+            }
             let detail = match device {
                 DeviceKind::Fpga => {
                     let regions = app.regions(best.pattern.bits());
@@ -326,6 +397,38 @@ impl Pipeline {
         device: DeviceKind,
     ) -> Result<(GeneratedCode, Measurement)> {
         steps.run(Step::PlacementAndVerification, || {
+            // Mixed-destination plans generate per-region annotations and
+            // re-measure through the hop-charging mixed path; the
+            // single-destination branch below is untouched so classic
+            // reports stay byte-identical.
+            if let Some(dests) = best.pattern.dest_genes() {
+                let regions = app.regions(best.pattern.bits());
+                let subs = codegen::blocks::substitutions_mixed(analysis, app, dests);
+                let generated = if regions.is_empty() && subs.is_empty() {
+                    GeneratedCode::Unchanged
+                } else {
+                    GeneratedCode::Mixed(codegen::mixed::generate(analysis, app, dests))
+                };
+                let mut production =
+                    env.measure_mixed(app, dests, TransferMode::Batched);
+                production.phase = crate::verifier::PhaseKind::Production;
+                let c = &production.report.components;
+                let detail = format!(
+                    "generated {} code; production run: {:.2} s, {:.1} W, {:.0} W·s \
+                     (idle {:.0} + host {:.0} + accel {:.0} + xfer {:.0} W·s, peak {:.0} W, {} meter)",
+                    generated.kind(),
+                    production.time_s,
+                    production.mean_w,
+                    production.energy_ws,
+                    c.idle_ws,
+                    c.host_cpu_ws,
+                    c.accelerator_ws,
+                    c.transfer_ws,
+                    production.report.peak_w,
+                    production.report.meter,
+                );
+                return Ok(((generated, production), detail));
+            }
             let regions = app.regions(best.pattern.bits());
             let subs =
                 codegen::blocks::substitutions(analysis, app, best.pattern.bits(), device);
@@ -427,5 +530,72 @@ mod tests {
         assert_eq!(cached.production.time_s, plain.production.time_s);
         assert_eq!(cached.production.energy_ws, plain.production.energy_ws);
         assert!(cache.misses() > 0);
+    }
+
+    fn quick_ga() -> crate::offload::GpuFlowConfig {
+        crate::offload::GpuFlowConfig {
+            ga: crate::search::GaConfig {
+                population: 10,
+                generations: 8,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn mixed_dest_job_reports_a_per_gene_plan() {
+        let cfg = JobConfig {
+            mixed_dest: Some(MixedDestSpec::default()),
+            ga_flow: quick_ga(),
+            ..Default::default()
+        };
+        let report = Pipeline::new(cfg).run("mriq.c", workloads::MRIQ_C).unwrap();
+        assert!(
+            report.strategy.starts_with("mixed-dest("),
+            "{}",
+            report.strategy
+        );
+        assert!(report.mixed_spec.is_some());
+        assert!(report.best.pattern.dest_genes().is_some());
+        assert!(matches!(report.generated, GeneratedCode::Mixed(_)));
+        if let GeneratedCode::Mixed(code) = &report.generated {
+            assert!(code.contains("mixed-destination offload plan"));
+        }
+        assert_eq!(report.steps.records.len(), 7);
+        // The rendered plan uses the letter alphabet with a device gene.
+        let plan = report.best.pattern.plan().to_string();
+        assert!(
+            plan.chars().any(|c| "GFM".contains(c)),
+            "plan {plan} offloads nothing"
+        );
+    }
+
+    #[test]
+    fn singleton_mixed_alphabet_matches_the_classic_flow_exactly() {
+        use crate::devices::DeviceKind;
+        let classic = JobConfig {
+            destination: Destination::Device(DeviceKind::Gpu),
+            ga_flow: quick_ga(),
+            ..Default::default()
+        };
+        // A singleton alphabet folds onto the classic GPU arm no matter
+        // what the configured destination says.
+        let folded = JobConfig {
+            mixed_dest: Some(MixedDestSpec {
+                alphabet: vec![DeviceKind::Gpu],
+            }),
+            ga_flow: quick_ga(),
+            ..classic.clone()
+        };
+        let a = Pipeline::new(classic).run("mriq.c", workloads::MRIQ_C).unwrap();
+        let b = Pipeline::new(folded).run("mriq.c", workloads::MRIQ_C).unwrap();
+        assert_eq!(a.best.pattern.genome, b.best.pattern.genome);
+        assert!(b.best.pattern.dest_genes().is_none(), "classic pattern");
+        assert!(b.mixed_spec.is_none(), "singleton is not a mixed report");
+        assert_eq!(a.device, b.device);
+        assert_eq!(a.strategy, b.strategy);
+        assert_eq!(a.production.energy_ws, b.production.energy_ws);
+        assert_eq!(a.trials, b.trials);
     }
 }

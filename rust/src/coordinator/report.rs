@@ -109,6 +109,27 @@ pub fn component_ledger(baseline: &Measurement, offloaded: &Measurement) -> Stri
     out
 }
 
+/// Display label of a front genome in a job report: raw bits for
+/// single-destination searches; the decoded letter plan (e.g.
+/// `GG-F-|M-`) for mixed-destination searches, whose front genomes are
+/// widened per-gene destination codes.
+pub fn front_label(r: &JobReport, g: &crate::search::Genome) -> String {
+    match &r.mixed_spec {
+        Some(spec) => crate::offload::plan_of_genome(&r.app, spec, g).to_string(),
+        None => g.to_string(),
+    }
+}
+
+/// Display label of the chosen pattern's genome (see [`front_label`]).
+fn best_label(r: &JobReport) -> String {
+    match &r.mixed_spec {
+        // The chosen pattern carries its destinations directly — its
+        // genome is the derived selection bits, not the widened codes.
+        Some(_) => r.best.pattern.plan().to_string(),
+        None => r.best.pattern.genome.to_string(),
+    }
+}
+
 /// Full job report (CLI `offload`).
 pub fn render_job(r: &JobReport) -> String {
     let mut out = String::new();
@@ -121,6 +142,14 @@ pub fn render_job(r: &JobReport) -> String {
     ));
     out.push_str(&format!("evaluation val : {:.6}\n", r.best.value));
     out.push_str(&format!("search strategy: {}\n", r.strategy));
+    if let Some(spec) = &r.mixed_spec {
+        let letters: Vec<String> = spec
+            .alphabet
+            .iter()
+            .map(|d| format!("{}={}", crate::funcblock::dest_letter(*d), d.name()))
+            .collect();
+        out.push_str(&format!("mixed alphabet : {}\n", letters.join(", ")));
+    }
     if r.blocks_detected() > 0 {
         let names: Vec<String> = r
             .app
@@ -138,7 +167,7 @@ pub fn render_job(r: &JobReport) -> String {
     out.push_str(&format!(
         "pareto front   : {} non-dominated point(s); scalarization-last pick = {} (value {:.6})\n",
         r.front.len(),
-        r.best.pattern.genome,
+        best_label(r),
         r.best.value
     ));
     out.push_str(&format!(
@@ -158,10 +187,21 @@ pub fn pareto_table(
     front: &crate::search::ParetoFront,
     knee: Option<&crate::search::Genome>,
 ) -> String {
+    pareto_table_with(front, knee, |g| g.to_string())
+}
+
+/// [`pareto_table`] with a custom genome label — mixed-destination
+/// callers pass a decoder so rows read as letter plans (`GG-F-|M-`)
+/// instead of raw widened bits.
+pub fn pareto_table_with(
+    front: &crate::search::ParetoFront,
+    knee: Option<&crate::search::Genome>,
+    label_of: impl Fn(&crate::search::Genome) -> String,
+) -> String {
     let mut t = Table::new(&["pattern", "time [s]", "energy [W*s]", "peak [W]", "mean [W]"]);
     for s in &front.points {
         let o = &s.objectives;
-        let mut label = s.genome.to_string();
+        let mut label = label_of(&s.genome);
         if s.genome.ones() == 0 {
             label.push_str(" (cpu-only)");
         }
@@ -201,7 +241,7 @@ pub fn job_json(r: &JobReport) -> Json {
                     .iter()
                     .map(|s| {
                         Json::obj(vec![
-                            ("pattern", Json::str(s.genome.to_string())),
+                            ("pattern", Json::str(front_label(r, &s.genome))),
                             ("time_s", Json::num(s.objectives.time_s)),
                             ("energy_ws", Json::num(s.objectives.energy_ws)),
                             ("peak_w", Json::num(s.objectives.peak_w)),
@@ -343,6 +383,42 @@ mod tests {
         let rep = parsed.get("production").unwrap().get("report").unwrap();
         assert_eq!(rep.get("meter").unwrap().as_str(), Some("ipmi"));
         assert!(rep.get("components_ws").unwrap().get("accel").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn mixed_job_report_renders_letter_plans() {
+        let mut cfg = JobConfig::default();
+        cfg.mixed_dest = Some(crate::offload::MixedDestSpec::default());
+        cfg.ga_flow.ga.population = 10;
+        cfg.ga_flow.ga.generations = 8;
+        let r = run_job("mriq.c", workloads::MRIQ_C, &cfg).unwrap();
+        let text = render_job(&r);
+        assert!(
+            text.contains("mixed alphabet : G=gpu, F=fpga, M=many-core-cpu"),
+            "{text}"
+        );
+        assert!(text.contains("search strategy: mixed-dest(ga)"), "{text}");
+        // The scalarization pick renders as a letter plan, not raw bits.
+        let pick = r.best.pattern.plan().to_string();
+        assert!(text.contains(&format!("pick = {pick}")), "{text}");
+        // JSON front entries decode the widened genomes to letter plans.
+        let j = job_json(&r);
+        let parsed = crate::util::json::parse(&j.to_string_pretty()).unwrap();
+        let front = parsed.get("front").unwrap().as_arr().unwrap();
+        assert!(!front.is_empty());
+        for p in front {
+            let pat = p.get("pattern").unwrap().as_str().unwrap();
+            assert!(
+                pat.chars().all(|c| matches!(c, '-' | 'G' | 'F' | 'M' | '|')),
+                "front pattern should be a letter plan, got {pat}"
+            );
+        }
+        // The front table reads in letters too when given the decoder.
+        let spec = r.mixed_spec.clone().unwrap();
+        let table = pareto_table_with(&r.front, None, |g| {
+            crate::offload::plan_of_genome(&r.app, &spec, g).to_string()
+        });
+        assert!(table.contains("(cpu-only)"), "{table}");
     }
 
     #[test]

@@ -29,4 +29,7 @@ pub mod plan;
 
 pub use db::{AlgoClass, BlockDb, BlockEntry, BlockImplModel, BlockKind};
 pub use detect::{detect, DetectVia, DetectedBlock};
-pub use plan::OffloadPlan;
+pub use plan::{
+    dest_code, dest_from_code, dest_from_letter, dest_letter, dests_from_wide, wide_from_dests,
+    OffloadPlan, BITS_PER_DEST_GENE,
+};

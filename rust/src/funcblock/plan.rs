@@ -1,5 +1,6 @@
 //! Offload plans: block substitutions layered on top of the per-loop
-//! pattern bitmask.
+//! pattern bitmask, and — since the mixed-destination generalization
+//! (DESIGN.md §15) — optional per-gene destinations.
 //!
 //! A plan is one bit vector — the first `n_loops` genes are the classic
 //! §3.1 loop genes (1 = offload that candidate loop), the remaining genes
@@ -9,6 +10,89 @@
 //! vector unchanged; the verifier masks loop genes covered by an active
 //! block when resolving regions
 //! ([`crate::verifier::AppModel::regions`]).
+//!
+//! A **mixed-destination** plan additionally carries one
+//! [`DeviceKind`] per gene: the bit vector stays the derived
+//! offloaded/host selection (`dest != Cpu`), and the destinations say
+//! *where* each selected loop or block runs. Mixed plans render as
+//! letters (`-` host, `G` GPU, `F` FPGA, `M` many-core), e.g. `GG-F-|M-`;
+//! single-destination plans keep the classic `0101|10` rendering
+//! bit-for-bit.
+
+use crate::devices::DeviceKind;
+
+/// Bits per gene in a widened (mixed-destination) genome: each gene is a
+/// 2-bit destination code, low bit first.
+pub const BITS_PER_DEST_GENE: usize = 2;
+
+/// Destination ↔ 2-bit gene code (`b0 + 2·b1`). Code 0 is the host, so
+/// the all-zero genome stays the all-CPU baseline in the widened space.
+pub fn dest_code(d: DeviceKind) -> usize {
+    match d {
+        DeviceKind::Cpu => 0,
+        DeviceKind::Gpu => 1,
+        DeviceKind::Fpga => 2,
+        DeviceKind::ManyCore => 3,
+    }
+}
+
+/// Inverse of [`dest_code`] (the code is taken modulo 4).
+pub fn dest_from_code(code: usize) -> DeviceKind {
+    match code & 3 {
+        0 => DeviceKind::Cpu,
+        1 => DeviceKind::Gpu,
+        2 => DeviceKind::Fpga,
+        _ => DeviceKind::ManyCore,
+    }
+}
+
+/// One-letter rendering of a per-gene destination (`-` = stays on the
+/// host / inactive gene).
+pub fn dest_letter(d: DeviceKind) -> char {
+    match d {
+        DeviceKind::Cpu => '-',
+        DeviceKind::Gpu => 'G',
+        DeviceKind::Fpga => 'F',
+        DeviceKind::ManyCore => 'M',
+    }
+}
+
+/// Inverse of [`dest_letter`].
+pub fn dest_from_letter(c: char) -> Option<DeviceKind> {
+    match c {
+        '-' => Some(DeviceKind::Cpu),
+        'G' => Some(DeviceKind::Gpu),
+        'F' => Some(DeviceKind::Fpga),
+        'M' => Some(DeviceKind::ManyCore),
+        _ => None,
+    }
+}
+
+/// Decode a widened genome (2 bits per gene, low bit first) into per-gene
+/// destinations. The length must be a multiple of
+/// [`BITS_PER_DEST_GENE`].
+pub fn dests_from_wide(bits: &[bool]) -> Vec<DeviceKind> {
+    assert!(
+        bits.len() % BITS_PER_DEST_GENE == 0,
+        "widened genome length {} is not a whole number of genes",
+        bits.len()
+    );
+    bits.chunks(BITS_PER_DEST_GENE)
+        .map(|pair| dest_from_code(pair[0] as usize + 2 * (pair[1] as usize)))
+        .collect()
+}
+
+/// Encode per-gene destinations as a widened genome (inverse of
+/// [`dests_from_wide`]).
+pub fn wide_from_dests(dests: &[DeviceKind]) -> Vec<bool> {
+    let mut bits = Vec::with_capacity(dests.len() * BITS_PER_DEST_GENE);
+    for &d in dests {
+        let c = dest_code(d);
+        bits.push(c & 1 == 1);
+        bits.push(c & 2 == 2);
+    }
+    bits
+}
 
 /// A combined loop + block plan over one application.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -17,19 +101,104 @@ pub struct OffloadPlan {
     pub n_loops: usize,
     /// The full gene vector (`n_loops` loop genes, then block genes).
     pub bits: Vec<bool>,
+    /// Per-gene destinations for mixed-destination plans (`None` for
+    /// classic single-destination plans). When present, the vector is as
+    /// long as `bits` and `bits[i] == (dests[i] != Cpu)` by construction.
+    pub dests: Option<Vec<DeviceKind>>,
 }
 
 impl OffloadPlan {
     /// Build a plan from a full gene vector.
     pub fn new(n_loops: usize, bits: Vec<bool>) -> Self {
         assert!(bits.len() >= n_loops, "plan shorter than its loop genes");
-        Self { n_loops, bits }
+        Self {
+            n_loops,
+            bits,
+            dests: None,
+        }
     }
 
     /// A loop-only plan (no detected blocks).
     pub fn loop_only(bits: Vec<bool>) -> Self {
         let n_loops = bits.len();
-        Self { n_loops, bits }
+        Self {
+            n_loops,
+            bits,
+            dests: None,
+        }
+    }
+
+    /// Build a mixed-destination plan from per-gene destinations; the
+    /// selection bits are derived (`dest != Cpu`).
+    pub fn mixed(n_loops: usize, dests: Vec<DeviceKind>) -> Self {
+        assert!(dests.len() >= n_loops, "plan shorter than its loop genes");
+        let bits = dests.iter().map(|&d| d != DeviceKind::Cpu).collect();
+        Self {
+            n_loops,
+            bits,
+            dests: Some(dests),
+        }
+    }
+
+    /// The per-gene destinations of a mixed-destination plan.
+    pub fn dest_genes(&self) -> Option<&[DeviceKind]> {
+        self.dests.as_deref()
+    }
+
+    /// Destination of gene `i`: the per-gene destination when this is a
+    /// mixed plan, else `fallback` for selected genes and `Cpu` for
+    /// unselected ones.
+    pub fn dest_of(&self, i: usize, fallback: DeviceKind) -> DeviceKind {
+        match &self.dests {
+            Some(d) => d[i],
+            None if self.bits[i] => fallback,
+            None => DeviceKind::Cpu,
+        }
+    }
+
+    /// The distinct non-host devices a mixed plan uses, in [`dest_code`]
+    /// order. Empty for single-destination plans (the destination lives
+    /// outside the plan) and for all-CPU mixed plans.
+    pub fn distinct_devices(&self) -> Vec<DeviceKind> {
+        let mut seen = [false; 4];
+        if let Some(dests) = &self.dests {
+            for &d in dests {
+                seen[dest_code(d)] = true;
+            }
+        }
+        (1..4).filter(|&c| seen[c]).map(dest_from_code).collect()
+    }
+
+    /// Parse a rendered plan: `0101` / `0101|10` for single-destination
+    /// plans, `G-MF|M-` for mixed ones (the inverse of `Display`).
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        let bad =
+            |what: &str| crate::Error::Config(format!("offload plan '{s}': {what}"));
+        let (loop_part, block_part) = match s.split_once('|') {
+            Some((l, b)) => (l, Some(b)),
+            None => (s, None),
+        };
+        if loop_part.is_empty() && block_part.is_none() {
+            return Err(bad("empty plan"));
+        }
+        let n_loops = loop_part.chars().count();
+        let all: Vec<char> = loop_part
+            .chars()
+            .chain(block_part.unwrap_or("").chars())
+            .collect();
+        if all.iter().all(|c| *c == '0' || *c == '1') {
+            let bits = all.iter().map(|&c| c == '1').collect();
+            return Ok(Self {
+                n_loops,
+                bits,
+                dests: None,
+            });
+        }
+        let dests: Vec<DeviceKind> = all
+            .iter()
+            .map(|&c| dest_from_letter(c).ok_or_else(|| bad(&format!("bad gene '{c}'"))))
+            .collect::<crate::Result<_>>()?;
+        Ok(Self::mixed(n_loops, dests))
     }
 
     /// The loop genes.
@@ -70,15 +239,31 @@ impl OffloadPlan {
 }
 
 impl std::fmt::Display for OffloadPlan {
-    /// `0101` for loop-only plans; `0101|10` when block genes exist.
+    /// `0101` for loop-only plans; `0101|10` when block genes exist;
+    /// `G-MF|M-` letters for mixed-destination plans.
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        for &b in self.loop_bits() {
-            write!(f, "{}", if b { '1' } else { '0' })?;
-        }
-        if self.n_blocks() > 0 {
-            write!(f, "|")?;
-            for &b in self.block_bits() {
-                write!(f, "{}", if b { '1' } else { '0' })?;
+        match &self.dests {
+            Some(dests) => {
+                for &d in &dests[..self.n_loops] {
+                    write!(f, "{}", dest_letter(d))?;
+                }
+                if self.n_blocks() > 0 {
+                    write!(f, "|")?;
+                    for &d in &dests[self.n_loops..] {
+                        write!(f, "{}", dest_letter(d))?;
+                    }
+                }
+            }
+            None => {
+                for &b in self.loop_bits() {
+                    write!(f, "{}", if b { '1' } else { '0' })?;
+                }
+                if self.n_blocks() > 0 {
+                    write!(f, "|")?;
+                    for &b in self.block_bits() {
+                        write!(f, "{}", if b { '1' } else { '0' })?;
+                    }
+                }
             }
         }
         Ok(())
@@ -114,5 +299,77 @@ mod tests {
     #[should_panic(expected = "shorter")]
     fn undersized_plan_panics() {
         OffloadPlan::new(4, vec![true]);
+    }
+
+    #[test]
+    fn dest_codec_round_trips() {
+        for code in 0..4 {
+            assert_eq!(dest_code(dest_from_code(code)), code);
+        }
+        for d in [
+            DeviceKind::Cpu,
+            DeviceKind::Gpu,
+            DeviceKind::Fpga,
+            DeviceKind::ManyCore,
+        ] {
+            assert_eq!(dest_from_letter(dest_letter(d)), Some(d));
+        }
+        assert_eq!(dest_from_letter('x'), None);
+    }
+
+    #[test]
+    fn wide_encoding_round_trips_and_keeps_zero_as_host() {
+        let dests = vec![
+            DeviceKind::Gpu,
+            DeviceKind::Cpu,
+            DeviceKind::ManyCore,
+            DeviceKind::Fpga,
+        ];
+        let wide = wide_from_dests(&dests);
+        assert_eq!(wide.len(), dests.len() * BITS_PER_DEST_GENE);
+        assert_eq!(dests_from_wide(&wide), dests);
+        // All-zero widened genome = all-CPU baseline.
+        assert!(dests_from_wide(&vec![false; 8])
+            .iter()
+            .all(|&d| d == DeviceKind::Cpu));
+    }
+
+    #[test]
+    fn mixed_plan_derives_bits_and_renders_letters() {
+        let p = OffloadPlan::mixed(
+            5,
+            vec![
+                DeviceKind::Gpu,
+                DeviceKind::Gpu,
+                DeviceKind::Cpu,
+                DeviceKind::Fpga,
+                DeviceKind::Cpu,
+                DeviceKind::ManyCore,
+                DeviceKind::Cpu,
+            ],
+        );
+        assert_eq!(p.to_string(), "GG-F-|M-");
+        assert_eq!(p.loop_bits(), &[true, true, false, true, false]);
+        assert_eq!(p.active_blocks(), vec![0]);
+        assert_eq!(
+            p.distinct_devices(),
+            vec![DeviceKind::Gpu, DeviceKind::Fpga, DeviceKind::ManyCore]
+        );
+        assert_eq!(p.dest_of(3, DeviceKind::Gpu), DeviceKind::Fpga);
+    }
+
+    #[test]
+    fn parse_inverts_display_for_both_forms() {
+        for s in ["0101", "100|10", "GG-F-|M-", "--M", "F"] {
+            let p = OffloadPlan::parse(s).unwrap();
+            assert_eq!(p.to_string(), s, "round trip of '{s}'");
+        }
+        let bits = OffloadPlan::parse("100|10").unwrap();
+        assert!(bits.dests.is_none());
+        let mixed = OffloadPlan::parse("GG-F-|M-").unwrap();
+        assert_eq!(mixed.n_loops, 5);
+        assert!(mixed.dests.is_some());
+        assert!(OffloadPlan::parse("01Q").is_err());
+        assert!(OffloadPlan::parse("").is_err());
     }
 }

@@ -59,6 +59,12 @@ fn app() -> App {
                  (matmul/fft/histogram) and let the search substitute \
                  device library / IP-core implementations",
             ),
+            flag(
+                "mixed-dest",
+                "per-loop destination genes: one plan may place different \
+                 loops on different devices (gpu/fpga/many-core), with \
+                 cross-device transfer edges charged in the verifier",
+            ),
             flag("json", "emit machine-readable JSON on stdout"),
         ]
     };
@@ -347,6 +353,9 @@ fn job_config(p: &Parsed) -> enadapt::Result<JobConfig> {
     if p.flag("blocks") {
         cfg.blocks = true;
     }
+    if p.flag("mixed-dest") {
+        cfg.mixed_dest = Some(enadapt::offload::MixedDestSpec::default());
+    }
     if let Ok(g) = p.get_usize("generations") {
         cfg.ga_flow.ga.generations = g;
     }
@@ -514,10 +523,23 @@ fn dispatch(p: &Parsed) -> enadapt::Result<()> {
                     // flow's winner can, in sensor-noise edge cases, sit a
                     // float-ulp off the front).
                     let knee = report.front.knee(&cfg.fitness).map(|s| s.genome.clone());
-                    println!(
-                        "{}",
-                        coordinator::report::pareto_table(&report.front, knee.as_ref())
-                    );
+                    match &report.mixed_spec {
+                        // Mixed fronts carry widened destination-code
+                        // genomes — decode rows to letter plans.
+                        Some(spec) => println!(
+                            "{}",
+                            coordinator::report::pareto_table_with(
+                                &report.front,
+                                knee.as_ref(),
+                                |g| enadapt::offload::plan_of_genome(&report.app, spec, g)
+                                    .to_string(),
+                            )
+                        ),
+                        None => println!(
+                            "{}",
+                            coordinator::report::pareto_table(&report.front, knee.as_ref())
+                        ),
+                    }
                 }
             }
             Ok(())
@@ -722,6 +744,7 @@ fn dispatch(p: &Parsed) -> enadapt::Result<()> {
                     println!("/* ===== kernels (.cl) ===== */\n{}", b.kernel_source);
                     println!("/* ===== host (.c) ===== */\n{}", b.host_source);
                 }
+                coordinator::GeneratedCode::Mixed(c) => println!("{c}"),
                 coordinator::GeneratedCode::Unchanged => println!("{src}"),
             }
             Ok(())

@@ -1,0 +1,469 @@
+//! Mixed-destination offloading (DESIGN.md §15): instead of one device
+//! for the whole job, every gene — processable loop or detected function
+//! block — carries its own destination, so a single plan can put the
+//! dominant nest on the FPGA while secondary loops run on the many-core
+//! CPU. The search runs over a widened genome of
+//! [`BITS_PER_DEST_GENE`]-bit destination codes (code 0 = stay on the
+//! host), measured through
+//! [`VerifEnv::measure_mixed`](crate::verifier::VerifEnv::measure_mixed)
+//! which charges cross-device transfer hops between adjacent offload
+//! units on different devices.
+//!
+//! The flow mirrors [`super::gpu_flow`] — same strategies, same
+//! measure-once archive, same Watt-cap fallback — plus a deterministic
+//! per-gene **refinement sweep** after the strategy finishes: each gene
+//! is swept through every alternative destination while the others stay
+//! fixed, adopting strict improvements, until a full sweep changes
+//! nothing. The energy model is near-additive per gene, so the sweep
+//! reliably captures "dominant nest → FPGA, secondary loops → many-core"
+//! assignments a single-destination search cannot express. Every
+//! refinement trial joins the measurement log, so the returned Pareto
+//! front covers the refined plans too.
+
+use super::gpu_flow::{Evaluated, GpuFlowConfig};
+use super::pattern::OffloadPattern;
+use crate::devices::{DeviceKind, TransferMode};
+use crate::funcblock::{OffloadPlan, BITS_PER_DEST_GENE};
+use crate::search::{self, Genome, SearchResult};
+use crate::verifier::{AppModel, Measurement, VerifEnv};
+use crate::{Error, Result};
+use std::collections::HashMap;
+
+/// Cap on refinement sweeps — each sweep only adopts strict fitness
+/// improvements over a finite plan space, so the loop terminates anyway;
+/// the cap bounds worst-case search cost.
+const MAX_REFINE_SWEEPS: usize = 4;
+
+/// The destination alphabet of a mixed search: which devices a non-zero
+/// gene code may select. Code 0 always decodes to the host CPU; code `c`
+/// (1-based) decodes to `alphabet[(c - 1) % alphabet.len()]`, so a
+/// singleton alphabet degenerates to the classic single-destination
+/// search over a redundant encoding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MixedDestSpec {
+    /// Candidate devices for non-host genes, in code order.
+    pub alphabet: Vec<DeviceKind>,
+}
+
+impl Default for MixedDestSpec {
+    fn default() -> Self {
+        Self {
+            alphabet: vec![DeviceKind::Gpu, DeviceKind::Fpga, DeviceKind::ManyCore],
+        }
+    }
+}
+
+impl MixedDestSpec {
+    /// Number of bits a genome needs for `n_genes` destination genes.
+    pub fn genome_width(&self, n_genes: usize) -> usize {
+        n_genes * BITS_PER_DEST_GENE
+    }
+
+    /// Decode a widened genome into one destination per gene. With the
+    /// full default alphabet this matches
+    /// [`crate::funcblock::dests_from_wide`] exactly; restricted
+    /// alphabets fold the unreachable codes onto their members so every
+    /// bit pattern stays a valid plan (no dead search space).
+    pub fn decode(&self, bits: &[bool]) -> Vec<DeviceKind> {
+        assert!(
+            !self.alphabet.is_empty(),
+            "mixed-destination alphabet is empty"
+        );
+        assert!(
+            bits.len() % BITS_PER_DEST_GENE == 0,
+            "genome length {} is not a whole number of {BITS_PER_DEST_GENE}-bit genes",
+            bits.len()
+        );
+        bits.chunks(BITS_PER_DEST_GENE)
+            .map(|gene| {
+                let mut code = 0usize;
+                for (i, &b) in gene.iter().enumerate() {
+                    if b {
+                        code |= 1 << i;
+                    }
+                }
+                if code == 0 {
+                    DeviceKind::Cpu
+                } else {
+                    self.alphabet[(code - 1) % self.alphabet.len()]
+                }
+            })
+            .collect()
+    }
+
+    /// Distinct gene codes worth proposing during refinement: 0 (host)
+    /// plus one canonical code per alphabet member — redundant encodings
+    /// of the same device are skipped, they cannot change the plan.
+    fn codes(&self) -> impl Iterator<Item = usize> + '_ {
+        0..=self.alphabet.len().min((1 << BITS_PER_DEST_GENE) - 1)
+    }
+}
+
+/// The canonical [`OffloadPlan`] of a widened genome under a spec — what
+/// reports and the fleet renderer show for mixed searches (letter plans
+/// like `GG-F-|M-`).
+pub fn plan_of_genome(app: &AppModel, spec: &MixedDestSpec, genome: &Genome) -> OffloadPlan {
+    OffloadPlan::mixed(app.candidates.len(), spec.decode(&genome.bits))
+}
+
+/// Mixed-destination flow outcome.
+#[derive(Debug, Clone)]
+pub struct MixedDestOutcome {
+    /// CPU-only baseline measurement.
+    pub baseline: Measurement,
+    /// Baseline evaluation value.
+    pub baseline_value: f64,
+    /// Best plan after search + refinement (may be the baseline).
+    pub best: Evaluated,
+    /// Search internals over the widened genome. The front is rebuilt
+    /// over the *full* measurement log, so refinement trials are on it.
+    pub search: SearchResult,
+    /// Distinct plans measured in total (strategy + refinement).
+    pub trials: usize,
+    /// Distinct plans first measured by the refinement sweeps.
+    pub refine_trials: usize,
+}
+
+/// Run the configured strategy over the mixed-destination plan space.
+pub fn run(
+    app: &AppModel,
+    env: &VerifEnv,
+    cfg: &GpuFlowConfig,
+    spec: &MixedDestSpec,
+) -> Result<MixedDestOutcome> {
+    if app.genome_len() == 0 {
+        return Err(Error::Verify(format!(
+            "{}: no parallelizable loops to search",
+            app.name
+        )));
+    }
+    if spec.alphabet.is_empty() {
+        return Err(Error::Config(
+            "mixed-destination alphabet must name at least one device".into(),
+        ));
+    }
+    if spec.alphabet.contains(&DeviceKind::Cpu) {
+        return Err(Error::Config(
+            "the host CPU is always code 0 — it cannot appear in the mixed alphabet".into(),
+        ));
+    }
+    let n_genes = app.genome_len();
+    let width = spec.genome_width(n_genes);
+    let xfer = if cfg.transfer_opt {
+        TransferMode::Batched
+    } else {
+        TransferMode::PerEntry
+    };
+
+    let baseline = env.measure_cpu_only(app);
+    let baseline_value = cfg.fitness.value_of(&baseline);
+
+    // Measurement log keyed by the widened bits, so the best genome's
+    // Measurement is recovered without a re-run and refinement trials
+    // reuse strategy trials for free.
+    let mut log: HashMap<Vec<bool>, Measurement> = HashMap::new();
+    let parallel = cfg.parallel_trials;
+    let strategy = cfg.strategy.build(&cfg.ga);
+    let mut result = search::run_strategy(
+        &*strategy,
+        width,
+        cfg.fitness,
+        cfg.seed,
+        |batch: &[Genome]| {
+            let measure_one = |g: &Genome| -> Measurement {
+                let dests = spec.decode(&g.bits);
+                if dests.iter().all(|&d| d == DeviceKind::Cpu) {
+                    baseline.clone()
+                } else {
+                    env.measure_mixed(app, &dests, xfer)
+                }
+            };
+            let measurements: Vec<Measurement> = if parallel && batch.len() > 1 {
+                let workers = std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(2);
+                crate::util::pool::scoped_map(workers, batch, |g| measure_one(g))
+            } else {
+                batch.iter().map(measure_one).collect()
+            };
+            measurements
+                .into_iter()
+                .zip(batch)
+                .map(|(m, g)| {
+                    let o = m.objectives();
+                    log.insert(g.bits.clone(), m);
+                    o
+                })
+                .collect()
+        },
+    )?;
+
+    // Memoized single-plan measurement for the refinement sweeps.
+    let mut measure_wide = |bits: &[bool], log: &mut HashMap<Vec<bool>, Measurement>| {
+        if let Some(m) = log.get(bits) {
+            return m.clone();
+        }
+        let dests = spec.decode(bits);
+        let m = if dests.iter().all(|&d| d == DeviceKind::Cpu) {
+            baseline.clone()
+        } else {
+            env.measure_mixed(app, &dests, xfer)
+        };
+        log.insert(bits.to_vec(), m.clone());
+        m
+    };
+
+    // Per-gene refinement: sweep every gene through every alternative
+    // destination, keeping the others fixed; adopt strict improvements
+    // under the guide value (which already scores cap violators like
+    // timeouts). Deterministic — gene order, code order and the strict
+    // `>` make the trajectory a pure function of the search outcome.
+    let mut cur_bits = result.best.bits.clone();
+    let mut cur_m = log
+        .get(&cur_bits)
+        .cloned()
+        .expect("best genome was measured");
+    let mut cur_v = cfg.fitness.value_of(&cur_m);
+    for _sweep in 0..MAX_REFINE_SWEEPS {
+        let mut improved = false;
+        for gene in 0..n_genes {
+            for code in spec.codes() {
+                let mut cand = cur_bits.clone();
+                for i in 0..BITS_PER_DEST_GENE {
+                    cand[gene * BITS_PER_DEST_GENE + i] = (code >> i) & 1 == 1;
+                }
+                if cand == cur_bits {
+                    continue;
+                }
+                let m = measure_wide(&cand, &mut log);
+                let v = cfg.fitness.value_of(&m);
+                if v > cur_v {
+                    cur_bits = cand;
+                    cur_m = m;
+                    cur_v = v;
+                    improved = true;
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+
+    let mut best = Evaluated {
+        pattern: OffloadPattern::mixed(app, spec.decode(&cur_bits)),
+        value: cur_v,
+        measurement: cur_m,
+    };
+    // Hard Watt-cap guarantee (same contract as the single-destination
+    // flow): if even the refined best violates the cap, re-select the
+    // best cap-respecting measurement, falling back to the all-CPU plan.
+    if cfg.fitness.exceeds_cap(best.measurement.report.peak_w) {
+        let winner = log
+            .iter()
+            .filter(|(_, m)| !cfg.fitness.exceeds_cap(m.report.peak_w))
+            .map(|(bits, m)| (bits, m, cfg.fitness.value_of(m)))
+            .max_by(|(abits, _, av), (bbits, _, bv)| {
+                av.total_cmp(bv).then_with(|| abits.cmp(bbits))
+            });
+        best = match winner {
+            Some((bits, m, value)) => Evaluated {
+                pattern: OffloadPattern::mixed(app, spec.decode(bits)),
+                value,
+                measurement: m.clone(),
+            },
+            None => Evaluated {
+                pattern: OffloadPattern::mixed(app, vec![DeviceKind::Cpu; n_genes]),
+                value: baseline_value,
+                measurement: baseline.clone(),
+            },
+        };
+    }
+
+    // Rebuild the front over the full log so refinement trials are
+    // eligible. `ParetoFront::of` sorts internally (objectives, then
+    // bits), so the HashMap iteration order cannot leak into the result.
+    let entries: Vec<search::Scored> = log
+        .iter()
+        .map(|(bits, m)| search::Scored {
+            genome: Genome { bits: bits.clone() },
+            objectives: m.objectives(),
+        })
+        .collect();
+    let refine_trials = log.len() - result.measured;
+    result.front = search::ParetoFront::of(&entries);
+
+    Ok(MixedDestOutcome {
+        baseline,
+        baseline_value,
+        best,
+        trials: log.len(),
+        refine_trials,
+        search: result,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::canalyze::analyze_source;
+    use crate::offload::{fpga_flow, gpu_flow, FpgaFlowConfig};
+    use crate::search::{FitnessSpec, GaConfig};
+    use crate::verifier::VerifEnvConfig;
+    use crate::workloads;
+
+    fn setup() -> (AppModel, VerifEnv) {
+        let an = analyze_source("mriq.c", workloads::MRIQ_C).unwrap();
+        let cfg = VerifEnvConfig::r740_pac();
+        let app = AppModel::from_analysis(&an, &cfg.cpu, 14.0).unwrap();
+        (app, cfg.build(99))
+    }
+
+    fn quick_cfg() -> GpuFlowConfig {
+        GpuFlowConfig {
+            ga: GaConfig {
+                population: 12,
+                generations: 10,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn decode_maps_zero_to_host_and_cycles_the_alphabet() {
+        let spec = MixedDestSpec::default();
+        // Codes 0..=3 (little-endian bit pairs).
+        let bits = [
+            false, false, // 0 -> host
+            true, false, // 1 -> Gpu
+            false, true, // 2 -> Fpga
+            true, true, // 3 -> ManyCore
+        ];
+        assert_eq!(
+            spec.decode(&bits),
+            vec![
+                DeviceKind::Cpu,
+                DeviceKind::Gpu,
+                DeviceKind::Fpga,
+                DeviceKind::ManyCore
+            ]
+        );
+        // The full alphabet matches the fixed funcblock codec.
+        assert_eq!(spec.decode(&bits), crate::funcblock::dests_from_wide(&bits));
+        // A singleton alphabet folds every non-zero code onto its device.
+        let gpu_only = MixedDestSpec {
+            alphabet: vec![DeviceKind::Gpu],
+        };
+        assert_eq!(
+            gpu_only.decode(&bits),
+            vec![
+                DeviceKind::Cpu,
+                DeviceKind::Gpu,
+                DeviceKind::Gpu,
+                DeviceKind::Gpu
+            ]
+        );
+    }
+
+    #[test]
+    fn mixed_search_improves_on_the_baseline_and_refinement_never_regresses() {
+        let (app, env) = setup();
+        let out = run(&app, &env, &quick_cfg(), &MixedDestSpec::default()).unwrap();
+        assert!(
+            out.best.value > out.baseline_value,
+            "best {} vs baseline {}",
+            out.best.value,
+            out.baseline_value
+        );
+        // Refinement only ever adopts strict improvements over the
+        // strategy's pick.
+        assert!(out.best.value >= out.search.best_value);
+        assert!(out.best.pattern.dest_genes().is_some());
+        assert!(out.trials >= out.search.measured);
+        assert_eq!(out.trials - out.search.measured, out.refine_trials);
+        // Every front point decodes to a renderable plan.
+        for s in &out.search.front.points {
+            let plan = plan_of_genome(&app, &MixedDestSpec::default(), &s.genome);
+            assert!(!plan.to_string().is_empty());
+        }
+    }
+
+    #[test]
+    fn mixed_front_dominates_the_best_single_destination_energy() {
+        let (app, env) = setup();
+        let cfg = quick_cfg();
+        // Best single-destination W·s across all three device flows.
+        let mut single_best = f64::INFINITY;
+        for d in [DeviceKind::ManyCore, DeviceKind::Gpu] {
+            let out = gpu_flow::run_on(&app, &env, &cfg, d).unwrap();
+            single_best = single_best.min(out.best.measurement.energy_ws);
+        }
+        let fpga = fpga_flow::run(&app, &env, &FpgaFlowConfig::default()).unwrap();
+        single_best = single_best.min(fpga.best.measurement.energy_ws);
+
+        let env2 = VerifEnvConfig::r740_pac().build(99);
+        let mixed = run(&app, &env2, &cfg, &MixedDestSpec::default()).unwrap();
+        let mixed_best = mixed
+            .search
+            .front
+            .points
+            .iter()
+            .map(|s| s.objectives.energy_ws)
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            mixed_best < single_best,
+            "mixed front min {mixed_best} W·s does not beat best single-destination \
+             {single_best} W·s"
+        );
+    }
+
+    #[test]
+    fn deterministic_for_the_same_seed() {
+        let (app, _) = setup();
+        let a = run(
+            &app,
+            &VerifEnvConfig::r740_pac().build(99),
+            &quick_cfg(),
+            &MixedDestSpec::default(),
+        )
+        .unwrap();
+        let b = run(
+            &app,
+            &VerifEnvConfig::r740_pac().build(99),
+            &quick_cfg(),
+            &MixedDestSpec::default(),
+        )
+        .unwrap();
+        assert_eq!(a.best.pattern.dests, b.best.pattern.dests);
+        assert_eq!(a.best.measurement.energy_ws, b.best.measurement.energy_ws);
+        assert_eq!(a.trials, b.trials);
+    }
+
+    #[test]
+    fn watt_capped_mixed_search_never_selects_a_violating_plan() {
+        let (app, env) = setup();
+        let cfg = GpuFlowConfig {
+            fitness: FitnessSpec::paper().with_watt_cap(150.0),
+            ..quick_cfg()
+        };
+        let out = run(&app, &env, &cfg, &MixedDestSpec::default()).unwrap();
+        assert!(
+            out.best.measurement.report.peak_w <= 150.0,
+            "capped run selected peak {} W",
+            out.best.measurement.report.peak_w
+        );
+    }
+
+    #[test]
+    fn bad_alphabets_are_rejected() {
+        let (app, env) = setup();
+        let cfg = quick_cfg();
+        let empty = MixedDestSpec { alphabet: vec![] };
+        assert!(run(&app, &env, &cfg, &empty).is_err());
+        let with_cpu = MixedDestSpec {
+            alphabet: vec![DeviceKind::Cpu],
+        };
+        assert!(run(&app, &env, &cfg, &with_cpu).is_err());
+    }
+}

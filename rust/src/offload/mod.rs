@@ -1,12 +1,14 @@
 //! The paper's three offload flows: §3.1 GA-driven GPU offload with
 //! power-aware fitness ([`gpu_flow`]), §3.2 narrowing-driven FPGA offload
 //! ([`fpga_flow`]) and §3.3 mixed-environment destination selection
-//! ([`mixed`]), plus offload patterns, user requirements / cost model and
-//! the transfer-consolidation analysis.
+//! ([`mixed`]), plus the per-gene mixed-destination search
+//! ([`mixed_dest`], DESIGN.md §15), offload patterns, user requirements /
+//! cost model and the transfer-consolidation analysis.
 
 pub mod fpga_flow;
 pub mod gpu_flow;
 pub mod mixed;
+pub mod mixed_dest;
 pub mod pattern;
 pub mod requirements;
 pub mod transfer;
@@ -14,6 +16,7 @@ pub mod transfer;
 pub use fpga_flow::{FpgaFlowConfig, FpgaFlowOutcome, FunnelStats};
 pub use gpu_flow::{Evaluated, GpuFlowConfig, GpuFlowOutcome};
 pub use mixed::{DestinationResult, MixedConfig, MixedOutcome};
+pub use mixed_dest::{plan_of_genome, MixedDestOutcome, MixedDestSpec};
 pub use pattern::OffloadPattern;
 pub use requirements::{DataCenterCost, Requirements};
 pub use transfer::{plan as transfer_plan, ArrayTransfer, TransferPlan};

@@ -2,6 +2,7 @@
 //! a concrete application, resolvable to offload regions and code.
 
 use crate::canalyze::LoopId;
+use crate::devices::DeviceKind;
 use crate::search::Genome;
 use crate::verifier::AppModel;
 
@@ -12,6 +13,11 @@ pub struct OffloadPattern {
     pub genome: Genome,
     /// Candidate loop ids in genome order.
     pub candidates: Vec<LoopId>,
+    /// Per-gene destinations for mixed-destination plans (DESIGN.md §15).
+    /// `None` for classic single-destination patterns; when present, the
+    /// vector is aligned with `genome.bits` and
+    /// `genome.bits[i] == (dests[i] != Cpu)` by construction.
+    pub dests: Option<Vec<DeviceKind>>,
 }
 
 impl OffloadPattern {
@@ -20,6 +26,7 @@ impl OffloadPattern {
         Self {
             genome: Genome::zeros(app.genome_len()),
             candidates: app.candidates.clone(),
+            dests: None,
         }
     }
 
@@ -33,6 +40,7 @@ impl OffloadPattern {
         Self {
             genome: Genome::single(app.genome_len(), pos),
             candidates: app.candidates.clone(),
+            dests: None,
         }
     }
 
@@ -48,6 +56,7 @@ impl OffloadPattern {
         Self {
             genome: g,
             candidates: app.candidates.clone(),
+            dests: None,
         }
     }
 
@@ -65,6 +74,7 @@ impl OffloadPattern {
         Self {
             genome: g,
             candidates: app.candidates.clone(),
+            dests: None,
         }
     }
 
@@ -74,7 +84,29 @@ impl OffloadPattern {
         Self {
             genome,
             candidates: app.candidates.clone(),
+            dests: None,
         }
+    }
+
+    /// A mixed-destination pattern: one [`DeviceKind`] per gene. The
+    /// selection genome is derived (`dest != Cpu`), so everything that
+    /// consumes bits — regions, block masking, codegen region lists —
+    /// keeps working unchanged.
+    pub fn mixed(app: &AppModel, dests: Vec<DeviceKind>) -> Self {
+        assert_eq!(dests.len(), app.genome_len(), "one destination per gene");
+        let genome = Genome {
+            bits: dests.iter().map(|&d| d != DeviceKind::Cpu).collect(),
+        };
+        Self {
+            genome,
+            candidates: app.candidates.clone(),
+            dests: Some(dests),
+        }
+    }
+
+    /// Per-gene destinations of a mixed-destination pattern.
+    pub fn dest_genes(&self) -> Option<&[DeviceKind]> {
+        self.dests.as_deref()
     }
 
     /// The loop ids this pattern offloads.
@@ -101,9 +133,19 @@ impl OffloadPattern {
 
     /// This pattern as an [`crate::funcblock::OffloadPlan`] — the
     /// canonical loop-vs-block split used by the fleet/sched renderers
-    /// (`0101` for loop-only plans, `0101|10` with block genes).
+    /// (`0101` for loop-only plans, `0101|10` with block genes, letters
+    /// like `GG-F-|M-` for mixed-destination plans). Mixed patterns MUST
+    /// build the plan from their destination genes — slicing only the
+    /// derived selection bits would silently drop the per-gene devices.
     pub fn plan(&self) -> crate::funcblock::OffloadPlan {
-        crate::funcblock::OffloadPlan::new(self.candidates.len(), self.genome.bits.clone())
+        match &self.dests {
+            Some(dests) => {
+                crate::funcblock::OffloadPlan::mixed(self.candidates.len(), dests.clone())
+            }
+            None => {
+                crate::funcblock::OffloadPlan::new(self.candidates.len(), self.genome.bits.clone())
+            }
+        }
     }
 }
 
@@ -113,7 +155,12 @@ impl std::fmt::Display for OffloadPattern {
             return write!(f, "{} (cpu-only)", self.genome);
         }
         let ids: Vec<String> = self.offloaded_ids().iter().map(|i| i.to_string()).collect();
-        write!(f, "{} [{}]", self.genome, ids.join(","))?;
+        match &self.dests {
+            // Mixed-destination patterns render as the canonical
+            // per-gene letter plan (e.g. `GG-F-|M-`).
+            Some(_) => write!(f, "{} [{}]", self.plan(), ids.join(","))?,
+            None => write!(f, "{} [{}]", self.genome, ids.join(","))?,
+        }
         let blocks = self.active_block_indices();
         if !blocks.is_empty() {
             let bs: Vec<String> = blocks.iter().map(|b| format!("B{b}")).collect();
@@ -151,6 +198,26 @@ mod tests {
         let p2 = OffloadPattern::of_loops(&a, &[id]);
         assert_eq!(p1, p2);
         assert_eq!(p1.offloaded_ids(), vec![id]);
+    }
+
+    #[test]
+    fn mixed_pattern_derives_bits_and_renders_letters() {
+        let a = app();
+        let mut dests = vec![DeviceKind::Cpu; a.genome_len()];
+        dests[0] = DeviceKind::Gpu;
+        dests[2] = DeviceKind::Fpga;
+        let p = OffloadPattern::mixed(&a, dests.clone());
+        assert_eq!(p.genome.ones(), 2);
+        assert!(p.genome.bits[0] && !p.genome.bits[1] && p.genome.bits[2]);
+        assert_eq!(p.dest_genes(), Some(&dests[..]));
+        let plan = p.plan();
+        let rendered = plan.to_string();
+        assert!(rendered.starts_with("G-F"), "{rendered}");
+        assert!(p.to_string().contains(&rendered));
+        // Single-destination patterns are unchanged: no dests, bit plan.
+        let single = OffloadPattern::single(&a, a.candidates[0]);
+        assert!(single.dest_genes().is_none());
+        assert!(single.plan().to_string().starts_with('1'));
     }
 
     #[test]

@@ -70,16 +70,45 @@ impl Genome {
     }
 
     /// Split a plan genome into `(loop genes, block genes)` given the
-    /// number of leading loop genes.
+    /// number of leading loop genes. Assumes the classic 1-bit-per-gene
+    /// layout; widened alphabets go through [`Genome::plan_split_n`].
     pub fn plan_split(&self, n_loops: usize) -> (&[bool], &[bool]) {
-        assert!(n_loops <= self.bits.len(), "more loop genes than bits");
-        self.bits.split_at(n_loops)
+        self.plan_split_n(n_loops, 1)
+    }
+
+    /// Split a plan genome into `(loop genes, block genes)` when each
+    /// gene spans `bits_per_gene` bits (mixed-destination genomes use 2:
+    /// a destination code per gene). The block genes start at bit
+    /// `n_loops * bits_per_gene`, NOT at bit `n_loops` — using
+    /// [`Genome::plan_split`] on a widened genome mis-slices the layout.
+    pub fn plan_split_n(&self, n_loops: usize, bits_per_gene: usize) -> (&[bool], &[bool]) {
+        assert!(bits_per_gene > 0, "genes must span at least one bit");
+        assert!(
+            self.bits.len() % bits_per_gene == 0,
+            "genome length {} is not a whole number of {bits_per_gene}-bit genes",
+            self.bits.len()
+        );
+        let split = n_loops * bits_per_gene;
+        assert!(split <= self.bits.len(), "more loop genes than bits");
+        self.bits.split_at(split)
     }
 
     /// Number of active block destination genes (bits after the first
-    /// `n_loops` loop genes).
+    /// `n_loops` loop genes). 1-bit-per-gene layout; see
+    /// [`Genome::block_ones_n`] for widened alphabets.
     pub fn block_ones(&self, n_loops: usize) -> usize {
-        self.plan_split(n_loops).1.iter().filter(|&&b| b).count()
+        self.block_ones_n(n_loops, 1)
+    }
+
+    /// Number of active block genes when each gene spans `bits_per_gene`
+    /// bits: a block gene is active when ANY of its bits is set (code
+    /// != 0), so this counts substituted blocks, not raw one-bits.
+    pub fn block_ones_n(&self, n_loops: usize, bits_per_gene: usize) -> usize {
+        self.plan_split_n(n_loops, bits_per_gene)
+            .1
+            .chunks(bits_per_gene)
+            .filter(|gene| gene.iter().any(|&b| b))
+            .count()
     }
 
     /// Hamming distance to another genome.
@@ -149,6 +178,38 @@ mod tests {
         assert_eq!(blocks, &[true, true]);
         assert_eq!(g.block_ones(3), 2);
         assert_eq!(g.block_ones(5), 0, "loop-only view has no block genes");
+    }
+
+    #[test]
+    fn widened_split_offsets_are_pinned() {
+        // 3 loops + 2 blocks at 2 bits per gene = 10 bits. The block
+        // genes start at bit 6 (= 3 * 2), not bit 3 — the regression the
+        // 1-bit accessors would silently introduce on a widened genome.
+        let g = Genome {
+            bits: vec![
+                true, false, // loop 0, code 1
+                false, true, // loop 1, code 2
+                false, false, // loop 2, code 0
+                true, true, // block 0, code 3
+                false, false, // block 1, code 0
+            ],
+        };
+        let (loops, blocks) = g.plan_split_n(3, 2);
+        assert_eq!(loops.len(), 6, "loop genes end at bit n_loops * 2");
+        assert_eq!(blocks.len(), 4);
+        assert_eq!(blocks, &[true, true, false, false]);
+        assert_eq!(g.block_ones_n(3, 2), 1, "one active block, not two set bits");
+        assert_eq!(g.block_ones_n(5, 2), 0, "gene-only view has no block genes");
+        // The naive 1-bit split on the same genome lands mid-gene —
+        // pinned here to document what the widened accessors fix.
+        let (naive_loops, _) = g.plan_split(3);
+        assert_eq!(naive_loops.len(), 3);
+        // 1-bit accessors stay the trivial specialization.
+        let h = Genome {
+            bits: vec![true, false, false, true, true],
+        };
+        assert_eq!(h.plan_split(3), h.plan_split_n(3, 1));
+        assert_eq!(h.block_ones(3), h.block_ones_n(3, 1));
     }
 
     #[test]

@@ -27,7 +27,7 @@
 //! two callers racing on the same key both reach `get_or_init`, exactly
 //! one runs the trial, the other blocks until the stored result is ready.
 //!
-//! Persistence is two-tier: the stable-ordered schema-v3 JSON *snapshot*
+//! Persistence is two-tier: the stable-ordered schema-v4 JSON *snapshot*
 //! ([`MeasureCache::save`] / [`MeasureCache::load`], now written
 //! atomically via a same-directory temp file + rename), plus an optional
 //! append-only *log* ([`MeasureCache::attach_log`]) that records each
@@ -39,6 +39,7 @@
 //! goes log → compact → shared snapshot.
 
 use crate::devices::{DeviceKind, TransferMode};
+use crate::funcblock::{dest_from_letter, dest_letter};
 use crate::util::fasthash::Fnv64;
 use crate::util::json::{self, Json};
 use crate::verifier::Measurement;
@@ -70,12 +71,19 @@ pub struct MeasureKey {
     /// loop-only plans, so schema-v2 entries keep hitting after the v3
     /// migration.
     pub plan: u64,
-    /// Destination device.
+    /// Destination device. For mixed-destination plans (non-empty
+    /// `dests`) this is [`DeviceKind::Cpu`] — a fixed marker, since the
+    /// real destinations live per-gene in `dests`.
     pub device: DeviceKind,
     /// §3.1 transfer mode.
     pub xfer: TransferMode,
     /// Environment fingerprint (device models + noise seed).
     pub env_fingerprint: u64,
+    /// Per-gene destinations of a mixed-destination plan (schema v4,
+    /// DESIGN.md §15). **Empty for single-destination plans**, so their
+    /// keys — and thus their fingerprints and persisted entries — are
+    /// identical to schema v3 and every existing entry keeps hitting.
+    pub dests: Vec<DeviceKind>,
 }
 
 /// A per-key measurement slot. `OnceLock` gives measure-once for free:
@@ -335,12 +343,14 @@ impl MeasureCache {
 
     /// Serialize every completed entry (pending slots are skipped).
     pub fn to_json(&self) -> Json {
-        // Schema v3: keys carry the plan fingerprint (function-block
-        // substitutions, DESIGN.md §11). v2 files (per-component
-        // EnergyReport, no plan) and v1 files (scalars only) are still
-        // loadable — see `from_json`.
+        // Schema v4: mixed-destination entries carry a per-gene "dests"
+        // letter string (DESIGN.md §15); single-destination entries omit
+        // the field and serialize byte-identically to v3. v3 files (plan
+        // fingerprint, no dests), v2 files (per-component EnergyReport,
+        // no plan) and v1 files (scalars only) are still loadable — see
+        // `from_json`.
         Json::obj(vec![
-            ("version", Json::num(3.0)),
+            ("version", Json::num(4.0)),
             (
                 "entries",
                 Json::arr(
@@ -357,11 +367,13 @@ impl MeasureCache {
     /// start at zero; malformed entries are an error (a corrupt cache file
     /// should be deleted, not silently half-loaded).
     ///
-    /// Versioned migration: schema v3 is the current format (per-key plan
-    /// fingerprint); v2 files (no `plan` per entry) migrate with plan 0 —
-    /// exactly the fingerprint loop-only plans key with, so every old
-    /// entry keeps hitting; v1 files (pre-attribution, no `report` object
-    /// per measurement) additionally load with a synthesized legacy
+    /// Versioned migration: schema v4 is the current format (optional
+    /// per-entry `dests` vector for mixed-destination plans — absent
+    /// means single-destination, which is why v3 entries load unchanged
+    /// and keep hitting); v2 files (no `plan` per entry) migrate with
+    /// plan 0 — exactly the fingerprint loop-only plans key with; v1
+    /// files (pre-attribution, no `report` object per measurement)
+    /// additionally load with a synthesized legacy
     /// [`crate::power::EnergyReport`]. Unknown versions are a clean error
     /// rather than a misparse.
     pub fn from_json(j: &Json) -> Result<Self> {
@@ -370,9 +382,9 @@ impl MeasureCache {
             .get("version")
             .and_then(|v| v.as_f64())
             .ok_or_else(|| bad("missing 'version'"))?;
-        if version != 1.0 && version != 2.0 && version != 3.0 {
+        if !(version == 1.0 || version == 2.0 || version == 3.0 || version == 4.0) {
             return Err(bad(&format!(
-                "unsupported schema version {version} (supported: 1, 2, 3)"
+                "unsupported schema version {version} (supported: 1, 2, 3, 4)"
             )));
         }
         let entries = j
@@ -425,7 +437,7 @@ impl MeasureCache {
     ///    invocations), then
     /// 2. open the file for appending — from here on, every measurement
     ///    completed through this cache (any view of the same store) is
-    ///    appended as one line-delimited v3-entry JSON record and flushed
+    ///    appended as one line-delimited v4-entry JSON record and flushed
     ///    as it lands.
     ///
     /// Returns the number of records replayed. A torn trailing record —
@@ -464,7 +476,7 @@ impl MeasureCache {
         for (i, (lineno, line)) in lines.iter().enumerate() {
             let record = json::parse(line)
                 .map_err(|e| e.to_string())
-                .and_then(|j| entry_from_json(&j, 3.0).map_err(|e| e.to_string()));
+                .and_then(|j| entry_from_json(&j, 4.0).map_err(|e| e.to_string()));
             match record {
                 Ok((key, m)) => {
                     self.insert_completed(key, m);
@@ -495,7 +507,7 @@ impl MeasureCache {
 
     /// Fold an append-only measurement log into its snapshot: load the
     /// snapshot (when it exists), replay the log on top, write the merged
-    /// set back atomically in the stable v3 order, then truncate the log.
+    /// set back atomically in the stable v4 order, then truncate the log.
     /// The log is truncated only *after* the snapshot rename has landed —
     /// a crash between the two leaves duplicate records (harmless: first
     /// completion wins on replay), never lost ones.
@@ -528,10 +540,12 @@ pub struct CompactStats {
     pub entries: usize,
 }
 
-/// One `(key, measurement)` pair in the schema-v3 entry shape — the unit
+/// One `(key, measurement)` pair in the schema-v4 entry shape — the unit
 /// both the snapshot's `entries` array and the append log's records use.
+/// Single-destination keys (empty `dests`) omit the "dests" field, so
+/// their records are byte-identical to schema v3.
 fn entry_to_json(k: &MeasureKey, m: &Measurement) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("app_hash", Json::str(format!("{:016x}", k.app_hash))),
         (
             "pattern",
@@ -552,8 +566,15 @@ fn entry_to_json(k: &MeasureKey, m: &Measurement) -> Json {
         ),
         ("env", Json::str(format!("{:016x}", k.env_fingerprint))),
         ("plan", Json::str(format!("{:016x}", k.plan))),
-        ("measurement", m.to_json_full()),
-    ])
+    ];
+    if !k.dests.is_empty() {
+        fields.push((
+            "dests",
+            Json::str(k.dests.iter().map(|&d| dest_letter(d)).collect::<String>()),
+        ));
+    }
+    fields.push(("measurement", m.to_json_full()));
+    Json::obj(fields)
 }
 
 /// Parse one entry object of the given schema version (see
@@ -583,12 +604,40 @@ fn entry_from_json(e: &Json, version: f64) -> Result<(MeasureKey, Measurement)> 
         env_fingerprint: parse_hex(e.get("env").and_then(|v| v.as_str()))
             .ok_or_else(|| bad("bad env fingerprint"))?,
         // v1/v2 entries predate block plans and migrate as loop-only
-        // (plan 0); a v3 entry *must* carry its plan — a missing field
+        // (plan 0); a v3+ entry *must* carry its plan — a missing field
         // there is corruption, not a legacy file.
         plan: match e.get("plan") {
             Some(p) => parse_hex(p.as_str()).ok_or_else(|| bad("bad plan hash"))?,
             None if version < 3.0 => 0,
             None => return Err(bad("missing 'plan' in a v3 entry")),
+        },
+        // "dests" is optional at every version (absent = the
+        // single-destination key shape every pre-v4 entry has), but a
+        // *present* field is validated strictly: unknown letters or a
+        // length mismatch against the pattern are corruption.
+        dests: match e.get("dests") {
+            None => Vec::new(),
+            Some(d) => {
+                let s = d.as_str().ok_or_else(|| bad("bad dests"))?;
+                let dests: Vec<DeviceKind> = s
+                    .chars()
+                    .map(|c| {
+                        dest_from_letter(c)
+                            .ok_or_else(|| bad(&format!("bad dests letter '{c}'")))
+                    })
+                    .collect::<Result<_>>()?;
+                let pattern_len = e
+                    .get("pattern")
+                    .and_then(|v| v.as_str())
+                    .map_or(0, |p| p.chars().count());
+                if dests.len() != pattern_len {
+                    return Err(bad(&format!(
+                        "dests length {} does not match pattern length {pattern_len}",
+                        dests.len()
+                    )));
+                }
+                dests
+            }
         },
     };
     let m = e
@@ -598,12 +647,13 @@ fn entry_from_json(e: &Json, version: f64) -> Result<(MeasureKey, Measurement)> 
     Ok((key, m))
 }
 
-fn key_sort_token(k: &MeasureKey) -> (u64, u64, u64, String, &'static str, u8) {
+fn key_sort_token(k: &MeasureKey) -> (u64, u64, u64, String, String, &'static str, u8) {
     (
         k.app_hash,
         k.env_fingerprint,
         k.plan,
         k.pattern.iter().map(|&b| if b { '1' } else { '0' }).collect(),
+        k.dests.iter().map(|&d| dest_letter(d)).collect(),
         k.device.name(),
         matches!(k.xfer, TransferMode::PerEntry) as u8,
     )
@@ -660,6 +710,19 @@ mod tests {
             device: DeviceKind::Fpga,
             xfer: TransferMode::Batched,
             env_fingerprint: env,
+            dests: Vec::new(),
+        }
+    }
+
+    fn mixed_key(env: u64) -> MeasureKey {
+        MeasureKey {
+            app_hash: 7,
+            pattern: vec![true, false, true],
+            plan: 0,
+            device: DeviceKind::Cpu,
+            xfer: TransferMode::Batched,
+            env_fingerprint: env,
+            dests: vec![DeviceKind::Gpu, DeviceKind::Cpu, DeviceKind::ManyCore],
         }
     }
 
@@ -807,13 +870,13 @@ mod tests {
         assert_eq!(m.energy_ws, 222.0);
         assert_eq!(m.report.meter, "legacy-v1");
         assert!((m.report.components.total_ws() - m.energy_ws).abs() < 1e-9);
-        // Re-serializing upgrades the file to schema v3.
+        // Re-serializing upgrades the file to schema v4.
         let j = cache.to_json();
-        assert_eq!(j.get("version").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("version").unwrap().as_f64(), Some(4.0));
     }
 
     #[test]
-    fn v2_cache_file_migrates_to_v3_and_round_trips() {
+    fn v2_cache_file_migrates_to_v4_and_round_trips() {
         // A v2 file as PR 2's code wrote it: version 2, full EnergyReport
         // per measurement, but no per-entry "plan" field.
         let v2 = r#"{
@@ -851,10 +914,10 @@ mod tests {
         assert!(hit, "migrated v2 entry answers the plan-0 lookup");
         assert_eq!(m.energy_ws, 222.0);
         assert_eq!(m.report.meter, "ipmi");
-        // Round trip: re-serializing upgrades to v3 with an explicit
+        // Round trip: re-serializing upgrades to v4 with an explicit
         // plan field, and the upgraded file loads back identically.
         let j = cache.to_json();
-        assert_eq!(j.get("version").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("version").unwrap().as_f64(), Some(4.0));
         let entry = &j.get("entries").unwrap().as_arr().unwrap()[0];
         assert_eq!(entry.get("plan").unwrap().as_str(), Some("0000000000000000"));
         let back = MeasureCache::from_json(&j).unwrap();
@@ -869,6 +932,99 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("missing 'plan'"), "{err}");
+    }
+
+    #[test]
+    fn v3_cache_file_loads_under_v4_and_single_dest_keys_still_hit() {
+        // A v3 file exactly as PR 5's code wrote it: version 3, plan
+        // fingerprint, no "dests" field anywhere.
+        let v3 = r#"{
+          "version": 3,
+          "entries": [{
+            "app_hash": "0000000000000007",
+            "pattern": "1",
+            "device": "fpga",
+            "xfer": "batched",
+            "env": "0000000000000001",
+            "plan": "0000000000000000",
+            "measurement": {
+              "app": "t.c", "device": "fpga", "pattern": "1",
+              "regions": [0], "time_s": 2.0, "mean_w": 111.0,
+              "energy_ws": 222.0, "timed_out": false, "failure": null,
+              "cpu_s": 0.0, "transfer_s": 0.0, "kernel_s": 2.0,
+              "trace": [[0.0, 121.0], [2.0, 111.0]],
+              "phase": "verification",
+              "report": {
+                "meter": "ipmi", "sample_hz": 1.0, "time_s": 2.0,
+                "energy_ws": 222.0, "mean_w": 111.0, "peak_w": 121.0,
+                "profile_peak_w": 121.0,
+                "components_ws": {
+                  "idle": 210.0, "host_cpu": 6.0, "accel": 4.0,
+                  "transfer": 2.0
+                }
+              }
+            }
+          }]
+        }"#;
+        let cache = MeasureCache::from_json(&json::parse(v3).unwrap()).unwrap();
+        // The single-destination key a v4 run builds (empty dests) is
+        // identical to the v3 key, so the old entry answers it.
+        let (m, hit) = cache.get_or_measure(key(true, 1), || fake_measurement(0.0));
+        assert!(hit, "v3 entry must hit under v4 for single-destination plans");
+        assert_eq!(m.energy_ws, 222.0);
+        // A single-destination-only cache re-serializes without any
+        // "dests" field — entries stay byte-identical to v3 (only the
+        // version number moves).
+        let j = cache.to_json();
+        assert_eq!(j.get("version").unwrap().as_f64(), Some(4.0));
+        let entry = &j.get("entries").unwrap().as_arr().unwrap()[0];
+        assert!(entry.get("dests").is_none(), "no dests field for single-dest entries");
+    }
+
+    #[test]
+    fn mixed_dest_keys_round_trip_and_do_not_collide_with_single_dest() {
+        let c = MeasureCache::new();
+        c.get_or_measure(mixed_key(1), || fake_measurement(4.0));
+        // Same pattern bits, single-destination key: distinct trial.
+        let single = MeasureKey {
+            pattern: vec![true, false, true],
+            ..key(true, 1)
+        };
+        let (m, hit) = c.get_or_measure(single, || fake_measurement(9.0));
+        assert!(!hit, "mixed and single-destination keys must not collide");
+        assert_eq!(m.time_s, 9.0);
+        // Persist and reload: the dests letter string survives.
+        let j = c.to_json();
+        let back = MeasureCache::from_json(&j).unwrap();
+        assert_eq!(back.len(), 2);
+        let (m2, hit2) = back.get_or_measure(mixed_key(1), || fake_measurement(0.0));
+        assert!(hit2, "persisted mixed entry answers the lookup");
+        assert_eq!(m2.time_s, 4.0);
+        let entries = j.get("entries").unwrap().as_arr().unwrap();
+        let mixed_entry = entries
+            .iter()
+            .find(|e| e.get("dests").is_some())
+            .expect("one mixed entry persisted");
+        assert_eq!(mixed_entry.get("dests").unwrap().as_str(), Some("G-M"));
+    }
+
+    #[test]
+    fn malformed_v4_dests_are_a_strict_error() {
+        let valid = entry_to_json(&mixed_key(1), &fake_measurement(1.0)).to_string_compact();
+        // Unknown destination letter.
+        let bad_letter = valid.replace("\"dests\":\"G-M\"", "\"dests\":\"G-Q\"");
+        let wrapped = format!("{{\"version\": 4, \"entries\": [{bad_letter}]}}");
+        let err = MeasureCache::from_json(&json::parse(&wrapped).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("bad dests letter"), "{err}");
+        // Length mismatch against the pattern.
+        let bad_len = valid.replace("\"dests\":\"G-M\"", "\"dests\":\"G-MF\"");
+        let wrapped = format!("{{\"version\": 4, \"entries\": [{bad_len}]}}");
+        let err = MeasureCache::from_json(&json::parse(&wrapped).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("does not match pattern length"), "{err}");
     }
 
     #[test]

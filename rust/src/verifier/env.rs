@@ -248,6 +248,7 @@ impl VerifEnv {
                 device: dest,
                 xfer,
                 env_fingerprint: self.fingerprint,
+                dests: Vec::new(),
             };
             let (m, _hit) =
                 cache.get_or_measure(key, || self.measure_uncached(app, bits, dest, xfer));
@@ -389,6 +390,263 @@ impl VerifEnv {
             app: app.name.clone(),
             device: dest,
             pattern: bits.to_vec(),
+            regions,
+            time_s: wall,
+            mean_w: metered.report.mean_w,
+            energy_ws: metered.report.energy_ws,
+            trace: metered.trace,
+            report: metered.report,
+            timed_out,
+            failure: failed,
+            breakdown,
+            phase: PhaseKind::Verification,
+        }
+    }
+
+    /// One leg of a cross-device hop: draining (or filling) device `d`'s
+    /// staging buffer through its host link. The host is the switch-point
+    /// of every device-to-device move on this testbed (no peer-to-peer
+    /// DMA), so a hop costs the sum of both legs.
+    fn hop_leg_s(&self, d: DeviceKind, payload_bytes: f64) -> f64 {
+        match d {
+            DeviceKind::Cpu => 0.0,
+            DeviceKind::Gpu => payload_bytes / self.cfg.gpu.pcie_bw + self.cfg.gpu.pcie_latency_s,
+            DeviceKind::Fpga => {
+                payload_bytes / self.cfg.fpga.pcie_bw + self.cfg.fpga.pcie_latency_s
+            }
+            DeviceKind::ManyCore => payload_bytes / self.cfg.manycore.mem_bw,
+        }
+    }
+
+    /// Time cost of moving a `payload_bytes` intermediate from device `a`
+    /// to device `b` (DESIGN.md §15 transfer edge). Symmetric by
+    /// construction — `leg(a) + leg(b)` — and zero when both ends are the
+    /// same device (no edge) or the host (data already there).
+    pub fn hop_cost_s(&self, a: DeviceKind, b: DeviceKind, payload_bytes: f64) -> f64 {
+        if a == b {
+            return 0.0;
+        }
+        self.hop_leg_s(a, payload_bytes) + self.hop_leg_s(b, payload_bytes)
+    }
+
+    /// Component-attributed draw during a cross-device hop: host busy
+    /// staging the move, transfer machinery of both PCIe ends active, no
+    /// kernel running anywhere.
+    fn hop_power(&self, a: DeviceKind, b: DeviceKind) -> crate::power::ComponentPower {
+        let drive = |d: DeviceKind| match d {
+            DeviceKind::Gpu => self.cfg.gpu.host_drive_w,
+            DeviceKind::Fpga => self.cfg.fpga.host_drive_w,
+            DeviceKind::Cpu | DeviceKind::ManyCore => 0.0,
+        };
+        crate::power::ComponentPower {
+            idle_w: self.cfg.server.idle_w,
+            host_cpu_w: self.cfg.cpu.active_w,
+            accelerator_w: 0.0,
+            transfer_w: drive(a) + drive(b),
+        }
+    }
+
+    /// Measure a mixed-destination plan: one destination per gene
+    /// (DESIGN.md §15), with cross-device transfer edges charged between
+    /// adjacent offloaded units that run on different devices.
+    ///
+    /// Plans that use **at most one** distinct non-host device delegate to
+    /// [`VerifEnv::measure`] — bit-identical measurements, identical
+    /// (schema-v3-shaped) cache keys — so forcing every gene to one device
+    /// reproduces today's single-destination results exactly.
+    pub fn measure_mixed(
+        &self,
+        app: &AppModel,
+        dests: &[DeviceKind],
+        xfer: TransferMode,
+    ) -> Measurement {
+        assert_eq!(dests.len(), app.genome_len(), "one destination per gene");
+        let mut distinct: Vec<DeviceKind> = Vec::new();
+        for &d in dests {
+            if d != DeviceKind::Cpu && !distinct.contains(&d) {
+                distinct.push(d);
+            }
+        }
+        if distinct.len() <= 1 {
+            let bits: Vec<bool> = dests.iter().map(|&d| d != DeviceKind::Cpu).collect();
+            let dest = distinct.first().copied().unwrap_or(DeviceKind::Cpu);
+            return self.measure(app, &bits, dest, xfer);
+        }
+        if let Some(cache) = &self.cache {
+            let key = MeasureKey {
+                app_hash: app.measure_hash,
+                pattern: dests.iter().map(|&d| d != DeviceKind::Cpu).collect(),
+                plan: app.plan_fingerprint,
+                // Fixed marker: the real destinations are per-gene.
+                device: DeviceKind::Cpu,
+                xfer,
+                env_fingerprint: self.fingerprint,
+                dests: dests.to_vec(),
+            };
+            let (m, _hit) =
+                cache.get_or_measure(key, || self.measure_mixed_uncached(app, dests, xfer));
+            return m;
+        }
+        self.measure_mixed_uncached(app, dests, xfer)
+    }
+
+    /// The simulated trial for a genuinely mixed plan (≥ 2 distinct
+    /// devices): the same prologue → units → epilogue shape as
+    /// [`VerifEnv::measure_uncached`], but each offloaded unit (region or
+    /// substituted block) runs on its own gene's device, and adjacent
+    /// units on *different* devices are charged a transfer-edge hop
+    /// ([`VerifEnv::hop_cost_s`]) before the second unit starts.
+    fn measure_mixed_uncached(
+        &self,
+        app: &AppModel,
+        dests: &[DeviceKind],
+        xfer: TransferMode,
+    ) -> Measurement {
+        self.trials.fetch_add(1, Ordering::Relaxed);
+        let bits: Vec<bool> = dests.iter().map(|&d| d != DeviceKind::Cpu).collect();
+        let n_loops = app.n_loop_genes();
+        let active = app.active_blocks(&bits);
+        let regions = app.regions(&bits);
+
+        // Per-trial RNG stream, disjoint from every single-destination
+        // stream via the leading mixed marker; fed the per-gene
+        // destination primes so distinct placements draw distinct noise.
+        let dest_prime = |d: DeviceKind| match d {
+            DeviceKind::Cpu => 11u64,
+            DeviceKind::ManyCore => 13,
+            DeviceKind::Gpu => 17,
+            DeviceKind::Fpga => 19,
+        };
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325 ^ self.seed;
+        let mut mix = |b: u64| {
+            h ^= b;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        };
+        mix(41);
+        for &d in &dests[..n_loops] {
+            mix(dest_prime(d));
+        }
+        mix(match xfer {
+            TransferMode::Batched => 23,
+            TransferMode::PerEntry => 29,
+        });
+        for &bi in &active {
+            mix(131 + bi as u64 * 4 + crate::funcblock::dest_code(dests[n_loops + bi]) as u64);
+        }
+        let mut rng = Pcg32::seed_from_u64(h);
+
+        let idle = self.cfg.server.idle_w;
+        let host_busy = self.cfg.cpu.busy_power(idle);
+        let mut profile = AttributedProfile::new();
+        let mut breakdown = TrialBreakdown::default();
+        let mut failed: Option<String> = None;
+
+        let host_s = app.host_remainder_plan(&regions, &active);
+        let jitter = |rng: &mut Pcg32, t: f64| -> f64 {
+            (t * (1.0 + rng.normal_ms(0.0, self.cfg.timing_jitter))).max(0.0)
+        };
+
+        let pre = jitter(&mut rng, host_s * 0.5);
+        profile.push(pre, host_busy);
+        breakdown.cpu_s += pre;
+
+        // The offloaded unit chain: regions in program order, then the
+        // substituted blocks — the same order the single-destination trial
+        // charges them in. `prev` carries the previous unit's device and
+        // payload for the transfer-edge model; per-device kernel seconds
+        // pick the dominant device the measurement reports under.
+        let mut prev: Option<(DeviceKind, f64)> = None;
+        let mut device_kernel_s = [0.0f64; 4];
+        let mut charge_unit = |est: crate::devices::KernelEstimate,
+                               d: DeviceKind,
+                               payload: f64,
+                               rng: &mut Pcg32,
+                               profile: &mut AttributedProfile,
+                               breakdown: &mut TrialBreakdown| {
+            if let Some((pd, pbytes)) = prev {
+                if pd != d {
+                    let hop = jitter(rng, self.hop_cost_s(pd, d, pbytes.min(payload)));
+                    profile.push(hop, self.hop_power(pd, d));
+                    breakdown.transfer_s += hop;
+                }
+            }
+            let transfer = jitter(rng, est.transfer_s);
+            let kernel = jitter(rng, est.compute_s + est.launch_s);
+            profile.push(transfer, est.transfer_power(idle, self.cfg.cpu.active_w));
+            profile.push(kernel, est.kernel_power(idle));
+            breakdown.transfer_s += transfer;
+            breakdown.kernel_s += kernel;
+            device_kernel_s[crate::funcblock::dest_code(d)] += kernel;
+            prev = Some((d, payload));
+        };
+
+        for &r in &regions {
+            let pos = app
+                .candidates
+                .iter()
+                .position(|&c| c == r)
+                .expect("offload regions are candidates");
+            let d = dests[pos];
+            let dev = self.device(d).expect("offloaded region implies a device");
+            let work = &app.loops[r.0].work;
+            if let Err(reason) = dev.supports(work) {
+                failed = Some(reason);
+                break;
+            }
+            let est = dev.estimate(work, xfer);
+            charge_unit(est, d, work.transfer_bytes, &mut rng, &mut profile, &mut breakdown);
+        }
+
+        if failed.is_none() {
+            for &bi in &active {
+                let bw = &app.blocks[bi];
+                let d = dests[n_loops + bi];
+                match app.block_impl(bi, d) {
+                    None => {
+                        failed = Some(format!(
+                            "no {} implementation for {d}",
+                            bw.detected.kind
+                        ));
+                        break;
+                    }
+                    Some(im) => {
+                        let est = im.estimate(&bw.work, xfer);
+                        charge_unit(
+                            est,
+                            d,
+                            bw.work.transfer_bytes,
+                            &mut rng,
+                            &mut profile,
+                            &mut breakdown,
+                        );
+                    }
+                }
+            }
+        }
+        drop(charge_unit);
+
+        let post = jitter(&mut rng, host_s * 0.5);
+        profile.push(post, host_busy);
+        breakdown.cpu_s += post;
+
+        let wall = profile.duration_s();
+        let timed_out = failed.is_some() || wall > self.cfg.timeout_s;
+
+        let metered = self.meter.measure(&profile, &mut rng);
+        self.charge_search_cost(wall.min(self.cfg.timeout_s));
+
+        // Report under the device that ran the most kernel time (the
+        // per-gene truth lives in the plan; a Measurement has one slot).
+        let device = (1..4)
+            .max_by(|&a: &usize, &b: &usize| device_kernel_s[a].total_cmp(&device_kernel_s[b]))
+            .filter(|&c| device_kernel_s[c] > 0.0)
+            .map(crate::funcblock::dest_from_code)
+            .unwrap_or(DeviceKind::Cpu);
+
+        Measurement {
+            app: app.name.clone(),
+            device,
+            pattern: bits,
             regions,
             time_s: wall,
             mean_w: metered.report.mean_w,
@@ -605,6 +863,73 @@ mod tests {
         assert_eq!(m1.time_s, reference.time_s);
         assert_eq!(m1.mean_w, reference.mean_w);
         assert_eq!(m1.energy_ws, reference.energy_ws);
+    }
+
+    #[test]
+    fn hop_cost_is_symmetric_and_zero_on_same_device() {
+        let env = VerifEnvConfig::r740_pac().build(1);
+        let payload = 1.5e8;
+        for a in [DeviceKind::Cpu, DeviceKind::Gpu, DeviceKind::Fpga, DeviceKind::ManyCore] {
+            assert_eq!(env.hop_cost_s(a, a, payload), 0.0);
+            for b in [DeviceKind::Cpu, DeviceKind::Gpu, DeviceKind::Fpga, DeviceKind::ManyCore] {
+                assert_eq!(
+                    env.hop_cost_s(a, b, payload),
+                    env.hop_cost_s(b, a, payload),
+                    "{a} vs {b}"
+                );
+            }
+        }
+        assert!(env.hop_cost_s(DeviceKind::Gpu, DeviceKind::Fpga, payload) > 0.0);
+    }
+
+    #[test]
+    fn single_device_mixed_plan_measures_bit_identically() {
+        let (app, env) = setup();
+        let bits = best_pattern(&app);
+        // Every selected gene forced to the FPGA = the single-destination
+        // plan, measured through the mixed entry point.
+        let dests: Vec<DeviceKind> = bits
+            .iter()
+            .map(|&b| if b { DeviceKind::Fpga } else { DeviceKind::Cpu })
+            .collect();
+        let mixed = env.measure_mixed(&app, &dests, TransferMode::Batched);
+        let single = env.measure(&app, &bits, DeviceKind::Fpga, TransferMode::Batched);
+        assert_eq!(mixed.time_s, single.time_s);
+        assert_eq!(mixed.energy_ws, single.energy_ws);
+        assert_eq!(mixed.device, DeviceKind::Fpga);
+        // All-CPU mixed plan = the baseline.
+        let cpu = env.measure_mixed(
+            &app,
+            &vec![DeviceKind::Cpu; app.genome_len()],
+            TransferMode::Batched,
+        );
+        let baseline = env.measure_cpu_only(&app);
+        assert_eq!(cpu.time_s, baseline.time_s);
+        assert_eq!(cpu.energy_ws, baseline.energy_ws);
+    }
+
+    #[test]
+    fn genuinely_mixed_plan_is_deterministic_and_charges_hops() {
+        let (app, env) = setup();
+        // Two independent outer loops on two different devices.
+        let outers: Vec<usize> = app
+            .candidates
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| app.loops[c.0].parent.is_none())
+            .map(|(i, _)| i)
+            .collect();
+        assert!(outers.len() >= 2, "mriq has multiple outer candidates");
+        let mut dests = vec![DeviceKind::Cpu; app.genome_len()];
+        dests[outers[0]] = DeviceKind::Gpu;
+        dests[outers[1]] = DeviceKind::ManyCore;
+        let m1 = env.measure_mixed(&app, &dests, TransferMode::Batched);
+        let env2 = VerifEnvConfig::r740_pac().build(42);
+        let m2 = env2.measure_mixed(&app, &dests, TransferMode::Batched);
+        assert_eq!(m1.time_s, m2.time_s, "deterministic per seed");
+        assert_eq!(m1.energy_ws, m2.energy_ws);
+        assert!(!m1.timed_out, "failure: {:?}", m1.failure);
+        assert_eq!(m1.regions.len(), 2);
     }
 
     #[test]

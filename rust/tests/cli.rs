@@ -155,6 +155,37 @@ fn exhaustive_pareto_prints_front_with_baseline_and_knee() {
 }
 
 #[test]
+fn offload_mixed_dest_reports_a_letter_plan() {
+    // The README quickstart path: per-loop destination genes with the
+    // front printed. The report must carry the mixed strategy tag, a
+    // letter plan, and mixed generated code.
+    let out = enadapt(&[
+        "offload", "mriq", "--mixed-dest", "--json",
+        "--generations", "8", "--population", "10",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let j = enadapt::util::json::parse(&String::from_utf8_lossy(&out.stdout)).unwrap();
+    let strategy = j.get("strategy").unwrap().as_str().unwrap().to_string();
+    assert!(strategy.starts_with("mixed-dest("), "{strategy}");
+    let pattern = j.get("pattern").unwrap().as_str().unwrap().to_string();
+    assert!(
+        pattern.chars().any(|c| matches!(c, 'G' | 'F' | 'M')),
+        "mixed plan should render device letters: {pattern}"
+    );
+    assert_eq!(j.get("generated_kind").unwrap().as_str(), Some("mixed"));
+    // `--pareto` renders the front rows as letter plans.
+    let out = enadapt(&[
+        "offload", "mriq", "--mixed-dest", "--pareto",
+        "--generations", "8", "--population", "10",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Pareto front"), "{text}");
+    assert!(text.contains("(cpu-only)"), "{text}");
+    assert!(text.contains("mixed alphabet"), "{text}");
+}
+
+#[test]
 fn anneal_strategy_runs_on_the_gpu() {
     let out = enadapt(&["offload", "mriq", "--dest", "gpu", "--strategy", "anneal", "--json"]);
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));

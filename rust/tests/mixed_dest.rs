@@ -1,0 +1,386 @@
+//! Mixed-destination differential + property suite (DESIGN.md §15).
+//!
+//! The two load-bearing guarantees of the per-gene destination
+//! generalization, checked end-to-end:
+//!
+//! 1. **Single-destination runs are byte-identical to the classic flow**:
+//!    with `mixed_dest` off the code path is untouched, and a singleton
+//!    alphabet folds onto exactly the classic per-device flow, so the
+//!    whole JobReport JSON matches byte for byte per seed.
+//! 2. **The widened search is sound**: an exhaustive 4^len enumeration of
+//!    a small plan space is ground truth — no enumerated plan dominates
+//!    the GA front, and the all-CPU baseline is always a front point.
+//!
+//! Plus `util::prop` property tests over the new codecs: plan
+//! encode/parse/render round trips, transfer-edge charging symmetry, and
+//! the measurement-cache v3 → v4 schema migration.
+
+use enadapt::canalyze::analyze_source;
+use enadapt::coordinator::{report, run_job, Destination, JobConfig};
+use enadapt::devices::{DeviceKind, TransferMode};
+use enadapt::funcblock::{dests_from_wide, wide_from_dests, OffloadPlan};
+use enadapt::offload::{fpga_flow, gpu_flow, mixed_dest, FpgaFlowConfig, GpuFlowConfig, MixedDestSpec};
+use enadapt::search::{dominates, GaConfig, SearchStrategy};
+use enadapt::util::json::Json;
+use enadapt::util::measure_cache::{MeasureCache, MeasureKey};
+use enadapt::util::prop::{run as prop_run, Gen};
+use enadapt::verifier::{AppModel, VerifEnv, VerifEnvConfig};
+use enadapt::workloads;
+
+const DEVICES: [DeviceKind; 4] = [
+    DeviceKind::Cpu,
+    DeviceKind::Gpu,
+    DeviceKind::Fpga,
+    DeviceKind::ManyCore,
+];
+
+fn quick_job(seed: u64, device: DeviceKind) -> JobConfig {
+    let mut cfg = JobConfig::default();
+    cfg.seed = seed;
+    cfg.destination = Destination::Device(device);
+    cfg.ga_flow.seed = seed;
+    cfg.ga_flow.ga.population = 6;
+    cfg.ga_flow.ga.generations = 4;
+    cfg
+}
+
+/// With `mixed_dest` unset the classic flow runs untouched; forcing a
+/// **singleton** alphabet must fold onto that exact flow — every
+/// registered workload's JobReport JSON stays byte-identical per seed.
+#[test]
+fn singleton_mixed_dest_job_json_is_byte_identical_per_seed() {
+    let mut compared = 0;
+    for &(name, src) in workloads::ALL {
+        let seeds: &[u64] = if name == "mriq" { &[7, 42] } else { &[42] };
+        for &seed in seeds {
+            for device in [DeviceKind::Gpu, DeviceKind::ManyCore] {
+                let base_cfg = quick_job(seed, device);
+                let mut forced_cfg = quick_job(seed, device);
+                forced_cfg.mixed_dest = Some(MixedDestSpec {
+                    alphabet: vec![device],
+                });
+                let file = format!("{name}.c");
+                let base = run_job(&file, src, &base_cfg).unwrap();
+                let forced = run_job(&file, src, &forced_cfg).unwrap();
+                assert_eq!(
+                    report::job_json(&base).to_string_pretty(),
+                    report::job_json(&forced).to_string_pretty(),
+                    "{name} seed {seed} on {device:?}: singleton alphabet must fold \
+                     onto the classic flow byte for byte"
+                );
+                compared += 1;
+            }
+        }
+    }
+    assert!(compared >= workloads::ALL.len() * 2, "covered every workload");
+
+    // The FPGA narrowing funnel folds identically.
+    let base = run_job("mriq.c", workloads::MRIQ_C, &quick_job(42, DeviceKind::Fpga)).unwrap();
+    let mut forced_cfg = quick_job(42, DeviceKind::Fpga);
+    forced_cfg.mixed_dest = Some(MixedDestSpec {
+        alphabet: vec![DeviceKind::Fpga],
+    });
+    let forced = run_job("mriq.c", workloads::MRIQ_C, &forced_cfg).unwrap();
+    assert_eq!(
+        report::job_json(&base).to_string_pretty(),
+        report::job_json(&forced).to_string_pretty()
+    );
+}
+
+/// Three independent top-level loops: init, map, reduce. Small enough for
+/// the exhaustive 4^3 ground truth, real enough that offloading matters.
+const TRI_C: &str = "int main() {
+  float a[512]; float b[512]; float s = 0.0f;
+  for (int i = 0; i < 512; i++) { a[i] = (float) i; }
+  for (int j = 0; j < 512; j++) { b[j] = a[j] * 2.0f + 1.0f; }
+  for (int k = 0; k < 512; k++) { s += b[k] * b[k]; }
+  printf(\"%f\", s);
+  return 0;
+}
+";
+
+fn tri_setup(seed: u64) -> (AppModel, VerifEnv) {
+    let an = analyze_source("tri.c", TRI_C).unwrap();
+    let cfg = VerifEnvConfig::r740_pac();
+    let app = AppModel::from_analysis(&an, &cfg.cpu, 14.0).unwrap();
+    (app, cfg.build(seed))
+}
+
+/// Exhaustively enumerate the whole 4^len mixed plan space of a small
+/// app as ground truth: the GA front must contain no point any
+/// enumerated plan strictly dominates, and the all-CPU baseline must sit
+/// on both fronts.
+#[test]
+fn exhaustive_ground_truth_confirms_the_ga_front() {
+    let (app, env) = tri_setup(11);
+    let n = app.genome_len();
+    assert!(
+        (1..=6).contains(&n),
+        "ground-truth space must stay enumerable, got {n} genes"
+    );
+    let spec = MixedDestSpec::default();
+    let width = spec.genome_width(n);
+
+    let exhaustive_cfg = GpuFlowConfig {
+        strategy: SearchStrategy::Exhaustive { max_bits: 16 },
+        ..GpuFlowConfig::default()
+    };
+    let truth = mixed_dest::run(&app, &env, &exhaustive_cfg, &spec).unwrap();
+    assert_eq!(
+        truth.trials,
+        1usize << width,
+        "exhaustive mixed search must enumerate all 4^{n} plans"
+    );
+
+    let ga_cfg = GpuFlowConfig {
+        ga: GaConfig {
+            population: 24,
+            generations: 20,
+            ..GaConfig::default()
+        },
+        ..GpuFlowConfig::default()
+    };
+    let env2 = VerifEnvConfig::r740_pac().build(11);
+    let ga = mixed_dest::run(&app, &env2, &ga_cfg, &spec).unwrap();
+
+    // Ground-truth check: nothing in the enumerated front dominates any
+    // GA front point (any dominating plan is itself dominated by a
+    // ground-truth front point, so checking the front suffices).
+    for g in &ga.search.front.points {
+        for t in &truth.search.front.points {
+            assert!(
+                !dominates(&t.objectives, &g.objectives),
+                "enumerated plan {} dominates GA front point {}",
+                mixed_dest::plan_of_genome(&app, &spec, &t.genome),
+                mixed_dest::plan_of_genome(&app, &spec, &g.genome),
+            );
+        }
+    }
+    // The all-CPU baseline (strictly lowest peak draw) stays on both
+    // fronts.
+    for (label, front) in [("exhaustive", &truth.search.front), ("ga", &ga.search.front)] {
+        assert!(
+            front.points.iter().any(|s| s.genome.ones() == 0),
+            "{label} front lost the all-CPU baseline"
+        );
+    }
+}
+
+/// The acceptance criterion through the public API: on MRI-Q the mixed
+/// front must contain a plan with strictly lower W·s than the best plan
+/// any single-destination flow finds.
+#[test]
+fn mixed_front_beats_the_best_single_destination_plan_on_energy() {
+    let an = analyze_source("mriq.c", workloads::MRIQ_C).unwrap();
+    let env_cfg = VerifEnvConfig::r740_pac();
+    let app = AppModel::from_analysis(&an, &env_cfg.cpu, 14.0).unwrap();
+    let cfg = GpuFlowConfig {
+        ga: GaConfig {
+            population: 12,
+            generations: 10,
+            ..GaConfig::default()
+        },
+        ..GpuFlowConfig::default()
+    };
+
+    let mut single_best = f64::INFINITY;
+    for d in [DeviceKind::ManyCore, DeviceKind::Gpu] {
+        let env = VerifEnvConfig::r740_pac().build(99);
+        let out = gpu_flow::run_on(&app, &env, &cfg, d).unwrap();
+        single_best = single_best.min(out.best.measurement.energy_ws);
+    }
+    let env = VerifEnvConfig::r740_pac().build(99);
+    let fpga = fpga_flow::run(&app, &env, &FpgaFlowConfig::default()).unwrap();
+    single_best = single_best.min(fpga.best.measurement.energy_ws);
+
+    let env = VerifEnvConfig::r740_pac().build(99);
+    let mixed = mixed_dest::run(&app, &env, &cfg, &MixedDestSpec::default()).unwrap();
+    let mixed_best = mixed
+        .search
+        .front
+        .points
+        .iter()
+        .map(|s| s.objectives.energy_ws)
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        mixed_best < single_best,
+        "mixed front min {mixed_best} W·s must strictly beat the best \
+         single-destination plan's {single_best} W·s"
+    );
+}
+
+/// Watt-capped mixed jobs keep the classic hard guarantee end to end.
+#[test]
+fn watt_capped_mixed_job_respects_the_cap() {
+    let mut cfg = quick_job(42, DeviceKind::Gpu);
+    cfg.mixed_dest = Some(MixedDestSpec::default());
+    cfg.map_fitness(|f| f.with_watt_cap(150.0));
+    let r = run_job("mriq.c", workloads::MRIQ_C, &cfg).unwrap();
+    assert!(
+        r.production.report.peak_w <= 150.0,
+        "capped mixed job peaks at {} W",
+        r.production.report.peak_w
+    );
+}
+
+// ---- property tests (util::prop) ----------------------------------------
+
+/// Random destination vectors round-trip through `OffloadPlan`
+/// encode/parse/render, and through the widened-genome codec.
+#[test]
+fn prop_dest_vectors_round_trip_through_plan_and_codec() {
+    prop_run("mixed plan round trip", 128, |g: &mut Gen| {
+        let n_loops = g.usize_range(1, 6);
+        let n_blocks = g.usize_range(0, 3);
+        let dests: Vec<DeviceKind> = (0..n_loops + n_blocks)
+            .map(|_| *g.pick(&DEVICES))
+            .collect();
+        let plan = OffloadPlan::mixed(n_loops, dests.clone());
+        // Derived selection bits agree with the destinations.
+        for (i, &d) in dests.iter().enumerate() {
+            assert_eq!(plan.bits[i], d != DeviceKind::Cpu);
+        }
+        // Render -> parse is the identity.
+        let rendered = plan.to_string();
+        let parsed = OffloadPlan::parse(&rendered).unwrap();
+        assert_eq!(parsed, plan, "parse(render) of '{rendered}'");
+        // Widened-genome codec round trip.
+        assert_eq!(dests_from_wide(&wide_from_dests(&dests)), dests);
+    });
+}
+
+/// Transfer-edge charging is symmetric in its endpoints and zero when
+/// adjacent units share a destination.
+#[test]
+fn prop_transfer_edges_are_symmetric_and_zero_on_same_device() {
+    prop_run("hop symmetry", 256, |g: &mut Gen| {
+        let env = VerifEnvConfig::r740_pac().build(g.rng().next_u64());
+        let a = *g.pick(&DEVICES);
+        let b = *g.pick(&DEVICES);
+        let payload = g.f64_pos(1.0, 1e9);
+        let ab = env.hop_cost_s(a, b, payload);
+        let ba = env.hop_cost_s(b, a, payload);
+        assert_eq!(ab, ba, "hop {a:?}->{b:?} vs {b:?}->{a:?} at {payload} B");
+        assert_eq!(env.hop_cost_s(a, a, payload), 0.0, "same-device hop");
+        if a != b && a != DeviceKind::Cpu && b != DeviceKind::Cpu {
+            assert!(ab > 0.0, "cross-accelerator hop {a:?}->{b:?} must cost time");
+        }
+    });
+}
+
+fn cache_key(g: &mut Gen, dests: Vec<DeviceKind>) -> MeasureKey {
+    let len = dests.len().max(g.usize_range(1, 8));
+    let pattern = match dests.is_empty() {
+        true => g.bits(len),
+        false => dests.iter().map(|&d| d != DeviceKind::Cpu).collect(),
+    };
+    MeasureKey {
+        app_hash: g.rng().next_u64(),
+        pattern,
+        plan: g.rng().next_u64(),
+        device: if dests.is_empty() {
+            *g.pick(&[DeviceKind::Gpu, DeviceKind::Fpga, DeviceKind::ManyCore])
+        } else {
+            DeviceKind::Cpu
+        },
+        xfer: if g.bool() {
+            TransferMode::Batched
+        } else {
+            TransferMode::PerEntry
+        },
+        env_fingerprint: g.rng().next_u64(),
+        dests,
+    }
+}
+
+/// Cache schema migration: v4 snapshots round-trip (mixed keys
+/// included); single-destination entries are v3-shaped, so a v3 file
+/// loads under v4 and keeps hitting for single-destination plans.
+#[test]
+fn prop_cache_v3_to_v4_migration_round_trips() {
+    let an = analyze_source("vecadd.c", workloads::VECADD_C).unwrap();
+    let env_cfg = VerifEnvConfig::r740_pac();
+    let app = AppModel::from_analysis(&an, &env_cfg.cpu, 14.0).unwrap();
+
+    prop_run("cache v3/v4 migration", 24, move |g: &mut Gen| {
+        // One real measurement as the payload for every synthetic key.
+        let m = VerifEnvConfig::r740_pac()
+            .build(5)
+            .measure_cpu_only(&app);
+        let cache = MeasureCache::new();
+        let singles: Vec<MeasureKey> = (0..g.usize_range(1, 5))
+            .map(|_| cache_key(g, Vec::new()))
+            .collect();
+        let mixed: Vec<MeasureKey> = (0..g.usize_range(1, 3))
+            .map(|_| {
+                let dests = (0..g.usize_range(1, 6)).map(|_| *g.pick(&DEVICES)).collect();
+                cache_key(g, dests)
+            })
+            .collect();
+        for k in singles.iter().chain(&mixed) {
+            cache.get_or_measure(k.clone(), || m.clone());
+        }
+
+        // v4 round trip carries every entry, mixed keys included.
+        let v4 = MeasureCache::from_json(&cache.to_json()).unwrap();
+        assert_eq!(v4.len(), cache.len());
+        for k in singles.iter().chain(&mixed) {
+            let (_, hit) = v4.get_or_measure(k.clone(), || unreachable!("must hit"));
+            assert!(hit, "v4 round trip lost {k:?}");
+        }
+
+        // The same entries under a v3 header load, and the
+        // single-destination keys keep hitting (v3 entries *are* the
+        // empty-dests key shape).
+        let single_cache = MeasureCache::new();
+        for k in &singles {
+            single_cache.get_or_measure(k.clone(), || m.clone());
+        }
+        let entries = single_cache.to_json().get("entries").unwrap().clone();
+        let v3_json = Json::obj(vec![("version", Json::num(3.0)), ("entries", entries)]);
+        let v3 = MeasureCache::from_json(&v3_json).unwrap();
+        assert_eq!(v3.len(), singles.len());
+        for k in &singles {
+            let (_, hit) = v3.get_or_measure(k.clone(), || unreachable!("must hit"));
+            assert!(hit, "v3 entry must hit under v4 for {k:?}");
+        }
+    });
+}
+
+/// Malformed v4 `dests` fields are strict load errors, not silent
+/// single-destination fallbacks.
+#[test]
+fn malformed_v4_dests_entries_are_strict_errors() {
+    let an = analyze_source("vecadd.c", workloads::VECADD_C).unwrap();
+    let env_cfg = VerifEnvConfig::r740_pac();
+    let app = AppModel::from_analysis(&an, &env_cfg.cpu, 14.0).unwrap();
+    let m = env_cfg.build(5).measure_cpu_only(&app);
+
+    let cache = MeasureCache::new();
+    let key = MeasureKey {
+        app_hash: 7,
+        pattern: vec![true, false, true],
+        plan: 0,
+        device: DeviceKind::Cpu,
+        xfer: TransferMode::Batched,
+        env_fingerprint: 9,
+        dests: vec![DeviceKind::Gpu, DeviceKind::Cpu, DeviceKind::ManyCore],
+    };
+    cache.get_or_measure(key, || m);
+    let text = cache.to_json().to_string_compact();
+    assert!(text.contains("\"G-M\""), "serialized dests letters: {text}");
+
+    let bad_letter = enadapt::util::json::parse(&text.replace("\"G-M\"", "\"G-Q\"")).unwrap();
+    let err = MeasureCache::from_json(&bad_letter).unwrap_err();
+    assert!(
+        err.to_string().contains("bad dests letter"),
+        "unexpected error: {err}"
+    );
+
+    let bad_len = enadapt::util::json::parse(&text.replace("\"G-M\"", "\"G-MM\"")).unwrap();
+    let err = MeasureCache::from_json(&bad_len).unwrap_err();
+    assert!(
+        err.to_string().contains("does not match pattern length"),
+        "unexpected error: {err}"
+    );
+}
