@@ -1,0 +1,182 @@
+//! Bench: telemetry overhead — the zero-overhead contract of the `obs`
+//! layer (BENCH_obs.json, DESIGN.md §16).
+//!
+//! Two runs per sweep point over the BENCH_sched.json drifting trace on
+//! the same 4-node / 800 W-cap cluster:
+//!
+//! * **off** — telemetry fully disabled (the default). Every obs entry
+//!   point costs one relaxed atomic load and a predicted branch, so
+//!   this run must stay within 2% of the plain `sched_scale` wall
+//!   ceiling at the 100k point (`OBS_ASSERT=1` enforces it).
+//! * **on** — all three pillars enabled (spans + metrics + series).
+//!   The on-path is allowed to cost real time (it allocates span
+//!   names and appends series rows), bounded by a generous on/off
+//!   ratio ceiling — it exists to catch pathological regressions, not
+//!   to promise the on-path is free.
+//!
+//! At every sweep point the off-run and on-run `SchedReport`s are
+//! asserted byte-identical *unconditionally*: telemetry is purely
+//! observational and must never perturb the ledger.
+//!
+//! Environment knobs (CI smoke uses both):
+//!
+//! * `OBS_SCALE_MAX` — largest arrival count to sweep (default 100000).
+//! * `OBS_ASSERT=1` — enforce the BENCH_obs.json ceilings (off-path
+//!   wall at 100k, on/off ratio).
+//!
+//! Emits a final JSON object on stdout for the perf dashboard.
+
+use enadapt::coordinator::sched::run_sched;
+use enadapt::coordinator::{ArrivalTrace, JobConfig, SchedConfig, SyntheticTraceConfig};
+use enadapt::devices::NodeSpec;
+use enadapt::obs;
+use enadapt::offload::GpuFlowConfig;
+use enadapt::power::IdlePolicy;
+use enadapt::search::GaConfig;
+use enadapt::util::benchkit::section;
+use enadapt::util::json::Json;
+use enadapt::util::tablefmt::Table;
+use std::time::Instant;
+
+/// Off-path wall ceiling at the 100k point: the 60 s BENCH_sched.json
+/// ceiling plus the 2% telemetry-off regression allowance.
+const OFF_WALL_CEILING_100K_S: f64 = 60.0 * 1.02;
+/// Generous on/off wall ratio backstop (the on-path allocates).
+const ON_OFF_RATIO_CEILING: f64 = 2.0;
+
+fn template() -> JobConfig {
+    JobConfig {
+        ga_flow: GpuFlowConfig {
+            ga: GaConfig {
+                population: 8,
+                generations: 6,
+                ..Default::default()
+            },
+            parallel_trials: false,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn sweep_config() -> SchedConfig {
+    SchedConfig {
+        template: template(),
+        nodes: (0..4).map(|i| NodeSpec::r740_pac(&format!("node{i}"))).collect(),
+        fleet_watt_cap: Some(800.0),
+        idle_policy: IdlePolicy::gate_after(30.0),
+        ..Default::default()
+    }
+}
+
+fn drifting_trace(n: usize) -> ArrivalTrace {
+    let mut syn = SyntheticTraceConfig::standard(n, 1.0, 11);
+    syn.drift_after = Some(n / 2);
+    syn.drift_scale = 2.0;
+    ArrivalTrace::poisson(&syn)
+}
+
+fn main() {
+    let max_arrivals: usize = std::env::var("OBS_SCALE_MAX")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(100_000);
+    let enforce = std::env::var("OBS_ASSERT").as_deref() == Ok("1");
+
+    println!("=== obs_overhead: telemetry off vs on over the sched_scale drifting trace ===\n");
+
+    section("off vs on sweep (4 nodes, 800 W cap, drift at the midpoint)");
+    let mut table = Table::new(&[
+        "arrivals",
+        "off [ms]",
+        "on [ms]",
+        "ratio",
+        "span events",
+        "series rows",
+        "identical report",
+    ]);
+    let mut series = Vec::new();
+    for n in [1_000usize, 10_000, 100_000] {
+        if n > max_arrivals {
+            println!("(skipping {n} arrivals: OBS_SCALE_MAX = {max_arrivals})");
+            continue;
+        }
+        let trace = drifting_trace(n);
+        let cfg = sweep_config();
+
+        obs::reset();
+        let start = Instant::now();
+        let off_report = run_sched(&trace, &cfg).expect("telemetry-off run");
+        let off_wall_s = start.elapsed().as_secs_f64();
+        let off_json = off_report.to_json().to_string_compact();
+
+        obs::reset();
+        obs::enable(obs::ALL);
+        let start = Instant::now();
+        let on_report = run_sched(&trace, &cfg).expect("telemetry-on run");
+        let on_wall_s = start.elapsed().as_secs_f64();
+        let on_json = on_report.to_json().to_string_compact();
+        let span_events = obs::span::len();
+        let series_rows = obs::series::power_steps().len();
+        obs::reset();
+
+        // The zero-perturbation contract, enforced unconditionally
+        // (with or without OBS_ASSERT).
+        assert_eq!(
+            off_json, on_json,
+            "telemetry changed the SchedReport at {n} arrivals"
+        );
+
+        let ratio = on_wall_s / off_wall_s.max(1e-9);
+        table.row(&[
+            n.to_string(),
+            format!("{:.1}", off_wall_s * 1e3),
+            format!("{:.1}", on_wall_s * 1e3),
+            format!("{ratio:.3}x"),
+            span_events.to_string(),
+            series_rows.to_string(),
+            "yes".to_string(),
+        ]);
+        series.push(Json::obj(vec![
+            ("arrivals", Json::num(n as f64)),
+            ("off_wall_s", Json::num(off_wall_s)),
+            ("on_wall_s", Json::num(on_wall_s)),
+            ("ratio", Json::num(ratio)),
+            ("span_events", Json::num(span_events as f64)),
+            ("series_rows", Json::num(series_rows as f64)),
+            ("identical_report", Json::Bool(true)),
+            ("admitted", Json::num(off_report.admitted as f64)),
+            ("dropped", Json::num(off_report.dropped as f64)),
+        ]));
+        if enforce {
+            if n == 100_000 {
+                assert!(
+                    off_wall_s <= OFF_WALL_CEILING_100K_S,
+                    "telemetry-off run took {off_wall_s:.2} s at 100k arrivals — over \
+                     the {OFF_WALL_CEILING_100K_S} s BENCH_obs.json ceiling"
+                );
+            }
+            assert!(
+                ratio <= ON_OFF_RATIO_CEILING,
+                "telemetry-on run is {ratio:.2}x the off run at {n} arrivals — over \
+                 the {ON_OFF_RATIO_CEILING}x BENCH_obs.json backstop"
+            );
+        }
+    }
+    println!("{}", table.render());
+
+    section("machine-readable result");
+    println!(
+        "{}",
+        Json::obj(vec![
+            ("bench", Json::str("obs_overhead")),
+            ("series", Json::arr(series)),
+            (
+                "off_wall_ceiling_100k_s",
+                Json::num(OFF_WALL_CEILING_100K_S)
+            ),
+            ("on_off_ratio_ceiling", Json::num(ON_OFF_RATIO_CEILING)),
+        ])
+        .to_string_pretty()
+    );
+}

@@ -421,6 +421,9 @@ pub fn run_fleet(specs: &[FleetSpec], cfg: &FleetConfig) -> Result<FleetReport> 
 
     let start = Instant::now();
     let jobs = pool.map(items, |(spec, jc, shared)| {
+        let _sp = crate::obs::span::span_with("fleet", || {
+            format!("{}:{}", spec.workload, dest_name(spec.destination))
+        });
         let t = Instant::now();
         let mut pipeline = Pipeline::new(jc);
         if let Some(c) = shared {
@@ -446,6 +449,7 @@ pub fn run_fleet(specs: &[FleetSpec], cfg: &FleetConfig) -> Result<FleetReport> 
         }
     }
 
+    cache.publish_obs_gauges();
     let serial_wall_s = jobs.iter().map(|j| j.wall_s).sum();
     Ok(FleetReport {
         jobs,

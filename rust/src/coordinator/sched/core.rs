@@ -408,7 +408,62 @@ impl SimCore {
         self.committed_dirty = true;
         let committed = self.committed_w();
         self.peak_committed_w = self.peak_committed_w.max(committed);
+        crate::obs::metrics::add("sched.admitted", 1);
+        crate::obs::span::virtual_span(
+            "sched",
+            || {
+                format!(
+                    "{}@{}",
+                    self.jobs[p.job_idx].workload, self.cfg.nodes[node].name
+                )
+            },
+            node as u32,
+            t,
+            end_s,
+        );
+        self.obs_power_step(t, node, committed);
         end_s
+    }
+
+    /// Record one W·s series step for `node` at virtual time `t`. Purely
+    /// observational (reads values the simulation already computed);
+    /// no-op unless the series pillar is enabled.
+    fn obs_power_step(&self, t: f64, node: usize, committed_w: f64) {
+        if !crate::obs::enabled(crate::obs::SERIES) {
+            return;
+        }
+        let dynamic_w: f64 = self
+            .running
+            .iter()
+            .filter(|r| r.node == node)
+            .map(|r| r.dyn_mean_w)
+            .sum();
+        let spec = &self.cfg.nodes[node];
+        let mut idle_w = 0.0;
+        for kind in [DeviceKind::Gpu, DeviceKind::Fpga, DeviceKind::ManyCore] {
+            let busy = self
+                .running
+                .iter()
+                .filter(|r| r.node == node && r.device == kind)
+                .count();
+            let free = spec.slots(kind).saturating_sub(busy);
+            idle_w += spec.slot_idle_w(kind) * free as f64;
+        }
+        crate::obs::series::record_power_step(crate::obs::series::PowerStep {
+            t_s: t,
+            node: node as u32,
+            committed_w,
+            dynamic_w,
+            idle_w,
+        });
+    }
+
+    /// Mark job `idx` dropped. The single funnel both engines use for
+    /// every drop decision, so the obs drop counter reconciles exactly
+    /// with the report's dropped ledger.
+    pub(super) fn drop_job(&mut self, idx: usize, reason: String) {
+        crate::obs::metrics::add("sched.dropped", 1);
+        self.jobs[idx].outcome = SchedOutcome::Dropped { reason };
     }
 
     /// Remove the running job at `idx` (`Vec::remove` keeps the others'
@@ -416,6 +471,10 @@ impl SimCore {
     pub(super) fn remove_running(&mut self, idx: usize) -> RunningJob {
         let r = self.running.remove(idx);
         self.committed_dirty = true;
+        if crate::obs::enabled(crate::obs::SERIES) {
+            let committed = self.committed_w();
+            self.obs_power_step(r.end_s, r.node, committed);
+        }
         r
     }
 
@@ -455,6 +514,10 @@ impl SimCore {
             slot.generation += 1;
             self.searches += 1;
             self.search_cost_s += cost;
+            crate::obs::metrics::add("sched.reconfigs", 1);
+            if record.device_changed {
+                crate::obs::metrics::add("sched.migrations", 1);
+            }
             self.reconfigs.push(record);
         }
         Ok(())
@@ -464,6 +527,7 @@ impl SimCore {
     /// (interval fold for the reference loop, incremental accumulators
     /// for the event engine — bit-equal, see `power::idle`).
     pub(super) fn report(self, preloaded: usize, accel_idle: IdleLedger) -> SchedReport {
+        self.cache.publish_obs_gauges();
         let mut production = ComponentEnergy::default();
         let mut counterfactual_ws = 0.0;
         let mut admitted = 0;

@@ -23,7 +23,7 @@
 use super::core::{Admit, PreparedMeasure, PreparedRun, SimCore, DROP_NO_SLOT};
 use super::events::CompletionQueue;
 use super::index::ClusterIndex;
-use super::{Arrival, ArrivalTrace, SchedOutcome, SchedReport, TraceEvent};
+use super::{Arrival, ArrivalTrace, SchedReport, TraceEvent};
 use crate::Result;
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
@@ -67,6 +67,7 @@ impl EventSim {
                     match trace.events[ev_i].clone() {
                         TraceEvent::SetCap { cap_w, .. } => {
                             self.core.cap_w = cap_w;
+                            crate::obs::metrics::add("sched.cap_events", 1);
                             // A raised cap can admit queued jobs; a
                             // lowered one can turn them into drops.
                             self.retry_queue(te);
@@ -80,9 +81,8 @@ impl EventSim {
         // Anything still queued can never start (no events or running
         // jobs left to change the situation).
         while let Some(p) = self.queue.pop_front() {
-            self.core.jobs[p.job_idx].outcome = SchedOutcome::Dropped {
-                reason: "still queued when the trace ended".to_string(),
-            };
+            self.core
+                .drop_job(p.job_idx, "still queued when the trace ended".to_string());
         }
         Ok(())
     }
@@ -156,10 +156,12 @@ impl EventSim {
     fn admit_or_queue(&mut self, p: PreparedRun, t: f64) {
         match self.try_admit(&p) {
             Admit::Placed { node, slot } => self.start(p, t, node, slot),
-            Admit::WaitCapacity | Admit::WaitPower => self.queue.push_back(p),
-            Admit::Never(reason) => {
-                self.core.jobs[p.job_idx].outcome = SchedOutcome::Dropped { reason };
+            Admit::WaitCapacity | Admit::WaitPower => {
+                self.queue.push_back(p);
+                crate::obs::metrics::add("sched.queued", 1);
+                crate::obs::metrics::observe("sched.queue_depth", self.queue.len() as u64);
             }
+            Admit::Never(reason) => self.core.drop_job(p.job_idx, reason),
         }
     }
 
@@ -199,9 +201,7 @@ impl EventSim {
             match self.try_admit(&p) {
                 Admit::Placed { node, slot } => self.start(p, t, node, slot),
                 Admit::WaitCapacity | Admit::WaitPower => remaining.push_back(p),
-                Admit::Never(reason) => {
-                    self.core.jobs[p.job_idx].outcome = SchedOutcome::Dropped { reason };
-                }
+                Admit::Never(reason) => self.core.drop_job(p.job_idx, reason),
             }
         }
         self.queue = remaining;

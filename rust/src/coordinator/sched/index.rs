@@ -140,8 +140,7 @@ impl ClusterIndex {
         let mut ledger = IdleLedger::default();
         for s in &self.idle_slots {
             let c = s.accum.finish(horizon_s, policy);
-            ledger.charged_ws += s.idle_w * c.charged_s;
-            ledger.gated_ws += s.idle_w * c.gated_s;
+            ledger.fold(s.idle_w, c);
         }
         ledger
     }

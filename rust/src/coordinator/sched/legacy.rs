@@ -11,7 +11,7 @@
 //! CLI or benchmarks exercise by default.
 
 use super::core::{Admit, PreparedRun, SimCore, DROP_NO_SLOT};
-use super::{Arrival, ArrivalTrace, SchedOutcome, SchedReport, TraceEvent};
+use super::{Arrival, ArrivalTrace, SchedReport, TraceEvent};
 use crate::devices::{DeviceKind, NodeOccupancy};
 use crate::power::IdleLedger;
 use crate::Result;
@@ -59,6 +59,7 @@ impl LegacySim {
                     match trace.events[ev_i].clone() {
                         TraceEvent::SetCap { cap_w, .. } => {
                             self.core.cap_w = cap_w;
+                            crate::obs::metrics::add("sched.cap_events", 1);
                             self.retry_queue(te);
                         }
                         TraceEvent::Arrival(a) => self.arrival(&a)?,
@@ -68,9 +69,8 @@ impl LegacySim {
             }
         }
         while let Some(p) = self.queue.pop_front() {
-            self.core.jobs[p.job_idx].outcome = SchedOutcome::Dropped {
-                reason: "still queued when the trace ended".to_string(),
-            };
+            self.core
+                .drop_job(p.job_idx, "still queued when the trace ended".to_string());
         }
         Ok(())
     }
@@ -125,10 +125,12 @@ impl LegacySim {
             Admit::Placed { node, slot } => {
                 self.core.start_job(&p, t, node, slot);
             }
-            Admit::WaitCapacity | Admit::WaitPower => self.queue.push_back(p),
-            Admit::Never(reason) => {
-                self.core.jobs[p.job_idx].outcome = SchedOutcome::Dropped { reason };
+            Admit::WaitCapacity | Admit::WaitPower => {
+                self.queue.push_back(p);
+                crate::obs::metrics::add("sched.queued", 1);
+                crate::obs::metrics::observe("sched.queue_depth", self.queue.len() as u64);
             }
+            Admit::Never(reason) => self.core.drop_job(p.job_idx, reason),
         }
     }
 
@@ -142,9 +144,7 @@ impl LegacySim {
                     self.core.start_job(&p, t, node, slot);
                 }
                 Admit::WaitCapacity | Admit::WaitPower => remaining.push_back(p),
-                Admit::Never(reason) => {
-                    self.core.jobs[p.job_idx].outcome = SchedOutcome::Dropped { reason };
-                }
+                Admit::Never(reason) => self.core.drop_job(p.job_idx, reason),
             }
         }
         self.queue = remaining;

@@ -81,6 +81,9 @@ impl StepLog {
         step: Step,
         f: impl FnOnce() -> crate::Result<(T, String)>,
     ) -> crate::Result<T> {
+        let _sp = crate::obs::span::span_with("pipeline", || {
+            format!("step{}:{}", step.number(), step.title())
+        });
         let start = Instant::now();
         let (value, detail) = f()?;
         self.records.push(StepRecord {

@@ -62,6 +62,7 @@ pub struct DetectedBlock {
 /// overlapping candidates are dropped (first detection wins), so covered
 /// sets are pairwise disjoint.
 pub fn detect(an: &Analysis, db: &BlockDb) -> Vec<DetectedBlock> {
+    let _sp = crate::obs::span::span("funcblock", "detect");
     let mut found: Vec<DetectedBlock> = Vec::new();
     for l in &an.loops {
         let idiom = match_idiom(an, l);
@@ -92,6 +93,7 @@ pub fn detect(an: &Analysis, db: &BlockDb) -> Vec<DetectedBlock> {
             via,
         });
     }
+    crate::obs::metrics::add("funcblock.detected", found.len() as u64);
     found
 }
 

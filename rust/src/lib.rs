@@ -44,6 +44,7 @@ pub mod codegen;
 pub mod coordinator;
 pub mod devices;
 pub mod funcblock;
+pub mod obs;
 pub mod offload;
 pub mod power;
 pub mod runtime;

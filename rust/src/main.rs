@@ -15,6 +15,7 @@
 //! * `codegen`   — emit the converted code (OpenACC/OpenMP/OpenCL).
 //! * `calibrate` — execute the AOT HLO artifacts on PJRT (real timing).
 //! * `report`    — print the simulated testbed (Fig. 4).
+//! * `obs`       — render a `--metrics-json` telemetry dump as tables.
 
 use enadapt::canalyze;
 use enadapt::coordinator::{self, BaselineSource, Destination, JobConfig};
@@ -64,6 +65,18 @@ fn app() -> App {
                 "per-loop destination genes: one plan may place different \
                  loops on different devices (gpu/fpga/many-core), with \
                  cross-device transfer edges charged in the verifier",
+            ),
+            opt(
+                "trace-out",
+                "",
+                "write a Chrome trace-event JSON file (spans + W·s counter \
+                 track) loadable in Perfetto / chrome://tracing (empty = off)",
+            ),
+            opt(
+                "metrics-json",
+                "",
+                "write the obs metrics registry (counters/gauges/histograms) \
+                 as JSON; render it with `enadapt obs <file>` (empty = off)",
             ),
             flag("json", "emit machine-readable JSON on stdout"),
         ]
@@ -205,14 +218,21 @@ fn app() -> App {
                         "run the retained time-stepped reference loop instead of the \
                          event-driven engine (same ledger, bit for bit)",
                     ));
+                    o.push(opt(
+                        "series-out",
+                        "",
+                        "write the deterministic per-node committed/dynamic/idle-W \
+                         virtual-time series as JSON (empty = off)",
+                    ));
                     o
                 },
                 positionals: vec![],
             },
             CmdSpec {
                 name: "cache",
-                about: "measurement-cache maintenance (action: compact — fold an \
-                        append-only --log into its --snapshot)",
+                about: "measurement-cache maintenance (actions: compact — fold an \
+                        append-only --log into its --snapshot; stats — per-shard \
+                        occupancy of a --snapshot)",
                 opts: vec![
                     opt(
                         "log",
@@ -258,6 +278,12 @@ fn app() -> App {
                 about: "print the simulated verification environment (Fig. 4)",
                 opts: vec![],
                 positionals: vec![],
+            },
+            CmdSpec {
+                name: "obs",
+                about: "render a --metrics-json telemetry dump as summary tables",
+                opts: vec![flag("json", "re-emit the dump as compact JSON")],
+                positionals: vec!["metrics"],
             },
         ],
     }
@@ -366,7 +392,74 @@ fn job_config(p: &Parsed) -> enadapt::Result<JobConfig> {
     Ok(cfg)
 }
 
+/// Telemetry output paths parsed from the common CLI flags. The matching
+/// obs pillars are enabled before the command runs (telemetry stays
+/// entirely off otherwise); the files are written once it succeeds.
+struct ObsOutputs {
+    trace_out: Option<std::path::PathBuf>,
+    metrics_json: Option<std::path::PathBuf>,
+    series_out: Option<std::path::PathBuf>,
+}
+
+impl ObsOutputs {
+    fn configure(p: &Parsed) -> Self {
+        let path = |name: &str| {
+            p.get(name)
+                .filter(|s| !s.is_empty())
+                .map(std::path::PathBuf::from)
+        };
+        let out = Self {
+            trace_out: path("trace-out"),
+            metrics_json: path("metrics-json"),
+            series_out: path("series-out"),
+        };
+        if out.trace_out.is_some() {
+            // The trace carries the W·s counter track alongside spans.
+            enadapt::obs::enable(enadapt::obs::SPANS | enadapt::obs::SERIES);
+        }
+        if out.metrics_json.is_some() {
+            enadapt::obs::enable(enadapt::obs::METRICS);
+        }
+        if out.series_out.is_some() {
+            enadapt::obs::enable(enadapt::obs::SERIES);
+        }
+        out
+    }
+
+    fn write(&self) -> enadapt::Result<()> {
+        if let Some(path) = &self.trace_out {
+            enadapt::obs::chrome::write(path)?;
+            eprintln!(
+                "trace written to {} (load in Perfetto / chrome://tracing)",
+                path.display()
+            );
+        }
+        if let Some(path) = &self.metrics_json {
+            std::fs::write(
+                path,
+                enadapt::obs::metrics::snapshot().to_string_pretty() + "\n",
+            )?;
+            eprintln!(
+                "metrics written to {} (render with `enadapt obs {}`)",
+                path.display(),
+                path.display()
+            );
+        }
+        if let Some(path) = &self.series_out {
+            std::fs::write(path, enadapt::obs::series::to_json().to_string_compact() + "\n")?;
+            eprintln!("W·s series written to {}", path.display());
+        }
+        Ok(())
+    }
+}
+
 fn dispatch(p: &Parsed) -> enadapt::Result<()> {
+    let outputs = ObsOutputs::configure(p);
+    run_command(p)?;
+    outputs.write()
+}
+
+fn run_command(p: &Parsed) -> enadapt::Result<()> {
     match p.cmd.as_str() {
         "analyze" => {
             let (name, src) = load_source(p.pos(0).unwrap())?;
@@ -717,8 +810,55 @@ fn dispatch(p: &Parsed) -> enadapt::Result<()> {
                     }
                     Ok(())
                 }
+                "stats" => {
+                    let snapshot =
+                        p.get("snapshot").filter(|s| !s.is_empty()).ok_or_else(|| {
+                            enadapt::Error::Config("cache stats: --snapshot is required".into())
+                        })?;
+                    let cache = enadapt::util::measure_cache::MeasureCache::load(
+                        std::path::Path::new(snapshot),
+                    )?;
+                    let stats = cache.shard_stats();
+                    if p.flag("json") {
+                        let shards: Vec<Json> = stats
+                            .iter()
+                            .map(|s| {
+                                Json::obj(vec![
+                                    ("shard", Json::num(s.shard as f64)),
+                                    ("entries", Json::num(s.entries as f64)),
+                                ])
+                            })
+                            .collect();
+                        println!(
+                            "{}",
+                            Json::obj(vec![
+                                ("entries", Json::num(cache.len() as f64)),
+                                ("shards", Json::arr(shards)),
+                            ])
+                            .to_string_pretty()
+                        );
+                    } else {
+                        let mut t =
+                            enadapt::util::tablefmt::Table::new(&["shard", "entries", "share"]);
+                        let total = cache.len().max(1);
+                        for s in &stats {
+                            t.row(&[
+                                format!("{:02}", s.shard),
+                                s.entries.to_string(),
+                                format!("{:.0}%", 100.0 * s.entries as f64 / total as f64),
+                            ]);
+                        }
+                        println!("{}", t.render());
+                        println!(
+                            "{} entries across {} shards in {snapshot}",
+                            cache.len(),
+                            stats.len()
+                        );
+                    }
+                    Ok(())
+                }
                 other => Err(enadapt::Error::Config(format!(
-                    "unknown cache action '{other}' (supported: compact)"
+                    "unknown cache action '{other}' (supported: compact, stats)"
                 ))),
             }
         }
@@ -784,6 +924,73 @@ fn dispatch(p: &Parsed) -> enadapt::Result<()> {
                 app.total_cpu_s,
                 app.work_scale
             );
+            Ok(())
+        }
+        "obs" => {
+            let path = p.pos(0).unwrap();
+            let text = std::fs::read_to_string(path)?;
+            let doc = enadapt::util::json::parse(&text).map_err(|e| {
+                enadapt::Error::Config(format!("bad metrics JSON in {path}: {e}"))
+            })?;
+            if p.flag("json") {
+                println!("{}", doc.to_string_compact());
+                return Ok(());
+            }
+            let section = |key: &str| -> Vec<(String, Json)> {
+                match doc.get(key) {
+                    Some(Json::Obj(m)) => m.iter().map(|(k, v)| (k.clone(), v.clone())).collect(),
+                    _ => Vec::new(),
+                }
+            };
+            let counters = section("counters");
+            if !counters.is_empty() {
+                let mut t = enadapt::util::tablefmt::Table::new(&["counter", "value"]);
+                for (k, v) in &counters {
+                    t.row(&[k.clone(), format!("{:.0}", v.as_f64().unwrap_or(0.0))]);
+                }
+                println!("{}", t.render());
+            }
+            let gauges = section("gauges");
+            if !gauges.is_empty() {
+                let mut t = enadapt::util::tablefmt::Table::new(&["gauge", "value"]);
+                for (k, v) in &gauges {
+                    t.row(&[k.clone(), format!("{:.3}", v.as_f64().unwrap_or(0.0))]);
+                }
+                println!("{}", t.render());
+            }
+            let hists = section("histograms");
+            if !hists.is_empty() {
+                let mut t = enadapt::util::tablefmt::Table::new(&[
+                    "histogram",
+                    "count",
+                    "log2 buckets (bucket:count)",
+                ]);
+                for (k, v) in &hists {
+                    let count = v.get("count").and_then(|c| c.as_f64()).unwrap_or(0.0);
+                    let buckets = v
+                        .get("buckets")
+                        .and_then(|b| b.as_arr())
+                        .map(|arr| {
+                            arr.iter()
+                                .filter_map(|pair| {
+                                    let kv = pair.as_arr()?;
+                                    Some(format!(
+                                        "{}:{}",
+                                        kv.first()?.as_f64()? as u64,
+                                        kv.get(1)?.as_f64()? as u64
+                                    ))
+                                })
+                                .collect::<Vec<_>>()
+                                .join(" ")
+                        })
+                        .unwrap_or_default();
+                    t.row(&[k.clone(), format!("{count:.0}"), buckets]);
+                }
+                println!("{}", t.render());
+            }
+            if counters.is_empty() && gauges.is_empty() && hists.is_empty() {
+                println!("(no metrics recorded in {path})");
+            }
             Ok(())
         }
         other => Err(enadapt::Error::Config(format!("unhandled command {other}"))),

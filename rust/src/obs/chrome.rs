@@ -1,0 +1,153 @@
+//! Chrome trace-event JSON export (Perfetto / `chrome://tracing`).
+//!
+//! The emitted document is the standard *JSON Object Format*:
+//! `{"traceEvents":[...]}`, containing
+//!
+//! * `M` (metadata) events naming the two process lanes — pid 1
+//!   "wall clock" for pipeline/search/verifier/fleet spans, pid 2
+//!   "virtual (sim)" for sched spans;
+//! * `B`/`E` duration events for wall spans and `X` complete events
+//!   for virtual sched spans;
+//! * `C` counter events per node carrying the W·s time-series
+//!   (committed/dynamic/idle W), which Perfetto renders as the paper's
+//!   Fig-5-style power track.
+
+use std::path::Path;
+
+use crate::obs::series::PowerStep;
+use crate::obs::span::{Event, Phase, PID_VIRTUAL, PID_WALL};
+use crate::util::json::Json;
+use crate::Result;
+
+fn meta_event(pid: u32, name: &str) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("M")),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(0.0)),
+        ("name", Json::str("process_name")),
+        ("args", Json::obj(vec![("name", Json::str(name))])),
+    ])
+}
+
+fn span_event(ev: &Event) -> Json {
+    let mut pairs = vec![
+        (
+            "ph",
+            Json::str(match ev.phase {
+                Phase::Begin => "B",
+                Phase::End => "E",
+                Phase::Complete { .. } => "X",
+            }),
+        ),
+        ("ts", Json::num(ev.ts_us as f64)),
+        ("pid", Json::num(ev.pid as f64)),
+        ("tid", Json::num(ev.tid as f64)),
+    ];
+    if let Some(name) = &ev.name {
+        pairs.push(("name", Json::str(name.as_str())));
+        pairs.push(("cat", Json::str(ev.cat)));
+    }
+    if let Phase::Complete { dur_us } = ev.phase {
+        pairs.push(("dur", Json::num(dur_us as f64)));
+    }
+    Json::obj(pairs)
+}
+
+fn counter_event(step: &PowerStep) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("C")),
+        ("ts", Json::num((step.t_s * 1e6).round().max(0.0))),
+        ("pid", Json::num(PID_VIRTUAL as f64)),
+        ("tid", Json::num(0.0)),
+        ("name", Json::str(format!("node{}.power_w", step.node))),
+        (
+            "args",
+            Json::obj(vec![
+                ("committed_w", Json::num(step.committed_w)),
+                ("dynamic_w", Json::num(step.dynamic_w)),
+                ("idle_w", Json::num(step.idle_w)),
+            ]),
+        ),
+    ])
+}
+
+/// Build the trace document from explicit event/series snapshots.
+pub fn trace_json(events: &[Event], steps: &[PowerStep]) -> Json {
+    let mut all = vec![
+        meta_event(PID_WALL, "wall clock"),
+        meta_event(PID_VIRTUAL, "virtual (sim)"),
+    ];
+    all.extend(events.iter().map(span_event));
+    all.extend(steps.iter().map(counter_event));
+    Json::obj(vec![("traceEvents", Json::arr(all))])
+}
+
+/// Build the trace document from the current global span buffer and
+/// power series.
+pub fn export() -> Json {
+    trace_json(&crate::obs::span::events(), &crate::obs::series::power_steps())
+}
+
+/// Write the current trace to `path` as compact JSON.
+pub fn write(path: &Path) -> Result<()> {
+    std::fs::write(path, export().to_string_compact() + "\n")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_json_is_valid_and_balanced() {
+        let events = vec![
+            Event {
+                phase: Phase::Begin,
+                name: Some("step".into()),
+                cat: "test",
+                ts_us: 10,
+                pid: PID_WALL,
+                tid: 1,
+            },
+            Event {
+                phase: Phase::End,
+                name: None,
+                cat: "test",
+                ts_us: 20,
+                pid: PID_WALL,
+                tid: 1,
+            },
+        ];
+        let steps = vec![PowerStep {
+            t_s: 0.5,
+            node: 2,
+            committed_w: 300.0,
+            dynamic_w: 120.0,
+            idle_w: 40.0,
+        }];
+        let doc = trace_json(&events, &steps);
+        let parsed = crate::util::json::parse(&doc.to_string_compact()).expect("valid JSON");
+        let evs = parsed
+            .get("traceEvents")
+            .and_then(|t| t.as_arr())
+            .expect("traceEvents array");
+        // 2 metadata + B + E + C
+        assert_eq!(evs.len(), 5);
+        let phs: Vec<&str> = evs
+            .iter()
+            .filter_map(|e| e.get("ph").and_then(|p| p.as_str()))
+            .collect();
+        assert_eq!(phs, vec!["M", "M", "B", "E", "C"]);
+        let c = &evs[4];
+        assert_eq!(
+            c.get("name").and_then(|n| n.as_str()),
+            Some("node2.power_w")
+        );
+        assert_eq!(
+            c.get("args")
+                .and_then(|a| a.get("committed_w"))
+                .and_then(|v| v.as_f64()),
+            Some(300.0)
+        );
+    }
+}

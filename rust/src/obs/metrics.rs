@@ -1,0 +1,281 @@
+//! Dependency-free metrics registry: named counters, gauges, and
+//! fixed-bucket log2 histograms.
+//!
+//! All values live in `Relaxed` atomics. As with the PR 8 cache
+//! counters, `Relaxed` is *exact* here, not approximate: `fetch_add`
+//! is an atomic read-modify-write, so no increment can be lost — the
+//! relaxation only forgoes ordering *between different* variables,
+//! which nothing here relies on. Totals are read either after worker
+//! threads have been joined or from the thread that produced them, so
+//! reconciliation against e.g. the cache hit/miss ledger or the sched
+//! admission/drop counts is equality, not approximation
+//! (`tests/obs.rs` asserts exactly that).
+//!
+//! The registry itself (name → handle map) sits behind a `Mutex`, paid
+//! only when metrics are enabled; [`reset`] zeroes values but never
+//! removes entries, so handles obtained via [`counter`] stay valid for
+//! the life of the process.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::json::Json;
+
+/// Number of log2 histogram buckets: bucket `i` counts values `v` with
+/// `64 - v.leading_zeros() == i`, i.e. `2^(i-1) <= v < 2^i` (bucket 0
+/// holds exactly `v == 0`).
+pub const HIST_BUCKETS: usize = 65;
+
+/// Fixed-bucket log2 histogram over `u64` samples.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl Histogram {
+    fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Record one sample.
+    pub fn observe(&self, v: u64) {
+        let idx = 64 - v.leading_zeros() as usize;
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Non-empty buckets as `(bucket_index, count)` pairs.
+    pub fn nonzero(&self) -> Vec<(usize, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let n = b.load(Ordering::Relaxed);
+                (n > 0).then_some((i, n))
+            })
+            .collect()
+    }
+
+    fn zero(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+#[derive(Default)]
+struct Registry {
+    counters: BTreeMap<String, Arc<AtomicU64>>,
+    gauges: BTreeMap<String, Arc<AtomicU64>>, // f64 bit patterns
+    histograms: BTreeMap<String, Arc<Histogram>>,
+}
+
+fn registry() -> &'static Mutex<Registry> {
+    static R: OnceLock<Mutex<Registry>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(Registry::default()))
+}
+
+fn lock() -> std::sync::MutexGuard<'static, Registry> {
+    registry().lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Get (registering on first use) the counter handle for `name`. The
+/// handle is not gated on the enable flag — callers that cache a
+/// handle must gate their own `fetch_add` with
+/// [`enabled`](super::enabled).
+pub fn counter(name: &str) -> Arc<AtomicU64> {
+    let mut r = lock();
+    if let Some(c) = r.counters.get(name) {
+        return Arc::clone(c);
+    }
+    let c = Arc::new(AtomicU64::new(0));
+    r.counters.insert(name.to_string(), Arc::clone(&c));
+    c
+}
+
+/// Add `delta` to counter `name`. No-op when metrics are disabled.
+#[inline]
+pub fn add(name: &str, delta: u64) {
+    if !super::enabled(super::METRICS) {
+        return;
+    }
+    counter(name).fetch_add(delta, Ordering::Relaxed);
+}
+
+/// Current value of counter `name` (0 if never registered).
+pub fn counter_value(name: &str) -> u64 {
+    lock()
+        .counters
+        .get(name)
+        .map(|c| c.load(Ordering::Relaxed))
+        .unwrap_or(0)
+}
+
+/// Set gauge `name` to `v`. No-op when metrics are disabled.
+#[inline]
+pub fn gauge_set(name: &str, v: f64) {
+    if !super::enabled(super::METRICS) {
+        return;
+    }
+    let mut r = lock();
+    let g = r
+        .gauges
+        .entry(name.to_string())
+        .or_insert_with(|| Arc::new(AtomicU64::new(0)));
+    g.store(v.to_bits(), Ordering::Relaxed);
+}
+
+/// Current value of gauge `name` (`None` if never set).
+pub fn gauge_value(name: &str) -> Option<f64> {
+    lock()
+        .gauges
+        .get(name)
+        .map(|g| f64::from_bits(g.load(Ordering::Relaxed)))
+}
+
+/// Record `v` into the log2 histogram `name`. No-op when metrics are
+/// disabled.
+#[inline]
+pub fn observe(name: &str, v: u64) {
+    if !super::enabled(super::METRICS) {
+        return;
+    }
+    let h = {
+        let mut r = lock();
+        Arc::clone(
+            r.histograms
+                .entry(name.to_string())
+                .or_insert_with(|| Arc::new(Histogram::new())),
+        )
+    };
+    h.observe(v);
+}
+
+/// Histogram handle for `name` (`None` if never observed).
+pub fn histogram(name: &str) -> Option<Arc<Histogram>> {
+    lock().histograms.get(name).map(Arc::clone)
+}
+
+/// Snapshot the whole registry as JSON:
+/// `{"counters":{..}, "gauges":{..}, "histograms":{name:{"count":n,
+/// "buckets":[[log2_bucket, count],..]}}}`. Keys are sorted (BTreeMap)
+/// so the dump is stable.
+pub fn snapshot() -> Json {
+    let r = lock();
+    let counters = Json::obj(
+        r.counters
+            .iter()
+            .map(|(k, v)| (k.as_str(), Json::num(v.load(Ordering::Relaxed) as f64)))
+            .collect(),
+    );
+    let gauges = Json::obj(
+        r.gauges
+            .iter()
+            .map(|(k, v)| {
+                (
+                    k.as_str(),
+                    Json::num(f64::from_bits(v.load(Ordering::Relaxed))),
+                )
+            })
+            .collect(),
+    );
+    let histograms = Json::obj(
+        r.histograms
+            .iter()
+            .map(|(k, h)| {
+                let buckets = Json::arr(
+                    h.nonzero()
+                        .into_iter()
+                        .map(|(i, n)| Json::arr(vec![Json::num(i as f64), Json::num(n as f64)]))
+                        .collect(),
+                );
+                (
+                    k.as_str(),
+                    Json::obj(vec![
+                        ("count", Json::num(h.count() as f64)),
+                        ("buckets", buckets),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    Json::obj(vec![
+        ("counters", counters),
+        ("gauges", gauges),
+        ("histograms", histograms),
+    ])
+}
+
+/// Zero every counter, gauge, and histogram. Entries (and therefore
+/// cached handles) are kept.
+pub fn reset() {
+    let r = lock();
+    for c in r.counters.values() {
+        c.store(0, Ordering::Relaxed);
+    }
+    for g in r.gauges.values() {
+        g.store(0f64.to_bits(), Ordering::Relaxed);
+    }
+    for h in r.histograms.values() {
+        h.zero();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_metrics_record_nothing() {
+        crate::obs::reset();
+        add("test.disabled", 5);
+        observe("test.disabled.h", 5);
+        assert_eq!(counter_value("test.disabled"), 0);
+        assert!(histogram("test.disabled.h").is_none());
+    }
+
+    #[test]
+    fn counters_are_exact_across_threads() {
+        crate::obs::reset();
+        crate::obs::enable(crate::obs::METRICS);
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                std::thread::spawn(|| {
+                    for _ in 0..1000 {
+                        add("test.exact", 1);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(counter_value("test.exact"), 4000);
+        crate::obs::reset();
+        // reset zeroes but keeps the entry.
+        assert_eq!(counter_value("test.exact"), 0);
+    }
+
+    #[test]
+    fn histogram_log2_bucketing() {
+        crate::obs::reset();
+        crate::obs::enable(crate::obs::METRICS);
+        for v in [0u64, 1, 2, 3, 4, 1024] {
+            observe("test.h", v);
+        }
+        let h = histogram("test.h").unwrap();
+        assert_eq!(h.count(), 6);
+        // 0 -> bucket 0; 1 -> 1; 2,3 -> 2; 4 -> 3; 1024 -> 11.
+        assert_eq!(h.nonzero(), vec![(0, 1), (1, 1), (2, 2), (3, 1), (11, 1)]);
+        let snap = snapshot();
+        assert!(snap.get("histograms").and_then(|h| h.get("test.h")).is_some());
+        crate::obs::reset();
+    }
+}

@@ -1,0 +1,102 @@
+//! Zero-overhead telemetry: span tracing, a metrics registry, and the
+//! deterministic W·s time-series (DESIGN.md §16).
+//!
+//! Three independently switchable pillars, all **off by default**:
+//!
+//! * [`SPANS`] — thread-aware RAII spans ([`span::span`]) plus
+//!   virtual-time spans keyed by the sched simulation clock
+//!   ([`span::virtual_span`]), exportable as Chrome trace-event JSON
+//!   ([`chrome`]) loadable in Perfetto / `chrome://tracing`.
+//! * [`METRICS`] — dependency-free counters / gauges / log2 histograms
+//!   ([`metrics`]), dumped as JSON and rendered by `enadapt obs`.
+//! * [`SERIES`] — the per-node committed-W / dynamic-W / idle-W step
+//!   series in virtual time ([`series`]), the paper's Fig-5-style power
+//!   curve, bit-identical per seed.
+//!
+//! ## Zero cost when disabled
+//!
+//! Every recording entry point starts with [`enabled`] — a single
+//! `Relaxed` load of one process-global `AtomicU8`, roughly one L1 hit
+//! (~1 ns) plus a predictable branch. No allocation, no formatting, no
+//! lock is reached on the disabled path; `span` call sites take a
+//! `&str` (or a lazy closure via [`span::span_with`]) so even the name
+//! is never built. The bit-identical-per-seed contracts of PRs 4/6/8/9
+//! hold trivially because telemetry is purely observational: it reads
+//! values the simulation already computed and never feeds anything
+//! back. `benches/obs_overhead.rs` enforces the off-path contract
+//! (BENCH_obs.json).
+//!
+//! ## Wall time vs virtual time
+//!
+//! Wall-clock spans (pipeline steps, search strategies, verifier
+//! trials, fleet jobs) carry timestamps from a process-epoch
+//! [`std::time::Instant`] and render under pid 1 ("wall"). Sched spans
+//! carry *simulated* timestamps and render under pid 2 ("virtual") —
+//! that half of the trace is a pure function of trace × config × seed.
+
+pub mod chrome;
+pub mod metrics;
+pub mod series;
+pub mod span;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Pillar bit: span tracing (wall + virtual time).
+pub const SPANS: u8 = 1 << 0;
+/// Pillar bit: metrics registry (counters / gauges / histograms).
+pub const METRICS: u8 = 1 << 1;
+/// Pillar bit: deterministic W·s time-series.
+pub const SERIES: u8 = 1 << 2;
+/// All pillars at once.
+pub const ALL: u8 = SPANS | METRICS | SERIES;
+
+static ENABLED: AtomicU8 = AtomicU8::new(0);
+
+/// True if any pillar in `mask` is enabled. This is the *only* check on
+/// the disabled hot path: one `Relaxed` atomic load and a branch.
+#[inline(always)]
+pub fn enabled(mask: u8) -> bool {
+    ENABLED.load(Ordering::Relaxed) & mask != 0
+}
+
+/// Enable the pillars in `mask` (other pillars keep their state).
+pub fn enable(mask: u8) {
+    ENABLED.fetch_or(mask, Ordering::Relaxed);
+}
+
+/// Disable the pillars in `mask` (other pillars keep their state).
+pub fn disable(mask: u8) {
+    ENABLED.fetch_and(!mask, Ordering::Relaxed);
+}
+
+/// Disable everything and drop all recorded state: span events, series
+/// rows, and metric *values* (registered metric handles stay valid —
+/// values are zeroed, entries are never removed).
+pub fn reset() {
+    ENABLED.store(0, Ordering::Relaxed);
+    span::reset();
+    metrics::reset();
+    series::reset();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pillar_masking_is_independent() {
+        reset();
+        assert!(!enabled(ALL));
+        enable(SPANS);
+        assert!(enabled(SPANS));
+        assert!(!enabled(METRICS));
+        assert!(!enabled(SERIES));
+        enable(METRICS | SERIES);
+        assert!(enabled(ALL));
+        disable(SPANS);
+        assert!(!enabled(SPANS));
+        assert!(enabled(METRICS));
+        reset();
+        assert!(!enabled(ALL));
+    }
+}

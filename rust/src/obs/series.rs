@@ -1,0 +1,167 @@
+//! Deterministic W·s time-series: the paper's time-resolved power
+//! curve, reconstructed from the sched simulation in virtual time.
+//!
+//! Two row kinds:
+//!
+//! * [`PowerStep`] — one row per admission/completion transition of a
+//!   node: simulated time, fleet committed W at that instant, the
+//!   node's dynamic W, and its instantaneous ungated accelerator idle
+//!   W. Recorded from `SimCore::start_job` / `remove_running`, which
+//!   both sched engines share — so the series is identical between the
+//!   event-driven and legacy engines by construction.
+//! * [`IdleFold`] — one row per idle-ledger fold (`IdleLedger::fold`),
+//!   mirroring the exact `idle_w × charged_s` / `× gated_s` terms the
+//!   W·s ledger sums, in the same fold order.
+//!
+//! Rows are sorted on export by their full `f64` bit patterns (all
+//! values are non-negative, so `to_bits` ordering is numeric ordering)
+//! — parallel-federation clusters may interleave appends, but the
+//! exported series is still bit-identical per seed.
+
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// One committed/dynamic/idle power sample at a virtual-time step.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerStep {
+    /// Simulated time of the transition, seconds.
+    pub t_s: f64,
+    /// Node index within its cluster.
+    pub node: u32,
+    /// Fleet-wide committed W after the transition.
+    pub committed_w: f64,
+    /// Sum of dynamic W of jobs running on this node.
+    pub dynamic_w: f64,
+    /// Instantaneous ungated accelerator idle W on this node.
+    pub idle_w: f64,
+}
+
+/// One idle-ledger fold term (`idle_w` over a charged/gated split).
+#[derive(Debug, Clone, Copy)]
+pub struct IdleFold {
+    /// Accelerator idle draw, W.
+    pub idle_w: f64,
+    /// Seconds charged at full idle draw.
+    pub charged_s: f64,
+    /// Seconds spent power-gated.
+    pub gated_s: f64,
+}
+
+static POWER: Mutex<Vec<PowerStep>> = Mutex::new(Vec::new());
+static IDLE: Mutex<Vec<IdleFold>> = Mutex::new(Vec::new());
+
+/// Record a power step. No-op when the series pillar is disabled.
+#[inline]
+pub fn record_power_step(step: PowerStep) {
+    if !super::enabled(super::SERIES) {
+        return;
+    }
+    POWER.lock().unwrap_or_else(|e| e.into_inner()).push(step);
+}
+
+/// Record an idle fold. No-op when the series pillar is disabled.
+#[inline]
+pub fn record_idle_fold(fold: IdleFold) {
+    if !super::enabled(super::SERIES) {
+        return;
+    }
+    IDLE.lock().unwrap_or_else(|e| e.into_inner()).push(fold);
+}
+
+/// Snapshot of the power steps, sorted deterministically.
+pub fn power_steps() -> Vec<PowerStep> {
+    let mut v = POWER.lock().unwrap_or_else(|e| e.into_inner()).clone();
+    v.sort_by_key(|s| {
+        (
+            s.t_s.to_bits(),
+            s.node,
+            s.committed_w.to_bits(),
+            s.dynamic_w.to_bits(),
+            s.idle_w.to_bits(),
+        )
+    });
+    v
+}
+
+/// Snapshot of the idle folds, sorted deterministically.
+pub fn idle_folds() -> Vec<IdleFold> {
+    let mut v = IDLE.lock().unwrap_or_else(|e| e.into_inner()).clone();
+    v.sort_by_key(|f| (f.idle_w.to_bits(), f.charged_s.to_bits(), f.gated_s.to_bits()));
+    v
+}
+
+/// Export the whole series as JSON:
+/// `{"power_steps":[{"t_s":..,"node":..,"committed_w":..,
+/// "dynamic_w":..,"idle_w":..},..], "idle_folds":[..]}`.
+pub fn to_json() -> Json {
+    let steps = power_steps()
+        .into_iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("t_s", Json::num(s.t_s)),
+                ("node", Json::num(s.node as f64)),
+                ("committed_w", Json::num(s.committed_w)),
+                ("dynamic_w", Json::num(s.dynamic_w)),
+                ("idle_w", Json::num(s.idle_w)),
+            ])
+        })
+        .collect();
+    let folds = idle_folds()
+        .into_iter()
+        .map(|f| {
+            Json::obj(vec![
+                ("idle_w", Json::num(f.idle_w)),
+                ("charged_s", Json::num(f.charged_s)),
+                ("gated_s", Json::num(f.gated_s)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("power_steps", Json::arr(steps)),
+        ("idle_folds", Json::arr(folds)),
+    ])
+}
+
+/// Drop all recorded rows.
+pub fn reset() {
+    POWER.lock().unwrap_or_else(|e| e.into_inner()).clear();
+    IDLE.lock().unwrap_or_else(|e| e.into_inner()).clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_series_records_nothing() {
+        crate::obs::reset();
+        record_power_step(PowerStep {
+            t_s: 1.0,
+            node: 0,
+            committed_w: 100.0,
+            dynamic_w: 50.0,
+            idle_w: 10.0,
+        });
+        assert!(power_steps().is_empty());
+    }
+
+    #[test]
+    fn export_sorts_interleaved_appends() {
+        crate::obs::reset();
+        crate::obs::enable(crate::obs::SERIES);
+        for (t, node) in [(2.0, 1), (1.0, 0), (2.0, 0), (1.0, 1)] {
+            record_power_step(PowerStep {
+                t_s: t,
+                node,
+                committed_w: 0.0,
+                dynamic_w: 0.0,
+                idle_w: 0.0,
+            });
+        }
+        let steps = power_steps();
+        crate::obs::reset();
+        let order: Vec<(f64, u32)> = steps.iter().map(|s| (s.t_s, s.node)).collect();
+        assert_eq!(order, vec![(1.0, 0), (1.0, 1), (2.0, 0), (2.0, 1)]);
+    }
+}

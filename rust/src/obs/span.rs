@@ -1,0 +1,226 @@
+//! Thread-aware RAII spans plus virtual-time spans for the sched
+//! simulation (the B/E and X halves of the Chrome trace).
+//!
+//! Wall spans ([`span`] / [`span_with`]) record paired `Begin`/`End`
+//! events against a process-epoch monotonic clock under [`PID_WALL`];
+//! each OS thread gets a small stable integer lane. Virtual spans
+//! ([`virtual_span`]) are emitted as single `Complete` events with
+//! simulated-clock timestamps under [`PID_VIRTUAL`] — one lane per
+//! cluster node — so the sched half of a trace is deterministic per
+//! seed regardless of host timing.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Chrome-trace process lane for wall-clock spans.
+pub const PID_WALL: u32 = 1;
+/// Chrome-trace process lane for virtual (simulated-time) spans.
+pub const PID_VIRTUAL: u32 = 2;
+
+/// Event phase, mirroring the Chrome trace-event `ph` field.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Duration-begin (`ph:"B"`), paired with a later [`Phase::End`].
+    Begin,
+    /// Duration-end (`ph:"E"`).
+    End,
+    /// Complete event (`ph:"X"`) carrying its own duration in µs.
+    Complete {
+        /// Span duration in microseconds.
+        dur_us: u64,
+    },
+}
+
+/// One recorded trace event.
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// Begin / End / Complete.
+    pub phase: Phase,
+    /// Span name; `None` on `End` events (Chrome infers it from the
+    /// matching `Begin`).
+    pub name: Option<String>,
+    /// Static category string (e.g. `"pipeline"`, `"sched"`).
+    pub cat: &'static str,
+    /// Timestamp in microseconds (wall: since process epoch; virtual:
+    /// since simulation start).
+    pub ts_us: u64,
+    /// Process lane ([`PID_WALL`] or [`PID_VIRTUAL`]).
+    pub pid: u32,
+    /// Thread lane (wall: per-OS-thread counter; virtual: node index).
+    pub tid: u32,
+}
+
+static EVENTS: Mutex<Vec<Event>> = Mutex::new(Vec::new());
+static NEXT_TID: AtomicU32 = AtomicU32::new(1);
+
+thread_local! {
+    static TID: u32 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+fn push(ev: Event) {
+    EVENTS.lock().unwrap_or_else(|e| e.into_inner()).push(ev);
+}
+
+/// RAII guard returned by [`span`]; records the `End` event on drop.
+/// When spans are disabled the guard is inert (no event on drop).
+#[must_use = "a span guard records its End event when dropped"]
+pub struct SpanGuard {
+    live: bool,
+    cat: &'static str,
+    tid: u32,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.live {
+            push(Event {
+                phase: Phase::End,
+                name: None,
+                cat: self.cat,
+                ts_us: now_us(),
+                pid: PID_WALL,
+                tid: self.tid,
+            });
+        }
+    }
+}
+
+/// Open a wall-clock span. Disabled path: one relaxed load, no
+/// allocation (the `&str` is only copied when recording).
+#[inline]
+pub fn span(cat: &'static str, name: &str) -> SpanGuard {
+    if !super::enabled(super::SPANS) {
+        return SpanGuard {
+            live: false,
+            cat,
+            tid: 0,
+        };
+    }
+    span_record(cat, name.to_string())
+}
+
+/// Open a wall-clock span with a lazily built name: the closure runs
+/// only when spans are enabled, so call sites pay no formatting cost
+/// on the disabled path.
+#[inline]
+pub fn span_with<F: FnOnce() -> String>(cat: &'static str, name_fn: F) -> SpanGuard {
+    if !super::enabled(super::SPANS) {
+        return SpanGuard {
+            live: false,
+            cat,
+            tid: 0,
+        };
+    }
+    span_record(cat, name_fn())
+}
+
+fn span_record(cat: &'static str, name: String) -> SpanGuard {
+    let tid = TID.with(|t| *t);
+    push(Event {
+        phase: Phase::Begin,
+        name: Some(name),
+        cat,
+        ts_us: now_us(),
+        pid: PID_WALL,
+        tid,
+    });
+    SpanGuard {
+        live: true,
+        cat,
+        tid,
+    }
+}
+
+/// Record a virtual-time span (`ph:"X"`) under [`PID_VIRTUAL`], with
+/// simulated-clock endpoints in seconds and one thread lane per
+/// cluster node. Timestamps are `round()`ed to whole microseconds so
+/// the emitted trace is a pure function of the deterministic f64
+/// schedule, not of host timing.
+#[inline]
+pub fn virtual_span(cat: &'static str, name_fn: impl FnOnce() -> String, lane: u32, start_s: f64, end_s: f64) {
+    if !super::enabled(super::SPANS) {
+        return;
+    }
+    let ts_us = (start_s * 1e6).round().max(0.0) as u64;
+    let end_us = (end_s * 1e6).round().max(0.0) as u64;
+    push(Event {
+        phase: Phase::Complete {
+            dur_us: end_us.saturating_sub(ts_us),
+        },
+        name: Some(name_fn()),
+        cat,
+        ts_us,
+        pid: PID_VIRTUAL,
+        tid: lane,
+    });
+}
+
+/// Snapshot (clone) all events recorded so far.
+pub fn events() -> Vec<Event> {
+    EVENTS.lock().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+/// Number of events recorded so far.
+pub fn len() -> usize {
+    EVENTS.lock().unwrap_or_else(|e| e.into_inner()).len()
+}
+
+/// Drop all recorded events.
+pub fn reset() {
+    EVENTS.lock().unwrap_or_else(|e| e.into_inner()).clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        crate::obs::reset();
+        {
+            let _g = span("test", "quiet");
+            let _h = span_with("test", || "never built".to_string());
+            virtual_span("test", || "nor this".to_string(), 0, 0.0, 1.0);
+        }
+        assert_eq!(len(), 0);
+    }
+
+    #[test]
+    fn enabled_spans_balance_and_nest() {
+        crate::obs::reset();
+        crate::obs::enable(crate::obs::SPANS);
+        {
+            let _outer = span("test", "outer");
+            let _inner = span("test", "inner");
+        }
+        virtual_span("test", || "vspan".to_string(), 3, 1.5, 2.5);
+        let evs = events();
+        crate::obs::reset();
+        let begins = evs.iter().filter(|e| e.phase == Phase::Begin).count();
+        let ends = evs.iter().filter(|e| e.phase == Phase::End).count();
+        assert_eq!(begins, 2);
+        assert_eq!(ends, 2);
+        // Inner span must close before outer (RAII drop order).
+        assert_eq!(evs[1].name.as_deref(), Some("inner"));
+        assert_eq!(evs[2].phase, Phase::End);
+        let v = evs.iter().find(|e| e.pid == PID_VIRTUAL).expect("vspan");
+        assert_eq!(v.tid, 3);
+        assert_eq!(v.ts_us, 1_500_000);
+        assert_eq!(
+            v.phase,
+            Phase::Complete {
+                dur_us: 1_000_000
+            }
+        );
+    }
+}

@@ -136,7 +136,19 @@ impl IdleLedger {
         horizon_s: f64,
         policy: &IdlePolicy,
     ) {
-        let c = split_idle(busy, horizon_s, policy);
+        self.fold(idle_w, split_idle(busy, horizon_s, policy));
+    }
+
+    /// Fold one pre-split charge into the ledger. Single accumulation
+    /// point for every idle W·s term (the legacy per-slot fold and the
+    /// event engine's streaming fold both land here, in the same slot
+    /// order), so the obs W·s series mirrors the ledger exactly.
+    pub fn fold(&mut self, idle_w: f64, c: IdleCharge) {
+        crate::obs::series::record_idle_fold(crate::obs::series::IdleFold {
+            idle_w,
+            charged_s: c.charged_s,
+            gated_s: c.gated_s,
+        });
         self.charged_ws += idle_w * c.charged_s;
         self.gated_ws += idle_w * c.gated_s;
     }

@@ -164,6 +164,8 @@ impl SearchCtx<'_> {
 
     /// Append one convergence round to the history.
     pub fn record(&mut self, best: f64, mean: f64) {
+        crate::obs::metrics::add("search.generations", 1);
+        crate::obs::metrics::observe("search.gen_measured", self.archive.len() as u64);
         self.history.push(GenStats {
             generation: self.history.len(),
             best,
@@ -234,7 +236,10 @@ pub fn run_strategy(
         history: Vec::new(),
         eval: &mut eval_batch,
     };
-    strategy.search(&mut ctx)?;
+    {
+        let _sp = crate::obs::span::span("search", strategy.name());
+        strategy.search(&mut ctx)?;
+    }
     let SearchCtx {
         archive, history, ..
     } = ctx;
@@ -257,6 +262,12 @@ pub fn run_strategy(
         }
     }
     let front = ParetoFront::of(&entries);
+    crate::obs::metrics::add("search.measured", archive.len() as u64);
+    crate::obs::metrics::add("search.front_points", front.len() as u64);
+    crate::obs::metrics::gauge_set(
+        "search.evals_per_front_point",
+        archive.len() as f64 / front.len().max(1) as f64,
+    );
     Ok(SearchResult {
         strategy: strategy.name(),
         best: best.genome.clone(),

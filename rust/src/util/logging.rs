@@ -2,7 +2,7 @@
 //! the `ENADAPT_LOG` environment variable (`error|warn|info|debug|trace`,
 //! default `info`), writes to stderr so stdout stays machine-readable.
 
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
 use std::time::Instant;
 
 /// Log severity.
@@ -22,18 +22,42 @@ pub enum Level {
 
 static LEVEL: AtomicU8 = AtomicU8::new(255);
 
+/// Parse an `ENADAPT_LOG` value (case-insensitive) into a level byte.
+/// Unknown values fall back to `info` (2) and return a warning message
+/// for the caller to emit; unset returns no warning.
+fn parse_level(raw: Option<&str>) -> (u8, Option<String>) {
+    let Some(raw) = raw else {
+        return (2, None);
+    };
+    match raw.to_ascii_lowercase().as_str() {
+        "error" => (0, None),
+        "warn" => (1, None),
+        "info" => (2, None),
+        "debug" => (3, None),
+        "trace" => (4, None),
+        other => (
+            2,
+            Some(format!(
+                "unrecognized ENADAPT_LOG value {other:?} (expected \
+                 error|warn|info|debug|trace), defaulting to info"
+            )),
+        ),
+    }
+}
+
 fn level() -> u8 {
     let cur = LEVEL.load(Ordering::Relaxed);
     if cur != 255 {
         return cur;
     }
-    let parsed = match std::env::var("ENADAPT_LOG").as_deref() {
-        Ok("error") => 0,
-        Ok("warn") => 1,
-        Ok("debug") => 3,
-        Ok("trace") => 4,
-        _ => 2,
-    };
+    let var = std::env::var("ENADAPT_LOG").ok();
+    let (parsed, warning) = parse_level(var.as_deref());
+    if let Some(w) = warning {
+        static WARNED: AtomicBool = AtomicBool::new(false);
+        if !WARNED.swap(true, Ordering::Relaxed) {
+            eprintln!("[WARN ] enadapt::util::logging: {w}");
+        }
+    }
     LEVEL.store(parsed, Ordering::Relaxed);
     parsed
 }
@@ -53,13 +77,14 @@ pub fn log(l: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     if !enabled(l) {
         return;
     }
-    let tag = match l {
-        Level::Error => "ERROR",
-        Level::Warn => "WARN ",
-        Level::Info => "INFO ",
-        Level::Debug => "DEBUG",
-        Level::Trace => "TRACE",
+    let (tag, metric) = match l {
+        Level::Error => ("ERROR", "log.error"),
+        Level::Warn => ("WARN ", "log.warn"),
+        Level::Info => ("INFO ", "log.info"),
+        Level::Debug => ("DEBUG", "log.debug"),
+        Level::Trace => ("TRACE", "log.trace"),
     };
+    crate::obs::metrics::add(metric, 1);
     eprintln!("[{tag}] {module}: {msg}");
 }
 
@@ -131,6 +156,35 @@ mod tests {
         set_level(Level::Info);
         assert!(enabled(Level::Info));
         assert!(!enabled(Level::Debug));
+    }
+
+    #[test]
+    fn parse_level_accepts_case_insensitive_names() {
+        for (raw, want) in [
+            ("error", 0),
+            ("ERROR", 0),
+            ("warn", 1),
+            ("Warn", 1),
+            ("info", 2),
+            ("INFO", 2),
+            ("debug", 3),
+            ("trace", 4),
+            ("TrAcE", 4),
+        ] {
+            let (got, warning) = parse_level(Some(raw));
+            assert_eq!(got, want, "parse_level({raw:?})");
+            assert!(warning.is_none(), "no warning for {raw:?}");
+        }
+    }
+
+    #[test]
+    fn parse_level_warns_on_unknown_and_defaults_to_info() {
+        let (got, warning) = parse_level(Some("verbose"));
+        assert_eq!(got, 2);
+        let w = warning.expect("unknown value must warn");
+        assert!(w.contains("verbose"), "warning names the bad value: {w}");
+        // Unset variable: info, silently.
+        assert_eq!(parse_level(None), (2, None));
     }
 
     #[test]

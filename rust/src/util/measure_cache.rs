@@ -103,6 +103,77 @@ fn shard_index(key: &MeasureKey) -> usize {
     (h.finish() >> (64 - SHARD_BITS)) as usize & (SHARD_COUNT - 1)
 }
 
+// Pre-built obs metric names per shard: the hot path must not format
+// strings. Indexed by `shard_index`.
+static SHARD_HIT_METRIC: [&str; SHARD_COUNT] = [
+    "cache.shard00.hits",
+    "cache.shard01.hits",
+    "cache.shard02.hits",
+    "cache.shard03.hits",
+    "cache.shard04.hits",
+    "cache.shard05.hits",
+    "cache.shard06.hits",
+    "cache.shard07.hits",
+    "cache.shard08.hits",
+    "cache.shard09.hits",
+    "cache.shard10.hits",
+    "cache.shard11.hits",
+    "cache.shard12.hits",
+    "cache.shard13.hits",
+    "cache.shard14.hits",
+    "cache.shard15.hits",
+];
+static SHARD_MISS_METRIC: [&str; SHARD_COUNT] = [
+    "cache.shard00.misses",
+    "cache.shard01.misses",
+    "cache.shard02.misses",
+    "cache.shard03.misses",
+    "cache.shard04.misses",
+    "cache.shard05.misses",
+    "cache.shard06.misses",
+    "cache.shard07.misses",
+    "cache.shard08.misses",
+    "cache.shard09.misses",
+    "cache.shard10.misses",
+    "cache.shard11.misses",
+    "cache.shard12.misses",
+    "cache.shard13.misses",
+    "cache.shard14.misses",
+    "cache.shard15.misses",
+];
+static SHARD_ENTRIES_METRIC: [&str; SHARD_COUNT] = [
+    "cache.shard00.entries",
+    "cache.shard01.entries",
+    "cache.shard02.entries",
+    "cache.shard03.entries",
+    "cache.shard04.entries",
+    "cache.shard05.entries",
+    "cache.shard06.entries",
+    "cache.shard07.entries",
+    "cache.shard08.entries",
+    "cache.shard09.entries",
+    "cache.shard10.entries",
+    "cache.shard11.entries",
+    "cache.shard12.entries",
+    "cache.shard13.entries",
+    "cache.shard14.entries",
+    "cache.shard15.entries",
+];
+
+/// One shard's occupancy and hit/miss split (`enadapt cache stats`,
+/// [`MeasureCache::shard_stats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardStat {
+    /// Shard index in `[0, SHARD_COUNT)`.
+    pub shard: usize,
+    /// Completed measurements stored in this shard.
+    pub entries: usize,
+    /// Lookups this view answered from this shard.
+    pub hits: u64,
+    /// Trials this view ran through this shard.
+    pub misses: u64,
+}
+
 /// An attached append-only measurement log (see
 /// [`MeasureCache::attach_log`]).
 #[derive(Debug)]
@@ -166,6 +237,11 @@ pub struct MeasureCache {
     // been joined (fleet, federation) or from the measuring thread itself.
     hits: AtomicU64,
     misses: AtomicU64,
+    // Per-shard splits of the same ledger (same exactness argument).
+    // Surfaced by [`MeasureCache::shard_stats`], `enadapt cache stats`,
+    // and the obs metrics registry.
+    shard_hits: [AtomicU64; SHARD_COUNT],
+    shard_misses: [AtomicU64; SHARD_COUNT],
     /// `Some` on recording views ([`MeasureCache::fork_recording`]): the
     /// distinct keys this view has looked up, for serial-order counter
     /// reconstruction in the parallel federation.
@@ -191,6 +267,8 @@ impl MeasureCache {
             store: Arc::clone(&self.store),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            shard_hits: Default::default(),
+            shard_misses: Default::default(),
             recorded: Some(Mutex::new(HashSet::new())),
         }
     }
@@ -212,7 +290,8 @@ impl MeasureCache {
         key: MeasureKey,
         measure: impl FnOnce() -> Measurement,
     ) -> (Measurement, bool) {
-        let shard = self.store.shard(&key);
+        let si = shard_index(&key);
+        let shard = &self.store.shards[si];
         // Read-mostly fast path: a key that already has a slot needs only
         // the shard read lock, so completed entries never serialize.
         let slot = {
@@ -238,8 +317,20 @@ impl MeasureCache {
         if ran {
             self.store.append_log(&key, &m);
             self.misses.fetch_add(1, Ordering::Relaxed);
+            self.shard_misses[si].fetch_add(1, Ordering::Relaxed);
         } else {
             self.hits.fetch_add(1, Ordering::Relaxed);
+            self.shard_hits[si].fetch_add(1, Ordering::Relaxed);
+        }
+        if crate::obs::enabled(crate::obs::METRICS) {
+            if ran {
+                crate::obs::metrics::add("cache.misses", 1);
+                crate::obs::metrics::add("cache.fills", 1);
+                crate::obs::metrics::add(SHARD_MISS_METRIC[si], 1);
+            } else {
+                crate::obs::metrics::add("cache.hits", 1);
+                crate::obs::metrics::add(SHARD_HIT_METRIC[si], 1);
+            }
         }
         if let Some(rec) = &self.recorded {
             rec.lock().unwrap().insert(key);
@@ -260,6 +351,7 @@ impl MeasureCache {
     /// unmemoized run.
     pub fn note_hits(&self, n: u64) {
         self.hits.fetch_add(n, Ordering::Relaxed);
+        crate::obs::metrics::add("cache.hits", n);
     }
 
     /// Trials actually run through this cache.
@@ -297,6 +389,40 @@ impl MeasureCache {
     /// Is the cache empty?
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Per-shard occupancy plus this view's hit/miss split. Entry counts
+    /// sum to [`MeasureCache::len`]; hit/miss columns sum to
+    /// [`MeasureCache::hits`] / [`MeasureCache::misses`] minus any
+    /// memo-layer credits ([`MeasureCache::note_hits`]), which have no
+    /// shard to land in.
+    pub fn shard_stats(&self) -> Vec<ShardStat> {
+        (0..SHARD_COUNT)
+            .map(|i| ShardStat {
+                shard: i,
+                entries: self.store.shards[i]
+                    .read()
+                    .unwrap()
+                    .values()
+                    .filter(|s| s.get().is_some())
+                    .count(),
+                hits: self.shard_hits[i].load(Ordering::Relaxed),
+                misses: self.shard_misses[i].load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+
+    /// Publish occupancy / hit-rate gauges to the obs metrics registry.
+    /// No-op when metrics are disabled.
+    pub fn publish_obs_gauges(&self) {
+        if !crate::obs::enabled(crate::obs::METRICS) {
+            return;
+        }
+        crate::obs::metrics::gauge_set("cache.hit_rate", self.hit_rate());
+        crate::obs::metrics::gauge_set("cache.entries", self.len() as f64);
+        for s in self.shard_stats() {
+            crate::obs::metrics::gauge_set(SHARD_ENTRIES_METRIC[s.shard], s.entries as f64);
+        }
     }
 
     /// Keys of every completed measurement, in unspecified order.
@@ -732,6 +858,36 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         std::fs::create_dir_all(&dir).unwrap();
         dir
+    }
+
+    #[test]
+    fn shard_stats_reconcile_with_aggregate_ledger() {
+        let c = MeasureCache::new();
+        for env in 0..40u64 {
+            c.get_or_measure(key(env % 2 == 0, env), || fake_measurement(1.0));
+        }
+        for env in 0..10u64 {
+            c.get_or_measure(key(env % 2 == 0, env), || fake_measurement(9.0));
+        }
+        let stats = c.shard_stats();
+        assert_eq!(stats.len(), SHARD_COUNT);
+        let entries: usize = stats.iter().map(|s| s.entries).sum();
+        let hits: u64 = stats.iter().map(|s| s.hits).sum();
+        let misses: u64 = stats.iter().map(|s| s.misses).sum();
+        assert_eq!(entries, c.len());
+        assert_eq!(hits, c.hits());
+        assert_eq!(misses, c.misses());
+        assert_eq!((hits, misses), (10, 40));
+        // Each stat row must sit in the shard its keys actually hash to.
+        for env in 0..10u64 {
+            let si = shard_index(&key(env % 2 == 0, env));
+            assert!(stats[si].entries > 0);
+        }
+        // Memo-layer credits raise the aggregate ledger only.
+        c.note_hits(5);
+        let shard_hits: u64 = c.shard_stats().iter().map(|s| s.hits).sum();
+        assert_eq!(c.hits(), 15);
+        assert_eq!(shard_hits, 10);
     }
 
     #[test]

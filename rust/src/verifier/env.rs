@@ -267,6 +267,8 @@ impl VerifEnv {
         dest: DeviceKind,
         xfer: TransferMode,
     ) -> Measurement {
+        let _sp = crate::obs::span::span("verifier", "trial");
+        crate::obs::metrics::add("verifier.trials", 1);
         self.trials.fetch_add(1, Ordering::Relaxed);
         let (loop_bits, _) = app.split_bits(bits);
         // Substituted blocks (inert on the plain-CPU destination, like
@@ -502,6 +504,8 @@ impl VerifEnv {
         dests: &[DeviceKind],
         xfer: TransferMode,
     ) -> Measurement {
+        let _sp = crate::obs::span::span("verifier", "trial:mixed");
+        crate::obs::metrics::add("verifier.trials", 1);
         self.trials.fetch_add(1, Ordering::Relaxed);
         let bits: Vec<bool> = dests.iter().map(|&d| d != DeviceKind::Cpu).collect();
         let n_loops = app.n_loop_genes();

@@ -13,7 +13,7 @@ fn enadapt(args: &[&str]) -> std::process::Output {
 /// Every subcommand the CLI exposes, in help order. The snapshot below
 /// and the README drift check both key off this list — extending the CLI
 /// means updating all three together.
-const COMMANDS: [&str; 10] = [
+const COMMANDS: [&str; 11] = [
     "analyze",
     "blocks",
     "offload",
@@ -24,6 +24,7 @@ const COMMANDS: [&str; 10] = [
     "codegen",
     "calibrate",
     "report",
+    "obs",
 ];
 
 #[test]
@@ -503,4 +504,113 @@ fn file_source_works() {
     let out = enadapt(&["analyze", path.to_str().unwrap()]);
     assert!(out.status.success());
     assert!(String::from_utf8_lossy(&out.stdout).contains("1 of 1"));
+}
+
+#[test]
+fn sched_telemetry_outputs_and_obs_render() {
+    let dir = std::env::temp_dir().join("enadapt_cli_obs_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("trace.json");
+    let metrics = dir.join("metrics.json");
+    let series = dir.join("series.json");
+    let out = enadapt(&[
+        "sched",
+        "--arrivals",
+        "6",
+        "--rate",
+        "0.5",
+        "--seed",
+        "7",
+        "--trace-out",
+        trace.to_str().unwrap(),
+        "--metrics-json",
+        metrics.to_str().unwrap(),
+        "--series-out",
+        series.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // Chrome trace: valid JSON with the traceEvents array (metadata +
+    // virtual sched spans at minimum).
+    let doc = enadapt::util::json::parse(&std::fs::read_to_string(&trace).unwrap())
+        .expect("trace is valid JSON");
+    assert!(doc.get("traceEvents").unwrap().as_arr().unwrap().len() > 2);
+
+    // Metrics dump: the admission counter saw the arrivals.
+    let m = enadapt::util::json::parse(&std::fs::read_to_string(&metrics).unwrap())
+        .expect("metrics are valid JSON");
+    let admitted = m
+        .get("counters")
+        .and_then(|c| c.get("sched.admitted"))
+        .and_then(|v| v.as_f64())
+        .expect("sched.admitted counter present");
+    assert!(admitted > 0.0, "no admissions counted");
+
+    // W·s series: non-empty deterministic power steps.
+    let s = enadapt::util::json::parse(&std::fs::read_to_string(&series).unwrap())
+        .expect("series is valid JSON");
+    assert!(!s.get("power_steps").unwrap().as_arr().unwrap().is_empty());
+
+    // `enadapt obs` renders the dump as tables.
+    let out = enadapt(&["obs", metrics.to_str().unwrap()]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("sched.admitted"), "{text}");
+    assert!(text.contains("counter"), "{text}");
+}
+
+#[test]
+fn cache_stats_renders_per_shard_occupancy() {
+    let dir = std::env::temp_dir().join("enadapt_cli_cache_stats_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let log = dir.join("measure.log");
+    let snapshot = dir.join("cache.json");
+    // Produce a snapshot via a tiny logged sched run + compact.
+    let out = enadapt(&[
+        "sched",
+        "--arrivals",
+        "3",
+        "--rate",
+        "0.5",
+        "--cache-log",
+        log.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let out = enadapt(&[
+        "cache",
+        "compact",
+        "--log",
+        log.to_str().unwrap(),
+        "--snapshot",
+        snapshot.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let out = enadapt(&["cache", "stats", "--snapshot", snapshot.to_str().unwrap()]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("shard"), "{text}");
+    assert!(text.contains("entries across 16 shards"), "{text}");
+    // JSON form reconciles: per-shard entries sum to the total.
+    let out = enadapt(&[
+        "cache",
+        "stats",
+        "--snapshot",
+        snapshot.to_str().unwrap(),
+        "--json",
+    ]);
+    assert!(out.status.success());
+    let j = enadapt::util::json::parse(&String::from_utf8_lossy(&out.stdout)).unwrap();
+    let total = j.get("entries").unwrap().as_f64().unwrap();
+    let sum: f64 = j
+        .get("shards")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|s| s.get("entries").unwrap().as_f64().unwrap())
+        .sum();
+    assert!(total > 0.0, "snapshot should hold measurements");
+    assert_eq!(sum, total, "shard occupancy must sum to the total");
 }
